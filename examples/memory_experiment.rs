@@ -1,0 +1,60 @@
+//! §5.4 in miniature: with items vanishing after exactly 8 steps, compare
+//! the memory (GRU) and memoryless (FNN) influence predictors — held-out
+//! CE and the item-lifetime histograms of Fig 6 (bottom).
+//!
+//! Run: `cargo run --release --example memory_experiment`
+
+use ials::bench_harness::Table;
+use ials::config::{DomainKind, ExperimentConfig, SimulatorKind};
+use ials::coordinator::experiment::{item_lifetime_histogram, prepare_predictor};
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() -> ials::Result<()> {
+    ials::util::logger::init();
+    let rt = Rc::new(Runtime::load("artifacts")?);
+    let mut base = ExperimentConfig::default();
+    base.domain = DomainKind::Warehouse;
+    base.simulator = SimulatorKind::Ials;
+    base.warehouse.fixed_item_lifetime = 8;
+    base.aip.dataset_size = 24_000;
+    base.aip.train_epochs = 25;
+    base.aip.lr = 3e-3;
+
+    let mut table = Table::new(
+        "memory experiment: AIP held-out CE (items expire at exactly 8 steps)",
+        &["AIP", "held-out CE", "prep s"],
+    );
+    for (label, seq) in [("M (GRU)", 8usize), ("NM (FNN)", 1usize)] {
+        let mut cfg = base.clone();
+        cfg.aip.seq_len = seq;
+        let prep = prepare_predictor(&rt, &cfg, 1, 16)?;
+        table.row(&[
+            label.into(),
+            format!("{:.4}", prep.aip_ce),
+            format!("{:.1}", prep.prep_secs),
+        ]);
+    }
+    table.print();
+
+    // Fig 6 bottom: how long items survive under each IALS.
+    for (label, seq) in [("M-IALS", 8usize), ("NM-IALS", 1usize)] {
+        let mut cfg = base.clone();
+        cfg.aip.seq_len = seq;
+        let ages = item_lifetime_histogram(&rt, &cfg, 1, 4000)?;
+        let mut hist = [0usize; 17];
+        for &a in &ages {
+            hist[(a as usize).min(16)] += 1;
+        }
+        println!("\n{label}: lifetime histogram ({} removals)", ages.len());
+        for (age, &n) in hist.iter().enumerate() {
+            if n > 0 {
+                let bar = "#".repeat((n * 60 / ages.len().max(1)).max(1));
+                println!("  age {age:>2}: {n:>5} {bar}");
+            }
+        }
+    }
+    println!("\nExpected: M-IALS concentrates at age 8 (the paper's deterministic");
+    println!("lifetime); NM-IALS spreads widely (it can only match the marginal).");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the library's public API in ~60 lines.
+//!
+//! 1. Load the AOT runtime (`make artifacts` first).
+//! 2. Collect an influence dataset from the traffic GS (Algorithm 1).
+//! 3. Train the approximate influence predictor offline.
+//! 4. Build the IALS (Algorithm 2) and train a PPO agent on it.
+//! 5. Evaluate the agent back on the GS.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ials::collect::{collect_dataset, FeatureKind};
+use ials::config::ExperimentConfig;
+use ials::coordinator::evaluate;
+use ials::core::VecEnv;
+use ials::ials::IalsVecEnv;
+use ials::influence::{evaluate_ce, train_fnn, NeuralAip};
+use ials::rl::{Policy, PpoTrainer};
+use ials::runtime::Runtime;
+use ials::sim::traffic::{TrafficGlobalEnv, TrafficLocalEnv};
+use std::rc::Rc;
+
+fn main() -> ials::Result<()> {
+    let rt = Rc::new(Runtime::load("artifacts")?);
+    let cfg = ExperimentConfig::default();
+
+    // --- Algorithm 1: dataset from the global simulator -----------------
+    let mut gs = TrafficGlobalEnv::new(&cfg.traffic);
+    let data = collect_dataset(&mut gs, 20_000, 1, FeatureKind::Dset);
+    println!("collected {} (d_t, u_t) pairs; marginals {:?}", data.total_steps(), data.u_marginals());
+
+    // --- Train the influence predictor (Eq. 3) --------------------------
+    let mut aip = NeuralAip::new(rt.clone(), "aip_traffic", 16)?;
+    let losses = train_fnn(&rt, &mut aip.store, "aip_traffic_update", &data, 4, 256, 1e-3, 1)?;
+    println!("AIP cross-entropy per epoch: {losses:?}");
+    let mut heldout_gs = TrafficGlobalEnv::new(&cfg.traffic);
+    let heldout = collect_dataset(&mut heldout_gs, 4_000, 99, FeatureKind::Dset);
+    println!("held-out CE: {:.4}", evaluate_ce(&mut aip, &heldout)?);
+
+    // --- Algorithm 2: the influence-augmented local simulator -----------
+    let locals: Vec<TrafficLocalEnv> =
+        (0..16).map(|_| TrafficLocalEnv::new(&cfg.traffic)).collect();
+    let mut ials_env = IalsVecEnv::new(locals, Box::new(aip));
+    ials_env.reset_all(1);
+
+    // --- PPO on the IALS -------------------------------------------------
+    let mut policy = Policy::new(rt.clone(), "policy_traffic", 16)?;
+    policy.reinit(1)?;
+    let mut trainer = PpoTrainer::new(&cfg.ppo, ials_env.obs_dim(), 1);
+    for iter in 0..8 {
+        let stats = trainer.train_iteration(&mut ials_env, &mut policy)?;
+        println!(
+            "iter {iter}: rollout reward {:.4}, entropy {:.3}",
+            stats.rollout_reward, stats.entropy
+        );
+    }
+
+    // --- Evaluate on the real (global) system ---------------------------
+    let mut eval_env = ials::coordinator::experiment::make_eval_env(&cfg);
+    let result = evaluate(eval_env.as_mut(), &mut policy, 3, 7)?;
+    println!(
+        "GS evaluation after IALS training: mean speed {:.4} (over {} episodes)",
+        result.mean, result.episodes
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! End-to-end driver (the paper's headline claim, Fig 3): train the same
+//! traffic agent on the GS and on the IALS, wall-clock both, and verify
+//! final GS performance parity. This is the repo's full-stack validation:
+//! Rust sims + Algorithm 1 collection + compiled AIP training + IALS +
+//! compiled PPO + GS evaluation, all composing in one run.
+//!
+//! Run: `cargo run --release --example traffic_speedup`
+//! (budget ~ a few minutes; results also land in EXPERIMENTS.md format)
+
+use ials::bench_harness::Table;
+use ials::config::{ExperimentConfig, SimulatorKind};
+use ials::coordinator::experiment::evaluate_actuated;
+use ials::coordinator::run_condition;
+use ials::metrics::write_curve;
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() -> ials::Result<()> {
+    ials::util::logger::init();
+    let rt = Rc::new(Runtime::load("artifacts")?);
+
+    let mut base = ExperimentConfig::default();
+    base.name = "speedup".into();
+    base.ppo.total_steps = 49_152; // 24 PPO iterations
+    base.eval_every = 8_192;
+    base.eval_episodes = 3;
+    base.aip.dataset_size = 30_000;
+    base.aip.train_epochs = 4;
+
+    let mut table = Table::new(
+        "traffic: GS vs IALS end-to-end training (seed 1)",
+        &["condition", "prep s", "train s", "total s", "aip CE", "final eval"],
+    );
+
+    let mut results = Vec::new();
+    for sim in [SimulatorKind::Gs, SimulatorKind::Ials, SimulatorKind::UntrainedIals] {
+        let mut cfg = base.clone();
+        cfg.simulator = sim;
+        let r = run_condition(&rt, &cfg, 1)?;
+        write_curve(format!("results/speedup/{}_seed1.csv", r.condition), &r.curve)?;
+        table.row(&[
+            r.condition.clone(),
+            format!("{:.2}", r.prep_secs),
+            format!("{:.2}", r.train_secs),
+            format!("{:.2}", r.total_secs()),
+            format!("{:.4}", r.aip_ce),
+            format!("{:.4}", r.final_eval),
+        ]);
+        results.push(r);
+    }
+    let actuated = evaluate_actuated(&base, 3, 777);
+    table.row(&[
+        "actuated-baseline".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{actuated:.4}"),
+    ]);
+    table.print();
+
+    let gs = &results[0];
+    let ials = &results[1];
+    println!(
+        "IALS total {:.2}s vs GS total {:.2}s -> {:.2}x wall-clock; final {:.4} vs {:.4}",
+        ials.total_secs(),
+        gs.total_secs(),
+        gs.total_secs() / ials.total_secs(),
+        ials.final_eval,
+        gs.final_eval
+    );
+    Ok(())
+}

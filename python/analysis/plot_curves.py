@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Render the paper-figure panels from results/ CSVs.
+
+Usage:
+  python python/analysis/plot_curves.py results/fig3        # one figure dir
+  python python/analysis/plot_curves.py --all results/      # every figure
+
+Produces, per figure directory:
+  <dir>/curves.png       learning curves vs wall-clock (Fig N top panel)
+  <dir>/runtime.png      total-runtime bars (middle panel)
+  <dir>/ce.png           AIP cross-entropy bars (bottom panel)
+Falls back to ASCII rendering when matplotlib is unavailable.
+"""
+
+import argparse
+import csv
+import os
+import sys
+from collections import defaultdict
+
+
+def read_curve(path):
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    return (
+        [float(r["wall_clock_s"]) for r in rows],
+        [float(r["eval_mean"]) for r in rows],
+    )
+
+
+def read_summary(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def condition_of(fname):
+    # '<condition>_seed<k>.csv'
+    stem = os.path.basename(fname)[: -len(".csv")]
+    return stem.rsplit("_seed", 1)[0]
+
+
+def gather(figdir):
+    curves = defaultdict(list)
+    for f in sorted(os.listdir(figdir)):
+        if f.endswith(".csv") and "_seed" in f and not f.startswith("histogram"):
+            curves[condition_of(f)].append(read_curve(os.path.join(figdir, f)))
+    summary_path = os.path.join(figdir, "summary.csv")
+    summary = read_summary(summary_path) if os.path.exists(summary_path) else []
+    return curves, summary
+
+
+def ascii_plot(curves, width=72, height=18):
+    pts = [(x, y) for runs in curves.values() for xs, ys in runs for x, y in zip(xs, ys)]
+    if not pts:
+        return
+    xmax = max(x for x, _ in pts) or 1.0
+    ymin = min(y for _, y in pts)
+    ymax = max(y for _, y in pts) or 1.0
+    span = (ymax - ymin) or 1.0
+    grid = [[" "] * width for _ in range(height)]
+    marks = "ox+*#@"
+    for ci, (cond, runs) in enumerate(sorted(curves.items())):
+        m = marks[ci % len(marks)]
+        for xs, ys in runs:
+            for x, y in zip(xs, ys):
+                cx = min(width - 1, int(x / xmax * (width - 1)))
+                cy = min(height - 1, int((ymax - y) / span * (height - 1)))
+                grid[cy][cx] = m
+    print(f"  y in [{ymin:.4f}, {ymax:.4f}], x in [0, {xmax:.1f}s]")
+    for row in grid:
+        print("  |" + "".join(row))
+    print("  +" + "-" * width)
+    for ci, cond in enumerate(sorted(curves)):
+        print(f"   {marks[ci % len(marks)]} = {cond}")
+
+
+def render(figdir):
+    curves, summary = gather(figdir)
+    if not curves and not summary:
+        print(f"{figdir}: nothing to plot")
+        return
+    print(f"\n=== {figdir} ===")
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+
+        fig, ax = plt.subplots(figsize=(7, 4))
+        for cond, runs in sorted(curves.items()):
+            for i, (xs, ys) in enumerate(runs):
+                ax.plot(xs, ys, label=cond if i == 0 else None, alpha=0.8)
+        ax.set_xlabel("wall-clock time (s, incl. AIP prep)")
+        ax.set_ylabel("GS evaluation reward")
+        ax.legend()
+        fig.tight_layout()
+        fig.savefig(os.path.join(figdir, "curves.png"), dpi=120)
+        print(f"wrote {figdir}/curves.png")
+
+        if summary:
+            conds = sorted({r["condition"] for r in summary})
+            totals = [
+                sum(float(r["total_secs"]) for r in summary if r["condition"] == c)
+                / max(1, sum(1 for r in summary if r["condition"] == c))
+                for c in conds
+            ]
+            ces = [
+                sum(float(r["aip_ce"]) for r in summary if r["condition"] == c)
+                / max(1, sum(1 for r in summary if r["condition"] == c))
+                for c in conds
+            ]
+            for vals, name, ylabel in [
+                (totals, "runtime.png", "total seconds"),
+                (ces, "ce.png", "held-out cross-entropy"),
+            ]:
+                fig, ax = plt.subplots(figsize=(6, 3))
+                ax.bar(range(len(conds)), vals)
+                ax.set_xticks(range(len(conds)))
+                ax.set_xticklabels(conds, rotation=20, ha="right", fontsize=7)
+                ax.set_ylabel(ylabel)
+                fig.tight_layout()
+                fig.savefig(os.path.join(figdir, name), dpi=120)
+                print(f"wrote {figdir}/{name}")
+    except ImportError:
+        print("(matplotlib unavailable — ASCII rendering)")
+        ascii_plot(curves)
+        for r in summary:
+            print("  ", r)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="figure results dir, or results/ with --all")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        for d in sorted(os.listdir(args.path)):
+            full = os.path.join(args.path, d)
+            if os.path.isdir(full):
+                render(full)
+    else:
+        render(args.path)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

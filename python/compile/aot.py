@@ -1,0 +1,388 @@
+"""AOT emitter: lowers every Layer-2 entry point to **HLO text** and writes
+the artifact manifest + initial-parameter blobs consumed by the Rust
+runtime (``rust/src/runtime``).
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (under --out, default ../artifacts):
+  manifest.txt            models (param tensors) + artifacts (call ABI)
+  <artifact>.hlo.txt      one per entry point
+  <model>.params.bin      f32-LE tensor concatenation in manifest order
+
+Run via ``make artifacts`` (idempotent; only reruns when sources change).
+"""
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Model registry
+# ---------------------------------------------------------------------------
+
+def _with_adam(spec):
+    """Base params + Adam slots (m.*, v.*, adam_t) in manifest order."""
+    full = list(spec)
+    full += [(f"m.{n}", s) for n, s in spec]
+    full += [(f"v.{n}", s) for n, s in spec]
+    full += [("adam_t", (1,))]
+    return full
+
+
+def _init_with_adam(spec, seed):
+    base = M.init_params(spec, seed)
+    zeros = [np.zeros(s, dtype=np.float32) for _, s in spec]
+    return base + zeros + [z.copy() for z in zeros] + [np.zeros((1,), np.float32)]
+
+
+MODELS = {
+    # name: (base spec, init seed)
+    "policy_traffic": (M.policy_spec(M.TRAFFIC_OBS, M.TRAFFIC_ACT), 10),
+    "policy_warehouse": (M.policy_spec(M.WH_OBS * M.WH_STACK, M.WH_ACT), 11),
+    "policy_warehouse_nm": (M.policy_spec(M.WH_OBS, M.WH_ACT), 12),
+    "aip_traffic": (M.aip_fnn_spec(M.TRAFFIC_DSET, M.TRAFFIC_U), 20),
+    "aip_traffic_full": (M.aip_fnn_spec(M.TRAFFIC_ALSH, M.TRAFFIC_U), 21),
+    "aip_warehouse": (M.aip_gru_spec(M.WH_DSET, M.WH_U), 22),
+    "aip_warehouse_nm": (M.aip_fnn_spec(M.WH_DSET, M.WH_U), 23),
+}
+
+GEOMETRY = {
+    "traffic_obs": M.TRAFFIC_OBS,
+    "traffic_act": M.TRAFFIC_ACT,
+    "traffic_dset": M.TRAFFIC_DSET,
+    "traffic_alsh": M.TRAFFIC_ALSH,
+    "traffic_u": M.TRAFFIC_U,
+    "wh_obs": M.WH_OBS,
+    "wh_act": M.WH_ACT,
+    "wh_dset": M.WH_DSET,
+    "wh_alsh": M.WH_ALSH,
+    "wh_u": M.WH_U,
+    "wh_stack": M.WH_STACK,
+    "rollout_b": M.ROLLOUT_B,
+    "rollout_t": M.ROLLOUT_T,
+    "ppo_rollout_n": M.PPO_ROLLOUT_N,
+    "ppo_epochs": M.PPO_EPOCHS,
+    "ppo_minibatch": M.PPO_MINIBATCH,
+    "aip_batch": M.AIP_BATCH,
+    "gru_seq_b": M.GRU_SEQ_B,
+    "gru_seq_t": M.GRU_SEQ_T,
+    "gru_hid": M.GRU_HID,
+}
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders. Each returns (fn, data_inputs, outputs) where
+# data_inputs/outputs are [(name, dtype_str, shape)] and fn takes
+# (base params..., [adam m..., v..., t, scalars...,] data...) positionally.
+# ---------------------------------------------------------------------------
+
+def policy_fwd_artifact(model, batch):
+    spec, _ = MODELS[model]
+    p = len(spec)
+    obs_dim = spec[0][1][0]
+    act_dim = spec[4][1][1]  # w_pi
+
+    def fn(*args):
+        logits, value = M.policy_fwd(args[:p], args[p], use_pallas=True)
+        return (logits, value)
+
+    data_in = [("obs", "f32", (batch, obs_dim))]
+    outs = [("logits", "f32", (batch, act_dim)), ("value", "f32", (batch,))]
+    return fn, data_in, outs
+
+
+def policy_update_artifact(model, mb):
+    spec, _ = MODELS[model]
+    p = len(spec)
+    obs_dim = spec[0][1][0]
+
+    def fn(*args):
+        params = args[:p]
+        m = args[p : 2 * p]
+        v = args[2 * p : 3 * p]
+        t = args[3 * p]
+        lr, clip, vf, ent, mgn = args[3 * p + 1 : 3 * p + 6]
+        obs, actions, adv, ret, old_logp = args[3 * p + 6 :]
+        np_, nm, nv, nt, stats = M.ppo_update(
+            params, m, v, t, lr, clip, vf, ent, mgn, obs, actions, adv, ret, old_logp
+        )
+        return (*np_, *nm, *nv, nt, stats)
+
+    data_in = [
+        ("lr", "f32", (1,)),
+        ("clip", "f32", (1,)),
+        ("vf_coef", "f32", (1,)),
+        ("ent_coef", "f32", (1,)),
+        ("max_grad_norm", "f32", (1,)),
+        ("obs", "f32", (mb, obs_dim)),
+        ("actions", "i32", (mb,)),
+        ("advantages", "f32", (mb,)),
+        ("returns", "f32", (mb,)),
+        ("old_logp", "f32", (mb,)),
+    ]
+    outs = [("stats", "f32", (5,))]
+    return fn, data_in, outs
+
+
+def policy_update_fused_artifact(model, n, epochs, mb):
+    spec, _ = MODELS[model]
+    p = len(spec)
+    obs_dim = spec[0][1][0]
+
+    def fn(*args):
+        params = args[:p]
+        m = args[p : 2 * p]
+        v = args[2 * p : 3 * p]
+        t = args[3 * p]
+        lr, clip, vf, ent, mgn = args[3 * p + 1 : 3 * p + 6]
+        perm, obs, actions, adv, ret, old_logp = args[3 * p + 6 :]
+        np_, nm, nv, nt, stats = M.ppo_update_fused(
+            params, m, v, t, lr, clip, vf, ent, mgn,
+            perm, obs, actions, adv, ret, old_logp, minibatch=mb,
+        )
+        return (*np_, *nm, *nv, nt, stats)
+
+    data_in = [
+        ("lr", "f32", (1,)),
+        ("clip", "f32", (1,)),
+        ("vf_coef", "f32", (1,)),
+        ("ent_coef", "f32", (1,)),
+        ("max_grad_norm", "f32", (1,)),
+        ("perm", "i32", (epochs, n)),
+        ("obs", "f32", (n, obs_dim)),
+        ("actions", "i32", (n,)),
+        ("advantages", "f32", (n,)),
+        ("returns", "f32", (n,)),
+        ("old_logp", "f32", (n,)),
+    ]
+    outs = [("stats", "f32", (5,))]
+    return fn, data_in, outs
+
+
+def aip_fnn_fwd_artifact(model, batch):
+    spec, _ = MODELS[model]
+    p = len(spec)
+    d_dim = spec[0][1][0]
+    u_dim = spec[2][1][1]
+
+    def fn(*args):
+        return (M.aip_fnn_fwd(args[:p], args[p], use_pallas=True),)
+
+    return fn, [("d", "f32", (batch, d_dim))], [("probs", "f32", (batch, u_dim))]
+
+
+def aip_fnn_update_artifact(model, mb):
+    spec, _ = MODELS[model]
+    p = len(spec)
+    d_dim = spec[0][1][0]
+    u_dim = spec[2][1][1]
+
+    def fn(*args):
+        params = args[:p]
+        m = args[p : 2 * p]
+        v = args[2 * p : 3 * p]
+        t = args[3 * p]
+        lr = args[3 * p + 1]
+        d, targets = args[3 * p + 2 :]
+        np_, nm, nv, nt, loss = M.aip_fnn_update(params, m, v, t, lr, d, targets)
+        return (*np_, *nm, *nv, nt, loss)
+
+    data_in = [
+        ("lr", "f32", (1,)),
+        ("d", "f32", (mb, d_dim)),
+        ("targets", "f32", (mb, u_dim)),
+    ]
+    return fn, data_in, [("loss", "f32", (1,))]
+
+
+def aip_gru_step_artifact(model, batch):
+    spec, _ = MODELS[model]
+    p = len(spec)
+    d_dim = spec[0][1][0]
+    hid = spec[1][1][0]
+    u_dim = spec[3][1][1]
+
+    def fn(*args):
+        probs, h_new = M.aip_gru_step(args[:p], args[p], args[p + 1], use_pallas=True)
+        return (probs, h_new)
+
+    data_in = [("h", "f32", (batch, hid)), ("d", "f32", (batch, d_dim))]
+    outs = [("probs", "f32", (batch, u_dim)), ("h_new", "f32", (batch, hid))]
+    return fn, data_in, outs
+
+
+def aip_gru_update_artifact(model, b, t_len):
+    spec, _ = MODELS[model]
+    p = len(spec)
+    d_dim = spec[0][1][0]
+    u_dim = spec[3][1][1]
+
+    def fn(*args):
+        params = args[:p]
+        m = args[p : 2 * p]
+        v = args[2 * p : 3 * p]
+        t = args[3 * p]
+        lr = args[3 * p + 1]
+        seqs, targets = args[3 * p + 2 :]
+        np_, nm, nv, nt, loss = M.aip_gru_update(params, m, v, t, lr, seqs, targets)
+        return (*np_, *nm, *nv, nt, loss)
+
+    data_in = [
+        ("lr", "f32", (1,)),
+        ("seqs", "f32", (b, t_len, d_dim)),
+        ("targets", "f32", (b, t_len, u_dim)),
+    ]
+    return fn, data_in, [("loss", "f32", (1,))]
+
+
+def artifact_registry():
+    arts = {}
+
+    def add(name, model, kind, builder):
+        arts[name] = dict(name=name, model=model, kind=kind, builder=builder)
+
+    for pol in ("policy_traffic", "policy_warehouse", "policy_warehouse_nm"):
+        add(f"{pol}_fwd_b{M.ROLLOUT_B}", pol, "fwd",
+            lambda m=pol: policy_fwd_artifact(m, M.ROLLOUT_B))
+        add(f"{pol}_fwd_b1", pol, "fwd", lambda m=pol: policy_fwd_artifact(m, 1))
+        add(f"{pol}_update", pol, "train",
+            lambda m=pol: policy_update_artifact(m, M.PPO_MINIBATCH))
+        add(f"{pol}_update_fused", pol, "train",
+            lambda m=pol: policy_update_fused_artifact(
+                m, M.PPO_ROLLOUT_N, M.PPO_EPOCHS, M.PPO_MINIBATCH))
+
+    for fnn in ("aip_traffic", "aip_traffic_full", "aip_warehouse_nm"):
+        add(f"{fnn}_fwd_b{M.ROLLOUT_B}", fnn, "fwd",
+            lambda m=fnn: aip_fnn_fwd_artifact(m, M.ROLLOUT_B))
+        add(f"{fnn}_fwd_b1", fnn, "fwd", lambda m=fnn: aip_fnn_fwd_artifact(m, 1))
+        add(f"{fnn}_update", fnn, "train",
+            lambda m=fnn: aip_fnn_update_artifact(m, M.AIP_BATCH))
+
+    add(f"aip_warehouse_step_b{M.ROLLOUT_B}", "aip_warehouse", "fwd",
+        lambda: aip_gru_step_artifact("aip_warehouse", M.ROLLOUT_B))
+    add("aip_warehouse_step_b1", "aip_warehouse", "fwd",
+        lambda: aip_gru_step_artifact("aip_warehouse", 1))
+    add("aip_warehouse_update", "aip_warehouse", "train",
+        lambda: aip_gru_update_artifact("aip_warehouse", M.GRU_SEQ_B, M.GRU_SEQ_T))
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Lowering + manifest emission
+# ---------------------------------------------------------------------------
+
+def _sds(dtype, shape):
+    return jax.ShapeDtypeStruct(shape, I32 if dtype == "i32" else F32)
+
+
+def lower_artifact(art):
+    """Returns (hlo_text, param_inputs, data_inputs, param_outputs, data_outputs)."""
+    spec, _seed = MODELS[art["model"]]
+    fn, data_in, data_out = art["builder"]()
+    p = len(spec)
+
+    param_in = [n for n, _ in spec]
+    param_out = []
+    arg_specs = [_sds("f32", s) for _, s in spec]
+    if art["kind"] == "train":
+        param_in += [f"m.{n}" for n, _ in spec]
+        param_in += [f"v.{n}" for n, _ in spec]
+        param_in += ["adam_t"]
+        param_out = list(param_in)  # updates write everything back
+        arg_specs += [_sds("f32", s) for _, s in spec]  # m
+        arg_specs += [_sds("f32", s) for _, s in spec]  # v
+        arg_specs += [_sds("f32", (1,))]  # adam_t
+        assert len(arg_specs) == 3 * p + 1
+    arg_specs += [_sds(dt, sh) for _, dt, sh in data_in]
+
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered), param_in, data_in, param_out, data_out
+
+
+def emit(out_dir, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    arts = artifact_registry()
+    manifest = ["version 1", ""]
+
+    manifest.append("geometry")
+    for k, v in GEOMETRY.items():
+        manifest.append(f"{k} {v}")
+    manifest.append("endgeometry")
+    manifest.append("")
+
+    # Models + parameter blobs.
+    for mname, (spec, seed) in MODELS.items():
+        full = _with_adam(spec)
+        manifest.append(f"model {mname}")
+        for n, s in full:
+            dims = " ".join(str(d) for d in s)
+            manifest.append(f"param {n} f32 {dims}")
+        manifest.append("endmodel")
+        manifest.append("")
+        arrays = _init_with_adam(spec, seed)
+        blob = np.concatenate([a.astype("<f4").ravel() for a in arrays])
+        blob.tofile(os.path.join(out_dir, f"{mname}.params.bin"))
+
+    # Artifacts.
+    for name, art in arts.items():
+        if only and only not in name:
+            continue
+        hlo, param_in, data_in, param_out, data_out = lower_artifact(art)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest.append(f"artifact {name}")
+        manifest.append(f"model {art['model']}")
+        manifest.append(f"hlo {name}.hlo.txt")
+        for n in param_in:
+            manifest.append(f"input param {n}")
+        for n, dt, sh in data_in:
+            dims = " ".join(str(d) for d in sh)
+            manifest.append(f"input data {n} {dt} {dims}")
+        for n in param_out:
+            manifest.append(f"output param {n}")
+        for n, dt, sh in data_out:
+            dims = " ".join(str(d) for d in sh)
+            manifest.append(f"output data {n} {dt} {dims}")
+        manifest.append("endartifact")
+        manifest.append("")
+        print(f"lowered {name} ({len(hlo)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(arts)} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    emit(args.out, args.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Layer 1: fused GRU-cell Pallas kernel — the compute hot-spot of the
+warehouse influence predictor, which runs on the IALS simulation hot path
+(one call per simulator step).
+
+Fusion strategy (DESIGN.md §Hardware-Adaptation): the three gates are
+computed from two MXU-shaped matmuls ``x @ W_x`` ([B,D]x[D,3H]) and
+``h @ W_h`` ([B,H]x[H,3H]) executed in one kernel invocation, with all gate
+nonlinearities and the convex-combination update applied in-register before
+a single store of h'. A naive cell issues 6 matmuls and 5+ elementwise
+kernels; the fused cell is 2 matmuls + 1 store.
+
+VMEM footprint per block (f32): block_b*(D+H) inputs + (D+H)*3H weights +
+3H bias + block_b*3H workspace + block_b*H output. For the paper config
+(B=16, D=24, H=32): ~21 KB — a single-block schedule fits trivially in the
+~16 MB VMEM budget, so grid=(1,) is the optimal schedule and the kernel is
+launch-latency-bound, which is exactly why fusing it matters.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gru_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, o_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    wx = wx_ref[...]
+    wh = wh_ref[...]
+    b = b_ref[...]
+    hidden = h.shape[-1]
+    gx = jnp.dot(x, wx, preferred_element_type=jnp.float32) + b[None, :]
+    gh = jnp.dot(h, wh, preferred_element_type=jnp.float32)
+    xz = gx[:, :hidden]
+    xr = gx[:, hidden : 2 * hidden]
+    xn = gx[:, 2 * hidden :]
+    hz = gh[:, :hidden]
+    hr = gh[:, hidden : 2 * hidden]
+    hn = gh[:, 2 * hidden :]
+    z = jnp.reciprocal(1.0 + jnp.exp(-(xz + hz)))
+    r = jnp.reciprocal(1.0 + jnp.exp(-(xr + hr)))
+    n = jnp.tanh(xn + r * hn)
+    o_ref[...] = (1.0 - z) * n + z * h
+
+
+def fused_gru_cell(x, h, w_x, w_h, b, block_b=None):
+    """One GRU step: returns h' of shape [B, H].
+
+    x: [B, D], h: [B, H], w_x: [D, 3H], w_h: [H, 3H], b: [3H].
+    """
+    bsz, d = x.shape
+    _, hidden = h.shape
+    assert w_x.shape == (d, 3 * hidden), (w_x.shape, d, hidden)
+    assert w_h.shape == (hidden, 3 * hidden)
+    assert b.shape == (3 * hidden,)
+    if block_b is None or block_b >= bsz:
+        block_b = bsz
+    assert bsz % block_b == 0
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _gru_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((d, 3 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, 3 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((3 * hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+        interpret=True,
+    )(x, h, w_x, w_h, b)

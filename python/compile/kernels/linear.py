@@ -1,0 +1,61 @@
+"""Layer 1: fused linear(+activation) Pallas kernel.
+
+The MLP policy / FNN influence-predictor forwards are chains of
+``act(x @ W + b)``; fusing the bias-add and activation into the matmul
+kernel keeps the intermediate in VMEM and stores exactly once — the TPU
+analogue of a fused CUDA epilogue (DESIGN.md §Hardware-Adaptation).
+
+Block schedule: grid over the batch dimension in tiles of ``block_b`` rows;
+the full weight tile lives in VMEM (our layer widths are tiny relative to
+the ~16 MB VMEM budget — see EXPERIMENTS.md §Perf for the footprint math).
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU behaviour is estimated analytically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation == "sigmoid":
+        y = jnp.reciprocal(1.0 + jnp.exp(-y))
+    o_ref[...] = y
+
+
+def fused_linear(x, w, b, activation="none", block_b=None):
+    """act(x @ w + b) as a single Pallas kernel.
+
+    x: [B, D], w: [D, N], b: [N] -> [B, N]
+    """
+    assert x.ndim == 2 and w.ndim == 2 and b.ndim == 1, (x.shape, w.shape, b.shape)
+    bsz, d = x.shape
+    d2, n = w.shape
+    assert d == d2 and b.shape[0] == n
+    if block_b is None or block_b >= bsz:
+        block_b = bsz
+    assert bsz % block_b == 0, "batch must divide by the block size"
+    grid = (bsz // block_b,)
+    kernel = functools.partial(_linear_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1 correctness
+anchors — every kernel must match these to float tolerance, checked by
+pytest + hypothesis in ``python/tests/test_kernel.py``).
+
+The *training* artifacts (PPO update, AIP trainers) also use these
+implementations directly: interpret-mode ``pallas_call`` has no VJP rule,
+so the backward pass is taken through the identical jnp math instead (see
+DESIGN.md §Hardware-Adaptation). The kernel-vs-ref tests are what make
+"identical" a checked property rather than a hope.
+"""
+
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, activation="none"):
+    """y = act(x @ w + b). activation in {none, relu, tanh, sigmoid}."""
+    y = x @ w + b
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "sigmoid":
+        return jnp.reciprocal(1.0 + jnp.exp(-y))
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation}")
+
+
+def gru_cell_ref(x, h, w_x, w_h, b):
+    """Standard GRU cell with fused gate weights.
+
+    x: [B, D], h: [B, H]
+    w_x: [D, 3H] (z | r | n blocks), w_h: [H, 3H], b: [3H]
+    returns h': [B, H]
+    """
+    hidden = h.shape[-1]
+    gx = x @ w_x + b  # [B, 3H]
+    gh = h @ w_h  # [B, 3H]
+    xz, xr, xn = gx[:, :hidden], gx[:, hidden : 2 * hidden], gx[:, 2 * hidden :]
+    hz, hr, hn = gh[:, :hidden], gh[:, hidden : 2 * hidden], gh[:, 2 * hidden :]
+    z = jnp.reciprocal(1.0 + jnp.exp(-(xz + hz)))
+    r = jnp.reciprocal(1.0 + jnp.exp(-(xr + hr)))
+    n = jnp.tanh(xn + r * hn)
+    return (1.0 - z) * n + z * h

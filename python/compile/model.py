@@ -1,0 +1,314 @@
+"""Layer 2: JAX model definitions — policy networks, influence predictors,
+the PPO update and the AIP trainers — plus parameter specs shared with the
+AOT emitter (``aot.py``) and the Rust runtime (via the manifest).
+
+Conventions
+-----------
+* All functions take **flat positional tensor arguments** in the exact
+  order declared by the specs here; ``aot.py`` lowers them positionally and
+  writes the same order into the manifest, so the Rust runtime can bind
+  parameters by name without any pytree logic.
+* Forward (request-path) functions run the Pallas kernels (Layer 1).
+  Update functions differentiate through the identical pure-jnp math from
+  ``kernels/ref.py`` (interpret-mode ``pallas_call`` has no VJP rule); the
+  kernel-vs-ref pytest suite pins the two implementations together.
+* Scalars (learning rate, clip, Adam step counter, ...) are shape-``(1,)``
+  f32 tensors to keep the Rust literal story uniform.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.gru import fused_gru_cell
+from .kernels.linear import fused_linear
+from .kernels.ref import gru_cell_ref, linear_ref
+
+# ---------------------------------------------------------------------------
+# Domain geometry (MUST match the Rust simulators; the manifest carries these
+# so the runtime validates at load time).
+# ---------------------------------------------------------------------------
+
+TRAFFIC_OBS = 42  # 4 lanes x 10 cells + phase one-hot
+TRAFFIC_ACT = 2
+TRAFFIC_DSET = 40
+TRAFFIC_ALSH = 43
+TRAFFIC_U = 4
+
+WH_OBS = 37  # 25 position bitmap + 12 item bits
+WH_ACT = 5
+WH_DSET = 24
+WH_ALSH = 49
+WH_U = 12
+WH_STACK = 8  # frame stack of the memory agent (paper App F)
+
+POLICY_HID = 64
+AIP_FNN_HID = 64
+GRU_HID = 64
+
+ROLLOUT_B = 16  # vectorized envs per training simulator
+ROLLOUT_T = 128  # steps per rollout
+PPO_ROLLOUT_N = ROLLOUT_B * ROLLOUT_T  # full-batch size of the fused update
+PPO_EPOCHS = 4
+PPO_MINIBATCH = 256
+AIP_BATCH = 256
+GRU_SEQ_B = 16
+GRU_SEQ_T = 32  # BPTT length >= agent memory (Theorem 1)
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs + initialization
+# ---------------------------------------------------------------------------
+
+def policy_spec(obs_dim, act_dim, hid=POLICY_HID):
+    return [
+        ("w1", (obs_dim, hid)),
+        ("b1", (hid,)),
+        ("w2", (hid, hid)),
+        ("b2", (hid,)),
+        ("w_pi", (hid, act_dim)),
+        ("b_pi", (act_dim,)),
+        ("w_v", (hid, 1)),
+        ("b_v", (1,)),
+    ]
+
+
+def aip_fnn_spec(d_dim, u_dim, hid=AIP_FNN_HID):
+    return [
+        ("w1", (d_dim, hid)),
+        ("b1", (hid,)),
+        ("w2", (hid, u_dim)),
+        ("b2", (u_dim,)),
+    ]
+
+
+def aip_gru_spec(d_dim, u_dim, hid=GRU_HID):
+    return [
+        ("w_x", (d_dim, 3 * hid)),
+        ("w_h", (hid, 3 * hid)),
+        ("b_g", (3 * hid,)),
+        ("w_o", (hid, u_dim)),
+        ("b_o", (u_dim,)),
+    ]
+
+
+def init_params(spec, seed, head_names=("w_pi", "w_v")):
+    """Glorot-normal init (small-scale policy heads), deterministic."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in spec:
+        if len(shape) == 1:
+            out.append(np.zeros(shape, dtype=np.float32))
+        else:
+            fan_in, fan_out = shape[0], shape[1]
+            scale = np.sqrt(2.0 / (fan_in + fan_out))
+            if name in head_names:
+                scale *= 0.1  # near-uniform initial policy / small values
+            out.append(rng.normal(0.0, scale, size=shape).astype(np.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _lin(use_pallas):
+    return fused_linear if use_pallas else linear_ref
+
+
+def policy_fwd(params, obs, use_pallas=True):
+    """-> (logits [B, A], value [B])."""
+    w1, b1, w2, b2, w_pi, b_pi, w_v, b_v = params
+    lin = _lin(use_pallas)
+    h = lin(obs, w1, b1, "tanh")
+    h = lin(h, w2, b2, "tanh")
+    logits = lin(h, w_pi, b_pi, "none")
+    value = lin(h, w_v, b_v, "none")[:, 0]
+    return logits, value
+
+
+def aip_fnn_fwd(params, d, use_pallas=True):
+    """-> per-source Bernoulli probabilities [B, U]."""
+    w1, b1, w2, b2 = params
+    lin = _lin(use_pallas)
+    h = lin(d, w1, b1, "tanh")
+    return lin(h, w2, b2, "sigmoid")
+
+
+def aip_fnn_logits(params, d):
+    """jnp-only logits path (for the numerically-stable BCE trainer)."""
+    w1, b1, w2, b2 = params
+    h = linear_ref(d, w1, b1, "tanh")
+    return linear_ref(h, w2, b2, "none")
+
+
+def aip_gru_step(params, h, d, use_pallas=True):
+    """One recurrent AIP step: -> (probs [B, U], h' [B, H])."""
+    w_x, w_h, b_g, w_o, b_o = params
+    cell = fused_gru_cell if use_pallas else gru_cell_ref
+    lin = _lin(use_pallas)
+    h_new = cell(d, h, w_x, w_h, b_g)
+    probs = lin(h_new, w_o, b_o, "sigmoid")
+    return probs, h_new
+
+
+def aip_gru_logits_scan(params, seqs):
+    """Unrolled (lax.scan) logits over a [B, T, D] batch -> [B, T, U]."""
+    w_x, w_h, b_g, w_o, b_o = params
+    bsz = seqs.shape[0]
+    hid = w_h.shape[0]
+
+    def step(h, x_t):
+        h_new = gru_cell_ref(x_t, h, w_x, w_h, b_g)
+        logits_t = linear_ref(h_new, w_o, b_o, "none")
+        return h_new, logits_t
+
+    h0 = jnp.zeros((bsz, hid), dtype=jnp.float32)
+    _, logits = jax.lax.scan(step, h0, jnp.swapaxes(seqs, 0, 1))
+    return jnp.swapaxes(logits, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Optimization building blocks
+# ---------------------------------------------------------------------------
+
+def bce_with_logits(logits, targets):
+    """Numerically-stable mean binary cross-entropy (paper Eq. 3)."""
+    return jnp.mean(
+        jnp.maximum(logits, 0.0)
+        - logits * targets
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def clip_global_norm(grads, max_norm):
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-8))
+    return [g * scale for g in grads], gn
+
+
+def adam_step(params, grads, m, v, t, lr):
+    """One Adam update. ``t`` and ``lr`` are shape-(1,) tensors.
+
+    Returns (new_params, new_m, new_v, new_t).
+    """
+    t_new = t + 1.0
+    bc1 = 1.0 - jnp.power(ADAM_B1, t_new[0])
+    bc2 = 1.0 - jnp.power(ADAM_B2, t_new[0])
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        m2 = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        new_params.append(p - lr[0] * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_params, new_m, new_v, t_new
+
+
+# ---------------------------------------------------------------------------
+# Training steps (compiled into *_update artifacts)
+# ---------------------------------------------------------------------------
+
+def ppo_update(params, m, v, t, lr, clip, vf_coef, ent_coef, max_gn,
+               obs, actions, advantages, returns, old_logp):
+    """Clipped-surrogate PPO minibatch update (Schulman et al. 2017).
+
+    All of ``params/m/v`` are lists; scalars are shape-(1,); ``actions`` is
+    int32 [M]. Returns (new_params, new_m, new_v, new_t, stats[5]) where
+    stats = [total_loss, pg_loss, v_loss, entropy, approx_kl].
+    """
+
+    def loss_fn(ps):
+        logits, value = policy_fwd(ps, obs, use_pallas=False)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = jnp.take_along_axis(logp_all, actions[:, None], axis=1)[:, 0]
+        ratio = jnp.exp(logp - old_logp)
+        s1 = ratio * advantages
+        s2 = jnp.clip(ratio, 1.0 - clip[0], 1.0 + clip[0]) * advantages
+        pg_loss = -jnp.mean(jnp.minimum(s1, s2))
+        v_loss = jnp.mean((value - returns) ** 2)
+        probs = jnp.exp(logp_all)
+        entropy = jnp.mean(-jnp.sum(probs * logp_all, axis=1))
+        total = pg_loss + vf_coef[0] * v_loss - ent_coef[0] * entropy
+        approx_kl = jnp.mean(old_logp - logp)
+        return total, (pg_loss, v_loss, entropy, approx_kl)
+
+    (total, (pg, vl, ent, kl)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        list(params)
+    )
+    grads, _gn = clip_global_norm(grads, max_gn[0])
+    new_params, new_m, new_v, new_t = adam_step(list(params), grads, list(m), list(v), t, lr)
+    stats = jnp.stack([total, pg, vl, ent, kl])
+    return new_params, new_m, new_v, new_t, stats
+
+
+def ppo_update_fused(params, m, v, t, lr, clip, vf_coef, ent_coef, max_gn,
+                     perm, obs, actions, advantages, returns, old_logp,
+                     minibatch=None):
+    """A whole PPO update phase (epochs × minibatches) in ONE compiled
+    call — the L3 perf-pass optimization (EXPERIMENTS.md §Perf): the naive
+    path pays per-call parameter round-trips 32× per iteration; this pays
+    them once.
+
+    ``perm``: int32 [E, N] — per-epoch shuffled indices supplied by the
+    Rust trainer (keeping all RNG on the Rust side). ``obs`` etc. are the
+    full rollout batch [N, ...]. Scans over epochs and minibatch chunks.
+    Returns (new_params, new_m, new_v, new_t, stats[5]) with stats averaged
+    over all minibatch updates.
+    """
+    mb = minibatch or PPO_MINIBATCH
+    n = obs.shape[0]
+    assert n % mb == 0
+    p_len = len(params)
+
+    def mb_body(carry, idx):
+        ps, ms, vs, ts = carry
+        mb_obs = jnp.take(obs, idx, axis=0)
+        mb_act = jnp.take(actions, idx, axis=0)
+        mb_adv = jnp.take(advantages, idx, axis=0)
+        mb_ret = jnp.take(returns, idx, axis=0)
+        mb_lp = jnp.take(old_logp, idx, axis=0)
+        nps, nms, nvs, nts, stats = ppo_update(
+            list(ps), list(ms), list(vs), ts, lr, clip, vf_coef, ent_coef,
+            max_gn, mb_obs, mb_act, mb_adv, mb_ret, mb_lp
+        )
+        return (tuple(nps), tuple(nms), tuple(nvs), nts), stats
+
+    def epoch_body(carry, perm_e):
+        chunks = perm_e.reshape(n // mb, mb)
+        return jax.lax.scan(mb_body, carry, chunks)
+
+    carry = (tuple(params), tuple(m), tuple(v), t)
+    carry, stats = jax.lax.scan(epoch_body, carry, perm)
+    ps, ms, vs, ts = carry
+    mean_stats = jnp.mean(stats.reshape(-1, 5), axis=0)
+    assert len(ps) == p_len
+    return list(ps), list(ms), list(vs), ts, mean_stats
+
+
+def aip_fnn_update(params, m, v, t, lr, d, targets):
+    """One Adam step on the FNN influence predictor (BCE, Eq. 3)."""
+
+    def loss_fn(ps):
+        return bce_with_logits(aip_fnn_logits(ps, d), targets)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    new_params, new_m, new_v, new_t = adam_step(list(params), grads, list(m), list(v), t, lr)
+    return new_params, new_m, new_v, new_t, jnp.stack([loss])
+
+
+def aip_gru_update(params, m, v, t, lr, seqs, targets):
+    """One Adam step on the GRU influence predictor (BPTT over T steps)."""
+
+    def loss_fn(ps):
+        return bce_with_logits(aip_gru_logits_scan(ps, seqs), targets)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    new_params, new_m, new_v, new_t = adam_step(list(params), grads, list(m), list(v), t, lr)
+    return new_params, new_m, new_v, new_t, jnp.stack([loss])

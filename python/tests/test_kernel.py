@@ -1,0 +1,98 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes; assert_allclose against ref — this is THE
+correctness signal that lets the training artifacts (which differentiate
+the jnp math) stand in for the kernels' backward pass.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.gru import fused_gru_cell
+from compile.kernels.linear import fused_linear
+from compile.kernels.ref import gru_cell_ref, linear_ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 32),
+    d=st.integers(1, 48),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "relu", "tanh", "sigmoid"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(b, d, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = _rand(rng, b, d), _rand(rng, d, n), _rand(rng, n)
+    got = np.asarray(fused_linear(x, w, bias, act))
+    want = np.asarray(linear_ref(x, w, bias, act))
+    assert got.shape == (b, n)
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 24),
+    d=st.integers(1, 40),
+    h=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_gru_cell_matches_ref(b, d, h, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    hid = _rand(rng, b, h)
+    wx, wh, bias = _rand(rng, d, 3 * h), _rand(rng, h, 3 * h), _rand(rng, 3 * h)
+    got = np.asarray(fused_gru_cell(x, hid, wx, wh, bias))
+    want = np.asarray(gru_cell_ref(x, hid, wx, wh, bias))
+    assert got.shape == (b, h)
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 4, 8])
+def test_fused_linear_blocked_grid(block_b):
+    """Batch-tiled schedules must agree with the single-block kernel."""
+    rng = np.random.default_rng(0)
+    x, w, bias = _rand(rng, 8, 16), _rand(rng, 16, 12), _rand(rng, 12)
+    got = np.asarray(fused_linear(x, w, bias, "relu", block_b=block_b))
+    want = np.asarray(linear_ref(x, w, bias, "relu"))
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 4])
+def test_fused_gru_blocked_grid(block_b):
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 4, 24)
+    h = _rand(rng, 4, 32)
+    wx, wh, bias = _rand(rng, 24, 96), _rand(rng, 32, 96), _rand(rng, 96)
+    got = np.asarray(fused_gru_cell(x, h, wx, wh, bias, block_b=block_b))
+    want = np.asarray(gru_cell_ref(x, h, wx, wh, bias))
+    assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_gru_gates_behave():
+    """Degenerate weights: zero weights -> h' = (1-z)*tanh(0)+z*h with
+    z = sigmoid(0) = 0.5 -> h' = h/2 exactly."""
+    b, d, h = 3, 5, 7
+    x = np.ones((b, d), np.float32)
+    hid = np.full((b, h), 2.0, np.float32)
+    wx = np.zeros((d, 3 * h), np.float32)
+    wh = np.zeros((h, 3 * h), np.float32)
+    bias = np.zeros(3 * h, np.float32)
+    got = np.asarray(fused_gru_cell(x, hid, wx, wh, bias))
+    assert_allclose(got, np.full((b, h), 1.0), rtol=1e-6, atol=1e-6)
+
+
+def test_linear_identity():
+    x = np.eye(4, dtype=np.float32)
+    w = np.eye(4, dtype=np.float32)
+    b = np.zeros(4, np.float32)
+    assert_allclose(np.asarray(fused_linear(x, w, b)), x, rtol=0, atol=0)

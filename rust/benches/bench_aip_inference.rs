@@ -1,0 +1,83 @@
+//! Microbenchmarks of every compiled artifact on the hot path: policy
+//! forwards, AIP forwards (FNN + Pallas-fused GRU step), and the training
+//! updates. These are the fixed NN overheads the IALS must amortize.
+
+use ials::bench_harness::{Bench, Table};
+use ials::runtime::{DataArg, Runtime};
+
+fn main() {
+    let rt = Runtime::load("artifacts").expect("make artifacts first");
+    let mut table = Table::new(
+        "artifact call latency (CPU PJRT)",
+        &["artifact", "mean µs", "p95 µs"],
+    );
+
+    let mut add = |name: &str, data: &[DataArg<'_>]| {
+        let model = rt.manifest.artifact(name).unwrap().model.clone();
+        let mut store = rt.load_store(&model).unwrap();
+        let r = Bench::new(name).warmup(20).reps(200).run(1.0, || {
+            rt.call(name, &mut store, data).unwrap();
+        });
+        table.row(&[
+            name.into(),
+            format!("{:.1}", r.summary.mean * 1e6),
+            format!("{:.1}", r.summary.p95 * 1e6),
+        ]);
+    };
+
+    let obs16 = vec![0.3f32; 16 * 42];
+    let obs1 = vec![0.3f32; 42];
+    add("policy_traffic_fwd_b16", &[DataArg::F32(&obs16)]);
+    add("policy_traffic_fwd_b1", &[DataArg::F32(&obs1)]);
+
+    let d16 = vec![1.0f32; 16 * 40];
+    add("aip_traffic_fwd_b16", &[DataArg::F32(&d16)]);
+
+    let h16 = vec![0.0f32; 16 * 64];
+    let wd16 = vec![0.5f32; 16 * 24];
+    add(
+        "aip_warehouse_step_b16",
+        &[DataArg::F32(&h16), DataArg::F32(&wd16)],
+    );
+
+    let wobs16 = vec![0.1f32; 16 * 296];
+    add("policy_warehouse_fwd_b16", &[DataArg::F32(&wobs16)]);
+
+    // training artifacts
+    let lr = [1e-3f32];
+    let ad = vec![0.5f32; 256 * 40];
+    let ay = vec![0.0f32; 256 * 4];
+    add(
+        "aip_traffic_update",
+        &[DataArg::F32(&lr), DataArg::F32(&ad), DataArg::F32(&ay)],
+    );
+    let seqs = vec![0.5f32; 16 * 32 * 24];
+    let tgts = vec![0.0f32; 16 * 32 * 12];
+    add(
+        "aip_warehouse_update",
+        &[DataArg::F32(&lr), DataArg::F32(&seqs), DataArg::F32(&tgts)],
+    );
+    let pobs = vec![0.1f32; 256 * 42];
+    let pact = vec![0i32; 256];
+    let padv = vec![0.1f32; 256];
+    let pret = vec![0.1f32; 256];
+    let plog = vec![-0.7f32; 256];
+    let h: Vec<[f32; 1]> = vec![[3e-4], [0.2], [0.5], [0.01], [0.5]];
+    add(
+        "policy_traffic_update",
+        &[
+            DataArg::F32(&h[0]),
+            DataArg::F32(&h[1]),
+            DataArg::F32(&h[2]),
+            DataArg::F32(&h[3]),
+            DataArg::F32(&h[4]),
+            DataArg::F32(&pobs),
+            DataArg::I32(&pact),
+            DataArg::F32(&padv),
+            DataArg::F32(&pret),
+            DataArg::F32(&plog),
+        ],
+    );
+
+    table.print();
+}

@@ -1,0 +1,29 @@
+//! Appendix E (Figures 11 + 12): F-IALS conditions — fixed marginal
+//! influence predictors vs the trained AIP and the GS, for both domains,
+//! at a bench-sized budget. Full scale: `repro figure --name fig11/fig12`.
+
+use ials::config::ExperimentConfig;
+use ials::coordinator::run_figure;
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() {
+    ials::util::logger::init();
+    let rt = Rc::new(Runtime::load("artifacts").expect("make artifacts first"));
+    let mut base = ExperimentConfig::default();
+    base.seeds = vec![1];
+    base.ppo.total_steps = 16_384;
+    base.eval_every = 8_192;
+    base.eval_episodes = 2;
+    base.aip.dataset_size = 20_000;
+    base.aip.train_epochs = 4;
+    base.results_dir = "results/bench".into();
+    run_figure(&rt, "fig11", &base).expect("fig11 failed");
+
+    // Fig 12 shares the F-IALS machinery with a data-estimated marginal.
+    let mut wh = base.clone();
+    wh.aip.train_epochs = 12;
+    wh.aip.lr = 3e-3;
+    wh.aip.dataset_size = 24_000;
+    run_figure(&rt, "fig12", &wh).expect("fig12 failed");
+}

@@ -1,0 +1,27 @@
+//! Figure 3 (and, with `IALS_BENCH_INTERSECTION=2`, Figure 10): traffic
+//! learning curves + runtime bars + AIP CE bars, at a bench-sized budget.
+//! The full-scale run is `repro figure --name fig3 --config configs/fig3.toml`.
+
+use ials::config::ExperimentConfig;
+use ials::coordinator::run_figure;
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() {
+    ials::util::logger::init();
+    let rt = Rc::new(Runtime::load("artifacts").expect("make artifacts first"));
+    let mut base = ExperimentConfig::default();
+    base.seeds = vec![1];
+    base.ppo.total_steps = 16_384;
+    base.eval_every = 8_192;
+    base.eval_episodes = 2;
+    base.aip.dataset_size = 20_000;
+    base.aip.train_epochs = 4;
+    base.results_dir = "results/bench".into();
+    let fig = if std::env::var("IALS_BENCH_INTERSECTION").as_deref() == Ok("2") {
+        "fig10"
+    } else {
+        "fig3"
+    };
+    run_figure(&rt, fig, &base).expect("figure run failed");
+}

@@ -1,0 +1,22 @@
+//! Figure 6 (§5.4): the M/NM agent × M/NM AIP 2×2 plus the item-lifetime
+//! histograms, at a bench-sized budget. Full scale: `repro figure --name fig6`.
+
+use ials::config::ExperimentConfig;
+use ials::coordinator::run_figure;
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() {
+    ials::util::logger::init();
+    let rt = Rc::new(Runtime::load("artifacts").expect("make artifacts first"));
+    let mut base = ExperimentConfig::default();
+    base.seeds = vec![1];
+    base.ppo.total_steps = 16_384;
+    base.eval_every = 8_192;
+    base.eval_episodes = 2;
+    base.aip.dataset_size = 24_000;
+    base.aip.train_epochs = 25;
+    base.aip.lr = 3e-3;
+    base.results_dir = "results/bench".into();
+    run_figure(&rt, "fig6", &base).expect("figure run failed");
+}

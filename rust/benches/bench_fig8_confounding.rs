@@ -1,0 +1,18 @@
+//! Appendix B / Figure 8: the spurious-correlation ablation. Trains the
+//! traffic AIP on π₀ data with the d-set vs the full ALSH (lights included)
+//! and reports held-out CE on-policy vs off-policy (actuated controller).
+
+use ials::config::ExperimentConfig;
+use ials::coordinator::run_figure;
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() {
+    ials::util::logger::init();
+    let rt = Rc::new(Runtime::load("artifacts").expect("make artifacts first"));
+    let mut base = ExperimentConfig::default();
+    base.aip.dataset_size = 30_000;
+    base.aip.train_epochs = 6;
+    base.results_dir = "results/bench".into();
+    run_figure(&rt, "fig8", &base).expect("figure run failed");
+}

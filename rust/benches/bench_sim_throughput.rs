@@ -1,0 +1,103 @@
+//! Headline systems table: raw steps/sec of GS vs LS vs IALS (LS + neural
+//! AIP) for both domains — the mechanism behind every wall-clock result in
+//! the paper. Run via `cargo bench --bench bench_sim_throughput`.
+
+use ials::bench_harness::{Bench, Table};
+use ials::config::ExperimentConfig;
+use ials::config::SimulatorKind;
+use ials::coordinator::experiment::{make_train_env, prepare_predictor};
+use ials::runtime::Runtime;
+use ials::util::Pcg32;
+use std::rc::Rc;
+
+fn steps_per_sec(env: &mut dyn ials::core::VecEnv, vec_steps: usize, label: &str) -> f64 {
+    let b = env.num_envs();
+    let mut rng = Pcg32::seeded(1);
+    let mut rewards = vec![0.0f32; b];
+    let mut dones = vec![false; b];
+    let mut actions = vec![0usize; b];
+    env.reset_all(7);
+    let na = env.num_actions();
+    let r = Bench::new(label).warmup(1).reps(5).run((vec_steps * b) as f64, || {
+        for _ in 0..vec_steps {
+            for a in actions.iter_mut() {
+                *a = rng.below(na);
+            }
+            env.step_all(&actions, &mut rewards, &mut dones);
+        }
+    });
+    r.throughput()
+}
+
+fn main() {
+    let rt = Rc::new(Runtime::load("artifacts").expect("make artifacts first"));
+    let mut table = Table::new(
+        "simulator throughput (env-steps/sec, batch 16, random policy)",
+        &["domain", "GS", "LS+AIP (IALS)", "LS+fixed", "IALS/GS speedup"],
+    );
+
+    for domain in ["traffic", "warehouse"] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.domain = ials::config::DomainKind::parse(domain).unwrap();
+        cfg.aip.dataset_size = 4096;
+        cfg.aip.train_epochs = 1;
+        if domain == "warehouse" {
+            cfg.warehouse.frame_stack = 1; // raw sim rate, no stacking
+        }
+
+        // GS
+        let mut gs = make_train_env(&cfg, None);
+        let gs_rate = steps_per_sec(gs.as_mut(), 300, &format!("{domain}/gs"));
+
+        // IALS (trained neural AIP — AIP training excluded; this measures
+        // the simulation loop only)
+        cfg.simulator = SimulatorKind::Ials;
+        let prep = prepare_predictor(&rt, &cfg, 1, cfg.ppo.num_envs).unwrap();
+        let mut ials_env = make_train_env(&cfg, prep.predictor);
+        let ials_rate = steps_per_sec(ials_env.as_mut(), 300, &format!("{domain}/ials"));
+
+        // LS + fixed marginal (isolates the PJRT AIP-call overhead)
+        cfg.simulator = SimulatorKind::FixedIals;
+        cfg.aip.fixed_p = 0.1;
+        let prep = prepare_predictor(&rt, &cfg, 1, cfg.ppo.num_envs).unwrap();
+        let mut fixed_env = make_train_env(&cfg, prep.predictor);
+        let fixed_rate = steps_per_sec(fixed_env.as_mut(), 300, &format!("{domain}/fixed"));
+
+        table.row(&[
+            domain.into(),
+            format!("{gs_rate:.0}"),
+            format!("{ials_rate:.0}"),
+            format!("{fixed_rate:.0}"),
+            format!("{:.2}x", ials_rate / gs_rate),
+        ]);
+    }
+    table.print();
+
+    // Scalability sweep (the paper's title claim): GS cost grows with the
+    // size of the networked system; the IALS cost is constant, so the
+    // speedup scales with the city.
+    let mut scale = Table::new(
+        "traffic scalability: speedup vs city size (IALS cost is city-size independent)",
+        &["grid (intersections)", "GS steps/s", "IALS steps/s", "speedup"],
+    );
+    for grid in [5usize, 7, 9, 13] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.traffic.grid = grid;
+        cfg.aip.dataset_size = 4096;
+        cfg.aip.train_epochs = 1;
+        let mut gs = make_train_env(&cfg, None);
+        let gs_rate = steps_per_sec(gs.as_mut(), 150, &format!("traffic/gs/grid{grid}"));
+        cfg.simulator = SimulatorKind::Ials;
+        let prep = prepare_predictor(&rt, &cfg, 1, cfg.ppo.num_envs).unwrap();
+        let mut ials_env = make_train_env(&cfg, prep.predictor);
+        let ials_rate =
+            steps_per_sec(ials_env.as_mut(), 150, &format!("traffic/ials/grid{grid}"));
+        scale.row(&[
+            format!("{grid}x{grid} ({})", grid * grid),
+            format!("{gs_rate:.0}"),
+            format!("{ials_rate:.0}"),
+            format!("{:.2}x", ials_rate / gs_rate),
+        ]);
+    }
+    scale.print();
+}

@@ -1,0 +1,157 @@
+//! Hand-rolled benchmark harness (criterion is not in the offline crate
+//! set — DESIGN.md §6). `cargo bench` binaries use [`Bench`] to report
+//! mean/p50/p95 wall-clock per iteration, plus free-form result tables for
+//! the paper-figure benches (learning curves, runtime bars, CE losses).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Simple timing benchmark: warmup then `reps` timed runs of a closure.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    reps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub summary: Summary,
+    /// Iterations of work done per rep (for throughput reporting).
+    pub items_per_rep: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        self.items_per_rep / self.summary.mean
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup: 3, reps: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn reps(mut self, n: usize) -> Self {
+        self.reps = n;
+        self
+    }
+
+    /// Run the closure; `items_per_rep` is the number of logical items each
+    /// rep processes (e.g. simulator steps) for steps/sec reporting.
+    pub fn run(&self, items_per_rep: f64, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&times);
+        let res = BenchResult { name: self.name.clone(), summary, items_per_rep };
+        print_result(&res);
+        res
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let s = &r.summary;
+    println!(
+        "bench {:<44} mean {:>10.4} ms  p50 {:>10.4} ms  p95 {:>10.4} ms  ({:.0} items/s)",
+        r.name,
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        r.throughput()
+    );
+}
+
+/// A labelled results table printed in a uniform format so each paper-figure
+/// bench emits "the same rows the paper reports".
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells);
+    }
+
+    /// Pretty-print with column alignment.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::new();
+            for c in 0..ncol {
+                line.push_str(&format!("{:<w$}  ", cells[c], w = widths[c]));
+            }
+            println!("{}", line.trim_end());
+        };
+        fmt_row(&self.header);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for row in &self.rows {
+            fmt_row(row);
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = Bench::new("noop").warmup(1).reps(5).run(100.0, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn table_accepts_matching_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Hand-rolled CLI (clap is not in the offline crate set — DESIGN.md §6).
+//!
+//! ```text
+//! repro figure --name fig3 [--config configs/base.toml]
+//! repro train  --config configs/fig3_ials.toml [--seed 1]
+//! repro collect --domain traffic --steps 50000 --out results/data.csv
+//! repro list
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter();
+        args.subcommand = it
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing subcommand\n{}", USAGE))?;
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{a}'\n{}", USAGE))?;
+            let value = it
+                .next()
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?
+                .clone();
+            if args.flags.insert(key.to_string(), value).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+repro — Influence-Augmented Local Simulators (ICML 2022) reproduction
+
+USAGE:
+  repro figure --name <fig3|fig5|fig6|fig8|fig10|fig11|fig12> [--config <toml>]
+  repro train  --config <toml> [--seed <n>]
+  repro collect --domain <traffic|warehouse> [--steps <n>] [--seed <n>]
+  repro bench-throughput            # GS vs LS vs IALS steps/sec table
+  repro list                        # list figures and artifacts
+
+Flags default from the config file; configs/ has one per figure.
+Requires artifacts/ (run `make artifacts` once).";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&v(&["figure", "--name", "fig3", "--seed", "2"])).unwrap();
+        assert_eq!(a.subcommand, "figure");
+        assert_eq!(a.get("name"), Some("fig3"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 2);
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(&v(&[])).is_err());
+        assert!(Args::parse(&v(&["x", "notflag"])).is_err());
+        assert!(Args::parse(&v(&["x", "--k"])).is_err());
+        assert!(Args::parse(&v(&["x", "--k", "1", "--k", "2"])).is_err());
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = Args::parse(&v(&["train"])).unwrap();
+        assert!(a.require("config").is_err());
+    }
+}

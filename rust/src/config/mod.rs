@@ -1,0 +1,16 @@
+//! Configuration system: a hand-rolled TOML-subset parser ([`toml`]) plus
+//! the typed experiment schema ([`schema`]).
+//!
+//! The offline crate set has neither `serde` nor `toml` (DESIGN.md §6), so
+//! the parser is built here. The supported subset covers everything the
+//! experiment configs need: `[tables]`, dotted keys are *not* needed,
+//! strings, integers, floats, booleans, arrays of scalars and `#` comments.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{
+    AipKind, DomainKind, ExperimentConfig, PpoConfig, SimulatorKind, TrafficConfig,
+    WarehouseConfig,
+};
+pub use toml::{parse as parse_toml, Document, Value};

@@ -1,0 +1,521 @@
+//! Typed experiment configuration: defaults, parsing from the TOML-subset
+//! [`super::toml::Document`], and validation.
+//!
+//! A config fully determines an experiment run: the domain (traffic /
+//! warehouse), which simulator trains the agent (GS / IALS / untrained-IALS
+//! / F-IALS — the paper's four conditions), PPO hyperparameters, AIP
+//! dataset/training settings, and seeds.
+
+use super::toml::Document;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Which benchmark domain (paper §5.2 / §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DomainKind {
+    Traffic,
+    Warehouse,
+}
+
+impl DomainKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "traffic" => Ok(DomainKind::Traffic),
+            "warehouse" => Ok(DomainKind::Warehouse),
+            other => bail!("unknown domain '{other}' (want traffic|warehouse)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DomainKind::Traffic => "traffic",
+            DomainKind::Warehouse => "warehouse",
+        }
+    }
+}
+
+/// Which simulator the agent trains on (paper §5.1 conditions + Appendix E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimulatorKind {
+    /// Global simulator — the slow, exact baseline.
+    Gs,
+    /// Influence-augmented local simulator with a trained neural AIP.
+    Ials,
+    /// IALS whose AIP keeps its random initialization (untrained-IALS).
+    UntrainedIals,
+    /// IALS with a fixed marginal P(u) (F-IALS, Appendix E).
+    FixedIals,
+}
+
+impl SimulatorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gs" => Ok(SimulatorKind::Gs),
+            "ials" => Ok(SimulatorKind::Ials),
+            "untrained-ials" => Ok(SimulatorKind::UntrainedIals),
+            "f-ials" => Ok(SimulatorKind::FixedIals),
+            other => bail!("unknown simulator '{other}' (want gs|ials|untrained-ials|f-ials)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimulatorKind::Gs => "gs",
+            SimulatorKind::Ials => "ials",
+            SimulatorKind::UntrainedIals => "untrained-ials",
+            SimulatorKind::FixedIals => "f-ials",
+        }
+    }
+}
+
+/// AIP flavor (influence predictor implementations in `influence/`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AipKind {
+    Neural,
+    Untrained,
+    Fixed,
+}
+
+/// Traffic domain parameters (§5.2). The GS is a `grid x grid` network of
+/// signalized intersections; the LS is the single agent intersection.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Grid side (paper: 5 → 25 intersections).
+    pub grid: usize,
+    /// Cells per lane segment between intersections.
+    pub lane_len: usize,
+    /// Probability a car enters each boundary lane per step (paper App E: 0.1).
+    pub inflow_prob: f32,
+    /// Which intersection the agent controls: 1 (center) or 2 (off-center),
+    /// matching the two highlighted intersections of Fig 2.
+    pub agent_intersection: usize,
+    /// Minimum green phase duration (steps) before a switch is allowed.
+    pub min_green: usize,
+    /// Gap-out horizon for the actuated baseline controller.
+    pub actuated_max_green: usize,
+    /// Episode length in steps.
+    pub episode_len: usize,
+    /// Probability a car goes straight at an intersection (rest split
+    /// equally between left/right turns).
+    pub p_straight: f32,
+    /// Simulator ticks per control decision (SUMO-style: the microscopic
+    /// simulation runs several 1-second ticks between traffic-light
+    /// decisions). Both GS and LS use the same value.
+    pub substeps: usize,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            grid: 5,
+            lane_len: 10,
+            inflow_prob: 0.1,
+            agent_intersection: 1,
+            min_green: 3,
+            actuated_max_green: 20,
+            episode_len: 200,
+            p_straight: 0.7,
+            substeps: 3,
+        }
+    }
+}
+
+/// Warehouse domain parameters (§5.3).
+#[derive(Debug, Clone)]
+pub struct WarehouseConfig {
+    /// Robots per side (paper: 6 → 36 robots).
+    pub robots_per_side: usize,
+    /// Region side length (paper: 5).
+    pub region: usize,
+    /// Per-shelf-cell item spawn probability (paper: 0.02).
+    pub item_prob: f32,
+    /// Episode length in steps.
+    pub episode_len: usize,
+    /// §5.4 variant: items vanish after exactly this many steps (0 = off).
+    pub fixed_item_lifetime: usize,
+    /// Observation frame-stack for the memory agent (paper App F: 8).
+    pub frame_stack: usize,
+}
+
+impl Default for WarehouseConfig {
+    fn default() -> Self {
+        WarehouseConfig {
+            robots_per_side: 6,
+            region: 5,
+            item_prob: 0.02,
+            episode_len: 200,
+            fixed_item_lifetime: 0,
+            frame_stack: 1,
+        }
+    }
+}
+
+/// PPO hyperparameters (Schulman et al. 2017). Batch geometry must match
+/// the AOT-compiled artifacts (validated against the manifest at load).
+#[derive(Debug, Clone)]
+pub struct PpoConfig {
+    pub num_envs: usize,
+    pub rollout_len: usize,
+    pub epochs: usize,
+    pub minibatch: usize,
+    pub gamma: f32,
+    pub lam: f32,
+    pub clip: f32,
+    pub lr: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    pub max_grad_norm: f32,
+    /// Total environment steps of training.
+    pub total_steps: usize,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig {
+            num_envs: 16,
+            rollout_len: 128,
+            epochs: 4,
+            minibatch: 256,
+            gamma: 0.99,
+            lam: 0.95,
+            clip: 0.2,
+            lr: 3e-4,
+            vf_coef: 0.5,
+            ent_coef: 0.01,
+            max_grad_norm: 0.5,
+            total_steps: 40_000,
+        }
+    }
+}
+
+/// AIP dataset + offline-training settings (paper §4, Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct AipConfig {
+    pub kind: AipKind,
+    /// Number of (d-set, u) samples collected from the GS.
+    pub dataset_size: usize,
+    /// Offline training epochs over the dataset.
+    pub train_epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    /// Sequence length for BPTT (GRU AIPs). Theorem 1: should be >= the
+    /// agent's memory (frame_stack).
+    pub seq_len: usize,
+    /// F-IALS: fixed marginal probability; if < 0, estimate the marginal
+    /// from the dataset (warehouse variant of Appendix E).
+    pub fixed_p: f32,
+    /// Feed the full ALSH features (confounders included) instead of the
+    /// d-set — the Appendix B ablation.
+    pub use_full_alsh: bool,
+}
+
+impl Default for AipConfig {
+    fn default() -> Self {
+        AipConfig {
+            kind: AipKind::Neural,
+            dataset_size: 50_000,
+            train_epochs: 4,
+            batch: 256,
+            lr: 1e-3,
+            seq_len: 8,
+            fixed_p: 0.1,
+            use_full_alsh: false,
+        }
+    }
+}
+
+/// Top-level experiment config.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub domain: DomainKind,
+    pub simulator: SimulatorKind,
+    /// Seeds to run (results are averaged; paper uses 5).
+    pub seeds: Vec<u64>,
+    /// Evaluate on the GS every this many training steps (paper §5.1:
+    /// training interleaved with periodic GS evaluations).
+    pub eval_every: usize,
+    pub eval_episodes: usize,
+    pub results_dir: String,
+    pub artifacts_dir: String,
+    pub traffic: TrafficConfig,
+    pub warehouse: WarehouseConfig,
+    pub ppo: PpoConfig,
+    pub aip: AipConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            domain: DomainKind::Traffic,
+            simulator: SimulatorKind::Ials,
+            seeds: vec![1],
+            eval_every: 4096,
+            eval_episodes: 4,
+            results_dir: "results".into(),
+            artifacts_dir: "artifacts".into(),
+            traffic: TrafficConfig::default(),
+            warehouse: WarehouseConfig::default(),
+            ppo: PpoConfig::default(),
+            aip: AipConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text; unknown keys are rejected to catch typos.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let doc = super::toml::parse(text)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_doc(doc: &Document) -> Result<ExperimentConfig> {
+        check_known_keys(doc)?;
+        let mut cfg = ExperimentConfig::default();
+
+        cfg.name = doc.str_or("experiment", "name", &cfg.name)?;
+        cfg.domain = DomainKind::parse(&doc.str_or("experiment", "domain", "traffic")?)?;
+        cfg.simulator = SimulatorKind::parse(&doc.str_or("experiment", "simulator", "ials")?)?;
+        if let Some(v) = doc.get("experiment", "seeds") {
+            cfg.seeds = v
+                .as_array()?
+                .iter()
+                .map(|x| Ok(x.as_int()? as u64))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        cfg.eval_every = doc.int_or("experiment", "eval_every", cfg.eval_every as i64)? as usize;
+        cfg.eval_episodes =
+            doc.int_or("experiment", "eval_episodes", cfg.eval_episodes as i64)? as usize;
+        cfg.results_dir = doc.str_or("experiment", "results_dir", &cfg.results_dir)?;
+        cfg.artifacts_dir = doc.str_or("experiment", "artifacts_dir", &cfg.artifacts_dir)?;
+
+        let t = &mut cfg.traffic;
+        t.grid = doc.int_or("traffic", "grid", t.grid as i64)? as usize;
+        t.lane_len = doc.int_or("traffic", "lane_len", t.lane_len as i64)? as usize;
+        t.inflow_prob = doc.float_or("traffic", "inflow_prob", t.inflow_prob as f64)? as f32;
+        t.agent_intersection =
+            doc.int_or("traffic", "agent_intersection", t.agent_intersection as i64)? as usize;
+        t.min_green = doc.int_or("traffic", "min_green", t.min_green as i64)? as usize;
+        t.actuated_max_green =
+            doc.int_or("traffic", "actuated_max_green", t.actuated_max_green as i64)? as usize;
+        t.episode_len = doc.int_or("traffic", "episode_len", t.episode_len as i64)? as usize;
+        t.p_straight = doc.float_or("traffic", "p_straight", t.p_straight as f64)? as f32;
+        t.substeps = doc.int_or("traffic", "substeps", t.substeps as i64)? as usize;
+
+        let w = &mut cfg.warehouse;
+        w.robots_per_side =
+            doc.int_or("warehouse", "robots_per_side", w.robots_per_side as i64)? as usize;
+        w.region = doc.int_or("warehouse", "region", w.region as i64)? as usize;
+        w.item_prob = doc.float_or("warehouse", "item_prob", w.item_prob as f64)? as f32;
+        w.episode_len = doc.int_or("warehouse", "episode_len", w.episode_len as i64)? as usize;
+        w.fixed_item_lifetime =
+            doc.int_or("warehouse", "fixed_item_lifetime", w.fixed_item_lifetime as i64)? as usize;
+        w.frame_stack = doc.int_or("warehouse", "frame_stack", w.frame_stack as i64)? as usize;
+
+        let p = &mut cfg.ppo;
+        p.num_envs = doc.int_or("ppo", "num_envs", p.num_envs as i64)? as usize;
+        p.rollout_len = doc.int_or("ppo", "rollout_len", p.rollout_len as i64)? as usize;
+        p.epochs = doc.int_or("ppo", "epochs", p.epochs as i64)? as usize;
+        p.minibatch = doc.int_or("ppo", "minibatch", p.minibatch as i64)? as usize;
+        p.gamma = doc.float_or("ppo", "gamma", p.gamma as f64)? as f32;
+        p.lam = doc.float_or("ppo", "lam", p.lam as f64)? as f32;
+        p.clip = doc.float_or("ppo", "clip", p.clip as f64)? as f32;
+        p.lr = doc.float_or("ppo", "lr", p.lr as f64)? as f32;
+        p.vf_coef = doc.float_or("ppo", "vf_coef", p.vf_coef as f64)? as f32;
+        p.ent_coef = doc.float_or("ppo", "ent_coef", p.ent_coef as f64)? as f32;
+        p.max_grad_norm = doc.float_or("ppo", "max_grad_norm", p.max_grad_norm as f64)? as f32;
+        p.total_steps = doc.int_or("ppo", "total_steps", p.total_steps as i64)? as usize;
+
+        let a = &mut cfg.aip;
+        a.kind = match doc.str_or("aip", "kind", "neural")?.as_str() {
+            "neural" => AipKind::Neural,
+            "untrained" => AipKind::Untrained,
+            "fixed" => AipKind::Fixed,
+            other => bail!("unknown aip kind '{other}'"),
+        };
+        a.dataset_size = doc.int_or("aip", "dataset_size", a.dataset_size as i64)? as usize;
+        a.train_epochs = doc.int_or("aip", "train_epochs", a.train_epochs as i64)? as usize;
+        a.batch = doc.int_or("aip", "batch", a.batch as i64)? as usize;
+        a.lr = doc.float_or("aip", "lr", a.lr as f64)? as f32;
+        a.seq_len = doc.int_or("aip", "seq_len", a.seq_len as i64)? as usize;
+        a.fixed_p = doc.float_or("aip", "fixed_p", a.fixed_p as f64)? as f32;
+        a.use_full_alsh = doc.bool_or("aip", "use_full_alsh", a.use_full_alsh)?;
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks that fail fast rather than mid-run.
+    pub fn validate(&self) -> Result<()> {
+        let p = &self.ppo;
+        anyhow::ensure!(p.num_envs > 0, "num_envs must be positive");
+        anyhow::ensure!(p.rollout_len > 0, "rollout_len must be positive");
+        let batch = p.num_envs * p.rollout_len;
+        anyhow::ensure!(
+            batch % p.minibatch == 0,
+            "rollout batch {} not divisible by minibatch {}",
+            batch,
+            p.minibatch
+        );
+        anyhow::ensure!((0.0..=1.0).contains(&p.gamma), "gamma out of range");
+        anyhow::ensure!((0.0..=1.0).contains(&p.lam), "lambda out of range");
+        let t = &self.traffic;
+        anyhow::ensure!(t.grid >= 3, "traffic grid must be >= 3 (needs interior)");
+        anyhow::ensure!(t.lane_len >= 4, "lane_len must be >= 4");
+        anyhow::ensure!((0.0..=1.0).contains(&t.inflow_prob), "inflow_prob out of range");
+        anyhow::ensure!(
+            t.agent_intersection == 1 || t.agent_intersection == 2,
+            "agent_intersection must be 1 or 2"
+        );
+        anyhow::ensure!(t.substeps >= 1, "substeps must be >= 1");
+        let w = &self.warehouse;
+        anyhow::ensure!(w.region == 5, "warehouse region must be 5 (paper layout)");
+        anyhow::ensure!(w.robots_per_side >= 2, "need at least 2x2 robots");
+        anyhow::ensure!((0.0..=1.0).contains(&w.item_prob), "item_prob out of range");
+        anyhow::ensure!(w.frame_stack >= 1, "frame_stack must be >= 1");
+        anyhow::ensure!(self.aip.seq_len >= 1, "aip seq_len must be >= 1");
+        anyhow::ensure!(!self.seeds.is_empty(), "need at least one seed");
+        Ok(())
+    }
+}
+
+const KNOWN_TABLES: &[&str] = &["", "experiment", "traffic", "warehouse", "ppo", "aip"];
+
+const KNOWN_KEYS: &[(&str, &str)] = &[
+    ("experiment", "name"),
+    ("experiment", "domain"),
+    ("experiment", "simulator"),
+    ("experiment", "seeds"),
+    ("experiment", "eval_every"),
+    ("experiment", "eval_episodes"),
+    ("experiment", "results_dir"),
+    ("experiment", "artifacts_dir"),
+    ("traffic", "grid"),
+    ("traffic", "lane_len"),
+    ("traffic", "inflow_prob"),
+    ("traffic", "agent_intersection"),
+    ("traffic", "min_green"),
+    ("traffic", "actuated_max_green"),
+    ("traffic", "episode_len"),
+    ("traffic", "p_straight"),
+    ("traffic", "substeps"),
+    ("warehouse", "robots_per_side"),
+    ("warehouse", "region"),
+    ("warehouse", "item_prob"),
+    ("warehouse", "episode_len"),
+    ("warehouse", "fixed_item_lifetime"),
+    ("warehouse", "frame_stack"),
+    ("ppo", "num_envs"),
+    ("ppo", "rollout_len"),
+    ("ppo", "epochs"),
+    ("ppo", "minibatch"),
+    ("ppo", "gamma"),
+    ("ppo", "lam"),
+    ("ppo", "clip"),
+    ("ppo", "lr"),
+    ("ppo", "vf_coef"),
+    ("ppo", "ent_coef"),
+    ("ppo", "max_grad_norm"),
+    ("ppo", "total_steps"),
+    ("aip", "kind"),
+    ("aip", "dataset_size"),
+    ("aip", "train_epochs"),
+    ("aip", "batch"),
+    ("aip", "lr"),
+    ("aip", "seq_len"),
+    ("aip", "fixed_p"),
+    ("aip", "use_full_alsh"),
+];
+
+fn check_known_keys(doc: &Document) -> Result<()> {
+    for (table, keys) in &doc.tables {
+        if !KNOWN_TABLES.contains(&table.as_str()) {
+            bail!("unknown config table [{table}]");
+        }
+        for key in keys.keys() {
+            if table.is_empty() {
+                bail!("top-level key '{key}' not allowed; use a [table]");
+            }
+            if !KNOWN_KEYS.contains(&(table.as_str(), key.as_str())) {
+                bail!("unknown config key [{table}].{key}");
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [experiment]
+            name = "fig5"
+            domain = "warehouse"
+            simulator = "gs"
+            seeds = [1, 2, 3, 4, 5]
+            eval_every = 2048
+
+            [warehouse]
+            item_prob = 0.02
+            frame_stack = 8
+
+            [ppo]
+            total_steps = 100000
+            lr = 2.5e-4
+
+            [aip]
+            kind = "fixed"
+            fixed_p = -1.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig5");
+        assert_eq!(cfg.domain, DomainKind::Warehouse);
+        assert_eq!(cfg.simulator, SimulatorKind::Gs);
+        assert_eq!(cfg.seeds.len(), 5);
+        assert_eq!(cfg.warehouse.frame_stack, 8);
+        assert_eq!(cfg.ppo.total_steps, 100_000);
+        assert_eq!(cfg.aip.kind, AipKind::Fixed);
+        assert!(cfg.aip.fixed_p < 0.0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = ExperimentConfig::from_toml("[ppo]\nlearning_rate = 0.1").unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn unknown_table_rejected() {
+        assert!(ExperimentConfig::from_toml("[nope]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn bad_minibatch_rejected() {
+        let err = ExperimentConfig::from_toml("[ppo]\nminibatch = 1000").unwrap_err();
+        assert!(err.to_string().contains("not divisible"));
+    }
+
+    #[test]
+    fn bad_enum_rejected() {
+        assert!(ExperimentConfig::from_toml("[experiment]\ndomain = \"atari\"").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nsimulator = \"magic\"").is_err());
+        assert!(ExperimentConfig::from_toml("[aip]\nkind = \"oracle\"").is_err());
+    }
+}

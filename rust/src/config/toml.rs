@@ -1,0 +1,334 @@
+//! TOML-subset parser.
+//!
+//! Grammar supported (sufficient for the experiment configs under
+//! `configs/`):
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! n = 42
+//! x = 3.14
+//! flag = true
+//! xs = [1, 2, 3]
+//! names = ["a", "b"]
+//! ```
+//!
+//! Keys before the first `[section]` live in the implicit root table `""`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// Parsed document: section name → key → value.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn table(&self, name: &str) -> Option<&BTreeMap<String, Value>> {
+        self.tables.get(name)
+    }
+
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    // --- typed getters with defaults, used by the schema layer ---
+
+    pub fn str_or(&self, table: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(table, key) {
+            Some(v) => Ok(v.as_str().with_context(|| format!("[{table}].{key}"))?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn int_or(&self, table: &str, key: &str, default: i64) -> Result<i64> {
+        match self.get(table, key) {
+            Some(v) => v.as_int().with_context(|| format!("[{table}].{key}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn float_or(&self, table: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(table, key) {
+            Some(v) => v.as_float().with_context(|| format!("[{table}].{key}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, table: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(table, key) {
+            Some(v) => v.as_bool().with_context(|| format!("[{table}].{key}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn require(&self, table: &str, key: &str) -> Result<&Value> {
+        self.get(table, key)
+            .ok_or_else(|| anyhow!("missing required key [{table}].{key}"))
+    }
+}
+
+/// Parse a TOML-subset document from text.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed table header: {raw}", lineno + 1);
+            }
+            let name = line[1..line.len() - 1].trim();
+            if name.is_empty() || !name.chars().all(valid_key_char) {
+                bail!("line {}: invalid table name '{name}'", lineno + 1);
+            }
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected 'key = value': {raw}", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(valid_key_char) {
+            bail!("line {}: invalid key '{key}'", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: value for key '{key}'", lineno + 1))?;
+        let table = doc.tables.get_mut(&current).unwrap();
+        if table.insert(key.to_string(), value).is_some() {
+            bail!("line {}: duplicate key '{key}' in [{current}]", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+fn valid_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.'
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string: {s}");
+        }
+        let inner = &s[1..s.len() - 1];
+        if inner.contains('"') {
+            bail!("embedded quotes not supported: {s}");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s}");
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>> =
+            split_top_level(inner)?.iter().map(|p| parse_value(p)).collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Split an array body on commas (nested arrays are not supported — the
+/// configs never need them; strings may contain commas).
+fn split_top_level(s: &str) -> Result<Vec<String>> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or_else(|| anyhow!("unbalanced ]"))?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        bail!("unterminated string in array");
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = parse(
+            r#"
+            # experiment config
+            top = 1
+            [experiment]
+            name = "fig3"   # trailing comment
+            steps = 40000
+            lr = 3.0e-4
+            eval = true
+            seeds = [1, 2, 3]
+            tags = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("experiment", "name").unwrap().as_str().unwrap(), "fig3");
+        assert_eq!(doc.get("experiment", "steps").unwrap().as_int().unwrap(), 40000);
+        assert!((doc.get("experiment", "lr").unwrap().as_float().unwrap() - 3e-4).abs() < 1e-12);
+        assert!(doc.get("experiment", "eval").unwrap().as_bool().unwrap());
+        assert_eq!(
+            doc.get("experiment", "seeds").unwrap().as_array().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 2").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse(r#"x = "open"#).is_err());
+        assert!(parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn empty_array_ok() {
+        let doc = parse("xs = []").unwrap();
+        assert!(doc.get("", "xs").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn defaults_api() {
+        let doc = parse("[a]\nx = 5").unwrap();
+        assert_eq!(doc.int_or("a", "x", 0).unwrap(), 5);
+        assert_eq!(doc.int_or("a", "y", 7).unwrap(), 7);
+        assert_eq!(doc.str_or("b", "z", "d").unwrap(), "d");
+        assert!(doc.require("a", "missing").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let doc = parse("[a]\nx = 5").unwrap();
+        assert!(doc.get("a", "x").unwrap().as_str().is_err());
+        assert!(doc.get("a", "x").unwrap().as_bool().is_err());
+    }
+}

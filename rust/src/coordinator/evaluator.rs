@@ -1,0 +1,60 @@
+//! Policy evaluation on the global simulator (paper §5.1: "training is
+//! interleaved with periodic evaluations on the GS").
+
+use crate::core::VecEnv;
+use crate::rl::Policy;
+use crate::util::Pcg32;
+use crate::Result;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub mean: f64,
+    pub std: f64,
+    pub episodes: usize,
+}
+
+/// Run `episodes` full episodes on a batch-1 eval environment, sampling
+/// actions from the policy (the same stochastic policy PPO optimizes).
+/// Returns mean/std of *mean per-step episodic reward* (the paper's metric
+/// for traffic is mean speed; warehouse is items collected — both are
+/// reported per episode).
+pub fn evaluate(
+    env: &mut dyn VecEnv,
+    policy: &mut Policy,
+    episodes: usize,
+    seed: u64,
+) -> Result<EvalResult> {
+    assert_eq!(env.num_envs(), 1, "evaluation uses a batch-1 environment");
+    assert_eq!(env.obs_dim(), policy.obs_dim);
+    let mut rng = Pcg32::new(seed, 999);
+    env.reset_all(seed);
+    let mut obs = vec![0.0f32; env.obs_dim()];
+    let mut rewards = [0.0f32; 1];
+    let mut dones = [false; 1];
+    let mut episode_returns = Vec::with_capacity(episodes);
+    let mut acc = 0.0f64;
+    let mut steps = 0usize;
+    while episode_returns.len() < episodes {
+        env.observe_all(&mut obs);
+        let (logits, _v) = policy.forward1(&obs)?;
+        let action = rng.categorical_from_logits(&logits);
+        env.step_all(&[action], &mut rewards, &mut dones);
+        acc += rewards[0] as f64;
+        steps += 1;
+        if dones[0] {
+            episode_returns.push(acc / steps.max(1) as f64);
+            acc = 0.0;
+            steps = 0;
+        }
+    }
+    let n = episode_returns.len() as f64;
+    let mean = episode_returns.iter().sum::<f64>() / n;
+    let var = episode_returns.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / n;
+    Ok(EvalResult { mean, std: var.sqrt(), episodes })
+}
+
+#[cfg(test)]
+mod tests {
+    // evaluate() is exercised end-to-end in rust/tests/integration_training.rs
+    // (it needs compiled artifacts).
+}

@@ -1,0 +1,559 @@
+//! Per-figure experiment harnesses: everything needed to regenerate each
+//! table/figure of the paper's evaluation (DESIGN.md §3 index).
+//!
+//! `run_condition` trains one (domain, simulator, seed) cell; `run_figure`
+//! fans out over the paper's conditions, writes learning-curve CSVs and a
+//! summary into `results/<figure>/`, and prints the figure's rows.
+
+use crate::bench_harness::Table;
+use crate::collect::{collect_dataset, collect_dataset_with_policy, FeatureKind};
+use crate::config::{DomainKind, ExperimentConfig, SimulatorKind};
+use crate::core::{Environment, FrameStackVec, GsVecEnv, VecEnv};
+use crate::ials::IalsVecEnv;
+use crate::influence::{
+    evaluate_ce, train_fnn, train_gru, FixedMarginalAip, InfluenceDataset, InfluencePredictor,
+    NeuralAip,
+};
+use crate::log_info;
+use crate::metrics::{write_curve, ConditionResult, SummaryWriter};
+use crate::rl::Policy;
+use crate::runtime::Runtime;
+use crate::sim::traffic::{TrafficGlobalEnv, TrafficLocalEnv};
+use crate::sim::warehouse::{WarehouseGlobalEnv, WarehouseLocalEnv};
+use crate::util::Pcg32;
+use crate::Result;
+use std::path::Path;
+use std::rc::Rc;
+
+pub const FIGURES: &[&str] =
+    &["fig3", "fig5", "fig6", "fig8", "fig10", "fig11", "fig12"];
+
+/// Policy model name for a config (must exist in the manifest).
+pub fn policy_model_name(cfg: &ExperimentConfig) -> &'static str {
+    match cfg.domain {
+        DomainKind::Traffic => "policy_traffic",
+        DomainKind::Warehouse => {
+            if cfg.warehouse.frame_stack > 1 {
+                "policy_warehouse"
+            } else {
+                "policy_warehouse_nm"
+            }
+        }
+    }
+}
+
+/// AIP model name + whether it is recurrent + which features it consumes.
+pub fn aip_model_name(cfg: &ExperimentConfig) -> (&'static str, bool, FeatureKind) {
+    match cfg.domain {
+        DomainKind::Traffic => {
+            if cfg.aip.use_full_alsh {
+                ("aip_traffic_full", false, FeatureKind::Alsh)
+            } else {
+                ("aip_traffic", false, FeatureKind::Dset)
+            }
+        }
+        DomainKind::Warehouse => {
+            // aip.seq_len selects the paper's M (GRU) vs NM (FNN) predictor.
+            if cfg.aip.seq_len > 1 {
+                ("aip_warehouse", true, FeatureKind::Dset)
+            } else {
+                ("aip_warehouse_nm", false, FeatureKind::Dset)
+            }
+        }
+    }
+}
+
+/// Outcome of the AIP preparation stage.
+pub struct Prep {
+    pub predictor: Option<Box<dyn InfluencePredictor>>,
+    /// Dataset collection + offline training seconds (counted on the
+    /// training clock, per the paper's protocol).
+    pub prep_secs: f64,
+    /// Held-out cross-entropy (NaN when not applicable).
+    pub aip_ce: f64,
+}
+
+/// Build (and train, for the IALS condition) the influence predictor
+/// demanded by `cfg.simulator`, timing the parts the paper counts.
+pub fn prepare_predictor(
+    rt: &Rc<Runtime>,
+    cfg: &ExperimentConfig,
+    seed: u64,
+    batch: usize,
+) -> Result<Prep> {
+    if cfg.simulator == SimulatorKind::Gs {
+        return Ok(Prep { predictor: None, prep_secs: 0.0, aip_ce: f64::NAN });
+    }
+    let (model, is_gru, feature) = aip_model_name(cfg);
+
+    // Held-out evaluation data (never timed — it's for reporting only).
+    let eval_data = collect_from_gs(cfg, 4000, seed ^ 0xE7A1, feature);
+
+    let (mut predictor, prep_secs): (Box<dyn InfluencePredictor>, f64) = match cfg.simulator {
+        SimulatorKind::Gs => unreachable!(),
+        SimulatorKind::UntrainedIals => {
+            // Random-initialized network; no data, no training time.
+            let aip = NeuralAip::untrained(rt.clone(), model, batch, seed)?;
+            (Box::new(aip), 0.0)
+        }
+        SimulatorKind::Ials => {
+            let t0 = std::time::Instant::now();
+            let data = collect_from_gs(cfg, cfg.aip.dataset_size, seed, feature);
+            let mut aip = NeuralAip::new(rt.clone(), model, batch)?;
+            // Fresh per-seed init so seeds are independent repetitions.
+            let spec = rt.manifest.model(model)?.clone();
+            aip.store.reinit(&spec, seed ^ 0xA1B2);
+            let update = format!("{model}_update");
+            let losses = if is_gru {
+                let b = rt.geom("gru_seq_b")?;
+                let t = rt.geom("gru_seq_t")?;
+                train_gru(
+                    rt, &mut aip.store, &update, &data, cfg.aip.train_epochs, b, t,
+                    cfg.aip.lr, seed,
+                )?
+            } else {
+                train_fnn(
+                    rt, &mut aip.store, &update, &data, cfg.aip.train_epochs,
+                    rt.geom("aip_batch")?, cfg.aip.lr, seed,
+                )?
+            };
+            log_info!(
+                "[{}] AIP {model} trained: loss {:.4} -> {:.4}",
+                cfg.name,
+                losses.first().copied().unwrap_or(f32::NAN),
+                losses.last().copied().unwrap_or(f32::NAN)
+            );
+            (Box::new(aip), t0.elapsed().as_secs_f64())
+        }
+        SimulatorKind::FixedIals => {
+            if cfg.aip.fixed_p >= 0.0 {
+                let u = eval_data.u_dim;
+                let d = eval_data.dset_dim;
+                let aip = FixedMarginalAip::constant(batch, d, u, cfg.aip.fixed_p);
+                (Box::new(aip), 0.0)
+            } else {
+                // Estimate the marginal from 10K GS samples (App E).
+                let t0 = std::time::Instant::now();
+                let data = collect_from_gs(cfg, 10_000, seed, feature);
+                let aip = FixedMarginalAip::from_data(batch, &data);
+                (Box::new(aip), t0.elapsed().as_secs_f64())
+            }
+        }
+    };
+
+    let aip_ce = evaluate_ce(predictor.as_mut(), &eval_data)? as f64;
+    Ok(Prep { predictor: Some(predictor), prep_secs, aip_ce })
+}
+
+fn collect_from_gs(
+    cfg: &ExperimentConfig,
+    steps: usize,
+    seed: u64,
+    feature: FeatureKind,
+) -> InfluenceDataset {
+    match cfg.domain {
+        DomainKind::Traffic => {
+            let mut env = TrafficGlobalEnv::new(&cfg.traffic);
+            collect_dataset(&mut env, steps, seed, feature)
+        }
+        DomainKind::Warehouse => {
+            let mut env = WarehouseGlobalEnv::new(&cfg.warehouse);
+            collect_dataset(&mut env, steps, seed, feature)
+        }
+    }
+}
+
+/// Build the training simulator (the paper's GS vs IALS conditions).
+pub fn make_train_env(
+    cfg: &ExperimentConfig,
+    predictor: Option<Box<dyn InfluencePredictor>>,
+) -> Box<dyn VecEnv> {
+    let b = cfg.ppo.num_envs;
+    let stack = match cfg.domain {
+        DomainKind::Traffic => 1,
+        DomainKind::Warehouse => cfg.warehouse.frame_stack,
+    };
+    let base: Box<dyn VecEnv> = match (cfg.domain, predictor) {
+        (DomainKind::Traffic, None) => Box::new(GsVecEnv::new(
+            (0..b).map(|_| TrafficGlobalEnv::new(&cfg.traffic)).collect(),
+        )),
+        (DomainKind::Traffic, Some(p)) => Box::new(IalsVecEnv::new(
+            (0..b).map(|_| TrafficLocalEnv::new(&cfg.traffic)).collect(),
+            p,
+        )),
+        (DomainKind::Warehouse, None) => Box::new(GsVecEnv::new(
+            (0..b).map(|_| WarehouseGlobalEnv::new(&cfg.warehouse)).collect(),
+        )),
+        (DomainKind::Warehouse, Some(p)) => Box::new(IalsVecEnv::new(
+            (0..b).map(|_| WarehouseLocalEnv::new(&cfg.warehouse)).collect(),
+            p,
+        )),
+    };
+    if stack > 1 {
+        Box::new(FrameStackVec::new(base, stack))
+    } else {
+        base
+    }
+}
+
+/// Build the batch-1 GS evaluation environment (frame-stacked to match the
+/// policy input).
+pub fn make_eval_env(cfg: &ExperimentConfig) -> Box<dyn VecEnv> {
+    let base: Box<dyn VecEnv> = match cfg.domain {
+        DomainKind::Traffic => {
+            Box::new(GsVecEnv::new(vec![TrafficGlobalEnv::new(&cfg.traffic)]))
+        }
+        DomainKind::Warehouse => {
+            Box::new(GsVecEnv::new(vec![WarehouseGlobalEnv::new(&cfg.warehouse)]))
+        }
+    };
+    let stack = match cfg.domain {
+        DomainKind::Traffic => 1,
+        DomainKind::Warehouse => cfg.warehouse.frame_stack,
+    };
+    if stack > 1 {
+        Box::new(FrameStackVec::new(base, stack))
+    } else {
+        base
+    }
+}
+
+/// Train one condition with one seed; returns the curve + summary numbers.
+pub fn run_condition(
+    rt: &Rc<Runtime>,
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> Result<ConditionResult> {
+    log_info!(
+        "=== condition {} / {} / seed {seed} ===",
+        cfg.name,
+        cfg.simulator.name()
+    );
+    let prep = prepare_predictor(rt, cfg, seed, cfg.ppo.num_envs)?;
+    let prep_secs = prep.prep_secs;
+    let aip_ce = prep.aip_ce;
+    let mut train_env = make_train_env(cfg, prep.predictor);
+    let mut eval_env = make_eval_env(cfg);
+    let mut policy = Policy::new(rt.clone(), policy_model_name(cfg), cfg.ppo.num_envs)?;
+    policy.reinit(seed)?;
+    let out = super::trainer::train_with_eval(
+        cfg,
+        train_env.as_mut(),
+        eval_env.as_mut(),
+        &mut policy,
+        seed,
+        prep_secs,
+    )?;
+    let final_eval = out.curve.last().map(|p| p.eval_mean).unwrap_or(f64::NAN);
+    Ok(ConditionResult {
+        condition: format!("{}-{}", cfg.simulator.name(), cfg.name),
+        seed,
+        curve: out.curve,
+        prep_secs,
+        train_secs: out.train_secs,
+        aip_ce,
+        final_eval,
+    })
+}
+
+/// Mean per-step reward of the actuated baseline controller on the traffic
+/// GS (the black horizontal line of Figs 3/10).
+pub fn evaluate_actuated(cfg: &ExperimentConfig, episodes: usize, seed: u64) -> f64 {
+    let mut env = TrafficGlobalEnv::new(&cfg.traffic);
+    let mut returns = Vec::new();
+    for ep in 0..episodes {
+        env.reset(seed + ep as u64);
+        let mut acc = 0.0f64;
+        let mut steps = 0usize;
+        loop {
+            let a = env.actuated_action();
+            let s = env.step(a);
+            acc += s.reward as f64;
+            steps += 1;
+            if s.done {
+                break;
+            }
+        }
+        returns.push(acc / steps as f64);
+    }
+    returns.iter().sum::<f64>() / returns.len() as f64
+}
+
+/// Item-lifetime histogram under an IALS (Fig 6 bottom): run the IALS with
+/// a random policy and log the age at which items disappear externally.
+pub fn item_lifetime_histogram(
+    rt: &Rc<Runtime>,
+    cfg: &ExperimentConfig,
+    seed: u64,
+    steps: usize,
+) -> Result<Vec<u32>> {
+    let prep = prepare_predictor(rt, cfg, seed, cfg.ppo.num_envs)?;
+    let predictor = prep.predictor.expect("histogram needs an IALS condition");
+    let b = cfg.ppo.num_envs;
+    let mut env = IalsVecEnv::new(
+        (0..b).map(|_| WarehouseLocalEnv::new(&cfg.warehouse)).collect(),
+        predictor,
+    );
+    env.reset_all(seed);
+    let mut rng = Pcg32::new(seed, 31337);
+    let mut rewards = vec![0.0f32; b];
+    let mut dones = vec![false; b];
+    let mut actions = vec![0usize; b];
+    for _ in 0..steps {
+        for a in actions.iter_mut() {
+            *a = rng.below(5);
+        }
+        env.step_all(&actions, &mut rewards, &mut dones);
+    }
+    let mut ages = Vec::new();
+    for e in env.envs_mut() {
+        ages.append(&mut e.removed_ages);
+    }
+    Ok(ages)
+}
+
+// ---------------------------------------------------------------------------
+// Figure harnesses
+// ---------------------------------------------------------------------------
+
+fn cond(base: &ExperimentConfig, f: impl FnOnce(&mut ExperimentConfig)) -> ExperimentConfig {
+    let mut c = base.clone();
+    f(&mut c);
+    c.validate().expect("derived condition config invalid");
+    c
+}
+
+/// Run one of the paper's figures end to end. `base` carries the scale
+/// knobs (steps, seeds); each figure derives its conditions from it.
+pub fn run_figure(rt: &Rc<Runtime>, name: &str, base: &ExperimentConfig) -> Result<()> {
+    let dir = Path::new(&base.results_dir).join(name);
+    std::fs::create_dir_all(&dir)?;
+    let mut summary = SummaryWriter::create(dir.join("summary.csv"))?;
+    let mut table = Table::new(
+        &format!("{name}: paper-figure reproduction"),
+        &["condition", "seed", "prep_s", "train_s", "total_s", "aip_ce", "final_eval"],
+    );
+
+    let mut base = base.clone();
+    base.name = name.to_string();
+    let conditions: Vec<ExperimentConfig> = match name {
+        "fig3" | "fig10" => {
+            let int = if name == "fig3" { 1 } else { 2 };
+            let d = cond(&base, |c| {
+                c.domain = DomainKind::Traffic;
+                c.traffic.agent_intersection = int;
+            });
+            vec![
+                cond(&d, |c| c.simulator = SimulatorKind::Gs),
+                cond(&d, |c| c.simulator = SimulatorKind::Ials),
+                cond(&d, |c| c.simulator = SimulatorKind::UntrainedIals),
+            ]
+        }
+        "fig11" => {
+            let d = cond(&base, |c| c.domain = DomainKind::Traffic);
+            vec![
+                cond(&d, |c| c.simulator = SimulatorKind::Gs),
+                cond(&d, |c| c.simulator = SimulatorKind::Ials),
+                cond(&d, |c| {
+                    c.simulator = SimulatorKind::FixedIals;
+                    c.aip.fixed_p = 0.1;
+                    c.name = format!("{name}-p0.1");
+                }),
+                cond(&d, |c| {
+                    c.simulator = SimulatorKind::FixedIals;
+                    c.aip.fixed_p = 0.5;
+                    c.name = format!("{name}-p0.5");
+                }),
+            ]
+        }
+        "fig5" => {
+            let d = cond(&base, |c| {
+                c.domain = DomainKind::Warehouse;
+                c.warehouse.frame_stack = 8;
+            });
+            vec![
+                cond(&d, |c| c.simulator = SimulatorKind::Gs),
+                cond(&d, |c| c.simulator = SimulatorKind::Ials),
+                cond(&d, |c| c.simulator = SimulatorKind::UntrainedIals),
+            ]
+        }
+        "fig12" => {
+            let d = cond(&base, |c| {
+                c.domain = DomainKind::Warehouse;
+                c.warehouse.frame_stack = 8;
+            });
+            vec![
+                cond(&d, |c| c.simulator = SimulatorKind::Gs),
+                cond(&d, |c| c.simulator = SimulatorKind::Ials),
+                cond(&d, |c| {
+                    c.simulator = SimulatorKind::FixedIals;
+                    c.aip.fixed_p = -1.0; // estimate marginal from GS data
+                }),
+            ]
+        }
+        "fig6" => {
+            let d = cond(&base, |c| {
+                c.domain = DomainKind::Warehouse;
+                c.warehouse.fixed_item_lifetime = 8;
+                c.simulator = SimulatorKind::Ials;
+            });
+            let named = |c: &mut ExperimentConfig, n: &str| c.name = format!("{name}-{n}");
+            let out = vec![
+                cond(&d, |c| {
+                    c.warehouse.frame_stack = 8;
+                    c.aip.seq_len = 8;
+                    named(c, "Magent-Maip");
+                }),
+                cond(&d, |c| {
+                    c.warehouse.frame_stack = 8;
+                    c.aip.seq_len = 1;
+                    named(c, "Magent-NMaip");
+                }),
+                cond(&d, |c| {
+                    c.warehouse.frame_stack = 1;
+                    c.aip.seq_len = 8;
+                    named(c, "NMagent-Maip");
+                }),
+                cond(&d, |c| {
+                    c.warehouse.frame_stack = 1;
+                    c.aip.seq_len = 1;
+                    named(c, "NMagent-NMaip");
+                }),
+            ];
+            // Fig 6 bottom: lifetime histograms under M-IALS and NM-IALS.
+            for (label, seq) in [("m", 8usize), ("nm", 1usize)] {
+                let hc = cond(&d, |c| {
+                    c.aip.seq_len = seq;
+                    c.name = format!("{name}-hist-{label}");
+                });
+                let ages = item_lifetime_histogram(rt, &hc, base.seeds[0], 4000)?;
+                let mut w = crate::util::csv::CsvWriter::create(
+                    dir.join(format!("histogram_{label}.csv")),
+                    &["age"],
+                )?;
+                for a in &ages {
+                    w.row(&[*a as f64])?;
+                }
+                w.flush()?;
+                log_info!("{name}: {label}-IALS histogram, {} removals", ages.len());
+            }
+            out
+        }
+        "fig8" => {
+            // Confounding ablation — handled separately (CE table only).
+            return run_fig8(rt, &base, &dir);
+        }
+        other => anyhow::bail!("unknown figure '{other}' (known: {FIGURES:?})"),
+    };
+
+    for c in &conditions {
+        for &seed in &c.seeds {
+            let r = run_condition(rt, c, seed)?;
+            write_curve(
+                dir.join(format!("{}_seed{}.csv", r.condition.replace('/', "-"), seed)),
+                &r.curve,
+            )?;
+            table.row(&[
+                r.condition.clone(),
+                seed.to_string(),
+                format!("{:.2}", r.prep_secs),
+                format!("{:.2}", r.train_secs),
+                format!("{:.2}", r.total_secs()),
+                format!("{:.4}", r.aip_ce),
+                format!("{:.4}", r.final_eval),
+            ]);
+            summary.add(&r)?;
+        }
+    }
+
+    if name == "fig3" || name == "fig10" {
+        let baseline = evaluate_actuated(&conditions[0], base.eval_episodes.max(3), 12345);
+        table.row(&[
+            "actuated-baseline".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{baseline:.4}"),
+        ]);
+        let mut w =
+            crate::util::csv::CsvWriter::create(dir.join("actuated_baseline.csv"), &["reward"])?;
+        w.row(&[baseline])?;
+        w.flush()?;
+    }
+
+    table.print();
+    Ok(())
+}
+
+/// Appendix-B ablation: train the AIP on π₀ data with (a) the d-set and
+/// (b) the full ALSH (lights included), then compare held-out CE under π₀
+/// vs under a different (actuated) policy. The ALSH predictor picks up the
+/// lights→arrival shortcut and degrades off-policy.
+fn run_fig8(rt: &Rc<Runtime>, base: &ExperimentConfig, dir: &Path) -> Result<()> {
+    let cfg = cond(base, |c| {
+        c.domain = DomainKind::Traffic;
+        c.simulator = SimulatorKind::Ials;
+    });
+    let seed = cfg.seeds[0];
+    let mut table = Table::new(
+        "fig8: spurious-correlation ablation (held-out CE)",
+        &["features", "CE under pi0 (random)", "CE under actuated policy", "degradation"],
+    );
+    let mut rows_csv = crate::util::csv::CsvWriter::create(
+        dir.join("ce_table.csv"),
+        &["use_alsh", "ce_on_policy", "ce_off_policy", "degradation"],
+    )?;
+
+    for use_alsh in [false, true] {
+        let feature = if use_alsh { FeatureKind::Alsh } else { FeatureKind::Dset };
+        let model = if use_alsh { "aip_traffic_full" } else { "aip_traffic" };
+        // Train on random-policy data.
+        let mut gs = TrafficGlobalEnv::new(&cfg.traffic);
+        let train = collect_dataset(&mut gs, cfg.aip.dataset_size, seed, feature);
+        let mut aip = NeuralAip::new(rt.clone(), model, cfg.ppo.num_envs)?;
+        let spec = rt.manifest.model(model)?.clone();
+        aip.store.reinit(&spec, seed ^ 0xF168);
+        train_fnn(
+            rt,
+            &mut aip.store,
+            &format!("{model}_update"),
+            &train,
+            cfg.aip.train_epochs,
+            rt.geom("aip_batch")?,
+            cfg.aip.lr,
+            seed,
+        )?;
+        // Evaluate on-policy (fresh random-policy data) and off-policy
+        // (data under the actuated controller).
+        let mut gs2 = TrafficGlobalEnv::new(&cfg.traffic);
+        let on_data = collect_dataset(&mut gs2, 4000, seed ^ 0x0A, feature);
+        let mut gs3 = TrafficGlobalEnv::new(&cfg.traffic);
+        let off_data = collect_dataset_with_policy(
+            &mut gs3,
+            4000,
+            seed ^ 0x0FF,
+            feature,
+            |env, _rng, _n| env.actuated_action(),
+        );
+        let ce_on = evaluate_ce(&mut aip, &on_data)? as f64;
+        let ce_off = evaluate_ce(&mut aip, &off_data)? as f64;
+        let label = if use_alsh { "full ALSH (confounded)" } else { "d-set" };
+        table.row(&[
+            label.into(),
+            format!("{ce_on:.4}"),
+            format!("{ce_off:.4}"),
+            format!("{:+.4}", ce_off - ce_on),
+        ]);
+        rows_csv.row(&[
+            if use_alsh { 1.0 } else { 0.0 },
+            ce_on,
+            ce_off,
+            ce_off - ce_on,
+        ])?;
+    }
+    rows_csv.flush()?;
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! The coordinator: evaluation on the GS, the wall-clock-aware training
+//! loop, and the per-figure experiment harnesses.
+
+pub mod evaluator;
+pub mod experiment;
+pub mod trainer;
+
+pub use evaluator::{evaluate, EvalResult};
+pub use experiment::{run_condition, run_figure, FIGURES};
+pub use trainer::train_with_eval;

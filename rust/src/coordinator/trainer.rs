@@ -1,0 +1,85 @@
+//! The wall-clock-aware training loop: PPO iterations on the training
+//! simulator, periodically paused for GS evaluations (eval time excluded
+//! from the training clock, exactly as the paper's x-axes are drawn).
+
+use super::evaluator::evaluate;
+use crate::config::ExperimentConfig;
+use crate::core::VecEnv;
+use crate::log_info;
+use crate::metrics::CurvePoint;
+use crate::rl::{Policy, PpoStats, PpoTrainer};
+use crate::util::Stopwatch;
+use crate::Result;
+
+pub struct TrainOutcome {
+    pub curve: Vec<CurvePoint>,
+    /// PPO training seconds (excluding evaluations).
+    pub train_secs: f64,
+}
+
+/// Train `policy` on `train_env` for `cfg.ppo.total_steps` env steps,
+/// evaluating on `eval_env` (batch-1, always the GS) every
+/// `cfg.eval_every` steps. `clock_offset` shifts the curve right by the
+/// AIP preparation time (the short horizontal segment at the start of the
+/// paper's IALS curves).
+pub fn train_with_eval(
+    cfg: &ExperimentConfig,
+    train_env: &mut dyn VecEnv,
+    eval_env: &mut dyn VecEnv,
+    policy: &mut Policy,
+    seed: u64,
+    clock_offset: f64,
+) -> Result<TrainOutcome> {
+    let mut trainer = PpoTrainer::new(&cfg.ppo, train_env.obs_dim(), seed);
+    let per_iter = trainer.steps_per_iteration();
+    let iterations = cfg.ppo.total_steps.div_ceil(per_iter);
+    let mut curve = Vec::new();
+    let mut sw = Stopwatch::new();
+
+    train_env.reset_all(seed);
+
+    // Initial evaluation (t=0 point of the curve).
+    let ev = evaluate(eval_env, policy, cfg.eval_episodes, seed ^ 0x5EED)?;
+    curve.push(CurvePoint {
+        wall_clock_s: clock_offset,
+        env_steps: 0,
+        eval_mean: ev.mean,
+        eval_std: ev.std,
+        stats: PpoStats::default(),
+    });
+
+    let mut next_eval = cfg.eval_every;
+    let mut steps_done = 0usize;
+    let mut last_stats = PpoStats::default();
+    for iter in 0..iterations {
+        sw.resume();
+        last_stats = trainer.train_iteration(train_env, policy)?;
+        sw.pause();
+        steps_done += per_iter;
+
+        if steps_done >= next_eval || iter + 1 == iterations {
+            let ev = evaluate(eval_env, policy, cfg.eval_episodes, seed ^ (iter as u64 + 1))?;
+            curve.push(CurvePoint {
+                wall_clock_s: clock_offset + sw.elapsed_secs(),
+                env_steps: steps_done,
+                eval_mean: ev.mean,
+                eval_std: ev.std,
+                stats: last_stats,
+            });
+            log_info!(
+                "[{}] seed {seed} steps {steps_done}/{} clock {:.1}s eval {:.4} (ent {:.3}, kl {:.4})",
+                cfg.name,
+                cfg.ppo.total_steps,
+                clock_offset + sw.elapsed_secs(),
+                ev.mean,
+                last_stats.entropy,
+                last_stats.approx_kl
+            );
+            while next_eval <= steps_done {
+                next_eval += cfg.eval_every;
+            }
+        }
+    }
+    let _ = last_stats;
+    Ok(TrainOutcome { curve, train_secs: sw.elapsed_secs() })
+}

@@ -1,0 +1,98 @@
+//! Frame stacking / history buffers.
+//!
+//! Finite-memory agents (paper §4.1, App F) observe a stack of the last
+//! `k` observations; [`FrameStacker`] maintains that stack. The same
+//! mechanism backs the d-set history fed to feedforward AIPs.
+
+/// Fixed-capacity stack of the last `k` feature vectors, exposed as one
+/// flat `[k * dim]` vector (oldest first, zero-padded after reset).
+#[derive(Debug, Clone)]
+pub struct FrameStacker {
+    dim: usize,
+    k: usize,
+    /// Flat storage, oldest frame first.
+    buf: Vec<f32>,
+}
+
+impl FrameStacker {
+    pub fn new(dim: usize, k: usize) -> FrameStacker {
+        assert!(k >= 1, "frame stack must be >= 1");
+        FrameStacker { dim, k, buf: vec![0.0; dim * k] }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.dim * self.k
+    }
+
+    pub fn frame_dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn depth(&self) -> usize {
+        self.k
+    }
+
+    /// Clear to zeros (episode boundary).
+    pub fn reset(&mut self) {
+        self.buf.fill(0.0);
+    }
+
+    /// Push a new frame (shifts history left; newest frame last).
+    pub fn push(&mut self, frame: &[f32]) {
+        debug_assert_eq!(frame.len(), self.dim);
+        if self.k > 1 {
+            self.buf.copy_within(self.dim.., 0);
+        }
+        let start = (self.k - 1) * self.dim;
+        self.buf[start..].copy_from_slice(frame);
+    }
+
+    /// The stacked observation, oldest frame first.
+    pub fn stacked(&self) -> &[f32] {
+        &self.buf
+    }
+
+    pub fn write_to(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_of_one_is_identity() {
+        let mut st = FrameStacker::new(3, 1);
+        st.push(&[1.0, 2.0, 3.0]);
+        assert_eq!(st.stacked(), &[1.0, 2.0, 3.0]);
+        st.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(st.stacked(), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn stack_shifts_oldest_out() {
+        let mut st = FrameStacker::new(2, 3);
+        st.push(&[1.0, 1.0]);
+        st.push(&[2.0, 2.0]);
+        st.push(&[3.0, 3.0]);
+        assert_eq!(st.stacked(), &[1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        st.push(&[4.0, 4.0]);
+        assert_eq!(st.stacked(), &[2.0, 2.0, 3.0, 3.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut st = FrameStacker::new(2, 2);
+        st.push(&[1.0, 1.0]);
+        st.reset();
+        assert_eq!(st.stacked(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn zero_padding_after_reset() {
+        let mut st = FrameStacker::new(1, 4);
+        st.push(&[9.0]);
+        assert_eq!(st.stacked(), &[0.0, 0.0, 0.0, 9.0]);
+    }
+}

@@ -1,0 +1,273 @@
+//! Vectorized environments: the PPO trainer steps `B` environments in
+//! lockstep so that policy forwards (and, for the IALS, AIP forwards) are
+//! one batched PJRT call per step instead of `B` calls — the single most
+//! important L3 performance lever (DESIGN.md §7).
+
+use super::{Environment, Step};
+
+/// A batch of `B` synchronized environments with auto-reset: when an env
+/// reports `done`, it is reset immediately and the *initial* observation of
+/// the next episode is what `observe_all` returns (standard vec-env
+/// semantics).
+pub trait VecEnv {
+    fn num_envs(&self) -> usize;
+    fn obs_dim(&self) -> usize;
+    fn num_actions(&self) -> usize;
+    /// Reset every env; env `i` is seeded from `seed` + its index.
+    fn reset_all(&mut self, seed: u64);
+    /// Write all observations, env-major: `out[i*obs_dim .. (i+1)*obs_dim]`.
+    fn observe_all(&self, out: &mut [f32]);
+    /// Step every env. `rewards[i]`/`dones[i]` describe env `i`'s transition;
+    /// auto-reset happens after recording `done`.
+    fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]);
+}
+
+impl<V: VecEnv + ?Sized> VecEnv for Box<V> {
+    fn num_envs(&self) -> usize {
+        (**self).num_envs()
+    }
+    fn obs_dim(&self) -> usize {
+        (**self).obs_dim()
+    }
+    fn num_actions(&self) -> usize {
+        (**self).num_actions()
+    }
+    fn reset_all(&mut self, seed: u64) {
+        (**self).reset_all(seed)
+    }
+    fn observe_all(&self, out: &mut [f32]) {
+        (**self).observe_all(out)
+    }
+    fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
+        (**self).step_all(actions, rewards, dones)
+    }
+}
+
+/// Vectorization of any [`Environment`] (used for GS training and for
+/// simple test envs). Each env gets an independent seed stream.
+pub struct GsVecEnv<E: Environment> {
+    envs: Vec<E>,
+    episode_counter: Vec<u64>,
+    base_seed: u64,
+}
+
+impl<E: Environment> GsVecEnv<E> {
+    pub fn new(envs: Vec<E>) -> Self {
+        assert!(!envs.is_empty());
+        let n = envs.len();
+        GsVecEnv { envs, episode_counter: vec![0; n], base_seed: 0 }
+    }
+
+    pub fn envs(&self) -> &[E] {
+        &self.envs
+    }
+
+    fn seed_for(&self, env_idx: usize) -> u64 {
+        // Distinct per (base_seed, env, episode) without collisions.
+        self.base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(env_idx as u64)
+            .wrapping_add(self.episode_counter[env_idx].wrapping_mul(0xD1B54A32D192ED03))
+    }
+}
+
+impl<E: Environment> VecEnv for GsVecEnv<E> {
+    fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.envs[0].obs_dim()
+    }
+
+    fn num_actions(&self) -> usize {
+        self.envs[0].num_actions()
+    }
+
+    fn reset_all(&mut self, seed: u64) {
+        self.base_seed = seed;
+        for i in 0..self.envs.len() {
+            self.episode_counter[i] = 0;
+            let s = self.seed_for(i);
+            self.envs[i].reset(s);
+        }
+    }
+
+    fn observe_all(&self, out: &mut [f32]) {
+        let d = self.obs_dim();
+        for (i, env) in self.envs.iter().enumerate() {
+            env.observe(&mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
+        debug_assert_eq!(actions.len(), self.envs.len());
+        for i in 0..self.envs.len() {
+            let Step { reward, done } = self.envs[i].step(actions[i]);
+            rewards[i] = reward;
+            dones[i] = done;
+            if done {
+                self.episode_counter[i] += 1;
+                let s = self.seed_for(i);
+                self.envs[i].reset(s);
+            }
+        }
+    }
+}
+
+/// Frame-stacking wrapper over any [`VecEnv`]: multiplies the observation
+/// dimension by `k` (paper App F — the warehouse memory agent stacks the
+/// last 8 observations).
+pub struct FrameStackVec<V: VecEnv> {
+    inner: V,
+    k: usize,
+    frame_dim: usize,
+    /// env-major stacks: [B * k * frame_dim], oldest frame first per env.
+    stacks: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl<V: VecEnv> FrameStackVec<V> {
+    pub fn new(inner: V, k: usize) -> Self {
+        assert!(k >= 1);
+        let frame_dim = inner.obs_dim();
+        let b = inner.num_envs();
+        FrameStackVec {
+            inner,
+            k,
+            frame_dim,
+            stacks: vec![0.0; b * k * frame_dim],
+            scratch: vec![0.0; b * frame_dim],
+        }
+    }
+
+    pub fn inner(&self) -> &V {
+        &self.inner
+    }
+
+    fn push_frames(&mut self, dones: Option<&[bool]>) {
+        let b = self.inner.num_envs();
+        let (k, d) = (self.k, self.frame_dim);
+        self.inner.observe_all(&mut self.scratch);
+        for i in 0..b {
+            let stack = &mut self.stacks[i * k * d..(i + 1) * k * d];
+            if let Some(dones) = dones {
+                if dones[i] {
+                    // Episode boundary: clear history so the next episode's
+                    // first stacked obs contains only its initial frame.
+                    stack.fill(0.0);
+                }
+            }
+            if k > 1 {
+                stack.copy_within(d.., 0);
+            }
+            stack[(k - 1) * d..].copy_from_slice(&self.scratch[i * d..(i + 1) * d]);
+        }
+    }
+}
+
+impl<V: VecEnv> VecEnv for FrameStackVec<V> {
+    fn num_envs(&self) -> usize {
+        self.inner.num_envs()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.frame_dim * self.k
+    }
+
+    fn num_actions(&self) -> usize {
+        self.inner.num_actions()
+    }
+
+    fn reset_all(&mut self, seed: u64) {
+        self.inner.reset_all(seed);
+        self.stacks.fill(0.0);
+        self.push_frames(None);
+    }
+
+    fn observe_all(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.stacks);
+    }
+
+    fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
+        self.inner.step_all(actions, rewards, dones);
+        self.push_frames(Some(dones));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::test_envs::Corridor;
+
+    fn make_vec(n: usize) -> GsVecEnv<Corridor> {
+        GsVecEnv::new((0..n).map(|_| Corridor::new(3, 5)).collect())
+    }
+
+    #[test]
+    fn vec_env_shapes() {
+        let mut v = make_vec(4);
+        v.reset_all(0);
+        let mut obs = vec![0.0; 4 * 3];
+        v.observe_all(&mut obs);
+        // all at position 0
+        for i in 0..4 {
+            assert_eq!(obs[i * 3], 1.0);
+        }
+    }
+
+    #[test]
+    fn auto_reset_restarts_episode() {
+        let mut v = make_vec(2);
+        v.reset_all(0);
+        let mut rewards = [0.0; 2];
+        let mut dones = [false; 2];
+        for t in 0..5 {
+            v.step_all(&[1, 0], &mut rewards, &mut dones);
+            assert_eq!(dones == [true, true], t == 4);
+        }
+        // After done, observation is the fresh initial state.
+        let mut obs = vec![0.0; 6];
+        v.observe_all(&mut obs);
+        assert_eq!(&obs[0..3], &[1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn frame_stack_dims_and_shift() {
+        let v = make_vec(2);
+        let mut fs = FrameStackVec::new(v, 3);
+        fs.reset_all(0);
+        assert_eq!(fs.obs_dim(), 9);
+        let mut obs = vec![0.0; 2 * 9];
+        fs.observe_all(&mut obs);
+        // only newest frame populated after reset
+        assert_eq!(&obs[0..6], &[0.0; 6]);
+        assert_eq!(&obs[6..9], &[1.0, 0.0, 0.0]);
+
+        let mut rewards = [0.0; 2];
+        let mut dones = [false; 2];
+        fs.step_all(&[1, 1], &mut rewards, &mut dones);
+        fs.observe_all(&mut obs);
+        // now frames t-1 (pos0) and t (pos1) present
+        assert_eq!(&obs[3..6], &[1.0, 0.0, 0.0]);
+        assert_eq!(&obs[6..9], &[0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn frame_stack_clears_on_done() {
+        let v = make_vec(1);
+        let mut fs = FrameStackVec::new(v, 4);
+        fs.reset_all(0);
+        let mut rewards = [0.0; 1];
+        let mut dones = [false; 1];
+        for _ in 0..5 {
+            fs.step_all(&[1], &mut rewards, &mut dones);
+        }
+        assert!(dones[0]);
+        let mut obs = vec![0.0; 12];
+        fs.observe_all(&mut obs);
+        // After auto-reset the stack holds only the new episode's frame.
+        assert_eq!(&obs[0..9], &[0.0; 9]);
+        assert_eq!(&obs[9..12], &[1.0, 0.0, 0.0]);
+    }
+}

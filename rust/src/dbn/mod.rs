@@ -1,0 +1,373 @@
+//! Dynamic-Bayesian-network tooling: d-separation tests and minimal
+//! d-separating-set search (paper §4.2, Definitions 4–5; Acid & De Campos
+//! 1996; Tian, Paz & Pearl 1998).
+//!
+//! The IALS construction requires a d-set `d_t ⊆ l_t` such that
+//! `u_t ⟂ l_t \ d_t | d_t`. The two benchmark domains specify their d-sets
+//! by hand (as the paper does); this module provides the machinery to
+//! *verify* those choices against each domain's DBN, and a greedy
+//! minimization pass that strips redundant variables.
+
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// A directed acyclic graph over named nodes.
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    names: Vec<String>,
+    index: BTreeMap<String, usize>,
+    parents: Vec<Vec<usize>>,
+    children: Vec<Vec<usize>>,
+}
+
+impl Dag {
+    pub fn new() -> Dag {
+        Dag::default()
+    }
+
+    /// Add (or get) a node by name.
+    pub fn node(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.index.get(name) {
+            return i;
+        }
+        let i = self.names.len();
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), i);
+        self.parents.push(Vec::new());
+        self.children.push(Vec::new());
+        i
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    pub fn lookup(&self, name: &str) -> Result<usize> {
+        match self.index.get(name) {
+            Some(&i) => Ok(i),
+            None => bail!("unknown DBN node '{name}'"),
+        }
+    }
+
+    /// Add a directed edge `from -> to` (idempotent). Panics on self-loops.
+    pub fn edge(&mut self, from: &str, to: &str) {
+        let f = self.node(from);
+        let t = self.node(to);
+        assert_ne!(f, t, "self loop on {from}");
+        if !self.children[f].contains(&t) {
+            self.children[f].push(t);
+            self.parents[t].push(f);
+        }
+    }
+
+    pub fn parents_of(&self, i: usize) -> &[usize] {
+        &self.parents[i]
+    }
+
+    pub fn children_of(&self, i: usize) -> &[usize] {
+        &self.children[i]
+    }
+
+    /// Check acyclicity (Kahn's algorithm).
+    pub fn is_acyclic(&self) -> bool {
+        let mut indeg: Vec<usize> = self.parents.iter().map(|p| p.len()).collect();
+        let mut queue: VecDeque<usize> =
+            (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(n) = queue.pop_front() {
+            seen += 1;
+            for &c in &self.children[n] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+        seen == self.len()
+    }
+
+    /// Ancestors of a set (including the set itself).
+    fn ancestral_closure(&self, set: &BTreeSet<usize>) -> BTreeSet<usize> {
+        let mut out = set.clone();
+        let mut stack: Vec<usize> = set.iter().cloned().collect();
+        while let Some(n) = stack.pop() {
+            for &p in &self.parents[n] {
+                if out.insert(p) {
+                    stack.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Test d-separation: is every node in `xs` d-separated from every node
+    /// in `ys` given `zs`? Implemented via the moralized-ancestral-graph
+    /// criterion (Lauritzen): X ⟂ Y | Z in the DAG iff X and Y are
+    /// separated by Z in the moral graph of the ancestral graph of X∪Y∪Z.
+    pub fn d_separated(&self, xs: &[usize], ys: &[usize], zs: &[usize]) -> bool {
+        let x: BTreeSet<usize> = xs.iter().cloned().collect();
+        let y: BTreeSet<usize> = ys.iter().cloned().collect();
+        let z: BTreeSet<usize> = zs.iter().cloned().collect();
+        assert!(x.is_disjoint(&z) && y.is_disjoint(&z), "conditioning set overlaps query");
+        if !x.is_disjoint(&y) {
+            return false;
+        }
+
+        let mut all = x.clone();
+        all.extend(&y);
+        all.extend(&z);
+        let anc = self.ancestral_closure(&all);
+
+        // Build the moral graph restricted to `anc`: undirected adjacency.
+        let mut adj: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+        let connect = |a: usize, b: usize, adj: &mut BTreeMap<usize, BTreeSet<usize>>| {
+            adj.entry(a).or_default().insert(b);
+            adj.entry(b).or_default().insert(a);
+        };
+        for &n in &anc {
+            adj.entry(n).or_default();
+            // directed edges
+            for &p in &self.parents[n] {
+                if anc.contains(&p) {
+                    connect(p, n, &mut adj);
+                }
+            }
+            // marry parents
+            let ps: Vec<usize> =
+                self.parents[n].iter().cloned().filter(|p| anc.contains(p)).collect();
+            for i in 0..ps.len() {
+                for j in (i + 1)..ps.len() {
+                    connect(ps[i], ps[j], &mut adj);
+                }
+            }
+        }
+
+        // BFS from X avoiding Z; separated iff no Y reached.
+        let mut visited: BTreeSet<usize> = BTreeSet::new();
+        let mut queue: VecDeque<usize> = x.iter().cloned().filter(|n| !z.contains(n)).collect();
+        visited.extend(queue.iter());
+        while let Some(n) = queue.pop_front() {
+            if y.contains(&n) {
+                return false;
+            }
+            if let Some(nbrs) = adj.get(&n) {
+                for &m in nbrs {
+                    if !z.contains(&m) && visited.insert(m) {
+                        queue.push_back(m);
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Named-node convenience wrapper around [`Self::d_separated`].
+    pub fn d_separated_names(&self, xs: &[&str], ys: &[&str], zs: &[&str]) -> Result<bool> {
+        let r = |names: &[&str]| -> Result<Vec<usize>> {
+            names.iter().map(|n| self.lookup(n)).collect()
+        };
+        Ok(self.d_separated(&r(xs)?, &r(ys)?, &r(zs)?))
+    }
+
+    /// Greedy minimization: given a valid separating set `zs` (u ⟂ rest |
+    /// zs must already hold), repeatedly drop variables whose removal keeps
+    /// `xs ⟂ ys | zs'`. Returns the reduced set (a minimal — not
+    /// necessarily minimum — d-set, as in Acid & De Campos 1996).
+    pub fn minimize_dset(&self, xs: &[usize], ys: &[usize], zs: &[usize]) -> Result<Vec<usize>> {
+        if !self.d_separated(xs, ys, zs) {
+            bail!("initial set is not d-separating");
+        }
+        let mut current: Vec<usize> = zs.to_vec();
+        loop {
+            let mut removed = false;
+            for i in 0..current.len() {
+                let mut candidate = current.clone();
+                candidate.remove(i);
+                if self.d_separated(xs, ys, &candidate) {
+                    current = candidate;
+                    removed = true;
+                    break;
+                }
+            }
+            if !removed {
+                return Ok(current);
+            }
+        }
+    }
+}
+
+/// Build the local-POMDP prototype DBN of Figure 1, unrolled `t_max`
+/// timesteps: local vars `x1,x2`, influence sources `u`, non-local vars
+/// `y`, actions `a`. Used by tests and by the domain modules' d-set
+/// verification helpers.
+pub fn figure1_prototype(t_max: usize) -> Dag {
+    let mut g = Dag::new();
+    for t in 0..t_max {
+        let x1 = format!("x1_{t}");
+        let x2 = format!("x2_{t}");
+        let u = format!("u_{t}");
+        let y = format!("y_{t}");
+        let a = format!("a_{t}");
+        g.node(&x1);
+        g.node(&x2);
+        g.node(&u);
+        g.node(&y);
+        g.node(&a);
+        if t + 1 < t_max {
+            let n = |s: &str| format!("{s}_{}", t + 1);
+            // Local transition: x' depends on (x, u, a).
+            g.edge(&x1, &n("x1"));
+            g.edge(&x2, &n("x1"));
+            g.edge(&x1, &n("x2"));
+            g.edge(&x2, &n("x2"));
+            g.edge(&u, &n("x1")); // influence enters the local region
+            g.edge(&a, &n("x1"));
+            g.edge(&a, &n("x2"));
+            // Non-local dynamics: y' depends on y; u' depends on y (and u).
+            g.edge(&y, &n("y"));
+            g.edge(&y, &n("u"));
+            g.edge(&u, &n("u"));
+            // The local region feeds back into the global system
+            // (e.g. cars leaving the intersection): x -> y'.
+            g.edge(&x2, &n("y"));
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Dag {
+        // a -> b -> c
+        let mut g = Dag::new();
+        g.edge("a", "b");
+        g.edge("b", "c");
+        g
+    }
+
+    #[test]
+    fn chain_separation() {
+        let g = chain();
+        // a ⟂ c | b, but not marginally.
+        assert!(g.d_separated_names(&["a"], &["c"], &["b"]).unwrap());
+        assert!(!g.d_separated_names(&["a"], &["c"], &[]).unwrap());
+    }
+
+    #[test]
+    fn fork_separation() {
+        // a <- b -> c : a ⟂ c | b only.
+        let mut g = Dag::new();
+        g.edge("b", "a");
+        g.edge("b", "c");
+        assert!(g.d_separated_names(&["a"], &["c"], &["b"]).unwrap());
+        assert!(!g.d_separated_names(&["a"], &["c"], &[]).unwrap());
+    }
+
+    #[test]
+    fn collider_separation() {
+        // a -> b <- c : a ⟂ c marginally, but NOT given the collider b.
+        let mut g = Dag::new();
+        g.edge("a", "b");
+        g.edge("c", "b");
+        assert!(g.d_separated_names(&["a"], &["c"], &[]).unwrap());
+        assert!(!g.d_separated_names(&["a"], &["c"], &["b"]).unwrap());
+    }
+
+    #[test]
+    fn collider_descendant_opens_path() {
+        // a -> b <- c, b -> d: conditioning on the descendant d also opens.
+        let mut g = Dag::new();
+        g.edge("a", "b");
+        g.edge("c", "b");
+        g.edge("b", "d");
+        assert!(!g.d_separated_names(&["a"], &["c"], &["d"]).unwrap());
+    }
+
+    #[test]
+    fn acyclicity() {
+        assert!(chain().is_acyclic());
+        let mut g = chain();
+        g.edge("c", "a");
+        assert!(!g.is_acyclic());
+    }
+
+    #[test]
+    fn figure1_u_separates_x_from_y() {
+        // The defining property of influence sources (paper §3.2): given
+        // u_t (and the local state/action), x_{t+1} ⟂ y_t.
+        let g = figure1_prototype(3);
+        // u_1 <- y_0 carries the global influence; conditioning on u_1 (and
+        // the local state/action) blocks it: x1_2 ⟂ y_0 | {u_1, x_1, a_1}.
+        assert!(g
+            .d_separated_names(
+                &["x1_2"],
+                &["y_0"],
+                &["u_1", "x1_1", "x2_1", "a_1"],
+            )
+            .unwrap());
+        // Dropping u_1 opens the chain y_0 -> u_1 -> x1_2.
+        assert!(!g
+            .d_separated_names(&["x1_2"], &["y_0"], &["x1_1", "x2_1", "a_1"])
+            .unwrap());
+    }
+
+    #[test]
+    fn figure1_dset_minimization() {
+        let g = figure1_prototype(3);
+        // Predicting u_2 given the whole t<=1 ALSH: actions should be
+        // removable (they only touch u via x -> y', a long path through y
+        // that the x's block... in this prototype a_t -> x_{t+1} -> y_{t+2}
+        // which is downstream of u_2's parents only through y).
+        let u2 = g.lookup("u_2").unwrap();
+        let alsh: Vec<usize> = ["x1_0", "x2_0", "a_0", "x1_1", "x2_1", "a_1"]
+            .iter()
+            .map(|n| g.lookup(n).unwrap())
+            .collect();
+        let rest: Vec<usize> = ["y_0"].iter().map(|n| g.lookup(n).unwrap()).collect();
+        // ALSH + history must separate u_2 from y_0? u_2 <- y_1 <- y_0:
+        // conditioning on x's doesn't block that, so full separation needs
+        // y — this asserts the *failure* case is detected too.
+        assert!(!g.d_separated(&[u2], &rest, &alsh));
+    }
+
+    #[test]
+    fn minimize_dset_strips_redundant_vars() {
+        // x -> m -> y, plus irrelevant r. {m, r} separates x from y; the
+        // minimal set is {m}.
+        let mut g = Dag::new();
+        g.edge("x", "m");
+        g.edge("m", "y");
+        g.node("r");
+        let (x, m, y, r) = (
+            g.lookup("x").unwrap(),
+            g.lookup("m").unwrap(),
+            g.lookup("y").unwrap(),
+            g.lookup("r").unwrap(),
+        );
+        let min = g.minimize_dset(&[x], &[y], &[m, r]).unwrap();
+        assert_eq!(min, vec![m]);
+    }
+
+    #[test]
+    fn minimize_rejects_nonseparating_input() {
+        let g = chain();
+        let (a, c) = (g.lookup("a").unwrap(), g.lookup("c").unwrap());
+        assert!(g.minimize_dset(&[a], &[c], &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_name_is_error() {
+        let g = chain();
+        assert!(g.d_separated_names(&["nope"], &["c"], &[]).is_err());
+    }
+}

@@ -1,0 +1,212 @@
+//! The influence-augmented local simulator (Algorithm 2): a local
+//! simulator driven by an influence predictor, packaged as a drop-in
+//! [`VecEnv`] so the PPO trainer cannot tell it apart from the GS.
+//!
+//! Per step and per environment (Algorithm 2, lines 5–11):
+//! 1. read the current d-set `d_t` from the LS,
+//! 2. query the AIP for `P(u_t | d_t, history)` — **one batched PJRT call
+//!    for all B environments** (the L3 perf lever, DESIGN.md §7),
+//! 3. sample the binary realization `u_t`,
+//! 4. step the LS with `(a_t, u_t)`.
+
+use crate::core::{LocalEnv, VecEnv};
+use crate::influence::InfluencePredictor;
+use crate::util::Pcg32;
+
+pub struct IalsVecEnv<L: LocalEnv> {
+    envs: Vec<L>,
+    predictor: Box<dyn InfluencePredictor>,
+    rng: Pcg32,
+    episode_counter: Vec<u64>,
+    base_seed: u64,
+    // scratch (no allocation on the step path)
+    dsets: Vec<f32>,
+    probs: Vec<f32>,
+    u_bools: Vec<bool>,
+}
+
+impl<L: LocalEnv> IalsVecEnv<L> {
+    pub fn new(envs: Vec<L>, predictor: Box<dyn InfluencePredictor>) -> Self {
+        assert!(!envs.is_empty());
+        let b = envs.len();
+        assert_eq!(predictor.batch(), b, "predictor batch must equal env count");
+        assert_eq!(predictor.dset_dim(), envs[0].dset_dim(), "d-set dims must agree");
+        assert_eq!(
+            predictor.num_sources(),
+            envs[0].num_influence_sources(),
+            "influence dims must agree"
+        );
+        let dd = envs[0].dset_dim();
+        let ud = envs[0].num_influence_sources();
+        IalsVecEnv {
+            envs,
+            predictor,
+            rng: Pcg32::seeded(0),
+            episode_counter: vec![0; b],
+            base_seed: 0,
+            dsets: vec![0.0; b * dd],
+            probs: vec![0.0; b * ud],
+            u_bools: vec![false; ud],
+        }
+    }
+
+    pub fn predictor(&self) -> &dyn InfluencePredictor {
+        self.predictor.as_ref()
+    }
+
+    /// Direct access to the wrapped local simulators (diagnostics, e.g.
+    /// the Fig 6 item-lifetime histograms).
+    pub fn envs_mut(&mut self) -> &mut [L] {
+        &mut self.envs
+    }
+
+    fn seed_for(&self, env_idx: usize) -> u64 {
+        self.base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(env_idx as u64)
+            .wrapping_add(self.episode_counter[env_idx].wrapping_mul(0xD1B54A32D192ED03))
+    }
+}
+
+impl<L: LocalEnv> VecEnv for IalsVecEnv<L> {
+    fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.envs[0].obs_dim()
+    }
+
+    fn num_actions(&self) -> usize {
+        self.envs[0].num_actions()
+    }
+
+    fn reset_all(&mut self, seed: u64) {
+        self.base_seed = seed;
+        self.rng = Pcg32::new(seed, 1312);
+        self.predictor.reset_all();
+        for i in 0..self.envs.len() {
+            self.episode_counter[i] = 0;
+            let s = self.seed_for(i);
+            self.envs[i].reset(s);
+        }
+    }
+
+    fn observe_all(&self, out: &mut [f32]) {
+        let d = self.obs_dim();
+        for (i, env) in self.envs.iter().enumerate() {
+            env.observe(&mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
+        let b = self.envs.len();
+        let dd = self.predictor.dset_dim();
+        let ud = self.predictor.num_sources();
+        debug_assert_eq!(actions.len(), b);
+
+        // 1. d_t for every env.
+        for (i, env) in self.envs.iter().enumerate() {
+            env.dset(&mut self.dsets[i * dd..(i + 1) * dd]);
+        }
+        // 2. One batched AIP call.
+        self.predictor
+            .predict(&self.dsets, &mut self.probs)
+            .expect("influence predictor failed");
+        // 3+4. Sample u_t and step each LS.
+        for i in 0..b {
+            for k in 0..ud {
+                self.u_bools[k] = self.rng.bernoulli(self.probs[i * ud + k]);
+            }
+            let step = self.envs[i].step_with_influence(actions[i], &self.u_bools);
+            rewards[i] = step.reward;
+            dones[i] = step.done;
+            if step.done {
+                self.episode_counter[i] += 1;
+                let s = self.seed_for(i);
+                self.envs[i].reset(s);
+                self.predictor.reset_state(i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrafficConfig;
+    use crate::influence::{FixedMarginalAip, ReplayPredictor};
+    use crate::sim::traffic::TrafficLocalEnv;
+
+    fn make(b: usize, p: f32) -> IalsVecEnv<TrafficLocalEnv> {
+        let cfg = TrafficConfig::default();
+        let envs: Vec<TrafficLocalEnv> = (0..b).map(|_| TrafficLocalEnv::new(&cfg)).collect();
+        let aip = FixedMarginalAip::constant(b, 40, 4, p);
+        IalsVecEnv::new(envs, Box::new(aip))
+    }
+
+    #[test]
+    fn steps_and_shapes() {
+        let mut v = make(4, 0.1);
+        v.reset_all(1);
+        assert_eq!(v.num_envs(), 4);
+        assert_eq!(v.obs_dim(), 42);
+        let mut obs = vec![0.0; 4 * 42];
+        let mut rewards = [0.0f32; 4];
+        let mut dones = [false; 4];
+        for _ in 0..50 {
+            v.step_all(&[0, 1, 0, 1], &mut rewards, &mut dones);
+        }
+        v.observe_all(&mut obs);
+        assert!(obs.iter().all(|&x| x.is_finite()));
+    }
+
+    #[test]
+    fn influence_rate_controls_traffic_density() {
+        let density = |p: f32| {
+            let mut v = make(2, p);
+            v.reset_all(7);
+            let mut rewards = [0.0f32; 2];
+            let mut dones = [false; 2];
+            let mut obs = vec![0.0; 2 * 42];
+            let mut occ = 0.0f64;
+            for _ in 0..300 {
+                v.step_all(&[0, 0], &mut rewards, &mut dones);
+                v.observe_all(&mut obs);
+                occ += obs[..40].iter().sum::<f32>() as f64;
+            }
+            occ
+        };
+        let low = density(0.05);
+        let high = density(0.5);
+        assert!(
+            high > low * 1.5,
+            "higher influence rate must mean more cars: {low} vs {high}"
+        );
+    }
+
+    #[test]
+    fn auto_reset_keeps_running() {
+        let mut v = make(1, 0.1);
+        v.reset_all(3);
+        let mut rewards = [0.0f32; 1];
+        let mut dones = [false; 1];
+        let mut done_count = 0;
+        for _ in 0..450 {
+            v.step_all(&[0], &mut rewards, &mut dones);
+            if dones[0] {
+                done_count += 1;
+            }
+        }
+        assert_eq!(done_count, 2, "two 200-step episodes complete in 450 steps");
+    }
+
+    #[test]
+    #[should_panic(expected = "batch")]
+    fn batch_mismatch_rejected() {
+        let cfg = TrafficConfig::default();
+        let envs = vec![TrafficLocalEnv::new(&cfg)];
+        let p = ReplayPredictor { batch: 2, dset_dim: 40, rows: vec![vec![0.0; 4]], cursor: 0 };
+        let _ = IalsVecEnv::new(envs, Box::new(p));
+    }
+}

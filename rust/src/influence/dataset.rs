@@ -1,0 +1,166 @@
+//! The `(d_t, u_t)` dataset of Algorithm 1: episode-structured so that
+//! recurrent AIPs can be trained on contiguous windows (BPTT) and
+//! evaluated on whole trajectories.
+
+use crate::util::Pcg32;
+
+/// Index range of one episode within the flat step storage.
+#[derive(Debug, Clone, Copy)]
+pub struct Episode {
+    pub start: usize,
+    pub steps: usize,
+}
+
+impl Episode {
+    pub fn len(&self, _data: &InfluenceDataset) -> usize {
+        self.steps
+    }
+
+    pub fn d_row<'a>(&self, data: &'a InfluenceDataset, t: usize) -> &'a [f32] {
+        debug_assert!(t < self.steps);
+        let d = data.dset_dim;
+        let off = (self.start + t) * d;
+        &data.dsets[off..off + d]
+    }
+
+    pub fn u_row<'a>(&self, data: &'a InfluenceDataset, t: usize) -> &'a [f32] {
+        debug_assert!(t < self.steps);
+        let u = data.u_dim;
+        let off = (self.start + t) * u;
+        &data.us[off..off + u]
+    }
+}
+
+/// Flat, episode-indexed storage of d-set features and influence-source
+/// realizations.
+#[derive(Debug, Clone)]
+pub struct InfluenceDataset {
+    pub dset_dim: usize,
+    pub u_dim: usize,
+    dsets: Vec<f32>,
+    us: Vec<f32>,
+    pub episodes: Vec<Episode>,
+    open: bool,
+}
+
+impl InfluenceDataset {
+    pub fn new(dset_dim: usize, u_dim: usize) -> InfluenceDataset {
+        InfluenceDataset {
+            dset_dim,
+            u_dim,
+            dsets: Vec::new(),
+            us: Vec::new(),
+            episodes: Vec::new(),
+            open: false,
+        }
+    }
+
+    pub fn begin_episode(&mut self) {
+        self.episodes.push(Episode { start: self.total_steps(), steps: 0 });
+        self.open = true;
+    }
+
+    pub fn push(&mut self, d: &[f32], u: &[f32]) {
+        assert!(self.open, "push before begin_episode");
+        assert_eq!(d.len(), self.dset_dim);
+        assert_eq!(u.len(), self.u_dim);
+        self.dsets.extend_from_slice(d);
+        self.us.extend_from_slice(u);
+        self.episodes.last_mut().unwrap().steps += 1;
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.dsets.len() / self.dset_dim.max(1)
+    }
+
+    /// Flat step access (for feedforward training).
+    pub fn d_at(&self, step: usize) -> &[f32] {
+        &self.dsets[step * self.dset_dim..(step + 1) * self.dset_dim]
+    }
+
+    pub fn u_at(&self, step: usize) -> &[f32] {
+        &self.us[step * self.u_dim..(step + 1) * self.u_dim]
+    }
+
+    /// Mean of each influence source across the dataset.
+    pub fn u_marginals(&self) -> Vec<f32> {
+        let n = self.total_steps().max(1);
+        let mut out = vec![0.0f32; self.u_dim];
+        for s in 0..self.total_steps() {
+            for (o, &x) in out.iter_mut().zip(self.u_at(s)) {
+                *o += x;
+            }
+        }
+        for o in &mut out {
+            *o /= n as f32;
+        }
+        out
+    }
+
+    /// Split episodes into (train, heldout) with the given train fraction.
+    pub fn split(&self, train_frac: f64, rng: &mut Pcg32) -> (InfluenceDataset, InfluenceDataset) {
+        let mut idx: Vec<usize> = (0..self.episodes.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((idx.len() as f64) * train_frac).round() as usize;
+        let mut train = InfluenceDataset::new(self.dset_dim, self.u_dim);
+        let mut held = InfluenceDataset::new(self.dset_dim, self.u_dim);
+        for (k, &ep_i) in idx.iter().enumerate() {
+            let target = if k < n_train { &mut train } else { &mut held };
+            let ep = self.episodes[ep_i];
+            target.begin_episode();
+            for t in 0..ep.steps {
+                target.push(ep.d_row(self, t), ep.u_row(self, t));
+            }
+        }
+        (train, held)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> InfluenceDataset {
+        let mut d = InfluenceDataset::new(2, 1);
+        for ep in 0..4 {
+            d.begin_episode();
+            for t in 0..10 {
+                d.push(&[ep as f32, t as f32], &[(t % 2) as f32]);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn episode_indexing() {
+        let d = sample();
+        assert_eq!(d.total_steps(), 40);
+        assert_eq!(d.episodes.len(), 4);
+        let ep2 = d.episodes[2];
+        assert_eq!(ep2.d_row(&d, 3), &[2.0, 3.0]);
+        assert_eq!(ep2.u_row(&d, 3), &[1.0]);
+    }
+
+    #[test]
+    fn marginals() {
+        let d = sample();
+        assert!((d.u_marginals()[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_preserves_everything() {
+        let d = sample();
+        let mut rng = Pcg32::seeded(1);
+        let (tr, he) = d.split(0.75, &mut rng);
+        assert_eq!(tr.episodes.len(), 3);
+        assert_eq!(he.episodes.len(), 1);
+        assert_eq!(tr.total_steps() + he.total_steps(), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_episode")]
+    fn push_without_episode_panics() {
+        let mut d = InfluenceDataset::new(1, 1);
+        d.push(&[0.0], &[0.0]);
+    }
+}

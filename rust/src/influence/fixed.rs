@@ -1,0 +1,98 @@
+//! F-IALS predictor (Appendix E): influence sources modelled by a fixed
+//! marginal `P(u)` independent of the ALSH — either a hand-set constant
+//! (traffic: 0.1 / 0.5) or a marginal estimated from GS samples
+//! (warehouse).
+
+use super::{InfluencePredictor, InfluenceDataset};
+use crate::Result;
+
+pub struct FixedMarginalAip {
+    batch: usize,
+    dset_dim: usize,
+    /// Per-source marginal probability.
+    p: Vec<f32>,
+}
+
+impl FixedMarginalAip {
+    /// Same probability for every source (traffic F-IALS 0.1 / 0.5).
+    pub fn constant(batch: usize, dset_dim: usize, num_sources: usize, p: f32) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        FixedMarginalAip { batch, dset_dim, p: vec![p; num_sources] }
+    }
+
+    /// Per-source marginal estimated from a dataset collected under π₀
+    /// (warehouse F-IALS: P̂(u) from 10K GS samples).
+    pub fn from_data(batch: usize, data: &InfluenceDataset) -> Self {
+        let u = data.u_dim;
+        let mut counts = vec![0.0f64; u];
+        let mut n = 0usize;
+        for ep in &data.episodes {
+            let steps = ep.len(data);
+            for t in 0..steps {
+                let row = ep.u_row(data, t);
+                for (c, &x) in counts.iter_mut().zip(row) {
+                    *c += x as f64;
+                }
+            }
+            n += steps;
+        }
+        let p: Vec<f32> =
+            counts.iter().map(|&c| if n > 0 { (c / n as f64) as f32 } else { 0.0 }).collect();
+        FixedMarginalAip { batch, dset_dim: data.dset_dim, p }
+    }
+
+    pub fn marginals(&self) -> &[f32] {
+        &self.p
+    }
+}
+
+impl InfluencePredictor for FixedMarginalAip {
+    fn num_sources(&self) -> usize {
+        self.p.len()
+    }
+    fn dset_dim(&self) -> usize {
+        self.dset_dim
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn reset_state(&mut self, _env_idx: usize) {}
+    fn reset_all(&mut self) {}
+    fn predict(&mut self, _dsets: &[f32], probs: &mut [f32]) -> Result<()> {
+        let u = self.p.len();
+        debug_assert_eq!(probs.len(), self.batch * u);
+        for b in 0..self.batch {
+            probs[b * u..(b + 1) * u].copy_from_slice(&self.p);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_broadcasts() {
+        let mut aip = FixedMarginalAip::constant(3, 5, 2, 0.1);
+        let d = vec![0.0; 15];
+        let mut probs = vec![0.0; 6];
+        aip.predict(&d, &mut probs).unwrap();
+        assert!(probs.iter().all(|&x| x == 0.1));
+    }
+
+    #[test]
+    fn from_data_estimates_marginals() {
+        let mut data = InfluenceDataset::new(3, 2);
+        // Episode: u0 fires half the time, u1 never.
+        data.begin_episode();
+        for t in 0..100 {
+            let d = [0.0f32; 3];
+            let u = [if t % 2 == 0 { 1.0 } else { 0.0 }, 0.0];
+            data.push(&d, &u);
+        }
+        let aip = FixedMarginalAip::from_data(4, &data);
+        assert!((aip.marginals()[0] - 0.5).abs() < 1e-6);
+        assert_eq!(aip.marginals()[1], 0.0);
+    }
+}

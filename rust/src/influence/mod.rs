@@ -1,0 +1,103 @@
+//! The influence layer (paper §4): approximate influence predictors (AIPs)
+//! and their offline training/evaluation.
+//!
+//! An AIP estimates `Î_θ(u_t | d_t, history)` — the conditional probability
+//! of each binary influence source given the d-set features — and is
+//! sampled once per IALS step (Algorithm 2). Four implementations:
+//!
+//! | impl | paper condition |
+//! |------|-----------------|
+//! | [`NeuralAip`] (trained) | IALS |
+//! | [`NeuralAip`] (random init via [`NeuralAip::untrained`]) | untrained-IALS |
+//! | [`FixedMarginalAip`] | F-IALS (Appendix E) |
+//! | [`ReplayPredictor`] (test/bench oracle) | — |
+
+pub mod dataset;
+pub mod fixed;
+pub mod predictor;
+pub mod train;
+
+pub use dataset::InfluenceDataset;
+pub use fixed::FixedMarginalAip;
+pub use predictor::{AipArch, NeuralAip};
+pub use train::{evaluate_ce, train_fnn, train_gru};
+
+use crate::Result;
+
+/// A batched influence predictor. `batch` is fixed at construction (it must
+/// match the AOT-compiled artifact's leading dimension).
+pub trait InfluencePredictor {
+    /// Number of binary influence sources per environment.
+    fn num_sources(&self) -> usize;
+    /// d-set feature dimension (one timestep's slice).
+    fn dset_dim(&self) -> usize;
+    /// Batch width this predictor was built for.
+    fn batch(&self) -> usize;
+    /// Clear any recurrent state for environment row `i` (episode reset).
+    fn reset_state(&mut self, env_idx: usize);
+    /// Clear all recurrent state.
+    fn reset_all(&mut self);
+    /// Predict `P(u_t = 1)` for all envs: `dsets` is `[batch * dset_dim]`
+    /// env-major, `probs` is `[batch * num_sources]` env-major. Stateful
+    /// implementations advance their recurrent state.
+    fn predict(&mut self, dsets: &[f32], probs: &mut [f32]) -> Result<()>;
+}
+
+/// Test/diagnostic predictor that replays a fixed probability table row by
+/// row (cycling). Lives here rather than in tests because benches use it
+/// to isolate LS cost from AIP cost.
+pub struct ReplayPredictor {
+    pub batch: usize,
+    pub dset_dim: usize,
+    pub rows: Vec<Vec<f32>>,
+    pub cursor: usize,
+}
+
+impl InfluencePredictor for ReplayPredictor {
+    fn num_sources(&self) -> usize {
+        self.rows.first().map(|r| r.len()).unwrap_or(0)
+    }
+    fn dset_dim(&self) -> usize {
+        self.dset_dim
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn reset_state(&mut self, _env_idx: usize) {}
+    fn reset_all(&mut self) {
+        self.cursor = 0;
+    }
+    fn predict(&mut self, _dsets: &[f32], probs: &mut [f32]) -> Result<()> {
+        let u = self.num_sources();
+        for b in 0..self.batch {
+            let row = &self.rows[self.cursor % self.rows.len()];
+            probs[b * u..(b + 1) * u].copy_from_slice(row);
+        }
+        self.cursor += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_cycles_rows() {
+        let mut p = ReplayPredictor {
+            batch: 2,
+            dset_dim: 3,
+            rows: vec![vec![0.1, 0.9], vec![0.5, 0.5]],
+            cursor: 0,
+        };
+        let d = vec![0.0; 6];
+        let mut probs = vec![0.0; 4];
+        p.predict(&d, &mut probs).unwrap();
+        assert_eq!(probs, vec![0.1, 0.9, 0.1, 0.9]);
+        p.predict(&d, &mut probs).unwrap();
+        assert_eq!(probs, vec![0.5, 0.5, 0.5, 0.5]);
+        p.reset_all();
+        p.predict(&d, &mut probs).unwrap();
+        assert_eq!(probs, vec![0.1, 0.9, 0.1, 0.9]);
+    }
+}

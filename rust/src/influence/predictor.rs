@@ -1,0 +1,138 @@
+//! Neural influence predictors backed by the AOT-compiled artifacts:
+//! an FNN (traffic / memoryless warehouse) or a GRU with recurrent state
+//! per environment (warehouse) — the Pallas fused-GRU kernel runs inside
+//! the `*_step_*` artifact.
+
+use super::InfluencePredictor;
+use crate::nn::ParamStore;
+use crate::runtime::{DataArg, Runtime};
+use crate::Result;
+use anyhow::Context;
+use std::rc::Rc;
+
+/// Architecture, derived from the model's parameter names in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AipArch {
+    Fnn,
+    Gru { hidden: usize },
+}
+
+pub struct NeuralAip {
+    rt: Rc<Runtime>,
+    pub store: ParamStore,
+    pub model: String,
+    artifact: String,
+    arch: AipArch,
+    batch: usize,
+    dset_dim: usize,
+    u_dim: usize,
+    /// Recurrent state `[batch * hidden]` (GRU only).
+    h: Vec<f32>,
+}
+
+impl NeuralAip {
+    /// Build from the manifest for a given model + batch width, loading the
+    /// emitted initial parameters (call [`train::train_fnn`] /
+    /// [`train::train_gru`] afterwards for the trained-IALS condition).
+    pub fn new(rt: Rc<Runtime>, model: &str, batch: usize) -> Result<NeuralAip> {
+        let store = rt.load_store(model)?;
+        Self::with_store(rt, model, batch, store)
+    }
+
+    /// The untrained-IALS condition: a randomly re-initialized predictor.
+    pub fn untrained(rt: Rc<Runtime>, model: &str, batch: usize, seed: u64) -> Result<NeuralAip> {
+        let mut aip = Self::new(rt.clone(), model, batch)?;
+        let spec = rt.manifest.model(model)?.clone();
+        aip.store.reinit(&spec, seed ^ 0xBADC0FFEE);
+        Ok(aip)
+    }
+
+    pub fn with_store(
+        rt: Rc<Runtime>,
+        model: &str,
+        batch: usize,
+        store: ParamStore,
+    ) -> Result<NeuralAip> {
+        let spec = rt.manifest.model(model)?;
+        let arch = if spec.params.iter().any(|p| p.name == "w_x") {
+            let hidden = spec.param("w_h")?.shape[0];
+            AipArch::Gru { hidden }
+        } else {
+            AipArch::Fnn
+        };
+        let artifact = match arch {
+            AipArch::Fnn => format!("{model}_fwd_b{batch}"),
+            AipArch::Gru { .. } => format!("{model}_step_b{batch}"),
+        };
+        let art = rt
+            .manifest
+            .artifact(&artifact)
+            .with_context(|| format!("no artifact for model {model} at batch {batch}"))?;
+        // Derive dims from the artifact's data bindings.
+        let d_in = art
+            .data_inputs()
+            .find(|t| t.name == "d")
+            .context("artifact missing d input")?;
+        let dset_dim = *d_in.shape.last().unwrap();
+        let probs = art
+            .data_outputs()
+            .find(|t| t.name == "probs")
+            .context("artifact missing probs output")?;
+        let u_dim = *probs.shape.last().unwrap();
+        let h = match arch {
+            AipArch::Gru { hidden } => vec![0.0; batch * hidden],
+            AipArch::Fnn => Vec::new(),
+        };
+        Ok(NeuralAip { rt, store, model: model.to_string(), artifact, arch, batch, dset_dim, u_dim, h })
+    }
+
+    pub fn arch(&self) -> AipArch {
+        self.arch
+    }
+}
+
+impl InfluencePredictor for NeuralAip {
+    fn num_sources(&self) -> usize {
+        self.u_dim
+    }
+
+    fn dset_dim(&self) -> usize {
+        self.dset_dim
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn reset_state(&mut self, env_idx: usize) {
+        if let AipArch::Gru { hidden } = self.arch {
+            self.h[env_idx * hidden..(env_idx + 1) * hidden].fill(0.0);
+        }
+    }
+
+    fn reset_all(&mut self) {
+        self.h.fill(0.0);
+    }
+
+    fn predict(&mut self, dsets: &[f32], probs: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(dsets.len(), self.batch * self.dset_dim);
+        debug_assert_eq!(probs.len(), self.batch * self.u_dim);
+        match self.arch {
+            AipArch::Fnn => {
+                let outs =
+                    self.rt.call(&self.artifact, &mut self.store, &[DataArg::F32(dsets)])?;
+                probs.copy_from_slice(&outs[0]);
+            }
+            AipArch::Gru { .. } => {
+                let outs = self.rt.call(
+                    &self.artifact,
+                    &mut self.store,
+                    &[DataArg::F32(&self.h), DataArg::F32(dsets)],
+                )?;
+                probs.copy_from_slice(&outs[0]);
+                self.h.copy_from_slice(&outs[1]);
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,197 @@
+//! Offline AIP training (Eq. 3: expected cross-entropy on `(d_t, u_t)`
+//! pairs) and trajectory-level CE evaluation.
+//!
+//! Training drives the AOT-compiled `*_update` artifacts: the gradient /
+//! Adam math runs inside XLA; this module only assembles minibatches.
+
+use super::{InfluenceDataset, InfluencePredictor};
+use crate::nn::ParamStore;
+use crate::runtime::{DataArg, Runtime};
+use crate::util::Pcg32;
+use crate::Result;
+
+/// Train an FNN AIP. Returns the mean loss per epoch.
+pub fn train_fnn(
+    rt: &Runtime,
+    store: &mut ParamStore,
+    update_artifact: &str,
+    data: &InfluenceDataset,
+    epochs: usize,
+    minibatch: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    let n = data.total_steps();
+    anyhow::ensure!(n >= minibatch, "dataset ({n}) smaller than one minibatch ({minibatch})");
+    let mut order: Vec<usize> = (0..n).collect();
+    let lr_arr = [lr];
+    let (dd, ud) = (data.dset_dim, data.u_dim);
+    let mut d_buf = vec![0.0f32; minibatch * dd];
+    let mut u_buf = vec![0.0f32; minibatch * ud];
+    let mut epoch_losses = Vec::with_capacity(epochs);
+    for _ in 0..epochs {
+        rng.shuffle(&mut order);
+        let mut total = 0.0f64;
+        let mut batches = 0usize;
+        for chunk in order.chunks_exact(minibatch) {
+            for (row, &step) in chunk.iter().enumerate() {
+                d_buf[row * dd..(row + 1) * dd].copy_from_slice(data.d_at(step));
+                u_buf[row * ud..(row + 1) * ud].copy_from_slice(data.u_at(step));
+            }
+            let outs = rt.call(
+                update_artifact,
+                store,
+                &[DataArg::F32(&lr_arr), DataArg::F32(&d_buf), DataArg::F32(&u_buf)],
+            )?;
+            total += outs[0][0] as f64;
+            batches += 1;
+        }
+        epoch_losses.push((total / batches.max(1) as f64) as f32);
+    }
+    Ok(epoch_losses)
+}
+
+/// Train a GRU AIP on random contiguous windows (BPTT length = the
+/// artifact's compiled `T`). Returns the mean loss per epoch.
+#[allow(clippy::too_many_arguments)]
+pub fn train_gru(
+    rt: &Runtime,
+    store: &mut ParamStore,
+    update_artifact: &str,
+    data: &InfluenceDataset,
+    epochs: usize,
+    seq_b: usize,
+    seq_t: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    let eligible: Vec<usize> = (0..data.episodes.len())
+        .filter(|&i| data.episodes[i].steps >= seq_t)
+        .collect();
+    anyhow::ensure!(!eligible.is_empty(), "no episode long enough for BPTT window {seq_t}");
+    let lr_arr = [lr];
+    let (dd, ud) = (data.dset_dim, data.u_dim);
+    let mut seqs = vec![0.0f32; seq_b * seq_t * dd];
+    let mut targets = vec![0.0f32; seq_b * seq_t * ud];
+    let iters_per_epoch = (data.total_steps() / (seq_b * seq_t)).max(1);
+    let mut epoch_losses = Vec::with_capacity(epochs);
+    for _ in 0..epochs {
+        let mut total = 0.0f64;
+        for _ in 0..iters_per_epoch {
+            for b in 0..seq_b {
+                let ep = data.episodes[*rng.choose_ref(&eligible)];
+                let start = rng.below(ep.steps - seq_t + 1);
+                for t in 0..seq_t {
+                    let off_d = (b * seq_t + t) * dd;
+                    let off_u = (b * seq_t + t) * ud;
+                    seqs[off_d..off_d + dd].copy_from_slice(ep.d_row(data, start + t));
+                    targets[off_u..off_u + ud].copy_from_slice(ep.u_row(data, start + t));
+                }
+            }
+            let outs = rt.call(
+                update_artifact,
+                store,
+                &[DataArg::F32(&lr_arr), DataArg::F32(&seqs), DataArg::F32(&targets)],
+            )?;
+            total += outs[0][0] as f64;
+        }
+        epoch_losses.push((total / iters_per_epoch as f64) as f32);
+    }
+    Ok(epoch_losses)
+}
+
+/// Trajectory-level mean cross-entropy of any predictor on a dataset —
+/// the number reported in the paper's bottom bar charts (Figs 3/5/10–12).
+/// Episodes are processed in chunks of `predictor.batch()`, stepping the
+/// (possibly recurrent) predictor through time.
+pub fn evaluate_ce(
+    predictor: &mut dyn InfluencePredictor,
+    data: &InfluenceDataset,
+) -> Result<f32> {
+    let b = predictor.batch();
+    let dd = data.dset_dim;
+    let ud = predictor.num_sources();
+    anyhow::ensure!(dd == predictor.dset_dim(), "d-set dim mismatch");
+    anyhow::ensure!(ud == data.u_dim, "influence dim mismatch");
+    let eps = 1e-7f32;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    let mut dsets = vec![0.0f32; b * dd];
+    let mut probs = vec![0.0f32; b * ud];
+    for chunk in data.episodes.chunks(b) {
+        predictor.reset_all();
+        let max_len = chunk.iter().map(|e| e.steps).max().unwrap_or(0);
+        for t in 0..max_len {
+            dsets.fill(0.0);
+            for (row, ep) in chunk.iter().enumerate() {
+                if t < ep.steps {
+                    dsets[row * dd..(row + 1) * dd].copy_from_slice(ep.d_row(data, t));
+                }
+            }
+            predictor.predict(&dsets, &mut probs)?;
+            for (row, ep) in chunk.iter().enumerate() {
+                if t < ep.steps {
+                    let u = ep.u_row(data, t);
+                    for (k, &y) in u.iter().enumerate() {
+                        let p = probs[row * ud + k].clamp(eps, 1.0 - eps);
+                        total -= (y * p.ln() + (1.0 - y) * (1.0 - p).ln()) as f64;
+                        count += 1;
+                    }
+                }
+            }
+        }
+    }
+    Ok(if count == 0 { 0.0 } else { (total / count as f64) as f32 })
+}
+
+trait ChooseRef {
+    fn choose_ref<'a, T>(&mut self, xs: &'a [T]) -> &'a T;
+}
+
+impl ChooseRef for Pcg32 {
+    fn choose_ref<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::influence::FixedMarginalAip;
+
+    fn dataset_with_marginal(p: f32, steps: usize) -> InfluenceDataset {
+        let mut d = InfluenceDataset::new(2, 1);
+        let mut rng = Pcg32::seeded(5);
+        d.begin_episode();
+        for _ in 0..steps {
+            let u = if rng.bernoulli(p) { 1.0 } else { 0.0 };
+            d.push(&[0.0, 1.0], &[u]);
+        }
+        d
+    }
+
+    #[test]
+    fn ce_of_true_marginal_is_entropy() {
+        let p = 0.3f64;
+        let data = dataset_with_marginal(p as f32, 20000);
+        let mut aip = FixedMarginalAip::constant(4, 2, 1, p as f32);
+        let ce = evaluate_ce(&mut aip, &data).unwrap() as f64;
+        let entropy = -(p * p.ln() + (1.0 - p) * (1.0 - p).ln());
+        assert!((ce - entropy).abs() < 0.02, "ce={ce:.4} H={entropy:.4}");
+    }
+
+    #[test]
+    fn ce_of_wrong_marginal_is_higher() {
+        let data = dataset_with_marginal(0.1, 10000);
+        let mut right = FixedMarginalAip::constant(4, 2, 1, 0.1);
+        let mut wrong = FixedMarginalAip::constant(4, 2, 1, 0.5);
+        let ce_r = evaluate_ce(&mut right, &data).unwrap();
+        let ce_w = evaluate_ce(&mut wrong, &data).unwrap();
+        assert!(
+            ce_w > ce_r + 0.2,
+            "mis-specified marginal must score worse: {ce_r} vs {ce_w}"
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! # ials — Influence-Augmented Local Simulators for fast deep RL
+//!
+//! Reproduction of *"Influence-Augmented Local Simulators: a Scalable
+//! Solution for Fast Deep RL in Large Networked Systems"* (Suau, He, Spaan,
+//! Oliehoek — ICML 2022) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is **Layer 3**: it owns the simulators, the influence layer,
+//! the PPO training loop and all orchestration. Neural computation (policy
+//! forward, PPO update, influence-predictor forward/training) is executed
+//! through AOT-compiled XLA artifacts (`artifacts/*.hlo.txt`, produced once
+//! by `python/compile/aot.py` from JAX/Pallas sources) via the PJRT C API —
+//! Python never runs on the request path.
+//!
+//! ## Module map
+//!
+//! | Module | Role |
+//! |--------|------|
+//! | [`core`] | `Environment` / `VecEnv` traits, history buffers, wrappers |
+//! | [`sim`] | the two benchmark domains: traffic grid + warehouse (GS & LS) |
+//! | [`influence`] | AIP implementations (neural / untrained / fixed / replay) |
+//! | [`ials`] | Algorithm 2: local simulator + AIP = drop-in environment |
+//! | [`collect`] | Algorithm 1: (d-set, influence-source) dataset collection |
+//! | [`runtime`] | PJRT client, artifact manifest, compiled-executable cache |
+//! | [`nn`] | flat parameter store + Adam state + checkpoints |
+//! | [`rl`] | GAE, rollout buffer, PPO driver |
+//! | [`coordinator`] | trainers, evaluators, experiment harnesses per figure |
+//! | [`dbn`] | dynamic-Bayesian-network d-separation / minimal d-set search |
+//! | [`config`] | TOML-subset parser + typed experiment schema |
+//! | [`metrics`] | CSV learning curves, run summaries |
+//! | [`util`] | PRNG, stats, logging, timing |
+//! | [`testkit`] | seeded property-testing mini-framework |
+//! | [`bench_harness`] | warmup/repeat/percentile benchmark runner |
+
+pub mod bench_harness;
+pub mod cli;
+pub mod collect;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod dbn;
+pub mod ials;
+pub mod influence;
+pub mod metrics;
+pub mod nn;
+pub mod rl;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

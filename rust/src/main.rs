@@ -1,0 +1,99 @@
+//! `repro` — the leader binary: CLI entrypoint for reproducing every
+//! figure of the IALS paper. See `repro --help` / [`ials::cli::USAGE`].
+
+use anyhow::Result;
+use ials::cli::{Args, USAGE};
+use ials::collect::{collect_dataset, FeatureKind};
+use ials::config::{DomainKind, ExperimentConfig};
+use ials::coordinator::{run_condition, run_figure, FIGURES};
+use ials::metrics::write_curve;
+use ials::runtime::Runtime;
+use ials::sim::traffic::TrafficGlobalEnv;
+use ials::sim::warehouse::WarehouseGlobalEnv;
+use std::rc::Rc;
+
+fn main() {
+    ials::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.iter().any(|a| a == "--help" || a == "-h") || argv.is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    match args.get("config") {
+        Some(path) => ExperimentConfig::load(path),
+        None => Ok(ExperimentConfig::default()),
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "figure" => {
+            let name = args.require("name")?.to_string();
+            let cfg = load_config(&args)?;
+            let rt = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+            run_figure(&rt, &name, &cfg)?;
+        }
+        "train" => {
+            let mut cfg = load_config(&args)?;
+            if args.get("config").is_none() {
+                anyhow::bail!("train requires --config");
+            }
+            let seed = args.get_u64("seed", cfg.seeds[0])?;
+            if let Some(steps) = args.get("steps") {
+                cfg.ppo.total_steps = steps.parse()?;
+            }
+            let rt = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+            let r = run_condition(&rt, &cfg, seed)?;
+            let out = format!("{}/{}_seed{}.csv", cfg.results_dir, r.condition, seed);
+            write_curve(&out, &r.curve)?;
+            println!(
+                "condition {} seed {}: prep {:.2}s train {:.2}s aip_ce {:.4} final {:.4} -> {}",
+                r.condition, seed, r.prep_secs, r.train_secs, r.aip_ce, r.final_eval, out
+            );
+        }
+        "collect" => {
+            let domain = DomainKind::parse(args.require("domain")?)?;
+            let steps = args.get_usize("steps", 10_000)?;
+            let seed = args.get_u64("seed", 1)?;
+            let cfg = load_config(&args)?;
+            let data = match domain {
+                DomainKind::Traffic => {
+                    let mut env = TrafficGlobalEnv::new(&cfg.traffic);
+                    collect_dataset(&mut env, steps, seed, FeatureKind::Dset)
+                }
+                DomainKind::Warehouse => {
+                    let mut env = WarehouseGlobalEnv::new(&cfg.warehouse);
+                    collect_dataset(&mut env, steps, seed, FeatureKind::Dset)
+                }
+            };
+            println!(
+                "collected {} steps / {} episodes; u marginals: {:?}",
+                data.total_steps(),
+                data.episodes.len(),
+                data.u_marginals()
+            );
+        }
+        "list" => {
+            println!("figures: {FIGURES:?}");
+            let cfg = load_config(&args)?;
+            if let Ok(rt) = Runtime::load(&cfg.artifacts_dir) {
+                println!("artifacts ({}):", rt.manifest.artifacts.len());
+                for name in rt.manifest.artifacts.keys() {
+                    println!("  {name}");
+                }
+            } else {
+                println!("artifacts: none (run `make artifacts`)");
+            }
+        }
+        other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Experiment metrics: learning-curve points (the paper plots reward vs
+//! *wall-clock time*), per-condition summaries, and CSV writers.
+
+use crate::rl::PpoStats;
+use crate::util::csv::CsvWriter;
+use crate::Result;
+use std::path::Path;
+
+/// One point of a learning curve (paper Figs 3/5/6/10–12 top panels).
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    /// Training wall-clock seconds (AIP preparation time included as an
+    /// offset, evaluation time excluded — the paper's protocol).
+    pub wall_clock_s: f64,
+    pub env_steps: usize,
+    pub eval_mean: f64,
+    pub eval_std: f64,
+    pub stats: PpoStats,
+}
+
+/// Result of training one condition with one seed.
+#[derive(Debug, Clone)]
+pub struct ConditionResult {
+    pub condition: String,
+    pub seed: u64,
+    pub curve: Vec<CurvePoint>,
+    /// AIP preparation (dataset collection + offline training) seconds.
+    pub prep_secs: f64,
+    /// PPO training seconds (excluding evaluations).
+    pub train_secs: f64,
+    /// Held-out cross-entropy of the influence predictor (paper's bottom
+    /// bar charts); NaN for the GS condition.
+    pub aip_ce: f64,
+    pub final_eval: f64,
+}
+
+impl ConditionResult {
+    pub fn total_secs(&self) -> f64 {
+        self.prep_secs + self.train_secs
+    }
+}
+
+/// Write a curve CSV: one row per evaluation point.
+pub fn write_curve(path: impl AsRef<Path>, curve: &[CurvePoint]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "wall_clock_s",
+            "env_steps",
+            "eval_mean",
+            "eval_std",
+            "rollout_reward",
+            "entropy",
+            "approx_kl",
+            "v_loss",
+        ],
+    )?;
+    for p in curve {
+        w.row(&[
+            p.wall_clock_s,
+            p.env_steps as f64,
+            p.eval_mean,
+            p.eval_std,
+            p.stats.rollout_reward as f64,
+            p.stats.entropy as f64,
+            p.stats.approx_kl as f64,
+            p.stats.v_loss as f64,
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Append-style summary writer for a whole figure run.
+pub struct SummaryWriter {
+    w: CsvWriter,
+}
+
+impl SummaryWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<SummaryWriter> {
+        Ok(SummaryWriter {
+            w: CsvWriter::create(
+                path,
+                &[
+                    "condition",
+                    "seed",
+                    "prep_secs",
+                    "train_secs",
+                    "total_secs",
+                    "aip_ce",
+                    "final_eval",
+                ],
+            )?,
+        })
+    }
+
+    pub fn add(&mut self, r: &ConditionResult) -> Result<()> {
+        self.w.row_str(&[
+            r.condition.clone(),
+            r.seed.to_string(),
+            format!("{:.3}", r.prep_secs),
+            format!("{:.3}", r.train_secs),
+            format!("{:.3}", r.total_secs()),
+            format!("{:.4}", r.aip_ce),
+            format!("{:.4}", r.final_eval),
+        ])?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_roundtrip() {
+        let dir = std::env::temp_dir().join("ials_metrics_test");
+        let path = dir.join("curve.csv");
+        let curve = vec![CurvePoint {
+            wall_clock_s: 1.5,
+            env_steps: 2048,
+            eval_mean: 0.7,
+            eval_std: 0.1,
+            stats: PpoStats::default(),
+        }];
+        write_curve(&path, &curve).unwrap();
+        let (header, rows) = crate::util::csv::read_numeric(&path).unwrap();
+        assert_eq!(header[0], "wall_clock_s");
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0][1], 2048.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

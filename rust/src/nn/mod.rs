@@ -1,0 +1,258 @@
+//! Neural-network parameter store: the host-side home of every model's
+//! weights and Adam state. Parameters are loaded once from the AOT
+//! emitter's `<model>.params.bin`, handed to compiled artifacts as leading
+//! arguments on every call, and written back by training artifacts.
+
+use crate::runtime::manifest::ModelSpec;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Unique id per store instance (keys the runtime's device-buffer cache).
+static STORE_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Flat f32 tensors for one model, ordered as in the manifest.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub model: String,
+    names: Vec<String>,
+    tensors: Vec<Vec<f32>>,
+    index: BTreeMap<String, usize>,
+    /// Identity + mutation counter: the runtime caches device-resident
+    /// copies of the parameters and invalidates on (id, version) change.
+    id: u64,
+    version: u64,
+}
+
+impl ParamStore {
+    /// Build a zero-initialized store for a model spec.
+    pub fn zeros(spec: &ModelSpec) -> ParamStore {
+        let names: Vec<String> = spec.params.iter().map(|p| p.name.clone()).collect();
+        let tensors: Vec<Vec<f32>> = spec.params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let index = names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        ParamStore {
+            model: spec.name.clone(),
+            names,
+            tensors,
+            index,
+            id: STORE_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            version: 0,
+        }
+    }
+
+    /// (identity, mutation counter) for device-buffer cache keys.
+    pub fn cache_key(&self) -> (u64, u64) {
+        (self.id, self.version)
+    }
+
+    /// Mutable access to a tensor (bumps the version — device caches of
+    /// this store are invalidated).
+    pub fn tensor_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        let &i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("model {}: no tensor '{name}'", self.model))?;
+        self.version += 1;
+        Ok(&mut self.tensors[i])
+    }
+
+    /// Load from a raw little-endian f32 blob (`<model>.params.bin`).
+    pub fn load_bin(spec: &ModelSpec, path: impl AsRef<Path>) -> Result<ParamStore> {
+        let mut store = Self::zeros(spec);
+        let mut file = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let expected = spec.total_numel() * 4;
+        anyhow::ensure!(
+            bytes.len() == expected,
+            "param blob {}: {} bytes, expected {}",
+            path.as_ref().display(),
+            bytes.len(),
+            expected
+        );
+        let mut off = 0usize;
+        for t in &mut store.tensors {
+            for x in t.iter_mut() {
+                *x = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+        }
+        Ok(store)
+    }
+
+    /// Save the current state as the same blob format (checkpointing).
+    pub fn save_bin(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        for t in &self.tensors {
+            for x in t {
+                out.write_all(&x.to_le_bytes())?;
+            }
+        }
+        out.flush()?;
+        Ok(())
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        let &i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("model {}: no tensor '{name}'", self.model))?;
+        Ok(&self.tensors[i])
+    }
+
+    pub fn set(&mut self, name: &str, values: &[f32]) -> Result<()> {
+        let &i = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("model {}: no tensor '{name}'", self.model))?;
+        anyhow::ensure!(
+            self.tensors[i].len() == values.len(),
+            "tensor '{name}': size {} != {}",
+            values.len(),
+            self.tensors[i].len()
+        );
+        self.tensors[i].copy_from_slice(values);
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Reset the Adam slots (m.*, v.*, adam_t) to zero — used when reusing
+    /// a network for a fresh training run.
+    pub fn reset_adam(&mut self) {
+        for (i, n) in self.names.iter().enumerate() {
+            if n.starts_with("m.") || n.starts_with("v.") || n == "adam_t" {
+                self.tensors[i].fill(0.0);
+            }
+        }
+        self.version += 1;
+    }
+
+    /// Re-randomize base parameters with a seeded generator (fresh init for
+    /// per-seed experiment repetitions; matches the emitter's Glorot scheme
+    /// in distribution, not bit-for-bit).
+    pub fn reinit(&mut self, spec: &ModelSpec, seed: u64) {
+        use crate::util::Pcg32;
+        self.version += 1;
+        let mut rng = Pcg32::seeded(seed);
+        for (i, p) in spec.params.iter().enumerate() {
+            if p.name.starts_with("m.") || p.name.starts_with("v.") || p.name == "adam_t" {
+                self.tensors[i].fill(0.0);
+                continue;
+            }
+            if p.shape.len() == 1 {
+                self.tensors[i].fill(0.0);
+            } else {
+                let (fi, fo) = (p.shape[0] as f32, p.shape[1] as f32);
+                let mut scale = (2.0 / (fi + fo)).sqrt();
+                if p.name == "w_pi" || p.name == "w_v" {
+                    scale *= 0.1;
+                }
+                for x in self.tensors[i].iter_mut() {
+                    *x = rng.normal() * scale;
+                }
+            }
+        }
+    }
+
+    /// L2 norm of the base (non-Adam) parameters — a cheap training probe.
+    pub fn param_norm(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for (n, t) in self.names.iter().zip(&self.tensors) {
+            if n.starts_with("m.") || n.starts_with("v.") || n == "adam_t" {
+                continue;
+            }
+            for &x in t {
+                acc += (x as f64) * (x as f64);
+            }
+        }
+        acc.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, TensorSpec};
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "tiny".into(),
+            params: vec![
+                TensorSpec { name: "w".into(), dtype: DType::F32, shape: vec![2, 3] },
+                TensorSpec { name: "b".into(), dtype: DType::F32, shape: vec![3] },
+                TensorSpec { name: "m.w".into(), dtype: DType::F32, shape: vec![2, 3] },
+                TensorSpec { name: "adam_t".into(), dtype: DType::F32, shape: vec![1] },
+            ],
+        }
+    }
+
+    #[test]
+    fn zeros_get_set() {
+        let mut st = ParamStore::zeros(&spec());
+        assert_eq!(st.get("w").unwrap().len(), 6);
+        st.set("b", &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(st.get("b").unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(st.set("b", &[1.0]).is_err());
+        assert!(st.get("nope").is_err());
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let dir = std::env::temp_dir().join("ials_nn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.params.bin");
+        let mut st = ParamStore::zeros(&spec());
+        st.set("w", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        st.set("adam_t", &[7.0]).unwrap();
+        st.save_bin(&path).unwrap();
+        let st2 = ParamStore::load_bin(&spec(), &path).unwrap();
+        assert_eq!(st2.get("w").unwrap(), st.get("w").unwrap());
+        assert_eq!(st2.get("adam_t").unwrap(), &[7.0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn wrong_blob_size_rejected() {
+        let dir = std::env::temp_dir().join("ials_nn_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 12]).unwrap();
+        assert!(ParamStore::load_bin(&spec(), &path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn reset_adam_clears_only_adam() {
+        let mut st = ParamStore::zeros(&spec());
+        st.set("w", &[1.0; 6]).unwrap();
+        st.set("m.w", &[2.0; 6]).unwrap();
+        st.set("adam_t", &[3.0]).unwrap();
+        st.reset_adam();
+        assert_eq!(st.get("w").unwrap(), &[1.0; 6]);
+        assert_eq!(st.get("m.w").unwrap(), &[0.0; 6]);
+        assert_eq!(st.get("adam_t").unwrap(), &[0.0]);
+    }
+
+    #[test]
+    fn reinit_randomizes_weights_only() {
+        let mut st = ParamStore::zeros(&spec());
+        st.set("m.w", &[5.0; 6]).unwrap();
+        st.reinit(&spec(), 42);
+        assert!(st.get("w").unwrap().iter().any(|&x| x != 0.0));
+        assert_eq!(st.get("m.w").unwrap(), &[0.0; 6]);
+        assert!(st.param_norm() > 0.0);
+        // deterministic
+        let mut st2 = ParamStore::zeros(&spec());
+        st2.reinit(&spec(), 42);
+        assert_eq!(st.get("w").unwrap(), st2.get("w").unwrap());
+    }
+}

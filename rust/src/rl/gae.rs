@@ -1,0 +1,151 @@
+//! Generalized advantage estimation (Schulman et al. 2016).
+//!
+//! Time-major layout: index `t * B + i` for step `t`, environment `i`.
+//! `dones[t*B+i]` marks that env `i`'s episode ended *at* step `t` (the
+//! value bootstrap across that boundary is cut).
+
+/// Compute advantages and returns in place.
+///
+/// * `rewards`, `dones`: `[T*B]`
+/// * `values`: `[T*B]` — V(s_t) under the rollout policy
+/// * `bootstrap`: `[B]` — V(s_T) of the observation after the last step
+/// * outputs `advantages`, `returns_`: `[T*B]`
+#[allow(clippy::too_many_arguments)]
+pub fn compute_gae(
+    rewards: &[f32],
+    dones: &[bool],
+    values: &[f32],
+    bootstrap: &[f32],
+    gamma: f32,
+    lam: f32,
+    advantages: &mut [f32],
+    returns_: &mut [f32],
+) {
+    let b = bootstrap.len();
+    assert!(b > 0);
+    let t_len = rewards.len() / b;
+    assert_eq!(rewards.len(), t_len * b);
+    assert_eq!(dones.len(), t_len * b);
+    assert_eq!(values.len(), t_len * b);
+    assert_eq!(advantages.len(), t_len * b);
+    assert_eq!(returns_.len(), t_len * b);
+
+    for i in 0..b {
+        let mut gae = 0.0f32;
+        for t in (0..t_len).rev() {
+            let idx = t * b + i;
+            let not_done = if dones[idx] { 0.0 } else { 1.0 };
+            let next_value = if t + 1 < t_len { values[(t + 1) * b + i] } else { bootstrap[i] };
+            let delta = rewards[idx] + gamma * next_value * not_done - values[idx];
+            gae = delta + gamma * lam * not_done * gae;
+            advantages[idx] = gae;
+            returns_[idx] = gae + values[idx];
+        }
+    }
+}
+
+/// Normalize advantages to zero mean / unit std (standard PPO practice).
+pub fn normalize(advantages: &mut [f32]) {
+    let n = advantages.len() as f32;
+    let mean = advantages.iter().sum::<f32>() / n;
+    let var = advantages.iter().map(|a| (a - mean).powi(2)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-8);
+    for a in advantages.iter_mut() {
+        *a = (*a - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_single_env() {
+        // adv = r + gamma*V' - V
+        let mut adv = [0.0f32];
+        let mut ret = [0.0f32];
+        compute_gae(&[1.0], &[false], &[0.5], &[2.0], 0.9, 0.95, &mut adv, &mut ret);
+        let delta = 1.0 + 0.9 * 2.0 - 0.5;
+        assert!((adv[0] - delta).abs() < 1e-6);
+        assert!((ret[0] - (delta + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn done_cuts_bootstrap() {
+        let mut adv = [0.0f32];
+        let mut ret = [0.0f32];
+        compute_gae(&[1.0], &[true], &[0.5], &[100.0], 0.9, 0.95, &mut adv, &mut ret);
+        assert!((adv[0] - (1.0 - 0.5)).abs() < 1e-6, "bootstrap must be ignored at done");
+    }
+
+    #[test]
+    fn matches_manual_two_steps() {
+        // T=2, B=1, no dones.
+        let (g, l) = (0.99f32, 0.95f32);
+        let rewards = [1.0f32, 2.0];
+        let values = [0.3f32, 0.6];
+        let boot = [0.9f32];
+        let mut adv = [0.0f32; 2];
+        let mut ret = [0.0f32; 2];
+        compute_gae(&rewards, &[false, false], &values, &boot, g, l, &mut adv, &mut ret);
+        let d1 = 2.0 + g * 0.9 - 0.6;
+        let d0 = 1.0 + g * 0.6 - 0.3;
+        assert!((adv[1] - d1).abs() < 1e-6);
+        assert!((adv[0] - (d0 + g * l * d1)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gamma_zero_is_td_error() {
+        let rewards = [1.0f32, 0.5, 2.0];
+        let values = [0.2f32, 0.4, 0.1];
+        let mut adv = [0.0f32; 3];
+        let mut ret = [0.0f32; 3];
+        compute_gae(
+            &rewards,
+            &[false; 3],
+            &values,
+            &[0.0],
+            0.0,
+            0.95,
+            &mut adv,
+            &mut ret,
+        );
+        for t in 0..3 {
+            assert!((adv[t] - (rewards[t] - values[t])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn multi_env_layout_independent_streams() {
+        // Two envs with identical data must produce identical advantages.
+        let b = 2;
+        let t_len = 4;
+        let mut rewards = vec![0.0f32; t_len * b];
+        let mut values = vec![0.0f32; t_len * b];
+        let mut dones = vec![false; t_len * b];
+        for t in 0..t_len {
+            for i in 0..b {
+                rewards[t * b + i] = (t as f32) * 0.5;
+                values[t * b + i] = 0.1 * t as f32;
+            }
+        }
+        dones[1 * b] = true; // env0 episode ends at t=1
+        dones[1 * b + 1] = true;
+        let mut adv = vec![0.0f32; t_len * b];
+        let mut ret = vec![0.0f32; t_len * b];
+        compute_gae(&rewards, &dones, &values, &[0.7, 0.7], 0.99, 0.95, &mut adv, &mut ret);
+        for t in 0..t_len {
+            assert_eq!(adv[t * b], adv[t * b + 1], "env streams must be independent");
+        }
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        normalize(&mut xs);
+        let mean: f32 = xs.iter().sum::<f32>() / 5.0;
+        let var: f32 = xs.iter().map(|x| x * x).sum::<f32>() / 5.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+}

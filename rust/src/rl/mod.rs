@@ -1,0 +1,20 @@
+//! The RL stack: PPO (Schulman et al. 2017) orchestrated from Rust, with
+//! all neural computation in AOT-compiled XLA artifacts.
+//!
+//! Split of responsibilities:
+//! * [`gae`] — generalized advantage estimation (pure Rust, O(T·B)).
+//! * [`rollout`] — on-policy experience storage in flat, minibatch-ready
+//!   layout.
+//! * [`policy`] — handle around the policy model's artifacts (batched
+//!   forward, single forward, minibatch update).
+//! * [`ppo`] — the trainer: collect → GAE → epochs of minibatch updates.
+
+pub mod gae;
+pub mod policy;
+pub mod ppo;
+pub mod rollout;
+
+pub use gae::compute_gae;
+pub use policy::Policy;
+pub use ppo::{PpoStats, PpoTrainer};
+pub use rollout::RolloutBuffer;

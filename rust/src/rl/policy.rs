@@ -1,0 +1,196 @@
+//! Handle around one policy model's compiled artifacts: batched forward
+//! (rollout), single forward (evaluation) and the PPO minibatch update.
+
+use crate::config::PpoConfig;
+use crate::nn::ParamStore;
+use crate::runtime::{DataArg, Runtime};
+use crate::util::stats::log_prob_from_logits;
+use crate::util::Pcg32;
+use crate::Result;
+use anyhow::Context;
+use std::rc::Rc;
+
+pub struct Policy {
+    rt: Rc<Runtime>,
+    pub store: ParamStore,
+    pub model: String,
+    fwd_b: String,
+    fwd_1: String,
+    update: String,
+    update_fused: Option<String>,
+    pub batch: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub minibatch: usize,
+    /// (epochs, N) geometry of the fused update artifact, if present.
+    pub fused_geom: Option<(usize, usize)>,
+}
+
+impl Policy {
+    pub fn new(rt: Rc<Runtime>, model: &str, batch: usize) -> Result<Policy> {
+        let store = rt.load_store(model)?;
+        let fwd_b = format!("{model}_fwd_b{batch}");
+        let fwd_1 = format!("{model}_fwd_b1");
+        let update = format!("{model}_update");
+        let art = rt
+            .manifest
+            .artifact(&fwd_b)
+            .with_context(|| format!("no forward artifact for {model} at batch {batch}"))?;
+        let obs = art.data_inputs().find(|t| t.name == "obs").context("obs input")?;
+        let obs_dim = *obs.shape.last().unwrap();
+        let logits = art.data_outputs().find(|t| t.name == "logits").context("logits")?;
+        let act_dim = *logits.shape.last().unwrap();
+        let upd = rt.manifest.artifact(&update)?;
+        let mb_obs = upd.data_inputs().find(|t| t.name == "obs").context("update obs")?;
+        let minibatch = mb_obs.shape[0];
+        // Prefer the fused whole-phase update when the artifact exists
+        // (one PJRT call per PPO iteration instead of epochs×minibatches).
+        let fused_name = format!("{model}_update_fused");
+        let (update_fused, fused_geom) = match rt.manifest.artifact(&fused_name) {
+            Ok(art) => {
+                let perm = art
+                    .data_inputs()
+                    .find(|t| t.name == "perm")
+                    .context("fused update perm input")?;
+                (Some(fused_name), Some((perm.shape[0], perm.shape[1])))
+            }
+            Err(_) => (None, None),
+        };
+        Ok(Policy {
+            rt,
+            store,
+            model: model.to_string(),
+            fwd_b,
+            fwd_1,
+            update,
+            update_fused,
+            batch,
+            obs_dim,
+            act_dim,
+            minibatch,
+            fused_geom,
+        })
+    }
+
+    /// Fresh per-seed initialization (keeps the artifact, re-rolls weights).
+    pub fn reinit(&mut self, seed: u64) -> Result<()> {
+        let spec = self.rt.manifest.model(&self.model)?.clone();
+        self.store.reinit(&spec, seed);
+        Ok(())
+    }
+
+    /// Batched forward: `obs` is `[batch * obs_dim]`. Returns
+    /// (logits `[batch * act_dim]`, values `[batch]`).
+    pub fn forward(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut outs = self.rt.call(&self.fwd_b, &mut self.store, &[DataArg::F32(obs)])?;
+        let values = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok((logits, values))
+    }
+
+    /// Single-observation forward (GS evaluation path).
+    pub fn forward1(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let mut outs = self.rt.call(&self.fwd_1, &mut self.store, &[DataArg::F32(obs)])?;
+        let values = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok((logits, values[0]))
+    }
+
+    /// Sample actions (and log-probs) from batched logits.
+    pub fn sample_actions(
+        &self,
+        logits: &[f32],
+        rng: &mut Pcg32,
+        actions: &mut [usize],
+        log_probs: &mut [f32],
+    ) {
+        let a = self.act_dim;
+        for i in 0..actions.len() {
+            let row = &logits[i * a..(i + 1) * a];
+            let act = rng.categorical_from_logits(row);
+            actions[i] = act;
+            log_probs[i] = log_prob_from_logits(row, act);
+        }
+    }
+
+    /// One PPO minibatch update; returns stats
+    /// `[total, pg_loss, v_loss, entropy, approx_kl]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_minibatch(
+        &mut self,
+        cfg: &PpoConfig,
+        obs: &[f32],
+        actions: &[i32],
+        advantages: &[f32],
+        returns_: &[f32],
+        old_logp: &[f32],
+    ) -> Result<[f32; 5]> {
+        let lr = [cfg.lr];
+        let clip = [cfg.clip];
+        let vf = [cfg.vf_coef];
+        let ent = [cfg.ent_coef];
+        let mgn = [cfg.max_grad_norm];
+        let outs = self.rt.call(
+            &self.update,
+            &mut self.store,
+            &[
+                DataArg::F32(&lr),
+                DataArg::F32(&clip),
+                DataArg::F32(&vf),
+                DataArg::F32(&ent),
+                DataArg::F32(&mgn),
+                DataArg::F32(obs),
+                DataArg::I32(actions),
+                DataArg::F32(advantages),
+                DataArg::F32(returns_),
+                DataArg::F32(old_logp),
+            ],
+        )?;
+        let s = &outs[0];
+        Ok([s[0], s[1], s[2], s[3], s[4]])
+    }
+
+    /// The fused whole-phase PPO update: all epochs and minibatches in one
+    /// compiled call. `perm` is `[epochs * n]` int32 shuffled indices.
+    /// Returns averaged stats. Errors if the fused artifact is absent.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_fused(
+        &mut self,
+        cfg: &PpoConfig,
+        perm: &[i32],
+        obs: &[f32],
+        actions: &[i32],
+        advantages: &[f32],
+        returns_: &[f32],
+        old_logp: &[f32],
+    ) -> Result<[f32; 5]> {
+        let name = self
+            .update_fused
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no fused update artifact for {}", self.model))?;
+        let lr = [cfg.lr];
+        let clip = [cfg.clip];
+        let vf = [cfg.vf_coef];
+        let ent = [cfg.ent_coef];
+        let mgn = [cfg.max_grad_norm];
+        let outs = self.rt.call(
+            &name,
+            &mut self.store,
+            &[
+                DataArg::F32(&lr),
+                DataArg::F32(&clip),
+                DataArg::F32(&vf),
+                DataArg::F32(&ent),
+                DataArg::F32(&mgn),
+                DataArg::I32(perm),
+                DataArg::F32(obs),
+                DataArg::I32(actions),
+                DataArg::F32(advantages),
+                DataArg::F32(returns_),
+                DataArg::F32(old_logp),
+            ],
+        )?;
+        let s = &outs[0];
+        Ok([s[0], s[1], s[2], s[3], s[4]])
+    }
+}

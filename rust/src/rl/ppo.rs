@@ -1,0 +1,195 @@
+//! The PPO trainer: collect a rollout from any [`VecEnv`], run GAE, then
+//! several epochs of shuffled minibatch updates through the compiled
+//! `*_update` artifact.
+
+use super::gae::{compute_gae, normalize};
+use super::policy::Policy;
+use super::rollout::RolloutBuffer;
+use crate::config::PpoConfig;
+use crate::core::VecEnv;
+use crate::util::Pcg32;
+use crate::Result;
+
+/// Aggregated statistics of one `train_iteration`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PpoStats {
+    pub total_loss: f32,
+    pub pg_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    /// Mean per-step environment reward in the collected rollout.
+    pub rollout_reward: f32,
+    pub episodes: usize,
+}
+
+pub struct PpoTrainer {
+    pub cfg: PpoConfig,
+    pub buffer: RolloutBuffer,
+    rng: Pcg32,
+    // reusable minibatch scratch
+    mb_obs: Vec<f32>,
+    mb_act: Vec<i32>,
+    mb_adv: Vec<f32>,
+    mb_ret: Vec<f32>,
+    mb_lp: Vec<f32>,
+    order: Vec<usize>,
+    actions_scratch: Vec<usize>,
+    obs_scratch: Vec<f32>,
+}
+
+impl PpoTrainer {
+    pub fn new(cfg: &PpoConfig, obs_dim: usize, seed: u64) -> PpoTrainer {
+        let buffer = RolloutBuffer::new(cfg.rollout_len, cfg.num_envs, obs_dim);
+        let mb = cfg.minibatch;
+        PpoTrainer {
+            cfg: cfg.clone(),
+            buffer,
+            rng: Pcg32::new(seed, 4242),
+            mb_obs: vec![0.0; mb * obs_dim],
+            mb_act: vec![0; mb],
+            mb_adv: vec![0.0; mb],
+            mb_ret: vec![0.0; mb],
+            mb_lp: vec![0.0; mb],
+            order: (0..cfg.rollout_len * cfg.num_envs).collect(),
+            actions_scratch: vec![0; cfg.num_envs],
+            obs_scratch: vec![0.0; cfg.num_envs * obs_dim],
+        }
+    }
+
+    /// Collect one rollout (T steps of B envs) into the buffer.
+    pub fn collect(&mut self, env: &mut dyn VecEnv, policy: &mut Policy) -> Result<()> {
+        let b = self.cfg.num_envs;
+        debug_assert_eq!(env.num_envs(), b);
+        debug_assert_eq!(env.obs_dim(), self.buffer.obs_dim);
+        for t in 0..self.cfg.rollout_len {
+            env.observe_all(self.buffer.obs_at_mut(t));
+            let obs_slab = {
+                let w = b * self.buffer.obs_dim;
+                &self.buffer.obs[t * w..(t + 1) * w]
+            };
+            let (logits, values) = policy.forward(obs_slab)?;
+            policy.sample_actions(
+                &logits,
+                &mut self.rng,
+                &mut self.actions_scratch,
+                &mut self.buffer.log_probs[t * b..(t + 1) * b],
+            );
+            for i in 0..b {
+                self.buffer.actions[t * b + i] = self.actions_scratch[i] as i32;
+                self.buffer.values[t * b + i] = values[i];
+            }
+            env.step_all(
+                &self.actions_scratch,
+                &mut self.buffer.rewards[t * b..(t + 1) * b],
+                &mut self.buffer.dones[t * b..(t + 1) * b],
+            );
+        }
+        // Bootstrap values for the observation after the last step.
+        env.observe_all(&mut self.obs_scratch);
+        let (_, values) = policy.forward(&self.obs_scratch)?;
+        self.buffer.bootstrap.copy_from_slice(&values);
+        Ok(())
+    }
+
+    /// GAE + the update phase. Uses the fused whole-phase artifact when the
+    /// geometry matches (one PJRT call — see EXPERIMENTS.md §Perf);
+    /// otherwise falls back to the per-minibatch loop.
+    pub fn update(&mut self, policy: &mut Policy) -> Result<PpoStats> {
+        let cfg = &self.cfg;
+        compute_gae(
+            &self.buffer.rewards,
+            &self.buffer.dones,
+            &self.buffer.values,
+            &self.buffer.bootstrap,
+            cfg.gamma,
+            cfg.lam,
+            &mut self.buffer.advantages,
+            &mut self.buffer.returns_,
+        );
+        normalize(&mut self.buffer.advantages);
+
+        let n = self.buffer.total();
+        if policy.fused_geom == Some((cfg.epochs, n)) && cfg.minibatch == policy.minibatch {
+            // Fused path: shuffle per epoch on the Rust side, one call.
+            let mut perm: Vec<i32> = Vec::with_capacity(cfg.epochs * n);
+            for _ in 0..cfg.epochs {
+                self.rng.shuffle(&mut self.order);
+                perm.extend(self.order.iter().map(|&k| k as i32));
+            }
+            let stats = policy.update_fused(
+                cfg,
+                &perm,
+                &self.buffer.obs,
+                &self.buffer.actions,
+                &self.buffer.advantages,
+                &self.buffer.returns_,
+                &self.buffer.log_probs,
+            )?;
+            let (rollout_reward, episodes) = self.buffer.reward_stats();
+            return Ok(PpoStats {
+                total_loss: stats[0],
+                pg_loss: stats[1],
+                v_loss: stats[2],
+                entropy: stats[3],
+                approx_kl: stats[4],
+                rollout_reward,
+                episodes,
+            });
+        }
+
+        let mut agg = [0.0f64; 5];
+        let mut updates = 0usize;
+        for _ in 0..cfg.epochs {
+            self.rng.shuffle(&mut self.order);
+            for chunk in self.order.chunks_exact(cfg.minibatch) {
+                self.buffer.gather(
+                    chunk,
+                    &mut self.mb_obs,
+                    &mut self.mb_act,
+                    &mut self.mb_adv,
+                    &mut self.mb_ret,
+                    &mut self.mb_lp,
+                );
+                let stats = policy.update_minibatch(
+                    cfg,
+                    &self.mb_obs,
+                    &self.mb_act,
+                    &self.mb_adv,
+                    &self.mb_ret,
+                    &self.mb_lp,
+                )?;
+                for (a, s) in agg.iter_mut().zip(stats) {
+                    *a += s as f64;
+                }
+                updates += 1;
+            }
+        }
+        let n = updates.max(1) as f64;
+        let (rollout_reward, episodes) = self.buffer.reward_stats();
+        Ok(PpoStats {
+            total_loss: (agg[0] / n) as f32,
+            pg_loss: (agg[1] / n) as f32,
+            v_loss: (agg[2] / n) as f32,
+            entropy: (agg[3] / n) as f32,
+            approx_kl: (agg[4] / n) as f32,
+            rollout_reward,
+            episodes,
+        })
+    }
+
+    /// One full PPO iteration: collect + update.
+    pub fn train_iteration(
+        &mut self,
+        env: &mut dyn VecEnv,
+        policy: &mut Policy,
+    ) -> Result<PpoStats> {
+        self.collect(env, policy)?;
+        self.update(policy)
+    }
+
+    /// Environment steps consumed per iteration.
+    pub fn steps_per_iteration(&self) -> usize {
+        self.cfg.num_envs * self.cfg.rollout_len
+    }
+}

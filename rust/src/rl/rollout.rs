@@ -1,0 +1,133 @@
+//! On-policy rollout storage, time-major (`t * B + i`), pre-allocated once
+//! and reused across iterations (no allocation on the collection path).
+
+/// Fixed-geometry rollout buffer for `T` steps of `B` environments.
+pub struct RolloutBuffer {
+    pub t_len: usize,
+    pub b: usize,
+    pub obs_dim: usize,
+    /// `[T * B * obs_dim]`
+    pub obs: Vec<f32>,
+    /// `[T * B]`
+    pub actions: Vec<i32>,
+    pub log_probs: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<bool>,
+    pub values: Vec<f32>,
+    /// `[B]` — V(s_T) after the last collected step.
+    pub bootstrap: Vec<f32>,
+    /// `[T * B]`, filled by the GAE pass.
+    pub advantages: Vec<f32>,
+    pub returns_: Vec<f32>,
+}
+
+impl RolloutBuffer {
+    pub fn new(t_len: usize, b: usize, obs_dim: usize) -> RolloutBuffer {
+        let n = t_len * b;
+        RolloutBuffer {
+            t_len,
+            b,
+            obs_dim,
+            obs: vec![0.0; n * obs_dim],
+            actions: vec![0; n],
+            log_probs: vec![0.0; n],
+            rewards: vec![0.0; n],
+            dones: vec![false; n],
+            values: vec![0.0; n],
+            bootstrap: vec![0.0; b],
+            advantages: vec![0.0; n],
+            returns_: vec![0.0; n],
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.t_len * self.b
+    }
+
+    /// Slice of the observation batch at step `t` (`[B * obs_dim]`).
+    pub fn obs_at_mut(&mut self, t: usize) -> &mut [f32] {
+        let w = self.b * self.obs_dim;
+        &mut self.obs[t * w..(t + 1) * w]
+    }
+
+    /// Gather a minibatch (by flat transition indices) into the provided
+    /// scratch buffers.
+    pub fn gather(
+        &self,
+        idx: &[usize],
+        obs_out: &mut [f32],
+        act_out: &mut [i32],
+        adv_out: &mut [f32],
+        ret_out: &mut [f32],
+        logp_out: &mut [f32],
+    ) {
+        let d = self.obs_dim;
+        for (row, &k) in idx.iter().enumerate() {
+            obs_out[row * d..(row + 1) * d].copy_from_slice(&self.obs[k * d..(k + 1) * d]);
+            act_out[row] = self.actions[k];
+            adv_out[row] = self.advantages[k];
+            ret_out[row] = self.returns_[k];
+            logp_out[row] = self.log_probs[k];
+        }
+    }
+
+    /// Mean episodic statistics of this rollout: (mean reward per step,
+    /// episodes completed).
+    pub fn reward_stats(&self) -> (f32, usize) {
+        let mean = self.rewards.iter().sum::<f32>() / self.total().max(1) as f32;
+        let episodes = self.dones.iter().filter(|&&d| d).count();
+        (mean, episodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_and_gather() {
+        let mut buf = RolloutBuffer::new(3, 2, 4);
+        assert_eq!(buf.total(), 6);
+        // Fill obs with recognizable values.
+        for k in 0..6 {
+            for j in 0..4 {
+                buf.obs[k * 4 + j] = (k * 10 + j) as f32;
+            }
+            buf.actions[k] = k as i32;
+            buf.advantages[k] = k as f32;
+            buf.returns_[k] = -(k as f32);
+            buf.log_probs[k] = 0.1 * k as f32;
+        }
+        let idx = [4usize, 1];
+        let mut obs = vec![0.0; 2 * 4];
+        let mut act = vec![0; 2];
+        let mut adv = vec![0.0; 2];
+        let mut ret = vec![0.0; 2];
+        let mut lp = vec![0.0; 2];
+        buf.gather(&idx, &mut obs, &mut act, &mut adv, &mut ret, &mut lp);
+        assert_eq!(&obs[0..4], &[40.0, 41.0, 42.0, 43.0]);
+        assert_eq!(act, vec![4, 1]);
+        assert_eq!(adv, vec![4.0, 1.0]);
+        assert_eq!(ret, vec![-4.0, -1.0]);
+        assert_eq!(lp[1], 0.1);
+    }
+
+    #[test]
+    fn obs_at_mut_addresses_step_slab() {
+        let mut buf = RolloutBuffer::new(2, 3, 2);
+        buf.obs_at_mut(1).fill(7.0);
+        assert_eq!(buf.obs[0], 0.0);
+        assert_eq!(buf.obs[6], 7.0);
+        assert_eq!(buf.obs[11], 7.0);
+    }
+
+    #[test]
+    fn reward_stats() {
+        let mut buf = RolloutBuffer::new(2, 2, 1);
+        buf.rewards = vec![1.0, 0.0, 1.0, 0.0];
+        buf.dones = vec![false, true, true, false];
+        let (mean, eps) = buf.reward_stats();
+        assert_eq!(mean, 0.5);
+        assert_eq!(eps, 2);
+    }
+}

@@ -1,0 +1,323 @@
+//! Parser for `artifacts/manifest.txt`, the ABI contract between the AOT
+//! emitter (`python/compile/aot.py`) and the Rust runtime.
+//!
+//! The manifest declares, for every compiled artifact, the exact positional
+//! call convention: which model tensors are bound as leading parameters
+//! (and which outputs are written back), followed by the data tensors the
+//! caller supplies. Shapes are validated on every call.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of a tensor (all artifacts use f32 except integer inputs
+/// like PPO actions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// A named tensor with a static shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One positional input/output of an artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Binding {
+    /// Bound from (input) / written back to (output) the model's parameter
+    /// store, by tensor name.
+    Param(String),
+    /// Supplied by (input) / returned to (output) the caller.
+    Data(TensorSpec),
+}
+
+/// A model: the ordered parameter tensors backing `<model>.params.bin`.
+#[derive(Debug, Clone, Default)]
+pub struct ModelSpec {
+    pub name: String,
+    pub params: Vec<TensorSpec>,
+}
+
+impl ModelSpec {
+    pub fn param(&self, name: &str) -> Result<&TensorSpec> {
+        self.params
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("model {} has no param '{name}'", self.name))
+    }
+
+    pub fn total_numel(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+/// A compiled artifact's call ABI.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub model: String,
+    pub hlo_file: String,
+    pub inputs: Vec<Binding>,
+    pub outputs: Vec<Binding>,
+}
+
+impl ArtifactSpec {
+    pub fn data_inputs(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.inputs.iter().filter_map(|b| match b {
+            Binding::Data(t) => Some(t),
+            _ => None,
+        })
+    }
+
+    pub fn data_outputs(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.outputs.iter().filter_map(|b| match b {
+            Binding::Data(t) => Some(t),
+            _ => None,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub geometry: BTreeMap<String, i64>,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first to AOT-compile the models",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn geom(&self, key: &str) -> Result<i64> {
+        self.geometry
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("manifest geometry missing '{key}'"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut lines = text.lines().map(str::trim).enumerate();
+
+        fn tensor_from(parts: &[&str]) -> Result<TensorSpec> {
+            // name dtype dims...
+            anyhow::ensure!(parts.len() >= 2, "malformed tensor spec {parts:?}");
+            let shape: Result<Vec<usize>, _> =
+                parts[2..].iter().map(|d| d.parse::<usize>()).collect();
+            Ok(TensorSpec {
+                name: parts[0].to_string(),
+                dtype: DType::parse(parts[1])?,
+                shape: shape.context("bad dims")?,
+            })
+        }
+
+        while let Some((ln, line)) = lines.next() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next().unwrap() {
+                "version" => {
+                    let v = parts.next().unwrap_or("?");
+                    anyhow::ensure!(v == "1", "unsupported manifest version {v}");
+                }
+                "geometry" => {
+                    for (ln2, l) in lines.by_ref() {
+                        if l == "endgeometry" {
+                            break;
+                        }
+                        let mut p = l.split_whitespace();
+                        let k = p.next().ok_or_else(|| anyhow!("line {}: empty", ln2 + 1))?;
+                        let v: i64 = p
+                            .next()
+                            .ok_or_else(|| anyhow!("line {}: missing value", ln2 + 1))?
+                            .parse()?;
+                        m.geometry.insert(k.to_string(), v);
+                    }
+                }
+                "model" => {
+                    let name = parts.next().ok_or_else(|| anyhow!("line {ln}: model name"))?;
+                    let mut spec = ModelSpec { name: name.to_string(), params: Vec::new() };
+                    for (ln2, l) in lines.by_ref() {
+                        if l == "endmodel" {
+                            break;
+                        }
+                        let ps: Vec<&str> = l.split_whitespace().collect();
+                        anyhow::ensure!(
+                            ps.first() == Some(&"param"),
+                            "line {}: expected 'param'",
+                            ln2 + 1
+                        );
+                        spec.params.push(tensor_from(&ps[1..])?);
+                    }
+                    m.models.insert(name.to_string(), spec);
+                }
+                "artifact" => {
+                    let name =
+                        parts.next().ok_or_else(|| anyhow!("line {ln}: artifact name"))?;
+                    let mut art = ArtifactSpec {
+                        name: name.to_string(),
+                        model: String::new(),
+                        hlo_file: String::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    };
+                    for (ln2, l) in lines.by_ref() {
+                        if l == "endartifact" {
+                            break;
+                        }
+                        let ps: Vec<&str> = l.split_whitespace().collect();
+                        match ps.as_slice() {
+                            ["model", mn] => art.model = mn.to_string(),
+                            ["hlo", f] => art.hlo_file = f.to_string(),
+                            ["input", "param", n] => {
+                                art.inputs.push(Binding::Param(n.to_string()))
+                            }
+                            ["output", "param", n] => {
+                                art.outputs.push(Binding::Param(n.to_string()))
+                            }
+                            ["input", "data", rest @ ..] => {
+                                art.inputs.push(Binding::Data(tensor_from(rest)?))
+                            }
+                            ["output", "data", rest @ ..] => {
+                                art.outputs.push(Binding::Data(tensor_from(rest)?))
+                            }
+                            other => bail!("line {}: bad artifact line {other:?}", ln2 + 1),
+                        }
+                    }
+                    anyhow::ensure!(!art.model.is_empty(), "artifact {name}: missing model");
+                    anyhow::ensure!(!art.hlo_file.is_empty(), "artifact {name}: missing hlo");
+                    m.artifacts.insert(name.to_string(), art);
+                }
+                other => bail!("line {}: unexpected token '{other}'", ln + 1),
+            }
+        }
+
+        // Cross-validate: every param binding must exist in its model.
+        for art in m.artifacts.values() {
+            let model = m
+                .models
+                .get(&art.model)
+                .ok_or_else(|| anyhow!("artifact {} references unknown model", art.name))?;
+            for b in art.inputs.iter().chain(&art.outputs) {
+                if let Binding::Param(n) = b {
+                    model.param(n).with_context(|| format!("artifact {}", art.name))?;
+                }
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+
+geometry
+foo 42
+endgeometry
+
+model tiny
+param w f32 2 3
+param b f32 3
+param adam_t f32 1
+endmodel
+
+artifact tiny_fwd
+model tiny
+hlo tiny_fwd.hlo.txt
+input param w
+input param b
+input data x f32 4 2
+output data y f32 4 3
+endartifact
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.geom("foo").unwrap(), 42);
+        let model = m.model("tiny").unwrap();
+        assert_eq!(model.params.len(), 3);
+        assert_eq!(model.param("w").unwrap().numel(), 6);
+        assert_eq!(model.total_numel(), 10);
+        let art = m.artifact("tiny_fwd").unwrap();
+        assert_eq!(art.inputs.len(), 3);
+        assert_eq!(art.data_inputs().count(), 1);
+        assert_eq!(art.data_outputs().next().unwrap().shape, vec![4, 3]);
+    }
+
+    #[test]
+    fn rejects_unknown_param_binding() {
+        let bad = SAMPLE.replace("input param w", "input param nope");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse("version 9").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.geom("nope").is_err());
+        assert!(m.model("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.len() >= 21);
+            assert_eq!(m.geom("traffic_obs").unwrap(), 42);
+            let pol = m.model("policy_traffic").unwrap();
+            assert_eq!(pol.params.len(), 8 * 3 + 1);
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`), compiles
+//! them once on the CPU PJRT client, and executes them with model
+//! parameters + caller data as positional literals.
+//!
+//! This module is the **only** place the `xla` crate is touched; everything
+//! above it works with plain `&[f32]` slices. Python never runs here —
+//! artifacts were lowered once at build time (`make artifacts`).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Binding, DType, Manifest, ModelSpec, TensorSpec};
+
+use crate::nn::ParamStore;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A caller-supplied data argument.
+#[derive(Debug, Clone, Copy)]
+pub enum DataArg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+struct CompiledArtifact {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Does the artifact write any parameters back (training artifact)?
+    mutates_params: bool,
+    /// Device-resident parameter buffers for forward-only artifacts,
+    /// keyed by the owning store's (id, version). Uploading the weights
+    /// once per version (instead of per call) is the main L3 perf lever —
+    /// see EXPERIMENTS.md §Perf.
+    param_cache: RefCell<Option<((u64, u64), Vec<xla::PjRtBuffer>)>>,
+}
+
+/// The runtime: one PJRT CPU client + a lazily-compiled artifact cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    compiled: RefCell<HashMap<String, Rc<CompiledArtifact>>>,
+    /// Executions performed (diagnostics / perf accounting).
+    calls: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and connect the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir.as_ref())?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            dir: dir.as_ref().to_path_buf(),
+            client,
+            compiled: RefCell::new(HashMap::new()),
+            calls: RefCell::new(0),
+        })
+    }
+
+    pub fn geom(&self, key: &str) -> Result<usize> {
+        Ok(self.manifest.geom(key)? as usize)
+    }
+
+    pub fn call_count(&self) -> u64 {
+        *self.calls.borrow()
+    }
+
+    /// Load a model's initial parameters (`<model>.params.bin`).
+    pub fn load_store(&self, model: &str) -> Result<ParamStore> {
+        let spec = self.manifest.model(model)?;
+        ParamStore::load_bin(spec, self.dir.join(format!("{model}.params.bin")))
+    }
+
+    fn compile(&self, name: &str) -> Result<Rc<CompiledArtifact>> {
+        if let Some(c) = self.compiled.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let mutates_params =
+            spec.outputs.iter().any(|b| matches!(b, Binding::Param(_)));
+        let c = Rc::new(CompiledArtifact {
+            spec,
+            exe,
+            mutates_params,
+            param_cache: RefCell::new(None),
+        });
+        self.compiled.borrow_mut().insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Pre-compile a set of artifacts (so first-step latency is paid at
+    /// startup, not on the training hot path).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compile(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name`. Parameter bindings are read from (and, for training
+    /// artifacts, written back to) `store`; `data` supplies the data inputs
+    /// in manifest order. Returns the data outputs in manifest order.
+    pub fn call(
+        &self,
+        name: &str,
+        store: &mut ParamStore,
+        data: &[DataArg<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let art = self.compile(name)?;
+        anyhow::ensure!(
+            store.model == art.spec.model,
+            "artifact {name} expects model {}, got store for {}",
+            art.spec.model,
+            store.model
+        );
+        let model = self.manifest.model(&art.spec.model)?;
+
+        let n_data_inputs = art.spec.data_inputs().count();
+        anyhow::ensure!(
+            data.len() == n_data_inputs,
+            "artifact {name}: {} data args given, {} expected",
+            data.len(),
+            n_data_inputs
+        );
+
+        // Forward-only artifacts run on the buffer path: parameters stay
+        // resident on the device and are re-uploaded only when the store
+        // mutates. Training artifacts (param write-back) use the literal
+        // path (the output tuple must come back to the host anyway).
+        let result = if !art.mutates_params {
+            // Refresh the resident parameter buffers if stale.
+            {
+                let mut cache = art.param_cache.borrow_mut();
+                let key = store.cache_key();
+                let stale = !matches!(&*cache, Some((k, _)) if *k == key);
+                if stale {
+                    let mut bufs = Vec::new();
+                    for binding in &art.spec.inputs {
+                        if let Binding::Param(pname) = binding {
+                            let tspec = model.param(pname)?;
+                            let values = store.get(pname)?;
+                            bufs.push(self.client.buffer_from_host_buffer(
+                                values,
+                                &tspec.shape,
+                                None,
+                            )?);
+                        }
+                    }
+                    *cache = Some((key, bufs));
+                }
+            }
+            let cache = art.param_cache.borrow();
+            let (_, param_bufs) = cache.as_ref().unwrap();
+            // Upload data inputs and assemble positional args.
+            let mut data_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(data.len());
+            let mut data_it = data.iter();
+            for binding in &art.spec.inputs {
+                if let Binding::Data(tspec) = binding {
+                    let arg = data_it.next().unwrap();
+                    data_bufs.push(buf_from_arg(&self.client, arg, tspec, name)?);
+                }
+            }
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(art.spec.inputs.len());
+            let (mut pi, mut di) = (0usize, 0usize);
+            for binding in &art.spec.inputs {
+                match binding {
+                    Binding::Param(_) => {
+                        args.push(&param_bufs[pi]);
+                        pi += 1;
+                    }
+                    Binding::Data(_) => {
+                        args.push(&data_bufs[di]);
+                        di += 1;
+                    }
+                }
+            }
+            art.exe.execute_b(&args).with_context(|| format!("executing {name}"))?
+        } else {
+            let mut literals: Vec<xla::Literal> = Vec::with_capacity(art.spec.inputs.len());
+            let mut data_it = data.iter();
+            for binding in &art.spec.inputs {
+                match binding {
+                    Binding::Param(pname) => {
+                        let tspec = model.param(pname)?;
+                        let values = store.get(pname)?;
+                        literals.push(lit_f32(values, tspec)?);
+                    }
+                    Binding::Data(tspec) => {
+                        let arg = data_it.next().unwrap();
+                        literals.push(lit_from_arg(arg, tspec, name)?);
+                    }
+                }
+            }
+            art.exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {name}"))?
+        };
+        *self.calls.borrow_mut() += 1;
+
+        // Unpack the output tuple.
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let parts = tuple.to_tuple().with_context(|| format!("untupling result of {name}"))?;
+        anyhow::ensure!(
+            parts.len() == art.spec.outputs.len(),
+            "artifact {name}: {} outputs, manifest says {}",
+            parts.len(),
+            art.spec.outputs.len()
+        );
+
+        let mut outs = Vec::new();
+        for (part, binding) in parts.into_iter().zip(&art.spec.outputs) {
+            match binding {
+                Binding::Param(pname) => {
+                    // Write back directly into the store tensor (single copy).
+                    let dst = store.tensor_mut(pname)?;
+                    anyhow::ensure!(
+                        part.element_count() == dst.len(),
+                        "{name}: writeback of {pname} has {} elements, expected {}",
+                        part.element_count(),
+                        dst.len()
+                    );
+                    part.copy_raw_to(dst)
+                        .with_context(|| format!("{name}: writeback of {pname}"))?;
+                }
+                Binding::Data(tspec) => {
+                    if tspec.dtype != DType::F32 {
+                        bail!("artifact {name}: non-f32 data outputs unsupported");
+                    }
+                    let v: Vec<f32> =
+                        part.to_vec().with_context(|| format!("{name}: output {}", tspec.name))?;
+                    anyhow::ensure!(
+                        v.len() == tspec.numel(),
+                        "{name}: output {} has {} elements, expected {}",
+                        tspec.name,
+                        v.len(),
+                        tspec.numel()
+                    );
+                    outs.push(v);
+                }
+            }
+        }
+        Ok(outs)
+    }
+}
+
+fn lit_f32(values: &[f32], spec: &TensorSpec) -> Result<xla::Literal> {
+    anyhow::ensure!(
+        values.len() == spec.numel(),
+        "tensor {}: {} values, expected {} {:?}",
+        spec.name,
+        values.len(),
+        spec.numel(),
+        spec.shape
+    );
+    // Single-copy literal creation (vec1 + reshape would copy twice).
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &spec.shape,
+        bytes,
+    )?)
+}
+
+fn lit_from_arg(arg: &DataArg<'_>, spec: &TensorSpec, artifact: &str) -> Result<xla::Literal> {
+    match (arg, spec.dtype) {
+        (DataArg::F32(v), DType::F32) => lit_f32(v, spec),
+        (DataArg::I32(v), DType::I32) => {
+            anyhow::ensure!(
+                v.len() == spec.numel(),
+                "tensor {}: {} values, expected {}",
+                spec.name,
+                v.len(),
+                spec.numel()
+            );
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &spec.shape,
+                bytes,
+            )?)
+        }
+        _ => bail!("artifact {artifact}: dtype mismatch for data input {}", spec.name),
+    }
+}
+
+fn buf_from_arg(
+    client: &xla::PjRtClient,
+    arg: &DataArg<'_>,
+    spec: &TensorSpec,
+    artifact: &str,
+) -> Result<xla::PjRtBuffer> {
+    match (arg, spec.dtype) {
+        (DataArg::F32(v), DType::F32) => {
+            anyhow::ensure!(v.len() == spec.numel(), "tensor {}: wrong size", spec.name);
+            Ok(client.buffer_from_host_buffer(v, &spec.shape, None)?)
+        }
+        (DataArg::I32(v), DType::I32) => {
+            anyhow::ensure!(v.len() == spec.numel(), "tensor {}: wrong size", spec.name);
+            Ok(client.buffer_from_host_buffer(v, &spec.shape, None)?)
+        }
+        _ => bail!("artifact {artifact}: dtype mismatch for data input {}", spec.name),
+    }
+}

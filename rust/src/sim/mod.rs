@@ -1,0 +1,12 @@
+//! Benchmark domains (paper §5): a microscopic traffic-control simulator
+//! and a multi-robot warehouse-commissioning simulator, each with a global
+//! simulator (GS) and the matching local simulator (LS).
+//!
+//! Both domains share a crucial design property: **the LS runs the exact
+//! same local-dynamics code as the GS** — the GS is "LS + the rest of the
+//! networked system". This guarantees the paper's premise that the local
+//! simulator reproduces the local transition function exactly, so the only
+//! source of sim-to-real (sim-to-GS) gap is the influence distribution.
+
+pub mod traffic;
+pub mod warehouse;

@@ -1,0 +1,293 @@
+//! The traffic **global simulator** (GS): the full grid network. Slow by
+//! construction (cost scales with the whole city), exact by construction.
+
+use super::lights::{ActuatedController, LightPhase, LightState};
+use super::network::{grid_network, source_links, Network, DIRS};
+use super::NUM_INFLUENCE;
+use crate::config::TrafficConfig;
+use crate::core::{Environment, GlobalEnv, Step};
+use crate::util::Pcg32;
+
+/// Grid coordinates of the agent's intersection for the paper's two
+/// highlighted intersections (Fig 2): 1 = the central intersection,
+/// 2 = an off-center one (different coupling with the boundary).
+pub fn agent_node_coords(which: usize, grid: usize) -> (usize, usize) {
+    match which {
+        1 => (grid / 2, grid / 2),
+        2 => (1, 1),
+        _ => panic!("agent_intersection must be 1 or 2"),
+    }
+}
+
+pub struct TrafficGlobalEnv {
+    cfg: TrafficConfig,
+    net: Network,
+    lights: Vec<LightState>,
+    actuated: ActuatedController,
+    sources: Vec<usize>,
+    agent_node: usize,
+    /// Agent's incoming links in `DIRS` order — the local region.
+    agent_incoming: [usize; 4],
+    rng: Pcg32,
+    t: usize,
+    /// Influence-source realizations of the last step.
+    last_u: [bool; NUM_INFLUENCE],
+    /// Action applied at the last step (part of the full ALSH features).
+    last_action: usize,
+}
+
+impl TrafficGlobalEnv {
+    pub fn new(cfg: &TrafficConfig) -> TrafficGlobalEnv {
+        let net = grid_network(cfg.grid, cfg.lane_len, cfg.p_straight);
+        let sources = source_links(&net);
+        let (r, c) = agent_node_coords(cfg.agent_intersection, cfg.grid);
+        let agent_node = r * cfg.grid + c;
+        let mut agent_incoming = [0usize; 4];
+        for d in DIRS {
+            agent_incoming[d.index()] =
+                net.nodes[agent_node].incoming[d.index()].expect("agent node incoming");
+        }
+        let lights = vec![LightState::new(LightPhase::Vertical); cfg.grid * cfg.grid];
+        TrafficGlobalEnv {
+            cfg: cfg.clone(),
+            net,
+            lights,
+            actuated: ActuatedController::new(cfg.min_green, cfg.actuated_max_green),
+            sources,
+            agent_node,
+            agent_incoming,
+            rng: Pcg32::seeded(0),
+            t: 0,
+            last_u: [false; NUM_INFLUENCE],
+            last_action: 0,
+        }
+    }
+
+    pub fn agent_node(&self) -> usize {
+        self.agent_node
+    }
+
+    pub fn agent_incoming(&self) -> &[usize; 4] {
+        &self.agent_incoming
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// What the actuated baseline controller would do at the agent's
+    /// intersection right now (the paper's black-line baseline in Fig 3).
+    pub fn actuated_action(&self) -> usize {
+        self.actuated.decide(&self.net, self.agent_node, &self.lights[self.agent_node])
+    }
+
+}
+
+impl Environment for TrafficGlobalEnv {
+    fn obs_dim(&self) -> usize {
+        4 * self.cfg.lane_len + 2
+    }
+
+    fn num_actions(&self) -> usize {
+        2 // keep / switch
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::seeded(seed);
+        self.net.clear();
+        for l in &mut self.lights {
+            *l = LightState::new(LightPhase::Vertical);
+        }
+        self.t = 0;
+        self.last_u = [false; NUM_INFLUENCE];
+        self.last_action = 0;
+    }
+
+    fn observe(&self, out: &mut [f32]) {
+        let d = 4 * self.cfg.lane_len;
+        self.net.occupancy_into(&self.agent_incoming, &mut out[..d]);
+        let phase = self.lights[self.agent_node].phase;
+        out[d] = if phase.is_vertical() { 1.0 } else { 0.0 };
+        out[d + 1] = if phase.is_vertical() { 0.0 } else { 1.0 };
+    }
+
+    fn step(&mut self, action: usize) -> Step {
+        // 1. Lights: agent action at the agent node, actuated elsewhere.
+        for n in 0..self.lights.len() {
+            let a = if n == self.agent_node {
+                action
+            } else {
+                self.actuated.decide(&self.net, n, &self.lights[n])
+            };
+            self.lights[n].apply_action(a, self.cfg.min_green);
+        }
+        self.last_action = action;
+
+        // 2. Car dynamics: `substeps` microscopic ticks per control step
+        //    (SUMO-style). Influence sources accumulate across ticks; the
+        //    reward averages the moving fraction over the control interval.
+        let green: Vec<bool> = self.lights.iter().map(|l| l.phase.is_vertical()).collect();
+        self.last_u = [false; NUM_INFLUENCE];
+        let (mut moved, mut total) = (0usize, 0usize);
+        for _ in 0..self.cfg.substeps.max(1) {
+            self.net.tick(&green, &mut self.rng);
+            // Boundary inflow happens at the microscopic timescale.
+            for i in 0..self.sources.len() {
+                let s = self.sources[i];
+                if self.rng.bernoulli(self.cfg.inflow_prob) {
+                    self.net.spawn(s, &mut self.rng);
+                }
+            }
+            // Arrivals at the agent's incoming lanes during this tick.
+            for d in DIRS {
+                self.last_u[d.index()] |= self.net.entered[self.agent_incoming[d.index()]];
+            }
+            let s = self.net.stats_over(&self.agent_incoming);
+            moved += s.moved;
+            total += s.total;
+        }
+
+        self.t += 1;
+        let reward = if total == 0 { 1.0 } else { moved as f32 / total as f32 };
+        Step { reward, done: self.t >= self.cfg.episode_len }
+    }
+}
+
+impl GlobalEnv for TrafficGlobalEnv {
+    fn num_influence_sources(&self) -> usize {
+        NUM_INFLUENCE
+    }
+
+    fn dset_dim(&self) -> usize {
+        4 * self.cfg.lane_len
+    }
+
+    fn influence_sources(&self, out: &mut [f32]) {
+        for (o, &u) in out.iter_mut().zip(&self.last_u) {
+            *o = if u { 1.0 } else { 0.0 };
+        }
+    }
+
+    fn dset(&self, out: &mut [f32]) {
+        self.net.occupancy_into(&self.agent_incoming, out);
+    }
+
+    fn alsh_dim(&self) -> usize {
+        // d-set + light phase one-hot + last action: the confounder-prone
+        // extras of the full ALSH (Appendix B ablation).
+        self.dset_dim() + 3
+    }
+
+    fn alsh(&self, out: &mut [f32]) {
+        let d = self.dset_dim();
+        self.dset(&mut out[..d]);
+        let phase = self.lights[self.agent_node].phase;
+        out[d] = if phase.is_vertical() { 1.0 } else { 0.0 };
+        out[d + 1] = if phase.is_vertical() { 0.0 } else { 1.0 };
+        out[d + 2] = self.last_action as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrafficConfig {
+        TrafficConfig::default()
+    }
+
+    #[test]
+    fn dims_consistent() {
+        let env = TrafficGlobalEnv::new(&cfg());
+        assert_eq!(env.obs_dim(), 42);
+        assert_eq!(env.dset_dim(), 40);
+        assert_eq!(env.alsh_dim(), 43);
+        assert_eq!(env.num_actions(), 2);
+        assert_eq!(env.num_influence_sources(), 4);
+    }
+
+    #[test]
+    fn episode_terminates_at_horizon() {
+        let mut env = TrafficGlobalEnv::new(&cfg());
+        env.reset(1);
+        let mut done = false;
+        let mut steps = 0;
+        while !done {
+            done = env.step(0).done;
+            steps += 1;
+            assert!(steps <= 200);
+        }
+        assert_eq!(steps, 200);
+    }
+
+    #[test]
+    fn traffic_reaches_the_center() {
+        let mut env = TrafficGlobalEnv::new(&cfg());
+        env.reset(2);
+        let mut any_u = false;
+        let mut u = [0.0f32; 4];
+        for _ in 0..150 {
+            env.step(env.actuated_action());
+            env.influence_sources(&mut u);
+            if u.iter().any(|&x| x > 0.0) {
+                any_u = true;
+            }
+        }
+        assert!(any_u, "cars should eventually arrive at the center intersection");
+        let mut dset = vec![0.0; env.dset_dim()];
+        env.dset(&mut dset);
+        assert!(dset.iter().sum::<f32>() > 0.0, "local box should contain cars");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut env = TrafficGlobalEnv::new(&cfg());
+            env.reset(seed);
+            let mut rewards = Vec::new();
+            for t in 0..100 {
+                rewards.push(env.step((t / 11) % 2).reward);
+            }
+            rewards
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn observation_encodes_phase() {
+        let mut env = TrafficGlobalEnv::new(&cfg());
+        env.reset(3);
+        let mut obs = vec![0.0; env.obs_dim()];
+        env.observe(&mut obs);
+        assert_eq!(&obs[40..], &[1.0, 0.0], "starts vertical");
+        // Switch (min_green=3 → wait, then switch).
+        for _ in 0..4 {
+            env.step(0);
+        }
+        env.step(1);
+        env.observe(&mut obs);
+        assert_eq!(&obs[40..], &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn intersection_two_differs_from_one() {
+        let mut c1 = cfg();
+        c1.agent_intersection = 1;
+        let mut c2 = cfg();
+        c2.agent_intersection = 2;
+        let e1 = TrafficGlobalEnv::new(&c1);
+        let e2 = TrafficGlobalEnv::new(&c2);
+        assert_ne!(e1.agent_node(), e2.agent_node());
+    }
+
+    #[test]
+    fn rewards_bounded() {
+        let mut env = TrafficGlobalEnv::new(&cfg());
+        env.reset(4);
+        for t in 0..200 {
+            let s = env.step(t % 2);
+            assert!((0.0..=1.0).contains(&s.reward), "reward={}", s.reward);
+        }
+    }
+}

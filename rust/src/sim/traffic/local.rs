@@ -1,0 +1,210 @@
+//! The traffic **local simulator** (LS): the agent's intersection only.
+//! Runs the identical `Network::tick` machinery as the GS over an 8-link
+//! network; arrivals on the four incoming lanes are *injected* from an
+//! influence-source realization (Algorithm 2) instead of simulated.
+
+use super::lights::{LightPhase, LightState};
+use super::network::{single_intersection, Network, DIRS};
+use super::NUM_INFLUENCE;
+use crate::config::TrafficConfig;
+use crate::core::{LocalEnv, Step};
+use crate::util::Pcg32;
+
+pub struct TrafficLocalEnv {
+    cfg: TrafficConfig,
+    net: Network,
+    incoming: [usize; 4],
+    light: LightState,
+    rng: Pcg32,
+    t: usize,
+}
+
+impl TrafficLocalEnv {
+    pub fn new(cfg: &TrafficConfig) -> TrafficLocalEnv {
+        let (net, incoming, _outgoing) = single_intersection(cfg.lane_len, cfg.p_straight);
+        TrafficLocalEnv {
+            cfg: cfg.clone(),
+            net,
+            incoming,
+            light: LightState::new(LightPhase::Vertical),
+            rng: Pcg32::seeded(0),
+            t: 0,
+        }
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+}
+
+impl LocalEnv for TrafficLocalEnv {
+    fn obs_dim(&self) -> usize {
+        4 * self.cfg.lane_len + 2
+    }
+
+    fn num_actions(&self) -> usize {
+        2
+    }
+
+    fn num_influence_sources(&self) -> usize {
+        NUM_INFLUENCE
+    }
+
+    fn dset_dim(&self) -> usize {
+        4 * self.cfg.lane_len
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::seeded(seed);
+        self.net.clear();
+        self.light = LightState::new(LightPhase::Vertical);
+        self.t = 0;
+    }
+
+    fn observe(&self, out: &mut [f32]) {
+        let d = 4 * self.cfg.lane_len;
+        self.net.occupancy_into(&self.incoming, &mut out[..d]);
+        out[d] = if self.light.phase.is_vertical() { 1.0 } else { 0.0 };
+        out[d + 1] = if self.light.phase.is_vertical() { 0.0 } else { 1.0 };
+    }
+
+    fn dset(&self, out: &mut [f32]) {
+        self.net.occupancy_into(&self.incoming, out);
+    }
+
+    fn step_with_influence(&mut self, action: usize, influence: &[bool]) -> Step {
+        debug_assert_eq!(influence.len(), NUM_INFLUENCE);
+        self.light.apply_action(action, self.cfg.min_green);
+        let green = [self.light.phase.is_vertical()];
+        // Same microscopic substep count as the GS; the sampled arrivals
+        // are injected at the end of the control interval (entry timing
+        // within the interval is part of the IALS approximation).
+        let (mut moved, mut total) = (0usize, 0usize);
+        for _ in 0..self.cfg.substeps.max(1) {
+            self.net.tick(&green, &mut self.rng);
+            let s = self.net.stats_over(&self.incoming);
+            moved += s.moved;
+            total += s.total;
+        }
+        // Inject arrivals per the influence realization (Algorithm 2 l.7-9).
+        for d in DIRS {
+            if influence[d.index()] {
+                self.net.spawn(self.incoming[d.index()], &mut self.rng);
+            }
+        }
+        self.t += 1;
+        let reward = if total == 0 { 1.0 } else { moved as f32 / total as f32 };
+        Step { reward, done: self.t >= self.cfg.episode_len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::global::TrafficGlobalEnv;
+    use super::*;
+    use crate::core::{Environment, GlobalEnv};
+
+    fn cfg() -> TrafficConfig {
+        TrafficConfig::default()
+    }
+
+    #[test]
+    fn dims_match_global() {
+        let ls = TrafficLocalEnv::new(&cfg());
+        let gs = TrafficGlobalEnv::new(&cfg());
+        assert_eq!(ls.obs_dim(), gs.obs_dim());
+        assert_eq!(ls.dset_dim(), gs.dset_dim());
+        assert_eq!(ls.num_actions(), gs.num_actions());
+        assert_eq!(ls.num_influence_sources(), gs.num_influence_sources());
+    }
+
+    #[test]
+    fn influence_injects_cars() {
+        let mut ls = TrafficLocalEnv::new(&cfg());
+        ls.reset(1);
+        ls.step_with_influence(0, &[true, true, false, false]);
+        let mut d = vec![0.0; ls.dset_dim()];
+        ls.dset(&mut d);
+        assert_eq!(d.iter().sum::<f32>(), 2.0);
+    }
+
+    #[test]
+    fn no_influence_no_cars() {
+        let mut ls = TrafficLocalEnv::new(&cfg());
+        ls.reset(2);
+        for _ in 0..50 {
+            ls.step_with_influence(0, &[false; 4]);
+        }
+        let mut d = vec![0.0; ls.dset_dim()];
+        ls.dset(&mut d);
+        assert_eq!(d.iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn episode_length_respected() {
+        let mut ls = TrafficLocalEnv::new(&cfg());
+        ls.reset(3);
+        for t in 1..=200 {
+            let s = ls.step_with_influence(0, &[false; 4]);
+            assert_eq!(s.done, t == 200);
+        }
+    }
+
+    /// Key fidelity test (the paper's premise): replaying the GS's realized
+    /// influence sequence and actions through the LS reproduces the GS's
+    /// local region. Turns are made deterministic (p_straight = 1) so the
+    /// only coupling left is the influence itself.
+    #[test]
+    fn ls_replays_gs_local_region() {
+        let mut c = cfg();
+        c.p_straight = 1.0;
+        c.substeps = 1; // exact-fidelity regime (entry timing is exact)
+        let mut gs = TrafficGlobalEnv::new(&c);
+        let mut ls = TrafficLocalEnv::new(&c);
+        gs.reset(11);
+        ls.reset(99); // different seed: LS randomness must not matter here
+
+        let horizon = 120;
+        let mut u = [0.0f32; 4];
+        let mut gs_d = vec![0.0; gs.dset_dim()];
+        let mut ls_d = vec![0.0; gs.dset_dim()];
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for t in 0..horizon {
+            let action = (t / 9) % 2; // arbitrary fixed policy
+            gs.step(action);
+            gs.influence_sources(&mut u);
+            let ub: Vec<bool> = u.iter().map(|&x| x > 0.5).collect();
+            ls.step_with_influence(action, &ub);
+
+            gs.dset(&mut gs_d);
+            ls.dset(&mut ls_d);
+            for (a, b) in gs_d.iter().zip(&ls_d) {
+                total += 1;
+                if a == b {
+                    agree += 1;
+                }
+            }
+        }
+        let frac = agree as f64 / total as f64;
+        assert!(
+            frac > 0.995,
+            "LS should track the GS local region almost exactly (agreement {frac:.4})"
+        );
+    }
+
+    #[test]
+    fn reward_bounded_and_flows() {
+        let mut ls = TrafficLocalEnv::new(&cfg());
+        ls.reset(5);
+        let mut rng = crate::util::Pcg32::seeded(17);
+        let mut total = 0.0;
+        for t in 0..200 {
+            let u = [rng.bernoulli(0.3), rng.bernoulli(0.3), rng.bernoulli(0.3), rng.bernoulli(0.3)];
+            let s = ls.step_with_influence((t / 8) % 2, &u);
+            assert!((0.0..=1.0).contains(&s.reward));
+            total += s.reward;
+        }
+        assert!(total > 0.0);
+    }
+}

@@ -1,0 +1,559 @@
+//! Core traffic machinery shared verbatim by the GS and the LS: lane
+//! links, cellular-automaton car movement, intersection crossing.
+//!
+//! Dynamics (one tick):
+//! 1. **Crossing** — a car at a stop line crosses into its target link's
+//!    entry cell if its approach has green and the entry cell is free and
+//!    unclaimed this tick.
+//! 2. **Advance** — within each link, cars move one cell forward into free
+//!    cells (processed downstream-first so platoons compress).
+//! 3. **Inflow** — source links spawn a car at their entry cell with the
+//!    configured probability (GS boundary) or per the supplied influence
+//!    realization (LS).
+
+use crate::util::Pcg32;
+
+/// Compass direction. For an incoming link this is the **approach side**:
+/// the side of the intersection the link arrives at (a link whose cars
+/// travel southward arrives at the north side → `Dir::N`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Dir {
+    N = 0,
+    E = 1,
+    S = 2,
+    W = 3,
+}
+
+pub const DIRS: [Dir; 4] = [Dir::N, Dir::E, Dir::S, Dir::W];
+
+impl Dir {
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::N => Dir::S,
+            Dir::E => Dir::W,
+            Dir::S => Dir::N,
+            Dir::W => Dir::E,
+        }
+    }
+
+    /// Is this approach served by the vertical (N/S) phase?
+    pub fn is_vertical(self) -> bool {
+        matches!(self, Dir::N | Dir::S)
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Turn decision a car makes at the next intersection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Turn {
+    Straight,
+    Left,
+    Right,
+}
+
+/// Departure side for a car arriving at `approach` and taking `turn`.
+/// (Arriving at the N side means heading south; a left turn then heads
+/// east, i.e. exits through the E side.)
+pub fn departure_side(approach: Dir, turn: Turn) -> Dir {
+    match turn {
+        Turn::Straight => approach.opposite(),
+        Turn::Left => match approach {
+            Dir::N => Dir::E,
+            Dir::E => Dir::S,
+            Dir::S => Dir::W,
+            Dir::W => Dir::N,
+        },
+        Turn::Right => match approach {
+            Dir::N => Dir::W,
+            Dir::E => Dir::N,
+            Dir::S => Dir::E,
+            Dir::W => Dir::S,
+        },
+    }
+}
+
+/// A car occupying one lane cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Car {
+    /// Turn it will take at the downstream intersection of its current link.
+    pub turn: Turn,
+    /// Did it advance during the last tick (speed 1) — drives the reward.
+    pub moved: bool,
+}
+
+/// Where a link comes from / leads to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    /// An intersection in this network.
+    Node(usize),
+    /// The world outside the modelled region (boundary inflow / sink).
+    Boundary,
+}
+
+/// A one-way lane of `len` cells. Cell `0` is the upstream entry, cell
+/// `len-1` is the stop line at the downstream endpoint.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub cells: Vec<Option<Car>>,
+    pub from: Endpoint,
+    pub to: Endpoint,
+    /// Approach side at the downstream intersection (meaningful when
+    /// `to == Node(_)`), and departure side at the upstream one.
+    pub approach: Dir,
+}
+
+impl Link {
+    pub fn new(len: usize, from: Endpoint, to: Endpoint, approach: Dir) -> Link {
+        Link { cells: vec![None; len], from, to, approach }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn count(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_some()).count()
+    }
+
+    pub fn entry_free(&self) -> bool {
+        self.cells[0].is_none()
+    }
+
+    pub fn stopline(&self) -> Option<&Car> {
+        self.cells[self.cells.len() - 1].as_ref()
+    }
+}
+
+/// An intersection: its incoming/outgoing link ids per side.
+#[derive(Debug, Clone)]
+pub struct NodeLinks {
+    /// `incoming[d]` = link arriving at side `d` (approach d).
+    pub incoming: [Option<usize>; 4],
+    /// `outgoing[d]` = link departing through side `d`.
+    pub outgoing: [Option<usize>; 4],
+}
+
+impl NodeLinks {
+    pub fn empty() -> NodeLinks {
+        NodeLinks { incoming: [None; 4], outgoing: [None; 4] }
+    }
+}
+
+/// Result of one network tick, per intersection of interest.
+#[derive(Debug, Clone, Default)]
+pub struct TickStats {
+    /// Cars that moved this tick / total cars, over the watched links.
+    pub moved: usize,
+    pub total: usize,
+    /// Cars that crossed the watched intersection this tick.
+    pub crossed: usize,
+}
+
+/// A lane network plus turn-probability parameters. Both the GS (grid) and
+/// the LS (single intersection) are instances of this struct and share
+/// [`Network::tick`].
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub links: Vec<Link>,
+    pub nodes: Vec<NodeLinks>,
+    pub p_straight: f32,
+    /// Per-tick scratch: entry-cell claims to prevent two crossings into
+    /// the same cell (index = link id).
+    claims: Vec<bool>,
+    /// Entries written during the last tick: `entered[l]` is true if a car
+    /// appeared at link `l`'s entry cell (crossing or inflow). Used to
+    /// extract influence-source realizations in the GS.
+    pub entered: Vec<bool>,
+}
+
+impl Network {
+    pub fn new(links: Vec<Link>, nodes: Vec<NodeLinks>, p_straight: f32) -> Network {
+        let n = links.len();
+        Network { links, nodes, p_straight, claims: vec![false; n], entered: vec![false; n] }
+    }
+
+    pub fn sample_turn(p_straight: f32, rng: &mut Pcg32) -> Turn {
+        let x = rng.f32();
+        if x < p_straight {
+            Turn::Straight
+        } else if x < p_straight + (1.0 - p_straight) * 0.5 {
+            Turn::Left
+        } else {
+            Turn::Right
+        }
+    }
+
+    pub fn total_cars(&self) -> usize {
+        self.links.iter().map(|l| l.count()).sum()
+    }
+
+    pub fn clear(&mut self) {
+        for link in &mut self.links {
+            link.cells.fill(None);
+        }
+        self.entered.fill(false);
+    }
+
+    /// Advance the network one tick.
+    ///
+    /// * `green_vertical[node]` — true if node `node` currently gives green
+    ///   to its vertical (N/S) approaches.
+    /// * `rng` — drives turn decisions for crossing cars.
+    ///
+    /// Returns the number of cars that exited through boundary sinks.
+    pub fn tick(&mut self, green_vertical: &[bool], rng: &mut Pcg32) -> usize {
+        debug_assert_eq!(green_vertical.len(), self.nodes.len());
+        self.claims.fill(false);
+        self.entered.fill(false);
+        for link in &mut self.links {
+            for cell in link.cells.iter_mut().flatten() {
+                cell.moved = false;
+            }
+        }
+        let mut exited = 0usize;
+
+        // Phase 1: crossings, fixed approach order N,E,S,W per node.
+        for node in 0..self.nodes.len() {
+            for d in DIRS {
+                let Some(in_id) = self.nodes[node].incoming[d.index()] else { continue };
+                let green = green_vertical[node] == d.is_vertical();
+                if !green {
+                    continue;
+                }
+                let last = self.links[in_id].len() - 1;
+                let Some(car) = self.links[in_id].cells[last] else { continue };
+                let out_side = departure_side(d, car.turn);
+                match self.nodes[node].outgoing[out_side.index()] {
+                    Some(out_id) => {
+                        if self.links[out_id].entry_free() && !self.claims[out_id] {
+                            self.claims[out_id] = true;
+                            self.links[in_id].cells[last] = None;
+                            // New link → new turn decision for the next node.
+                            let turn = Self::sample_turn(self.p_straight, rng);
+                            self.links[out_id].cells[0] = Some(Car { turn, moved: true });
+                            self.entered[out_id] = true;
+                        }
+                    }
+                    None => {
+                        // Departure side leads off the modelled region.
+                        self.links[in_id].cells[last] = None;
+                        exited += 1;
+                    }
+                }
+            }
+        }
+
+        // Phase 2: within-link advance, downstream-first. Cars that already
+        // crossed in phase 1 (moved == true) stay put — v_max is 1 cell/tick.
+        for link in &mut self.links {
+            let len = link.cells.len();
+            for i in (0..len - 1).rev() {
+                let can_move = matches!(link.cells[i], Some(c) if !c.moved);
+                if can_move && link.cells[i + 1].is_none() {
+                    let mut car = link.cells[i].take().unwrap();
+                    car.moved = true;
+                    link.cells[i + 1] = Some(car);
+                }
+            }
+            // A car that reaches the end of a sink link (to == Boundary)
+            // leaves the world.
+            if matches!(link.to, Endpoint::Boundary) {
+                if link.cells[len - 1].take().is_some() {
+                    exited += 1;
+                }
+            }
+        }
+        exited
+    }
+
+    /// Spawn a car at the entry of `link` (inflow / influence realization).
+    /// Returns false if the entry cell is occupied (arrival is lost — the
+    /// queue spills outside the modelled region, same as SUMO's insertion
+    /// backlog behaviour on saturated boundaries).
+    pub fn spawn(&mut self, link: usize, rng: &mut Pcg32) -> bool {
+        if self.links[link].entry_free() && !self.entered[link] {
+            let turn = Self::sample_turn(self.p_straight, rng);
+            self.links[link].cells[0] = Some(Car { turn, moved: true });
+            self.entered[link] = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Movement stats over a set of links (the agent's local box).
+    pub fn stats_over(&self, link_ids: &[usize]) -> TickStats {
+        let mut s = TickStats::default();
+        for &id in link_ids {
+            for cell in self.links[id].cells.iter().flatten() {
+                s.total += 1;
+                if cell.moved {
+                    s.moved += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// Write binary occupancy of `link_ids` (concatenated, entry→stopline)
+    /// into `out`.
+    pub fn occupancy_into(&self, link_ids: &[usize], out: &mut [f32]) {
+        let mut k = 0;
+        for &id in link_ids {
+            for cell in &self.links[id].cells {
+                out[k] = if cell.is_some() { 1.0 } else { 0.0 };
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, out.len());
+    }
+}
+
+/// Build the single-intersection network used by the LS, and (as the local
+/// region) embedded in the GS layout: four incoming source links and four
+/// outgoing sink links of `lane_len` cells.
+///
+/// Returns `(network, incoming_ids, outgoing_ids)`, both indexed by `Dir`.
+pub fn single_intersection(lane_len: usize, p_straight: f32) -> (Network, [usize; 4], [usize; 4]) {
+    let mut links = Vec::new();
+    let mut node = NodeLinks::empty();
+    let mut incoming = [0usize; 4];
+    let mut outgoing = [0usize; 4];
+    for d in DIRS {
+        let id = links.len();
+        links.push(Link::new(lane_len, Endpoint::Boundary, Endpoint::Node(0), d));
+        node.incoming[d.index()] = Some(id);
+        incoming[d.index()] = id;
+    }
+    for d in DIRS {
+        let id = links.len();
+        links.push(Link::new(lane_len, Endpoint::Node(0), Endpoint::Boundary, d));
+        node.outgoing[d.index()] = Some(id);
+        outgoing[d.index()] = id;
+    }
+    (Network::new(links, vec![node], p_straight), incoming, outgoing)
+}
+
+/// Build a `grid × grid` lattice of intersections. Adjacent intersections
+/// are connected by one link per direction; boundary sides get a source
+/// (inflow) link and departures through boundary sides despawn via sink
+/// links. Returns the network plus, for every node, nothing extra — use
+/// [`Network::nodes`] to navigate.
+pub fn grid_network(grid: usize, lane_len: usize, p_straight: f32) -> Network {
+    assert!(grid >= 2);
+    let node_id = |r: usize, c: usize| r * grid + c;
+    let mut links: Vec<Link> = Vec::new();
+    let mut nodes = vec![NodeLinks::empty(); grid * grid];
+
+    // Internal links: for each ordered pair of adjacent nodes.
+    for r in 0..grid {
+        for c in 0..grid {
+            let to = node_id(r, c);
+            // For each side of (r,c), create the incoming link that arrives
+            // at that side (so every incoming direction is covered once).
+            for d in DIRS {
+                let from_rc: Option<(usize, usize)> = match d {
+                    Dir::N => r.checked_sub(1).map(|rr| (rr, c)),
+                    Dir::S => (r + 1 < grid).then_some((r + 1, c)),
+                    Dir::W => c.checked_sub(1).map(|cc| (r, cc)),
+                    Dir::E => (c + 1 < grid).then_some((r, c + 1)),
+                };
+                let id = links.len();
+                match from_rc {
+                    Some((fr, fc)) => {
+                        let from = node_id(fr, fc);
+                        links.push(Link::new(lane_len, Endpoint::Node(from), Endpoint::Node(to), d));
+                        nodes[to].incoming[d.index()] = Some(id);
+                        // This link departs `from` through the side facing
+                        // `to`, which is the opposite of the approach side.
+                        nodes[from].outgoing[d.opposite().index()] = Some(id);
+                    }
+                    None => {
+                        // Boundary source feeding this side.
+                        links.push(Link::new(lane_len, Endpoint::Boundary, Endpoint::Node(to), d));
+                        nodes[to].incoming[d.index()] = Some(id);
+                    }
+                }
+            }
+        }
+    }
+    // Boundary sinks: any side with no outgoing link gets a sink so cars
+    // can leave the grid (departures onto it despawn after traversing).
+    for r in 0..grid {
+        for c in 0..grid {
+            let n = node_id(r, c);
+            for d in DIRS {
+                if nodes[n].outgoing[d.index()].is_none() {
+                    let id = links.len();
+                    links.push(Link::new(lane_len, Endpoint::Node(n), Endpoint::Boundary, d));
+                    nodes[n].outgoing[d.index()] = Some(id);
+                }
+            }
+        }
+    }
+    Network::new(links, nodes, p_straight)
+}
+
+/// Ids of the boundary *source* links of a grid network (for inflow).
+pub fn source_links(net: &Network) -> Vec<usize> {
+    net.links
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l.from, Endpoint::Boundary) && matches!(l.to, Endpoint::Node(_)))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn departure_sides_are_consistent() {
+        // Heading south (approach N): straight exits S, left exits E.
+        assert_eq!(departure_side(Dir::N, Turn::Straight), Dir::S);
+        assert_eq!(departure_side(Dir::N, Turn::Left), Dir::E);
+        assert_eq!(departure_side(Dir::N, Turn::Right), Dir::W);
+        // Every (approach, turn) pair exits through a side != approach.
+        for d in DIRS {
+            for t in [Turn::Straight, Turn::Left, Turn::Right] {
+                assert_ne!(departure_side(d, t), d);
+            }
+        }
+    }
+
+    #[test]
+    fn single_intersection_geometry() {
+        let (net, inc, out) = single_intersection(10, 0.7);
+        assert_eq!(net.links.len(), 8);
+        assert_eq!(net.nodes.len(), 1);
+        for d in DIRS {
+            assert_eq!(net.links[inc[d.index()]].approach, d);
+            assert!(matches!(net.links[inc[d.index()]].to, Endpoint::Node(0)));
+            assert!(matches!(net.links[out[d.index()]].from, Endpoint::Node(0)));
+        }
+    }
+
+    #[test]
+    fn grid_geometry() {
+        let g = 3;
+        let net = grid_network(g, 5, 0.7);
+        // Every node has 4 incoming and 4 outgoing links.
+        for n in &net.nodes {
+            assert!(n.incoming.iter().all(|l| l.is_some()));
+            assert!(n.outgoing.iter().all(|l| l.is_some()));
+        }
+        // Interior link shared: node (0,0) outgoing east == node (0,1)
+        // incoming west.
+        let a = net.nodes[0].outgoing[Dir::E.opposite().opposite().index()];
+        // (explicit) outgoing through the E side of (0,0):
+        let out_e = net.nodes[0].outgoing[Dir::E.index()].unwrap();
+        let in_w = net.nodes[1].incoming[Dir::W.index()].unwrap();
+        assert_eq!(out_e, in_w);
+        let _ = a;
+        // Sources = 4 sides * grid boundary lanes = 4*g.
+        assert_eq!(source_links(&net).len(), 4 * g);
+    }
+
+    #[test]
+    fn cars_advance_and_compress() {
+        let (mut net, inc, _) = single_intersection(5, 1.0);
+        let lane = inc[Dir::N.index()];
+        let mut rng = Pcg32::seeded(1);
+        net.spawn(lane, &mut rng);
+        // Red for vertical: car advances to the stop line then waits.
+        for _ in 0..10 {
+            net.tick(&[false], &mut rng);
+        }
+        assert!(net.links[lane].stopline().is_some());
+        assert_eq!(net.links[lane].count(), 1);
+    }
+
+    #[test]
+    fn green_lets_cars_cross_and_exit() {
+        let (mut net, inc, _) = single_intersection(4, 1.0); // always straight
+        let lane = inc[Dir::N.index()];
+        let mut rng = Pcg32::seeded(2);
+        net.spawn(lane, &mut rng);
+        let mut exited = 0;
+        for _ in 0..12 {
+            exited += net.tick(&[true], &mut rng);
+        }
+        assert_eq!(exited, 1, "car should cross and leave via the S sink");
+        assert_eq!(net.total_cars(), 0);
+    }
+
+    #[test]
+    fn no_two_cars_share_a_cell_under_load() {
+        let (mut net, inc, _) = single_intersection(6, 0.7);
+        let mut rng = Pcg32::seeded(3);
+        for t in 0..300 {
+            let green_v = (t / 7) % 2 == 0;
+            net.tick(&[green_v], &mut rng);
+            for d in DIRS {
+                if rng.bernoulli(0.5) {
+                    net.spawn(inc[d.index()], &mut rng);
+                }
+            }
+            // Invariant: each cell holds at most one car by construction of
+            // Option — instead check conservation: count equals spawned - exited
+            // implicitly via no panic + occupancy bounded by capacity.
+            assert!(net.total_cars() <= 8 * 6);
+        }
+    }
+
+    #[test]
+    fn red_blocks_crossing() {
+        let (mut net, inc, _) = single_intersection(3, 1.0);
+        let lane = inc[Dir::E.index()]; // horizontal approach
+        let mut rng = Pcg32::seeded(4);
+        net.spawn(lane, &mut rng);
+        for _ in 0..10 {
+            net.tick(&[true], &mut rng); // vertical green → E is red
+        }
+        assert_eq!(net.links[lane].count(), 1, "car must still be waiting");
+        assert!(net.links[lane].stopline().is_some());
+    }
+
+    #[test]
+    fn entered_flags_record_arrivals() {
+        let (mut net, inc, _) = single_intersection(4, 1.0);
+        let mut rng = Pcg32::seeded(5);
+        net.tick(&[false], &mut rng);
+        assert!(!net.entered[inc[0]]);
+        net.spawn(inc[0], &mut rng);
+        assert!(net.entered[inc[0]]);
+    }
+
+    #[test]
+    fn spawn_blocked_when_entry_occupied() {
+        let (mut net, inc, _) = single_intersection(4, 1.0);
+        let mut rng = Pcg32::seeded(6);
+        assert!(net.spawn(inc[0], &mut rng));
+        assert!(!net.spawn(inc[0], &mut rng), "same tick, cell now occupied");
+    }
+
+    #[test]
+    fn grid_conservation() {
+        let mut net = grid_network(3, 5, 0.7);
+        let sources = source_links(&net);
+        let mut rng = Pcg32::seeded(7);
+        let mut spawned = 0usize;
+        let mut exited = 0usize;
+        for t in 0..400 {
+            let phases: Vec<bool> = (0..net.nodes.len()).map(|n| (t + n) % 8 < 4).collect();
+            exited += net.tick(&phases, &mut rng);
+            for &s in &sources {
+                if rng.bernoulli(0.1) && net.spawn(s, &mut rng) {
+                    spawned += 1;
+                }
+            }
+        }
+        assert_eq!(spawned, exited + net.total_cars(), "car conservation");
+        assert!(spawned > 50, "sanity: traffic actually flowed (spawned={spawned})");
+    }
+}

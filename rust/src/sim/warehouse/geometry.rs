@@ -1,0 +1,319 @@
+//! Warehouse floor geometry (paper §5.3, Fig 4).
+//!
+//! `R × R` robots, each owning a `5 × 5` region; regions overlap at their
+//! edges (stride 4), so the floor is `(4R+1) × (4R+1)` cells. The *item
+//! cells* of a region are the 12 interior edge cells (3 per side, corners
+//! excluded); each side's item shelf is shared with the adjacent region.
+
+/// Global cell coordinate (row, col).
+pub type Cell = (usize, usize);
+
+/// Region side length — fixed at 5 by the paper's layout.
+pub const REGION: usize = 5;
+/// Region stride (regions overlap by one shared edge line).
+pub const STRIDE: usize = REGION - 1;
+/// Item cells per region: 3 per side.
+pub const ITEMS_PER_REGION: usize = 12;
+
+/// Geometry of the floor.
+#[derive(Debug, Clone)]
+pub struct Floor {
+    /// Robots per side.
+    pub robots: usize,
+    /// Floor side length in cells.
+    pub side: usize,
+}
+
+impl Floor {
+    pub fn new(robots_per_side: usize) -> Floor {
+        Floor { robots: robots_per_side, side: STRIDE * robots_per_side + 1 }
+    }
+
+    /// Top-left corner of region `(ri, rj)`.
+    pub fn region_origin(&self, ri: usize, rj: usize) -> Cell {
+        debug_assert!(ri < self.robots && rj < self.robots);
+        (ri * STRIDE, rj * STRIDE)
+    }
+
+    /// The 12 item cells of region `(ri, rj)` in canonical order:
+    /// top (3, left→right), right (3, top→bottom), bottom (3, left→right),
+    /// left (3, top→bottom).
+    pub fn item_cells(&self, ri: usize, rj: usize) -> [Cell; ITEMS_PER_REGION] {
+        let (r0, c0) = self.region_origin(ri, rj);
+        let mut out = [(0usize, 0usize); ITEMS_PER_REGION];
+        let mut k = 0;
+        for dc in 1..=3 {
+            out[k] = (r0, c0 + dc); // top
+            k += 1;
+        }
+        for dr in 1..=3 {
+            out[k] = (r0 + dr, c0 + REGION - 1); // right
+            k += 1;
+        }
+        for dc in 1..=3 {
+            out[k] = (r0 + REGION - 1, c0 + dc); // bottom
+            k += 1;
+        }
+        for dr in 1..=3 {
+            out[k] = (r0 + dr, c0); // left
+            k += 1;
+        }
+        out
+    }
+
+    /// All shelf cells on the floor (union of all regions' item cells),
+    /// deduplicated, as a boolean mask indexed by `cell_id`.
+    pub fn shelf_mask(&self) -> Vec<bool> {
+        let mut mask = vec![false; self.side * self.side];
+        for ri in 0..self.robots {
+            for rj in 0..self.robots {
+                for cell in self.item_cells(ri, rj) {
+                    mask[self.cell_id(cell)] = true;
+                }
+            }
+        }
+        mask
+    }
+
+    #[inline]
+    pub fn cell_id(&self, (r, c): Cell) -> usize {
+        debug_assert!(r < self.side && c < self.side);
+        r * self.side + c
+    }
+
+    /// Is `cell` inside region `(ri, rj)`?
+    pub fn in_region(&self, ri: usize, rj: usize, (r, c): Cell) -> bool {
+        let (r0, c0) = self.region_origin(ri, rj);
+        (r0..r0 + REGION).contains(&r) && (c0..c0 + REGION).contains(&c)
+    }
+
+    /// Clamp a proposed move to the robot's region.
+    pub fn step_in_region(&self, ri: usize, rj: usize, (r, c): Cell, action: Action) -> Cell {
+        let (r0, c0) = self.region_origin(ri, rj);
+        let (mut nr, mut nc) = (r as isize, c as isize);
+        match action {
+            Action::Up => nr -= 1,
+            Action::Down => nr += 1,
+            Action::Left => nc -= 1,
+            Action::Right => nc += 1,
+            Action::Stay => {}
+        }
+        let nr = nr.clamp(r0 as isize, (r0 + REGION - 1) as isize) as usize;
+        let nc = nc.clamp(c0 as isize, (c0 + REGION - 1) as isize) as usize;
+        (nr, nc)
+    }
+}
+
+/// Robot movement actions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Action {
+    Up = 0,
+    Down = 1,
+    Left = 2,
+    Right = 3,
+    Stay = 4,
+}
+
+pub const NUM_ACTIONS: usize = 5;
+
+impl Action {
+    pub fn from_index(i: usize) -> Action {
+        match i {
+            0 => Action::Up,
+            1 => Action::Down,
+            2 => Action::Left,
+            3 => Action::Right,
+            4 => Action::Stay,
+            _ => panic!("bad action {i}"),
+        }
+    }
+}
+
+/// BFS path planning within a region: shortest path from `pos` to `target`
+/// avoiding `obstacles` (other robots currently inside the region — the
+/// online planning the paper's pre-programmed robots perform, after Claes
+/// et al. 2017). Returns the first action of the path, `Stay` if already
+/// there or unreachable. Deterministic: neighbors expanded in action order.
+pub fn plan_step_bfs(
+    floor: &Floor,
+    ri: usize,
+    rj: usize,
+    pos: Cell,
+    target: Cell,
+    obstacles: &[Cell],
+) -> Action {
+    if pos == target {
+        return Action::Stay;
+    }
+    let (r0, c0) = floor.region_origin(ri, rj);
+    let local = |(r, c): Cell| (r - r0) * REGION + (c - c0);
+    let mut parent_action = [None::<Action>; REGION * REGION];
+    let mut blocked = [false; REGION * REGION];
+    for &o in obstacles {
+        if floor.in_region(ri, rj, o) && o != target {
+            blocked[local(o)] = true;
+        }
+    }
+    let mut queue = std::collections::VecDeque::new();
+    let mut visited = [false; REGION * REGION];
+    visited[local(pos)] = true;
+    queue.push_back(pos);
+    while let Some(cur) = queue.pop_front() {
+        for a in [Action::Up, Action::Down, Action::Left, Action::Right] {
+            let nxt = floor.step_in_region(ri, rj, cur, a);
+            if nxt == cur {
+                continue;
+            }
+            let li = local(nxt);
+            if visited[li] || blocked[li] {
+                continue;
+            }
+            visited[li] = true;
+            // Record the FIRST action of the path: inherit from cur, or
+            // start a new path if cur is the source.
+            parent_action[li] =
+                if cur == pos { Some(a) } else { parent_action[local(cur)] };
+            if nxt == target {
+                return parent_action[li].unwrap_or(Action::Stay);
+            }
+            queue.push_back(nxt);
+        }
+    }
+    Action::Stay // target unreachable (boxed in)
+}
+
+/// Greedy scripted policy: one Manhattan step toward `target` (rows first,
+/// then columns — deterministic, as the paper's pre-programmed robots).
+pub fn greedy_step_toward(pos: Cell, target: Cell) -> Action {
+    if pos.0 < target.0 {
+        Action::Down
+    } else if pos.0 > target.0 {
+        Action::Up
+    } else if pos.1 < target.1 {
+        Action::Right
+    } else if pos.1 > target.1 {
+        Action::Left
+    } else {
+        Action::Stay
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_dimensions() {
+        let f = Floor::new(6);
+        assert_eq!(f.side, 25);
+        assert_eq!(f.region_origin(5, 5), (20, 20));
+    }
+
+    #[test]
+    fn item_cells_are_edges_no_corners() {
+        let f = Floor::new(6);
+        let cells = f.item_cells(0, 0);
+        assert_eq!(cells.len(), 12);
+        for (r, c) in cells {
+            let on_edge = r == 0 || r == 4 || c == 0 || c == 4;
+            let corner = (r == 0 || r == 4) && (c == 0 || c == 4);
+            assert!(on_edge && !corner, "({r},{c})");
+        }
+    }
+
+    #[test]
+    fn adjacent_regions_share_their_edge_shelf() {
+        let f = Floor::new(6);
+        let right_of_00: Vec<Cell> = f.item_cells(0, 0)[3..6].to_vec(); // right side
+        let left_of_01: Vec<Cell> = f.item_cells(0, 1)[9..12].to_vec(); // left side
+        assert_eq!(right_of_00, left_of_01, "shared shelf between (0,0) and (0,1)");
+    }
+
+    #[test]
+    fn shelf_mask_counts_unique_cells() {
+        let f = Floor::new(2); // 9x9 floor, 4 regions
+        let mask = f.shelf_mask();
+        let count = mask.iter().filter(|&&b| b).count();
+        // 4 regions * 12 = 48 slots, interior edges shared pairwise:
+        // 4 shared shelves of 3 cells → 48 - 12 = 36 unique.
+        assert_eq!(count, 36);
+    }
+
+    #[test]
+    fn movement_clamped_to_region() {
+        let f = Floor::new(6);
+        let origin = f.region_origin(1, 1); // (4,4)
+        assert_eq!(f.step_in_region(1, 1, origin, Action::Up), origin);
+        assert_eq!(f.step_in_region(1, 1, origin, Action::Left), origin);
+        assert_eq!(f.step_in_region(1, 1, origin, Action::Down), (5, 4));
+        assert_eq!(f.step_in_region(1, 1, (8, 8), Action::Down), (8, 8));
+    }
+
+    #[test]
+    fn greedy_reaches_target() {
+        let mut pos = (0, 0);
+        let target = (3, 2);
+        let f = Floor::new(6);
+        for _ in 0..10 {
+            let a = greedy_step_toward(pos, target);
+            pos = f.step_in_region(0, 0, pos, a);
+        }
+        assert_eq!(pos, target);
+    }
+
+    #[test]
+    fn greedy_stays_at_target() {
+        assert_eq!(greedy_step_toward((2, 2), (2, 2)), Action::Stay);
+    }
+
+    #[test]
+    fn bfs_reaches_target_in_manhattan_steps() {
+        let f = Floor::new(6);
+        let mut pos = (0, 0);
+        let target = (4, 3);
+        let mut steps = 0;
+        while pos != target {
+            let a = plan_step_bfs(&f, 0, 0, pos, target, &[]);
+            assert_ne!(a, Action::Stay, "must make progress");
+            pos = f.step_in_region(0, 0, pos, a);
+            steps += 1;
+            assert!(steps <= 7);
+        }
+        assert_eq!(steps, 7); // manhattan distance
+    }
+
+    #[test]
+    fn bfs_routes_around_obstacles() {
+        let f = Floor::new(6);
+        // Wall of obstacles between (2,0) and (2,4), gap at (0,2) row 0.
+        let obstacles = [(1, 0), (1, 1), (1, 2), (1, 3)];
+        let mut pos = (2, 0);
+        let target = (0, 0);
+        let mut steps = 0;
+        while pos != target && steps < 20 {
+            let a = plan_step_bfs(&f, 0, 0, pos, target, &obstacles);
+            if a == Action::Stay {
+                break;
+            }
+            pos = f.step_in_region(0, 0, pos, a);
+            steps += 1;
+        }
+        assert_eq!(pos, target, "should detour via column 4");
+        assert!(steps > 2, "detour is longer than the direct path");
+    }
+
+    #[test]
+    fn bfs_boxed_in_stays() {
+        let f = Floor::new(6);
+        let obstacles = [(0, 1), (1, 0), (1, 1)];
+        let a = plan_step_bfs(&f, 0, 0, (0, 0), (4, 4), &obstacles);
+        assert_eq!(a, Action::Stay);
+    }
+
+    #[test]
+    fn bfs_at_target_stays() {
+        let f = Floor::new(6);
+        assert_eq!(plan_step_bfs(&f, 0, 0, (2, 2), (2, 2), &[]), Action::Stay);
+    }
+}

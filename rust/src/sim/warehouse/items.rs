@@ -1,0 +1,184 @@
+//! Item lifecycle shared by the warehouse GS and LS: stochastic spawning
+//! on shelf cells, aging, optional fixed-lifetime expiry (§5.4 variant),
+//! and collection.
+
+use crate::util::Pcg32;
+
+/// State of one shelf cell.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Slot {
+    pub active: bool,
+    /// Steps since the item appeared (0 = appeared this step).
+    pub age: u32,
+}
+
+/// A set of shelf slots addressed by dense local index. The GS instantiates
+/// one over every shelf cell of the floor; the LS over the agent region's
+/// 12 cells — **the same lifecycle code**, per the LS-fidelity design rule.
+#[derive(Debug, Clone)]
+pub struct ItemSet {
+    pub slots: Vec<Slot>,
+    /// Spawn probability per inactive slot per step.
+    pub spawn_prob: f32,
+    /// If > 0, items vanish after exactly this many steps (paper §5.4).
+    pub fixed_lifetime: usize,
+    /// Per-slot flag: did the item expire during the last `tick`? (The
+    /// §5.4 influence sources are these expiry events.)
+    pub last_expired: Vec<bool>,
+}
+
+impl ItemSet {
+    pub fn new(n: usize, spawn_prob: f32, fixed_lifetime: usize) -> ItemSet {
+        ItemSet {
+            slots: vec![Slot::default(); n],
+            spawn_prob,
+            fixed_lifetime,
+            last_expired: vec![false; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn reset(&mut self) {
+        self.slots.fill(Slot::default());
+        self.last_expired.fill(false);
+    }
+
+    pub fn active(&self, i: usize) -> bool {
+        self.slots[i].active
+    }
+
+    /// Collect the item at slot `i` if active. Returns true on success.
+    pub fn collect(&mut self, i: usize) -> bool {
+        if self.slots[i].active {
+            self.slots[i] = Slot::default();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Advance the lifecycle one step: age active items, expire those at
+    /// the fixed lifetime, then spawn new items on inactive slots.
+    /// Returns the number of items that expired (vanished uncollected).
+    ///
+    /// IMPORTANT for GS/LS fidelity: expiry happens when `age` *reaches*
+    /// `fixed_lifetime`, so an item is observable for exactly
+    /// `fixed_lifetime` steps.
+    pub fn tick(&mut self, rng: &mut Pcg32) -> usize {
+        let mut expired = 0;
+        self.last_expired.fill(false);
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if slot.active {
+                slot.age += 1;
+                if self.fixed_lifetime > 0 && slot.age as usize >= self.fixed_lifetime {
+                    *slot = Slot::default();
+                    self.last_expired[i] = true;
+                    expired += 1;
+                }
+            }
+        }
+        for slot in &mut self.slots {
+            if !slot.active && rng.bernoulli(self.spawn_prob) {
+                *slot = Slot { active: true, age: 0 };
+            }
+        }
+        expired
+    }
+
+    /// Index of the oldest active slot (ties by lowest index), if any.
+    pub fn oldest_active(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.active)
+            .max_by_key(|(i, s)| (s.age, usize::MAX - i))
+            .map(|(i, _)| i)
+    }
+
+    pub fn count_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.active).count()
+    }
+
+    pub fn write_bits(&self, out: &mut [f32]) {
+        for (o, s) in out.iter_mut().zip(&self.slots) {
+            *o = if s.active { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_rate_approximates_probability() {
+        // With no removal the set saturates: after 200 steps at p=0.02 per
+        // slot, essentially every slot should have filled exactly once.
+        let mut set = ItemSet::new(100, 0.02, 0);
+        let mut rng = Pcg32::seeded(1);
+        let mut spawned = 0usize;
+        for _ in 0..200 {
+            let before = set.count_active();
+            set.tick(&mut rng);
+            spawned += set.count_active() - before;
+        }
+        assert!((90..=100).contains(&spawned), "spawned={spawned}");
+        // And the single-step spawn count matches p within noise: fresh set,
+        // one tick over many slots.
+        let mut big = ItemSet::new(20_000, 0.02, 0);
+        big.tick(&mut rng);
+        let rate = big.count_active() as f64 / 20_000.0;
+        assert!((rate - 0.02).abs() < 0.005, "rate={rate}");
+    }
+
+    #[test]
+    fn fixed_lifetime_expires_exactly() {
+        let mut set = ItemSet::new(1, 0.0, 8);
+        set.slots[0] = Slot { active: true, age: 0 };
+        let mut rng = Pcg32::seeded(2);
+        let mut alive_steps = 0;
+        for _ in 0..20 {
+            if set.active(0) {
+                alive_steps += 1;
+            }
+            set.tick(&mut rng);
+        }
+        assert_eq!(alive_steps, 8);
+    }
+
+    #[test]
+    fn collect_deactivates() {
+        let mut set = ItemSet::new(3, 0.0, 0);
+        set.slots[1] = Slot { active: true, age: 5 };
+        assert!(set.collect(1));
+        assert!(!set.collect(1), "double collection must fail");
+        assert_eq!(set.count_active(), 0);
+    }
+
+    #[test]
+    fn oldest_active_prefers_age_then_index() {
+        let mut set = ItemSet::new(4, 0.0, 0);
+        set.slots[1] = Slot { active: true, age: 3 };
+        set.slots[2] = Slot { active: true, age: 7 };
+        set.slots[3] = Slot { active: true, age: 7 };
+        assert_eq!(set.oldest_active(), Some(2), "oldest; lowest index on tie");
+        assert_eq!(ItemSet::new(2, 0.0, 0).oldest_active(), None);
+    }
+
+    #[test]
+    fn write_bits_roundtrip() {
+        let mut set = ItemSet::new(3, 0.0, 0);
+        set.slots[0].active = true;
+        set.slots[2].active = true;
+        let mut out = [0.0f32; 3];
+        set.write_bits(&mut out);
+        assert_eq!(out, [1.0, 0.0, 1.0]);
+    }
+}

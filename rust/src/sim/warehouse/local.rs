@@ -1,0 +1,313 @@
+//! The warehouse **local simulator** (LS): the agent's 5×5 region only.
+//! Neighbor robots (standard mode) or the expiry timer (memory mode) are
+//! replaced by influence-source realizations.
+
+use super::geometry::{Action, Floor, ITEMS_PER_REGION, NUM_ACTIONS, REGION};
+use super::global::{ALSH_DIM, DSET_DIM, OBS_DIM};
+use super::items::ItemSet;
+use crate::config::WarehouseConfig;
+use crate::core::{LocalEnv, Step};
+use crate::util::Pcg32;
+
+pub struct WarehouseLocalEnv {
+    cfg: WarehouseConfig,
+    /// Local 12-slot item set (slot k == canonical item cell k).
+    items: ItemSet,
+    /// Agent position in local coordinates (0..REGION, 0..REGION).
+    pos: (usize, usize),
+    /// Local coordinates of the 12 item cells.
+    item_cells: [(usize, usize); ITEMS_PER_REGION],
+    memory_mode: bool,
+    floor: Floor,
+    rng: Pcg32,
+    t: usize,
+    /// Ages of items removed by influence samples (external disappearance)
+    /// — drives the Fig 6 item-lifetime histogram.
+    pub removed_ages: Vec<u32>,
+}
+
+impl WarehouseLocalEnv {
+    pub fn new(cfg: &WarehouseConfig) -> WarehouseLocalEnv {
+        let memory_mode = cfg.fixed_item_lifetime > 0;
+        // In memory mode, expiry is driven by the influence samples (that's
+        // the thing being predicted), so the local item set does not expire
+        // by itself.
+        let items = ItemSet::new(ITEMS_PER_REGION, cfg.item_prob, 0);
+        // A single-region floor gives the local item-cell geometry.
+        let floor = Floor::new(1);
+        let cells = floor.item_cells(0, 0);
+        let mut item_cells = [(0usize, 0usize); ITEMS_PER_REGION];
+        item_cells.copy_from_slice(&cells);
+        WarehouseLocalEnv {
+            cfg: cfg.clone(),
+            items,
+            pos: (REGION / 2, REGION / 2),
+            item_cells,
+            memory_mode,
+            floor,
+            rng: Pcg32::seeded(0),
+            t: 0,
+            removed_ages: Vec::new(),
+        }
+    }
+
+    pub fn memory_mode(&self) -> bool {
+        self.memory_mode
+    }
+
+    /// Ages of the 12 local items (diagnostics: Fig 6 bottom histogram).
+    pub fn item_ages(&self) -> [u32; ITEMS_PER_REGION] {
+        let mut out = [0u32; ITEMS_PER_REGION];
+        for (k, s) in self.items.slots.iter().enumerate() {
+            out[k] = s.age;
+        }
+        out
+    }
+
+    pub fn item_active(&self, k: usize) -> bool {
+        self.items.active(k)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn items_mut(&mut self) -> &mut ItemSet {
+        &mut self.items
+    }
+}
+
+impl LocalEnv for WarehouseLocalEnv {
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn num_actions(&self) -> usize {
+        NUM_ACTIONS
+    }
+
+    fn num_influence_sources(&self) -> usize {
+        ITEMS_PER_REGION
+    }
+
+    fn dset_dim(&self) -> usize {
+        DSET_DIM
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::seeded(seed);
+        self.items.reset();
+        self.pos = (REGION / 2, REGION / 2);
+        self.t = 0;
+        // Same warm-up as the GS so initial item distributions match
+        // (skipped in the memory variant, mirroring the GS).
+        if !self.memory_mode {
+            for _ in 0..25 {
+                self.items.tick(&mut self.rng);
+            }
+        }
+    }
+
+    fn observe(&self, out: &mut [f32]) {
+        out[..REGION * REGION].fill(0.0);
+        out[self.pos.0 * REGION + self.pos.1] = 1.0;
+        self.items.write_bits(&mut out[REGION * REGION..OBS_DIM]);
+    }
+
+    fn dset(&self, out: &mut [f32]) {
+        self.items.write_bits(&mut out[..ITEMS_PER_REGION]);
+        for (k, &cell) in self.item_cells.iter().enumerate() {
+            out[ITEMS_PER_REGION + k] = if cell == self.pos { 1.0 } else { 0.0 };
+        }
+    }
+
+    fn step_with_influence(&mut self, action: usize, influence: &[bool]) -> Step {
+        debug_assert_eq!(influence.len(), ITEMS_PER_REGION);
+        // 1. Agent moves.
+        self.pos = self.floor.step_in_region(0, 0, self.pos, Action::from_index(action));
+
+        let mut reward = 0.0;
+        if self.memory_mode {
+            // Memory mode: agent collects first, then the influence samples
+            // realize expiry (mirrors GS ordering: collect happens before
+            // the lifecycle tick that expires items).
+            if let Some(k) = self.item_cells.iter().position(|&c| c == self.pos) {
+                if self.items.collect(k) {
+                    reward = 1.0;
+                }
+            }
+            for (k, &gone) in influence.iter().enumerate() {
+                if gone {
+                    let age = self.items.slots[k].age;
+                    if self.items.collect(k) {
+                        self.removed_ages.push(age);
+                    }
+                }
+            }
+        } else {
+            // Standard mode: neighbors (the influence) act first — a
+            // neighbor standing on a shared active item takes it before the
+            // agent can (paper §5.3.1), then the agent collects.
+            for (k, &present) in influence.iter().enumerate() {
+                if present {
+                    let age = self.items.slots[k].age;
+                    if self.items.collect(k) {
+                        self.removed_ages.push(age);
+                    }
+                }
+            }
+            if let Some(k) = self.item_cells.iter().position(|&c| c == self.pos) {
+                if self.items.collect(k) {
+                    reward = 1.0;
+                }
+            }
+        }
+
+        // 2. Item lifecycle (spawn only — local set never self-expires).
+        self.items.tick(&mut self.rng);
+
+        self.t += 1;
+        Step { reward, done: self.t >= self.cfg.episode_len }
+    }
+}
+
+/// Local ALSH feature writer (for the Appendix-B ablation parity with the
+/// GS): d-set + agent position bitmap.
+pub fn alsh_of(env: &WarehouseLocalEnv, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), ALSH_DIM);
+    env.dset(&mut out[..DSET_DIM]);
+    out[DSET_DIM..].fill(0.0);
+    out[DSET_DIM + env.pos.0 * REGION + env.pos.1] = 1.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::global::WarehouseGlobalEnv;
+    use super::*;
+    use crate::core::{Environment, GlobalEnv};
+
+    fn cfg() -> WarehouseConfig {
+        WarehouseConfig::default()
+    }
+
+    #[test]
+    fn dims_match_global() {
+        let ls = WarehouseLocalEnv::new(&cfg());
+        let gs = WarehouseGlobalEnv::new(&cfg());
+        assert_eq!(ls.obs_dim(), gs.obs_dim());
+        assert_eq!(ls.dset_dim(), gs.dset_dim());
+        assert_eq!(ls.num_actions(), gs.num_actions());
+        assert_eq!(ls.num_influence_sources(), gs.num_influence_sources());
+    }
+
+    #[test]
+    fn influence_removes_items_before_agent() {
+        let mut c = cfg();
+        c.item_prob = 0.0;
+        let mut ls = WarehouseLocalEnv::new(&c);
+        ls.reset(1);
+        // Plant an item at cell 0 = local (0,1); walk the agent onto it
+        // while a neighbor "arrives" at the same time — the neighbor wins.
+        ls.items_mut().slots[0].active = true;
+        ls.step_with_influence(0, &[false; 12]); // up → (1,2)
+        ls.step_with_influence(0, &[false; 12]); // up → (0,2)
+        let mut u = [false; 12];
+        u[0] = true;
+        let s = ls.step_with_influence(2, &u); // left → (0,1): contested
+        assert_eq!(s.reward, 0.0, "neighbor collects shared items first");
+        assert!(!ls.item_active(0));
+    }
+
+    #[test]
+    fn agent_collects_when_uncontested() {
+        let mut c = cfg();
+        c.item_prob = 0.0;
+        let mut ls = WarehouseLocalEnv::new(&c);
+        ls.reset(2);
+        ls.items_mut().slots[0].active = true;
+        ls.step_with_influence(0, &[false; 12]);
+        ls.step_with_influence(0, &[false; 12]);
+        let s = ls.step_with_influence(2, &[false; 12]);
+        assert_eq!(s.reward, 1.0);
+    }
+
+    #[test]
+    fn memory_mode_agent_beats_expiry_same_step() {
+        let mut c = cfg();
+        c.item_prob = 0.0;
+        c.fixed_item_lifetime = 8;
+        let mut ls = WarehouseLocalEnv::new(&c);
+        ls.reset(3);
+        ls.items_mut().slots[0].active = true;
+        ls.step_with_influence(0, &[false; 12]);
+        ls.step_with_influence(0, &[false; 12]);
+        let mut u = [false; 12];
+        u[0] = true; // expiry fires the very step the agent arrives
+        let s = ls.step_with_influence(2, &u);
+        assert_eq!(s.reward, 1.0, "in memory mode the agent collects before expiry");
+    }
+
+    #[test]
+    fn items_do_not_self_expire_locally() {
+        let mut c = cfg();
+        c.item_prob = 0.0;
+        c.fixed_item_lifetime = 8; // memory mode, but expiry comes via u
+        let mut ls = WarehouseLocalEnv::new(&c);
+        ls.reset(4);
+        ls.items_mut().slots[5].active = true;
+        for _ in 0..30 {
+            ls.step_with_influence(4, &[false; 12]);
+        }
+        assert!(ls.item_active(5), "without influence, local items persist");
+        assert!(ls.item_ages()[5] >= 30);
+    }
+
+    /// Mechanism fidelity: replaying the GS's realized influence sequence
+    /// through the LS must *reduce* local item occupancy (the neighbor
+    /// channel works), while replaying all-zeros must saturate the shelf.
+    /// (Exact distribution match is not expected from open-loop replay —
+    /// the AIP closes the loop on the LS's own d-set at simulation time.)
+    #[test]
+    fn ls_replays_gs_item_dynamics() {
+        let c = cfg();
+        let mut gs = WarehouseGlobalEnv::new(&c);
+        let mut ls_replay = WarehouseLocalEnv::new(&c);
+        let mut ls_zero = WarehouseLocalEnv::new(&c);
+        gs.reset(7);
+        ls_replay.reset(7);
+        ls_zero.reset(7);
+        let mut u = [0.0f32; 12];
+        let (mut gs_bits, mut rep_bits, mut zero_bits) = (0.0f64, 0.0f64, 0.0f64);
+        let mut d = [0.0f32; 24];
+        let steps = 3000;
+        for t in 0..steps {
+            if gs.step(4).done {
+                let s = 100 + t as u64;
+                gs.reset(s);
+                ls_replay.reset(s);
+                ls_zero.reset(s);
+            }
+            gs.influence_sources(&mut u);
+            let ub: Vec<bool> = u.iter().map(|&x| x > 0.5).collect();
+            ls_replay.step_with_influence(4, &ub);
+            ls_zero.step_with_influence(4, &[false; 12]);
+            gs.dset(&mut d);
+            gs_bits += d[..12].iter().sum::<f32>() as f64;
+            let mut ld = [0.0f32; 24];
+            ls_replay.dset(&mut ld);
+            rep_bits += ld[..12].iter().sum::<f32>() as f64;
+            ls_zero.dset(&mut ld);
+            zero_bits += ld[..12].iter().sum::<f32>() as f64;
+        }
+        let gs_rate = gs_bits / steps as f64 / 12.0;
+        let rep_rate = rep_bits / steps as f64 / 12.0;
+        let zero_rate = zero_bits / steps as f64 / 12.0;
+        assert!(
+            rep_rate < zero_rate - 0.1,
+            "u replay must remove items: replay={rep_rate:.3} zero={zero_rate:.3}"
+        );
+        assert!(
+            rep_rate > gs_rate - 0.02,
+            "LS cannot have *fewer* items than the GS (fewer collectors): \
+             replay={rep_rate:.3} gs={gs_rate:.3}"
+        );
+        assert!(gs_rate > 0.01 && gs_rate < 0.5, "gs occupancy sane: {gs_rate:.3}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Seeded property-testing mini-framework (proptest is not in the offline
+//! vendored crate set — see DESIGN.md §6).
+//!
+//! Provides `forall`-style runners over seeded generators: each case is a
+//! pure function of `(base_seed, case_index)` so every failure message
+//! pinpoints a reproducible case. No shrinking — cases are kept small by
+//! construction instead.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath flags)
+//! use ials::testkit::{forall, Gen};
+//! forall("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::Pcg32;
+
+/// Per-case generator handed to property bodies.
+pub struct Gen {
+    rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Gen {
+        Gen { rng: Pcg32::new(seed ^ 0x9e3779b97f4a7c15, case as u64 + 1), case }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        self.rng.range(lo, hi_incl + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi_incl: i64) -> i64 {
+        lo + self.rng.below((hi_incl - lo + 1) as usize) as i64
+    }
+
+    /// Vector of f32s with the given length range and value range.
+    pub fn vec_f32(&mut self, len_lo: usize, len_hi: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len_lo, len_hi);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_bool(&mut self, len: usize) -> Vec<bool> {
+        (0..len).map(|_| self.bool()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Base seed for a property: stable per-property (hash of name) unless
+/// `IALS_TEST_SEED` overrides it.
+fn base_seed(name: &str) -> u64 {
+    if let Ok(s) = std::env::var("IALS_TEST_SEED") {
+        if let Ok(v) = s.parse::<u64>() {
+            return v;
+        }
+    }
+    // FNV-1a over the property name.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `cases` independent cases of a property. Panics (with the case
+/// index + seed) on the first failing case.
+pub fn forall(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
+    let seed = base_seed(name);
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}): {msg}\n\
+                 reproduce with IALS_TEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("reverse twice is identity", 100, |g| {
+            let xs = g.vec_f32(0, 20, -5.0, 5.0);
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", 10, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut a = Gen::new(base_seed("x"), 3);
+        let mut b = Gen::new(base_seed("x"), 3);
+        assert_eq!(a.vec_f32(5, 5, 0.0, 1.0), b.vec_f32(5, 5, 0.0, 1.0));
+    }
+
+    #[test]
+    fn ranges_respected() {
+        forall("ranges respected", 500, |g| {
+            let x = g.usize_in(2, 7);
+            assert!((2..=7).contains(&x));
+            let y = g.i64_in(-3, 3);
+            assert!((-3..=3).contains(&y));
+            let z = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&z));
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CSV writer/reader for learning curves and benchmark tables.
+//! (No serde in the offline crate set; the format we need is trivial.)
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Append-style CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `path` and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut out = BufWriter::new(file);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    /// Write one row of f64 values (formatted with enough precision).
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            values.len() == self.columns,
+            "row has {} values, header has {}",
+            values.len(),
+            self.columns
+        );
+        let mut line = String::with_capacity(values.len() * 12);
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{v:.6}"));
+        }
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    /// Write one row of raw string cells.
+    pub fn row_str(&mut self, values: &[String]) -> Result<()> {
+        anyhow::ensure!(values.len() == self.columns, "column count mismatch");
+        writeln!(self.out, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a CSV written by [`CsvWriter`]: returns (header, rows-of-f64).
+pub fn read_numeric(path: impl AsRef<Path>) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let file = File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut lines = BufReader::new(file).lines();
+    let header = lines
+        .next()
+        .context("empty csv")??
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f64>, _> = line.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        rows.push(row.context("non-numeric cell")?);
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("ials_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row(&[3.0, -4.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let (header, rows) = read_numeric(&path).unwrap();
+        assert_eq!(header, vec!["a", "b"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][1], -4.25);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let dir = std::env::temp_dir().join("ials_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&[1.0]).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

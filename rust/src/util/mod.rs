@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic PRNG, running statistics, CSV
+//! output, logging and wall-clock timing.
+
+pub mod csv;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use stats::{OnlineStats, Summary};
+pub use timer::Stopwatch;

@@ -1,0 +1,96 @@
+//! Wall-clock timing helpers. Learning curves in the paper are plotted
+//! against *wall-clock time* (Figures 3/5/6/10–12), so timing is a
+//! first-class measurement, not just profiling.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch that can be paused (e.g. to exclude evaluation time from the
+/// training clock, matching the paper's protocol of interleaved evals).
+#[derive(Debug)]
+pub struct Stopwatch {
+    accumulated: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { accumulated: Duration::ZERO, started: None }
+    }
+
+    pub fn start() -> Self {
+        let mut s = Self::new();
+        s.resume();
+        s
+    }
+
+    pub fn resume(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn pause(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed();
+        }
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.started.is_some()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.accumulated + t0.elapsed(),
+            None => self.accumulated,
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.accumulated = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pause_excludes_time() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(10));
+        sw.pause();
+        let at_pause = sw.elapsed();
+        std::thread::sleep(Duration::from_millis(20));
+        // No time accrued while paused.
+        assert_eq!(sw.elapsed(), at_pause);
+        sw.resume();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed() > at_pause);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

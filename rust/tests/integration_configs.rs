@@ -1,0 +1,87 @@
+//! Shipped configuration files must parse, validate, and agree with the
+//! compiled artifact geometry; plus failure-injection on the runtime and
+//! config layers.
+
+use ials::config::ExperimentConfig;
+
+#[test]
+fn all_shipped_configs_parse_and_validate() {
+    let entries = std::fs::read_dir("configs").expect("configs/ missing");
+    let mut n = 0;
+    for e in entries {
+        let path = e.unwrap().path();
+        if path.extension().and_then(|s| s.to_str()) != Some("toml") {
+            continue;
+        }
+        let cfg = ExperimentConfig::load(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        // Figure configs must keep the artifact-compatible batch geometry.
+        assert_eq!(cfg.ppo.num_envs, 16, "{}", path.display());
+        assert_eq!(cfg.ppo.rollout_len, 128, "{}", path.display());
+        assert_eq!(cfg.ppo.minibatch, 256, "{}", path.display());
+        n += 1;
+    }
+    assert!(n >= 7, "expected one config per figure, found {n}");
+}
+
+#[test]
+fn config_name_matches_figure_harness() {
+    for name in ials::coordinator::FIGURES {
+        let path = format!("configs/{name}.toml");
+        let cfg = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(&cfg.name, name, "{path}: name must match the harness figure id");
+    }
+}
+
+#[test]
+fn corrupted_manifest_is_rejected_cleanly() {
+    let dir = std::env::temp_dir().join("ials_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), "version 1\nartifact broken\n").unwrap();
+    let err = match ials::runtime::Runtime::load(&dir) { Err(e) => e, Ok(_) => panic!("should fail") };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing model") || msg.contains("artifact"), "{msg}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn missing_artifacts_dir_mentions_make_artifacts() {
+    let err = match ials::runtime::Runtime::load("/nonexistent/path") { Err(e) => e, Ok(_) => panic!("should fail") };
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn missing_hlo_file_fails_at_call_not_load() {
+    // A manifest referencing a nonexistent HLO file loads fine (lazy
+    // compile) but fails with a useful error on first call.
+    let dir = std::env::temp_dir().join("ials_missing_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "version 1\nmodel m\nparam w f32 2\nendmodel\n\
+         artifact a\nmodel m\nhlo gone.hlo.txt\ninput param w\nendartifact\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("m.params.bin"), [0u8; 8]).unwrap();
+    let rt = ials::runtime::Runtime::load(&dir).unwrap();
+    let mut store = rt.load_store("m").unwrap();
+    let err = rt.call("a", &mut store, &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("gone.hlo.txt"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn truncated_params_bin_is_rejected() {
+    let dir = std::env::temp_dir().join("ials_truncated_params");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "version 1\nmodel m\nparam w f32 4\nendmodel\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("m.params.bin"), [0u8; 7]).unwrap(); // needs 16
+    let rt = ials::runtime::Runtime::load(&dir).unwrap();
+    let err = rt.load_store("m").unwrap_err();
+    assert!(format!("{err:#}").contains("expected 16"));
+    std::fs::remove_dir_all(dir).ok();
+}

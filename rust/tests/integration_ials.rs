@@ -1,0 +1,128 @@
+//! Integration over the influence layer with real artifacts + real GS
+//! data: the paper's CE orderings must hold, and the IALS must be usable
+//! as a drop-in training simulator.
+
+use ials::config::{ExperimentConfig, SimulatorKind};
+use ials::coordinator::experiment::prepare_predictor;
+use ials::core::VecEnv;
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load("artifacts").expect("run `make artifacts` first"))
+}
+
+fn base(sim: SimulatorKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.simulator = sim;
+    cfg.aip.dataset_size = 6000;
+    cfg.aip.train_epochs = 3;
+    cfg
+}
+
+/// Fig 3 bottom panel ordering: trained AIP CE < untrained AIP CE.
+#[test]
+fn trained_aip_beats_untrained_on_traffic() {
+    let rt = runtime();
+    let trained = prepare_predictor(&rt, &base(SimulatorKind::Ials), 11, 16).unwrap();
+    let untrained = prepare_predictor(&rt, &base(SimulatorKind::UntrainedIals), 11, 16).unwrap();
+    assert!(
+        trained.aip_ce < untrained.aip_ce - 0.05,
+        "trained CE {} must beat untrained CE {}",
+        trained.aip_ce,
+        untrained.aip_ce
+    );
+    assert!(trained.prep_secs > 0.0);
+    assert_eq!(untrained.prep_secs, 0.0);
+}
+
+/// Appendix E ordering (Eq. 9): trained < F-IALS(0.1) < F-IALS(0.5) —
+/// the true boundary inflow is 0.1, so the 0.5 marginal is badly wrong.
+#[test]
+fn fials_ce_ordering_matches_eq9() {
+    let rt = runtime();
+    let trained = prepare_predictor(&rt, &base(SimulatorKind::Ials), 13, 16).unwrap();
+    let mut f01 = base(SimulatorKind::FixedIals);
+    f01.aip.fixed_p = 0.1;
+    let mut f05 = base(SimulatorKind::FixedIals);
+    f05.aip.fixed_p = 0.5;
+    let ce01 = prepare_predictor(&rt, &f01, 13, 16).unwrap().aip_ce;
+    let ce05 = prepare_predictor(&rt, &f05, 13, 16).unwrap().aip_ce;
+    assert!(
+        trained.aip_ce < ce01 && ce01 < ce05,
+        "Eq. 9 ordering violated: trained {} / f0.1 {} / f0.5 {}",
+        trained.aip_ce,
+        ce01,
+        ce05
+    );
+}
+
+/// Warehouse: the data-estimated marginal (F-IALS) must beat a grossly
+/// wrong constant but lose to the trained GRU (Eq. 10).
+#[test]
+fn warehouse_gru_beats_estimated_marginal() {
+    let rt = runtime();
+    let mut ials_cfg = base(SimulatorKind::Ials);
+    ials_cfg.domain = ials::config::DomainKind::Warehouse;
+    ials_cfg.aip.dataset_size = 16_000;
+    ials_cfg.aip.train_epochs = 20; // BPTT sees dataset/(B*T) batches/epoch
+    let mut fdata = base(SimulatorKind::FixedIals);
+    fdata.domain = ials::config::DomainKind::Warehouse;
+    fdata.aip.fixed_p = -1.0;
+    let trained = prepare_predictor(&rt, &ials_cfg, 17, 16).unwrap();
+    let marginal = prepare_predictor(&rt, &fdata, 17, 16).unwrap();
+    assert!(
+        trained.aip_ce < marginal.aip_ce,
+        "Eq. 10: GRU CE {} must beat marginal CE {}",
+        trained.aip_ce,
+        marginal.aip_ce
+    );
+    assert!(marginal.prep_secs > 0.0, "10K-sample estimation is timed");
+}
+
+/// The IALS vec-env built from a *real* trained predictor steps correctly
+/// and exposes the same interface geometry as the GS.
+#[test]
+fn ials_env_from_trained_predictor_steps() {
+    let rt = runtime();
+    let cfg = base(SimulatorKind::Ials);
+    let prep = prepare_predictor(&rt, &cfg, 19, 16).unwrap();
+    let mut env = ials::coordinator::experiment::make_train_env(&cfg, prep.predictor);
+    let mut gs = ials::coordinator::experiment::make_train_env(&cfg, None);
+    assert_eq!(env.obs_dim(), gs.obs_dim());
+    assert_eq!(env.num_actions(), gs.num_actions());
+    env.reset_all(5);
+    let mut rewards = vec![0.0f32; 16];
+    let mut dones = vec![false; 16];
+    let actions = vec![0usize; 16];
+    for _ in 0..20 {
+        env.step_all(&actions, &mut rewards, &mut dones);
+        assert!(rewards.iter().all(|r| r.is_finite()));
+    }
+}
+
+/// Memory experiment prerequisite (Fig 6 bottom): under the fixed-lifetime
+/// variant, the *recurrent* AIP learns the 8-step expiry far better than
+/// the memoryless one.
+#[test]
+fn memory_aip_predicts_fixed_lifetime_better() {
+    let rt = runtime();
+    let mut m_cfg = base(SimulatorKind::Ials);
+    m_cfg.domain = ials::config::DomainKind::Warehouse;
+    m_cfg.warehouse.fixed_item_lifetime = 8;
+    m_cfg.aip.seq_len = 8; // GRU
+    m_cfg.aip.dataset_size = 24_000;
+    m_cfg.aip.train_epochs = 50;
+    m_cfg.aip.lr = 3e-3;
+    let mut nm_cfg = m_cfg.clone();
+    nm_cfg.aip.seq_len = 1; // FNN
+
+    let m = prepare_predictor(&rt, &m_cfg, 23, 16).unwrap();
+    let nm = prepare_predictor(&rt, &nm_cfg, 23, 16).unwrap();
+    assert!(
+        m.aip_ce < nm.aip_ce - 0.01,
+        "M-AIP CE {} should beat NM-AIP CE {} on the deterministic-lifetime task",
+        m.aip_ce,
+        nm.aip_ce
+    );
+}

@@ -1,0 +1,219 @@
+//! Integration tests over the real AOT artifacts: the python→HLO→PJRT→rust
+//! round trip. Requires `make artifacts` (the Makefile test target runs it).
+
+use ials::nn::ParamStore;
+use ials::runtime::{DataArg, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::load("artifacts").expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn policy_forward_shapes_and_finiteness() {
+    let rt = runtime();
+    let mut store = rt.load_store("policy_traffic").unwrap();
+    let obs = vec![0.5f32; 16 * 42];
+    let outs = rt
+        .call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)])
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].len(), 16 * 2); // logits
+    assert_eq!(outs[1].len(), 16); // values
+    assert!(outs.iter().flatten().all(|x| x.is_finite()));
+}
+
+#[test]
+fn b1_and_b16_agree_rowwise() {
+    let rt = runtime();
+    let mut store = rt.load_store("policy_traffic").unwrap();
+    let mut obs = vec![0.0f32; 16 * 42];
+    for (i, x) in obs.iter_mut().enumerate() {
+        *x = ((i % 7) as f32) * 0.1 - 0.3;
+    }
+    let big = rt
+        .call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)])
+        .unwrap();
+    let row0 = &obs[..42];
+    let small = rt
+        .call("policy_traffic_fwd_b1", &mut store, &[DataArg::F32(row0)])
+        .unwrap();
+    for k in 0..2 {
+        assert!(
+            (big[0][k] - small[0][k]).abs() < 1e-5,
+            "logit {k}: {} vs {}",
+            big[0][k],
+            small[0][k]
+        );
+    }
+    assert!((big[1][0] - small[1][0]).abs() < 1e-5);
+}
+
+#[test]
+fn aip_forward_probabilities() {
+    let rt = runtime();
+    let mut store = rt.load_store("aip_traffic").unwrap();
+    let d = vec![1.0f32; 16 * 40];
+    let outs = rt
+        .call("aip_traffic_fwd_b16", &mut store, &[DataArg::F32(&d)])
+        .unwrap();
+    assert_eq!(outs[0].len(), 16 * 4);
+    assert!(outs[0].iter().all(|&p| (0.0..=1.0).contains(&p)));
+}
+
+#[test]
+fn gru_step_carries_state() {
+    let rt = runtime();
+    let mut store = rt.load_store("aip_warehouse").unwrap();
+    let h0 = vec![0.0f32; 64];
+    let d = vec![1.0f32; 24];
+    let outs = rt
+        .call(
+            "aip_warehouse_step_b1",
+            &mut store,
+            &[DataArg::F32(&h0), DataArg::F32(&d)],
+        )
+        .unwrap();
+    let (probs, h1) = (&outs[0], &outs[1]);
+    assert_eq!(probs.len(), 12);
+    assert_eq!(h1.len(), 64);
+    assert!(h1.iter().any(|&x| x.abs() > 1e-6), "state must update");
+    // Feeding h1 back changes the output (recurrence is live).
+    let outs2 = rt
+        .call(
+            "aip_warehouse_step_b1",
+            &mut store,
+            &[DataArg::F32(h1), DataArg::F32(&d)],
+        )
+        .unwrap();
+    assert_ne!(outs[0], outs2[0]);
+}
+
+#[test]
+fn aip_training_reduces_loss_and_writes_back() {
+    let rt = runtime();
+    let mut store = rt.load_store("aip_traffic").unwrap();
+    // Synthetic supervised task: u = first 4 bits of d.
+    let mb = 256usize;
+    let mut rng = ials::util::Pcg32::seeded(3);
+    let lr = [1e-2f32];
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        let mut d = vec![0.0f32; mb * 40];
+        let mut y = vec![0.0f32; mb * 4];
+        for r in 0..mb {
+            for c in 0..40 {
+                d[r * 40 + c] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            for c in 0..4 {
+                y[r * 4 + c] = d[r * 40 + c];
+            }
+        }
+        let outs = rt
+            .call(
+                "aip_traffic_update",
+                &mut store,
+                &[DataArg::F32(&lr), DataArg::F32(&d), DataArg::F32(&y)],
+            )
+            .unwrap();
+        let loss = outs[0][0];
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    assert!(store.get("adam_t").unwrap()[0] == 30.0, "adam step counter written back");
+    assert!(
+        last < first.unwrap() * 0.7,
+        "loss should drop: {} -> {}",
+        first.unwrap(),
+        last
+    );
+    // The trained store must now predict the rule.
+    let mut d = vec![0.0f32; 16 * 40];
+    d[0] = 1.0; // row 0, bit 0 set
+    let probs = rt
+        .call("aip_traffic_fwd_b16", &mut store, &[DataArg::F32(&d)])
+        .unwrap();
+    assert!(
+        probs[0][0] > probs[0][4 * 15],
+        "p(u0 | bit set) should exceed an unset row"
+    );
+}
+
+#[test]
+fn ppo_update_executes_and_mutates_params() {
+    let rt = runtime();
+    let mut store = rt.load_store("policy_traffic").unwrap();
+    let norm_before = store.param_norm();
+    let mb = 256usize;
+    let obs = vec![0.1f32; mb * 42];
+    let actions = vec![0i32; mb];
+    let adv = vec![1.0f32; mb];
+    let ret = vec![0.5f32; mb];
+    // old_logp ~ ln(0.5) for a near-uniform initial 2-action policy.
+    let old_logp = vec![(0.5f32).ln(); mb];
+    let hyper: Vec<[f32; 1]> = vec![[3e-4], [0.2], [0.5], [0.01], [0.5]];
+    let outs = rt
+        .call(
+            "policy_traffic_update",
+            &mut store,
+            &[
+                DataArg::F32(&hyper[0]),
+                DataArg::F32(&hyper[1]),
+                DataArg::F32(&hyper[2]),
+                DataArg::F32(&hyper[3]),
+                DataArg::F32(&hyper[4]),
+                DataArg::F32(&obs),
+                DataArg::I32(&actions),
+                DataArg::F32(&adv),
+                DataArg::F32(&ret),
+                DataArg::F32(&old_logp),
+            ],
+        )
+        .unwrap();
+    let stats = &outs[0];
+    assert_eq!(stats.len(), 5);
+    assert!(stats.iter().all(|x| x.is_finite()));
+    assert!(store.param_norm() != norm_before, "params must change");
+    assert_eq!(store.get("adam_t").unwrap()[0], 1.0);
+}
+
+#[test]
+fn wrong_arity_and_shapes_rejected() {
+    let rt = runtime();
+    let mut store = rt.load_store("policy_traffic").unwrap();
+    // missing args
+    assert!(rt.call("policy_traffic_fwd_b16", &mut store, &[]).is_err());
+    // wrong size
+    let obs = vec![0.0f32; 3];
+    assert!(rt
+        .call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)])
+        .is_err());
+    // wrong model store
+    let mut wrong = rt.load_store("aip_traffic").unwrap();
+    let obs = vec![0.0f32; 16 * 42];
+    assert!(rt
+        .call("policy_traffic_fwd_b16", &mut wrong, &[DataArg::F32(&obs)])
+        .is_err());
+    // unknown artifact
+    assert!(rt.call("nope", &mut store, &[]).is_err());
+}
+
+#[test]
+fn geometry_matches_rust_simulators() {
+    let rt = runtime();
+    use ials::config::{TrafficConfig, WarehouseConfig};
+    use ials::core::{Environment, GlobalEnv};
+    let t = ials::sim::traffic::TrafficGlobalEnv::new(&TrafficConfig::default());
+    assert_eq!(rt.geom("traffic_obs").unwrap(), t.obs_dim());
+    assert_eq!(rt.geom("traffic_act").unwrap(), t.num_actions());
+    assert_eq!(rt.geom("traffic_dset").unwrap(), t.dset_dim());
+    assert_eq!(rt.geom("traffic_alsh").unwrap(), t.alsh_dim());
+    assert_eq!(rt.geom("traffic_u").unwrap(), t.num_influence_sources());
+    let w = ials::sim::warehouse::WarehouseGlobalEnv::new(&WarehouseConfig::default());
+    assert_eq!(rt.geom("wh_obs").unwrap(), w.obs_dim());
+    assert_eq!(rt.geom("wh_act").unwrap(), w.num_actions());
+    assert_eq!(rt.geom("wh_dset").unwrap(), w.dset_dim());
+    assert_eq!(rt.geom("wh_u").unwrap(), w.num_influence_sources());
+}

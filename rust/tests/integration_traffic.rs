@@ -1,0 +1,129 @@
+//! Cross-module traffic-domain integration (no artifacts needed):
+//! controller quality orderings and GS↔LS structural agreement.
+
+use ials::config::TrafficConfig;
+use ials::core::{Environment, GlobalEnv};
+use ials::sim::traffic::TrafficGlobalEnv;
+use ials::util::Pcg32;
+
+fn mean_reward(env: &mut TrafficGlobalEnv, episodes: usize, mut policy: impl FnMut(&TrafficGlobalEnv, &mut Pcg32) -> usize) -> f64 {
+    let mut rng = Pcg32::seeded(4242);
+    let mut total = 0.0f64;
+    let mut steps = 0usize;
+    for ep in 0..episodes {
+        env.reset(1000 + ep as u64);
+        loop {
+            let a = policy(env, &mut rng);
+            let s = env.step(a);
+            total += s.reward as f64;
+            steps += 1;
+            if s.done {
+                break;
+            }
+        }
+    }
+    total / steps as f64
+}
+
+/// The actuated controller (the paper's strong baseline) must clearly beat
+/// both the always-keep and the uniform-random light policies.
+#[test]
+fn actuated_controller_beats_naive_policies() {
+    let cfg = TrafficConfig::default();
+    let mut env = TrafficGlobalEnv::new(&cfg);
+    let actuated = mean_reward(&mut env, 3, |e, _| e.actuated_action());
+    let random = mean_reward(&mut env, 3, |_, rng| rng.below(2));
+    let never = mean_reward(&mut env, 3, |_, _| 0);
+    assert!(
+        actuated > random + 0.01,
+        "actuated {actuated:.4} must beat random {random:.4}"
+    );
+    assert!(
+        actuated > never + 0.01,
+        "actuated {actuated:.4} must beat never-switch {never:.4}"
+    );
+}
+
+/// Congestion responds to inflow: heavier boundary inflow lowers average
+/// speed under the same controller.
+#[test]
+fn heavier_inflow_lowers_speed() {
+    let light = {
+        let mut cfg = TrafficConfig::default();
+        cfg.inflow_prob = 0.05;
+        let mut env = TrafficGlobalEnv::new(&cfg);
+        mean_reward(&mut env, 3, |e, _| e.actuated_action())
+    };
+    let heavy = {
+        let mut cfg = TrafficConfig::default();
+        cfg.inflow_prob = 0.4;
+        let mut env = TrafficGlobalEnv::new(&cfg);
+        mean_reward(&mut env, 3, |e, _| e.actuated_action())
+    };
+    assert!(
+        light > heavy + 0.02,
+        "light traffic {light:.4} should flow faster than heavy {heavy:.4}"
+    );
+}
+
+/// The influence marginals differ between the two highlighted
+/// intersections (they are coupled differently to the network) — the
+/// reason the paper trains separate AIPs for each (Fig 2 / Fig 10).
+#[test]
+fn intersections_have_different_influence_patterns() {
+    let run = |which: usize| {
+        let mut cfg = TrafficConfig::default();
+        cfg.agent_intersection = which;
+        let mut env = TrafficGlobalEnv::new(&cfg);
+        let data = ials::collect::collect_dataset(
+            &mut env,
+            6000,
+            7,
+            ials::collect::FeatureKind::Dset,
+        );
+        data.u_marginals()
+    };
+    let m1 = run(1);
+    let m2 = run(2);
+    let diff: f32 = m1.iter().zip(&m2).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 0.01, "marginals should differ: {m1:?} vs {m2:?}");
+}
+
+/// Substeps make the GS proportionally more expensive but leave the
+/// interface identical (obs dims, action space, episode structure).
+#[test]
+fn substeps_preserve_interface() {
+    for substeps in [1, 3, 6] {
+        let mut cfg = TrafficConfig::default();
+        cfg.substeps = substeps;
+        let mut env = TrafficGlobalEnv::new(&cfg);
+        env.reset(1);
+        assert_eq!(env.obs_dim(), 42);
+        let mut done = false;
+        let mut n = 0;
+        while !done {
+            done = env.step(n % 2).done;
+            n += 1;
+        }
+        assert_eq!(n, cfg.episode_len);
+    }
+}
+
+/// d-set excludes the light phase: flipping the agent's lights (via
+/// actions) must not directly alter the d-set encoding of the same car
+/// configuration. (The observation *does* include phase.)
+#[test]
+fn dset_is_light_invariant_encoding() {
+    let cfg = TrafficConfig::default();
+    let mut env = TrafficGlobalEnv::new(&cfg);
+    env.reset(3);
+    let mut obs_a = vec![0.0; env.obs_dim()];
+    let mut d_a = vec![0.0; env.dset_dim()];
+    // Step past min green, then switch and compare d-set before/after the
+    // same-state light flip... the cleanest observable: dset dim excludes
+    // the 2 phase entries that obs carries.
+    env.observe(&mut obs_a);
+    env.dset(&mut d_a);
+    assert_eq!(obs_a.len(), d_a.len() + 2);
+    assert_eq!(&obs_a[..40], &d_a[..]);
+}

@@ -1,0 +1,118 @@
+//! End-to-end RL integration: PPO through the compiled artifacts must
+//! actually *learn*. Uses a 2-armed bandit dressed in the traffic
+//! observation geometry so the real `policy_traffic_*` artifacts apply.
+
+use ials::config::{ExperimentConfig, PpoConfig, SimulatorKind};
+use ials::core::{Environment, GsVecEnv, Step, VecEnv};
+use ials::coordinator::evaluate;
+use ials::rl::{Policy, PpoTrainer};
+use ials::runtime::Runtime;
+use ials::util::Pcg32;
+use std::rc::Rc;
+
+/// 2-armed bandit with traffic-shaped observations (obs_dim 42, 2 actions):
+/// action 1 pays 0.8 in expectation, action 0 pays 0.2.
+struct Bandit {
+    rng: Pcg32,
+    t: usize,
+}
+
+impl Environment for Bandit {
+    fn obs_dim(&self) -> usize {
+        42
+    }
+    fn num_actions(&self) -> usize {
+        2
+    }
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::seeded(seed);
+        self.t = 0;
+    }
+    fn observe(&self, out: &mut [f32]) {
+        out.fill(0.0);
+        out[0] = 1.0;
+    }
+    fn step(&mut self, action: usize) -> Step {
+        self.t += 1;
+        let p = if action == 1 { 0.8 } else { 0.2 };
+        let reward = if self.rng.bernoulli(p) { 1.0 } else { 0.0 };
+        Step { reward, done: self.t >= 32 }
+    }
+}
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load("artifacts").expect("run `make artifacts` first"))
+}
+
+#[test]
+fn ppo_learns_the_better_arm() {
+    let rt = runtime();
+    let mut policy = Policy::new(rt.clone(), "policy_traffic", 16).unwrap();
+    policy.reinit(7).unwrap();
+    let cfg = PpoConfig { lr: 1e-3, ..PpoConfig::default() };
+    let mut trainer = PpoTrainer::new(&cfg, 42, 7);
+    let mut env = GsVecEnv::new((0..16).map(|_| Bandit { rng: Pcg32::seeded(0), t: 0 }).collect());
+    env.reset_all(7);
+
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..25 {
+        let stats = trainer.train_iteration(&mut env, &mut policy).unwrap();
+        if first.is_none() {
+            first = Some(stats.rollout_reward);
+        }
+        last = stats.rollout_reward;
+    }
+    let first = first.unwrap();
+    assert!(
+        (0.35..0.65).contains(&first),
+        "initial policy should be near-uniform (reward ~0.5), got {first}"
+    );
+    assert!(last > 0.7, "PPO should find the 0.8 arm: {first} -> {last}");
+}
+
+#[test]
+fn evaluation_runs_on_the_gs() {
+    let rt = runtime();
+    let mut policy = Policy::new(rt.clone(), "policy_traffic", 16).unwrap();
+    let cfg = ExperimentConfig::default();
+    let mut eval_env = ials::coordinator::experiment::make_eval_env(&cfg);
+    let r = evaluate(eval_env.as_mut(), &mut policy, 2, 3).unwrap();
+    assert_eq!(r.episodes, 2);
+    assert!((0.0..=1.0).contains(&r.mean), "traffic reward in [0,1]: {}", r.mean);
+}
+
+#[test]
+fn run_condition_ials_smoke() {
+    let rt = runtime();
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "smoke".into();
+    cfg.simulator = SimulatorKind::Ials;
+    cfg.aip.dataset_size = 2048;
+    cfg.aip.train_epochs = 1;
+    cfg.ppo.total_steps = 4096;
+    cfg.eval_every = 2048;
+    cfg.eval_episodes = 1;
+    let r = ials::coordinator::run_condition(&rt, &cfg, 1).unwrap();
+    assert!(r.prep_secs > 0.0, "AIP prep must be timed");
+    assert!(r.train_secs > 0.0);
+    assert!(r.aip_ce.is_finite());
+    assert!(r.curve.len() >= 2, "initial + at least one eval point");
+    assert!(r.curve.windows(2).all(|w| w[0].wall_clock_s <= w[1].wall_clock_s));
+    assert!(r.curve[0].wall_clock_s >= r.prep_secs, "curve starts after AIP prep");
+}
+
+#[test]
+fn run_condition_gs_smoke() {
+    let rt = runtime();
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "smoke-gs".into();
+    cfg.simulator = SimulatorKind::Gs;
+    cfg.ppo.total_steps = 2048;
+    cfg.eval_every = 2048;
+    cfg.eval_episodes = 1;
+    let r = ials::coordinator::run_condition(&rt, &cfg, 1).unwrap();
+    assert_eq!(r.prep_secs, 0.0, "GS has no AIP prep");
+    assert!(r.aip_ce.is_nan());
+    assert!(r.final_eval.is_finite());
+}

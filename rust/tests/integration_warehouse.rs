@@ -1,0 +1,152 @@
+//! Cross-module warehouse-domain integration (no artifacts needed).
+
+use ials::collect::{collect_dataset, FeatureKind};
+use ials::config::WarehouseConfig;
+use ials::core::{Environment, GlobalEnv};
+use ials::sim::warehouse::WarehouseGlobalEnv;
+use ials::util::Pcg32;
+
+/// The fleet keeps the floor from saturating: long-run item occupancy
+/// under scripted robots stays well below 100%.
+#[test]
+fn scripted_fleet_controls_item_backlog() {
+    let cfg = WarehouseConfig::default();
+    let mut env = WarehouseGlobalEnv::new(&cfg);
+    env.reset(1);
+    let mut d = vec![0.0f32; env.dset_dim()];
+    let mut occ = 0.0f64;
+    let mut n = 0usize;
+    for t in 0..2000 {
+        if env.step(4).done {
+            env.reset(2 + t as u64);
+        }
+        env.dset(&mut d);
+        occ += d[..12].iter().sum::<f32>() as f64 / 12.0;
+        n += 1;
+    }
+    let rate = occ / n as f64;
+    assert!(rate < 0.5, "occupancy should stay controlled, got {rate:.3}");
+    assert!(rate > 0.005, "items should exist, got {rate:.3}");
+}
+
+/// A trained-region agent collects more by walking to items than by
+/// standing still (environment is actually solvable).
+#[test]
+fn greedy_agent_outperforms_idle() {
+    let cfg = WarehouseConfig::default();
+    let run = |greedy: bool| {
+        let mut env = WarehouseGlobalEnv::new(&cfg);
+        let mut rng = Pcg32::seeded(9);
+        let mut total = 0.0f64;
+        for ep in 0..5 {
+            env.reset(100 + ep);
+            let mut obs = vec![0.0f32; env.obs_dim()];
+            loop {
+                let a = if greedy {
+                    env.observe(&mut obs);
+                    // naive greedy: walk toward any active item bit
+                    pick_greedy(&obs, &mut rng)
+                } else {
+                    4 // stay
+                };
+                let s = env.step(a);
+                total += s.reward as f64;
+                if s.done {
+                    break;
+                }
+            }
+        }
+        total
+    };
+    let greedy = run(true);
+    let idle = run(false);
+    assert!(
+        greedy > idle,
+        "moving toward items ({greedy}) must beat idling ({idle})"
+    );
+}
+
+/// Cheap hand policy: move toward the first active item's cell.
+fn pick_greedy(obs: &[f32], rng: &mut Pcg32) -> usize {
+    // obs = 25 position bits + 12 item bits; item cells in canonical order:
+    // top (0,1..3), right (1..3,4), bottom (4,1..3), left (1..3,0).
+    const ITEM_CELLS: [(usize, usize); 12] = [
+        (0, 1),
+        (0, 2),
+        (0, 3),
+        (1, 4),
+        (2, 4),
+        (3, 4),
+        (4, 1),
+        (4, 2),
+        (4, 3),
+        (1, 0),
+        (2, 0),
+        (3, 0),
+    ];
+    let pos = obs[..25].iter().position(|&x| x > 0.5).unwrap();
+    let (r, c) = (pos / 5, pos % 5);
+    for (k, &(ir, ic)) in ITEM_CELLS.iter().enumerate() {
+        if obs[25 + k] > 0.5 {
+            return if r < ir {
+                1 // down
+            } else if r > ir {
+                0 // up
+            } else if c < ic {
+                3 // right
+            } else if c > ic {
+                2 // left
+            } else {
+                4
+            };
+        }
+    }
+    rng.below(5)
+}
+
+/// Memory-mode datasets: expiry events are perfectly predictable from an
+/// 8-step item history — verify the raw signal exists (u fires exactly
+/// when an item reaches age 8).
+#[test]
+fn memory_mode_dataset_has_deterministic_structure() {
+    let mut cfg = WarehouseConfig::default();
+    cfg.fixed_item_lifetime = 8;
+    let mut env = WarehouseGlobalEnv::new(&cfg);
+    let data = collect_dataset(&mut env, 3000, 5, FeatureKind::Dset);
+    // For every episode: u[k]=1 at t implies the item bit k was set for
+    // the previous 8 consecutive steps (it survived to exactly age 8).
+    let mut fired = 0;
+    for ep in &data.episodes {
+        for t in 8..ep.steps {
+            let u = ep.u_row(&data, t);
+            for k in 0..12 {
+                if u[k] > 0.5 {
+                    fired += 1;
+                    for back in 1..=7 {
+                        let d = ep.d_row(&data, t - back);
+                        assert!(
+                            d[k] > 0.5,
+                            "expired item must have been visible for 8 steps (t={t}, k={k}, back={back})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(fired > 20, "expiries should occur: {fired}");
+}
+
+/// ALSH features strictly extend the d-set (position bitmap appended).
+#[test]
+fn alsh_extends_dset() {
+    let cfg = WarehouseConfig::default();
+    let mut env = WarehouseGlobalEnv::new(&cfg);
+    env.reset(3);
+    env.step(1);
+    let mut d = vec![0.0f32; env.dset_dim()];
+    let mut a = vec![0.0f32; env.alsh_dim()];
+    env.dset(&mut d);
+    env.alsh(&mut a);
+    assert_eq!(&a[..24], &d[..]);
+    assert_eq!(a[24..].iter().sum::<f32>(), 1.0, "position bitmap is one-hot");
+}
