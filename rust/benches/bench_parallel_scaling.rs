@@ -1,0 +1,144 @@
+//! Parallel env-stepping scaling: steps/sec of the sharded IALS executor
+//! over `num_workers x batch`, for both local-sim families. No artifacts
+//! needed — the AIP is a fixed marginal, so this isolates pure simulator
+//! throughput (the quantity the IALS speedup story rests on).
+//!
+//! Run: `cargo bench --bench bench_parallel_scaling`
+//! Emits a table to stdout and a JSON record (one object per cell) to
+//! `results/bench_parallel_scaling.json` for the bench trajectory.
+
+use ials::bench_harness::{Bench, Table};
+use ials::config::{TrafficConfig, WarehouseConfig};
+use ials::core::VecEnv;
+use ials::ials::IalsVecEnv;
+use ials::influence::FixedMarginalAip;
+use ials::sim::traffic::TrafficLocalEnv;
+use ials::sim::warehouse::WarehouseLocalEnv;
+use ials::util::Pcg32;
+use std::io::Write;
+
+const WORKER_SWEEP: [usize; 4] = [1, 2, 4, 8];
+const BATCH_SWEEP: [usize; 3] = [64, 256, 1024];
+
+struct Cell {
+    domain: &'static str,
+    batch: usize,
+    workers: usize,
+    steps_per_sec: f64,
+    speedup_vs_serial: f64,
+}
+
+fn measure(env: &mut dyn VecEnv, vec_steps: usize, label: &str) -> f64 {
+    let b = env.num_envs();
+    let na = env.num_actions();
+    let mut rng = Pcg32::seeded(1);
+    let mut actions = vec![0usize; b];
+    let mut rewards = vec![0.0f32; b];
+    let mut dones = vec![false; b];
+    env.reset_all(7);
+    let r = Bench::new(label).warmup(1).reps(5).run((vec_steps * b) as f64, || {
+        for _ in 0..vec_steps {
+            for a in actions.iter_mut() {
+                *a = rng.below(na);
+            }
+            env.step_all(&actions, &mut rewards, &mut dones);
+        }
+    });
+    r.throughput()
+}
+
+fn traffic_env(b: usize, w: usize) -> IalsVecEnv<TrafficLocalEnv> {
+    let cfg = TrafficConfig::default();
+    let envs: Vec<TrafficLocalEnv> = (0..b).map(|_| TrafficLocalEnv::new(&cfg)).collect();
+    IalsVecEnv::with_workers(
+        envs,
+        Box::new(FixedMarginalAip::constant(b, 4 * cfg.lane_len, 4, 0.25)),
+        w,
+    )
+}
+
+fn warehouse_env(b: usize, w: usize) -> IalsVecEnv<WarehouseLocalEnv> {
+    let cfg = WarehouseConfig::default();
+    let envs: Vec<WarehouseLocalEnv> = (0..b).map(|_| WarehouseLocalEnv::new(&cfg)).collect();
+    IalsVecEnv::with_workers(envs, Box::new(FixedMarginalAip::constant(b, 24, 12, 0.15)), w)
+}
+
+fn sweep(domain: &'static str, cells: &mut Vec<Cell>) {
+    for &b in &BATCH_SWEEP {
+        // Keep total work roughly constant across batch sizes.
+        let vec_steps = (32_768 / b).max(8);
+        let mut serial_rate = 0.0f64;
+        for &w in &WORKER_SWEEP {
+            let label = format!("{domain}/B{b}/w{w}");
+            let rate = match domain {
+                "traffic" => measure(&mut traffic_env(b, w), vec_steps, &label),
+                _ => measure(&mut warehouse_env(b, w), vec_steps, &label),
+            };
+            if w == 1 {
+                serial_rate = rate;
+            }
+            cells.push(Cell {
+                domain,
+                batch: b,
+                workers: w,
+                steps_per_sec: rate,
+                speedup_vs_serial: rate / serial_rate.max(1e-12),
+            });
+        }
+    }
+}
+
+fn main() {
+    let mut cells: Vec<Cell> = Vec::new();
+    sweep("traffic", &mut cells);
+    sweep("warehouse", &mut cells);
+
+    let mut table = Table::new(
+        "sharded IALS env stepping (steps/sec; fixed-marginal AIP, random policy)",
+        &["domain", "B", "workers", "steps/s", "speedup vs w=1"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.domain.into(),
+            c.batch.to_string(),
+            c.workers.to_string(),
+            format!("{:.0}", c.steps_per_sec),
+            format!("{:.2}x", c.speedup_vs_serial),
+        ]);
+    }
+    table.print();
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"domain\": \"{}\", \"batch\": {}, \"num_workers\": {}, \
+             \"steps_per_sec\": {:.1}, \"speedup_vs_serial\": {:.3}}}{}\n",
+            c.domain,
+            c.batch,
+            c.workers,
+            c.steps_per_sec,
+            c.speedup_vs_serial,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("]\n");
+    println!("{json}");
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::File::create("results/bench_parallel_scaling.json"))
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        eprintln!("could not write results/bench_parallel_scaling.json: {e}");
+    }
+
+    // Headline number for the acceptance criterion: traffic, B=1024, w=4.
+    if let Some(c) = cells
+        .iter()
+        .find(|c| c.domain == "traffic" && c.batch == 1024 && c.workers == 4)
+    {
+        println!(
+            "headline: traffic B=1024 num_workers=4 -> {:.2}x vs serial ({:.0} steps/s)",
+            c.speedup_vs_serial, c.steps_per_sec
+        );
+    }
+}

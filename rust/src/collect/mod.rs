@@ -16,6 +16,78 @@ pub enum FeatureKind {
     Alsh,
 }
 
+/// Number of independent collection chunks Algorithm-1 sharding splits the
+/// step budget into. Fixed (not derived from the worker count) so the
+/// collected dataset depends only on `(seed, steps)` — the same bits on a
+/// laptop and a 64-core server, for any `num_workers`.
+pub const COLLECT_CHUNKS: usize = 16;
+
+/// Sharded Algorithm 1: the `steps` budget is split into [`COLLECT_CHUNKS`]
+/// logical chunks, each collected from its own GS instance under a
+/// per-chunk seed stream; `num_workers` scoped threads execute the chunks
+/// and the results merge in chunk order. Because the chunking is fixed, the
+/// output is **bitwise identical for every worker count** — `num_workers`
+/// only changes wall-clock. (It therefore differs from the single-
+/// trajectory [`collect_dataset`], which remains available for callers that
+/// want one continuous rollout.)
+///
+/// One-shot work uses scoped threads here rather than the persistent
+/// per-step pool of `core::shard` — collection happens once per condition,
+/// not once per env step.
+pub fn collect_dataset_sharded<G, F>(
+    make_env: F,
+    steps: usize,
+    seed: u64,
+    feature: FeatureKind,
+    num_workers: usize,
+) -> InfluenceDataset
+where
+    G: GlobalEnv,
+    F: Fn() -> G + Sync,
+{
+    let chunks = COLLECT_CHUNKS.min(steps.max(1));
+    let collect_chunk = |c: usize| {
+        // First `steps % chunks` chunks take one extra step (same balancing
+        // rule as `core::shard::shard_ranges`).
+        let share = steps / chunks + usize::from(c < steps % chunks);
+        let chunk_seed = seed.wrapping_add((c as u64 + 1).wrapping_mul(0xA24BAED4963EE407));
+        let mut env = make_env();
+        collect_dataset(&mut env, share, chunk_seed, feature)
+    };
+
+    let mut parts: Vec<Option<InfluenceDataset>> = (0..chunks).map(|_| None).collect();
+    let w = num_workers.max(1).min(chunks);
+    if w == 1 {
+        for (c, slot) in parts.iter_mut().enumerate() {
+            *slot = Some(collect_chunk(c));
+        }
+    } else {
+        // Round-robin the fixed chunk list over `w` workers; the chunk ->
+        // dataset mapping (and the merge order below) never depends on `w`.
+        let mut assignments: Vec<Vec<(usize, &mut Option<InfluenceDataset>)>> =
+            (0..w).map(|_| Vec::new()).collect();
+        for (c, slot) in parts.iter_mut().enumerate() {
+            assignments[c % w].push((c, slot));
+        }
+        std::thread::scope(|scope| {
+            for worker_chunks in assignments {
+                let collect_chunk = &collect_chunk;
+                scope.spawn(move || {
+                    for (c, slot) in worker_chunks {
+                        *slot = Some(collect_chunk(c));
+                    }
+                });
+            }
+        });
+    }
+
+    let mut merged = parts[0].take().expect("chunk 0 collected");
+    for part in parts.iter().skip(1) {
+        merged.extend_from(part.as_ref().expect("chunk collected"));
+    }
+    merged
+}
+
 /// Collect `steps` transitions (Algorithm 1) under the uniform-random
 /// exploratory policy π₀. `d_t` is recorded *before* stepping; `u_t` is the
 /// influence realization of that step's transition.
@@ -106,6 +178,28 @@ mod tests {
         assert_eq!(data.u_dim, 12);
         let total: f32 = data.u_marginals().iter().sum();
         assert!(total > 0.0, "neighbor presence should register");
+    }
+
+    #[test]
+    fn sharded_collection_is_worker_count_invariant() {
+        let make = || TrafficGlobalEnv::new(&TrafficConfig::default());
+        // The chunking is fixed, so the dataset is bitwise identical for
+        // every worker count (only wall-clock changes) and the full step
+        // budget is preserved.
+        let reference = collect_dataset_sharded(make, 450, 5, FeatureKind::Dset, 1);
+        assert_eq!(reference.total_steps(), 450);
+        for w in [2usize, 3, 8, 64] {
+            let other = collect_dataset_sharded(make, 450, 5, FeatureKind::Dset, w);
+            assert_eq!(other.total_steps(), 450, "w={w}");
+            assert_eq!(other.episodes.len(), reference.episodes.len(), "w={w}");
+            for (a, b) in reference.episodes.iter().zip(&other.episodes) {
+                assert_eq!(a.steps, b.steps);
+                for t in 0..a.steps {
+                    assert_eq!(a.d_row(&reference, t), b.d_row(&other, t), "w={w}");
+                    assert_eq!(a.u_row(&reference, t), b.u_row(&other, t), "w={w}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -167,6 +167,15 @@ pub struct PpoConfig {
     pub max_grad_norm: f32,
     /// Total environment steps of training.
     pub total_steps: usize,
+    /// Worker threads for sharded env stepping and dataset collection
+    /// (`core::shard`, `collect`): `1` = inline serial execution (the
+    /// default), `0` = one worker per available core, `n > 1` = that many
+    /// persistent shard workers. At a fixed seed, results are bitwise
+    /// identical across worker counts and machines — the knob only changes
+    /// wall-clock. (Per-env RNG streams + fixed collection chunking make
+    /// this hold; seeds are therefore *not* bit-compatible with runs from
+    /// before the sharded executor existed.)
+    pub num_workers: usize,
 }
 
 impl Default for PpoConfig {
@@ -184,6 +193,7 @@ impl Default for PpoConfig {
             ent_coef: 0.01,
             max_grad_norm: 0.5,
             total_steps: 40_000,
+            num_workers: 1,
         }
     }
 }
@@ -332,6 +342,7 @@ impl ExperimentConfig {
         p.ent_coef = doc.float_or("ppo", "ent_coef", p.ent_coef as f64)? as f32;
         p.max_grad_norm = doc.float_or("ppo", "max_grad_norm", p.max_grad_norm as f64)? as f32;
         p.total_steps = doc.int_or("ppo", "total_steps", p.total_steps as i64)? as usize;
+        p.num_workers = doc.int_or("ppo", "num_workers", p.num_workers as i64)? as usize;
 
         let a = &mut cfg.aip;
         a.kind = match doc.str_or("aip", "kind", "neural")?.as_str() {
@@ -424,6 +435,7 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("ppo", "ent_coef"),
     ("ppo", "max_grad_norm"),
     ("ppo", "total_steps"),
+    ("ppo", "num_workers"),
     ("aip", "kind"),
     ("aip", "dataset_size"),
     ("aip", "train_epochs"),
@@ -493,6 +505,16 @@ mod tests {
         assert_eq!(cfg.ppo.total_steps, 100_000);
         assert_eq!(cfg.aip.kind, AipKind::Fixed);
         assert!(cfg.aip.fixed_p < 0.0);
+    }
+
+    #[test]
+    fn num_workers_knob_parses_and_defaults() {
+        let cfg = ExperimentConfig::from_toml("[ppo]\nnum_workers = 4").unwrap();
+        assert_eq!(cfg.ppo.num_workers, 4);
+        assert_eq!(ExperimentConfig::default().ppo.num_workers, 1, "serial by default");
+        // 0 = auto (resolved to the core count at env construction).
+        let auto = ExperimentConfig::from_toml("[ppo]\nnum_workers = 0").unwrap();
+        assert_eq!(auto.ppo.num_workers, 0);
     }
 
     #[test]

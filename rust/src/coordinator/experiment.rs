@@ -6,9 +6,13 @@
 //! summary into `results/<figure>/`, and prints the figure's rows.
 
 use crate::bench_harness::Table;
-use crate::collect::{collect_dataset, collect_dataset_with_policy, FeatureKind};
+use crate::collect::{
+    collect_dataset, collect_dataset_sharded, collect_dataset_with_policy, FeatureKind,
+};
 use crate::config::{DomainKind, ExperimentConfig, SimulatorKind};
-use crate::core::{Environment, FrameStackVec, GsVecEnv, VecEnv};
+use crate::core::{
+    effective_workers, shard_ranges, Environment, FrameStackVec, GsVecEnv, ShardedVecEnv, VecEnv,
+};
 use crate::ials::IalsVecEnv;
 use crate::influence::{
     evaluate_ce, train_fnn, train_gru, FixedMarginalAip, InfluenceDataset, InfluencePredictor,
@@ -151,42 +155,75 @@ fn collect_from_gs(
     seed: u64,
     feature: FeatureKind,
 ) -> InfluenceDataset {
+    // Algorithm 1 fans out over scoped workers (num_workers = 1 is exactly
+    // the serial collector; see `collect_dataset_sharded`).
+    let w = effective_workers(cfg.ppo.num_workers);
     match cfg.domain {
-        DomainKind::Traffic => {
-            let mut env = TrafficGlobalEnv::new(&cfg.traffic);
-            collect_dataset(&mut env, steps, seed, feature)
-        }
-        DomainKind::Warehouse => {
-            let mut env = WarehouseGlobalEnv::new(&cfg.warehouse);
-            collect_dataset(&mut env, steps, seed, feature)
-        }
+        DomainKind::Traffic => collect_dataset_sharded(
+            || TrafficGlobalEnv::new(&cfg.traffic),
+            steps,
+            seed,
+            feature,
+            w,
+        ),
+        DomainKind::Warehouse => collect_dataset_sharded(
+            || WarehouseGlobalEnv::new(&cfg.warehouse),
+            steps,
+            seed,
+            feature,
+            w,
+        ),
     }
 }
 
-/// Build the training simulator (the paper's GS vs IALS conditions).
+/// Build a GS vec-env, sharded over `w` persistent workers when `w > 1`.
+/// Each shard seeds its envs by global index, so any `w` produces bitwise
+/// identical rollouts at a fixed seed.
+fn make_gs_env<E: Environment + Send + 'static>(
+    make: impl Fn() -> E,
+    b: usize,
+    w: usize,
+) -> Box<dyn VecEnv> {
+    if w <= 1 {
+        return Box::new(GsVecEnv::new((0..b).map(|_| make()).collect()));
+    }
+    let shards: Vec<GsVecEnv<E>> = shard_ranges(b, w)
+        .into_iter()
+        .map(|(s, e)| GsVecEnv::with_index_offset((s..e).map(|_| make()).collect(), s))
+        .collect();
+    Box::new(ShardedVecEnv::from_shards(shards))
+}
+
+/// Build the training simulator (the paper's GS vs IALS conditions),
+/// sharded over `cfg.ppo.num_workers` persistent worker threads (the NN
+/// side — policy and AIP forwards — stays one batched call per step on the
+/// coordinator; see `core::shard`).
 pub fn make_train_env(
     cfg: &ExperimentConfig,
     predictor: Option<Box<dyn InfluencePredictor>>,
 ) -> Box<dyn VecEnv> {
     let b = cfg.ppo.num_envs;
+    let w = effective_workers(cfg.ppo.num_workers).min(b);
     let stack = match cfg.domain {
         DomainKind::Traffic => 1,
         DomainKind::Warehouse => cfg.warehouse.frame_stack,
     };
     let base: Box<dyn VecEnv> = match (cfg.domain, predictor) {
-        (DomainKind::Traffic, None) => Box::new(GsVecEnv::new(
-            (0..b).map(|_| TrafficGlobalEnv::new(&cfg.traffic)).collect(),
-        )),
-        (DomainKind::Traffic, Some(p)) => Box::new(IalsVecEnv::new(
+        (DomainKind::Traffic, None) => {
+            make_gs_env(|| TrafficGlobalEnv::new(&cfg.traffic), b, w)
+        }
+        (DomainKind::Traffic, Some(p)) => Box::new(IalsVecEnv::with_workers(
             (0..b).map(|_| TrafficLocalEnv::new(&cfg.traffic)).collect(),
             p,
+            w,
         )),
-        (DomainKind::Warehouse, None) => Box::new(GsVecEnv::new(
-            (0..b).map(|_| WarehouseGlobalEnv::new(&cfg.warehouse)).collect(),
-        )),
-        (DomainKind::Warehouse, Some(p)) => Box::new(IalsVecEnv::new(
+        (DomainKind::Warehouse, None) => {
+            make_gs_env(|| WarehouseGlobalEnv::new(&cfg.warehouse), b, w)
+        }
+        (DomainKind::Warehouse, Some(p)) => Box::new(IalsVecEnv::with_workers(
             (0..b).map(|_| WarehouseLocalEnv::new(&cfg.warehouse)).collect(),
             p,
+            w,
         )),
     };
     if stack > 1 {

@@ -31,6 +31,15 @@ pub fn train_with_eval(
     clock_offset: f64,
 ) -> Result<TrainOutcome> {
     let mut trainer = PpoTrainer::new(&cfg.ppo, train_env.obs_dim(), seed);
+    let workers = crate::core::effective_workers(cfg.ppo.num_workers).min(cfg.ppo.num_envs);
+    if workers > 1 {
+        log_info!(
+            "[{}] sharded env stepping: {} envs over {workers} persistent workers \
+             (NN forwards stay batched on the coordinator)",
+            cfg.name,
+            cfg.ppo.num_envs
+        );
+    }
     let per_iter = trainer.steps_per_iteration();
     let iterations = cfg.ppo.total_steps.div_ceil(per_iter);
     let mut curve = Vec::new();

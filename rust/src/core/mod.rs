@@ -11,9 +11,11 @@
 //!   is provided externally (by an influence predictor — Algorithm 2).
 
 pub mod history;
+pub mod shard;
 pub mod vecenv;
 
 pub use history::FrameStacker;
+pub use shard::{effective_workers, shard_ranges, ShardExec, ShardPool, ShardedVecEnv};
 pub use vecenv::{FrameStackVec, GsVecEnv, VecEnv};
 
 /// Result of one environment step.

@@ -1,0 +1,497 @@
+//! Sharded multi-threaded execution of vectorized environments.
+//!
+//! The paper's whole value proposition is simulation speed, and the repo's
+//! hot loop is `VecEnv::step_all` over `B` environments. This module makes
+//! that loop scale with cores while preserving two invariants:
+//!
+//! 1. **One batched NN forward per step.** PJRT calls (policy + AIP) stay on
+//!    the coordinator thread — `Runtime` is `Rc`/`RefCell`-based and must
+//!    not cross threads. Only pure-Rust simulator stepping is parallelized.
+//! 2. **Bitwise determinism.** Each shard owns a contiguous range of env
+//!    indices; every env is seeded from its *global* index and owns its RNG
+//!    stream, so a sharded run produces outputs identical to a serial run
+//!    at the same seed, for any worker count.
+//!
+//! Building blocks:
+//!
+//! * [`ShardPool`] — a persistent worker pool (spawned once, reused across
+//!   all rollout iterations; no per-step thread spawn) where each worker
+//!   owns one shard's state.
+//! * [`ShardExec`] — serial-or-pooled executor so callers write one code
+//!   path and `num_workers = 1` stays exactly the old serial loop.
+//! * [`ShardedVecEnv`] — a [`VecEnv`] adapter that partitions any batch of
+//!   per-shard vec-envs and runs `step_all`/`observe_all`/`reset_all`
+//!   concurrently, each shard writing directly into its disjoint slice of
+//!   the shared env-major buffers (no gather copies).
+
+use super::VecEnv;
+use std::sync::mpsc;
+use std::thread;
+
+/// Resolve a configured worker count: `0` means "one per available core".
+pub fn effective_workers(requested: usize) -> usize {
+    if requested == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Balanced contiguous partition of `n` items over `w` shards: the first
+/// `n % w` shards get one extra item. Returns `[start, end)` ranges that
+/// tile `[0, n)` in order.
+pub fn shard_ranges(n: usize, w: usize) -> Vec<(usize, usize)> {
+    let w = w.clamp(1, n.max(1));
+    let (base, extra) = (n / w, n % w);
+    let mut ranges = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        ranges.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n, "shard ranges must tile the batch");
+    ranges
+}
+
+/// A raw handle to a mutable slice that can cross threads. Each worker gets
+/// a *disjoint* sub-range, which is what makes the aliasing sound.
+pub struct SendSliceMut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for SendSliceMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendSliceMut<T> {}
+unsafe impl<T: Send> Send for SendSliceMut<T> {}
+unsafe impl<T: Send> Sync for SendSliceMut<T> {}
+
+impl<T> SendSliceMut<T> {
+    pub fn new(slice: &mut [T]) -> SendSliceMut<T> {
+        SendSliceMut { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    /// Reborrow `[start, start + len)` of the underlying slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must use disjoint ranges, and the slice handed to
+    /// [`SendSliceMut::new`] must outlive every use (the executors below
+    /// guarantee this by blocking until all workers acknowledge completion).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, start: usize, len: usize) -> &mut [T] {
+        assert!(start + len <= self.len, "shard slice range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// Shared-slice counterpart of [`SendSliceMut`] for read-only inputs.
+pub struct SendSliceRef<T> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> Clone for SendSliceRef<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendSliceRef<T> {}
+unsafe impl<T: Sync> Send for SendSliceRef<T> {}
+unsafe impl<T: Sync> Sync for SendSliceRef<T> {}
+
+impl<T> SendSliceRef<T> {
+    pub fn new(slice: &[T]) -> SendSliceRef<T> {
+        SendSliceRef { ptr: slice.as_ptr(), len: slice.len() }
+    }
+
+    /// Reborrow `[start, start + len)` of the underlying slice.
+    ///
+    /// # Safety
+    /// The slice handed to [`SendSliceRef::new`] must outlive every use.
+    pub unsafe fn range(&self, start: usize, len: usize) -> &[T] {
+        assert!(start + len <= self.len, "shard slice range out of bounds");
+        std::slice::from_raw_parts(self.ptr.add(start), len)
+    }
+}
+
+type Job<S> = Box<dyn FnOnce(&mut S) + Send + 'static>;
+
+/// Erase a job's borrow lifetime so it can cross the worker channel.
+///
+/// # Safety
+/// The caller must not return (or otherwise invalidate the borrows captured
+/// by `job`) until the job has finished running — [`ShardPool::run_all`]
+/// guarantees this by blocking on per-worker acknowledgements.
+unsafe fn erase_job_lifetime<'a, S>(
+    job: Box<dyn FnOnce(&mut S) + Send + 'a>,
+) -> Box<dyn FnOnce(&mut S) + Send + 'static> {
+    std::mem::transmute(job)
+}
+
+/// A persistent pool of worker threads, each owning one shard state `S`.
+/// Spawned once; every [`ShardPool::run_all`] broadcasts a job and blocks
+/// until all workers acknowledge, so borrowed captures stay valid.
+pub struct ShardPool<S: Send + 'static> {
+    txs: Vec<mpsc::Sender<Job<S>>>,
+    done_rx: mpsc::Receiver<bool>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+fn worker_loop<S>(mut state: S, rx: mpsc::Receiver<Job<S>>, done: mpsc::Sender<bool>) {
+    while let Ok(job) = rx.recv() {
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&mut state)))
+            .is_ok();
+        let still_listening = done.send(ok).is_ok();
+        if !ok || !still_listening {
+            break;
+        }
+    }
+}
+
+impl<S: Send + 'static> ShardPool<S> {
+    pub fn new(states: Vec<S>) -> ShardPool<S> {
+        assert!(!states.is_empty(), "shard pool needs at least one shard");
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut txs = Vec::with_capacity(states.len());
+        let mut handles = Vec::with_capacity(states.len());
+        for (i, state) in states.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Job<S>>();
+            let done = done_tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("vecenv-shard-{i}"))
+                .spawn(move || worker_loop(state, rx, done))
+                .expect("spawning shard worker thread");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        ShardPool { txs, done_rx, handles }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Run `f(shard_index, &mut shard_state)` on every worker concurrently
+    /// and block until all have finished. Panics if any worker's job
+    /// panicked or any worker is gone — but only after draining every
+    /// in-flight acknowledgement, so no worker is still touching
+    /// caller-borrowed data when this unwinds.
+    pub fn run_all(&self, f: &(dyn Fn(usize, &mut S) + Send + Sync)) {
+        // Dispatch without panicking mid-loop: a send to a dead worker (one
+        // that exited after an earlier panic) just drops the job — it never
+        // runs — and is recorded as a failure for after the drain.
+        let mut dispatched = 0usize;
+        let mut all_sent = true;
+        for (i, tx) in self.txs.iter().enumerate() {
+            let job: Box<dyn FnOnce(&mut S) + Send + '_> = Box::new(move |s: &mut S| f(i, s));
+            // SAFETY: lifetime erasure only — both types are the same fat
+            // `Box<dyn ...>` apart from the lifetime bound (the classic
+            // scoped-pool trick). This call does not return until every
+            // dispatched job has been acknowledged below (or its worker has
+            // provably exited), so the borrow of `f` (and anything it
+            // captures) strictly outlives all use.
+            let job: Job<S> = unsafe { erase_job_lifetime(job) };
+            if tx.send(job).is_ok() {
+                dispatched += 1;
+            } else {
+                all_sent = false;
+            }
+        }
+        let mut ok = all_sent;
+        for _ in 0..dispatched {
+            match self.done_rx.recv() {
+                Ok(job_ok) => ok &= job_ok,
+                // All ack senders dropped: every worker has exited its loop,
+                // so nothing is still running — safe to stop draining.
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        assert!(ok, "a shard worker panicked or is gone");
+    }
+}
+
+impl<S: Send + 'static> Drop for ShardPool<S> {
+    fn drop(&mut self) {
+        // Closing the job channels ends each worker loop.
+        self.txs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Serial-or-pooled shard executor: one code path for callers, with
+/// `Serial` behaving exactly like the pre-sharding loop (same order, same
+/// thread) so `num_workers = 1` is the old semantics by construction.
+pub enum ShardExec<S: Send + 'static> {
+    Serial(Vec<S>),
+    Pool(ShardPool<S>),
+}
+
+impl<S: Send + 'static> ShardExec<S> {
+    /// `parallel = false` (or a single shard) keeps everything inline.
+    pub fn new(shards: Vec<S>, parallel: bool) -> ShardExec<S> {
+        assert!(!shards.is_empty(), "need at least one shard");
+        if parallel && shards.len() > 1 {
+            ShardExec::Pool(ShardPool::new(shards))
+        } else {
+            ShardExec::Serial(shards)
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        match self {
+            ShardExec::Serial(shards) => shards.len(),
+            ShardExec::Pool(pool) => pool.num_shards(),
+        }
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        matches!(self, ShardExec::Pool(_))
+    }
+
+    /// Run a mutating pass over every shard (parallel when pooled).
+    pub fn run_mut(&mut self, f: impl Fn(usize, &mut S) + Send + Sync) {
+        match self {
+            ShardExec::Serial(shards) => {
+                for (i, s) in shards.iter_mut().enumerate() {
+                    f(i, s);
+                }
+            }
+            ShardExec::Pool(pool) => pool.run_all(&f),
+        }
+    }
+
+    /// Run a read-only pass over every shard (parallel when pooled).
+    pub fn run_ref(&self, f: impl Fn(usize, &S) + Send + Sync) {
+        match self {
+            ShardExec::Serial(shards) => {
+                for (i, s) in shards.iter().enumerate() {
+                    f(i, s);
+                }
+            }
+            ShardExec::Pool(pool) => {
+                let g = move |i: usize, s: &mut S| f(i, &*s);
+                pool.run_all(&g);
+            }
+        }
+    }
+
+    /// Direct access to shard states — only possible in serial mode (pooled
+    /// states live on their worker threads).
+    pub fn serial_shards_mut(&mut self) -> Option<&mut [S]> {
+        match self {
+            ShardExec::Serial(shards) => Some(shards),
+            ShardExec::Pool(_) => None,
+        }
+    }
+}
+
+/// One shard of a [`ShardedVecEnv`]: a smaller vec-env covering the global
+/// env indices `[start, start + env.num_envs())`.
+pub struct Shard<V> {
+    pub env: V,
+    pub start: usize,
+}
+
+/// Parallel adapter over per-shard [`VecEnv`]s. Construct the shards so
+/// that shard `i` covers the `i`-th range of [`shard_ranges`] *and* seeds
+/// its envs by global index (e.g. [`super::GsVecEnv::with_index_offset`]);
+/// then sharded output is bitwise identical to the equivalent serial env.
+pub struct ShardedVecEnv<V: VecEnv + Send + 'static> {
+    exec: ShardExec<Shard<V>>,
+    num_envs: usize,
+    obs_dim: usize,
+    num_actions: usize,
+}
+
+impl<V: VecEnv + Send + 'static> ShardedVecEnv<V> {
+    /// Parallel executor: one worker thread per shard.
+    pub fn from_shards(shards: Vec<V>) -> ShardedVecEnv<V> {
+        Self::build(shards, true)
+    }
+
+    /// Same sharding, executed inline on the caller thread (testing and the
+    /// `num_workers = 1` path).
+    pub fn serial_from_shards(shards: Vec<V>) -> ShardedVecEnv<V> {
+        Self::build(shards, false)
+    }
+
+    fn build(shards: Vec<V>, parallel: bool) -> ShardedVecEnv<V> {
+        assert!(!shards.is_empty(), "need at least one shard");
+        let obs_dim = shards[0].obs_dim();
+        let num_actions = shards[0].num_actions();
+        let mut wrapped = Vec::with_capacity(shards.len());
+        let mut start = 0usize;
+        for env in shards {
+            assert_eq!(env.obs_dim(), obs_dim, "shards must agree on obs_dim");
+            assert_eq!(env.num_actions(), num_actions, "shards must agree on num_actions");
+            assert!(env.num_envs() > 0, "empty shard");
+            let n = env.num_envs();
+            wrapped.push(Shard { env, start });
+            start += n;
+        }
+        ShardedVecEnv {
+            exec: ShardExec::new(wrapped, parallel),
+            num_envs: start,
+            obs_dim,
+            num_actions,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.exec.num_shards()
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.exec.is_parallel()
+    }
+}
+
+impl<V: VecEnv + Send + 'static> VecEnv for ShardedVecEnv<V> {
+    fn num_envs(&self) -> usize {
+        self.num_envs
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn num_actions(&self) -> usize {
+        self.num_actions
+    }
+
+    fn reset_all(&mut self, seed: u64) {
+        self.exec.run_mut(move |_, shard| shard.env.reset_all(seed));
+    }
+
+    fn observe_all(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.num_envs * self.obs_dim);
+        let d = self.obs_dim;
+        let out = SendSliceMut::new(out);
+        self.exec.run_ref(move |_, shard| {
+            let n = shard.env.num_envs();
+            // SAFETY: shard ranges are disjoint and tile [0, B); run_ref
+            // blocks until every shard is done writing.
+            let dst = unsafe { out.range(shard.start * d, n * d) };
+            shard.env.observe_all(dst);
+        });
+    }
+
+    fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
+        debug_assert_eq!(actions.len(), self.num_envs);
+        debug_assert_eq!(rewards.len(), self.num_envs);
+        debug_assert_eq!(dones.len(), self.num_envs);
+        let actions = SendSliceRef::new(actions);
+        let rewards = SendSliceMut::new(rewards);
+        let dones = SendSliceMut::new(dones);
+        self.exec.run_mut(move |_, shard| {
+            let (s, n) = (shard.start, shard.env.num_envs());
+            // SAFETY: disjoint per-shard ranges; run_mut blocks until done.
+            let (a, r, dn) = unsafe { (actions.range(s, n), rewards.range(s, n), dones.range(s, n)) };
+            shard.env.step_all(a, r, dn);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::test_envs::Corridor;
+    use crate::core::GsVecEnv;
+
+    #[test]
+    fn shard_ranges_tile_and_balance() {
+        assert_eq!(shard_ranges(10, 4), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(shard_ranges(3, 1), vec![(0, 3)]);
+        assert_eq!(shard_ranges(2, 8), vec![(0, 1), (1, 2)]);
+        let r = shard_ranges(1024, 8);
+        assert_eq!(r.len(), 8);
+        assert!(r.iter().all(|&(s, e)| e - s == 128));
+    }
+
+    #[test]
+    fn pool_runs_jobs_with_borrowed_state() {
+        let pool = ShardPool::new(vec![0u64, 10, 20, 30]);
+        let mut out = vec![0u64; 4];
+        let out_ptr = SendSliceMut::new(&mut out);
+        for round in 1..=3u64 {
+            pool.run_all(&move |i, s: &mut u64| {
+                *s += round;
+                let dst = unsafe { out_ptr.range(i, 1) };
+                dst[0] = *s;
+            });
+        }
+        assert_eq!(out, vec![6, 16, 26, 36]);
+    }
+
+    fn make_sharded(b: usize, w: usize, parallel: bool) -> ShardedVecEnv<GsVecEnv<Corridor>> {
+        let shards: Vec<GsVecEnv<Corridor>> = shard_ranges(b, w)
+            .into_iter()
+            .map(|(s, e)| {
+                GsVecEnv::with_index_offset((s..e).map(|_| Corridor::new(3, 5)).collect(), s)
+            })
+            .collect();
+        if parallel {
+            ShardedVecEnv::from_shards(shards)
+        } else {
+            ShardedVecEnv::serial_from_shards(shards)
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_bitwise() {
+        let b = 10;
+        let mut serial = GsVecEnv::new((0..b).map(|_| Corridor::new(3, 5)).collect());
+        let mut sharded = make_sharded(b, 4, true);
+        serial.reset_all(42);
+        sharded.reset_all(42);
+        let mut obs_a = vec![0.0f32; b * 3];
+        let mut obs_b = vec![0.0f32; b * 3];
+        let (mut ra, mut rb) = (vec![0.0f32; b], vec![0.0f32; b]);
+        let (mut da, mut db) = (vec![false; b], vec![false; b]);
+        for t in 0..20 {
+            let actions: Vec<usize> = (0..b).map(|i| (t + i) % 2).collect();
+            serial.step_all(&actions, &mut ra, &mut da);
+            sharded.step_all(&actions, &mut rb, &mut db);
+            assert_eq!(ra, rb, "rewards diverged at step {t}");
+            assert_eq!(da, db, "dones diverged at step {t}");
+            serial.observe_all(&mut obs_a);
+            sharded.observe_all(&mut obs_b);
+            assert_eq!(obs_a, obs_b, "observations diverged at step {t}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_inline_sharding() {
+        let b = 7;
+        let mut inline = make_sharded(b, 3, false);
+        let mut pooled = make_sharded(b, 3, true);
+        inline.reset_all(9);
+        pooled.reset_all(9);
+        assert_eq!(pooled.num_shards(), 3);
+        assert!(pooled.is_parallel());
+        let actions = vec![1usize; b];
+        let (mut ra, mut rb) = (vec![0.0f32; b], vec![0.0f32; b]);
+        let (mut da, mut db) = (vec![false; b], vec![false; b]);
+        for _ in 0..12 {
+            inline.step_all(&actions, &mut ra, &mut da);
+            pooled.step_all(&actions, &mut rb, &mut db);
+            assert_eq!(ra, rb);
+            assert_eq!(da, db);
+        }
+    }
+
+    #[test]
+    fn effective_workers_resolves_auto() {
+        assert_eq!(effective_workers(3), 3);
+        assert!(effective_workers(0) >= 1);
+    }
+}

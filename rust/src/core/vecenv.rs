@@ -44,29 +44,44 @@ impl<V: VecEnv + ?Sized> VecEnv for Box<V> {
 }
 
 /// Vectorization of any [`Environment`] (used for GS training and for
-/// simple test envs). Each env gets an independent seed stream.
+/// simple test envs). Each env gets an independent seed stream derived from
+/// its **global** index (`index_offset + local index`), so a batch split
+/// into contiguous shards (see [`super::shard::ShardedVecEnv`]) seeds every
+/// env exactly as the equivalent monolithic batch would — the basis of the
+/// sharded-equals-serial determinism guarantee.
 pub struct GsVecEnv<E: Environment> {
     envs: Vec<E>,
     episode_counter: Vec<u64>,
     base_seed: u64,
+    index_offset: usize,
 }
 
 impl<E: Environment> GsVecEnv<E> {
     pub fn new(envs: Vec<E>) -> Self {
+        Self::with_index_offset(envs, 0)
+    }
+
+    /// A shard covering global env indices `[offset, offset + envs.len())`.
+    pub fn with_index_offset(envs: Vec<E>, offset: usize) -> Self {
         assert!(!envs.is_empty());
         let n = envs.len();
-        GsVecEnv { envs, episode_counter: vec![0; n], base_seed: 0 }
+        GsVecEnv { envs, episode_counter: vec![0; n], base_seed: 0, index_offset: offset }
     }
 
     pub fn envs(&self) -> &[E] {
         &self.envs
     }
 
+    pub fn index_offset(&self) -> usize {
+        self.index_offset
+    }
+
     fn seed_for(&self, env_idx: usize) -> u64 {
-        // Distinct per (base_seed, env, episode) without collisions.
+        // Distinct per (base_seed, global env index, episode) without
+        // collisions.
         self.base_seed
             .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add(env_idx as u64)
+            .wrapping_add((self.index_offset + env_idx) as u64)
             .wrapping_add(self.episode_counter[env_idx].wrapping_mul(0xD1B54A32D192ED03))
     }
 }
@@ -118,13 +133,20 @@ impl<E: Environment> VecEnv for GsVecEnv<E> {
 /// Frame-stacking wrapper over any [`VecEnv`]: multiplies the observation
 /// dimension by `k` (paper App F — the warehouse memory agent stacks the
 /// last 8 observations).
+///
+/// History is kept as a ring of `k` full-batch frame slabs (each env-major
+/// `[B * frame_dim]`). The inner env writes each new frame **directly into
+/// the ring slab** — for a sharded inner env that write happens per-shard
+/// into disjoint slices, with no intermediate full-batch scratch copy and
+/// no per-step shifting of the history.
 pub struct FrameStackVec<V: VecEnv> {
     inner: V,
     k: usize,
     frame_dim: usize,
-    /// env-major stacks: [B * k * frame_dim], oldest frame first per env.
-    stacks: Vec<f32>,
-    scratch: Vec<f32>,
+    /// `k` frame slabs of `[B * frame_dim]` each; `ring[next]` holds the
+    /// oldest frame (the one the next push overwrites).
+    ring: Vec<f32>,
+    next: usize,
 }
 
 impl<V: VecEnv> FrameStackVec<V> {
@@ -132,13 +154,7 @@ impl<V: VecEnv> FrameStackVec<V> {
         assert!(k >= 1);
         let frame_dim = inner.obs_dim();
         let b = inner.num_envs();
-        FrameStackVec {
-            inner,
-            k,
-            frame_dim,
-            stacks: vec![0.0; b * k * frame_dim],
-            scratch: vec![0.0; b * frame_dim],
-        }
+        FrameStackVec { inner, k, frame_dim, ring: vec![0.0; k * b * frame_dim], next: 0 }
     }
 
     pub fn inner(&self) -> &V {
@@ -148,21 +164,30 @@ impl<V: VecEnv> FrameStackVec<V> {
     fn push_frames(&mut self, dones: Option<&[bool]>) {
         let b = self.inner.num_envs();
         let (k, d) = (self.k, self.frame_dim);
-        self.inner.observe_all(&mut self.scratch);
-        for i in 0..b {
-            let stack = &mut self.stacks[i * k * d..(i + 1) * k * d];
-            if let Some(dones) = dones {
-                if dones[i] {
-                    // Episode boundary: clear history so the next episode's
-                    // first stacked obs contains only its initial frame.
-                    stack.fill(0.0);
+        let slab_len = b * d;
+        debug_assert!(self.next < k, "ring cursor within bounds");
+        debug_assert_eq!(self.ring.len(), k * slab_len, "ring covers k full-batch slabs");
+        {
+            // Newest frame straight from the inner env into its slab — for a
+            // sharded env, each shard writes its own disjoint slice here.
+            let slab = &mut self.ring[self.next * slab_len..(self.next + 1) * slab_len];
+            self.inner.observe_all(slab);
+        }
+        if let Some(dones) = dones {
+            // Episode boundary: clear the env's history in the *other*
+            // slabs so the next stacked obs holds only its initial frame.
+            for (i, &done) in dones.iter().enumerate().take(b) {
+                if !done {
+                    continue;
+                }
+                for j in 0..k {
+                    if j != self.next {
+                        self.ring[j * slab_len + i * d..j * slab_len + (i + 1) * d].fill(0.0);
+                    }
                 }
             }
-            if k > 1 {
-                stack.copy_within(d.., 0);
-            }
-            stack[(k - 1) * d..].copy_from_slice(&self.scratch[i * d..(i + 1) * d]);
         }
+        self.next = (self.next + 1) % k;
     }
 }
 
@@ -181,12 +206,26 @@ impl<V: VecEnv> VecEnv for FrameStackVec<V> {
 
     fn reset_all(&mut self, seed: u64) {
         self.inner.reset_all(seed);
-        self.stacks.fill(0.0);
+        self.ring.fill(0.0);
+        self.next = 0;
         self.push_frames(None);
     }
 
     fn observe_all(&self, out: &mut [f32]) {
-        out.copy_from_slice(&self.stacks);
+        let b = self.inner.num_envs();
+        let (k, d) = (self.k, self.frame_dim);
+        let slab_len = b * d;
+        debug_assert_eq!(out.len(), b * k * d);
+        // Assemble per-env stacks, oldest frame first: slab `next` is the
+        // oldest, `next + k - 1 (mod k)` the newest.
+        for i in 0..b {
+            let dst = &mut out[i * k * d..(i + 1) * k * d];
+            for j in 0..k {
+                let slab = (self.next + j) % k;
+                let src = &self.ring[slab * slab_len + i * d..slab * slab_len + (i + 1) * d];
+                dst[j * d..(j + 1) * d].copy_from_slice(src);
+            }
+        }
     }
 
     fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {

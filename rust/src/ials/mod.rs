@@ -8,25 +8,142 @@
 //!    for all B environments** (the L3 perf lever, DESIGN.md §7),
 //! 3. sample the binary realization `u_t`,
 //! 4. step the LS with `(a_t, u_t)`.
+//!
+//! ## Parallel execution
+//!
+//! The step splits into a parallel/serial sandwich (see `core::shard`):
+//! d-set gathering (1) and LS stepping (3+4) are pure Rust and run on the
+//! shard workers, each writing its contiguous slice of the shared env-major
+//! buffers; the AIP forward (2) stays a single batched call on the
+//! coordinator thread (the `Runtime` is `Rc`/`RefCell`-based and must not
+//! cross threads). Every environment owns its RNG stream and is seeded from
+//! its **global** index, so results are bitwise identical to serial
+//! execution at the same seed, for any worker count.
 
-use crate::core::{LocalEnv, VecEnv};
+use crate::core::shard::{SendSliceMut, SendSliceRef, ShardExec};
+use crate::core::{shard_ranges, LocalEnv, VecEnv};
 use crate::influence::InfluencePredictor;
 use crate::util::Pcg32;
 
-pub struct IalsVecEnv<L: LocalEnv> {
+/// One shard of local simulators covering the global env indices
+/// `[start, start + envs.len())`, with per-env influence-sampling RNG
+/// streams and episode counters.
+pub struct IalsShard<L: LocalEnv> {
     envs: Vec<L>,
-    predictor: Box<dyn InfluencePredictor>,
-    rng: Pcg32,
+    rngs: Vec<Pcg32>,
     episode_counter: Vec<u64>,
+    start: usize,
     base_seed: u64,
-    // scratch (no allocation on the step path)
-    dsets: Vec<f32>,
-    probs: Vec<f32>,
+    /// Per-step scratch for one env's sampled influence realization.
     u_bools: Vec<bool>,
 }
 
-impl<L: LocalEnv> IalsVecEnv<L> {
+impl<L: LocalEnv> IalsShard<L> {
+    fn new(envs: Vec<L>, start: usize, num_sources: usize) -> IalsShard<L> {
+        let n = envs.len();
+        IalsShard {
+            envs,
+            rngs: (0..n).map(|_| Pcg32::seeded(0)).collect(),
+            episode_counter: vec![0; n],
+            start,
+            base_seed: 0,
+            u_bools: vec![false; num_sources],
+        }
+    }
+
+    fn seed_for(&self, local_idx: usize) -> u64 {
+        // Distinct per (base_seed, global env index, episode) — the same
+        // formula for any sharding, which is what makes sharded == serial.
+        self.base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((self.start + local_idx) as u64)
+            .wrapping_add(self.episode_counter[local_idx].wrapping_mul(0xD1B54A32D192ED03))
+    }
+
+    fn reset_all(&mut self, seed: u64) {
+        self.base_seed = seed;
+        for i in 0..self.envs.len() {
+            self.episode_counter[i] = 0;
+            let s = self.seed_for(i);
+            self.envs[i].reset(s);
+            // Influence-sampling stream: one per global env index, persists
+            // across episode boundaries (like the env's own RNG does not).
+            self.rngs[i] = Pcg32::new(seed, 1312 + (self.start + i) as u64);
+        }
+    }
+
+    fn observe_into(&self, d: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.envs.len() * d);
+        for (i, env) in self.envs.iter().enumerate() {
+            env.observe(&mut out[i * d..(i + 1) * d]);
+        }
+    }
+
+    fn dset_into(&self, dd: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.envs.len() * dd);
+        for (i, env) in self.envs.iter().enumerate() {
+            env.dset(&mut out[i * dd..(i + 1) * dd]);
+        }
+    }
+
+    /// Sample `u_t` per env from the batched probabilities and step the LS
+    /// (Algorithm 2 lines 8–11), auto-resetting finished episodes. The
+    /// coordinator later resets predictor state for envs flagged in `dones`.
+    fn step_with_probs(
+        &mut self,
+        actions: &[usize],
+        probs: &[f32],
+        ud: usize,
+        rewards: &mut [f32],
+        dones: &mut [bool],
+    ) {
+        let n = self.envs.len();
+        debug_assert_eq!(actions.len(), n);
+        debug_assert_eq!(probs.len(), n * ud);
+        for i in 0..n {
+            for k in 0..ud {
+                self.u_bools[k] = self.rngs[i].bernoulli(probs[i * ud + k]);
+            }
+            let step = self.envs[i].step_with_influence(actions[i], &self.u_bools);
+            rewards[i] = step.reward;
+            dones[i] = step.done;
+            if step.done {
+                self.episode_counter[i] += 1;
+                let s = self.seed_for(i);
+                self.envs[i].reset(s);
+            }
+        }
+    }
+}
+
+pub struct IalsVecEnv<L: LocalEnv + Send + 'static> {
+    exec: ShardExec<IalsShard<L>>,
+    predictor: Box<dyn InfluencePredictor>,
+    num_envs: usize,
+    obs_dim: usize,
+    num_actions: usize,
+    dset_dim: usize,
+    num_sources: usize,
+    // coordinator scratch (no allocation on the step path)
+    dsets: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+impl<L: LocalEnv + Send + 'static> IalsVecEnv<L> {
+    /// Serial IALS (a single shard stepped inline) — the historical
+    /// behaviour and the reference for the determinism guarantee.
     pub fn new(envs: Vec<L>, predictor: Box<dyn InfluencePredictor>) -> Self {
+        Self::with_workers(envs, predictor, 1)
+    }
+
+    /// Shard the `B` environments over `num_workers` persistent worker
+    /// threads (clamped to `B`; `1` keeps everything inline). Output is
+    /// bitwise identical to [`IalsVecEnv::new`] at the same seed.
+    pub fn with_workers(
+        envs: Vec<L>,
+        predictor: Box<dyn InfluencePredictor>,
+        num_workers: usize,
+    ) -> Self {
         assert!(!envs.is_empty());
         let b = envs.len();
         assert_eq!(predictor.batch(), b, "predictor batch must equal env count");
@@ -36,17 +153,32 @@ impl<L: LocalEnv> IalsVecEnv<L> {
             envs[0].num_influence_sources(),
             "influence dims must agree"
         );
+        let obs_dim = envs[0].obs_dim();
+        let num_actions = envs[0].num_actions();
         let dd = envs[0].dset_dim();
         let ud = envs[0].num_influence_sources();
+
+        let w = num_workers.max(1).min(b);
+        let mut envs = envs;
+        let mut shards = Vec::with_capacity(w);
+        // Split off shards back-to-front so each keeps its contiguous range.
+        for &(s, e) in shard_ranges(b, w).iter().rev() {
+            let tail = envs.split_off(s);
+            debug_assert_eq!(tail.len(), e - s);
+            shards.push(IalsShard::new(tail, s, ud));
+        }
+        shards.reverse();
+
         IalsVecEnv {
-            envs,
+            exec: ShardExec::new(shards, w > 1),
             predictor,
-            rng: Pcg32::seeded(0),
-            episode_counter: vec![0; b],
-            base_seed: 0,
+            num_envs: b,
+            obs_dim,
+            num_actions,
+            dset_dim: dd,
+            num_sources: ud,
             dsets: vec![0.0; b * dd],
             probs: vec![0.0; b * ud],
-            u_bools: vec![false; ud],
         }
     }
 
@@ -54,77 +186,96 @@ impl<L: LocalEnv> IalsVecEnv<L> {
         self.predictor.as_ref()
     }
 
-    /// Direct access to the wrapped local simulators (diagnostics, e.g.
-    /// the Fig 6 item-lifetime histograms).
-    pub fn envs_mut(&mut self) -> &mut [L] {
-        &mut self.envs
+    pub fn num_shards(&self) -> usize {
+        self.exec.num_shards()
     }
 
-    fn seed_for(&self, env_idx: usize) -> u64 {
-        self.base_seed
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add(env_idx as u64)
-            .wrapping_add(self.episode_counter[env_idx].wrapping_mul(0xD1B54A32D192ED03))
+    /// Direct access to the wrapped local simulators (diagnostics, e.g.
+    /// the Fig 6 item-lifetime histograms). Serial mode only — pooled
+    /// shards live on their worker threads.
+    pub fn envs_mut(&mut self) -> &mut [L] {
+        let shards = self
+            .exec
+            .serial_shards_mut()
+            .expect("envs_mut requires a serial IalsVecEnv (num_workers = 1)");
+        debug_assert_eq!(shards.len(), 1, "serial executor holds exactly one shard");
+        &mut shards[0].envs
     }
 }
 
-impl<L: LocalEnv> VecEnv for IalsVecEnv<L> {
+impl<L: LocalEnv + Send + 'static> VecEnv for IalsVecEnv<L> {
     fn num_envs(&self) -> usize {
-        self.envs.len()
+        self.num_envs
     }
 
     fn obs_dim(&self) -> usize {
-        self.envs[0].obs_dim()
+        self.obs_dim
     }
 
     fn num_actions(&self) -> usize {
-        self.envs[0].num_actions()
+        self.num_actions
     }
 
     fn reset_all(&mut self, seed: u64) {
-        self.base_seed = seed;
-        self.rng = Pcg32::new(seed, 1312);
         self.predictor.reset_all();
-        for i in 0..self.envs.len() {
-            self.episode_counter[i] = 0;
-            let s = self.seed_for(i);
-            self.envs[i].reset(s);
-        }
+        self.exec.run_mut(move |_, shard| shard.reset_all(seed));
     }
 
     fn observe_all(&self, out: &mut [f32]) {
-        let d = self.obs_dim();
-        for (i, env) in self.envs.iter().enumerate() {
-            env.observe(&mut out[i * d..(i + 1) * d]);
-        }
+        debug_assert_eq!(out.len(), self.num_envs * self.obs_dim);
+        let d = self.obs_dim;
+        let out = SendSliceMut::new(out);
+        self.exec.run_ref(move |_, shard| {
+            // SAFETY: disjoint per-shard ranges; run_ref blocks until done.
+            let dst = unsafe { out.range(shard.start * d, shard.envs.len() * d) };
+            shard.observe_into(d, dst);
+        });
     }
 
     fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
-        let b = self.envs.len();
-        let dd = self.predictor.dset_dim();
-        let ud = self.predictor.num_sources();
+        let b = self.num_envs;
+        let dd = self.dset_dim;
+        let ud = self.num_sources;
         debug_assert_eq!(actions.len(), b);
 
-        // 1. d_t for every env.
-        for (i, env) in self.envs.iter().enumerate() {
-            env.dset(&mut self.dsets[i * dd..(i + 1) * dd]);
+        // 1. d_t for every env (parallel, direct into the shared buffer).
+        {
+            let dsets = SendSliceMut::new(&mut self.dsets);
+            self.exec.run_ref(move |_, shard| {
+                // SAFETY: disjoint per-shard ranges; run_ref blocks until done.
+                let dst = unsafe { dsets.range(shard.start * dd, shard.envs.len() * dd) };
+                shard.dset_into(dd, dst);
+            });
         }
-        // 2. One batched AIP call.
+        // 2. One batched AIP call on the coordinator thread.
         self.predictor
             .predict(&self.dsets, &mut self.probs)
             .expect("influence predictor failed");
-        // 3+4. Sample u_t and step each LS.
-        for i in 0..b {
-            for k in 0..ud {
-                self.u_bools[k] = self.rng.bernoulli(self.probs[i * ud + k]);
-            }
-            let step = self.envs[i].step_with_influence(actions[i], &self.u_bools);
-            rewards[i] = step.reward;
-            dones[i] = step.done;
-            if step.done {
-                self.episode_counter[i] += 1;
-                let s = self.seed_for(i);
-                self.envs[i].reset(s);
+        // 3+4. Sample u_t and step each LS (parallel).
+        {
+            let actions = SendSliceRef::new(actions);
+            let probs = SendSliceRef::new(&self.probs);
+            let rewards = SendSliceMut::new(rewards);
+            let dones = SendSliceMut::new(dones);
+            self.exec.run_mut(move |_, shard| {
+                let (s, n) = (shard.start, shard.envs.len());
+                // SAFETY: disjoint per-shard ranges; run_mut blocks until done.
+                let (a, p, r, dn) = unsafe {
+                    (
+                        actions.range(s, n),
+                        probs.range(s * ud, n * ud),
+                        rewards.range(s, n),
+                        dones.range(s, n),
+                    )
+                };
+                shard.step_with_probs(a, p, ud, r, dn);
+            });
+        }
+        // Episode boundaries: clear the predictor's recurrent state rows on
+        // the coordinator (same effect and order as the serial loop — the
+        // state is not consulted again until the next batched predict).
+        for (i, &done) in dones.iter().enumerate().take(b) {
+            if done {
                 self.predictor.reset_state(i);
             }
         }
@@ -139,10 +290,14 @@ mod tests {
     use crate::sim::traffic::TrafficLocalEnv;
 
     fn make(b: usize, p: f32) -> IalsVecEnv<TrafficLocalEnv> {
+        make_workers(b, p, 1)
+    }
+
+    fn make_workers(b: usize, p: f32, w: usize) -> IalsVecEnv<TrafficLocalEnv> {
         let cfg = TrafficConfig::default();
         let envs: Vec<TrafficLocalEnv> = (0..b).map(|_| TrafficLocalEnv::new(&cfg)).collect();
         let aip = FixedMarginalAip::constant(b, 40, 4, p);
-        IalsVecEnv::new(envs, Box::new(aip))
+        IalsVecEnv::with_workers(envs, Box::new(aip), w)
     }
 
     #[test]
@@ -199,6 +354,30 @@ mod tests {
             }
         }
         assert_eq!(done_count, 2, "two 200-step episodes complete in 450 steps");
+    }
+
+    #[test]
+    fn sharded_matches_serial_bitwise() {
+        let b = 6;
+        let mut serial = make_workers(b, 0.3, 1);
+        let mut sharded = make_workers(b, 0.3, 4);
+        assert_eq!(sharded.num_shards(), 4);
+        serial.reset_all(11);
+        sharded.reset_all(11);
+        let mut obs_a = vec![0.0f32; b * 42];
+        let mut obs_b = vec![0.0f32; b * 42];
+        let (mut ra, mut rb) = (vec![0.0f32; b], vec![0.0f32; b]);
+        let (mut da, mut db) = (vec![false; b], vec![false; b]);
+        for t in 0..50 {
+            let actions: Vec<usize> = (0..b).map(|i| (t + i) % 2).collect();
+            serial.step_all(&actions, &mut ra, &mut da);
+            sharded.step_all(&actions, &mut rb, &mut db);
+            assert_eq!(ra, rb, "rewards diverged at step {t}");
+            assert_eq!(da, db, "dones diverged at step {t}");
+            serial.observe_all(&mut obs_a);
+            sharded.observe_all(&mut obs_b);
+            assert_eq!(obs_a, obs_b, "observations diverged at step {t}");
+        }
     }
 
     #[test]

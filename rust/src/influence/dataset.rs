@@ -97,6 +97,20 @@ impl InfluenceDataset {
         out
     }
 
+    /// Append every episode of `other` (used to merge per-worker datasets
+    /// from sharded collection in a deterministic worker order).
+    pub fn extend_from(&mut self, other: &InfluenceDataset) {
+        assert_eq!(self.dset_dim, other.dset_dim, "d-set dims must agree");
+        assert_eq!(self.u_dim, other.u_dim, "influence dims must agree");
+        for ep in &other.episodes {
+            self.begin_episode();
+            for t in 0..ep.steps {
+                self.push(ep.d_row(other, t), ep.u_row(other, t));
+            }
+        }
+        self.open = false;
+    }
+
     /// Split episodes into (train, heldout) with the given train fraction.
     pub fn split(&self, train_frac: f64, rng: &mut Pcg32) -> (InfluenceDataset, InfluenceDataset) {
         let mut idx: Vec<usize> = (0..self.episodes.len()).collect();

@@ -28,6 +28,10 @@ pub struct NeuralAip {
     u_dim: usize,
     /// Recurrent state `[batch * hidden]` (GRU only).
     h: Vec<f32>,
+    /// Scratch for the updated recurrent state — the step artifact writes
+    /// into this buffer, then it is swapped with `h` (no allocation on the
+    /// predict path).
+    h_next: Vec<f32>,
 }
 
 impl NeuralAip {
@@ -83,7 +87,19 @@ impl NeuralAip {
             AipArch::Gru { hidden } => vec![0.0; batch * hidden],
             AipArch::Fnn => Vec::new(),
         };
-        Ok(NeuralAip { rt, store, model: model.to_string(), artifact, arch, batch, dset_dim, u_dim, h })
+        let h_next = h.clone();
+        Ok(NeuralAip {
+            rt,
+            store,
+            model: model.to_string(),
+            artifact,
+            arch,
+            batch,
+            dset_dim,
+            u_dim,
+            h,
+            h_next,
+        })
     }
 
     pub fn arch(&self) -> AipArch {
@@ -117,20 +133,25 @@ impl InfluencePredictor for NeuralAip {
     fn predict(&mut self, dsets: &[f32], probs: &mut [f32]) -> Result<()> {
         debug_assert_eq!(dsets.len(), self.batch * self.dset_dim);
         debug_assert_eq!(probs.len(), self.batch * self.u_dim);
+        // Allocation-free forwards: outputs land straight in the caller's
+        // `probs` (and the reusable `h_next`) via `Runtime::call_into`.
         match self.arch {
             AipArch::Fnn => {
-                let outs =
-                    self.rt.call(&self.artifact, &mut self.store, &[DataArg::F32(dsets)])?;
-                probs.copy_from_slice(&outs[0]);
+                self.rt.call_into(
+                    &self.artifact,
+                    &mut self.store,
+                    &[DataArg::F32(dsets)],
+                    &mut [probs],
+                )?;
             }
             AipArch::Gru { .. } => {
-                let outs = self.rt.call(
+                self.rt.call_into(
                     &self.artifact,
                     &mut self.store,
                     &[DataArg::F32(&self.h), DataArg::F32(dsets)],
+                    &mut [probs, &mut self.h_next],
                 )?;
-                probs.copy_from_slice(&outs[0]);
-                self.h.copy_from_slice(&outs[1]);
+                std::mem::swap(&mut self.h, &mut self.h_next);
             }
         }
         Ok(())

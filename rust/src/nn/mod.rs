@@ -72,27 +72,37 @@ impl ParamStore {
             bytes.len(),
             expected
         );
+        // Bulk chunked conversion: one pass of 4-byte chunks per tensor
+        // (auto-vectorizes) instead of a per-element indexed byte loop.
         let mut off = 0usize;
         for t in &mut store.tensors {
-            for x in t.iter_mut() {
-                *x = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
-                off += 4;
+            let n_bytes = t.len() * 4;
+            let src = &bytes[off..off + n_bytes];
+            for (x, chunk) in t.iter_mut().zip(src.chunks_exact(4)) {
+                *x = f32::from_le_bytes(chunk.try_into().unwrap());
             }
+            off += n_bytes;
         }
         Ok(store)
     }
 
     /// Save the current state as the same blob format (checkpointing).
+    /// Serializes each tensor into one contiguous byte buffer and issues a
+    /// single buffered write — not one `write_all` per f32.
     pub fn save_bin(&self, path: impl AsRef<Path>) -> Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut out = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        let total_bytes: usize = self.tensors.iter().map(|t| t.len() * 4).sum();
+        let mut buf: Vec<u8> = Vec::with_capacity(total_bytes);
         for t in &self.tensors {
             for x in t {
-                out.write_all(&x.to_le_bytes())?;
+                buf.extend_from_slice(&x.to_le_bytes());
             }
         }
+        debug_assert_eq!(buf.len(), total_bytes);
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        out.write_all(&buf)?;
         out.flush()?;
         Ok(())
     }

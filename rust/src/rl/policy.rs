@@ -80,12 +80,30 @@ impl Policy {
     }
 
     /// Batched forward: `obs` is `[batch * obs_dim]`. Returns
-    /// (logits `[batch * act_dim]`, values `[batch]`).
+    /// (logits `[batch * act_dim]`, values `[batch]`). Allocating wrapper
+    /// around [`Policy::forward_into`].
     pub fn forward(&mut self, obs: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let mut outs = self.rt.call(&self.fwd_b, &mut self.store, &[DataArg::F32(obs)])?;
-        let values = outs.pop().unwrap();
-        let logits = outs.pop().unwrap();
+        let mut logits = vec![0.0; self.batch * self.act_dim];
+        let mut values = vec![0.0; self.batch];
+        self.forward_into(obs, &mut logits, &mut values)?;
         Ok((logits, values))
+    }
+
+    /// Batched forward writing into caller-provided scratch (the rollout
+    /// hot path — no allocation per step). `logits` is
+    /// `[batch * act_dim]`, `values` is `[batch]`.
+    pub fn forward_into(
+        &mut self,
+        obs: &[f32],
+        logits: &mut [f32],
+        values: &mut [f32],
+    ) -> Result<()> {
+        self.rt.call_into(
+            &self.fwd_b,
+            &mut self.store,
+            &[DataArg::F32(obs)],
+            &mut [logits, values],
+        )
     }
 
     /// Single-observation forward (GS evaluation path).

@@ -36,6 +36,9 @@ pub struct PpoTrainer {
     order: Vec<usize>,
     actions_scratch: Vec<usize>,
     obs_scratch: Vec<f32>,
+    // forward-pass scratch (sized on first collect, when act_dim is known)
+    logits_scratch: Vec<f32>,
+    values_scratch: Vec<f32>,
 }
 
 impl PpoTrainer {
@@ -54,30 +57,40 @@ impl PpoTrainer {
             order: (0..cfg.rollout_len * cfg.num_envs).collect(),
             actions_scratch: vec![0; cfg.num_envs],
             obs_scratch: vec![0.0; cfg.num_envs * obs_dim],
+            logits_scratch: Vec::new(),
+            values_scratch: vec![0.0; cfg.num_envs],
         }
     }
 
-    /// Collect one rollout (T steps of B envs) into the buffer.
+    /// Collect one rollout (T steps of B envs) into the buffer. For a
+    /// sharded env (`core::shard`), env stepping and observation fan out
+    /// over the worker pool while each policy forward stays one batched
+    /// call on this thread — the parallel-sim / serial-NN split. All
+    /// buffers (rollout storage and forward scratch) are reused across
+    /// steps and iterations: no allocation on this path.
     pub fn collect(&mut self, env: &mut dyn VecEnv, policy: &mut Policy) -> Result<()> {
         let b = self.cfg.num_envs;
         debug_assert_eq!(env.num_envs(), b);
         debug_assert_eq!(env.obs_dim(), self.buffer.obs_dim);
+        if self.logits_scratch.len() != b * policy.act_dim {
+            self.logits_scratch.resize(b * policy.act_dim, 0.0);
+        }
         for t in 0..self.cfg.rollout_len {
             env.observe_all(self.buffer.obs_at_mut(t));
             let obs_slab = {
                 let w = b * self.buffer.obs_dim;
                 &self.buffer.obs[t * w..(t + 1) * w]
             };
-            let (logits, values) = policy.forward(obs_slab)?;
+            policy.forward_into(obs_slab, &mut self.logits_scratch, &mut self.values_scratch)?;
             policy.sample_actions(
-                &logits,
+                &self.logits_scratch,
                 &mut self.rng,
                 &mut self.actions_scratch,
                 &mut self.buffer.log_probs[t * b..(t + 1) * b],
             );
             for i in 0..b {
                 self.buffer.actions[t * b + i] = self.actions_scratch[i] as i32;
-                self.buffer.values[t * b + i] = values[i];
+                self.buffer.values[t * b + i] = self.values_scratch[i];
             }
             env.step_all(
                 &self.actions_scratch,
@@ -87,8 +100,8 @@ impl PpoTrainer {
         }
         // Bootstrap values for the observation after the last step.
         env.observe_all(&mut self.obs_scratch);
-        let (_, values) = policy.forward(&self.obs_scratch)?;
-        self.buffer.bootstrap.copy_from_slice(&values);
+        policy.forward_into(&self.obs_scratch, &mut self.logits_scratch, &mut self.values_scratch)?;
+        self.buffer.bootstrap.copy_from_slice(&self.values_scratch);
         Ok(())
     }
 

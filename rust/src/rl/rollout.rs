@@ -45,9 +45,19 @@ impl RolloutBuffer {
     }
 
     /// Slice of the observation batch at step `t` (`[B * obs_dim]`).
+    ///
+    /// A sharded env (`core::shard`) writes each shard's observations
+    /// directly into its disjoint sub-slice of this slab — the rollout
+    /// buffer is the final destination, with no intermediate copies.
     pub fn obs_at_mut(&mut self, t: usize) -> &mut [f32] {
         let w = self.b * self.obs_dim;
         &mut self.obs[t * w..(t + 1) * w]
+    }
+
+    /// Immutable view of the observation slab at step `t`.
+    pub fn obs_at(&self, t: usize) -> &[f32] {
+        let w = self.b * self.obs_dim;
+        &self.obs[t * w..(t + 1) * w]
     }
 
     /// Gather a minibatch (by flat transition indices) into the provided

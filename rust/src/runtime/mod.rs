@@ -113,12 +113,39 @@ impl Runtime {
     /// Execute `name`. Parameter bindings are read from (and, for training
     /// artifacts, written back to) `store`; `data` supplies the data inputs
     /// in manifest order. Returns the data outputs in manifest order.
+    ///
+    /// Allocates one `Vec` per data output; hot paths (policy forward, AIP
+    /// predict) use [`Runtime::call_into`] with reusable scratch instead.
     pub fn call(
         &self,
         name: &str,
         store: &mut ParamStore,
         data: &[DataArg<'_>],
     ) -> Result<Vec<Vec<f32>>> {
+        let art = self.compile(name)?;
+        let mut outs: Vec<Vec<f32>> =
+            art.spec.data_outputs().map(|t| vec![0.0; t.numel()]).collect();
+        {
+            let mut refs: Vec<&mut [f32]> =
+                outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            self.call_into(name, store, data, &mut refs)?;
+        }
+        Ok(outs)
+    }
+
+    /// Execute `name`, writing each data output directly into the
+    /// caller-provided scratch: `outs[k]` receives the k-th data output (in
+    /// manifest order) and must be exactly its `numel()` long. This is the
+    /// allocation-free variant of [`Runtime::call`] used on the per-step hot
+    /// path — parameters stay device-resident, inputs are borrowed, and
+    /// outputs land in reusable buffers.
+    pub fn call_into(
+        &self,
+        name: &str,
+        store: &mut ParamStore,
+        data: &[DataArg<'_>],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
         let art = self.compile(name)?;
         anyhow::ensure!(
             store.model == art.spec.model,
@@ -223,7 +250,14 @@ impl Runtime {
             art.spec.outputs.len()
         );
 
-        let mut outs = Vec::new();
+        let n_data_outputs = art.spec.data_outputs().count();
+        anyhow::ensure!(
+            outs.len() == n_data_outputs,
+            "artifact {name}: {} output buffers given, {} expected",
+            outs.len(),
+            n_data_outputs
+        );
+        let mut out_it = outs.iter_mut();
         for (part, binding) in parts.into_iter().zip(&art.spec.outputs) {
             match binding {
                 Binding::Param(pname) => {
@@ -242,20 +276,22 @@ impl Runtime {
                     if tspec.dtype != DType::F32 {
                         bail!("artifact {name}: non-f32 data outputs unsupported");
                     }
-                    let v: Vec<f32> =
-                        part.to_vec().with_context(|| format!("{name}: output {}", tspec.name))?;
+                    let dst: &mut [f32] = out_it.next().unwrap();
                     anyhow::ensure!(
-                        v.len() == tspec.numel(),
-                        "{name}: output {} has {} elements, expected {}",
+                        part.element_count() == tspec.numel() && dst.len() == tspec.numel(),
+                        "{name}: output {} has {} elements, buffer {}, expected {}",
                         tspec.name,
-                        v.len(),
+                        part.element_count(),
+                        dst.len(),
                         tspec.numel()
                     );
-                    outs.push(v);
+                    // Single copy straight into the caller's scratch.
+                    part.copy_raw_to(dst)
+                        .with_context(|| format!("{name}: output {}", tspec.name))?;
                 }
             }
         }
-        Ok(outs)
+        Ok(())
     }
 }
 

@@ -1,0 +1,220 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build environment for this repository is fully offline (no crates.io
+//! registry), so the crate is vendored as a path dependency. Only the surface
+//! the workspace actually uses is provided:
+//!
+//! * [`Error`] — an error value carrying a context chain.
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — construction macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Formatting matches `anyhow` where tests depend on it: `{}` prints the
+//! outermost message, `{:#}` prints the whole chain joined by `": "`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaulted error parameter, so the
+/// two-parameter form `Result<T, E>` keeps working.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a chain of human-readable messages, outermost context
+/// first. Deliberately does **not** implement `std::error::Error` (exactly
+/// like the real `anyhow::Error`) so the blanket `From<E: std::error::Error>`
+/// impl below does not overlap with the reflexive `From<T> for T`.
+pub struct Error {
+    /// `chain[0]` is the outermost context, the last entry the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, outermost first, joined by ": ".
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, cause) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {cause}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Convert any standard error into an [`Error`], capturing its source chain.
+/// This is the impl that makes `?` work on `io::Error`, parse errors, etc.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i64> {
+            let v: i64 = "12x".parse()?;
+            Ok(v)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u8> = None;
+        let e = x.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(flag: bool) -> Result<u8> {
+            ensure!(flag, "flag was {flag}");
+            bail!("always fails after ensure")
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "always fails after ensure");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+    }
+}

@@ -1,0 +1,273 @@
+//! Host-side stub of the `xla` PJRT binding.
+//!
+//! The offline build environment does not ship the native XLA/PJRT runtime,
+//! so this crate provides the exact API surface `ials::runtime` consumes:
+//! literals, host buffers, HLO text loading and executable handles. Every
+//! host-side operation (literal packing/unpacking, shape checks, file IO) is
+//! fully implemented; only `execute`/`execute_b` — the calls that would hand
+//! an HLO program to a real PJRT device — return a clear error.
+//!
+//! Swapping in a real backend means replacing this path dependency in
+//! `rust/Cargo.toml` with the actual `xla` crate; no call-site changes are
+//! required, which is the point of keeping the stub API-identical.
+
+use std::fmt;
+
+/// Error type for all stub operations. Implements `std::error::Error` so the
+/// caller's `anyhow` context machinery applies unchanged.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types used by the artifacts (f32 data/params, i32 action inputs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        4
+    }
+}
+
+/// Sealed mapping from Rust scalar types to [`ElementType`].
+pub trait NativeType: Copy + 'static {
+    const ELEMENT_TYPE: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+}
+
+/// A host-resident tensor (or tuple of tensors) value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if data.len() != numel * ty.byte_width() {
+            return Err(Error::new(format!(
+                "literal of shape {dims:?} needs {} bytes, got {}",
+                numel * ty.byte_width(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec(), tuple: None })
+    }
+
+    /// Build a tuple literal (what executables return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), bytes: Vec::new(), tuple: Some(parts) }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        if self.tuple.is_some() {
+            0
+        } else {
+            self.dims.iter().product()
+        }
+    }
+
+    /// Unpack a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple.ok_or_else(|| Error::new("literal is not a tuple"))
+    }
+
+    /// Copy the raw payload into a typed slice (lengths must match).
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        if T::ELEMENT_TYPE != self.ty {
+            return Err(Error::new("copy_raw_to: element type mismatch"));
+        }
+        if dst.len() != self.element_count() {
+            return Err(Error::new(format!(
+                "copy_raw_to: literal has {} elements, destination {}",
+                self.element_count(),
+                dst.len()
+            )));
+        }
+        // SAFETY: `dst` is a plain scalar slice of exactly `bytes.len()`
+        // bytes (checked above; both supported scalars are 4 bytes wide).
+        let dst_bytes = unsafe {
+            std::slice::from_raw_parts_mut(
+                dst.as_mut_ptr() as *mut u8,
+                dst.len() * self.ty.byte_width(),
+            )
+        };
+        dst_bytes.copy_from_slice(&self.bytes);
+        Ok(())
+    }
+
+    pub fn to_vec<T: NativeType + Default>(&self) -> Result<Vec<T>> {
+        let mut out = vec![T::default(); self.element_count()];
+        self.copy_raw_to(&mut out)?;
+        Ok(out)
+    }
+}
+
+/// Parsed HLO module text (the stub keeps the raw text only).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        if text.trim().is_empty() {
+            return Err(Error::new(format!("HLO text {path} is empty")));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation handle built from an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _module_len: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _module_len: proto.text.len() }
+    }
+}
+
+/// A device-resident buffer (host memory in the stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable handle. The stub cannot run HLO — execution
+/// surfaces a descriptive error instead.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    _computation: XlaComputation,
+}
+
+const EXEC_UNAVAILABLE: &str = "the bundled `xla` stub cannot execute HLO programs; \
+     link the real xla/PJRT crate in rust/Cargo.toml to run compiled artifacts";
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(EXEC_UNAVAILABLE))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(EXEC_UNAVAILABLE))
+    }
+}
+
+/// The PJRT client handle.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { _computation: computation.clone() })
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        // SAFETY: `data` is a plain scalar slice; reinterpreting as bytes of
+        // the same length is valid for the 4-byte scalars supported here.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        let literal =
+            Literal::create_from_shape_and_untyped_data(T::ELEMENT_TYPE, dims, bytes)?;
+        Ok(PjRtBuffer { literal })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn execution_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: "HloModule x".into() });
+        let exe = client.compile(&comp).unwrap();
+        let err = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn tuple_unpack() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0u8; 4])
+            .unwrap();
+        let t = Literal::tuple(vec![a.clone(), a]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+}
