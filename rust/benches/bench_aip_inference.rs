@@ -6,11 +6,9 @@ use ials::bench_harness::{Bench, Table};
 use ials::runtime::{DataArg, Runtime};
 
 fn main() {
-    let rt = Runtime::load("artifacts").expect("make artifacts first");
-    let mut table = Table::new(
-        "artifact call latency (CPU PJRT)",
-        &["artifact", "mean µs", "p95 µs"],
-    );
+    let rt = Runtime::load_or_native("artifacts").expect("runtime");
+    let title = format!("artifact call latency ({} backend)", rt.backend_kind());
+    let mut table = Table::new(&title, &["artifact", "mean µs", "p95 µs"]);
 
     let mut add = |name: &str, data: &[DataArg<'_>]| {
         let model = rt.manifest.artifact(name).unwrap().model.clone();

@@ -9,7 +9,7 @@ use std::rc::Rc;
 
 fn main() {
     ials::util::logger::init();
-    let rt = Rc::new(Runtime::load("artifacts").expect("make artifacts first"));
+    let rt = Rc::new(Runtime::load_or_native("artifacts").expect("runtime"));
     let mut base = ExperimentConfig::default();
     base.aip.dataset_size = 30_000;
     base.aip.train_epochs = 6;

@@ -1,0 +1,116 @@
+//! NN forward throughput on the native CPU backend: policy MLP and AIP
+//! (FNN + GRU step) forwards across batch sizes — the NN half of the IALS
+//! step loop, tracked alongside the sim half (`bench_parallel_scaling`).
+//!
+//! Run: `cargo bench --bench bench_nn_forward`
+//! Emits a table to stdout and a JSON record per cell to
+//! `results/bench_nn_forward.json` for the bench trajectory.
+
+use ials::bench_harness::{Bench, Table};
+use ials::influence::{InfluencePredictor, NeuralAip};
+use ials::rl::Policy;
+use ials::runtime::{Runtime, SynthGeometry};
+use std::io::Write;
+use std::rc::Rc;
+
+const BATCH_SWEEP: [usize; 5] = [1, 16, 64, 256, 1024];
+/// Forward calls per timed rep (amortizes timer overhead at small batch).
+const CALLS_PER_REP: usize = 64;
+
+struct Cell {
+    model: &'static str,
+    batch: usize,
+    rows_per_sec: f64,
+    us_per_call: f64,
+}
+
+fn native_runtime(batch: usize) -> Rc<Runtime> {
+    Rc::new(Runtime::native(&SynthGeometry {
+        rollout_b: batch,
+        ..SynthGeometry::default()
+    }))
+}
+
+fn bench_policy(batch: usize, cells: &mut Vec<Cell>) {
+    let rt = native_runtime(batch);
+    let mut policy = Policy::new(rt, "policy_traffic", batch).expect("policy");
+    let obs = vec![0.25f32; batch * policy.obs_dim];
+    let mut logits = vec![0.0f32; batch * policy.act_dim];
+    let mut values = vec![0.0f32; batch];
+    let label = format!("policy_traffic/B{batch}");
+    let r = Bench::new(&label).warmup(3).reps(20).run((CALLS_PER_REP * batch) as f64, || {
+        for _ in 0..CALLS_PER_REP {
+            policy.forward_into(&obs, &mut logits, &mut values).unwrap();
+        }
+    });
+    cells.push(Cell {
+        model: "policy_traffic",
+        batch,
+        rows_per_sec: r.throughput(),
+        us_per_call: r.summary.mean * 1e6 / CALLS_PER_REP as f64,
+    });
+}
+
+fn bench_aip(model: &'static str, dset_dim: usize, u_dim: usize, batch: usize, cells: &mut Vec<Cell>) {
+    let rt = native_runtime(batch);
+    let mut aip = NeuralAip::new(rt, model, batch).expect("aip");
+    let dsets = vec![0.5f32; batch * dset_dim];
+    let mut probs = vec![0.0f32; batch * u_dim];
+    let label = format!("{model}/B{batch}");
+    let r = Bench::new(&label).warmup(3).reps(20).run((CALLS_PER_REP * batch) as f64, || {
+        for _ in 0..CALLS_PER_REP {
+            aip.predict(&dsets, &mut probs).unwrap();
+        }
+    });
+    cells.push(Cell {
+        model,
+        batch,
+        rows_per_sec: r.throughput(),
+        us_per_call: r.summary.mean * 1e6 / CALLS_PER_REP as f64,
+    });
+}
+
+fn main() {
+    let mut cells: Vec<Cell> = Vec::new();
+    for &b in &BATCH_SWEEP {
+        bench_policy(b, &mut cells);
+        bench_aip("aip_traffic", 40, 4, b, &mut cells);
+        bench_aip("aip_warehouse", 24, 12, b, &mut cells);
+    }
+
+    let mut table = Table::new(
+        "native NN forward throughput (rows/sec; policy MLP + AIP FNN + GRU step)",
+        &["model", "B", "rows/s", "µs/call"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.model.into(),
+            c.batch.to_string(),
+            format!("{:.0}", c.rows_per_sec),
+            format!("{:.1}", c.us_per_call),
+        ]);
+    }
+    table.print();
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"model\": \"{}\", \"batch\": {}, \"rows_per_sec\": {:.1}, \
+             \"us_per_call\": {:.2}, \"backend\": \"native\"}}{}\n",
+            c.model,
+            c.batch,
+            c.rows_per_sec,
+            c.us_per_call,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("]\n");
+    println!("{json}");
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::File::create("results/bench_nn_forward.json"))
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        eprintln!("could not write results/bench_nn_forward.json: {e}");
+    }
+}

@@ -30,7 +30,7 @@ fn steps_per_sec(env: &mut dyn ials::core::VecEnv, vec_steps: usize, label: &str
 }
 
 fn main() {
-    let rt = Rc::new(Runtime::load("artifacts").expect("make artifacts first"));
+    let rt = Rc::new(Runtime::load_or_native("artifacts").expect("runtime"));
     let mut table = Table::new(
         "simulator throughput (env-steps/sec, batch 16, random policy)",
         &["domain", "GS", "LS+AIP (IALS)", "LS+fixed", "IALS/GS speedup"],

@@ -12,7 +12,7 @@ use std::rc::Rc;
 
 fn main() -> ials::Result<()> {
     ials::util::logger::init();
-    let rt = Rc::new(Runtime::load("artifacts")?);
+    let rt = Rc::new(Runtime::load_or_native("artifacts")?);
     let mut base = ExperimentConfig::default();
     base.domain = DomainKind::Warehouse;
     base.simulator = SimulatorKind::Ials;

@@ -20,7 +20,7 @@ use ials::sim::traffic::{TrafficGlobalEnv, TrafficLocalEnv};
 use std::rc::Rc;
 
 fn main() -> ials::Result<()> {
-    let rt = Rc::new(Runtime::load("artifacts")?);
+    let rt = Rc::new(Runtime::load_or_native("artifacts")?);
     let cfg = ExperimentConfig::default();
 
     // --- Algorithm 1: dataset from the global simulator -----------------

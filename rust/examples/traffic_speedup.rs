@@ -17,7 +17,7 @@ use std::rc::Rc;
 
 fn main() -> ials::Result<()> {
     ials::util::logger::init();
-    let rt = Rc::new(Runtime::load("artifacts")?);
+    let rt = Rc::new(Runtime::load_or_native("artifacts")?);
 
     let mut base = ExperimentConfig::default();
     base.name = "speedup".into();

@@ -12,7 +12,7 @@ use std::rc::Rc;
 
 fn main() -> ials::Result<()> {
     ials::util::logger::init();
-    let rt = Rc::new(Runtime::load("artifacts")?);
+    let rt = Rc::new(Runtime::load_or_native("artifacts")?);
     let mut cfg = ExperimentConfig::default();
     cfg.name = "warehouse-demo".into();
     cfg.domain = DomainKind::Warehouse;

@@ -74,7 +74,9 @@ USAGE:
   repro list                        # list figures and artifacts
 
 Flags default from the config file; configs/ has one per figure.
-Requires artifacts/ (run `make artifacts` once).";
+Backend: [runtime] backend = auto|native|pjrt — `auto` (default) runs the
+native CPU engine when artifacts/ is absent, so no `make artifacts` step
+is needed to train end-to-end.";
 
 #[cfg(test)]
 mod tests {

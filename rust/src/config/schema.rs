@@ -76,6 +76,50 @@ pub enum AipKind {
     Fixed,
 }
 
+/// Which execution engine runs the NN artifacts (`runtime::Backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Native when no artifacts directory exists, PJRT otherwise.
+    Auto,
+    /// Hand-rolled CPU kernels against a synthesized in-memory manifest —
+    /// trains end-to-end with no `make artifacts` step.
+    Native,
+    /// AOT-compiled artifacts through the PJRT client (requires
+    /// `artifacts/` and a real `xla` binding).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend '{other}' (want auto|native|pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Runtime / execution-engine settings.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    pub backend: BackendKind,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { backend: BackendKind::Auto }
+    }
+}
+
 /// Traffic domain parameters (§5.2). The GS is a `grid x grid` network of
 /// signalized intersections; the LS is the single agent intersection.
 #[derive(Debug, Clone)]
@@ -252,6 +296,7 @@ pub struct ExperimentConfig {
     pub warehouse: WarehouseConfig,
     pub ppo: PpoConfig,
     pub aip: AipConfig,
+    pub runtime: RuntimeConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -269,6 +314,7 @@ impl Default for ExperimentConfig {
             warehouse: WarehouseConfig::default(),
             ppo: PpoConfig::default(),
             aip: AipConfig::default(),
+            runtime: RuntimeConfig::default(),
         }
     }
 }
@@ -359,6 +405,8 @@ impl ExperimentConfig {
         a.fixed_p = doc.float_or("aip", "fixed_p", a.fixed_p as f64)? as f32;
         a.use_full_alsh = doc.bool_or("aip", "use_full_alsh", a.use_full_alsh)?;
 
+        cfg.runtime.backend = BackendKind::parse(&doc.str_or("runtime", "backend", "auto")?)?;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -397,7 +445,8 @@ impl ExperimentConfig {
     }
 }
 
-const KNOWN_TABLES: &[&str] = &["", "experiment", "traffic", "warehouse", "ppo", "aip"];
+const KNOWN_TABLES: &[&str] =
+    &["", "experiment", "traffic", "warehouse", "ppo", "aip", "runtime"];
 
 const KNOWN_KEYS: &[(&str, &str)] = &[
     ("experiment", "name"),
@@ -444,6 +493,7 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("aip", "seq_len"),
     ("aip", "fixed_p"),
     ("aip", "use_full_alsh"),
+    ("runtime", "backend"),
 ];
 
 fn check_known_keys(doc: &Document) -> Result<()> {
@@ -515,6 +565,17 @@ mod tests {
         // 0 = auto (resolved to the core count at env construction).
         let auto = ExperimentConfig::from_toml("[ppo]\nnum_workers = 0").unwrap();
         assert_eq!(auto.ppo.num_workers, 0);
+    }
+
+    #[test]
+    fn backend_knob_parses_and_defaults_to_auto() {
+        assert_eq!(ExperimentConfig::default().runtime.backend, BackendKind::Auto);
+        let cfg = ExperimentConfig::from_toml("[runtime]\nbackend = \"native\"").unwrap();
+        assert_eq!(cfg.runtime.backend, BackendKind::Native);
+        let cfg = ExperimentConfig::from_toml("[runtime]\nbackend = \"pjrt\"").unwrap();
+        assert_eq!(cfg.runtime.backend, BackendKind::Pjrt);
+        assert!(ExperimentConfig::from_toml("[runtime]\nbackend = \"tpu\"").is_err());
+        assert!(ExperimentConfig::from_toml("[runtime]\nengine = \"native\"").is_err());
     }
 
     #[test]

@@ -36,8 +36,10 @@ pub fn evaluate(
     let mut steps = 0usize;
     while episode_returns.len() < episodes {
         env.observe_all(&mut obs);
+        // Batch-1 forward into the policy's reusable eval scratch — the
+        // evaluation loop allocates nothing per step, same as training.
         let (logits, _v) = policy.forward1(&obs)?;
-        let action = rng.categorical_from_logits(&logits);
+        let action = rng.categorical_from_logits(logits);
         env.step_all(&[action], &mut rewards, &mut dones);
         acc += rewards[0] as f64;
         steps += 1;

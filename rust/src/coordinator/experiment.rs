@@ -262,9 +262,10 @@ pub fn run_condition(
     seed: u64,
 ) -> Result<ConditionResult> {
     log_info!(
-        "=== condition {} / {} / seed {seed} ===",
+        "=== condition {} / {} / seed {seed} (backend: {}) ===",
         cfg.name,
-        cfg.simulator.name()
+        cfg.simulator.name(),
+        rt.backend_kind()
     );
     let prep = prepare_predictor(rt, cfg, seed, cfg.ppo.num_envs)?;
     let prep_secs = prep.prep_secs;

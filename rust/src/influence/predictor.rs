@@ -1,7 +1,8 @@
-//! Neural influence predictors backed by the AOT-compiled artifacts:
-//! an FNN (traffic / memoryless warehouse) or a GRU with recurrent state
-//! per environment (warehouse) — the Pallas fused-GRU kernel runs inside
-//! the `*_step_*` artifact.
+//! Neural influence predictors backed by the runtime's `*_fwd_*` /
+//! `*_step_*` artifacts: an FNN (traffic / memoryless warehouse) or a GRU
+//! with recurrent state per environment (warehouse). On the PJRT backend
+//! the Pallas fused-GRU kernel runs inside the compiled artifact; on the
+//! native backend `nn::kernels::gru_cell_into` plays the same role.
 
 use super::InfluencePredictor;
 use crate::nn::ParamStore;

@@ -1,8 +1,10 @@
 //! Offline AIP training (Eq. 3: expected cross-entropy on `(d_t, u_t)`
 //! pairs) and trajectory-level CE evaluation.
 //!
-//! Training drives the AOT-compiled `*_update` artifacts: the gradient /
-//! Adam math runs inside XLA; this module only assembles minibatches.
+//! Training drives the `*_update` artifacts through the runtime backend
+//! (XLA on PJRT, or the native CPU kernels): the gradient / Adam math runs
+//! inside the backend; this module only assembles minibatches, reusing one
+//! set of gather buffers and a scalar loss output across every call.
 
 use super::{InfluenceDataset, InfluencePredictor};
 use crate::nn::ParamStore;
@@ -29,6 +31,7 @@ pub fn train_fnn(
     let (dd, ud) = (data.dset_dim, data.u_dim);
     let mut d_buf = vec![0.0f32; minibatch * dd];
     let mut u_buf = vec![0.0f32; minibatch * ud];
+    let mut loss_out = [0.0f32; 1];
     let mut epoch_losses = Vec::with_capacity(epochs);
     for _ in 0..epochs {
         rng.shuffle(&mut order);
@@ -39,12 +42,13 @@ pub fn train_fnn(
                 d_buf[row * dd..(row + 1) * dd].copy_from_slice(data.d_at(step));
                 u_buf[row * ud..(row + 1) * ud].copy_from_slice(data.u_at(step));
             }
-            let outs = rt.call(
+            rt.call_into(
                 update_artifact,
                 store,
                 &[DataArg::F32(&lr_arr), DataArg::F32(&d_buf), DataArg::F32(&u_buf)],
+                &mut [loss_out.as_mut_slice()],
             )?;
-            total += outs[0][0] as f64;
+            total += loss_out[0] as f64;
             batches += 1;
         }
         epoch_losses.push((total / batches.max(1) as f64) as f32);
@@ -75,6 +79,7 @@ pub fn train_gru(
     let (dd, ud) = (data.dset_dim, data.u_dim);
     let mut seqs = vec![0.0f32; seq_b * seq_t * dd];
     let mut targets = vec![0.0f32; seq_b * seq_t * ud];
+    let mut loss_out = [0.0f32; 1];
     let iters_per_epoch = (data.total_steps() / (seq_b * seq_t)).max(1);
     let mut epoch_losses = Vec::with_capacity(epochs);
     for _ in 0..epochs {
@@ -90,12 +95,13 @@ pub fn train_gru(
                     targets[off_u..off_u + ud].copy_from_slice(ep.u_row(data, start + t));
                 }
             }
-            let outs = rt.call(
+            rt.call_into(
                 update_artifact,
                 store,
                 &[DataArg::F32(&lr_arr), DataArg::F32(&seqs), DataArg::F32(&targets)],
+                &mut [loss_out.as_mut_slice()],
             )?;
-            total += outs[0][0] as f64;
+            total += loss_out[0] as f64;
         }
         epoch_losses.push((total / iters_per_epoch as f64) as f32);
     }

@@ -38,7 +38,7 @@ fn run(argv: &[String]) -> Result<()> {
         "figure" => {
             let name = args.require("name")?.to_string();
             let cfg = load_config(&args)?;
-            let rt = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+            let rt = Rc::new(Runtime::from_config(&cfg)?);
             run_figure(&rt, &name, &cfg)?;
         }
         "train" => {
@@ -50,7 +50,7 @@ fn run(argv: &[String]) -> Result<()> {
             if let Some(steps) = args.get("steps") {
                 cfg.ppo.total_steps = steps.parse()?;
             }
-            let rt = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+            let rt = Rc::new(Runtime::from_config(&cfg)?);
             let r = run_condition(&rt, &cfg, seed)?;
             let out = format!("{}/{}_seed{}.csv", cfg.results_dir, r.condition, seed);
             write_curve(&out, &r.curve)?;
@@ -84,13 +84,19 @@ fn run(argv: &[String]) -> Result<()> {
         "list" => {
             println!("figures: {FIGURES:?}");
             let cfg = load_config(&args)?;
-            if let Ok(rt) = Runtime::load(&cfg.artifacts_dir) {
-                println!("artifacts ({}):", rt.manifest.artifacts.len());
-                for name in rt.manifest.artifacts.keys() {
-                    println!("  {name}");
+            match Runtime::from_config(&cfg) {
+                Ok(rt) => {
+                    println!(
+                        "backend: {} (config: {}) / artifacts ({}):",
+                        rt.backend_kind(),
+                        cfg.runtime.backend.name(),
+                        rt.manifest.artifacts.len()
+                    );
+                    for name in rt.manifest.artifacts.keys() {
+                        println!("  {name}");
+                    }
                 }
-            } else {
-                println!("artifacts: none (run `make artifacts`)");
+                Err(e) => println!("runtime unavailable: {e:#}"),
             }
         }
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),

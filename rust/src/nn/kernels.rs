@@ -1,0 +1,458 @@
+//! Native CPU NN kernels: the hand-rolled math the native execution
+//! backend (`runtime::native`) runs instead of compiled XLA artifacts.
+//!
+//! Everything operates on plain row-major `&[f32]` slices so the kernels
+//! bind directly to [`super::ParamStore`] tensors and caller scratch — no
+//! tensor type, no allocation. The GEMM uses the classic i-k-j loop order
+//! (row-major panels: the inner loop streams one weight row against one
+//! output row) with an 8-wide unrolled AXPY/dot so the compiler keeps the
+//! accumulators in vector registers. At the model sizes in this repo
+//! (hidden 64, batch ≤ 1024) every panel fits in L1/L2, which is exactly
+//! the regime where this beats a runtime round-trip of literal packing and
+//! buffer copies (see PERF.md §Execution backends).
+//!
+//! Correctness is pinned by scalar-reference parity tests here and in
+//! `rust/tests/native_parity.rs` (tolerance 1e-5, mirroring the Python
+//! kernel-vs-ref suite).
+
+#![allow(clippy::too_many_arguments)]
+
+/// Fused activation applied by [`linear_into`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Tanh,
+    Sigmoid,
+}
+
+/// Adam hyperparameters (must match `python/compile/model.py`).
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+#[inline(always)]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// `y += a * x` with an 8-lane unrolled body (auto-vectorizes).
+#[inline(always)]
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    let n8 = y.len() & !7;
+    for (y8, x8) in y[..n8].chunks_exact_mut(8).zip(x[..n8].chunks_exact(8)) {
+        for (yy, &xx) in y8.iter_mut().zip(x8) {
+            *yy += a * xx;
+        }
+    }
+    for (yy, &xx) in y[n8..].iter_mut().zip(&x[n8..]) {
+        *yy += a * xx;
+    }
+}
+
+/// Dot product with 8 independent accumulators (breaks the FP dependency
+/// chain so the loop vectorizes).
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() & !7;
+    let mut lanes = [0.0f32; 8];
+    for (a8, b8) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
+        for ((l, &x), &y) in lanes.iter_mut().zip(a8).zip(b8) {
+            *l += x * y;
+        }
+    }
+    let mut s: f32 = lanes.iter().sum();
+    for (&x, &y) in a[n8..].iter().zip(&b[n8..]) {
+        s += x * y;
+    }
+    s
+}
+
+/// Apply `act` elementwise in place.
+pub fn apply_act(xs: &mut [f32], act: Act) {
+    match act {
+        Act::None => {}
+        Act::Tanh => {
+            for x in xs.iter_mut() {
+                *x = x.tanh();
+            }
+        }
+        Act::Sigmoid => {
+            for x in xs.iter_mut() {
+                *x = sigmoid(*x);
+            }
+        }
+    }
+}
+
+/// `out[M,N] = act(x[M,K] @ w[K,N] + b[N])`.
+///
+/// i-k-j order: each output row is initialized from the bias, then
+/// accumulated one weight row at a time ([`axpy`], 8-wide). Zero input
+/// activations (sparse bitmap observations) skip their weight row entirely.
+pub fn linear_into(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for (xrow, row) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        match bias {
+            Some(b) => row.copy_from_slice(b),
+            None => row.fill(0.0),
+        }
+        for (&a, wrow) in xrow.iter().zip(w.chunks_exact(n)) {
+            if a != 0.0 {
+                axpy(row, wrow, a);
+            }
+        }
+        apply_act(row, act);
+    }
+}
+
+/// `c[K,N] += a[M,K]^T @ g[M,N]` — the weight-gradient GEMM.
+pub fn matmul_at_b_acc(a: &[f32], g: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for (arow, grow) in a.chunks_exact(k).zip(g.chunks_exact(n)) {
+        for (&av, crow) in arow.iter().zip(c.chunks_exact_mut(n)) {
+            if av != 0.0 {
+                axpy(crow, grow, av);
+            }
+        }
+    }
+}
+
+/// `out[M,K] = g[M,N] @ w[K,N]^T` — backprop through a linear layer
+/// (`w` stays in its row-major forward layout; each output element is a
+/// row-row dot product).
+pub fn matmul_bt_into(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for (grow, orow) in g.chunks_exact(n).zip(out.chunks_exact_mut(k)) {
+        for (o, wrow) in orow.iter_mut().zip(w.chunks_exact(n)) {
+            *o = dot(grow, wrow);
+        }
+    }
+}
+
+/// `out[M,K] += g[M,N] @ w[K,N]^T` (accumulating variant).
+pub fn matmul_bt_acc(g: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for (grow, orow) in g.chunks_exact(n).zip(out.chunks_exact_mut(k)) {
+        for (o, wrow) in orow.iter_mut().zip(w.chunks_exact(n)) {
+            *o += dot(grow, wrow);
+        }
+    }
+}
+
+/// `out[N] += column sums of g[M,N]` — bias gradients.
+pub fn colsum_acc(g: &[f32], out: &mut [f32], n: usize) {
+    debug_assert_eq!(g.len() % n, 0);
+    debug_assert_eq!(out.len(), n);
+    for grow in g.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(grow) {
+            *o += v;
+        }
+    }
+}
+
+/// Numerically-stable `out = log_softmax(logits)` for one row.
+pub fn log_softmax_row(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for &l in logits {
+        sum += (l - max).exp();
+    }
+    let lse = sum.ln() + max;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        *o = l - lse;
+    }
+}
+
+/// One element of the numerically-stable binary cross-entropy with logits:
+/// `max(l, 0) - l*y + ln(1 + e^{-|l|})` (matches `bce_with_logits` in
+/// `python/compile/model.py`). Its gradient w.r.t. `l` is `sigmoid(l) - y`.
+#[inline(always)]
+pub fn bce_with_logits_elem(l: f32, y: f32) -> f32 {
+    l.max(0.0) - l * y + (-l.abs()).exp().ln_1p()
+}
+
+/// One GRU step with fused gate weights (layout `z | r | n`, matching
+/// `gru_cell_ref` in `python/compile/kernels/ref.py`).
+///
+/// `x` is `[B,D]`, `h` is `[B,H]`, `w_x` is `[D,3H]`, `w_h` is `[H,3H]`,
+/// `b` is `[3H]`. Writes `h'` into `h_new` (must not alias `h`); `gx`/`gh`
+/// are caller scratch `[B,3H]`.
+pub fn gru_cell_into(
+    x: &[f32],
+    h: &[f32],
+    w_x: &[f32],
+    w_h: &[f32],
+    b: &[f32],
+    h_new: &mut [f32],
+    gx: &mut [f32],
+    gh: &mut [f32],
+    bsz: usize,
+    d: usize,
+    hid: usize,
+) {
+    debug_assert_eq!(h.len(), bsz * hid);
+    debug_assert_eq!(h_new.len(), bsz * hid);
+    linear_into(x, w_x, Some(b), gx, bsz, d, 3 * hid, Act::None);
+    linear_into(h, w_h, None, gh, bsz, hid, 3 * hid, Act::None);
+    for bi in 0..bsz {
+        let gxr = &gx[bi * 3 * hid..(bi + 1) * 3 * hid];
+        let ghr = &gh[bi * 3 * hid..(bi + 1) * 3 * hid];
+        let hr = &h[bi * hid..(bi + 1) * hid];
+        let hn = &mut h_new[bi * hid..(bi + 1) * hid];
+        for j in 0..hid {
+            let z = sigmoid(gxr[j] + ghr[j]);
+            let r = sigmoid(gxr[hid + j] + ghr[hid + j]);
+            let n = (gxr[2 * hid + j] + r * ghr[2 * hid + j]).tanh();
+            hn[j] = (1.0 - z) * n + z * hr[j];
+        }
+    }
+}
+
+/// Global L2 norm over a set of gradient tensors (with the same `1e-12`
+/// epsilon as `clip_global_norm` in `python/compile/model.py`).
+pub fn global_norm(grads: &[&[f32]]) -> f32 {
+    let mut acc = 0.0f64;
+    for g in grads {
+        for &x in *g {
+            acc += (x as f64) * (x as f64);
+        }
+    }
+    ((acc + 1e-12) as f32).sqrt()
+}
+
+/// One Adam step for a single tensor. `bc1`/`bc2` are the bias corrections
+/// `1 - beta^t` for the *incremented* step counter.
+pub fn adam_tensor(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, bc1: f32, bc2: f32) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(m.len(), g.len());
+    debug_assert_eq!(v.len(), g.len());
+    for (((pp, mm), vv), &gg) in p.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g) {
+        *mm = ADAM_B1 * *mm + (1.0 - ADAM_B1) * gg;
+        *vv = ADAM_B2 * *vv + (1.0 - ADAM_B2) * gg * gg;
+        let mhat = *mm / bc1;
+        let vhat = *vv / bc2;
+        *pp -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    /// Naive scalar GEMM oracle.
+    fn linear_ref(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = b[j];
+                for kk in 0..k {
+                    acc += x[i * k + kk] * w[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn linear_matches_scalar_reference() {
+        let mut rng = Pcg32::seeded(1);
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (4, 42, 64), (16, 64, 64), (3, 9, 1)] {
+            let x = randv(&mut rng, m * k);
+            let w = randv(&mut rng, k * n);
+            let b = randv(&mut rng, n);
+            let want = linear_ref(&x, &w, &b, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            linear_into(&x, &w, Some(&b), &mut got, m, k, n, Act::None);
+            for (g, w_) in got.iter().zip(&want) {
+                assert!((g - w_).abs() <= 1e-5, "{g} vs {w_}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_activations_and_sparse_rows() {
+        let mut rng = Pcg32::seeded(2);
+        let (m, k, n) = (5usize, 12usize, 9usize);
+        let mut x = randv(&mut rng, m * k);
+        // Inject zeros to exercise the sparse skip path.
+        for v in x.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let w = randv(&mut rng, k * n);
+        let b = randv(&mut rng, n);
+        let lin = linear_ref(&x, &w, &b, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        linear_into(&x, &w, Some(&b), &mut got, m, k, n, Act::Tanh);
+        for (g, l) in got.iter().zip(&lin) {
+            assert!((g - l.tanh()).abs() <= 1e-5);
+        }
+        linear_into(&x, &w, Some(&b), &mut got, m, k, n, Act::Sigmoid);
+        for (g, l) in got.iter().zip(&lin) {
+            assert!((g - 1.0 / (1.0 + (-l).exp())).abs() <= 1e-5);
+        }
+    }
+
+    #[test]
+    fn transposed_matmuls_match_reference() {
+        let mut rng = Pcg32::seeded(3);
+        let (m, k, n) = (6usize, 11usize, 13usize);
+        let a = randv(&mut rng, m * k);
+        let g = randv(&mut rng, m * n);
+        let w = randv(&mut rng, k * n);
+
+        // c[K,N] = a^T g
+        let mut c = vec![0.0f32; k * n];
+        matmul_at_b_acc(&a, &g, &mut c, m, k, n);
+        for kk in 0..k {
+            for j in 0..n {
+                let mut want = 0.0f32;
+                for i in 0..m {
+                    want += a[i * k + kk] * g[i * n + j];
+                }
+                assert!((c[kk * n + j] - want).abs() <= 1e-5);
+            }
+        }
+
+        // out[M,K] = g w^T
+        let mut out = vec![0.0f32; m * k];
+        matmul_bt_into(&g, &w, &mut out, m, n, k);
+        let mut out2 = out.clone();
+        matmul_bt_acc(&g, &w, &mut out2, m, n, k);
+        for i in 0..m {
+            for kk in 0..k {
+                let mut want = 0.0f32;
+                for j in 0..n {
+                    want += g[i * n + j] * w[kk * n + j];
+                }
+                assert!((out[i * k + kk] - want).abs() <= 1e-5);
+                assert!((out2[i * k + kk] - 2.0 * want).abs() <= 2e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn colsum_and_dot() {
+        let g = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut c = [0.0f32; 3];
+        colsum_acc(&g, &mut c, 3);
+        assert_eq!(c, [5.0, 7.0, 9.0]);
+        let a: Vec<f32> = (0..19).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..19).map(|i| 1.0 - i as f32 * 0.1).collect();
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - want).abs() <= 1e-4);
+    }
+
+    #[test]
+    fn log_softmax_is_normalized() {
+        let logits = [0.3f32, -1.2, 2.0, 0.0];
+        let mut lp = [0.0f32; 4];
+        log_softmax_row(&logits, &mut lp);
+        let sum: f32 = lp.iter().map(|l| l.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // Shift invariance.
+        let shifted: Vec<f32> = logits.iter().map(|l| l + 100.0).collect();
+        let mut lp2 = [0.0f32; 4];
+        log_softmax_row(&shifted, &mut lp2);
+        for (a, b) in lp.iter().zip(&lp2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gru_cell_matches_scalar_reference() {
+        let mut rng = Pcg32::seeded(4);
+        let (bsz, d, hid) = (3usize, 5usize, 4usize);
+        let x = randv(&mut rng, bsz * d);
+        let h = randv(&mut rng, bsz * hid);
+        let w_x = randv(&mut rng, d * 3 * hid);
+        let w_h = randv(&mut rng, hid * 3 * hid);
+        let b = randv(&mut rng, 3 * hid);
+        let mut h_new = vec![0.0f32; bsz * hid];
+        let mut gx = vec![0.0f32; bsz * 3 * hid];
+        let mut gh = vec![0.0f32; bsz * 3 * hid];
+        gru_cell_into(&x, &h, &w_x, &w_h, &b, &mut h_new, &mut gx, &mut gh, bsz, d, hid);
+        for bi in 0..bsz {
+            for j in 0..hid {
+                let gate = |col: usize| -> f32 {
+                    let mut acc = b[col];
+                    for kk in 0..d {
+                        acc += x[bi * d + kk] * w_x[kk * 3 * hid + col];
+                    }
+                    acc
+                };
+                let gate_h = |col: usize| -> f32 {
+                    let mut acc = 0.0f32;
+                    for kk in 0..hid {
+                        acc += h[bi * hid + kk] * w_h[kk * 3 * hid + col];
+                    }
+                    acc
+                };
+                let z = 1.0 / (1.0 + (-(gate(j) + gate_h(j))).exp());
+                let r = 1.0 / (1.0 + (-(gate(hid + j) + gate_h(hid + j))).exp());
+                let n = (gate(2 * hid + j) + r * gate_h(2 * hid + j)).tanh();
+                let want = (1.0 - z) * n + z * h[bi * hid + j];
+                let got = h_new[bi * hid + j];
+                assert!((got - want).abs() <= 1e-5, "({bi},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn bce_elem_matches_naive_and_is_stable() {
+        for &(l, y) in &[(0.0f32, 0.0f32), (2.5, 1.0), (-3.0, 0.0), (40.0, 0.0), (-40.0, 1.0)] {
+            let p = sigmoid(l).clamp(1e-7, 1.0 - 1e-7);
+            let naive = -(y * p.ln() + (1.0 - y) * (1.0 - p).ln());
+            let stable = bce_with_logits_elem(l, y);
+            assert!(stable.is_finite());
+            assert!((stable - naive).abs() < 1e-4, "l={l} y={y}: {stable} vs {naive}");
+        }
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_times_sign() {
+        // With zero m/v, one Adam step moves each weight by ~lr * sign(g).
+        let mut p = [1.0f32, -1.0];
+        let mut m = [0.0f32; 2];
+        let mut v = [0.0f32; 2];
+        let g = [0.5f32, -0.25];
+        let t = 1.0f32;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        adam_tensor(&mut p, &mut m, &mut v, &g, 0.01, bc1, bc2);
+        assert!((p[0] - (1.0 - 0.01)).abs() < 1e-4, "{}", p[0]);
+        assert!((p[1] - (-1.0 + 0.01)).abs() < 1e-4, "{}", p[1]);
+    }
+
+    #[test]
+    fn global_norm_matches_direct() {
+        let a = [3.0f32, 0.0];
+        let b = [4.0f32];
+        assert!((global_norm(&[&a, &b]) - 5.0).abs() < 1e-5);
+    }
+}

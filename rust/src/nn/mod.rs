@@ -1,7 +1,12 @@
 //! Neural-network parameter store: the host-side home of every model's
 //! weights and Adam state. Parameters are loaded once from the AOT
-//! emitter's `<model>.params.bin`, handed to compiled artifacts as leading
-//! arguments on every call, and written back by training artifacts.
+//! emitter's `<model>.params.bin` (PJRT backend) or synthesized in memory
+//! (native backend), handed to the execution backend as leading arguments
+//! on every call, and written back by training artifacts.
+//!
+//! [`kernels`] holds the hand-rolled CPU math the native backend executes.
+
+pub mod kernels;
 
 use crate::runtime::manifest::ModelSpec;
 use anyhow::{anyhow, Context, Result};
@@ -41,9 +46,40 @@ impl ParamStore {
         }
     }
 
+    /// Deterministic Glorot-style initialization (the native backend's
+    /// replacement for `<model>.params.bin` when no artifacts directory
+    /// exists): zero biases/Adam slots, seeded normal weights.
+    pub fn glorot(spec: &ModelSpec, seed: u64) -> ParamStore {
+        let mut st = Self::zeros(spec);
+        st.reinit(spec, seed);
+        st
+    }
+
     /// (identity, mutation counter) for device-buffer cache keys.
     pub fn cache_key(&self) -> (u64, u64) {
         (self.id, self.version)
+    }
+
+    /// Simultaneous mutable access to a base tensor and its Adam slots
+    /// `(name, m.name, v.name)` — one borrow-checked split, no copies.
+    /// Used by the native backend's in-place Adam step. Bumps the version.
+    pub fn adam_slots_mut(&mut self, name: &str) -> Result<(&mut [f32], &mut [f32], &mut [f32])> {
+        let ip = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("model {}: no tensor '{name}'", self.model))?;
+        let im = *self
+            .index
+            .get(format!("m.{name}").as_str())
+            .ok_or_else(|| anyhow!("model {}: no Adam slot 'm.{name}'", self.model))?;
+        let iv = *self
+            .index
+            .get(format!("v.{name}").as_str())
+            .ok_or_else(|| anyhow!("model {}: no Adam slot 'v.{name}'", self.model))?;
+        anyhow::ensure!(ip != im && ip != iv && im != iv, "duplicate tensor indices");
+        self.version += 1;
+        let (p, m, v) = disjoint3_mut(&mut self.tensors, ip, im, iv);
+        Ok((p.as_mut_slice(), m.as_mut_slice(), v.as_mut_slice()))
     }
 
     /// Mutable access to a tensor (bumps the version — device caches of
@@ -188,6 +224,25 @@ impl ParamStore {
     }
 }
 
+/// Split three distinct indices of a slice into simultaneous `&mut`
+/// references (sort, split twice, map back to the requested order).
+/// `<[T]>::get_disjoint_mut` would do the same but was only stabilized in
+/// Rust 1.86; this keeps the crate buildable on older toolchains.
+fn disjoint3_mut<T>(xs: &mut [T], i: usize, j: usize, k: usize) -> (&mut T, &mut T, &mut T) {
+    assert!(i != j && j != k && i != k, "indices must be distinct");
+    let mut ord = [i, j, k];
+    ord.sort_unstable();
+    let (lo, rest) = xs.split_at_mut(ord[1]);
+    let (mid, hi) = rest.split_at_mut(ord[2] - ord[1]);
+    let mut refs = [Some(&mut lo[ord[0]]), Some(&mut mid[0]), Some(&mut hi[0])];
+    let pos = |want: usize| ord.iter().position(|&o| o == want).unwrap();
+    let (pi, pj, pk) = (pos(i), pos(j), pos(k));
+    let a = refs[pi].take().unwrap();
+    let b = refs[pj].take().unwrap();
+    let c = refs[pk].take().unwrap();
+    (a, b, c)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +305,41 @@ mod tests {
         assert_eq!(st.get("w").unwrap(), &[1.0; 6]);
         assert_eq!(st.get("m.w").unwrap(), &[0.0; 6]);
         assert_eq!(st.get("adam_t").unwrap(), &[0.0]);
+    }
+
+    #[test]
+    fn adam_slots_mut_yields_disjoint_triple() {
+        let spec = ModelSpec {
+            name: "t".into(),
+            params: vec![
+                TensorSpec { name: "w".into(), dtype: DType::F32, shape: vec![2] },
+                TensorSpec { name: "m.w".into(), dtype: DType::F32, shape: vec![2] },
+                TensorSpec { name: "v.w".into(), dtype: DType::F32, shape: vec![2] },
+                TensorSpec { name: "adam_t".into(), dtype: DType::F32, shape: vec![1] },
+            ],
+        };
+        let mut st = ParamStore::zeros(&spec);
+        {
+            let (p, m, v) = st.adam_slots_mut("w").unwrap();
+            p[0] = 1.0;
+            m[1] = 2.0;
+            v[0] = 3.0;
+        }
+        assert_eq!(st.get("w").unwrap(), &[1.0, 0.0]);
+        assert_eq!(st.get("m.w").unwrap(), &[0.0, 2.0]);
+        assert_eq!(st.get("v.w").unwrap(), &[3.0, 0.0]);
+        assert!(st.adam_slots_mut("adam_t").is_err(), "no m./v. slots for adam_t");
+    }
+
+    #[test]
+    fn glorot_is_seeded_and_nonzero() {
+        let a = ParamStore::glorot(&spec(), 9);
+        let b = ParamStore::glorot(&spec(), 9);
+        let c = ParamStore::glorot(&spec(), 10);
+        assert_eq!(a.get("w").unwrap(), b.get("w").unwrap());
+        assert_ne!(a.get("w").unwrap(), c.get("w").unwrap());
+        assert!(a.get("w").unwrap().iter().any(|&x| x != 0.0));
+        assert_eq!(a.get("m.w").unwrap(), &[0.0; 6]);
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub struct Policy {
     pub minibatch: usize,
     /// (epochs, N) geometry of the fused update artifact, if present.
     pub fused_geom: Option<(usize, usize)>,
+    /// Reusable batch-1 scratch for the GS evaluation path
+    /// ([`Policy::forward1`] — no allocation per evaluation step).
+    eval_logits: Vec<f32>,
+    eval_value: [f32; 1],
 }
 
 impl Policy {
@@ -69,6 +73,8 @@ impl Policy {
             act_dim,
             minibatch,
             fused_geom,
+            eval_logits: vec![0.0; act_dim],
+            eval_value: [0.0],
         })
     }
 
@@ -106,12 +112,18 @@ impl Policy {
         )
     }
 
-    /// Single-observation forward (GS evaluation path).
-    pub fn forward1(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
-        let mut outs = self.rt.call(&self.fwd_1, &mut self.store, &[DataArg::F32(obs)])?;
-        let values = outs.pop().unwrap();
-        let logits = outs.pop().unwrap();
-        Ok((logits, values[0]))
+    /// Single-observation forward (GS evaluation path). Returns the logits
+    /// as a borrow of the reusable eval scratch plus the value estimate —
+    /// like the batched path, no allocation per call.
+    pub fn forward1(&mut self, obs: &[f32]) -> Result<(&[f32], f32)> {
+        let Policy { rt, store, fwd_1, eval_logits, eval_value, .. } = self;
+        rt.call_into(
+            fwd_1,
+            store,
+            &[DataArg::F32(obs)],
+            &mut [eval_logits.as_mut_slice(), eval_value.as_mut_slice()],
+        )?;
+        Ok((self.eval_logits.as_slice(), self.eval_value[0]))
     }
 
     /// Sample actions (and log-probs) from batched logits.
@@ -148,7 +160,8 @@ impl Policy {
         let vf = [cfg.vf_coef];
         let ent = [cfg.ent_coef];
         let mgn = [cfg.max_grad_norm];
-        let outs = self.rt.call(
+        let mut stats = [0.0f32; 5];
+        self.rt.call_into(
             &self.update,
             &mut self.store,
             &[
@@ -163,9 +176,9 @@ impl Policy {
                 DataArg::F32(returns_),
                 DataArg::F32(old_logp),
             ],
+            &mut [stats.as_mut_slice()],
         )?;
-        let s = &outs[0];
-        Ok([s[0], s[1], s[2], s[3], s[4]])
+        Ok(stats)
     }
 
     /// The fused whole-phase PPO update: all epochs and minibatches in one
@@ -191,7 +204,8 @@ impl Policy {
         let vf = [cfg.vf_coef];
         let ent = [cfg.ent_coef];
         let mgn = [cfg.max_grad_norm];
-        let outs = self.rt.call(
+        let mut stats = [0.0f32; 5];
+        self.rt.call_into(
             &name,
             &mut self.store,
             &[
@@ -207,8 +221,8 @@ impl Policy {
                 DataArg::F32(returns_),
                 DataArg::F32(old_logp),
             ],
+            &mut [stats.as_mut_slice()],
         )?;
-        let s = &outs[0];
-        Ok([s[0], s[1], s[2], s[3], s[4]])
+        Ok(stats)
     }
 }

@@ -251,6 +251,303 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Synthesized manifest (native backend)
+// ---------------------------------------------------------------------------
+
+// Domain geometry shared with the Rust simulators and the Python emitter
+// (`python/compile/model.py`). The synthesized manifest carries the same
+// keys as the emitted one, so `Runtime::geom` works identically.
+pub const TRAFFIC_OBS: usize = 42;
+pub const TRAFFIC_ACT: usize = 2;
+pub const TRAFFIC_DSET: usize = 40;
+pub const TRAFFIC_ALSH: usize = 43;
+pub const TRAFFIC_U: usize = 4;
+pub const WH_OBS: usize = 37;
+pub const WH_ACT: usize = 5;
+pub const WH_DSET: usize = 24;
+pub const WH_ALSH: usize = 49;
+pub const WH_U: usize = 12;
+pub const WH_STACK: usize = 8;
+pub const NN_HID: usize = 64;
+
+/// Batch geometry of a synthesized manifest — the knobs that vary per
+/// experiment config (the domain dims above are fixed by the simulators).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SynthGeometry {
+    /// Vectorized envs per training simulator (batched forward width).
+    pub rollout_b: usize,
+    /// Steps per PPO rollout.
+    pub rollout_t: usize,
+    pub ppo_epochs: usize,
+    pub ppo_minibatch: usize,
+    /// FNN AIP training minibatch.
+    pub aip_batch: usize,
+    /// GRU AIP BPTT batch / window length.
+    pub gru_seq_b: usize,
+    pub gru_seq_t: usize,
+}
+
+impl Default for SynthGeometry {
+    /// Matches the AOT emitter's constants (`python/compile/model.py`), so
+    /// a default-geometry native runtime exposes exactly the artifact set
+    /// `make artifacts` would have produced.
+    fn default() -> Self {
+        SynthGeometry {
+            rollout_b: 16,
+            rollout_t: 128,
+            ppo_epochs: 4,
+            ppo_minibatch: 256,
+            aip_batch: 256,
+            gru_seq_b: 16,
+            gru_seq_t: 32,
+        }
+    }
+}
+
+fn ts(name: &str, dtype: DType, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), dtype, shape: shape.to_vec() }
+}
+
+fn f32t(name: &str, shape: &[usize]) -> TensorSpec {
+    ts(name, DType::F32, shape)
+}
+
+/// Base params + Adam slots (`m.*`, `v.*`, `adam_t`), mirroring
+/// `_with_adam` in `python/compile/aot.py`.
+fn model_with_adam(name: &str, base: Vec<TensorSpec>) -> ModelSpec {
+    let mut params = base.clone();
+    for prefix in ["m", "v"] {
+        params.extend(base.iter().map(|t| TensorSpec {
+            name: format!("{prefix}.{}", t.name),
+            dtype: t.dtype,
+            shape: t.shape.clone(),
+        }));
+    }
+    params.push(f32t("adam_t", &[1]));
+    ModelSpec { name: name.to_string(), params }
+}
+
+fn policy_base(obs: usize, act: usize) -> Vec<TensorSpec> {
+    vec![
+        f32t("w1", &[obs, NN_HID]),
+        f32t("b1", &[NN_HID]),
+        f32t("w2", &[NN_HID, NN_HID]),
+        f32t("b2", &[NN_HID]),
+        f32t("w_pi", &[NN_HID, act]),
+        f32t("b_pi", &[act]),
+        f32t("w_v", &[NN_HID, 1]),
+        f32t("b_v", &[1]),
+    ]
+}
+
+fn fnn_base(d: usize, u: usize) -> Vec<TensorSpec> {
+    vec![
+        f32t("w1", &[d, NN_HID]),
+        f32t("b1", &[NN_HID]),
+        f32t("w2", &[NN_HID, u]),
+        f32t("b2", &[u]),
+    ]
+}
+
+fn gru_base(d: usize, u: usize) -> Vec<TensorSpec> {
+    vec![
+        f32t("w_x", &[d, 3 * NN_HID]),
+        f32t("w_h", &[NN_HID, 3 * NN_HID]),
+        f32t("b_g", &[3 * NN_HID]),
+        f32t("w_o", &[NN_HID, u]),
+        f32t("b_o", &[u]),
+    ]
+}
+
+/// Build an artifact spec against `model`. Forward artifacts bind the base
+/// parameters as inputs; training artifacts bind (and write back) the full
+/// parameter list including Adam state — the same ABI `aot.py` emits.
+fn synth_artifact(
+    name: &str,
+    model: &ModelSpec,
+    train: bool,
+    data_in: Vec<TensorSpec>,
+    data_out: Vec<TensorSpec>,
+) -> ArtifactSpec {
+    let base_n = (model.params.len() - 1) / 3;
+    let bound: &[TensorSpec] = if train { &model.params } else { &model.params[..base_n] };
+    let mut inputs: Vec<Binding> =
+        bound.iter().map(|p| Binding::Param(p.name.clone())).collect();
+    inputs.extend(data_in.into_iter().map(Binding::Data));
+    let mut outputs: Vec<Binding> = if train {
+        model.params.iter().map(|p| Binding::Param(p.name.clone())).collect()
+    } else {
+        Vec::new()
+    };
+    outputs.extend(data_out.into_iter().map(Binding::Data));
+    ArtifactSpec {
+        name: name.to_string(),
+        model: model.name.clone(),
+        hlo_file: format!("{name}.hlo.txt"),
+        inputs,
+        outputs,
+    }
+}
+
+impl Manifest {
+    /// Synthesize the full artifact registry in memory from config-derived
+    /// geometry — no `manifest.txt`, no `make artifacts`. The native
+    /// backend executes these artifacts directly on `ParamStore` slices;
+    /// names, bindings and shapes match the AOT emitter so every caller
+    /// (policy, AIP, trainers) is backend-agnostic.
+    pub fn synthesize(g: &SynthGeometry) -> Manifest {
+        let mut m = Manifest::default();
+        let ppo_n = g.rollout_b * g.rollout_t;
+
+        for (k, v) in [
+            ("traffic_obs", TRAFFIC_OBS),
+            ("traffic_act", TRAFFIC_ACT),
+            ("traffic_dset", TRAFFIC_DSET),
+            ("traffic_alsh", TRAFFIC_ALSH),
+            ("traffic_u", TRAFFIC_U),
+            ("wh_obs", WH_OBS),
+            ("wh_act", WH_ACT),
+            ("wh_dset", WH_DSET),
+            ("wh_alsh", WH_ALSH),
+            ("wh_u", WH_U),
+            ("wh_stack", WH_STACK),
+            ("rollout_b", g.rollout_b),
+            ("rollout_t", g.rollout_t),
+            ("ppo_rollout_n", ppo_n),
+            ("ppo_epochs", g.ppo_epochs),
+            ("ppo_minibatch", g.ppo_minibatch),
+            ("aip_batch", g.aip_batch),
+            ("gru_seq_b", g.gru_seq_b),
+            ("gru_seq_t", g.gru_seq_t),
+            ("gru_hid", NN_HID),
+        ] {
+            m.geometry.insert(k.to_string(), v as i64);
+        }
+
+        let policies = [
+            ("policy_traffic", TRAFFIC_OBS, TRAFFIC_ACT),
+            ("policy_warehouse", WH_OBS * WH_STACK, WH_ACT),
+            ("policy_warehouse_nm", WH_OBS, WH_ACT),
+        ];
+        for (name, obs, act) in policies {
+            let spec = model_with_adam(name, policy_base(obs, act));
+            for b in [g.rollout_b, 1] {
+                let art = synth_artifact(
+                    &format!("{name}_fwd_b{b}"),
+                    &spec,
+                    false,
+                    vec![f32t("obs", &[b, obs])],
+                    vec![f32t("logits", &[b, act]), f32t("value", &[b])],
+                );
+                m.artifacts.insert(art.name.clone(), art);
+            }
+            let scalars = || {
+                vec![
+                    f32t("lr", &[1]),
+                    f32t("clip", &[1]),
+                    f32t("vf_coef", &[1]),
+                    f32t("ent_coef", &[1]),
+                    f32t("max_grad_norm", &[1]),
+                ]
+            };
+            let mb = g.ppo_minibatch;
+            let mut data_in = scalars();
+            data_in.extend([
+                f32t("obs", &[mb, obs]),
+                ts("actions", DType::I32, &[mb]),
+                f32t("advantages", &[mb]),
+                f32t("returns", &[mb]),
+                f32t("old_logp", &[mb]),
+            ]);
+            let art = synth_artifact(
+                &format!("{name}_update"),
+                &spec,
+                true,
+                data_in,
+                vec![f32t("stats", &[5])],
+            );
+            m.artifacts.insert(art.name.clone(), art);
+            let mut data_in = scalars();
+            data_in.extend([
+                ts("perm", DType::I32, &[g.ppo_epochs, ppo_n]),
+                f32t("obs", &[ppo_n, obs]),
+                ts("actions", DType::I32, &[ppo_n]),
+                f32t("advantages", &[ppo_n]),
+                f32t("returns", &[ppo_n]),
+                f32t("old_logp", &[ppo_n]),
+            ]);
+            let art = synth_artifact(
+                &format!("{name}_update_fused"),
+                &spec,
+                true,
+                data_in,
+                vec![f32t("stats", &[5])],
+            );
+            m.artifacts.insert(art.name.clone(), art);
+            m.models.insert(name.to_string(), spec);
+        }
+
+        let fnns = [
+            ("aip_traffic", TRAFFIC_DSET, TRAFFIC_U),
+            ("aip_traffic_full", TRAFFIC_ALSH, TRAFFIC_U),
+            ("aip_warehouse_nm", WH_DSET, WH_U),
+        ];
+        for (name, d, u) in fnns {
+            let spec = model_with_adam(name, fnn_base(d, u));
+            for b in [g.rollout_b, 1] {
+                let art = synth_artifact(
+                    &format!("{name}_fwd_b{b}"),
+                    &spec,
+                    false,
+                    vec![f32t("d", &[b, d])],
+                    vec![f32t("probs", &[b, u])],
+                );
+                m.artifacts.insert(art.name.clone(), art);
+            }
+            let mb = g.aip_batch;
+            let art = synth_artifact(
+                &format!("{name}_update"),
+                &spec,
+                true,
+                vec![f32t("lr", &[1]), f32t("d", &[mb, d]), f32t("targets", &[mb, u])],
+                vec![f32t("loss", &[1])],
+            );
+            m.artifacts.insert(art.name.clone(), art);
+            m.models.insert(name.to_string(), spec);
+        }
+
+        let (name, d, u) = ("aip_warehouse", WH_DSET, WH_U);
+        let spec = model_with_adam(name, gru_base(d, u));
+        for b in [g.rollout_b, 1] {
+            let art = synth_artifact(
+                &format!("{name}_step_b{b}"),
+                &spec,
+                false,
+                vec![f32t("h", &[b, NN_HID]), f32t("d", &[b, d])],
+                vec![f32t("probs", &[b, u]), f32t("h_new", &[b, NN_HID])],
+            );
+            m.artifacts.insert(art.name.clone(), art);
+        }
+        let (sb, st) = (g.gru_seq_b, g.gru_seq_t);
+        let art = synth_artifact(
+            &format!("{name}_update"),
+            &spec,
+            true,
+            vec![
+                f32t("lr", &[1]),
+                f32t("seqs", &[sb, st, d]),
+                f32t("targets", &[sb, st, u]),
+            ],
+            vec![f32t("loss", &[1])],
+        );
+        m.artifacts.insert(art.name.clone(), art);
+        m.models.insert(name.to_string(), spec);
+
+        m
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,6 +606,40 @@ endartifact
         assert!(m.geom("nope").is_err());
         assert!(m.model("nope").is_err());
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn synthesized_manifest_mirrors_the_emitter() {
+        let m = Manifest::synthesize(&SynthGeometry::default());
+        assert_eq!(m.geom("traffic_obs").unwrap(), 42);
+        assert_eq!(m.geom("aip_batch").unwrap(), 256);
+        assert_eq!(m.geom("ppo_rollout_n").unwrap(), 16 * 128);
+        // Same per-model shape as the emitted manifest: 8 base tensors,
+        // Adam-doubled, plus the step counter.
+        let pol = m.model("policy_traffic").unwrap();
+        assert_eq!(pol.params.len(), 8 * 3 + 1);
+        assert_eq!(pol.param("w1").unwrap().shape, vec![42, 64]);
+        assert_eq!(m.model("aip_warehouse").unwrap().param("w_x").unwrap().shape, vec![24, 192]);
+        // The full artifact registry: 4 per policy, 3 per FNN AIP, 3 GRU.
+        assert_eq!(m.artifacts.len(), 3 * 4 + 3 * 3 + 3);
+        let fwd = m.artifact("policy_traffic_fwd_b16").unwrap();
+        assert_eq!(fwd.data_inputs().count(), 1);
+        assert_eq!(fwd.data_outputs().count(), 2);
+        assert_eq!(fwd.inputs.len(), 8 + 1, "forward binds base params only");
+        let upd = m.artifact("policy_traffic_update").unwrap();
+        assert_eq!(upd.inputs.len(), 25 + 10, "update binds full Adam state");
+        assert!(upd.outputs.iter().any(|b| matches!(b, Binding::Param(_))));
+    }
+
+    #[test]
+    fn synthesized_geometry_follows_config_knobs() {
+        let g = SynthGeometry { rollout_b: 8, rollout_t: 32, ..SynthGeometry::default() };
+        let m = Manifest::synthesize(&g);
+        assert!(m.artifact("policy_traffic_fwd_b8").is_ok());
+        assert!(m.artifact("aip_warehouse_step_b8").is_ok());
+        let fused = m.artifact("policy_traffic_update_fused").unwrap();
+        let perm = fused.data_inputs().find(|t| t.name == "perm").unwrap();
+        assert_eq!(perm.shape, vec![4, 8 * 32]);
     }
 
     #[test]

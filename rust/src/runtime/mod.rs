@@ -1,21 +1,36 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`), compiles
-//! them once on the CPU PJRT client, and executes them with model
-//! parameters + caller data as positional literals.
+//! The execution runtime: a manifest (artifact call ABI) plus a pluggable
+//! [`Backend`] that actually runs artifacts.
 //!
-//! This module is the **only** place the `xla` crate is touched; everything
-//! above it works with plain `&[f32]` slices. Python never runs here —
-//! artifacts were lowered once at build time (`make artifacts`).
+//! Two backends exist:
+//!
+//! * [`pjrt`] — loads AOT artifacts (`artifacts/*.hlo.txt`), compiles them
+//!   once on the PJRT CPU client, and executes them with model parameters +
+//!   caller data as positional literals. Requires `make artifacts` and a
+//!   real `xla` binding (the vendored crate is a host-side stub).
+//! * [`native`] — a hand-rolled CPU engine that executes the same artifact
+//!   set directly on [`ParamStore`] slices (`nn/kernels.rs`), against a
+//!   [`Manifest`] synthesized in memory from config geometry. No artifacts
+//!   directory, no Python, no copies: the whole training loop runs on any
+//!   CPU.
+//!
+//! Selection is per config: `[runtime] backend = "auto" | "native" |
+//! "pjrt"`, where `auto` (the default) uses PJRT when the artifacts
+//! directory exists and the native engine otherwise. Everything above this
+//! module works with plain `&[f32]` slices and is backend-agnostic.
 
 pub mod manifest;
+pub mod native;
+mod pjrt;
 
-pub use manifest::{ArtifactSpec, Binding, DType, Manifest, ModelSpec, TensorSpec};
+pub use manifest::{
+    ArtifactSpec, Binding, DType, Manifest, ModelSpec, SynthGeometry, TensorSpec,
+};
 
+use crate::config::{BackendKind, ExperimentConfig};
 use crate::nn::ParamStore;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 /// A caller-supplied data argument.
 #[derive(Debug, Clone, Copy)]
@@ -24,24 +39,54 @@ pub enum DataArg<'a> {
     I32(&'a [i32]),
 }
 
-struct CompiledArtifact {
-    spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// Does the artifact write any parameters back (training artifact)?
-    mutates_params: bool,
-    /// Device-resident parameter buffers for forward-only artifacts,
-    /// keyed by the owning store's (id, version). Uploading the weights
-    /// once per version (instead of per call) is the main L3 perf lever —
-    /// see EXPERIMENTS.md §Perf.
-    param_cache: RefCell<Option<((u64, u64), Vec<xla::PjRtBuffer>)>>,
+/// An execution engine for manifest artifacts. Inputs/outputs are already
+/// shape- and dtype-validated by [`Runtime::call_into`]; implementations
+/// read parameters from (and, for training artifacts, write them back to)
+/// the store and fill `outs` with the data outputs in manifest order.
+pub trait Backend {
+    /// Short name for logs/diagnostics ("pjrt" / "native").
+    fn kind(&self) -> &'static str;
+
+    /// Run one artifact.
+    fn execute(
+        &self,
+        art: &ArtifactSpec,
+        manifest: &Manifest,
+        store: &mut ParamStore,
+        data: &[DataArg<'_>],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()>;
+
+    /// Prepare an artifact ahead of the hot path (compile / allocate
+    /// scratch) so first-call latency is paid at startup.
+    fn prepare(&self, art: &ArtifactSpec, manifest: &Manifest) -> Result<()> {
+        let _ = (art, manifest);
+        Ok(())
+    }
 }
 
-/// The runtime: one PJRT CPU client + a lazily-compiled artifact cache.
+impl SynthGeometry {
+    /// Derive the synthesized-manifest geometry from an experiment config
+    /// (native mode compiles nothing, so batch shapes can follow the
+    /// config instead of the config having to match `make artifacts`).
+    pub fn from_config(cfg: &ExperimentConfig) -> SynthGeometry {
+        SynthGeometry {
+            rollout_b: cfg.ppo.num_envs,
+            rollout_t: cfg.ppo.rollout_len,
+            ppo_epochs: cfg.ppo.epochs,
+            ppo_minibatch: cfg.ppo.minibatch,
+            aip_batch: cfg.aip.batch,
+            ..SynthGeometry::default()
+        }
+    }
+}
+
+/// The runtime: one manifest + one execution backend.
 pub struct Runtime {
     pub manifest: Manifest,
-    dir: PathBuf,
-    client: xla::PjRtClient,
-    compiled: RefCell<HashMap<String, Rc<CompiledArtifact>>>,
+    /// Artifact directory (PJRT mode); `None` for the in-memory native mode.
+    dir: Option<PathBuf>,
+    backend: Box<dyn Backend>,
     /// Executions performed (diagnostics / perf accounting).
     calls: RefCell<u64>,
 }
@@ -50,14 +95,62 @@ impl Runtime {
     /// Load the manifest from `dir` and connect the PJRT CPU client.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let manifest = Manifest::load(dir.as_ref())?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let backend = pjrt::PjrtBackend::new(dir.as_ref())?;
         Ok(Runtime {
             manifest,
-            dir: dir.as_ref().to_path_buf(),
-            client,
-            compiled: RefCell::new(HashMap::new()),
+            dir: Some(dir.as_ref().to_path_buf()),
+            backend: Box::new(backend),
             calls: RefCell::new(0),
         })
+    }
+
+    /// Build a native-CPU runtime with a manifest synthesized from `geom`
+    /// — no artifacts directory required.
+    pub fn native(geom: &SynthGeometry) -> Runtime {
+        Runtime {
+            manifest: Manifest::synthesize(geom),
+            dir: None,
+            backend: Box::new(native::NativeBackend::new()),
+            calls: RefCell::new(0),
+        }
+    }
+
+    /// Native runtime at the emitter's default geometry (exactly the
+    /// artifact set `make artifacts` would produce).
+    pub fn native_default() -> Runtime {
+        Self::native(&SynthGeometry::default())
+    }
+
+    /// PJRT when `dir` holds a manifest, native otherwise — the `auto`
+    /// backend policy (also used by tests, benches and examples so they
+    /// run with or without compiled artifacts).
+    pub fn load_or_native(dir: impl AsRef<Path>) -> Result<Runtime> {
+        if dir.as_ref().join("manifest.txt").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::native_default())
+        }
+    }
+
+    /// Select a backend per `[runtime] backend` and build the runtime with
+    /// config-derived geometry.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Runtime> {
+        match cfg.runtime.backend {
+            BackendKind::Pjrt => Self::load(&cfg.artifacts_dir),
+            BackendKind::Native => Ok(Self::native(&SynthGeometry::from_config(cfg))),
+            BackendKind::Auto => {
+                if Path::new(&cfg.artifacts_dir).join("manifest.txt").exists() {
+                    Self::load(&cfg.artifacts_dir)
+                } else {
+                    Ok(Self::native(&SynthGeometry::from_config(cfg)))
+                }
+            }
+        }
+    }
+
+    /// Which engine is executing ("pjrt" / "native").
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend.kind()
     }
 
     pub fn geom(&self, key: &str) -> Result<usize> {
@@ -68,44 +161,22 @@ impl Runtime {
         *self.calls.borrow()
     }
 
-    /// Load a model's initial parameters (`<model>.params.bin`).
+    /// Load a model's initial parameters: `<model>.params.bin` in PJRT
+    /// mode, a deterministic in-memory Glorot init in native mode.
     pub fn load_store(&self, model: &str) -> Result<ParamStore> {
         let spec = self.manifest.model(model)?;
-        ParamStore::load_bin(spec, self.dir.join(format!("{model}.params.bin")))
-    }
-
-    fn compile(&self, name: &str) -> Result<Rc<CompiledArtifact>> {
-        if let Some(c) = self.compiled.borrow().get(name) {
-            return Ok(c.clone());
+        match &self.dir {
+            Some(dir) => ParamStore::load_bin(spec, dir.join(format!("{model}.params.bin"))),
+            None => Ok(ParamStore::glorot(spec, native::init_seed(model))),
         }
-        let spec = self.manifest.artifact(name)?.clone();
-        let path = self.dir.join(&spec.hlo_file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        let mutates_params =
-            spec.outputs.iter().any(|b| matches!(b, Binding::Param(_)));
-        let c = Rc::new(CompiledArtifact {
-            spec,
-            exe,
-            mutates_params,
-            param_cache: RefCell::new(None),
-        });
-        self.compiled.borrow_mut().insert(name.to_string(), c.clone());
-        Ok(c)
     }
 
-    /// Pre-compile a set of artifacts (so first-step latency is paid at
-    /// startup, not on the training hot path).
+    /// Pre-compile / pre-allocate a set of artifacts (so first-step latency
+    /// is paid at startup, not on the training hot path).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.compile(n)?;
+            let art = self.manifest.artifact(n)?;
+            self.backend.prepare(art, &self.manifest)?;
         }
         Ok(())
     }
@@ -122,9 +193,9 @@ impl Runtime {
         store: &mut ParamStore,
         data: &[DataArg<'_>],
     ) -> Result<Vec<Vec<f32>>> {
-        let art = self.compile(name)?;
+        let art = self.manifest.artifact(name)?;
         let mut outs: Vec<Vec<f32>> =
-            art.spec.data_outputs().map(|t| vec![0.0; t.numel()]).collect();
+            art.data_outputs().map(|t| vec![0.0; t.numel()]).collect();
         {
             let mut refs: Vec<&mut [f32]> =
                 outs.iter_mut().map(|v| v.as_mut_slice()).collect();
@@ -136,9 +207,10 @@ impl Runtime {
     /// Execute `name`, writing each data output directly into the
     /// caller-provided scratch: `outs[k]` receives the k-th data output (in
     /// manifest order) and must be exactly its `numel()` long. This is the
-    /// allocation-free variant of [`Runtime::call`] used on the per-step hot
-    /// path — parameters stay device-resident, inputs are borrowed, and
-    /// outputs land in reusable buffers.
+    /// allocation-free variant of [`Runtime::call`] used on the per-step
+    /// hot path — inputs are borrowed, outputs land in reusable buffers,
+    /// and every shape/dtype is validated against the manifest before the
+    /// backend runs.
     pub fn call_into(
         &self,
         name: &str,
@@ -146,214 +218,59 @@ impl Runtime {
         data: &[DataArg<'_>],
         outs: &mut [&mut [f32]],
     ) -> Result<()> {
-        let art = self.compile(name)?;
+        let art = self.manifest.artifact(name)?;
         anyhow::ensure!(
-            store.model == art.spec.model,
+            store.model == art.model,
             "artifact {name} expects model {}, got store for {}",
-            art.spec.model,
+            art.model,
             store.model
         );
-        let model = self.manifest.model(&art.spec.model)?;
 
-        let n_data_inputs = art.spec.data_inputs().count();
+        let n_data_inputs = art.data_inputs().count();
         anyhow::ensure!(
             data.len() == n_data_inputs,
             "artifact {name}: {} data args given, {} expected",
             data.len(),
             n_data_inputs
         );
+        for (arg, spec) in data.iter().zip(art.data_inputs()) {
+            let given = match (arg, spec.dtype) {
+                (DataArg::F32(v), DType::F32) => v.len(),
+                (DataArg::I32(v), DType::I32) => v.len(),
+                _ => bail!("artifact {name}: dtype mismatch for data input {}", spec.name),
+            };
+            anyhow::ensure!(
+                given == spec.numel(),
+                "artifact {name}: input {} has {} values, expected {} {:?}",
+                spec.name,
+                given,
+                spec.numel(),
+                spec.shape
+            );
+        }
 
-        // Forward-only artifacts run on the buffer path: parameters stay
-        // resident on the device and are re-uploaded only when the store
-        // mutates. Training artifacts (param write-back) use the literal
-        // path (the output tuple must come back to the host anyway).
-        let result = if !art.mutates_params {
-            // Refresh the resident parameter buffers if stale.
-            {
-                let mut cache = art.param_cache.borrow_mut();
-                let key = store.cache_key();
-                let stale = !matches!(&*cache, Some((k, _)) if *k == key);
-                if stale {
-                    let mut bufs = Vec::new();
-                    for binding in &art.spec.inputs {
-                        if let Binding::Param(pname) = binding {
-                            let tspec = model.param(pname)?;
-                            let values = store.get(pname)?;
-                            bufs.push(self.client.buffer_from_host_buffer(
-                                values,
-                                &tspec.shape,
-                                None,
-                            )?);
-                        }
-                    }
-                    *cache = Some((key, bufs));
-                }
-            }
-            let cache = art.param_cache.borrow();
-            let (_, param_bufs) = cache.as_ref().unwrap();
-            // Upload data inputs and assemble positional args.
-            let mut data_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(data.len());
-            let mut data_it = data.iter();
-            for binding in &art.spec.inputs {
-                if let Binding::Data(tspec) = binding {
-                    let arg = data_it.next().unwrap();
-                    data_bufs.push(buf_from_arg(&self.client, arg, tspec, name)?);
-                }
-            }
-            let mut args: Vec<&xla::PjRtBuffer> =
-                Vec::with_capacity(art.spec.inputs.len());
-            let (mut pi, mut di) = (0usize, 0usize);
-            for binding in &art.spec.inputs {
-                match binding {
-                    Binding::Param(_) => {
-                        args.push(&param_bufs[pi]);
-                        pi += 1;
-                    }
-                    Binding::Data(_) => {
-                        args.push(&data_bufs[di]);
-                        di += 1;
-                    }
-                }
-            }
-            art.exe.execute_b(&args).with_context(|| format!("executing {name}"))?
-        } else {
-            let mut literals: Vec<xla::Literal> = Vec::with_capacity(art.spec.inputs.len());
-            let mut data_it = data.iter();
-            for binding in &art.spec.inputs {
-                match binding {
-                    Binding::Param(pname) => {
-                        let tspec = model.param(pname)?;
-                        let values = store.get(pname)?;
-                        literals.push(lit_f32(values, tspec)?);
-                    }
-                    Binding::Data(tspec) => {
-                        let arg = data_it.next().unwrap();
-                        literals.push(lit_from_arg(arg, tspec, name)?);
-                    }
-                }
-            }
-            art.exe
-                .execute::<xla::Literal>(&literals)
-                .with_context(|| format!("executing {name}"))?
-        };
-        *self.calls.borrow_mut() += 1;
-
-        // Unpack the output tuple.
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {name}"))?;
-        let parts = tuple.to_tuple().with_context(|| format!("untupling result of {name}"))?;
-        anyhow::ensure!(
-            parts.len() == art.spec.outputs.len(),
-            "artifact {name}: {} outputs, manifest says {}",
-            parts.len(),
-            art.spec.outputs.len()
-        );
-
-        let n_data_outputs = art.spec.data_outputs().count();
+        let n_data_outputs = art.data_outputs().count();
         anyhow::ensure!(
             outs.len() == n_data_outputs,
             "artifact {name}: {} output buffers given, {} expected",
             outs.len(),
             n_data_outputs
         );
-        let mut out_it = outs.iter_mut();
-        for (part, binding) in parts.into_iter().zip(&art.spec.outputs) {
-            match binding {
-                Binding::Param(pname) => {
-                    // Write back directly into the store tensor (single copy).
-                    let dst = store.tensor_mut(pname)?;
-                    anyhow::ensure!(
-                        part.element_count() == dst.len(),
-                        "{name}: writeback of {pname} has {} elements, expected {}",
-                        part.element_count(),
-                        dst.len()
-                    );
-                    part.copy_raw_to(dst)
-                        .with_context(|| format!("{name}: writeback of {pname}"))?;
-                }
-                Binding::Data(tspec) => {
-                    if tspec.dtype != DType::F32 {
-                        bail!("artifact {name}: non-f32 data outputs unsupported");
-                    }
-                    let dst: &mut [f32] = out_it.next().unwrap();
-                    anyhow::ensure!(
-                        part.element_count() == tspec.numel() && dst.len() == tspec.numel(),
-                        "{name}: output {} has {} elements, buffer {}, expected {}",
-                        tspec.name,
-                        part.element_count(),
-                        dst.len(),
-                        tspec.numel()
-                    );
-                    // Single copy straight into the caller's scratch.
-                    part.copy_raw_to(dst)
-                        .with_context(|| format!("{name}: output {}", tspec.name))?;
-                }
+        for (out, spec) in outs.iter().zip(art.data_outputs()) {
+            if spec.dtype != DType::F32 {
+                bail!("artifact {name}: non-f32 data outputs unsupported");
             }
-        }
-        Ok(())
-    }
-}
-
-fn lit_f32(values: &[f32], spec: &TensorSpec) -> Result<xla::Literal> {
-    anyhow::ensure!(
-        values.len() == spec.numel(),
-        "tensor {}: {} values, expected {} {:?}",
-        spec.name,
-        values.len(),
-        spec.numel(),
-        spec.shape
-    );
-    // Single-copy literal creation (vec1 + reshape would copy twice).
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        &spec.shape,
-        bytes,
-    )?)
-}
-
-fn lit_from_arg(arg: &DataArg<'_>, spec: &TensorSpec, artifact: &str) -> Result<xla::Literal> {
-    match (arg, spec.dtype) {
-        (DataArg::F32(v), DType::F32) => lit_f32(v, spec),
-        (DataArg::I32(v), DType::I32) => {
             anyhow::ensure!(
-                v.len() == spec.numel(),
-                "tensor {}: {} values, expected {}",
+                out.len() == spec.numel(),
+                "artifact {name}: output {} buffer has {} values, expected {}",
                 spec.name,
-                v.len(),
+                out.len(),
                 spec.numel()
             );
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            };
-            Ok(xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                &spec.shape,
-                bytes,
-            )?)
         }
-        _ => bail!("artifact {artifact}: dtype mismatch for data input {}", spec.name),
-    }
-}
 
-fn buf_from_arg(
-    client: &xla::PjRtClient,
-    arg: &DataArg<'_>,
-    spec: &TensorSpec,
-    artifact: &str,
-) -> Result<xla::PjRtBuffer> {
-    match (arg, spec.dtype) {
-        (DataArg::F32(v), DType::F32) => {
-            anyhow::ensure!(v.len() == spec.numel(), "tensor {}: wrong size", spec.name);
-            Ok(client.buffer_from_host_buffer(v, &spec.shape, None)?)
-        }
-        (DataArg::I32(v), DType::I32) => {
-            anyhow::ensure!(v.len() == spec.numel(), "tensor {}: wrong size", spec.name);
-            Ok(client.buffer_from_host_buffer(v, &spec.shape, None)?)
-        }
-        _ => bail!("artifact {artifact}: dtype mismatch for data input {}", spec.name),
+        self.backend.execute(art, &self.manifest, store, data, outs)?;
+        *self.calls.borrow_mut() += 1;
+        Ok(())
     }
 }

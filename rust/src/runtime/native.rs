@@ -1,0 +1,999 @@
+//! Native CPU execution backend: runs every artifact of the synthesized
+//! manifest directly on [`ParamStore`] slices with the hand-rolled kernels
+//! in [`crate::nn::kernels`] — no HLO, no PJRT, no `artifacts/` directory.
+//!
+//! Each artifact is classified once (from its model's parameter names and
+//! its data bindings) into an op with preallocated scratch; after that
+//! first call, the forward ops (`*_fwd_*`, `*_step_*`) perform **zero heap
+//! allocations and zero redundant copies** — inputs are borrowed from the
+//! caller, intermediates live in reusable scratch, and outputs are written
+//! straight into the caller's buffers (`rust/tests/native_alloc.rs` pins
+//! this with a counting allocator). Training ops reuse their scratch too
+//! and mutate the store through in-place Adam updates
+//! ([`ParamStore::adam_slots_mut`]).
+//!
+//! The math mirrors `python/compile/model.py` exactly (same losses, same
+//! clipping, same Adam) so learning-dynamics tests hold on either backend.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::manifest::{ArtifactSpec, Binding, Manifest, ModelSpec};
+use super::{Backend, DataArg};
+use crate::nn::kernels::{self, Act};
+use crate::nn::ParamStore;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Deterministic per-model seed for in-memory parameter initialization
+/// (FNV-1a over the model name; the native stand-in for `params.bin`).
+pub fn init_seed(model: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in model.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The native CPU engine: one classified-op cache, scratch reused across
+/// calls.
+pub struct NativeBackend {
+    ops: RefCell<HashMap<String, Op>>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { ops: RefCell::new(HashMap::new()) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn prepare(&self, art: &ArtifactSpec, manifest: &Manifest) -> Result<()> {
+        let mut ops = self.ops.borrow_mut();
+        if !ops.contains_key(&art.name) {
+            let op = Op::build(art, manifest)
+                .with_context(|| format!("classifying artifact {}", art.name))?;
+            ops.insert(art.name.clone(), op);
+        }
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        art: &ArtifactSpec,
+        manifest: &Manifest,
+        store: &mut ParamStore,
+        data: &[DataArg<'_>],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        self.prepare(art, manifest)?;
+        let mut ops = self.ops.borrow_mut();
+        let op = ops.get_mut(&art.name).unwrap();
+        op.run(store, data, outs)
+            .with_context(|| format!("native execution of {}", art.name))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Argument helpers
+// ---------------------------------------------------------------------------
+
+fn f32_arg<'a>(data: &[DataArg<'a>], idx: usize, what: &str) -> Result<&'a [f32]> {
+    match data.get(idx) {
+        Some(&DataArg::F32(v)) => Ok(v),
+        _ => bail!("data arg {idx} ({what}) must be f32"),
+    }
+}
+
+fn i32_arg<'a>(data: &[DataArg<'a>], idx: usize, what: &str) -> Result<&'a [i32]> {
+    match data.get(idx) {
+        Some(&DataArg::I32(v)) => Ok(v),
+        _ => bail!("data arg {idx} ({what}) must be i32"),
+    }
+}
+
+fn scalar(data: &[DataArg<'_>], idx: usize, what: &str) -> Result<f32> {
+    Ok(f32_arg(data, idx, what)?[0])
+}
+
+fn data_shape<'m>(art: &'m ArtifactSpec, name: &str) -> Result<&'m [usize]> {
+    art.data_inputs()
+        .find(|t| t.name == name)
+        .map(|t| t.shape.as_slice())
+        .with_context(|| format!("artifact {} has no data input '{name}'", art.name))
+}
+
+/// In-place Adam over `(param, grad)` pairs: bumps `adam_t`, then updates
+/// `m.*` / `v.*` / the parameter in one pass each (matching `adam_step` in
+/// `python/compile/model.py`).
+fn adam_apply(store: &mut ParamStore, lr: f32, pairs: &[(&str, &[f32])]) -> Result<()> {
+    let t_new = {
+        let t = store.tensor_mut("adam_t")?;
+        t[0] += 1.0;
+        t[0]
+    };
+    let bc1 = 1.0 - kernels::ADAM_B1.powf(t_new);
+    let bc2 = 1.0 - kernels::ADAM_B2.powf(t_new);
+    for (name, g) in pairs {
+        let (p, m, v) = store.adam_slots_mut(name)?;
+        kernels::adam_tensor(p, m, v, g, lr, bc1, bc2);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Op classification
+// ---------------------------------------------------------------------------
+
+enum Op {
+    PolicyFwd(PolicyFwd),
+    PolicyUpdate(PolicyUpdate),
+    PolicyUpdateFused(PolicyUpdateFused),
+    FnnFwd(FnnFwd),
+    FnnUpdate(FnnUpdate),
+    GruStep(GruStep),
+    GruUpdate(GruUpdate),
+}
+
+impl Op {
+    fn build(art: &ArtifactSpec, manifest: &Manifest) -> Result<Op> {
+        let model = manifest.model(&art.model)?;
+        let trains = art.outputs.iter().any(|b| matches!(b, Binding::Param(_)));
+        let is_policy = model.params.iter().any(|p| p.name == "w_pi");
+        let is_gru = model.params.iter().any(|p| p.name == "w_x");
+        Ok(if is_policy {
+            if !trains {
+                Op::PolicyFwd(PolicyFwd::new(art, model)?)
+            } else if art.data_inputs().any(|t| t.name == "perm") {
+                Op::PolicyUpdateFused(PolicyUpdateFused::new(art, model, manifest)?)
+            } else {
+                Op::PolicyUpdate(PolicyUpdate::new(art, model)?)
+            }
+        } else if is_gru {
+            if trains {
+                Op::GruUpdate(GruUpdate::new(art, model)?)
+            } else {
+                Op::GruStep(GruStep::new(art, model)?)
+            }
+        } else if trains {
+            Op::FnnUpdate(FnnUpdate::new(art, model)?)
+        } else {
+            Op::FnnFwd(FnnFwd::new(art, model)?)
+        })
+    }
+
+    fn run(
+        &mut self,
+        store: &mut ParamStore,
+        data: &[DataArg<'_>],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        match self {
+            Op::PolicyFwd(o) => {
+                let obs = f32_arg(data, 0, "obs")?;
+                let (lo, rest) = outs.split_at_mut(1);
+                o.run(store, obs, &mut *lo[0], &mut *rest[0])
+            }
+            Op::PolicyUpdate(o) => {
+                let hp = Hyper::parse(data)?;
+                let obs = f32_arg(data, 5, "obs")?;
+                let actions = i32_arg(data, 6, "actions")?;
+                let adv = f32_arg(data, 7, "advantages")?;
+                let ret = f32_arg(data, 8, "returns")?;
+                let lp = f32_arg(data, 9, "old_logp")?;
+                let stats = o.run_minibatch(store, &hp, obs, actions, adv, ret, lp)?;
+                outs[0].copy_from_slice(&stats);
+                Ok(())
+            }
+            Op::PolicyUpdateFused(o) => {
+                let stats = o.run(store, data)?;
+                outs[0].copy_from_slice(&stats);
+                Ok(())
+            }
+            Op::FnnFwd(o) => {
+                let d = f32_arg(data, 0, "d")?;
+                o.run(store, d, &mut *outs[0])
+            }
+            Op::FnnUpdate(o) => {
+                let lr = scalar(data, 0, "lr")?;
+                let d = f32_arg(data, 1, "d")?;
+                let targets = f32_arg(data, 2, "targets")?;
+                let loss = o.run(store, lr, d, targets)?;
+                outs[0][0] = loss;
+                Ok(())
+            }
+            Op::GruStep(o) => {
+                let h = f32_arg(data, 0, "h")?;
+                let d = f32_arg(data, 1, "d")?;
+                let (probs, rest) = outs.split_at_mut(1);
+                o.run(store, h, d, &mut *probs[0], &mut *rest[0])
+            }
+            Op::GruUpdate(o) => {
+                let lr = scalar(data, 0, "lr")?;
+                let seqs = f32_arg(data, 1, "seqs")?;
+                let targets = f32_arg(data, 2, "targets")?;
+                let loss = o.run(store, lr, seqs, targets)?;
+                outs[0][0] = loss;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// PPO hyperparameters handed over as shape-(1,) scalars.
+struct Hyper {
+    lr: f32,
+    clip: f32,
+    vf: f32,
+    ent: f32,
+    mgn: f32,
+}
+
+impl Hyper {
+    fn parse(data: &[DataArg<'_>]) -> Result<Hyper> {
+        Ok(Hyper {
+            lr: scalar(data, 0, "lr")?,
+            clip: scalar(data, 1, "clip")?,
+            vf: scalar(data, 2, "vf_coef")?,
+            ent: scalar(data, 3, "ent_coef")?,
+            mgn: scalar(data, 4, "max_grad_norm")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy MLP (tanh-tanh trunk, logits + value heads)
+// ---------------------------------------------------------------------------
+
+fn policy_dims(model: &ModelSpec) -> Result<(usize, usize, usize)> {
+    let w1 = model.param("w1")?;
+    let act = model.param("w_pi")?.shape[1];
+    Ok((w1.shape[0], w1.shape[1], act))
+}
+
+struct PolicyFwd {
+    b: usize,
+    obs_dim: usize,
+    hid: usize,
+    act_dim: usize,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+}
+
+impl PolicyFwd {
+    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<PolicyFwd> {
+        let (obs_dim, hid, act_dim) = policy_dims(model)?;
+        let b = data_shape(art, "obs")?[0];
+        Ok(PolicyFwd {
+            b,
+            obs_dim,
+            hid,
+            act_dim,
+            h1: vec![0.0; b * hid],
+            h2: vec![0.0; b * hid],
+        })
+    }
+
+    fn run(
+        &mut self,
+        store: &ParamStore,
+        obs: &[f32],
+        logits: &mut [f32],
+        value: &mut [f32],
+    ) -> Result<()> {
+        let (b, od, h, a) = (self.b, self.obs_dim, self.hid, self.act_dim);
+        let w1 = store.get("w1")?;
+        let b1 = store.get("b1")?;
+        let w2 = store.get("w2")?;
+        let b2 = store.get("b2")?;
+        let w_pi = store.get("w_pi")?;
+        let b_pi = store.get("b_pi")?;
+        let w_v = store.get("w_v")?;
+        let b_v = store.get("b_v")?;
+        kernels::linear_into(obs, w1, Some(b1), &mut self.h1, b, od, h, Act::Tanh);
+        kernels::linear_into(&self.h1, w2, Some(b2), &mut self.h2, b, h, h, Act::Tanh);
+        kernels::linear_into(&self.h2, w_pi, Some(b_pi), logits, b, h, a, Act::None);
+        kernels::linear_into(&self.h2, w_v, Some(b_v), value, b, h, 1, Act::None);
+        Ok(())
+    }
+}
+
+/// Per-tensor policy gradients (same order as the model spec).
+struct PolicyGrads {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    w_pi: Vec<f32>,
+    b_pi: Vec<f32>,
+    w_v: Vec<f32>,
+    b_v: Vec<f32>,
+}
+
+impl PolicyGrads {
+    fn new(obs_dim: usize, hid: usize, act_dim: usize) -> PolicyGrads {
+        PolicyGrads {
+            w1: vec![0.0; obs_dim * hid],
+            b1: vec![0.0; hid],
+            w2: vec![0.0; hid * hid],
+            b2: vec![0.0; hid],
+            w_pi: vec![0.0; hid * act_dim],
+            b_pi: vec![0.0; act_dim],
+            w_v: vec![0.0; hid],
+            b_v: vec![0.0; 1],
+        }
+    }
+
+    fn zero(&mut self) {
+        for g in [
+            &mut self.w1,
+            &mut self.b1,
+            &mut self.w2,
+            &mut self.b2,
+            &mut self.w_pi,
+            &mut self.b_pi,
+            &mut self.w_v,
+            &mut self.b_v,
+        ] {
+            g.fill(0.0);
+        }
+    }
+
+    fn scale(&mut self, s: f32) {
+        for g in [
+            &mut self.w1,
+            &mut self.b1,
+            &mut self.w2,
+            &mut self.b2,
+            &mut self.w_pi,
+            &mut self.b_pi,
+            &mut self.w_v,
+            &mut self.b_v,
+        ] {
+            for x in g.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+
+    fn norm(&self) -> f32 {
+        kernels::global_norm(&[
+            &self.w1[..],
+            &self.b1[..],
+            &self.w2[..],
+            &self.b2[..],
+            &self.w_pi[..],
+            &self.b_pi[..],
+            &self.w_v[..],
+            &self.b_v[..],
+        ])
+    }
+}
+
+struct PolicyUpdate {
+    mb: usize,
+    obs_dim: usize,
+    hid: usize,
+    act_dim: usize,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    logits: Vec<f32>,
+    logp: Vec<f32>,
+    value: Vec<f32>,
+    g_logits: Vec<f32>,
+    g_value: Vec<f32>,
+    g_ha: Vec<f32>,
+    g_hb: Vec<f32>,
+    grads: PolicyGrads,
+}
+
+impl PolicyUpdate {
+    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<PolicyUpdate> {
+        let (obs_dim, hid, act_dim) = policy_dims(model)?;
+        let mb = data_shape(art, "obs")?[0];
+        Ok(Self::with_minibatch(mb, obs_dim, hid, act_dim))
+    }
+
+    fn with_minibatch(mb: usize, obs_dim: usize, hid: usize, act_dim: usize) -> PolicyUpdate {
+        PolicyUpdate {
+            mb,
+            obs_dim,
+            hid,
+            act_dim,
+            h1: vec![0.0; mb * hid],
+            h2: vec![0.0; mb * hid],
+            logits: vec![0.0; mb * act_dim],
+            logp: vec![0.0; mb * act_dim],
+            value: vec![0.0; mb],
+            g_logits: vec![0.0; mb * act_dim],
+            g_value: vec![0.0; mb],
+            g_ha: vec![0.0; mb * hid],
+            g_hb: vec![0.0; mb * hid],
+            grads: PolicyGrads::new(obs_dim, hid, act_dim),
+        }
+    }
+
+    /// One clipped-surrogate PPO minibatch step — forward, loss, backward,
+    /// grad-norm clip, Adam (`ppo_update` in `model.py`). Returns
+    /// `[total, pg_loss, v_loss, entropy, approx_kl]`.
+    fn run_minibatch(
+        &mut self,
+        store: &mut ParamStore,
+        hp: &Hyper,
+        obs: &[f32],
+        actions: &[i32],
+        adv: &[f32],
+        ret: &[f32],
+        old_logp: &[f32],
+    ) -> Result<[f32; 5]> {
+        let (mb, od, h, a) = (self.mb, self.obs_dim, self.hid, self.act_dim);
+        let inv_mb = 1.0 / mb as f32;
+        let stats;
+        {
+            let w1 = store.get("w1")?;
+            let b1 = store.get("b1")?;
+            let w2 = store.get("w2")?;
+            let b2 = store.get("b2")?;
+            let w_pi = store.get("w_pi")?;
+            let b_pi = store.get("b_pi")?;
+            let w_v = store.get("w_v")?;
+            let b_v = store.get("b_v")?;
+
+            kernels::linear_into(obs, w1, Some(b1), &mut self.h1, mb, od, h, Act::Tanh);
+            kernels::linear_into(&self.h1, w2, Some(b2), &mut self.h2, mb, h, h, Act::Tanh);
+            kernels::linear_into(&self.h2, w_pi, Some(b_pi), &mut self.logits, mb, h, a, Act::None);
+            kernels::linear_into(&self.h2, w_v, Some(b_v), &mut self.value, mb, h, 1, Act::None);
+
+            // Loss terms + dL/dlogits, dL/dvalue per row.
+            let mut pg_sum = 0.0f64;
+            let mut v_sum = 0.0f64;
+            let mut ent_sum = 0.0f64;
+            let mut kl_sum = 0.0f64;
+            for r in 0..mb {
+                let lrow = &self.logits[r * a..(r + 1) * a];
+                let lprow = &mut self.logp[r * a..(r + 1) * a];
+                kernels::log_softmax_row(lrow, lprow);
+                let act_i = actions[r] as usize;
+                anyhow::ensure!(act_i < a, "action {act_i} out of range (act_dim {a})");
+                let lpa = lprow[act_i];
+                let ratio = (lpa - old_logp[r]).exp();
+                let s1 = ratio * adv[r];
+                let s2 = ratio.clamp(1.0 - hp.clip, 1.0 + hp.clip) * adv[r];
+                // Gradient flows through the unclipped surrogate iff it is
+                // the active min (jnp.minimum semantics; the clipped branch
+                // is constant in logp).
+                let (min_s, gpg) =
+                    if s1 <= s2 { (s1, -adv[r] * ratio * inv_mb) } else { (s2, 0.0) };
+                pg_sum += min_s as f64;
+                let mut h_row = 0.0f32;
+                for &lp in lprow.iter() {
+                    h_row -= lp.exp() * lp;
+                }
+                ent_sum += h_row as f64;
+                kl_sum += (old_logp[r] - lpa) as f64;
+                let grow = &mut self.g_logits[r * a..(r + 1) * a];
+                for (j, (gj, &lp)) in grow.iter_mut().zip(lprow.iter()).enumerate() {
+                    let p = lp.exp();
+                    let onehot = if j == act_i { 1.0 } else { 0.0 };
+                    // d(-ent_coef * H)/dlogit = ent_coef * p * (logp + H)
+                    *gj = gpg * (onehot - p) + hp.ent * inv_mb * p * (lp + h_row);
+                }
+                let vdiff = self.value[r] - ret[r];
+                v_sum += (vdiff as f64) * (vdiff as f64);
+                self.g_value[r] = hp.vf * 2.0 * vdiff * inv_mb;
+            }
+            let pg_loss = -(pg_sum as f32) * inv_mb;
+            let v_loss = (v_sum as f32) * inv_mb;
+            let entropy = (ent_sum as f32) * inv_mb;
+            let approx_kl = (kl_sum as f32) * inv_mb;
+            let total = pg_loss + hp.vf * v_loss - hp.ent * entropy;
+            stats = [total, pg_loss, v_loss, entropy, approx_kl];
+
+            // Backward.
+            let g = &mut self.grads;
+            g.zero();
+            kernels::matmul_at_b_acc(&self.h2, &self.g_logits, &mut g.w_pi, mb, h, a);
+            kernels::colsum_acc(&self.g_logits, &mut g.b_pi, a);
+            kernels::matmul_at_b_acc(&self.h2, &self.g_value, &mut g.w_v, mb, h, 1);
+            g.b_v[0] = self.g_value.iter().sum();
+            kernels::matmul_bt_into(&self.g_logits, w_pi, &mut self.g_ha, mb, a, h);
+            for (r, &gv) in self.g_value.iter().enumerate() {
+                kernels::axpy(&mut self.g_ha[r * h..(r + 1) * h], w_v, gv);
+            }
+            for (gz, &hv) in self.g_ha.iter_mut().zip(&self.h2) {
+                *gz *= 1.0 - hv * hv;
+            }
+            kernels::matmul_at_b_acc(&self.h1, &self.g_ha, &mut g.w2, mb, h, h);
+            kernels::colsum_acc(&self.g_ha, &mut g.b2, h);
+            kernels::matmul_bt_into(&self.g_ha, w2, &mut self.g_hb, mb, h, h);
+            for (gz, &hv) in self.g_hb.iter_mut().zip(&self.h1) {
+                *gz *= 1.0 - hv * hv;
+            }
+            kernels::matmul_at_b_acc(obs, &self.g_hb, &mut g.w1, mb, od, h);
+            kernels::colsum_acc(&self.g_hb, &mut g.b1, h);
+        }
+
+        // Global grad-norm clip, then Adam (clip_global_norm + adam_step).
+        let gn = self.grads.norm();
+        self.grads.scale((hp.mgn / (gn + 1e-8)).min(1.0));
+        let g = &self.grads;
+        adam_apply(
+            store,
+            hp.lr,
+            &[
+                ("w1", g.w1.as_slice()),
+                ("b1", g.b1.as_slice()),
+                ("w2", g.w2.as_slice()),
+                ("b2", g.b2.as_slice()),
+                ("w_pi", g.w_pi.as_slice()),
+                ("b_pi", g.b_pi.as_slice()),
+                ("w_v", g.w_v.as_slice()),
+                ("b_v", g.b_v.as_slice()),
+            ],
+        )?;
+        Ok(stats)
+    }
+}
+
+/// The whole-phase PPO update (`ppo_update_fused`): all epochs and
+/// minibatches of one iteration in a single call, gathering rows by the
+/// caller-supplied per-epoch permutation.
+struct PolicyUpdateFused {
+    epochs: usize,
+    n: usize,
+    core: PolicyUpdate,
+    mb_obs: Vec<f32>,
+    mb_act: Vec<i32>,
+    mb_adv: Vec<f32>,
+    mb_ret: Vec<f32>,
+    mb_lp: Vec<f32>,
+}
+
+impl PolicyUpdateFused {
+    fn new(art: &ArtifactSpec, model: &ModelSpec, manifest: &Manifest) -> Result<PolicyUpdateFused> {
+        let (obs_dim, hid, act_dim) = policy_dims(model)?;
+        let perm = data_shape(art, "perm")?;
+        let (epochs, n) = (perm[0], perm[1]);
+        // Minibatch width comes from the manifest geometry (the fused op
+        // scans the same chunks the per-minibatch artifact would see).
+        let mut mb = manifest.geom("ppo_minibatch").unwrap_or(n as i64) as usize;
+        if mb == 0 || n % mb != 0 {
+            mb = n;
+        }
+        Ok(PolicyUpdateFused {
+            epochs,
+            n,
+            core: PolicyUpdate::with_minibatch(mb, obs_dim, hid, act_dim),
+            mb_obs: vec![0.0; mb * obs_dim],
+            mb_act: vec![0; mb],
+            mb_adv: vec![0.0; mb],
+            mb_ret: vec![0.0; mb],
+            mb_lp: vec![0.0; mb],
+        })
+    }
+
+    fn run(&mut self, store: &mut ParamStore, data: &[DataArg<'_>]) -> Result<[f32; 5]> {
+        let hp = Hyper::parse(data)?;
+        let perm = i32_arg(data, 5, "perm")?;
+        let obs = f32_arg(data, 6, "obs")?;
+        let actions = i32_arg(data, 7, "actions")?;
+        let adv = f32_arg(data, 8, "advantages")?;
+        let ret = f32_arg(data, 9, "returns")?;
+        let old_logp = f32_arg(data, 10, "old_logp")?;
+        let (n, mb, od) = (self.n, self.core.mb, self.core.obs_dim);
+        let mut agg = [0.0f64; 5];
+        let mut updates = 0usize;
+        for e in 0..self.epochs {
+            let perm_e = &perm[e * n..(e + 1) * n];
+            for chunk in perm_e.chunks_exact(mb) {
+                for (row, &src) in chunk.iter().enumerate() {
+                    let s = src as usize;
+                    anyhow::ensure!(s < n, "perm index {s} out of range (n {n})");
+                    self.mb_obs[row * od..(row + 1) * od]
+                        .copy_from_slice(&obs[s * od..(s + 1) * od]);
+                    self.mb_act[row] = actions[s];
+                    self.mb_adv[row] = adv[s];
+                    self.mb_ret[row] = ret[s];
+                    self.mb_lp[row] = old_logp[s];
+                }
+                let stats = self.core.run_minibatch(
+                    store,
+                    &hp,
+                    &self.mb_obs,
+                    &self.mb_act,
+                    &self.mb_adv,
+                    &self.mb_ret,
+                    &self.mb_lp,
+                )?;
+                for (acc, s) in agg.iter_mut().zip(stats) {
+                    *acc += s as f64;
+                }
+                updates += 1;
+            }
+        }
+        let d = updates.max(1) as f64;
+        Ok([
+            (agg[0] / d) as f32,
+            (agg[1] / d) as f32,
+            (agg[2] / d) as f32,
+            (agg[3] / d) as f32,
+            (agg[4] / d) as f32,
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FNN influence predictor (tanh hidden, sigmoid head)
+// ---------------------------------------------------------------------------
+
+fn fnn_dims(model: &ModelSpec) -> Result<(usize, usize, usize)> {
+    let w1 = model.param("w1")?;
+    let u = model.param("w2")?.shape[1];
+    Ok((w1.shape[0], w1.shape[1], u))
+}
+
+struct FnnFwd {
+    b: usize,
+    d_dim: usize,
+    hid: usize,
+    u_dim: usize,
+    h1: Vec<f32>,
+}
+
+impl FnnFwd {
+    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<FnnFwd> {
+        let (d_dim, hid, u_dim) = fnn_dims(model)?;
+        let b = data_shape(art, "d")?[0];
+        Ok(FnnFwd { b, d_dim, hid, u_dim, h1: vec![0.0; b * hid] })
+    }
+
+    fn run(&mut self, store: &ParamStore, d: &[f32], probs: &mut [f32]) -> Result<()> {
+        let (b, dd, h, u) = (self.b, self.d_dim, self.hid, self.u_dim);
+        let w1 = store.get("w1")?;
+        let b1 = store.get("b1")?;
+        let w2 = store.get("w2")?;
+        let b2 = store.get("b2")?;
+        kernels::linear_into(d, w1, Some(b1), &mut self.h1, b, dd, h, Act::Tanh);
+        kernels::linear_into(&self.h1, w2, Some(b2), probs, b, h, u, Act::Sigmoid);
+        Ok(())
+    }
+}
+
+struct FnnUpdate {
+    mb: usize,
+    d_dim: usize,
+    hid: usize,
+    u_dim: usize,
+    h1: Vec<f32>,
+    logits: Vec<f32>,
+    g_l: Vec<f32>,
+    g_h: Vec<f32>,
+    gw1: Vec<f32>,
+    gb1: Vec<f32>,
+    gw2: Vec<f32>,
+    gb2: Vec<f32>,
+}
+
+impl FnnUpdate {
+    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<FnnUpdate> {
+        let (d_dim, hid, u_dim) = fnn_dims(model)?;
+        let mb = data_shape(art, "d")?[0];
+        Ok(FnnUpdate {
+            mb,
+            d_dim,
+            hid,
+            u_dim,
+            h1: vec![0.0; mb * hid],
+            logits: vec![0.0; mb * u_dim],
+            g_l: vec![0.0; mb * u_dim],
+            g_h: vec![0.0; mb * hid],
+            gw1: vec![0.0; d_dim * hid],
+            gb1: vec![0.0; hid],
+            gw2: vec![0.0; hid * u_dim],
+            gb2: vec![0.0; u_dim],
+        })
+    }
+
+    /// One Adam step of stable BCE-with-logits (`aip_fnn_update`).
+    fn run(&mut self, store: &mut ParamStore, lr: f32, d: &[f32], targets: &[f32]) -> Result<f32> {
+        let (mb, dd, h, u) = (self.mb, self.d_dim, self.hid, self.u_dim);
+        let inv = 1.0 / (mb * u) as f32;
+        let loss;
+        {
+            let w1 = store.get("w1")?;
+            let b1 = store.get("b1")?;
+            let w2 = store.get("w2")?;
+            let b2 = store.get("b2")?;
+            kernels::linear_into(d, w1, Some(b1), &mut self.h1, mb, dd, h, Act::Tanh);
+            kernels::linear_into(&self.h1, w2, Some(b2), &mut self.logits, mb, h, u, Act::None);
+            let mut loss_sum = 0.0f64;
+            for ((gl, &l), &y) in self.g_l.iter_mut().zip(&self.logits).zip(targets) {
+                loss_sum += kernels::bce_with_logits_elem(l, y) as f64;
+                *gl = (kernels::sigmoid(l) - y) * inv;
+            }
+            loss = (loss_sum as f32) * inv;
+            self.gw1.fill(0.0);
+            self.gb1.fill(0.0);
+            self.gw2.fill(0.0);
+            self.gb2.fill(0.0);
+            kernels::matmul_at_b_acc(&self.h1, &self.g_l, &mut self.gw2, mb, h, u);
+            kernels::colsum_acc(&self.g_l, &mut self.gb2, u);
+            kernels::matmul_bt_into(&self.g_l, w2, &mut self.g_h, mb, u, h);
+            for (gz, &hv) in self.g_h.iter_mut().zip(&self.h1) {
+                *gz *= 1.0 - hv * hv;
+            }
+            kernels::matmul_at_b_acc(d, &self.g_h, &mut self.gw1, mb, dd, h);
+            kernels::colsum_acc(&self.g_h, &mut self.gb1, h);
+        }
+        adam_apply(
+            store,
+            lr,
+            &[
+                ("w1", self.gw1.as_slice()),
+                ("b1", self.gb1.as_slice()),
+                ("w2", self.gw2.as_slice()),
+                ("b2", self.gb2.as_slice()),
+            ],
+        )?;
+        Ok(loss)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GRU influence predictor (fused z|r|n gates, sigmoid head)
+// ---------------------------------------------------------------------------
+
+fn gru_dims(model: &ModelSpec) -> Result<(usize, usize, usize)> {
+    let w_x = model.param("w_x")?;
+    let hid = model.param("w_h")?.shape[0];
+    let u = model.param("w_o")?.shape[1];
+    Ok((w_x.shape[0], hid, u))
+}
+
+struct GruStep {
+    b: usize,
+    d_dim: usize,
+    hid: usize,
+    u_dim: usize,
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+}
+
+impl GruStep {
+    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<GruStep> {
+        let (d_dim, hid, u_dim) = gru_dims(model)?;
+        let b = data_shape(art, "d")?[0];
+        Ok(GruStep {
+            b,
+            d_dim,
+            hid,
+            u_dim,
+            gx: vec![0.0; b * 3 * hid],
+            gh: vec![0.0; b * 3 * hid],
+        })
+    }
+
+    fn run(
+        &mut self,
+        store: &ParamStore,
+        h: &[f32],
+        d: &[f32],
+        probs: &mut [f32],
+        h_new: &mut [f32],
+    ) -> Result<()> {
+        let (b, dd, hid, u) = (self.b, self.d_dim, self.hid, self.u_dim);
+        let w_x = store.get("w_x")?;
+        let w_h = store.get("w_h")?;
+        let b_g = store.get("b_g")?;
+        let w_o = store.get("w_o")?;
+        let b_o = store.get("b_o")?;
+        kernels::gru_cell_into(d, h, w_x, w_h, b_g, h_new, &mut self.gx, &mut self.gh, b, dd, hid);
+        kernels::linear_into(h_new, w_o, Some(b_o), probs, b, hid, u, Act::Sigmoid);
+        Ok(())
+    }
+}
+
+struct GruUpdate {
+    b: usize,
+    t: usize,
+    d_dim: usize,
+    hid: usize,
+    u_dim: usize,
+    /// Hidden states `[T+1, B, H]` (slot 0 = zeros).
+    h: Vec<f32>,
+    /// Per-step gate activations `[T, B, H]` each.
+    z: Vec<f32>,
+    r: Vec<f32>,
+    n_: Vec<f32>,
+    /// Recurrent candidate pre-activation `(h_t @ w_h)` n-block `[T, B, H]`.
+    ghn: Vec<f32>,
+    /// Output-head logits `[T, B, U]`.
+    logits: Vec<f32>,
+    /// Time-major gather of the `[B, T, D]` input window.
+    xt: Vec<f32>,
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+    g_l: Vec<f32>,
+    dh: Vec<f32>,
+    carry: Vec<f32>,
+    gw_x: Vec<f32>,
+    gw_h: Vec<f32>,
+    gb_g: Vec<f32>,
+    gw_o: Vec<f32>,
+    gb_o: Vec<f32>,
+}
+
+impl GruUpdate {
+    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<GruUpdate> {
+        let (d_dim, hid, u_dim) = gru_dims(model)?;
+        let seqs = data_shape(art, "seqs")?;
+        let (b, t) = (seqs[0], seqs[1]);
+        Ok(GruUpdate {
+            b,
+            t,
+            d_dim,
+            hid,
+            u_dim,
+            h: vec![0.0; (t + 1) * b * hid],
+            z: vec![0.0; t * b * hid],
+            r: vec![0.0; t * b * hid],
+            n_: vec![0.0; t * b * hid],
+            ghn: vec![0.0; t * b * hid],
+            logits: vec![0.0; t * b * u_dim],
+            xt: vec![0.0; b * d_dim],
+            gx: vec![0.0; b * 3 * hid],
+            gh: vec![0.0; b * 3 * hid],
+            g_l: vec![0.0; b * u_dim],
+            dh: vec![0.0; b * hid],
+            carry: vec![0.0; b * hid],
+            gw_x: vec![0.0; d_dim * 3 * hid],
+            gw_h: vec![0.0; hid * 3 * hid],
+            gb_g: vec![0.0; 3 * hid],
+            gw_o: vec![0.0; hid * u_dim],
+            gb_o: vec![0.0; u_dim],
+        })
+    }
+
+    /// One Adam step of truncated BPTT over the `[B, T, D]` windows
+    /// (`aip_gru_update`: BCE-with-logits on every step's head output).
+    fn run(
+        &mut self,
+        store: &mut ParamStore,
+        lr: f32,
+        seqs: &[f32],
+        targets: &[f32],
+    ) -> Result<f32> {
+        let (b, t, dd, hid, u) = (self.b, self.t, self.d_dim, self.hid, self.u_dim);
+        let (bh, bu) = (b * hid, b * u);
+        let inv = 1.0 / (b * t * u) as f32;
+        let loss;
+        {
+            let w_x = store.get("w_x")?;
+            let w_h = store.get("w_h")?;
+            let b_g = store.get("b_g")?;
+            let w_o = store.get("w_o")?;
+            let b_o = store.get("b_o")?;
+
+            // Forward scan, recording gates and hidden states.
+            self.h[..bh].fill(0.0);
+            let mut loss_sum = 0.0f64;
+            for step in 0..t {
+                for bi in 0..b {
+                    let src = (bi * t + step) * dd;
+                    self.xt[bi * dd..(bi + 1) * dd].copy_from_slice(&seqs[src..src + dd]);
+                }
+                kernels::linear_into(&self.xt, w_x, Some(b_g), &mut self.gx, b, dd, 3 * hid, Act::None);
+                let (lo, hi) = self.h.split_at_mut((step + 1) * bh);
+                let h_t = &lo[step * bh..];
+                let h_next = &mut hi[..bh];
+                kernels::linear_into(h_t, w_h, None, &mut self.gh, b, hid, 3 * hid, Act::None);
+                for bi in 0..b {
+                    for j in 0..hid {
+                        let g3 = bi * 3 * hid;
+                        let zv = kernels::sigmoid(self.gx[g3 + j] + self.gh[g3 + j]);
+                        let rv = kernels::sigmoid(self.gx[g3 + hid + j] + self.gh[g3 + hid + j]);
+                        let ghn_v = self.gh[g3 + 2 * hid + j];
+                        let nv = (self.gx[g3 + 2 * hid + j] + rv * ghn_v).tanh();
+                        let idx = step * bh + bi * hid + j;
+                        self.z[idx] = zv;
+                        self.r[idx] = rv;
+                        self.n_[idx] = nv;
+                        self.ghn[idx] = ghn_v;
+                        h_next[bi * hid + j] = (1.0 - zv) * nv + zv * h_t[bi * hid + j];
+                    }
+                }
+                let lrows = &mut self.logits[step * bu..(step + 1) * bu];
+                kernels::linear_into(h_next, w_o, Some(b_o), lrows, b, hid, u, Act::None);
+                for bi in 0..b {
+                    let lrow = &lrows[bi * u..(bi + 1) * u];
+                    let yrow = &targets[(bi * t + step) * u..(bi * t + step + 1) * u];
+                    for (&l, &y) in lrow.iter().zip(yrow) {
+                        loss_sum += kernels::bce_with_logits_elem(l, y) as f64;
+                    }
+                }
+            }
+            loss = (loss_sum as f32) * inv;
+
+            // Backward through time.
+            self.gw_x.fill(0.0);
+            self.gw_h.fill(0.0);
+            self.gb_g.fill(0.0);
+            self.gw_o.fill(0.0);
+            self.gb_o.fill(0.0);
+            self.carry.fill(0.0);
+            for step in (0..t).rev() {
+                for bi in 0..b {
+                    let lrow = &self.logits[step * bu + bi * u..step * bu + (bi + 1) * u];
+                    let yrow = &targets[(bi * t + step) * u..(bi * t + step + 1) * u];
+                    let glrow = &mut self.g_l[bi * u..(bi + 1) * u];
+                    for ((gl, &l), &y) in glrow.iter_mut().zip(lrow).zip(yrow) {
+                        *gl = (kernels::sigmoid(l) - y) * inv;
+                    }
+                }
+                let h_next = &self.h[(step + 1) * bh..(step + 2) * bh];
+                let h_t = &self.h[step * bh..(step + 1) * bh];
+                kernels::matmul_at_b_acc(h_next, &self.g_l, &mut self.gw_o, b, hid, u);
+                kernels::colsum_acc(&self.g_l, &mut self.gb_o, u);
+                kernels::matmul_bt_into(&self.g_l, w_o, &mut self.dh, b, u, hid);
+                for (d_, &c) in self.dh.iter_mut().zip(&self.carry) {
+                    *d_ += c;
+                }
+                for bi in 0..b {
+                    for j in 0..hid {
+                        let idx = step * bh + bi * hid + j;
+                        let (zv, rv, nv, ghn_v) =
+                            (self.z[idx], self.r[idx], self.n_[idx], self.ghn[idx]);
+                        let dh_v = self.dh[bi * hid + j];
+                        let h_prev = h_t[bi * hid + j];
+                        let dz = dh_v * (h_prev - nv);
+                        let dn = dh_v * (1.0 - zv);
+                        let dan = dn * (1.0 - nv * nv);
+                        let dr = dan * ghn_v;
+                        let daz = dz * zv * (1.0 - zv);
+                        let dar = dr * rv * (1.0 - rv);
+                        let g3 = bi * 3 * hid;
+                        self.gx[g3 + j] = daz;
+                        self.gh[g3 + j] = daz;
+                        self.gx[g3 + hid + j] = dar;
+                        self.gh[g3 + hid + j] = dar;
+                        self.gx[g3 + 2 * hid + j] = dan;
+                        self.gh[g3 + 2 * hid + j] = dan * rv;
+                        self.carry[bi * hid + j] = dh_v * zv;
+                    }
+                }
+                for bi in 0..b {
+                    let src = (bi * t + step) * dd;
+                    self.xt[bi * dd..(bi + 1) * dd].copy_from_slice(&seqs[src..src + dd]);
+                }
+                kernels::matmul_at_b_acc(&self.xt, &self.gx, &mut self.gw_x, b, dd, 3 * hid);
+                kernels::colsum_acc(&self.gx, &mut self.gb_g, 3 * hid);
+                kernels::matmul_at_b_acc(h_t, &self.gh, &mut self.gw_h, b, hid, 3 * hid);
+                kernels::matmul_bt_acc(&self.gh, w_h, &mut self.carry, b, 3 * hid, hid);
+            }
+        }
+        adam_apply(
+            store,
+            lr,
+            &[
+                ("w_x", self.gw_x.as_slice()),
+                ("w_h", self.gw_h.as_slice()),
+                ("b_g", self.gb_g.as_slice()),
+                ("w_o", self.gw_o.as_slice()),
+                ("b_o", self.gb_o.as_slice()),
+            ],
+        )?;
+        Ok(loss)
+    }
+}

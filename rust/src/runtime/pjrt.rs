@@ -1,0 +1,288 @@
+//! PJRT execution backend: compiles AOT artifacts (`artifacts/*.hlo.txt`)
+//! once on the CPU PJRT client and executes them with model parameters +
+//! caller data as positional literals.
+//!
+//! This module is the **only** place the `xla` crate is touched; everything
+//! above it works with plain `&[f32]` slices. Python never runs here —
+//! artifacts were lowered once at build time (`make artifacts`).
+
+use super::manifest::{ArtifactSpec, Binding, DType, Manifest, TensorSpec};
+use super::{Backend, DataArg};
+use crate::nn::ParamStore;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+struct CompiledArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    /// Does the artifact write any parameters back (training artifact)?
+    mutates_params: bool,
+    /// Device-resident parameter buffers for forward-only artifacts,
+    /// keyed by the owning store's (id, version). Uploading the weights
+    /// once per version (instead of per call) is the main L3 perf lever —
+    /// see EXPERIMENTS.md §Perf.
+    param_cache: RefCell<Option<((u64, u64), Vec<xla::PjRtBuffer>)>>,
+}
+
+/// One PJRT CPU client + a lazily-compiled artifact cache.
+pub struct PjrtBackend {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    compiled: RefCell<HashMap<String, Rc<CompiledArtifact>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(dir: &Path) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            dir: dir.to_path_buf(),
+            client,
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    fn compile(&self, art: &ArtifactSpec) -> Result<Rc<CompiledArtifact>> {
+        if let Some(c) = self.compiled.borrow().get(&art.name) {
+            return Ok(c.clone());
+        }
+        let path = self.dir.join(&art.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", art.name))?;
+        let mutates_params =
+            art.outputs.iter().any(|b| matches!(b, Binding::Param(_)));
+        let c = Rc::new(CompiledArtifact {
+            exe,
+            mutates_params,
+            param_cache: RefCell::new(None),
+        });
+        self.compiled.borrow_mut().insert(art.name.clone(), c.clone());
+        Ok(c)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, art: &ArtifactSpec, _manifest: &Manifest) -> Result<()> {
+        self.compile(art)?;
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        art: &ArtifactSpec,
+        manifest: &Manifest,
+        store: &mut ParamStore,
+        data: &[DataArg<'_>],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        let name = art.name.as_str();
+        let compiled = self.compile(art)?;
+        let model = manifest.model(&art.model)?;
+
+        // Forward-only artifacts run on the buffer path: parameters stay
+        // resident on the device and are re-uploaded only when the store
+        // mutates. Training artifacts (param write-back) use the literal
+        // path (the output tuple must come back to the host anyway).
+        let result = if !compiled.mutates_params {
+            // Refresh the resident parameter buffers if stale.
+            {
+                let mut cache = compiled.param_cache.borrow_mut();
+                let key = store.cache_key();
+                let stale = !matches!(&*cache, Some((k, _)) if *k == key);
+                if stale {
+                    let mut bufs = Vec::new();
+                    for binding in &art.inputs {
+                        if let Binding::Param(pname) = binding {
+                            let tspec = model.param(pname)?;
+                            let values = store.get(pname)?;
+                            bufs.push(self.client.buffer_from_host_buffer(
+                                values,
+                                &tspec.shape,
+                                None,
+                            )?);
+                        }
+                    }
+                    *cache = Some((key, bufs));
+                }
+            }
+            let cache = compiled.param_cache.borrow();
+            let (_, param_bufs) = cache.as_ref().unwrap();
+            // Upload data inputs and assemble positional args.
+            let mut data_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(data.len());
+            let mut data_it = data.iter();
+            for binding in &art.inputs {
+                if let Binding::Data(tspec) = binding {
+                    let arg = data_it.next().unwrap();
+                    data_bufs.push(buf_from_arg(&self.client, arg, tspec, name)?);
+                }
+            }
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(art.inputs.len());
+            let (mut pi, mut di) = (0usize, 0usize);
+            for binding in &art.inputs {
+                match binding {
+                    Binding::Param(_) => {
+                        args.push(&param_bufs[pi]);
+                        pi += 1;
+                    }
+                    Binding::Data(_) => {
+                        args.push(&data_bufs[di]);
+                        di += 1;
+                    }
+                }
+            }
+            compiled.exe.execute_b(&args).with_context(|| format!("executing {name}"))?
+        } else {
+            let mut literals: Vec<xla::Literal> = Vec::with_capacity(art.inputs.len());
+            let mut data_it = data.iter();
+            for binding in &art.inputs {
+                match binding {
+                    Binding::Param(pname) => {
+                        let tspec = model.param(pname)?;
+                        let values = store.get(pname)?;
+                        literals.push(lit_f32(values, tspec)?);
+                    }
+                    Binding::Data(tspec) => {
+                        let arg = data_it.next().unwrap();
+                        literals.push(lit_from_arg(arg, tspec, name)?);
+                    }
+                }
+            }
+            compiled
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {name}"))?
+        };
+
+        // Unpack the output tuple. `into_literal` moves the payload off
+        // the (stub) buffer instead of cloning it, so each output is
+        // copied exactly once: straight into the store tensor or the
+        // caller's scratch.
+        let buf = result
+            .into_iter()
+            .next()
+            .and_then(|row| row.into_iter().next())
+            .with_context(|| format!("{name}: empty execution result"))?;
+        let tuple = buf
+            .into_literal()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let parts = tuple.to_tuple().with_context(|| format!("untupling result of {name}"))?;
+        anyhow::ensure!(
+            parts.len() == art.outputs.len(),
+            "artifact {name}: {} outputs, manifest says {}",
+            parts.len(),
+            art.outputs.len()
+        );
+
+        let mut out_it = outs.iter_mut();
+        for (part, binding) in parts.into_iter().zip(&art.outputs) {
+            match binding {
+                Binding::Param(pname) => {
+                    // Write back directly into the store tensor (single copy).
+                    let dst = store.tensor_mut(pname)?;
+                    anyhow::ensure!(
+                        part.element_count() == dst.len(),
+                        "{name}: writeback of {pname} has {} elements, expected {}",
+                        part.element_count(),
+                        dst.len()
+                    );
+                    part.copy_raw_to(dst)
+                        .with_context(|| format!("{name}: writeback of {pname}"))?;
+                }
+                Binding::Data(tspec) => {
+                    if tspec.dtype != DType::F32 {
+                        bail!("artifact {name}: non-f32 data outputs unsupported");
+                    }
+                    let dst: &mut [f32] = out_it.next().unwrap();
+                    anyhow::ensure!(
+                        part.element_count() == tspec.numel() && dst.len() == tspec.numel(),
+                        "{name}: output {} has {} elements, buffer {}, expected {}",
+                        tspec.name,
+                        part.element_count(),
+                        dst.len(),
+                        tspec.numel()
+                    );
+                    // Single copy straight into the caller's scratch.
+                    part.copy_raw_to(dst)
+                        .with_context(|| format!("{name}: output {}", tspec.name))?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn lit_f32(values: &[f32], spec: &TensorSpec) -> Result<xla::Literal> {
+    anyhow::ensure!(
+        values.len() == spec.numel(),
+        "tensor {}: {} values, expected {} {:?}",
+        spec.name,
+        values.len(),
+        spec.numel(),
+        spec.shape
+    );
+    // Single-copy literal creation (vec1 + reshape would copy twice).
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &spec.shape,
+        bytes,
+    )?)
+}
+
+fn lit_from_arg(arg: &DataArg<'_>, spec: &TensorSpec, artifact: &str) -> Result<xla::Literal> {
+    match (arg, spec.dtype) {
+        (DataArg::F32(v), DType::F32) => lit_f32(v, spec),
+        (DataArg::I32(v), DType::I32) => {
+            anyhow::ensure!(
+                v.len() == spec.numel(),
+                "tensor {}: {} values, expected {}",
+                spec.name,
+                v.len(),
+                spec.numel()
+            );
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &spec.shape,
+                bytes,
+            )?)
+        }
+        _ => bail!("artifact {artifact}: dtype mismatch for data input {}", spec.name),
+    }
+}
+
+fn buf_from_arg(
+    client: &xla::PjRtClient,
+    arg: &DataArg<'_>,
+    spec: &TensorSpec,
+    artifact: &str,
+) -> Result<xla::PjRtBuffer> {
+    match (arg, spec.dtype) {
+        (DataArg::F32(v), DType::F32) => {
+            anyhow::ensure!(v.len() == spec.numel(), "tensor {}: wrong size", spec.name);
+            Ok(client.buffer_from_host_buffer(v, &spec.shape, None)?)
+        }
+        (DataArg::I32(v), DType::I32) => {
+            anyhow::ensure!(v.len() == spec.numel(), "tensor {}: wrong size", spec.name);
+            Ok(client.buffer_from_host_buffer(v, &spec.shape, None)?)
+        }
+        _ => bail!("artifact {artifact}: dtype mismatch for data input {}", spec.name),
+    }
+}

@@ -9,13 +9,9 @@ use ials::runtime::Runtime;
 use std::rc::Rc;
 
 fn runtime() -> Option<Rc<Runtime>> {
-    match Runtime::load("artifacts") {
-        Ok(rt) => Some(Rc::new(rt)),
-        Err(e) => {
-            eprintln!("skipping artifact-dependent test (run `make artifacts` to enable): {e:#}");
-            None
-        }
-    }
+    // Compiled artifacts when present, the native CPU backend otherwise —
+    // the paper's CE orderings must hold on either engine.
+    Some(Rc::new(Runtime::load_or_native("artifacts").expect("runtime")))
 }
 
 fn base(sim: SimulatorKind) -> ExperimentConfig {

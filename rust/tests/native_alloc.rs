@@ -1,0 +1,110 @@
+//! Allocation audit of the native forward hot path: after a warmup call
+//! (which builds the per-artifact scratch once), policy `forward_into` and
+//! AIP `predict` must perform **zero heap allocations per step**. Pinned
+//! with a counting global allocator; everything lives in one `#[test]` so
+//! no parallel test can pollute the counter.
+
+use ials::influence::{InfluencePredictor, NeuralAip};
+use ials::rl::Policy;
+use ials::runtime::Runtime;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn counted(f: impl FnOnce()) -> u64 {
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    f();
+    COUNTING.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn native_forward_hot_path_allocates_nothing() {
+    let rt = Rc::new(Runtime::native_default());
+
+    // Policy batched forward (the rollout hot path).
+    let mut policy = Policy::new(rt.clone(), "policy_traffic", 16).unwrap();
+    let obs = vec![0.25f32; 16 * 42];
+    let mut logits = vec![0.0f32; 16 * 2];
+    let mut values = vec![0.0f32; 16];
+    for _ in 0..3 {
+        policy.forward_into(&obs, &mut logits, &mut values).unwrap();
+    }
+    let n = counted(|| {
+        for _ in 0..100 {
+            policy.forward_into(&obs, &mut logits, &mut values).unwrap();
+        }
+    });
+    assert_eq!(n, 0, "policy forward_into allocated {n} times in 100 steps");
+
+    // Batch-1 eval forward (GS evaluation path).
+    let obs1 = vec![0.25f32; 42];
+    policy.forward1(&obs1).unwrap();
+    let n = counted(|| {
+        for _ in 0..100 {
+            policy.forward1(&obs1).unwrap();
+        }
+    });
+    assert_eq!(n, 0, "policy forward1 allocated {n} times in 100 steps");
+
+    // FNN AIP predict.
+    let mut fnn = NeuralAip::new(rt.clone(), "aip_traffic", 16).unwrap();
+    let dsets = vec![0.5f32; 16 * 40];
+    let mut probs = vec![0.0f32; 16 * 4];
+    fnn.predict(&dsets, &mut probs).unwrap();
+    let n = counted(|| {
+        for _ in 0..100 {
+            fnn.predict(&dsets, &mut probs).unwrap();
+        }
+    });
+    assert_eq!(n, 0, "FNN AIP predict allocated {n} times in 100 steps");
+
+    // Recurrent (GRU) AIP predict, including the h/h_next double-buffer swap.
+    let mut gru = NeuralAip::new(rt, "aip_warehouse", 16).unwrap();
+    let wdsets = vec![0.5f32; 16 * 24];
+    let mut wprobs = vec![0.0f32; 16 * 12];
+    gru.predict(&wdsets, &mut wprobs).unwrap();
+    let n = counted(|| {
+        for _ in 0..100 {
+            gru.predict(&wdsets, &mut wprobs).unwrap();
+        }
+    });
+    assert_eq!(n, 0, "GRU AIP predict allocated {n} times in 100 steps");
+    assert!(wprobs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+}

@@ -1,0 +1,260 @@
+//! Parity and determinism tests for the native CPU backend. These never
+//! skip: they build `Runtime::native*` directly, so the NN execution path
+//! is exercised on every `cargo test` regardless of artifacts.
+//!
+//! Kernel-vs-scalar-reference parity (GEMM, GRU cell, log-softmax) lives
+//! in `src/nn/kernels.rs`; this suite checks the *wired* runtime: artifact
+//! classification, parameter binding order, fused-vs-minibatch update
+//! equivalence, and bitwise run-to-run determinism of native PPO.
+
+use ials::config::PpoConfig;
+use ials::core::{Environment, GsVecEnv, Step, VecEnv};
+use ials::rl::{Policy, PpoTrainer};
+use ials::runtime::{DataArg, Runtime, SynthGeometry};
+use ials::util::Pcg32;
+use std::rc::Rc;
+
+const TOL: f32 = 1e-5;
+
+/// Scalar-reference policy forward for one observation row.
+fn policy_fwd_ref(store: &ials::nn::ParamStore, obs: &[f32]) -> (Vec<f32>, f32) {
+    let lin = |x: &[f32], w: &[f32], b: &[f32], n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|j| {
+                let mut acc = b[j];
+                for (kk, &xv) in x.iter().enumerate() {
+                    acc += xv * w[kk * n + j];
+                }
+                acc
+            })
+            .collect()
+    };
+    let tanh = |v: Vec<f32>| -> Vec<f32> { v.into_iter().map(|x| x.tanh()).collect() };
+    let h1 = tanh(lin(obs, store.get("w1").unwrap(), store.get("b1").unwrap(), 64));
+    let h2 = tanh(lin(&h1, store.get("w2").unwrap(), store.get("b2").unwrap(), 64));
+    let logits = lin(&h2, store.get("w_pi").unwrap(), store.get("b_pi").unwrap(), 2);
+    let value = lin(&h2, store.get("w_v").unwrap(), store.get("b_v").unwrap(), 1);
+    (logits, value[0])
+}
+
+#[test]
+fn native_policy_forward_matches_scalar_reference() {
+    let rt = Runtime::native_default();
+    let mut store = rt.load_store("policy_traffic").unwrap();
+    let mut rng = Pcg32::seeded(42);
+    let obs: Vec<f32> = (0..42).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let outs = rt.call("policy_traffic_fwd_b1", &mut store, &[DataArg::F32(&obs)]).unwrap();
+    let (want_logits, want_value) = policy_fwd_ref(&store, &obs);
+    for (g, w) in outs[0].iter().zip(&want_logits) {
+        assert!((g - w).abs() <= TOL, "logit {g} vs {w}");
+    }
+    assert!((outs[1][0] - want_value).abs() <= TOL);
+}
+
+#[test]
+fn native_batched_forward_agrees_rowwise_with_b1() {
+    let rt = Runtime::native_default();
+    let mut store = rt.load_store("policy_traffic").unwrap();
+    let mut rng = Pcg32::seeded(7);
+    let obs: Vec<f32> = (0..16 * 42).map(|_| rng.f32() - 0.5).collect();
+    let big = rt.call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)]).unwrap();
+    for row in 0..16 {
+        let small = rt
+            .call(
+                "policy_traffic_fwd_b1",
+                &mut store,
+                &[DataArg::F32(&obs[row * 42..(row + 1) * 42])],
+            )
+            .unwrap();
+        for k in 0..2 {
+            assert!((big[0][row * 2 + k] - small[0][k]).abs() <= TOL);
+        }
+        assert!((big[1][row] - small[1][0]).abs() <= TOL);
+    }
+}
+
+#[test]
+fn native_gru_step_matches_kernel_reference() {
+    let rt = Runtime::native_default();
+    let mut store = rt.load_store("aip_warehouse").unwrap();
+    let mut rng = Pcg32::seeded(11);
+    let h: Vec<f32> = (0..64).map(|_| rng.f32() - 0.5).collect();
+    let d: Vec<f32> = (0..24).map(|_| rng.f32()).collect();
+    let outs = rt
+        .call(
+            "aip_warehouse_step_b1",
+            &mut store,
+            &[DataArg::F32(&h), DataArg::F32(&d)],
+        )
+        .unwrap();
+    // Scalar GRU reference (z|r|n fused gate layout): gx = x@w_x + b,
+    // gh = h@w_h, and the candidate gate mixes r into the recurrent half.
+    let w_x = store.get("w_x").unwrap();
+    let w_h = store.get("w_h").unwrap();
+    let b_g = store.get("b_g").unwrap();
+    let gx = |col: usize| -> f32 {
+        let mut acc = b_g[col];
+        for (kk, &xv) in d.iter().enumerate() {
+            acc += xv * w_x[kk * 192 + col];
+        }
+        acc
+    };
+    let gh = |col: usize| -> f32 {
+        let mut acc = 0.0f32;
+        for (kk, &hv) in h.iter().enumerate() {
+            acc += hv * w_h[kk * 192 + col];
+        }
+        acc
+    };
+    let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+    for j in 0..64 {
+        let z = sig(gx(j) + gh(j));
+        let r = sig(gx(64 + j) + gh(64 + j));
+        let n = (gx(128 + j) + r * gh(128 + j)).tanh();
+        let want = (1.0 - z) * n + z * h[j];
+        assert!((outs[1][j] - want).abs() <= TOL, "h'[{j}]: {} vs {want}", outs[1][j]);
+    }
+    assert!(outs[0].iter().all(|&p| (0.0..=1.0).contains(&p)), "probs in [0,1]");
+}
+
+#[test]
+fn native_fused_update_equals_minibatch_loop() {
+    // Same data, same permutation: one fused call must produce bitwise the
+    // same parameters as the explicit epochs x minibatches loop.
+    let geom = SynthGeometry {
+        rollout_b: 4,
+        rollout_t: 16,
+        ppo_epochs: 2,
+        ppo_minibatch: 16,
+        ..SynthGeometry::default()
+    };
+    let n = 64usize;
+    let cfg = PpoConfig {
+        num_envs: 4,
+        rollout_len: 16,
+        epochs: 2,
+        minibatch: 16,
+        ..PpoConfig::default()
+    };
+    let mut rng = Pcg32::seeded(3);
+    let obs: Vec<f32> = (0..n * 42).map(|_| rng.f32() - 0.5).collect();
+    let actions: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+    let adv: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let ret: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let logp: Vec<f32> = vec![(0.5f32).ln(); n];
+    let mut perm: Vec<i32> = Vec::new();
+    let mut order: Vec<usize> = (0..n).collect();
+    for _ in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        perm.extend(order.iter().map(|&k| k as i32));
+    }
+
+    let rt1 = Rc::new(Runtime::native(&geom));
+    let mut fused = Policy::new(rt1, "policy_traffic", 4).unwrap();
+    fused.reinit(5).unwrap();
+    let rt2 = Rc::new(Runtime::native(&geom));
+    let mut looped = Policy::new(rt2, "policy_traffic", 4).unwrap();
+    looped.reinit(5).unwrap();
+    assert_eq!(fused.store.get("w1").unwrap(), looped.store.get("w1").unwrap());
+
+    fused
+        .update_fused(&cfg, &perm, &obs, &actions, &adv, &ret, &logp)
+        .unwrap();
+
+    let mb = cfg.minibatch;
+    let mut mb_obs = vec![0.0f32; mb * 42];
+    let mut mb_act = vec![0i32; mb];
+    let mut mb_adv = vec![0.0f32; mb];
+    let mut mb_ret = vec![0.0f32; mb];
+    let mut mb_lp = vec![0.0f32; mb];
+    for chunk in perm.chunks_exact(mb) {
+        for (row, &src) in chunk.iter().enumerate() {
+            let s = src as usize;
+            mb_obs[row * 42..(row + 1) * 42].copy_from_slice(&obs[s * 42..(s + 1) * 42]);
+            mb_act[row] = actions[s];
+            mb_adv[row] = adv[s];
+            mb_ret[row] = ret[s];
+            mb_lp[row] = logp[s];
+        }
+        looped
+            .update_minibatch(&cfg, &mb_obs, &mb_act, &mb_adv, &mb_ret, &mb_lp)
+            .unwrap();
+    }
+
+    for name in ["w1", "b1", "w2", "b2", "w_pi", "b_pi", "w_v", "b_v", "adam_t"] {
+        assert_eq!(
+            fused.store.get(name).unwrap(),
+            looped.store.get(name).unwrap(),
+            "tensor {name} must match bitwise"
+        );
+    }
+}
+
+/// Deterministic 2-armed bandit in the traffic observation geometry.
+struct Bandit {
+    rng: Pcg32,
+    t: usize,
+}
+
+impl Environment for Bandit {
+    fn obs_dim(&self) -> usize {
+        42
+    }
+    fn num_actions(&self) -> usize {
+        2
+    }
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::seeded(seed);
+        self.t = 0;
+    }
+    fn observe(&self, out: &mut [f32]) {
+        out.fill(0.0);
+        out[0] = 1.0;
+    }
+    fn step(&mut self, action: usize) -> Step {
+        self.t += 1;
+        let p = if action == 1 { 0.8 } else { 0.2 };
+        let reward = if self.rng.bernoulli(p) { 1.0 } else { 0.0 };
+        Step { reward, done: self.t >= 32 }
+    }
+}
+
+fn run_native_ppo(seed: u64, iters: usize) -> (Vec<f32>, f64) {
+    let rt = Rc::new(Runtime::native_default());
+    let mut policy = Policy::new(rt, "policy_traffic", 16).unwrap();
+    policy.reinit(seed).unwrap();
+    let cfg = PpoConfig { lr: 1e-3, ..PpoConfig::default() };
+    let mut trainer = PpoTrainer::new(&cfg, 42, seed);
+    let mut env =
+        GsVecEnv::new((0..16).map(|_| Bandit { rng: Pcg32::seeded(0), t: 0 }).collect());
+    env.reset_all(seed);
+    let mut curve = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let stats = trainer.train_iteration(&mut env, &mut policy).unwrap();
+        curve.push(stats.rollout_reward);
+    }
+    (curve, policy.store.param_norm())
+}
+
+#[test]
+fn native_ppo_runs_are_bitwise_deterministic() {
+    let (curve_a, norm_a) = run_native_ppo(123, 3);
+    let (curve_b, norm_b) = run_native_ppo(123, 3);
+    assert_eq!(curve_a, curve_b, "same seed must give identical reward curves");
+    assert_eq!(norm_a.to_bits(), norm_b.to_bits(), "parameters must match bitwise");
+    let (curve_c, _) = run_native_ppo(124, 3);
+    assert_ne!(curve_a, curve_c, "different seeds must differ");
+}
+
+#[test]
+fn native_backend_reports_kind_and_geometry() {
+    let rt = Runtime::native_default();
+    assert_eq!(rt.backend_kind(), "native");
+    assert_eq!(rt.geom("traffic_obs").unwrap(), 42);
+    assert_eq!(rt.geom("gru_seq_t").unwrap(), 32);
+    assert_eq!(rt.call_count(), 0);
+    let mut store = rt.load_store("aip_traffic").unwrap();
+    let d = vec![0.5f32; 16 * 40];
+    rt.call("aip_traffic_fwd_b16", &mut store, &[DataArg::F32(&d)]).unwrap();
+    assert_eq!(rt.call_count(), 1);
+}

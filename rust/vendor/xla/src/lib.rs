@@ -175,8 +175,18 @@ pub struct PjRtBuffer {
 }
 
 impl PjRtBuffer {
+    /// Borrowing device→host transfer. Clones the full payload — kept for
+    /// API parity with the real binding, but the runtime's output path
+    /// uses [`PjRtBuffer::into_literal`] instead, which moves the payload
+    /// and keeps `Runtime::call_into` single-copy end to end.
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Ok(self.literal.clone())
+    }
+
+    /// Consuming device→host transfer: moves the payload out of the
+    /// (host-memory) "device" buffer without copying the bytes.
+    pub fn into_literal(self) -> Result<Literal> {
+        Ok(self.literal)
     }
 }
 
@@ -269,5 +279,14 @@ mod tests {
             .unwrap();
         let t = Literal::tuple(vec![a.clone(), a]);
         assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn into_literal_moves_payload() {
+        let client = PjRtClient::cpu().unwrap();
+        let xs = [1.5f32, -2.0];
+        let buf = client.buffer_from_host_buffer(&xs, &[2], None).unwrap();
+        let lit = buf.into_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
     }
 }
