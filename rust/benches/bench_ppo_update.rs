@@ -1,0 +1,223 @@
+//! Training-phase throughput of the data-parallel native engine:
+//! `nn_workers × minibatch` sweep over the fused whole-phase PPO update,
+//! the FNN BCE step and the GRU BPTT step — the NN-training half of the
+//! loop, tracked alongside the forward half (`bench_nn_forward`) and the
+//! sim half (`bench_parallel_scaling`).
+//!
+//! Run: `cargo bench --bench bench_ppo_update`
+//! Emits a table to stdout and a JSON record per cell to
+//! `results/bench_ppo_update.json`. Acceptance target: ≥ 2× fused-PPO
+//! throughput at `nn_workers = 4`, minibatch ≥ 512 vs `nn_workers = 1`.
+
+use ials::bench_harness::{Bench, Table};
+use ials::config::PpoConfig;
+use ials::nn::ParamStore;
+use ials::rl::Policy;
+use ials::runtime::{DataArg, Runtime, SynthGeometry};
+use ials::util::Pcg32;
+use std::io::Write;
+use std::rc::Rc;
+
+const WORKER_SWEEP: [usize; 3] = [1, 2, 4];
+const MB_SWEEP: [usize; 3] = [128, 512, 1024];
+
+struct Cell {
+    op: &'static str,
+    minibatch: usize,
+    nn_workers: usize,
+    rows_per_sec: f64,
+    ms_per_update: f64,
+    speedup_vs_serial: f64,
+}
+
+fn push_cell(
+    cells: &mut Vec<Cell>,
+    op: &'static str,
+    minibatch: usize,
+    nn_workers: usize,
+    rows_per_sec: f64,
+    ms_per_update: f64,
+) {
+    let serial = cells
+        .iter()
+        .find(|c| c.op == op && c.minibatch == minibatch && c.nn_workers == 1)
+        .map(|c| c.rows_per_sec)
+        .unwrap_or(rows_per_sec);
+    cells.push(Cell {
+        op,
+        minibatch,
+        nn_workers,
+        rows_per_sec,
+        ms_per_update,
+        speedup_vs_serial: rows_per_sec / serial.max(1e-12),
+    });
+}
+
+fn runtime(geom: &SynthGeometry, workers: usize) -> Rc<Runtime> {
+    Rc::new(if workers == 1 {
+        Runtime::native(geom)
+    } else {
+        Runtime::native_parallel(geom, workers)
+    })
+}
+
+/// Fused whole-phase PPO update: 2 epochs over `n = 2 * mb` rows (4
+/// minibatch updates per call), rows/sec counts minibatch rows processed.
+fn bench_ppo_fused(mb: usize, workers: usize, cells: &mut Vec<Cell>) {
+    let geom = SynthGeometry {
+        rollout_b: 8,
+        rollout_t: mb / 4,
+        ppo_epochs: 2,
+        ppo_minibatch: mb,
+        ..SynthGeometry::default()
+    };
+    let rt = runtime(&geom, workers);
+    let n = 8 * (mb / 4);
+    let cfg = PpoConfig {
+        num_envs: 8,
+        rollout_len: mb / 4,
+        epochs: 2,
+        minibatch: mb,
+        ..PpoConfig::default()
+    };
+    let mut policy = Policy::new(rt, "policy_traffic", 8).expect("policy");
+    let mut rng = Pcg32::seeded(3);
+    let obs: Vec<f32> = (0..n * 42).map(|_| rng.f32() - 0.5).collect();
+    let actions: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+    let adv: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let ret: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+    let logp = vec![(0.5f32).ln(); n];
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut perm: Vec<i32> = Vec::with_capacity(2 * n);
+    for _ in 0..2 {
+        rng.shuffle(&mut order);
+        perm.extend(order.iter().map(|&k| k as i32));
+    }
+    let rows_per_call = 2 * n; // epochs × n minibatch rows per fused call
+    let label = format!("ppo_fused/mb{mb}/w{workers}");
+    let r = Bench::new(&label).warmup(2).reps(10).run(rows_per_call as f64, || {
+        policy
+            .update_fused(&cfg, &perm, &obs, &actions, &adv, &ret, &logp)
+            .expect("fused update");
+    });
+    let updates_per_call = (rows_per_call / mb) as f64;
+    push_cell(
+        cells,
+        "ppo_fused",
+        mb,
+        workers,
+        r.throughput(),
+        r.summary.mean * 1e3 / updates_per_call,
+    );
+}
+
+/// One FNN BCE Adam step at minibatch `mb` (traffic AIP geometry).
+fn bench_fnn_bce(mb: usize, workers: usize, cells: &mut Vec<Cell>) {
+    let geom = SynthGeometry { aip_batch: mb, ..SynthGeometry::default() };
+    let rt = runtime(&geom, workers);
+    let mut store: ParamStore = rt.load_store("aip_traffic").expect("store");
+    let mut rng = Pcg32::seeded(5);
+    let lr = [1e-3f32];
+    let d: Vec<f32> = (0..mb * 40).map(|_| rng.f32()).collect();
+    let y: Vec<f32> = (0..mb * 4).map(|_| f32::from(rng.bernoulli(0.2))).collect();
+    let mut loss = [0.0f32; 1];
+    let label = format!("fnn_bce/mb{mb}/w{workers}");
+    let r = Bench::new(&label).warmup(2).reps(20).run(mb as f64, || {
+        rt.call_into(
+            "aip_traffic_update",
+            &mut store,
+            &[DataArg::F32(&lr), DataArg::F32(&d), DataArg::F32(&y)],
+            &mut [loss.as_mut_slice()],
+        )
+        .expect("fnn update");
+    });
+    push_cell(cells, "fnn_bce", mb, workers, r.throughput(), r.summary.mean * 1e3);
+}
+
+/// One GRU BPTT Adam step over `seq_b = mb / 32` windows of length 32
+/// (warehouse AIP geometry); rows/sec counts sequence steps (B × T).
+fn bench_gru_bptt(mb: usize, workers: usize, cells: &mut Vec<Cell>) {
+    let (seq_b, seq_t) = (mb / 32, 32usize);
+    let geom = SynthGeometry { gru_seq_b: seq_b, gru_seq_t: seq_t, ..SynthGeometry::default() };
+    let rt = runtime(&geom, workers);
+    let mut store: ParamStore = rt.load_store("aip_warehouse").expect("store");
+    let mut rng = Pcg32::seeded(7);
+    let lr = [1e-3f32];
+    let seqs: Vec<f32> = (0..seq_b * seq_t * 24).map(|_| rng.f32()).collect();
+    let y: Vec<f32> = (0..seq_b * seq_t * 12).map(|_| f32::from(rng.bernoulli(0.15))).collect();
+    let mut loss = [0.0f32; 1];
+    let label = format!("gru_bptt/mb{mb}/w{workers}");
+    let r = Bench::new(&label).warmup(2).reps(10).run((seq_b * seq_t) as f64, || {
+        rt.call_into(
+            "aip_warehouse_update",
+            &mut store,
+            &[DataArg::F32(&lr), DataArg::F32(&seqs), DataArg::F32(&y)],
+            &mut [loss.as_mut_slice()],
+        )
+        .expect("gru update");
+    });
+    push_cell(cells, "gru_bptt", mb, workers, r.throughput(), r.summary.mean * 1e3);
+}
+
+fn main() {
+    let mut cells: Vec<Cell> = Vec::new();
+    for &mb in &MB_SWEEP {
+        for &w in &WORKER_SWEEP {
+            bench_ppo_fused(mb, w, &mut cells);
+            bench_fnn_bce(mb, w, &mut cells);
+            bench_gru_bptt(mb, w, &mut cells);
+        }
+    }
+
+    let mut table = Table::new(
+        "native NN training throughput (rows/sec; fused PPO + FNN BCE + GRU BPTT)",
+        &["op", "minibatch", "nn_workers", "rows/s", "ms/update", "speedup vs w=1"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.op.into(),
+            c.minibatch.to_string(),
+            c.nn_workers.to_string(),
+            format!("{:.0}", c.rows_per_sec),
+            format!("{:.2}", c.ms_per_update),
+            format!("{:.2}x", c.speedup_vs_serial),
+        ]);
+    }
+    table.print();
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"op\": \"{}\", \"minibatch\": {}, \"nn_workers\": {}, \
+             \"rows_per_sec\": {:.1}, \"ms_per_update\": {:.3}, \
+             \"speedup_vs_serial\": {:.3}, \"backend\": \"native\"}}{}\n",
+            c.op,
+            c.minibatch,
+            c.nn_workers,
+            c.rows_per_sec,
+            c.ms_per_update,
+            c.speedup_vs_serial,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("]\n");
+    println!("{json}");
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::File::create("results/bench_ppo_update.json"))
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        eprintln!("could not write results/bench_ppo_update.json: {e}");
+    }
+
+    // Headline for the acceptance criterion.
+    if let Some(c) = cells
+        .iter()
+        .find(|c| c.op == "ppo_fused" && c.minibatch == 512 && c.nn_workers == 4)
+    {
+        println!(
+            "headline: ppo_fused mb=512 nn_workers=4 -> {:.2}x vs serial ({:.0} rows/s)",
+            c.speedup_vs_serial, c.rows_per_sec
+        );
+    }
+}

@@ -112,11 +112,21 @@ impl BackendKind {
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
     pub backend: BackendKind,
+    /// Worker threads for the native engine's data-parallel NN work
+    /// (batched forwards + PPO/AIP training) — same semantics as `[ppo]
+    /// num_workers`: `1` = serial execution (the default), `0` = one worker
+    /// per available core, `n > 1` = that many workers from the run's
+    /// shared compute pool. At a fixed seed, results are bitwise identical
+    /// across `nn_workers` values and machines: batch rows partition over a
+    /// fixed slice grid and per-slice gradient partials reduce in fixed
+    /// slice order, so the knob only changes wall-clock. (Ignored by the
+    /// PJRT backend, which owns its own threading.)
+    pub nn_workers: usize,
 }
 
 impl Default for RuntimeConfig {
     fn default() -> Self {
-        RuntimeConfig { backend: BackendKind::Auto }
+        RuntimeConfig { backend: BackendKind::Auto, nn_workers: 1 }
     }
 }
 
@@ -406,6 +416,8 @@ impl ExperimentConfig {
         a.use_full_alsh = doc.bool_or("aip", "use_full_alsh", a.use_full_alsh)?;
 
         cfg.runtime.backend = BackendKind::parse(&doc.str_or("runtime", "backend", "auto")?)?;
+        cfg.runtime.nn_workers =
+            doc.int_or("runtime", "nn_workers", cfg.runtime.nn_workers as i64)? as usize;
 
         cfg.validate()?;
         Ok(cfg)
@@ -425,6 +437,19 @@ impl ExperimentConfig {
         );
         anyhow::ensure!((0.0..=1.0).contains(&p.gamma), "gamma out of range");
         anyhow::ensure!((0.0..=1.0).contains(&p.lam), "lambda out of range");
+        // Worker knobs parse through i64 → usize, so a negative value wraps
+        // to a huge count; bound both so a typo fails here instead of
+        // trying to spawn 2^64 pool threads.
+        anyhow::ensure!(
+            p.num_workers <= 1024,
+            "num_workers must be in 0..=1024 (got {})",
+            p.num_workers
+        );
+        anyhow::ensure!(
+            self.runtime.nn_workers <= 1024,
+            "nn_workers must be in 0..=1024 (got {})",
+            self.runtime.nn_workers
+        );
         let t = &self.traffic;
         anyhow::ensure!(t.grid >= 3, "traffic grid must be >= 3 (needs interior)");
         anyhow::ensure!(t.lane_len >= 4, "lane_len must be >= 4");
@@ -494,6 +519,7 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("aip", "fixed_p"),
     ("aip", "use_full_alsh"),
     ("runtime", "backend"),
+    ("runtime", "nn_workers"),
 ];
 
 fn check_known_keys(doc: &Document) -> Result<()> {
@@ -565,6 +591,20 @@ mod tests {
         // 0 = auto (resolved to the core count at env construction).
         let auto = ExperimentConfig::from_toml("[ppo]\nnum_workers = 0").unwrap();
         assert_eq!(auto.ppo.num_workers, 0);
+    }
+
+    #[test]
+    fn nn_workers_knob_parses_and_defaults() {
+        assert_eq!(ExperimentConfig::default().runtime.nn_workers, 1, "serial by default");
+        let cfg = ExperimentConfig::from_toml("[runtime]\nnn_workers = 4").unwrap();
+        assert_eq!(cfg.runtime.nn_workers, 4);
+        // 0 = auto (one NN worker per core, resolved via WorkerPlan).
+        let auto = ExperimentConfig::from_toml("[runtime]\nnn_workers = 0").unwrap();
+        assert_eq!(auto.runtime.nn_workers, 0);
+        // Negative values would wrap through `as usize`; validation stops
+        // them before anything tries to size a pool.
+        assert!(ExperimentConfig::from_toml("[runtime]\nnn_workers = -1").is_err());
+        assert!(ExperimentConfig::from_toml("[ppo]\nnum_workers = -2").is_err());
     }
 
     #[test]

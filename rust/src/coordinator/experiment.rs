@@ -11,7 +11,7 @@ use crate::collect::{
 };
 use crate::config::{DomainKind, ExperimentConfig, SimulatorKind};
 use crate::core::{
-    effective_workers, shard_ranges, Environment, FrameStackVec, GsVecEnv, ShardedVecEnv, VecEnv,
+    shard_ranges, Environment, FrameStackVec, GsVecEnv, ShardedVecEnv, VecEnv, WorkerPlan,
 };
 use crate::ials::IalsVecEnv;
 use crate::influence::{
@@ -31,6 +31,15 @@ use std::rc::Rc;
 
 pub const FIGURES: &[&str] =
     &["fig3", "fig5", "fig6", "fig8", "fig10", "fig11", "fig12"];
+
+/// The run's resolved worker counts — the single source of truth for both
+/// worker knobs (`[ppo] num_workers` sim sharding + dataset collection,
+/// `[runtime] nn_workers` native NN slices). Everything below routes
+/// through this helper so `0` means the same core count everywhere and the
+/// shared compute pool is sized once for both halves.
+pub fn worker_plan(cfg: &ExperimentConfig) -> WorkerPlan {
+    WorkerPlan::resolve(cfg.ppo.num_workers, cfg.runtime.nn_workers)
+}
 
 /// Policy model name for a config (must exist in the manifest).
 pub fn policy_model_name(cfg: &ExperimentConfig) -> &'static str {
@@ -157,7 +166,7 @@ fn collect_from_gs(
 ) -> InfluenceDataset {
     // Algorithm 1 fans out over scoped workers (num_workers = 1 is exactly
     // the serial collector; see `collect_dataset_sharded`).
-    let w = effective_workers(cfg.ppo.num_workers);
+    let w = worker_plan(cfg).sim;
     match cfg.domain {
         DomainKind::Traffic => collect_dataset_sharded(
             || TrafficGlobalEnv::new(&cfg.traffic),
@@ -203,7 +212,7 @@ pub fn make_train_env(
     predictor: Option<Box<dyn InfluencePredictor>>,
 ) -> Box<dyn VecEnv> {
     let b = cfg.ppo.num_envs;
-    let w = effective_workers(cfg.ppo.num_workers).min(b);
+    let w = worker_plan(cfg).sim.min(b);
     let stack = match cfg.domain {
         DomainKind::Traffic => 1,
         DomainKind::Warehouse => cfg.warehouse.frame_stack,

@@ -31,13 +31,15 @@ pub fn train_with_eval(
     clock_offset: f64,
 ) -> Result<TrainOutcome> {
     let mut trainer = PpoTrainer::new(&cfg.ppo, train_env.obs_dim(), seed);
-    let workers = crate::core::effective_workers(cfg.ppo.num_workers).min(cfg.ppo.num_envs);
-    if workers > 1 {
+    let plan = super::experiment::worker_plan(cfg);
+    let workers = plan.sim.min(cfg.ppo.num_envs);
+    if workers > 1 || plan.nn > 1 {
         log_info!(
-            "[{}] sharded env stepping: {} envs over {workers} persistent workers \
-             (NN forwards stay batched on the coordinator)",
+            "[{}] parallel plan: {} envs over {workers} sim workers, NN slices over {} \
+             workers (one shared pool; bitwise identical to serial at this seed)",
             cfg.name,
-            cfg.ppo.num_envs
+            cfg.ppo.num_envs,
+            plan.nn
         );
     }
     let per_iter = trainer.steps_per_iteration();

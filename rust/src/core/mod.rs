@@ -15,7 +15,9 @@ pub mod shard;
 pub mod vecenv;
 
 pub use history::FrameStacker;
-pub use shard::{effective_workers, shard_ranges, ShardExec, ShardPool, ShardedVecEnv};
+pub use shard::{
+    effective_workers, shard_ranges, ComputePool, ShardExec, ShardPool, ShardedVecEnv, WorkerPlan,
+};
 pub use vecenv::{FrameStackVec, GsVecEnv, VecEnv};
 
 /// Result of one environment step.

@@ -1,31 +1,45 @@
-//! Sharded multi-threaded execution of vectorized environments.
+//! Sharded multi-threaded execution: a reusable compute pool shared by
+//! vectorized-environment stepping (the sim half) and the native NN
+//! engine's data-parallel forwards/updates (the NN half).
 //!
-//! The paper's whole value proposition is simulation speed, and the repo's
-//! hot loop is `VecEnv::step_all` over `B` environments. This module makes
-//! that loop scale with cores while preserving two invariants:
+//! The paper's whole value proposition is throughput, and the repo's hot
+//! loop alternates two kinds of work: `VecEnv::step_all` over `B`
+//! environments and batched NN calls (policy/AIP forwards, PPO/AIP
+//! training). Both halves scale with cores while preserving two invariants:
 //!
-//! 1. **One batched NN forward per step.** PJRT calls (policy + AIP) stay on
-//!    the coordinator thread — `Runtime` is `Rc`/`RefCell`-based and must
-//!    not cross threads. Only pure-Rust simulator stepping is parallelized.
+//! 1. **One batched NN call per step.** NN work is dispatched by the
+//!    coordinator thread — `Runtime` is `Rc`/`RefCell`-based and its *ops*
+//!    fan row-slices out over the pool, but the call structure (one batched
+//!    call per step / update) is unchanged.
 //! 2. **Bitwise determinism.** Each shard owns a contiguous range of env
-//!    indices; every env is seeded from its *global* index and owns its RNG
-//!    stream, so a sharded run produces outputs identical to a serial run
-//!    at the same seed, for any worker count.
+//!    indices (seeded from *global* indices), and NN work partitions over a
+//!    grid that is independent of the worker count, so any
+//!    `num_workers` / `nn_workers` produces outputs identical to serial.
 //!
 //! Building blocks:
 //!
-//! * [`ShardPool`] — a persistent worker pool (spawned once, reused across
-//!   all rollout iterations; no per-step thread spawn) where each worker
-//!   owns one shard's state.
+//! * [`ComputePool`] — a persistent worker pool (spawned once, reused for
+//!   every dispatch; no per-step thread spawn and **no per-dispatch heap
+//!   allocation**: jobs are broadcast through a generation counter +
+//!   condvars, not boxed closures on a channel). One pool serves the whole
+//!   training run — sim shards and NN slices share it, so the process never
+//!   oversubscribes cores ([`ComputePool::shared`]).
+//! * [`ShardPool`] — per-shard owned state (`S` = a vec-env shard) executed
+//!   over a [`ComputePool`].
 //! * [`ShardExec`] — serial-or-pooled executor so callers write one code
 //!   path and `num_workers = 1` stays exactly the old serial loop.
 //! * [`ShardedVecEnv`] — a [`VecEnv`] adapter that partitions any batch of
 //!   per-shard vec-envs and runs `step_all`/`observe_all`/`reset_all`
 //!   concurrently, each shard writing directly into its disjoint slice of
 //!   the shared env-major buffers (no gather copies).
+//! * [`WorkerPlan`] — the single resolution point for the `[ppo]
+//!   num_workers` and `[runtime] nn_workers` knobs (`0` = one per core for
+//!   both, via [`effective_workers`]), so the two halves always agree on
+//!   the core count and the shared pool size.
 
 use super::VecEnv;
-use std::sync::mpsc;
+use std::cell::UnsafeCell;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 /// Resolve a configured worker count: `0` means "one per available core".
@@ -34,6 +48,43 @@ pub fn effective_workers(requested: usize) -> usize {
         thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         requested
+    }
+}
+
+/// Resolved worker counts for one training run. Both knobs (`[ppo]
+/// num_workers` for the sim half, `[runtime] nn_workers` for the NN half)
+/// funnel through here so `0` means the same core count everywhere and the
+/// shared pool is sized once for the larger of the two (one pool per run —
+/// the halves never run concurrently, so this never oversubscribes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerPlan {
+    /// Sharded env stepping + dataset collection workers.
+    pub sim: usize,
+    /// NN row-slice workers (native backend forwards + training).
+    pub nn: usize,
+}
+
+impl WorkerPlan {
+    pub fn resolve(sim_requested: usize, nn_requested: usize) -> WorkerPlan {
+        WorkerPlan {
+            sim: effective_workers(sim_requested),
+            nn: effective_workers(nn_requested),
+        }
+    }
+
+    /// Threads the shared pool needs to serve both halves.
+    pub fn pool_size(&self) -> usize {
+        self.sim.max(self.nn)
+    }
+
+    /// The run's shared pool, sized for both halves (`None` when everything
+    /// is serial).
+    pub fn shared_pool(&self) -> Option<Arc<ComputePool>> {
+        if self.pool_size() > 1 {
+            Some(ComputePool::shared(self.pool_size()))
+        } else {
+            None
+        }
     }
 }
 
@@ -118,112 +169,289 @@ impl<T> SendSliceRef<T> {
     }
 }
 
-type Job<S> = Box<dyn FnOnce(&mut S) + Send + 'static>;
+// ---------------------------------------------------------------------------
+// ComputePool: allocation-free broadcast worker pool
+// ---------------------------------------------------------------------------
 
-/// Erase a job's borrow lifetime so it can cross the worker channel.
-///
-/// # Safety
-/// The caller must not return (or otherwise invalidate the borrows captured
-/// by `job`) until the job has finished running — [`ShardPool::run_all`]
-/// guarantees this by blocking on per-worker acknowledgements.
-unsafe fn erase_job_lifetime<'a, S>(
-    job: Box<dyn FnOnce(&mut S) + Send + 'a>,
-) -> Box<dyn FnOnce(&mut S) + Send + 'static> {
-    std::mem::transmute(job)
+/// Type-erased pointer to the caller's task function. Only alive for the
+/// duration of one [`ComputePool::run_tasks`] call, which blocks until all
+/// workers acknowledge — the classic scoped-pool lifetime argument, but
+/// through a shared slot instead of boxed channel messages so a dispatch
+/// performs **zero heap allocations**.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointee is `Sync` (callable through `&` from any thread) and
+// `run_tasks` keeps it alive until every worker has acknowledged.
+unsafe impl Send for TaskRef {}
+
+impl TaskRef {
+    /// Erase the borrow lifetime so the pointer can sit in the shared slot.
+    ///
+    /// # Safety
+    /// The caller must not return (or invalidate borrows captured by `f`)
+    /// until every worker has acknowledged the dispatch.
+    unsafe fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskRef {
+        let ptr: *const (dyn Fn(usize) + Sync + 'a) = f;
+        TaskRef(std::mem::transmute::<
+            *const (dyn Fn(usize) + Sync + 'a),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(ptr))
+    }
 }
 
-/// A persistent pool of worker threads, each owning one shard state `S`.
-/// Spawned once; every [`ShardPool::run_all`] broadcasts a job and blocks
-/// until all workers acknowledge, so borrowed captures stay valid.
-pub struct ShardPool<S: Send + 'static> {
-    txs: Vec<mpsc::Sender<Job<S>>>,
-    done_rx: mpsc::Receiver<bool>,
+struct PoolCtl {
+    /// Bumped per dispatch; workers run each generation exactly once.
+    generation: u64,
+    job: Option<TaskRef>,
+    n_tasks: usize,
+    /// Workers `w < stride` participate; task `i` runs on worker
+    /// `i % stride` (a static assignment — no work stealing, no atomics).
+    stride: usize,
+    /// Workers that have not yet acknowledged the current generation.
+    remaining: usize,
+    failed: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    ctl: Mutex<PoolCtl>,
+    /// Workers wait here for a new generation.
+    work_cv: Condvar,
+    /// The dispatching thread waits here for all acknowledgements.
+    done_cv: Condvar,
+    workers: usize,
+}
+
+/// A persistent pool of worker threads executing broadcast task sets.
+///
+/// `run_tasks(n, limit, f)` runs `f(0), …, f(n-1)` across the workers and
+/// blocks until all are done. Properties the rest of the repo leans on:
+///
+/// * **No per-dispatch allocation** — the job crosses threads as a borrowed
+///   pointer through a mutex-guarded slot (generation counter + condvars),
+///   never as a boxed closure on a channel. The training-path allocation
+///   audit (`rust/tests/native_alloc.rs`) depends on this.
+/// * **Deterministic work product** — the task → worker assignment is
+///   irrelevant to callers: every task writes disjoint output, so results
+///   are identical for any pool size or `limit`.
+/// * **Reentrancy** — concurrent `run_tasks` calls from different threads
+///   serialize on an internal dispatch lock. Calling `run_tasks` from
+///   *inside* a task would deadlock; the repo's phases (sim stepping vs NN
+///   slices) never nest.
+pub struct ComputePool {
+    shared: Arc<PoolShared>,
+    /// Serializes concurrent dispatchers (the pool is process-shared).
+    dispatch: Mutex<()>,
     handles: Vec<thread::JoinHandle<()>>,
 }
 
-fn worker_loop<S>(mut state: S, rx: mpsc::Receiver<Job<S>>, done: mpsc::Sender<bool>) {
-    while let Ok(job) = rx.recv() {
-        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&mut state)))
-            .is_ok();
-        let still_listening = done.send(ok).is_ok();
-        if !ok || !still_listening {
-            break;
-        }
-    }
-}
+/// The process-wide shared pool (one pool per training run — sim shards and
+/// NN slices never run concurrently, so sharing keeps active threads ≤ the
+/// pool size). If a *bigger* pool is later requested, the registry swaps to
+/// it; holders of the old pool keep it alive until they drop, but its
+/// threads sit parked in `Condvar::wait` — idle threads, not running ones —
+/// so size the pool once per run (`WorkerPlan::shared_pool`) to avoid even
+/// that.
+static SHARED_POOL: Mutex<Option<Arc<ComputePool>>> = Mutex::new(None);
 
-impl<S: Send + 'static> ShardPool<S> {
-    pub fn new(states: Vec<S>) -> ShardPool<S> {
-        assert!(!states.is_empty(), "shard pool needs at least one shard");
-        let (done_tx, done_rx) = mpsc::channel();
-        let mut txs = Vec::with_capacity(states.len());
-        let mut handles = Vec::with_capacity(states.len());
-        for (i, state) in states.into_iter().enumerate() {
-            let (tx, rx) = mpsc::channel::<Job<S>>();
-            let done = done_tx.clone();
-            let handle = thread::Builder::new()
-                .name(format!("vecenv-shard-{i}"))
-                .spawn(move || worker_loop(state, rx, done))
-                .expect("spawning shard worker thread");
-            txs.push(tx);
-            handles.push(handle);
-        }
-        ShardPool { txs, done_rx, handles }
-    }
-
-    pub fn num_shards(&self) -> usize {
-        self.txs.len()
-    }
-
-    /// Run `f(shard_index, &mut shard_state)` on every worker concurrently
-    /// and block until all have finished. Panics if any worker's job
-    /// panicked or any worker is gone — but only after draining every
-    /// in-flight acknowledgement, so no worker is still touching
-    /// caller-borrowed data when this unwinds.
-    pub fn run_all(&self, f: &(dyn Fn(usize, &mut S) + Send + Sync)) {
-        // Dispatch without panicking mid-loop: a send to a dead worker (one
-        // that exited after an earlier panic) just drops the job — it never
-        // runs — and is recorded as a failure for after the drain.
-        let mut dispatched = 0usize;
-        let mut all_sent = true;
-        for (i, tx) in self.txs.iter().enumerate() {
-            let job: Box<dyn FnOnce(&mut S) + Send + '_> = Box::new(move |s: &mut S| f(i, s));
-            // SAFETY: lifetime erasure only — both types are the same fat
-            // `Box<dyn ...>` apart from the lifetime bound (the classic
-            // scoped-pool trick). This call does not return until every
-            // dispatched job has been acknowledged below (or its worker has
-            // provably exited), so the borrow of `f` (and anything it
-            // captures) strictly outlives all use.
-            let job: Job<S> = unsafe { erase_job_lifetime(job) };
-            if tx.send(job).is_ok() {
-                dispatched += 1;
-            } else {
-                all_sent = false;
-            }
-        }
-        let mut ok = all_sent;
-        for _ in 0..dispatched {
-            match self.done_rx.recv() {
-                Ok(job_ok) => ok &= job_ok,
-                // All ack senders dropped: every worker has exited its loop,
-                // so nothing is still running — safe to stop draining.
-                Err(_) => {
-                    ok = false;
+fn pool_worker(shared: Arc<PoolShared>, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, n_tasks, stride, generation) = {
+            let mut ctl = shared.ctl.lock().unwrap();
+            loop {
+                if ctl.shutdown {
+                    return;
+                }
+                if ctl.generation != seen && ctl.job.is_some() {
                     break;
                 }
+                ctl = shared.work_cv.wait(ctl).unwrap();
             }
+            (ctl.job.unwrap(), ctl.n_tasks, ctl.stride, ctl.generation)
+        };
+        seen = generation;
+        if w >= stride {
+            // Not part of this dispatch: it was not counted in `remaining`,
+            // so skip without acknowledging (the coordinator only waits on
+            // the `stride` participating workers).
+            continue;
         }
-        assert!(ok, "a shard worker panicked or is gone");
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: `run_tasks` keeps the pointee alive until every
+            // participating worker (including this one) acknowledges below.
+            let f = unsafe { &*job.0 };
+            let mut i = w;
+            while i < n_tasks {
+                f(i);
+                i += stride;
+            }
+        }))
+        .is_ok();
+        let mut ctl = shared.ctl.lock().unwrap();
+        if !ok {
+            ctl.failed = true;
+        }
+        ctl.remaining -= 1;
+        if ctl.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
     }
 }
 
-impl<S: Send + 'static> Drop for ShardPool<S> {
+impl ComputePool {
+    pub fn new(workers: usize) -> ComputePool {
+        assert!(workers >= 1, "compute pool needs at least one worker");
+        let shared = Arc::new(PoolShared {
+            ctl: Mutex::new(PoolCtl {
+                generation: 0,
+                job: None,
+                n_tasks: 0,
+                stride: 1,
+                remaining: 0,
+                failed: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            workers,
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                thread::Builder::new()
+                    .name(format!("compute-pool-{w}"))
+                    .spawn(move || pool_worker(shared, w))
+                    .expect("spawning compute-pool worker thread")
+            })
+            .collect();
+        ComputePool { shared, dispatch: Mutex::new(()), handles }
+    }
+
+    /// The process-shared pool with at least `workers` threads. Reuses the
+    /// existing pool when it is big enough; otherwise replaces it (current
+    /// holders keep their `Arc` until they drop). Size the pool once per
+    /// run via [`WorkerPlan::shared_pool`] so both halves get one pool.
+    pub fn shared(workers: usize) -> Arc<ComputePool> {
+        let mut slot = SHARED_POOL.lock().unwrap();
+        if let Some(p) = slot.as_ref() {
+            if p.workers() >= workers {
+                return p.clone();
+            }
+        }
+        let p = Arc::new(ComputePool::new(workers));
+        *slot = Some(p.clone());
+        p
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Run `f(0), …, f(n_tasks - 1)` across at most `max_workers` workers
+    /// and block until all tasks complete. Task `i` runs on worker
+    /// `i % stride` (`stride = min(workers, n_tasks, max_workers)`), tasks
+    /// on one worker in increasing order; only the `stride` participating
+    /// workers are waited on. Panics (after every participant has
+    /// acknowledged, so no task still touches caller borrows) if any task
+    /// panicked.
+    pub fn run_tasks(&self, n_tasks: usize, max_workers: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let stride = self.workers().min(n_tasks).min(max_workers.max(1));
+        let failed = {
+            let _serialize = self.dispatch.lock().unwrap();
+            // SAFETY: this scope blocks until `remaining == 0`, i.e. every
+            // participating worker has finished with the pointer; `f` and
+            // its captures outlive that.
+            let job = unsafe { TaskRef::erase(f) };
+            let mut ctl = self.shared.ctl.lock().unwrap();
+            ctl.generation = ctl.generation.wrapping_add(1);
+            ctl.job = Some(job);
+            ctl.n_tasks = n_tasks;
+            ctl.stride = stride;
+            ctl.remaining = stride;
+            ctl.failed = false;
+            self.shared.work_cv.notify_all();
+            while ctl.remaining > 0 {
+                ctl = self.shared.done_cv.wait(ctl).unwrap();
+            }
+            ctl.job = None;
+            ctl.failed
+            // Both guards drop *before* the panic below, so a panicking
+            // task never poisons the process-shared dispatch/ctl mutexes.
+        };
+        assert!(!failed, "a compute-pool worker panicked");
+    }
+}
+
+impl Drop for ComputePool {
     fn drop(&mut self) {
-        // Closing the job channels ends each worker loop.
-        self.txs.clear();
+        {
+            let mut ctl = self.shared.ctl.lock().unwrap();
+            ctl.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
         for handle in self.handles.drain(..) {
             let _ = handle.join();
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardPool: per-shard owned state over a ComputePool
+// ---------------------------------------------------------------------------
+
+/// Interior-mutable shard slot. Exclusive access per index is guaranteed by
+/// the pool's dispatch protocol (each task index runs exactly once per
+/// dispatch and `run_tasks` blocks until all complete).
+struct ShardCell<S>(UnsafeCell<S>);
+
+// SAFETY: only one worker touches a given cell per dispatch (task i ↔ cell
+// i), and dispatches are serialized + barriered by the pool.
+unsafe impl<S: Send> Sync for ShardCell<S> {}
+
+/// Shard states executed over a (usually process-shared) [`ComputePool`].
+/// Replaces the old channel-based pool: states now live with the pool
+/// handle on the coordinator, workers borrow them per dispatch.
+pub struct ShardPool<S: Send + 'static> {
+    states: Vec<ShardCell<S>>,
+    pool: Arc<ComputePool>,
+}
+
+impl<S: Send + 'static> ShardPool<S> {
+    /// Build over the process-shared pool, growing it to at least one
+    /// worker per shard.
+    pub fn new(states: Vec<S>) -> ShardPool<S> {
+        assert!(!states.is_empty(), "shard pool needs at least one shard");
+        let pool = ComputePool::shared(states.len());
+        Self::with_pool(states, pool)
+    }
+
+    /// Build over an explicit pool (may be smaller or larger than the shard
+    /// count; tasks round-robin).
+    pub fn with_pool(states: Vec<S>, pool: Arc<ComputePool>) -> ShardPool<S> {
+        assert!(!states.is_empty(), "shard pool needs at least one shard");
+        ShardPool { states: states.into_iter().map(|s| ShardCell(UnsafeCell::new(s))).collect(), pool }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Run `f(shard_index, &mut shard_state)` for every shard concurrently
+    /// and block until all have finished.
+    pub fn run_all(&self, f: &(dyn Fn(usize, &mut S) + Send + Sync)) {
+        let states = &self.states;
+        let task = move |i: usize| {
+            // SAFETY: task i is dispatched exactly once and run_tasks blocks
+            // until completion, so this &mut is exclusive for the call.
+            let s = unsafe { &mut *states[i].0.get() };
+            f(i, s);
+        };
+        self.pool.run_tasks(states.len(), usize::MAX, &task);
     }
 }
 
@@ -284,8 +512,8 @@ impl<S: Send + 'static> ShardExec<S> {
         }
     }
 
-    /// Direct access to shard states — only possible in serial mode (pooled
-    /// states live on their worker threads).
+    /// Direct access to shard states — only possible in serial mode (the
+    /// pooled variant hands states out per dispatch).
     pub fn serial_shards_mut(&mut self) -> Option<&mut [S]> {
         match self {
             ShardExec::Serial(shards) => Some(shards),
@@ -313,7 +541,7 @@ pub struct ShardedVecEnv<V: VecEnv + Send + 'static> {
 }
 
 impl<V: VecEnv + Send + 'static> ShardedVecEnv<V> {
-    /// Parallel executor: one worker thread per shard.
+    /// Parallel executor over the shared compute pool.
     pub fn from_shards(shards: Vec<V>) -> ShardedVecEnv<V> {
         Self::build(shards, true)
     }
@@ -418,6 +646,48 @@ mod tests {
     }
 
     #[test]
+    fn compute_pool_runs_all_tasks_with_borrows() {
+        let pool = ComputePool::new(3);
+        let xs: Vec<u64> = (0..10).collect();
+        let mut out = vec![0u64; 10];
+        let out_ptr = SendSliceMut::new(&mut out);
+        let task = |i: usize| {
+            let dst = unsafe { out_ptr.range(i, 1) };
+            dst[0] = xs[i] * 2;
+        };
+        pool.run_tasks(10, usize::MAX, &task);
+        assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<u64>>());
+        // A worker limit below the pool size still runs every task.
+        out.fill(0);
+        pool.run_tasks(10, 2, &task);
+        assert_eq!(out, (0..10).map(|i| i * 2).collect::<Vec<u64>>());
+        // More tasks than workers round-robin.
+        let mut hits = vec![0u32; 100];
+        let hits_ptr = SendSliceMut::new(&mut hits);
+        pool.run_tasks(100, usize::MAX, &|i| {
+            let dst = unsafe { hits_ptr.range(i, 1) };
+            dst[0] += 1;
+        });
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn shared_pool_is_reused_and_grows() {
+        // Request a size no other test in this binary exceeds, so concurrent
+        // tests can only reuse (never replace) the registry pool while we
+        // compare identities.
+        let a = ComputePool::shared(32);
+        assert!(a.workers() >= 32);
+        let b = ComputePool::shared(2);
+        assert!(Arc::ptr_eq(&a, &b), "smaller request reuses the pool");
+        let c = ComputePool::shared(a.workers());
+        assert!(Arc::ptr_eq(&a, &c), "equal request reuses the pool");
+        // A private pool is independent of the registry.
+        let own = ComputePool::new(2);
+        assert_eq!(own.workers(), 2);
+    }
+
+    #[test]
     fn pool_runs_jobs_with_borrowed_state() {
         let pool = ShardPool::new(vec![0u64, 10, 20, 30]);
         let mut out = vec![0u64; 4];
@@ -430,6 +700,27 @@ mod tests {
             });
         }
         assert_eq!(out, vec![6, 16, 26, 36]);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize() {
+        let pool = ComputePool::shared(2);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let pool = pool.clone();
+                scope.spawn(move || {
+                    let mut out = vec![0usize; 16];
+                    let out_ptr = SendSliceMut::new(&mut out);
+                    for _ in 0..50 {
+                        pool.run_tasks(16, usize::MAX, &|i| {
+                            let dst = unsafe { out_ptr.range(i, 1) };
+                            dst[0] = i + t;
+                        });
+                    }
+                    assert_eq!(out, (0..16).map(|i| i + t).collect::<Vec<usize>>());
+                });
+            }
+        });
     }
 
     fn make_sharded(b: usize, w: usize, parallel: bool) -> ShardedVecEnv<GsVecEnv<Corridor>> {
@@ -493,5 +784,20 @@ mod tests {
     fn effective_workers_resolves_auto() {
         assert_eq!(effective_workers(3), 3);
         assert!(effective_workers(0) >= 1);
+    }
+
+    #[test]
+    fn worker_plan_resolves_both_knobs_through_one_helper() {
+        let plan = WorkerPlan::resolve(4, 2);
+        assert_eq!((plan.sim, plan.nn), (4, 2));
+        assert_eq!(plan.pool_size(), 4);
+        // `0` means the same auto core count for both halves.
+        let auto = WorkerPlan::resolve(0, 0);
+        assert_eq!(auto.sim, auto.nn);
+        assert_eq!(auto.sim, effective_workers(0));
+        // Fully-serial plans need no pool.
+        assert!(WorkerPlan::resolve(1, 1).shared_pool().is_none());
+        let pooled = WorkerPlan::resolve(1, 3).shared_pool().expect("pool");
+        assert!(pooled.workers() >= 3);
     }
 }

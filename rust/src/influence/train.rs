@@ -4,7 +4,12 @@
 //! Training drives the `*_update` artifacts through the runtime backend
 //! (XLA on PJRT, or the native CPU kernels): the gradient / Adam math runs
 //! inside the backend; this module only assembles minibatches, reusing one
-//! set of gather buffers and a scalar loss output across every call.
+//! set of gather buffers and a scalar loss output across every call. On
+//! the native backend with `[runtime] nn_workers > 1` each update call is
+//! data-parallel inside the backend (per-slice gradients, ordered
+//! reduction), so `train_fnn` / `train_gru` stay single-call-per-minibatch
+//! here yet scale with cores — and produce bitwise-identical parameters
+//! for every worker count at a fixed seed.
 
 use super::{InfluenceDataset, InfluencePredictor};
 use crate::nn::ParamStore;

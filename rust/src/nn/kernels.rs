@@ -50,6 +50,24 @@ pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
     }
 }
 
+/// `y += x` elementwise, 8-lane unrolled — the ordered gradient-slice
+/// reduction primitive of the data-parallel trainers (`runtime::native`
+/// reduces per-slice gradient scratch sequentially in slice order, never
+/// with atomics, so results are independent of the worker count).
+#[inline(always)]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n8 = y.len() & !7;
+    for (y8, x8) in y[..n8].chunks_exact_mut(8).zip(x[..n8].chunks_exact(8)) {
+        for (yy, &xx) in y8.iter_mut().zip(x8) {
+            *yy += xx;
+        }
+    }
+    for (yy, &xx) in y[n8..].iter_mut().zip(&x[n8..]) {
+        *yy += xx;
+    }
+}
+
 /// Dot product with 8 independent accumulators (breaks the FP dependency
 /// chain so the loop vectorizes).
 #[inline(always)]
@@ -353,6 +371,16 @@ mod tests {
                 assert!((out[i * k + kk] - want).abs() <= 1e-5);
                 assert!((out2[i * k + kk] - 2.0 * want).abs() <= 2e-5);
             }
+        }
+    }
+
+    #[test]
+    fn add_assign_matches_elementwise() {
+        let mut y: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let x: Vec<f32> = (0..19).map(|i| 0.5 * i as f32).collect();
+        add_assign(&mut y, &x);
+        for (i, &v) in y.iter().enumerate() {
+            assert_eq!(v, 1.5 * i as f32);
         }
     }
 

@@ -64,6 +64,15 @@ impl ParamStore {
     /// `(name, m.name, v.name)` — one borrow-checked split, no copies.
     /// Used by the native backend's in-place Adam step. Bumps the version.
     pub fn adam_slots_mut(&mut self, name: &str) -> Result<(&mut [f32], &mut [f32], &mut [f32])> {
+        let idx = self.adam_indices(name)?;
+        self.adam_slots_at(idx)
+    }
+
+    /// Resolve `(name, m.name, v.name)` to tensor indices once, so hot
+    /// training loops can use [`ParamStore::adam_slots_at`] without the
+    /// per-call name formatting (which allocates). Indices stay valid for
+    /// the life of the store (the tensor list never changes shape).
+    pub fn adam_indices(&self, name: &str) -> Result<[usize; 3]> {
         let ip = *self
             .index
             .get(name)
@@ -77,6 +86,20 @@ impl ParamStore {
             .get(format!("v.{name}").as_str())
             .ok_or_else(|| anyhow!("model {}: no Adam slot 'v.{name}'", self.model))?;
         anyhow::ensure!(ip != im && ip != iv && im != iv, "duplicate tensor indices");
+        Ok([ip, im, iv])
+    }
+
+    /// Index-based variant of [`ParamStore::adam_slots_mut`] — the
+    /// allocation-free training path (`runtime::native` caches the indices
+    /// per op at first call). Bumps the version.
+    pub fn adam_slots_at(
+        &mut self,
+        [ip, im, iv]: [usize; 3],
+    ) -> Result<(&mut [f32], &mut [f32], &mut [f32])> {
+        anyhow::ensure!(
+            ip != im && ip != iv && im != iv && ip.max(im).max(iv) < self.tensors.len(),
+            "bad adam slot indices"
+        );
         self.version += 1;
         let (p, m, v) = disjoint3_mut(&mut self.tensors, ip, im, iv);
         Ok((p.as_mut_slice(), m.as_mut_slice(), v.as_mut_slice()))

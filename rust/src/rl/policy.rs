@@ -97,7 +97,10 @@ impl Policy {
 
     /// Batched forward writing into caller-provided scratch (the rollout
     /// hot path — no allocation per step). `logits` is
-    /// `[batch * act_dim]`, `values` is `[batch]`.
+    /// `[batch * act_dim]`, `values` is `[batch]`. One call per step; on
+    /// the native backend with `[runtime] nn_workers > 1` the rows of this
+    /// call partition over the shared compute pool (each worker writes its
+    /// disjoint output band, so results are bitwise identical to serial).
     pub fn forward_into(
         &mut self,
         obs: &[f32],
@@ -195,19 +198,21 @@ impl Policy {
         returns_: &[f32],
         old_logp: &[f32],
     ) -> Result<[f32; 5]> {
-        let name = self
-            .update_fused
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("no fused update artifact for {}", self.model))?;
+        // Borrow (don't clone) the artifact name: this is the steady-state
+        // training path and must stay allocation-free.
+        let Policy { rt, store, update_fused, model, .. } = self;
+        let name = update_fused
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("no fused update artifact for {model}"))?;
         let lr = [cfg.lr];
         let clip = [cfg.clip];
         let vf = [cfg.vf_coef];
         let ent = [cfg.ent_coef];
         let mgn = [cfg.max_grad_norm];
         let mut stats = [0.0f32; 5];
-        self.rt.call_into(
-            &name,
-            &mut self.store,
+        rt.call_into(
+            name,
+            store,
             &[
                 DataArg::F32(&lr),
                 DataArg::F32(&clip),

@@ -34,6 +34,9 @@ pub struct PpoTrainer {
     mb_ret: Vec<f32>,
     mb_lp: Vec<f32>,
     order: Vec<usize>,
+    /// Reusable `[epochs * n]` shuffled-index buffer for the fused
+    /// whole-phase update (no per-iteration allocation).
+    perm: Vec<i32>,
     actions_scratch: Vec<usize>,
     obs_scratch: Vec<f32>,
     // forward-pass scratch (sized on first collect, when act_dim is known)
@@ -55,6 +58,7 @@ impl PpoTrainer {
             mb_ret: vec![0.0; mb],
             mb_lp: vec![0.0; mb],
             order: (0..cfg.rollout_len * cfg.num_envs).collect(),
+            perm: Vec::with_capacity(cfg.epochs * cfg.rollout_len * cfg.num_envs),
             actions_scratch: vec![0; cfg.num_envs],
             obs_scratch: vec![0.0; cfg.num_envs * obs_dim],
             logits_scratch: Vec::new(),
@@ -65,9 +69,11 @@ impl PpoTrainer {
     /// Collect one rollout (T steps of B envs) into the buffer. For a
     /// sharded env (`core::shard`), env stepping and observation fan out
     /// over the worker pool while each policy forward stays one batched
-    /// call on this thread — the parallel-sim / serial-NN split. All
-    /// buffers (rollout storage and forward scratch) are reused across
-    /// steps and iterations: no allocation on this path.
+    /// call issued from this thread — the parallel-sim / batched-NN split
+    /// (with `[runtime] nn_workers > 1` the native engine partitions that
+    /// batched call's rows over the same pool; the call structure is
+    /// unchanged). All buffers (rollout storage and forward scratch) are
+    /// reused across steps and iterations: no allocation on this path.
     pub fn collect(&mut self, env: &mut dyn VecEnv, policy: &mut Policy) -> Result<()> {
         let b = self.cfg.num_envs;
         debug_assert_eq!(env.num_envs(), b);
@@ -106,8 +112,10 @@ impl PpoTrainer {
     }
 
     /// GAE + the update phase. Uses the fused whole-phase artifact when the
-    /// geometry matches (one PJRT call — see EXPERIMENTS.md §Perf);
-    /// otherwise falls back to the per-minibatch loop.
+    /// geometry matches (one backend call per iteration — see PERF.md);
+    /// otherwise falls back to the per-minibatch loop. On the native
+    /// backend the update itself is data-parallel over `nn_workers` with
+    /// bitwise-deterministic ordered gradient reduction.
     pub fn update(&mut self, policy: &mut Policy) -> Result<PpoStats> {
         let cfg = &self.cfg;
         compute_gae(
@@ -124,15 +132,17 @@ impl PpoTrainer {
 
         let n = self.buffer.total();
         if policy.fused_geom == Some((cfg.epochs, n)) && cfg.minibatch == policy.minibatch {
-            // Fused path: shuffle per epoch on the Rust side, one call.
-            let mut perm: Vec<i32> = Vec::with_capacity(cfg.epochs * n);
+            // Fused path: shuffle per epoch on the Rust side, one call
+            // (reusing the preallocated perm buffer — steady-state
+            // zero-allocation, like the rest of the update phase).
+            self.perm.clear();
             for _ in 0..cfg.epochs {
                 self.rng.shuffle(&mut self.order);
-                perm.extend(self.order.iter().map(|&k| k as i32));
+                self.perm.extend(self.order.iter().map(|&k| k as i32));
             }
             let stats = policy.update_fused(
                 cfg,
-                &perm,
+                &self.perm,
                 &self.buffer.obs,
                 &self.buffer.actions,
                 &self.buffer.advantages,

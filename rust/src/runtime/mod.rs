@@ -27,6 +27,7 @@ pub use manifest::{
 };
 
 use crate::config::{BackendKind, ExperimentConfig};
+use crate::core::shard::{effective_workers, ComputePool, WorkerPlan};
 use crate::nn::ParamStore;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
@@ -105,12 +106,29 @@ impl Runtime {
     }
 
     /// Build a native-CPU runtime with a manifest synthesized from `geom`
-    /// — no artifacts directory required.
+    /// — no artifacts directory required. Serial NN execution
+    /// (`nn_workers = 1`); see [`Runtime::native_parallel`].
     pub fn native(geom: &SynthGeometry) -> Runtime {
         Runtime {
             manifest: Manifest::synthesize(geom),
             dir: None,
             backend: Box::new(native::NativeBackend::new()),
+            calls: RefCell::new(0),
+        }
+    }
+
+    /// Native runtime whose engine fans batched forwards and training
+    /// updates out over the process-shared compute pool (`nn_workers`
+    /// worker threads; `0` = one per core, `1` = serial). At a fixed seed
+    /// every `nn_workers` produces bitwise-identical results — the knob
+    /// only changes wall-clock (see `runtime::native` docs).
+    pub fn native_parallel(geom: &SynthGeometry, nn_workers: usize) -> Runtime {
+        let nn = effective_workers(nn_workers);
+        let pool = if nn > 1 { Some(ComputePool::shared(nn)) } else { None };
+        Runtime {
+            manifest: Manifest::synthesize(geom),
+            dir: None,
+            backend: Box::new(native::NativeBackend::with_pool(pool, nn)),
             calls: RefCell::new(0),
         }
     }
@@ -133,18 +151,36 @@ impl Runtime {
     }
 
     /// Select a backend per `[runtime] backend` and build the runtime with
-    /// config-derived geometry.
+    /// config-derived geometry. In native mode this also sizes the run's
+    /// shared compute pool once, for the larger of `[ppo] num_workers` and
+    /// `[runtime] nn_workers` (both resolved through [`WorkerPlan`]), so
+    /// the sim and NN halves share one pool and never oversubscribe.
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Runtime> {
         match cfg.runtime.backend {
             BackendKind::Pjrt => Self::load(&cfg.artifacts_dir),
-            BackendKind::Native => Ok(Self::native(&SynthGeometry::from_config(cfg))),
+            BackendKind::Native => Ok(Self::native_from_config(cfg)),
             BackendKind::Auto => {
                 if Path::new(&cfg.artifacts_dir).join("manifest.txt").exists() {
                     Self::load(&cfg.artifacts_dir)
                 } else {
-                    Ok(Self::native(&SynthGeometry::from_config(cfg)))
+                    Ok(Self::native_from_config(cfg))
                 }
             }
+        }
+    }
+
+    fn native_from_config(cfg: &ExperimentConfig) -> Runtime {
+        let plan = WorkerPlan::resolve(cfg.ppo.num_workers, cfg.runtime.nn_workers);
+        // Create (or grow) the shared pool at the size both halves need,
+        // even when the NN half stays serial — env construction then reuses
+        // the same pool instead of making a second one.
+        let pool = plan.shared_pool();
+        let backend_pool = if plan.nn > 1 { pool } else { None };
+        Runtime {
+            manifest: Manifest::synthesize(&SynthGeometry::from_config(cfg)),
+            dir: None,
+            backend: Box::new(native::NativeBackend::with_pool(backend_pool, plan.nn)),
+            calls: RefCell::new(0),
         }
     }
 

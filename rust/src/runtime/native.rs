@@ -4,13 +4,25 @@
 //!
 //! Each artifact is classified once (from its model's parameter names and
 //! its data bindings) into an op with preallocated scratch; after that
-//! first call, the forward ops (`*_fwd_*`, `*_step_*`) perform **zero heap
-//! allocations and zero redundant copies** — inputs are borrowed from the
-//! caller, intermediates live in reusable scratch, and outputs are written
-//! straight into the caller's buffers (`rust/tests/native_alloc.rs` pins
-//! this with a counting allocator). Training ops reuse their scratch too
-//! and mutate the store through in-place Adam updates
-//! ([`ParamStore::adam_slots_mut`]).
+//! first call, the forward *and* training ops perform **zero steady-state
+//! heap allocations and zero redundant copies** — inputs are borrowed from
+//! the caller, intermediates live in reusable scratch (including per-slice
+//! gradient scratch and the cached Adam slot indices), and outputs are
+//! written straight into the caller's buffers (`rust/tests/native_alloc.rs`
+//! pins both paths with a counting allocator). Training ops mutate the
+//! store through in-place Adam updates ([`ParamStore::adam_slots_at`]).
+//!
+//! ## Data parallelism
+//!
+//! With `[runtime] nn_workers > 1` the engine fans batch rows out over the
+//! run's shared [`ComputePool`]: forwards partition rows into disjoint
+//! output bands, and the trainers (PPO minibatch + fused whole-phase, FNN
+//! BCE, GRU BPTT) compute per-slice gradients into preallocated per-slice
+//! scratch, reduced **sequentially in fixed slice order** (never atomics)
+//! before the global grad-norm clip and the in-place Adam step. The slice
+//! grid ([`NN_SLICES`]) never depends on the worker count, so `nn_workers =
+//! k` is bitwise identical to `nn_workers = 1` for every `k`
+//! (`rust/tests/native_parallel.rs` locks this in end to end).
 //!
 //! The math mirrors `python/compile/model.py` exactly (same losses, same
 //! clipping, same Adam) so learning-dynamics tests hold on either backend.
@@ -19,12 +31,77 @@
 
 use super::manifest::{ArtifactSpec, Binding, Manifest, ModelSpec};
 use super::{Backend, DataArg};
+use crate::core::shard::{shard_ranges, ComputePool, SendSliceMut};
 use crate::nn::kernels::{self, Act};
 use crate::nn::ParamStore;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Fixed partition grid for data-parallel NN work: batch rows split into at
+/// most this many contiguous slices, **independent of the worker count**.
+/// Workers claim slices round-robin and per-slice partials (gradients, loss
+/// sums) are reduced sequentially in slice order on the coordinator — so
+/// `nn_workers = k` is bitwise identical to `nn_workers = 1` for every `k`
+/// by construction (the floating-point summation tree never changes; only
+/// which thread computes each slice does).
+pub const NN_SLICES: usize = 16;
+
+/// Forwards smaller than this many rows stay inline — dispatch latency
+/// would dominate. (Engagement only changes wall-clock, never bits: the
+/// slice grid and reduction order are identical either way.)
+const PAR_MIN_FWD_ROWS: usize = 32;
+
+/// The slice grid for a row count: `shard_ranges` over at most
+/// [`NN_SLICES`] slices.
+fn nn_slices(rows: usize) -> Vec<(usize, usize)> {
+    shard_ranges(rows, NN_SLICES.min(rows.max(1)))
+}
+
+/// Parallel execution context for native ops: the run's shared
+/// [`ComputePool`] (if any) plus the `nn_workers` concurrency cap.
+#[derive(Clone)]
+pub struct Par {
+    pool: Option<Arc<ComputePool>>,
+    limit: usize,
+}
+
+impl Par {
+    /// Serial execution (the default; also `nn_workers = 1`).
+    pub fn serial() -> Par {
+        Par { pool: None, limit: 1 }
+    }
+
+    /// Fan slices out over `pool`, at most `nn_workers` at a time.
+    pub fn with_pool(pool: Option<Arc<ComputePool>>, nn_workers: usize) -> Par {
+        if nn_workers > 1 && pool.is_some() {
+            Par { pool, limit: nn_workers }
+        } else {
+            Par::serial()
+        }
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Run `f(0), …, f(n_slices - 1)`: on the pool when parallel and
+    /// `engage`, else inline in slice order. Every slice writes disjoint
+    /// output and partials are reduced in slice order afterwards, so both
+    /// paths produce bitwise-identical results.
+    fn run(&self, n_slices: usize, engage: bool, f: &(dyn Fn(usize) + Sync)) {
+        match &self.pool {
+            Some(pool) if engage && n_slices > 1 => pool.run_tasks(n_slices, self.limit, f),
+            _ => {
+                for i in 0..n_slices {
+                    f(i);
+                }
+            }
+        }
+    }
+}
 
 /// Deterministic per-model seed for in-memory parameter initialization
 /// (FNV-1a over the model name; the native stand-in for `params.bin`).
@@ -38,14 +115,26 @@ pub fn init_seed(model: &str) -> u64 {
 }
 
 /// The native CPU engine: one classified-op cache, scratch reused across
-/// calls.
+/// calls, optionally data-parallel over the run's shared compute pool.
 pub struct NativeBackend {
     ops: RefCell<HashMap<String, Op>>,
+    par: Par,
 }
 
 impl NativeBackend {
+    /// Serial engine (the historical behaviour; `nn_workers = 1`).
     pub fn new() -> NativeBackend {
-        NativeBackend { ops: RefCell::new(HashMap::new()) }
+        Self::with_par(Par::serial())
+    }
+
+    /// Data-parallel engine: batched forwards and training updates fan row
+    /// slices out over `pool`, capped at `nn_workers` concurrent workers.
+    pub fn with_pool(pool: Option<Arc<ComputePool>>, nn_workers: usize) -> NativeBackend {
+        Self::with_par(Par::with_pool(pool, nn_workers))
+    }
+
+    fn with_par(par: Par) -> NativeBackend {
+        NativeBackend { ops: RefCell::new(HashMap::new()), par }
     }
 }
 
@@ -63,7 +152,7 @@ impl Backend for NativeBackend {
     fn prepare(&self, art: &ArtifactSpec, manifest: &Manifest) -> Result<()> {
         let mut ops = self.ops.borrow_mut();
         if !ops.contains_key(&art.name) {
-            let op = Op::build(art, manifest)
+            let op = Op::build(art, manifest, &self.par)
                 .with_context(|| format!("classifying artifact {}", art.name))?;
             ops.insert(art.name.clone(), op);
         }
@@ -115,10 +204,30 @@ fn data_shape<'m>(art: &'m ArtifactSpec, name: &str) -> Result<&'m [usize]> {
         .with_context(|| format!("artifact {} has no data input '{name}'", art.name))
 }
 
-/// In-place Adam over `(param, grad)` pairs: bumps `adam_t`, then updates
-/// `m.*` / `v.*` / the parameter in one pass each (matching `adam_step` in
-/// `python/compile/model.py`).
-fn adam_apply(store: &mut ParamStore, lr: f32, pairs: &[(&str, &[f32])]) -> Result<()> {
+/// In-place Adam over named tensors: bumps `adam_t`, then updates `m.*` /
+/// `v.*` / the parameter in one pass each (matching `adam_step` in
+/// `python/compile/model.py`). `idx_cache` memoizes the name → tensor-index
+/// resolution (which formats slot names and therefore allocates) so the
+/// steady-state training path performs zero heap allocations — the cache
+/// fills on the first (warmup) call and is reused afterwards.
+fn adam_apply(
+    store: &mut ParamStore,
+    lr: f32,
+    names: &[&str],
+    grads: &[&[f32]],
+    idx_cache: &mut Vec<[usize; 3]>,
+) -> Result<()> {
+    debug_assert_eq!(names.len(), grads.len());
+    if idx_cache.len() != names.len() {
+        // Resolve into a fresh list and install only on full success, so a
+        // mid-loop error can never leave a partial cache behind (which a
+        // later call would silently zip against only a prefix of `grads`).
+        let mut resolved = Vec::with_capacity(names.len());
+        for name in names {
+            resolved.push(store.adam_indices(name)?);
+        }
+        *idx_cache = resolved;
+    }
     let t_new = {
         let t = store.tensor_mut("adam_t")?;
         t[0] += 1.0;
@@ -126,8 +235,8 @@ fn adam_apply(store: &mut ParamStore, lr: f32, pairs: &[(&str, &[f32])]) -> Resu
     };
     let bc1 = 1.0 - kernels::ADAM_B1.powf(t_new);
     let bc2 = 1.0 - kernels::ADAM_B2.powf(t_new);
-    for (name, g) in pairs {
-        let (p, m, v) = store.adam_slots_mut(name)?;
+    for (idx, g) in idx_cache.iter().zip(grads) {
+        let (p, m, v) = store.adam_slots_at(*idx)?;
         kernels::adam_tensor(p, m, v, g, lr, bc1, bc2);
     }
     Ok(())
@@ -148,29 +257,29 @@ enum Op {
 }
 
 impl Op {
-    fn build(art: &ArtifactSpec, manifest: &Manifest) -> Result<Op> {
+    fn build(art: &ArtifactSpec, manifest: &Manifest, par: &Par) -> Result<Op> {
         let model = manifest.model(&art.model)?;
         let trains = art.outputs.iter().any(|b| matches!(b, Binding::Param(_)));
         let is_policy = model.params.iter().any(|p| p.name == "w_pi");
         let is_gru = model.params.iter().any(|p| p.name == "w_x");
         Ok(if is_policy {
             if !trains {
-                Op::PolicyFwd(PolicyFwd::new(art, model)?)
+                Op::PolicyFwd(PolicyFwd::new(art, model, par)?)
             } else if art.data_inputs().any(|t| t.name == "perm") {
-                Op::PolicyUpdateFused(PolicyUpdateFused::new(art, model, manifest)?)
+                Op::PolicyUpdateFused(PolicyUpdateFused::new(art, model, manifest, par)?)
             } else {
-                Op::PolicyUpdate(PolicyUpdate::new(art, model)?)
+                Op::PolicyUpdate(PolicyUpdate::new(art, model, par)?)
             }
         } else if is_gru {
             if trains {
-                Op::GruUpdate(GruUpdate::new(art, model)?)
+                Op::GruUpdate(GruUpdate::new(art, model, par)?)
             } else {
-                Op::GruStep(GruStep::new(art, model)?)
+                Op::GruStep(GruStep::new(art, model, par)?)
             }
         } else if trains {
-            Op::FnnUpdate(FnnUpdate::new(art, model)?)
+            Op::FnnUpdate(FnnUpdate::new(art, model, par)?)
         } else {
-            Op::FnnFwd(FnnFwd::new(art, model)?)
+            Op::FnnFwd(FnnFwd::new(art, model, par)?)
         })
     }
 
@@ -270,10 +379,12 @@ struct PolicyFwd {
     act_dim: usize,
     h1: Vec<f32>,
     h2: Vec<f32>,
+    slices: Vec<(usize, usize)>,
+    par: Par,
 }
 
 impl PolicyFwd {
-    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<PolicyFwd> {
+    fn new(art: &ArtifactSpec, model: &ModelSpec, par: &Par) -> Result<PolicyFwd> {
         let (obs_dim, hid, act_dim) = policy_dims(model)?;
         let b = data_shape(art, "obs")?[0];
         Ok(PolicyFwd {
@@ -283,6 +394,8 @@ impl PolicyFwd {
             act_dim,
             h1: vec![0.0; b * hid],
             h2: vec![0.0; b * hid],
+            slices: nn_slices(b),
+            par: par.clone(),
         })
     }
 
@@ -293,7 +406,7 @@ impl PolicyFwd {
         logits: &mut [f32],
         value: &mut [f32],
     ) -> Result<()> {
-        let (b, od, h, a) = (self.b, self.obs_dim, self.hid, self.act_dim);
+        let (od, h, a) = (self.obs_dim, self.hid, self.act_dim);
         let w1 = store.get("w1")?;
         let b1 = store.get("b1")?;
         let w2 = store.get("w2")?;
@@ -302,10 +415,26 @@ impl PolicyFwd {
         let b_pi = store.get("b_pi")?;
         let w_v = store.get("w_v")?;
         let b_v = store.get("b_v")?;
-        kernels::linear_into(obs, w1, Some(b1), &mut self.h1, b, od, h, Act::Tanh);
-        kernels::linear_into(&self.h1, w2, Some(b2), &mut self.h2, b, h, h, Act::Tanh);
-        kernels::linear_into(&self.h2, w_pi, Some(b_pi), logits, b, h, a, Act::None);
-        kernels::linear_into(&self.h2, w_v, Some(b_v), value, b, h, 1, Act::None);
+        let slices = &self.slices;
+        let h1 = SendSliceMut::new(&mut self.h1);
+        let h2 = SendSliceMut::new(&mut self.h2);
+        let lg = SendSliceMut::new(logits);
+        let vl = SendSliceMut::new(value);
+        let task = |si: usize| {
+            let (r0, r1) = slices[si];
+            let m = r1 - r0;
+            // SAFETY: slices are disjoint row bands tiling [0, b); Par::run
+            // blocks until every slice has completed.
+            let (h1s, h2s, ls, vs) = unsafe {
+                (h1.range(r0 * h, m * h), h2.range(r0 * h, m * h), lg.range(r0 * a, m * a), vl.range(r0, m))
+            };
+            let xb = &obs[r0 * od..r1 * od];
+            kernels::linear_into(xb, w1, Some(b1), h1s, m, od, h, Act::Tanh);
+            kernels::linear_into(h1s, w2, Some(b2), h2s, m, h, h, Act::Tanh);
+            kernels::linear_into(h2s, w_pi, Some(b_pi), ls, m, h, a, Act::None);
+            kernels::linear_into(h2s, w_v, Some(b_v), vs, m, h, 1, Act::None);
+        };
+        self.par.run(slices.len(), self.b >= PAR_MIN_FWD_ROWS, &task);
         Ok(())
     }
 }
@@ -380,7 +509,22 @@ impl PolicyGrads {
             &self.b_v[..],
         ])
     }
+
+    /// `self += other` — one step of the ordered per-slice reduction.
+    fn add_from(&mut self, o: &PolicyGrads) {
+        kernels::add_assign(&mut self.w1, &o.w1);
+        kernels::add_assign(&mut self.b1, &o.b1);
+        kernels::add_assign(&mut self.w2, &o.w2);
+        kernels::add_assign(&mut self.b2, &o.b2);
+        kernels::add_assign(&mut self.w_pi, &o.w_pi);
+        kernels::add_assign(&mut self.b_pi, &o.b_pi);
+        kernels::add_assign(&mut self.w_v, &o.w_v);
+        kernels::add_assign(&mut self.b_v, &o.b_v);
+    }
 }
+
+/// Parameter-name order shared by the policy backward + Adam step.
+const POLICY_PARAMS: [&str; 8] = ["w1", "b1", "w2", "b2", "w_pi", "b_pi", "w_v", "b_v"];
 
 struct PolicyUpdate {
     mb: usize,
@@ -396,17 +540,36 @@ struct PolicyUpdate {
     g_value: Vec<f32>,
     g_ha: Vec<f32>,
     g_hb: Vec<f32>,
+    /// Reduced (total) gradients — also the serial accumulator target.
     grads: PolicyGrads,
+    /// Fixed slice grid over minibatch rows (see [`NN_SLICES`]).
+    slices: Vec<(usize, usize)>,
+    /// Per-slice gradient scratch, preallocated at op build.
+    part_grads: Vec<PolicyGrads>,
+    /// Per-slice loss partials `[pg, v, ent, kl]`.
+    part_sums: Vec<[f64; 4]>,
+    adam_idx: Vec<[usize; 3]>,
+    par: Par,
 }
 
 impl PolicyUpdate {
-    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<PolicyUpdate> {
+    fn new(art: &ArtifactSpec, model: &ModelSpec, par: &Par) -> Result<PolicyUpdate> {
         let (obs_dim, hid, act_dim) = policy_dims(model)?;
         let mb = data_shape(art, "obs")?[0];
-        Ok(Self::with_minibatch(mb, obs_dim, hid, act_dim))
+        Ok(Self::with_minibatch(mb, obs_dim, hid, act_dim, par))
     }
 
-    fn with_minibatch(mb: usize, obs_dim: usize, hid: usize, act_dim: usize) -> PolicyUpdate {
+    fn with_minibatch(
+        mb: usize,
+        obs_dim: usize,
+        hid: usize,
+        act_dim: usize,
+        par: &Par,
+    ) -> PolicyUpdate {
+        let slices = nn_slices(mb);
+        let part_grads =
+            slices.iter().map(|_| PolicyGrads::new(obs_dim, hid, act_dim)).collect::<Vec<_>>();
+        let part_sums = vec![[0.0f64; 4]; slices.len()];
         PolicyUpdate {
             mb,
             obs_dim,
@@ -422,12 +585,24 @@ impl PolicyUpdate {
             g_ha: vec![0.0; mb * hid],
             g_hb: vec![0.0; mb * hid],
             grads: PolicyGrads::new(obs_dim, hid, act_dim),
+            slices,
+            part_grads,
+            part_sums,
+            adam_idx: Vec::with_capacity(POLICY_PARAMS.len()),
+            par: par.clone(),
         }
     }
 
     /// One clipped-surrogate PPO minibatch step — forward, loss, backward,
     /// grad-norm clip, Adam (`ppo_update` in `model.py`). Returns
     /// `[total, pg_loss, v_loss, entropy, approx_kl]`.
+    ///
+    /// Data-parallel over the fixed row-slice grid: each slice runs its own
+    /// forward + loss + backward into per-slice gradient scratch; slice
+    /// partials (gradients and f64 loss sums) are then reduced sequentially
+    /// in slice order before the *global* grad-norm clip and the in-place
+    /// Adam step. The grid never depends on the worker count, so results
+    /// are bitwise identical for every `nn_workers`.
     fn run_minibatch(
         &mut self,
         store: &mut ParamStore,
@@ -440,7 +615,13 @@ impl PolicyUpdate {
     ) -> Result<[f32; 5]> {
         let (mb, od, h, a) = (self.mb, self.obs_dim, self.hid, self.act_dim);
         let inv_mb = 1.0 / mb as f32;
-        let stats;
+        // Slice tasks cannot surface errors — validate inputs up front.
+        for &act in actions {
+            anyhow::ensure!(
+                act >= 0 && (act as usize) < a,
+                "action {act} out of range (act_dim {a})"
+            );
+        }
         {
             let w1 = store.get("w1")?;
             let b1 = store.get("b1")?;
@@ -450,98 +631,154 @@ impl PolicyUpdate {
             let b_pi = store.get("b_pi")?;
             let w_v = store.get("w_v")?;
             let b_v = store.get("b_v")?;
+            let slices = &self.slices;
+            let h1 = SendSliceMut::new(&mut self.h1);
+            let h2 = SendSliceMut::new(&mut self.h2);
+            let lg = SendSliceMut::new(&mut self.logits);
+            let lp_ = SendSliceMut::new(&mut self.logp);
+            let vl = SendSliceMut::new(&mut self.value);
+            let gl = SendSliceMut::new(&mut self.g_logits);
+            let gv = SendSliceMut::new(&mut self.g_value);
+            let gha = SendSliceMut::new(&mut self.g_ha);
+            let ghb = SendSliceMut::new(&mut self.g_hb);
+            let pg = SendSliceMut::new(&mut self.part_grads);
+            let ps = SendSliceMut::new(&mut self.part_sums);
+            let task = |si: usize| {
+                let (r0, r1) = slices[si];
+                let m = r1 - r0;
+                // SAFETY: disjoint row bands / per-slice cells; Par::run
+                // blocks until every slice has completed.
+                let (h1s, h2s, ls, lps, vs) = unsafe {
+                    (
+                        h1.range(r0 * h, m * h),
+                        h2.range(r0 * h, m * h),
+                        lg.range(r0 * a, m * a),
+                        lp_.range(r0 * a, m * a),
+                        vl.range(r0, m),
+                    )
+                };
+                let (gls, gvs, ghas, ghbs) = unsafe {
+                    (
+                        gl.range(r0 * a, m * a),
+                        gv.range(r0, m),
+                        gha.range(r0 * h, m * h),
+                        ghb.range(r0 * h, m * h),
+                    )
+                };
+                let g = unsafe { &mut pg.range(si, 1)[0] };
+                let sums = unsafe { &mut ps.range(si, 1)[0] };
+                let xb = &obs[r0 * od..r1 * od];
 
-            kernels::linear_into(obs, w1, Some(b1), &mut self.h1, mb, od, h, Act::Tanh);
-            kernels::linear_into(&self.h1, w2, Some(b2), &mut self.h2, mb, h, h, Act::Tanh);
-            kernels::linear_into(&self.h2, w_pi, Some(b_pi), &mut self.logits, mb, h, a, Act::None);
-            kernels::linear_into(&self.h2, w_v, Some(b_v), &mut self.value, mb, h, 1, Act::None);
+                // Forward for this slice's rows.
+                kernels::linear_into(xb, w1, Some(b1), h1s, m, od, h, Act::Tanh);
+                kernels::linear_into(h1s, w2, Some(b2), h2s, m, h, h, Act::Tanh);
+                kernels::linear_into(h2s, w_pi, Some(b_pi), ls, m, h, a, Act::None);
+                kernels::linear_into(h2s, w_v, Some(b_v), vs, m, h, 1, Act::None);
 
-            // Loss terms + dL/dlogits, dL/dvalue per row.
-            let mut pg_sum = 0.0f64;
-            let mut v_sum = 0.0f64;
-            let mut ent_sum = 0.0f64;
-            let mut kl_sum = 0.0f64;
-            for r in 0..mb {
-                let lrow = &self.logits[r * a..(r + 1) * a];
-                let lprow = &mut self.logp[r * a..(r + 1) * a];
-                kernels::log_softmax_row(lrow, lprow);
-                let act_i = actions[r] as usize;
-                anyhow::ensure!(act_i < a, "action {act_i} out of range (act_dim {a})");
-                let lpa = lprow[act_i];
-                let ratio = (lpa - old_logp[r]).exp();
-                let s1 = ratio * adv[r];
-                let s2 = ratio.clamp(1.0 - hp.clip, 1.0 + hp.clip) * adv[r];
-                // Gradient flows through the unclipped surrogate iff it is
-                // the active min (jnp.minimum semantics; the clipped branch
-                // is constant in logp).
-                let (min_s, gpg) =
-                    if s1 <= s2 { (s1, -adv[r] * ratio * inv_mb) } else { (s2, 0.0) };
-                pg_sum += min_s as f64;
-                let mut h_row = 0.0f32;
-                for &lp in lprow.iter() {
-                    h_row -= lp.exp() * lp;
+                // Loss terms + dL/dlogits, dL/dvalue per row.
+                let mut pg_sum = 0.0f64;
+                let mut v_sum = 0.0f64;
+                let mut ent_sum = 0.0f64;
+                let mut kl_sum = 0.0f64;
+                for li in 0..m {
+                    let r = r0 + li;
+                    let lrow = &ls[li * a..(li + 1) * a];
+                    let lprow = &mut lps[li * a..(li + 1) * a];
+                    kernels::log_softmax_row(lrow, lprow);
+                    let act_i = actions[r] as usize;
+                    let lpa = lprow[act_i];
+                    let ratio = (lpa - old_logp[r]).exp();
+                    let s1 = ratio * adv[r];
+                    let s2 = ratio.clamp(1.0 - hp.clip, 1.0 + hp.clip) * adv[r];
+                    // Gradient flows through the unclipped surrogate iff it
+                    // is the active min (jnp.minimum semantics; the clipped
+                    // branch is constant in logp).
+                    let (min_s, gpg) =
+                        if s1 <= s2 { (s1, -adv[r] * ratio * inv_mb) } else { (s2, 0.0) };
+                    pg_sum += min_s as f64;
+                    let mut h_row = 0.0f32;
+                    for &lp in lprow.iter() {
+                        h_row -= lp.exp() * lp;
+                    }
+                    ent_sum += h_row as f64;
+                    kl_sum += (old_logp[r] - lpa) as f64;
+                    let grow = &mut gls[li * a..(li + 1) * a];
+                    for (j, (gj, &lp)) in grow.iter_mut().zip(lprow.iter()).enumerate() {
+                        let p = lp.exp();
+                        let onehot = if j == act_i { 1.0 } else { 0.0 };
+                        // d(-ent_coef * H)/dlogit = ent_coef * p * (logp + H)
+                        *gj = gpg * (onehot - p) + hp.ent * inv_mb * p * (lp + h_row);
+                    }
+                    let vdiff = vs[li] - ret[r];
+                    v_sum += (vdiff as f64) * (vdiff as f64);
+                    gvs[li] = hp.vf * 2.0 * vdiff * inv_mb;
                 }
-                ent_sum += h_row as f64;
-                kl_sum += (old_logp[r] - lpa) as f64;
-                let grow = &mut self.g_logits[r * a..(r + 1) * a];
-                for (j, (gj, &lp)) in grow.iter_mut().zip(lprow.iter()).enumerate() {
-                    let p = lp.exp();
-                    let onehot = if j == act_i { 1.0 } else { 0.0 };
-                    // d(-ent_coef * H)/dlogit = ent_coef * p * (logp + H)
-                    *gj = gpg * (onehot - p) + hp.ent * inv_mb * p * (lp + h_row);
-                }
-                let vdiff = self.value[r] - ret[r];
-                v_sum += (vdiff as f64) * (vdiff as f64);
-                self.g_value[r] = hp.vf * 2.0 * vdiff * inv_mb;
-            }
-            let pg_loss = -(pg_sum as f32) * inv_mb;
-            let v_loss = (v_sum as f32) * inv_mb;
-            let entropy = (ent_sum as f32) * inv_mb;
-            let approx_kl = (kl_sum as f32) * inv_mb;
-            let total = pg_loss + hp.vf * v_loss - hp.ent * entropy;
-            stats = [total, pg_loss, v_loss, entropy, approx_kl];
+                *sums = [pg_sum, v_sum, ent_sum, kl_sum];
 
-            // Backward.
-            let g = &mut self.grads;
-            g.zero();
-            kernels::matmul_at_b_acc(&self.h2, &self.g_logits, &mut g.w_pi, mb, h, a);
-            kernels::colsum_acc(&self.g_logits, &mut g.b_pi, a);
-            kernels::matmul_at_b_acc(&self.h2, &self.g_value, &mut g.w_v, mb, h, 1);
-            g.b_v[0] = self.g_value.iter().sum();
-            kernels::matmul_bt_into(&self.g_logits, w_pi, &mut self.g_ha, mb, a, h);
-            for (r, &gv) in self.g_value.iter().enumerate() {
-                kernels::axpy(&mut self.g_ha[r * h..(r + 1) * h], w_v, gv);
+                // Backward for this slice into its own gradient scratch.
+                g.zero();
+                kernels::matmul_at_b_acc(h2s, gls, &mut g.w_pi, m, h, a);
+                kernels::colsum_acc(gls, &mut g.b_pi, a);
+                kernels::matmul_at_b_acc(h2s, gvs, &mut g.w_v, m, h, 1);
+                g.b_v[0] = gvs.iter().sum::<f32>();
+                kernels::matmul_bt_into(gls, w_pi, ghas, m, a, h);
+                for (li, &gvr) in gvs.iter().enumerate() {
+                    kernels::axpy(&mut ghas[li * h..(li + 1) * h], w_v, gvr);
+                }
+                for (gz, &hv) in ghas.iter_mut().zip(h2s.iter()) {
+                    *gz *= 1.0 - hv * hv;
+                }
+                kernels::matmul_at_b_acc(h1s, ghas, &mut g.w2, m, h, h);
+                kernels::colsum_acc(ghas, &mut g.b2, h);
+                kernels::matmul_bt_into(ghas, w2, ghbs, m, h, h);
+                for (gz, &hv) in ghbs.iter_mut().zip(h1s.iter()) {
+                    *gz *= 1.0 - hv * hv;
+                }
+                kernels::matmul_at_b_acc(xb, ghbs, &mut g.w1, m, od, h);
+                kernels::colsum_acc(ghbs, &mut g.b1, h);
+            };
+            self.par.run(slices.len(), true, &task);
+        }
+
+        // Ordered reduction in fixed slice order (sequential, never
+        // atomics): the summation tree is the same for every worker count.
+        let mut agg = [0.0f64; 4];
+        for part in &self.part_sums {
+            for (acc, &s) in agg.iter_mut().zip(part) {
+                *acc += s;
             }
-            for (gz, &hv) in self.g_ha.iter_mut().zip(&self.h2) {
-                *gz *= 1.0 - hv * hv;
-            }
-            kernels::matmul_at_b_acc(&self.h1, &self.g_ha, &mut g.w2, mb, h, h);
-            kernels::colsum_acc(&self.g_ha, &mut g.b2, h);
-            kernels::matmul_bt_into(&self.g_ha, w2, &mut self.g_hb, mb, h, h);
-            for (gz, &hv) in self.g_hb.iter_mut().zip(&self.h1) {
-                *gz *= 1.0 - hv * hv;
-            }
-            kernels::matmul_at_b_acc(obs, &self.g_hb, &mut g.w1, mb, od, h);
-            kernels::colsum_acc(&self.g_hb, &mut g.b1, h);
+        }
+        let pg_loss = -(agg[0] as f32) * inv_mb;
+        let v_loss = (agg[1] as f32) * inv_mb;
+        let entropy = (agg[2] as f32) * inv_mb;
+        let approx_kl = (agg[3] as f32) * inv_mb;
+        let total = pg_loss + hp.vf * v_loss - hp.ent * entropy;
+        let stats = [total, pg_loss, v_loss, entropy, approx_kl];
+
+        let PolicyUpdate { grads, part_grads, adam_idx, .. } = self;
+        grads.zero();
+        for part in part_grads.iter() {
+            grads.add_from(part);
         }
 
         // Global grad-norm clip, then Adam (clip_global_norm + adam_step).
-        let gn = self.grads.norm();
-        self.grads.scale((hp.mgn / (gn + 1e-8)).min(1.0));
-        let g = &self.grads;
+        let gn = grads.norm();
+        grads.scale((hp.mgn / (gn + 1e-8)).min(1.0));
         adam_apply(
             store,
             hp.lr,
+            &POLICY_PARAMS,
             &[
-                ("w1", g.w1.as_slice()),
-                ("b1", g.b1.as_slice()),
-                ("w2", g.w2.as_slice()),
-                ("b2", g.b2.as_slice()),
-                ("w_pi", g.w_pi.as_slice()),
-                ("b_pi", g.b_pi.as_slice()),
-                ("w_v", g.w_v.as_slice()),
-                ("b_v", g.b_v.as_slice()),
+                grads.w1.as_slice(),
+                grads.b1.as_slice(),
+                grads.w2.as_slice(),
+                grads.b2.as_slice(),
+                grads.w_pi.as_slice(),
+                grads.b_pi.as_slice(),
+                grads.w_v.as_slice(),
+                grads.b_v.as_slice(),
             ],
+            adam_idx,
         )?;
         Ok(stats)
     }
@@ -562,7 +799,12 @@ struct PolicyUpdateFused {
 }
 
 impl PolicyUpdateFused {
-    fn new(art: &ArtifactSpec, model: &ModelSpec, manifest: &Manifest) -> Result<PolicyUpdateFused> {
+    fn new(
+        art: &ArtifactSpec,
+        model: &ModelSpec,
+        manifest: &Manifest,
+        par: &Par,
+    ) -> Result<PolicyUpdateFused> {
         let (obs_dim, hid, act_dim) = policy_dims(model)?;
         let perm = data_shape(art, "perm")?;
         let (epochs, n) = (perm[0], perm[1]);
@@ -575,7 +817,7 @@ impl PolicyUpdateFused {
         Ok(PolicyUpdateFused {
             epochs,
             n,
-            core: PolicyUpdate::with_minibatch(mb, obs_dim, hid, act_dim),
+            core: PolicyUpdate::with_minibatch(mb, obs_dim, hid, act_dim, par),
             mb_obs: vec![0.0; mb * obs_dim],
             mb_act: vec![0; mb],
             mb_adv: vec![0.0; mb],
@@ -650,24 +892,69 @@ struct FnnFwd {
     hid: usize,
     u_dim: usize,
     h1: Vec<f32>,
+    slices: Vec<(usize, usize)>,
+    par: Par,
 }
 
 impl FnnFwd {
-    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<FnnFwd> {
+    fn new(art: &ArtifactSpec, model: &ModelSpec, par: &Par) -> Result<FnnFwd> {
         let (d_dim, hid, u_dim) = fnn_dims(model)?;
         let b = data_shape(art, "d")?[0];
-        Ok(FnnFwd { b, d_dim, hid, u_dim, h1: vec![0.0; b * hid] })
+        Ok(FnnFwd {
+            b,
+            d_dim,
+            hid,
+            u_dim,
+            h1: vec![0.0; b * hid],
+            slices: nn_slices(b),
+            par: par.clone(),
+        })
     }
 
     fn run(&mut self, store: &ParamStore, d: &[f32], probs: &mut [f32]) -> Result<()> {
-        let (b, dd, h, u) = (self.b, self.d_dim, self.hid, self.u_dim);
+        let (dd, h, u) = (self.d_dim, self.hid, self.u_dim);
         let w1 = store.get("w1")?;
         let b1 = store.get("b1")?;
         let w2 = store.get("w2")?;
         let b2 = store.get("b2")?;
-        kernels::linear_into(d, w1, Some(b1), &mut self.h1, b, dd, h, Act::Tanh);
-        kernels::linear_into(&self.h1, w2, Some(b2), probs, b, h, u, Act::Sigmoid);
+        let slices = &self.slices;
+        let h1 = SendSliceMut::new(&mut self.h1);
+        let pr = SendSliceMut::new(probs);
+        let task = |si: usize| {
+            let (r0, r1) = slices[si];
+            let m = r1 - r0;
+            // SAFETY: disjoint row bands; Par::run blocks until done.
+            let (h1s, ps) = unsafe { (h1.range(r0 * h, m * h), pr.range(r0 * u, m * u)) };
+            kernels::linear_into(&d[r0 * dd..r1 * dd], w1, Some(b1), h1s, m, dd, h, Act::Tanh);
+            kernels::linear_into(h1s, w2, Some(b2), ps, m, h, u, Act::Sigmoid);
+        };
+        self.par.run(slices.len(), self.b >= PAR_MIN_FWD_ROWS, &task);
         Ok(())
+    }
+}
+
+/// Per-slice FNN gradient scratch (preallocated at op build).
+struct FnnGrads {
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+impl FnnGrads {
+    fn new(d_dim: usize, hid: usize, u_dim: usize) -> FnnGrads {
+        FnnGrads {
+            w1: vec![0.0; d_dim * hid],
+            b1: vec![0.0; hid],
+            w2: vec![0.0; hid * u_dim],
+            b2: vec![0.0; u_dim],
+        }
+    }
+
+    fn zero(&mut self) {
+        for g in [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2] {
+            g.fill(0.0);
+        }
     }
 }
 
@@ -680,16 +967,25 @@ struct FnnUpdate {
     logits: Vec<f32>,
     g_l: Vec<f32>,
     g_h: Vec<f32>,
+    /// Reduced (total) gradients.
     gw1: Vec<f32>,
     gb1: Vec<f32>,
     gw2: Vec<f32>,
     gb2: Vec<f32>,
+    slices: Vec<(usize, usize)>,
+    part: Vec<FnnGrads>,
+    part_loss: Vec<f64>,
+    adam_idx: Vec<[usize; 3]>,
+    par: Par,
 }
 
 impl FnnUpdate {
-    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<FnnUpdate> {
+    fn new(art: &ArtifactSpec, model: &ModelSpec, par: &Par) -> Result<FnnUpdate> {
         let (d_dim, hid, u_dim) = fnn_dims(model)?;
         let mb = data_shape(art, "d")?[0];
+        let slices = nn_slices(mb);
+        let part = slices.iter().map(|_| FnnGrads::new(d_dim, hid, u_dim)).collect::<Vec<_>>();
+        let part_loss = vec![0.0f64; slices.len()];
         Ok(FnnUpdate {
             mb,
             d_dim,
@@ -703,49 +999,92 @@ impl FnnUpdate {
             gb1: vec![0.0; hid],
             gw2: vec![0.0; hid * u_dim],
             gb2: vec![0.0; u_dim],
+            slices,
+            part,
+            part_loss,
+            adam_idx: Vec::with_capacity(4),
+            par: par.clone(),
         })
     }
 
-    /// One Adam step of stable BCE-with-logits (`aip_fnn_update`).
+    /// One Adam step of stable BCE-with-logits (`aip_fnn_update`),
+    /// data-parallel over the fixed row-slice grid with ordered per-slice
+    /// gradient/loss reduction (bitwise identical for every `nn_workers`).
     fn run(&mut self, store: &mut ParamStore, lr: f32, d: &[f32], targets: &[f32]) -> Result<f32> {
         let (mb, dd, h, u) = (self.mb, self.d_dim, self.hid, self.u_dim);
         let inv = 1.0 / (mb * u) as f32;
-        let loss;
         {
             let w1 = store.get("w1")?;
             let b1 = store.get("b1")?;
             let w2 = store.get("w2")?;
             let b2 = store.get("b2")?;
-            kernels::linear_into(d, w1, Some(b1), &mut self.h1, mb, dd, h, Act::Tanh);
-            kernels::linear_into(&self.h1, w2, Some(b2), &mut self.logits, mb, h, u, Act::None);
-            let mut loss_sum = 0.0f64;
-            for ((gl, &l), &y) in self.g_l.iter_mut().zip(&self.logits).zip(targets) {
-                loss_sum += kernels::bce_with_logits_elem(l, y) as f64;
-                *gl = (kernels::sigmoid(l) - y) * inv;
-            }
-            loss = (loss_sum as f32) * inv;
-            self.gw1.fill(0.0);
-            self.gb1.fill(0.0);
-            self.gw2.fill(0.0);
-            self.gb2.fill(0.0);
-            kernels::matmul_at_b_acc(&self.h1, &self.g_l, &mut self.gw2, mb, h, u);
-            kernels::colsum_acc(&self.g_l, &mut self.gb2, u);
-            kernels::matmul_bt_into(&self.g_l, w2, &mut self.g_h, mb, u, h);
-            for (gz, &hv) in self.g_h.iter_mut().zip(&self.h1) {
-                *gz *= 1.0 - hv * hv;
-            }
-            kernels::matmul_at_b_acc(d, &self.g_h, &mut self.gw1, mb, dd, h);
-            kernels::colsum_acc(&self.g_h, &mut self.gb1, h);
+            let slices = &self.slices;
+            let h1 = SendSliceMut::new(&mut self.h1);
+            let lg = SendSliceMut::new(&mut self.logits);
+            let gl = SendSliceMut::new(&mut self.g_l);
+            let gh = SendSliceMut::new(&mut self.g_h);
+            let pg = SendSliceMut::new(&mut self.part);
+            let pl = SendSliceMut::new(&mut self.part_loss);
+            let task = |si: usize| {
+                let (r0, r1) = slices[si];
+                let m = r1 - r0;
+                // SAFETY: disjoint row bands / per-slice cells; Par::run
+                // blocks until every slice has completed.
+                let (h1s, ls, gls, ghs) = unsafe {
+                    (
+                        h1.range(r0 * h, m * h),
+                        lg.range(r0 * u, m * u),
+                        gl.range(r0 * u, m * u),
+                        gh.range(r0 * h, m * h),
+                    )
+                };
+                let g = unsafe { &mut pg.range(si, 1)[0] };
+                let loss_slot = unsafe { &mut pl.range(si, 1)[0] };
+                let db = &d[r0 * dd..r1 * dd];
+                let yb = &targets[r0 * u..r1 * u];
+                kernels::linear_into(db, w1, Some(b1), h1s, m, dd, h, Act::Tanh);
+                kernels::linear_into(h1s, w2, Some(b2), ls, m, h, u, Act::None);
+                let mut loss_sum = 0.0f64;
+                for ((glv, &l), &y) in gls.iter_mut().zip(ls.iter()).zip(yb) {
+                    loss_sum += kernels::bce_with_logits_elem(l, y) as f64;
+                    *glv = (kernels::sigmoid(l) - y) * inv;
+                }
+                *loss_slot = loss_sum;
+                g.zero();
+                kernels::matmul_at_b_acc(h1s, gls, &mut g.w2, m, h, u);
+                kernels::colsum_acc(gls, &mut g.b2, u);
+                kernels::matmul_bt_into(gls, w2, ghs, m, u, h);
+                for (gz, &hv) in ghs.iter_mut().zip(h1s.iter()) {
+                    *gz *= 1.0 - hv * hv;
+                }
+                kernels::matmul_at_b_acc(db, ghs, &mut g.w1, m, dd, h);
+                kernels::colsum_acc(ghs, &mut g.b1, h);
+            };
+            self.par.run(slices.len(), true, &task);
+        }
+        // Ordered reduction in fixed slice order.
+        let loss = (self.part_loss.iter().sum::<f64>() as f32) * inv;
+        self.gw1.fill(0.0);
+        self.gb1.fill(0.0);
+        self.gw2.fill(0.0);
+        self.gb2.fill(0.0);
+        for part in &self.part {
+            kernels::add_assign(&mut self.gw1, &part.w1);
+            kernels::add_assign(&mut self.gb1, &part.b1);
+            kernels::add_assign(&mut self.gw2, &part.w2);
+            kernels::add_assign(&mut self.gb2, &part.b2);
         }
         adam_apply(
             store,
             lr,
+            &["w1", "b1", "w2", "b2"],
             &[
-                ("w1", self.gw1.as_slice()),
-                ("b1", self.gb1.as_slice()),
-                ("w2", self.gw2.as_slice()),
-                ("b2", self.gb2.as_slice()),
+                self.gw1.as_slice(),
+                self.gb1.as_slice(),
+                self.gw2.as_slice(),
+                self.gb2.as_slice(),
             ],
+            &mut self.adam_idx,
         )?;
         Ok(loss)
     }
@@ -769,10 +1108,12 @@ struct GruStep {
     u_dim: usize,
     gx: Vec<f32>,
     gh: Vec<f32>,
+    slices: Vec<(usize, usize)>,
+    par: Par,
 }
 
 impl GruStep {
-    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<GruStep> {
+    fn new(art: &ArtifactSpec, model: &ModelSpec, par: &Par) -> Result<GruStep> {
         let (d_dim, hid, u_dim) = gru_dims(model)?;
         let b = data_shape(art, "d")?[0];
         Ok(GruStep {
@@ -782,6 +1123,8 @@ impl GruStep {
             u_dim,
             gx: vec![0.0; b * 3 * hid],
             gh: vec![0.0; b * 3 * hid],
+            slices: nn_slices(b),
+            par: par.clone(),
         })
     }
 
@@ -793,15 +1136,63 @@ impl GruStep {
         probs: &mut [f32],
         h_new: &mut [f32],
     ) -> Result<()> {
-        let (b, dd, hid, u) = (self.b, self.d_dim, self.hid, self.u_dim);
+        let (dd, hid, u) = (self.d_dim, self.hid, self.u_dim);
         let w_x = store.get("w_x")?;
         let w_h = store.get("w_h")?;
         let b_g = store.get("b_g")?;
         let w_o = store.get("w_o")?;
         let b_o = store.get("b_o")?;
-        kernels::gru_cell_into(d, h, w_x, w_h, b_g, h_new, &mut self.gx, &mut self.gh, b, dd, hid);
-        kernels::linear_into(h_new, w_o, Some(b_o), probs, b, hid, u, Act::Sigmoid);
+        let slices = &self.slices;
+        let gx = SendSliceMut::new(&mut self.gx);
+        let gh = SendSliceMut::new(&mut self.gh);
+        let hn = SendSliceMut::new(h_new);
+        let pr = SendSliceMut::new(probs);
+        let task = |si: usize| {
+            let (r0, r1) = slices[si];
+            let m = r1 - r0;
+            // SAFETY: disjoint row bands; Par::run blocks until done.
+            let (gxs, ghs, hns, ps) = unsafe {
+                (
+                    gx.range(r0 * 3 * hid, m * 3 * hid),
+                    gh.range(r0 * 3 * hid, m * 3 * hid),
+                    hn.range(r0 * hid, m * hid),
+                    pr.range(r0 * u, m * u),
+                )
+            };
+            let hb = &h[r0 * hid..r1 * hid];
+            let db = &d[r0 * dd..r1 * dd];
+            kernels::gru_cell_into(db, hb, w_x, w_h, b_g, hns, gxs, ghs, m, dd, hid);
+            kernels::linear_into(hns, w_o, Some(b_o), ps, m, hid, u, Act::Sigmoid);
+        };
+        self.par.run(slices.len(), self.b >= PAR_MIN_FWD_ROWS, &task);
         Ok(())
+    }
+}
+
+/// Per-slice GRU gradient scratch (preallocated at op build).
+struct GruGrads {
+    w_x: Vec<f32>,
+    w_h: Vec<f32>,
+    b_g: Vec<f32>,
+    w_o: Vec<f32>,
+    b_o: Vec<f32>,
+}
+
+impl GruGrads {
+    fn new(d_dim: usize, hid: usize, u_dim: usize) -> GruGrads {
+        GruGrads {
+            w_x: vec![0.0; d_dim * 3 * hid],
+            w_h: vec![0.0; hid * 3 * hid],
+            b_g: vec![0.0; 3 * hid],
+            w_o: vec![0.0; hid * u_dim],
+            b_o: vec![0.0; u_dim],
+        }
+    }
+
+    fn zero(&mut self) {
+        for g in [&mut self.w_x, &mut self.w_h, &mut self.b_g, &mut self.w_o, &mut self.b_o] {
+            g.fill(0.0);
+        }
     }
 }
 
@@ -828,18 +1219,29 @@ struct GruUpdate {
     g_l: Vec<f32>,
     dh: Vec<f32>,
     carry: Vec<f32>,
+    /// Reduced (total) gradients.
     gw_x: Vec<f32>,
     gw_h: Vec<f32>,
     gb_g: Vec<f32>,
     gw_o: Vec<f32>,
     gb_o: Vec<f32>,
+    /// Fixed slice grid over the `B` sequences (rows are independent
+    /// through time, so each slice runs its own forward + backward scan).
+    slices: Vec<(usize, usize)>,
+    part: Vec<GruGrads>,
+    part_loss: Vec<f64>,
+    adam_idx: Vec<[usize; 3]>,
+    par: Par,
 }
 
 impl GruUpdate {
-    fn new(art: &ArtifactSpec, model: &ModelSpec) -> Result<GruUpdate> {
+    fn new(art: &ArtifactSpec, model: &ModelSpec, par: &Par) -> Result<GruUpdate> {
         let (d_dim, hid, u_dim) = gru_dims(model)?;
         let seqs = data_shape(art, "seqs")?;
         let (b, t) = (seqs[0], seqs[1]);
+        let slices = nn_slices(b);
+        let part = slices.iter().map(|_| GruGrads::new(d_dim, hid, u_dim)).collect::<Vec<_>>();
+        let part_loss = vec![0.0f64; slices.len()];
         Ok(GruUpdate {
             b,
             t,
@@ -863,11 +1265,21 @@ impl GruUpdate {
             gb_g: vec![0.0; 3 * hid],
             gw_o: vec![0.0; hid * u_dim],
             gb_o: vec![0.0; u_dim],
+            slices,
+            part,
+            part_loss,
+            adam_idx: Vec::with_capacity(5),
+            par: par.clone(),
         })
     }
 
     /// One Adam step of truncated BPTT over the `[B, T, D]` windows
     /// (`aip_gru_update`: BCE-with-logits on every step's head output).
+    ///
+    /// Sequences are independent through time, so each slice of the fixed
+    /// row grid runs its *own* forward scan and backward-through-time scan
+    /// over its rows; per-slice gradients and f64 loss sums are reduced in
+    /// slice order afterwards (bitwise identical for every `nn_workers`).
     fn run(
         &mut self,
         store: &mut ParamStore,
@@ -875,124 +1287,188 @@ impl GruUpdate {
         seqs: &[f32],
         targets: &[f32],
     ) -> Result<f32> {
-        let (b, t, dd, hid, u) = (self.b, self.t, self.d_dim, self.hid, self.u_dim);
+        let (b, t_len, dd, hid, u) = (self.b, self.t, self.d_dim, self.hid, self.u_dim);
         let (bh, bu) = (b * hid, b * u);
-        let inv = 1.0 / (b * t * u) as f32;
-        let loss;
+        let inv = 1.0 / (b * t_len * u) as f32;
         {
             let w_x = store.get("w_x")?;
             let w_h = store.get("w_h")?;
             let b_g = store.get("b_g")?;
             let w_o = store.get("w_o")?;
             let b_o = store.get("b_o")?;
+            let slices = &self.slices;
+            let h = SendSliceMut::new(&mut self.h);
+            let z = SendSliceMut::new(&mut self.z);
+            let rg = SendSliceMut::new(&mut self.r);
+            let ng = SendSliceMut::new(&mut self.n_);
+            let ghn = SendSliceMut::new(&mut self.ghn);
+            let lg = SendSliceMut::new(&mut self.logits);
+            let xt = SendSliceMut::new(&mut self.xt);
+            let gx = SendSliceMut::new(&mut self.gx);
+            let gh = SendSliceMut::new(&mut self.gh);
+            let gl = SendSliceMut::new(&mut self.g_l);
+            let dh = SendSliceMut::new(&mut self.dh);
+            let carry = SendSliceMut::new(&mut self.carry);
+            let pg = SendSliceMut::new(&mut self.part);
+            let pl = SendSliceMut::new(&mut self.part_loss);
+            let task = |si: usize| {
+                let (r0, r1) = slices[si];
+                let m = r1 - r0;
+                // SAFETY: every range below is this slice's disjoint row
+                // band (per time-plane for the [T, B, ·] buffers); Par::run
+                // blocks until all slices have completed.
+                let (xts, gxs, ghs, gls, dhs, carrys) = unsafe {
+                    (
+                        xt.range(r0 * dd, m * dd),
+                        gx.range(r0 * 3 * hid, m * 3 * hid),
+                        gh.range(r0 * 3 * hid, m * 3 * hid),
+                        gl.range(r0 * u, m * u),
+                        dh.range(r0 * hid, m * hid),
+                        carry.range(r0 * hid, m * hid),
+                    )
+                };
+                let g = unsafe { &mut pg.range(si, 1)[0] };
+                let loss_slot = unsafe { &mut pl.range(si, 1)[0] };
+                let seqs_b = &seqs[r0 * t_len * dd..r1 * t_len * dd];
+                let targ_b = &targets[r0 * t_len * u..r1 * t_len * u];
 
-            // Forward scan, recording gates and hidden states.
-            self.h[..bh].fill(0.0);
-            let mut loss_sum = 0.0f64;
-            for step in 0..t {
-                for bi in 0..b {
-                    let src = (bi * t + step) * dd;
-                    self.xt[bi * dd..(bi + 1) * dd].copy_from_slice(&seqs[src..src + dd]);
-                }
-                kernels::linear_into(&self.xt, w_x, Some(b_g), &mut self.gx, b, dd, 3 * hid, Act::None);
-                let (lo, hi) = self.h.split_at_mut((step + 1) * bh);
-                let h_t = &lo[step * bh..];
-                let h_next = &mut hi[..bh];
-                kernels::linear_into(h_t, w_h, None, &mut self.gh, b, hid, 3 * hid, Act::None);
-                for bi in 0..b {
-                    for j in 0..hid {
-                        let g3 = bi * 3 * hid;
-                        let zv = kernels::sigmoid(self.gx[g3 + j] + self.gh[g3 + j]);
-                        let rv = kernels::sigmoid(self.gx[g3 + hid + j] + self.gh[g3 + hid + j]);
-                        let ghn_v = self.gh[g3 + 2 * hid + j];
-                        let nv = (self.gx[g3 + 2 * hid + j] + rv * ghn_v).tanh();
-                        let idx = step * bh + bi * hid + j;
-                        self.z[idx] = zv;
-                        self.r[idx] = rv;
-                        self.n_[idx] = nv;
-                        self.ghn[idx] = ghn_v;
-                        h_next[bi * hid + j] = (1.0 - zv) * nv + zv * h_t[bi * hid + j];
+                // Forward scan, recording gates and hidden states.
+                unsafe { h.range(r0 * hid, m * hid) }.fill(0.0);
+                let mut loss_sum = 0.0f64;
+                for step in 0..t_len {
+                    for li in 0..m {
+                        let src = (li * t_len + step) * dd;
+                        xts[li * dd..(li + 1) * dd].copy_from_slice(&seqs_b[src..src + dd]);
+                    }
+                    kernels::linear_into(xts, w_x, Some(b_g), gxs, m, dd, 3 * hid, Act::None);
+                    let h_t = unsafe { &*h.range(step * bh + r0 * hid, m * hid) };
+                    let h_next = unsafe { h.range((step + 1) * bh + r0 * hid, m * hid) };
+                    kernels::linear_into(h_t, w_h, None, ghs, m, hid, 3 * hid, Act::None);
+                    let (zs, rs, ns, ghns) = unsafe {
+                        (
+                            z.range(step * bh + r0 * hid, m * hid),
+                            rg.range(step * bh + r0 * hid, m * hid),
+                            ng.range(step * bh + r0 * hid, m * hid),
+                            ghn.range(step * bh + r0 * hid, m * hid),
+                        )
+                    };
+                    for li in 0..m {
+                        for j in 0..hid {
+                            let g3 = li * 3 * hid;
+                            let zv = kernels::sigmoid(gxs[g3 + j] + ghs[g3 + j]);
+                            let rv =
+                                kernels::sigmoid(gxs[g3 + hid + j] + ghs[g3 + hid + j]);
+                            let ghn_v = ghs[g3 + 2 * hid + j];
+                            let nv = (gxs[g3 + 2 * hid + j] + rv * ghn_v).tanh();
+                            let idx = li * hid + j;
+                            zs[idx] = zv;
+                            rs[idx] = rv;
+                            ns[idx] = nv;
+                            ghns[idx] = ghn_v;
+                            h_next[idx] = (1.0 - zv) * nv + zv * h_t[idx];
+                        }
+                    }
+                    let lrows = unsafe { lg.range(step * bu + r0 * u, m * u) };
+                    kernels::linear_into(h_next, w_o, Some(b_o), lrows, m, hid, u, Act::None);
+                    for li in 0..m {
+                        let lrow = &lrows[li * u..(li + 1) * u];
+                        let yrow = &targ_b[(li * t_len + step) * u..(li * t_len + step + 1) * u];
+                        for (&l, &y) in lrow.iter().zip(yrow) {
+                            loss_sum += kernels::bce_with_logits_elem(l, y) as f64;
+                        }
                     }
                 }
-                let lrows = &mut self.logits[step * bu..(step + 1) * bu];
-                kernels::linear_into(h_next, w_o, Some(b_o), lrows, b, hid, u, Act::None);
-                for bi in 0..b {
-                    let lrow = &lrows[bi * u..(bi + 1) * u];
-                    let yrow = &targets[(bi * t + step) * u..(bi * t + step + 1) * u];
-                    for (&l, &y) in lrow.iter().zip(yrow) {
-                        loss_sum += kernels::bce_with_logits_elem(l, y) as f64;
-                    }
-                }
-            }
-            loss = (loss_sum as f32) * inv;
+                *loss_slot = loss_sum;
 
-            // Backward through time.
-            self.gw_x.fill(0.0);
-            self.gw_h.fill(0.0);
-            self.gb_g.fill(0.0);
-            self.gw_o.fill(0.0);
-            self.gb_o.fill(0.0);
-            self.carry.fill(0.0);
-            for step in (0..t).rev() {
-                for bi in 0..b {
-                    let lrow = &self.logits[step * bu + bi * u..step * bu + (bi + 1) * u];
-                    let yrow = &targets[(bi * t + step) * u..(bi * t + step + 1) * u];
-                    let glrow = &mut self.g_l[bi * u..(bi + 1) * u];
-                    for ((gl, &l), &y) in glrow.iter_mut().zip(lrow).zip(yrow) {
-                        *gl = (kernels::sigmoid(l) - y) * inv;
+                // Backward through time for this slice's rows.
+                g.zero();
+                carrys.fill(0.0);
+                for step in (0..t_len).rev() {
+                    let lrows = unsafe { &*lg.range(step * bu + r0 * u, m * u) };
+                    for li in 0..m {
+                        let lrow = &lrows[li * u..(li + 1) * u];
+                        let yrow = &targ_b[(li * t_len + step) * u..(li * t_len + step + 1) * u];
+                        let glrow = &mut gls[li * u..(li + 1) * u];
+                        for ((gl_, &l), &y) in glrow.iter_mut().zip(lrow).zip(yrow) {
+                            *gl_ = (kernels::sigmoid(l) - y) * inv;
+                        }
                     }
-                }
-                let h_next = &self.h[(step + 1) * bh..(step + 2) * bh];
-                let h_t = &self.h[step * bh..(step + 1) * bh];
-                kernels::matmul_at_b_acc(h_next, &self.g_l, &mut self.gw_o, b, hid, u);
-                kernels::colsum_acc(&self.g_l, &mut self.gb_o, u);
-                kernels::matmul_bt_into(&self.g_l, w_o, &mut self.dh, b, u, hid);
-                for (d_, &c) in self.dh.iter_mut().zip(&self.carry) {
-                    *d_ += c;
-                }
-                for bi in 0..b {
-                    for j in 0..hid {
-                        let idx = step * bh + bi * hid + j;
-                        let (zv, rv, nv, ghn_v) =
-                            (self.z[idx], self.r[idx], self.n_[idx], self.ghn[idx]);
-                        let dh_v = self.dh[bi * hid + j];
-                        let h_prev = h_t[bi * hid + j];
-                        let dz = dh_v * (h_prev - nv);
-                        let dn = dh_v * (1.0 - zv);
-                        let dan = dn * (1.0 - nv * nv);
-                        let dr = dan * ghn_v;
-                        let daz = dz * zv * (1.0 - zv);
-                        let dar = dr * rv * (1.0 - rv);
-                        let g3 = bi * 3 * hid;
-                        self.gx[g3 + j] = daz;
-                        self.gh[g3 + j] = daz;
-                        self.gx[g3 + hid + j] = dar;
-                        self.gh[g3 + hid + j] = dar;
-                        self.gx[g3 + 2 * hid + j] = dan;
-                        self.gh[g3 + 2 * hid + j] = dan * rv;
-                        self.carry[bi * hid + j] = dh_v * zv;
+                    let h_next = unsafe { &*h.range((step + 1) * bh + r0 * hid, m * hid) };
+                    let h_t = unsafe { &*h.range(step * bh + r0 * hid, m * hid) };
+                    kernels::matmul_at_b_acc(h_next, gls, &mut g.w_o, m, hid, u);
+                    kernels::colsum_acc(gls, &mut g.b_o, u);
+                    kernels::matmul_bt_into(gls, w_o, dhs, m, u, hid);
+                    for (d_, &c) in dhs.iter_mut().zip(carrys.iter()) {
+                        *d_ += c;
                     }
+                    let (zs, rs, ns, ghns) = unsafe {
+                        (
+                            &*z.range(step * bh + r0 * hid, m * hid),
+                            &*rg.range(step * bh + r0 * hid, m * hid),
+                            &*ng.range(step * bh + r0 * hid, m * hid),
+                            &*ghn.range(step * bh + r0 * hid, m * hid),
+                        )
+                    };
+                    for li in 0..m {
+                        for j in 0..hid {
+                            let idx = li * hid + j;
+                            let (zv, rv, nv, ghn_v) = (zs[idx], rs[idx], ns[idx], ghns[idx]);
+                            let dh_v = dhs[idx];
+                            let h_prev = h_t[idx];
+                            let dz = dh_v * (h_prev - nv);
+                            let dn = dh_v * (1.0 - zv);
+                            let dan = dn * (1.0 - nv * nv);
+                            let dr = dan * ghn_v;
+                            let daz = dz * zv * (1.0 - zv);
+                            let dar = dr * rv * (1.0 - rv);
+                            let g3 = li * 3 * hid;
+                            gxs[g3 + j] = daz;
+                            ghs[g3 + j] = daz;
+                            gxs[g3 + hid + j] = dar;
+                            ghs[g3 + hid + j] = dar;
+                            gxs[g3 + 2 * hid + j] = dan;
+                            ghs[g3 + 2 * hid + j] = dan * rv;
+                            carrys[idx] = dh_v * zv;
+                        }
+                    }
+                    for li in 0..m {
+                        let src = (li * t_len + step) * dd;
+                        xts[li * dd..(li + 1) * dd].copy_from_slice(&seqs_b[src..src + dd]);
+                    }
+                    kernels::matmul_at_b_acc(xts, gxs, &mut g.w_x, m, dd, 3 * hid);
+                    kernels::colsum_acc(gxs, &mut g.b_g, 3 * hid);
+                    kernels::matmul_at_b_acc(h_t, ghs, &mut g.w_h, m, hid, 3 * hid);
+                    kernels::matmul_bt_acc(ghs, w_h, carrys, m, 3 * hid, hid);
                 }
-                for bi in 0..b {
-                    let src = (bi * t + step) * dd;
-                    self.xt[bi * dd..(bi + 1) * dd].copy_from_slice(&seqs[src..src + dd]);
-                }
-                kernels::matmul_at_b_acc(&self.xt, &self.gx, &mut self.gw_x, b, dd, 3 * hid);
-                kernels::colsum_acc(&self.gx, &mut self.gb_g, 3 * hid);
-                kernels::matmul_at_b_acc(h_t, &self.gh, &mut self.gw_h, b, hid, 3 * hid);
-                kernels::matmul_bt_acc(&self.gh, w_h, &mut self.carry, b, 3 * hid, hid);
-            }
+            };
+            self.par.run(slices.len(), true, &task);
+        }
+        // Ordered reduction in fixed slice order.
+        let loss = (self.part_loss.iter().sum::<f64>() as f32) * inv;
+        self.gw_x.fill(0.0);
+        self.gw_h.fill(0.0);
+        self.gb_g.fill(0.0);
+        self.gw_o.fill(0.0);
+        self.gb_o.fill(0.0);
+        for part in &self.part {
+            kernels::add_assign(&mut self.gw_x, &part.w_x);
+            kernels::add_assign(&mut self.gw_h, &part.w_h);
+            kernels::add_assign(&mut self.gb_g, &part.b_g);
+            kernels::add_assign(&mut self.gw_o, &part.w_o);
+            kernels::add_assign(&mut self.gb_o, &part.b_o);
         }
         adam_apply(
             store,
             lr,
+            &["w_x", "w_h", "b_g", "w_o", "b_o"],
             &[
-                ("w_x", self.gw_x.as_slice()),
-                ("w_h", self.gw_h.as_slice()),
-                ("b_g", self.gb_g.as_slice()),
-                ("w_o", self.gw_o.as_slice()),
-                ("b_o", self.gb_o.as_slice()),
+                self.gw_x.as_slice(),
+                self.gw_h.as_slice(),
+                self.gb_g.as_slice(),
+                self.gw_o.as_slice(),
+                self.gb_o.as_slice(),
             ],
+            &mut self.adam_idx,
         )?;
         Ok(loss)
     }

@@ -1,12 +1,17 @@
-//! Allocation audit of the native forward hot path: after a warmup call
-//! (which builds the per-artifact scratch once), policy `forward_into` and
-//! AIP `predict` must perform **zero heap allocations per step**. Pinned
+//! Allocation audit of the native hot paths: after a warmup call (which
+//! builds the per-artifact scratch — including per-slice gradient scratch
+//! and the cached Adam slot indices — once), policy `forward_into` / AIP
+//! `predict` **and the whole training path** (fused whole-phase PPO
+//! update, FNN BCE step, GRU BPTT step) must perform **zero steady-state
+//! heap allocations**, on both the serial and the data-parallel engine
+//! (pool dispatch broadcasts a borrowed pointer — no boxed jobs). Pinned
 //! with a counting global allocator; everything lives in one `#[test]` so
 //! no parallel test can pollute the counter.
 
+use ials::config::PpoConfig;
 use ials::influence::{InfluencePredictor, NeuralAip};
 use ials::rl::Policy;
-use ials::runtime::Runtime;
+use ials::runtime::{DataArg, Runtime, SynthGeometry};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -107,4 +112,105 @@ fn native_forward_hot_path_allocates_nothing() {
     });
     assert_eq!(n, 0, "GRU AIP predict allocated {n} times in 100 steps");
     assert!(wprobs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+
+    // ---- Training path: fused PPO + FNN BCE + GRU BPTT, serial and
+    // data-parallel (per-worker gradient scratch is preallocated at op
+    // build; pool dispatch is allocation-free by construction). ----
+    let geom = SynthGeometry {
+        rollout_b: 4,
+        rollout_t: 32,
+        ppo_epochs: 2,
+        ppo_minibatch: 32,
+        aip_batch: 64,
+        gru_seq_b: 8,
+        gru_seq_t: 8,
+        ..SynthGeometry::default()
+    };
+    for nn_workers in [1usize, 2] {
+        let label = format!("nn_workers={nn_workers}");
+        // Pool threads (if any) spawn here, before counting starts.
+        let rt = Rc::new(if nn_workers == 1 {
+            Runtime::native(&geom)
+        } else {
+            Runtime::native_parallel(&geom, nn_workers)
+        });
+
+        // Fused whole-phase PPO update (all epochs × minibatches, one call).
+        let n_rows = 4 * 32;
+        let cfg = PpoConfig { num_envs: 4, rollout_len: 32, epochs: 2, minibatch: 32, ..PpoConfig::default() };
+        let mut policy = Policy::new(rt.clone(), "policy_traffic", 4).unwrap();
+        let mut perm: Vec<i32> = Vec::with_capacity(2 * n_rows);
+        for _ in 0..2 {
+            perm.extend(0..n_rows as i32);
+        }
+        let p_obs = vec![0.25f32; n_rows * 42];
+        let p_act: Vec<i32> = (0..n_rows as i32).map(|i| i % 2).collect();
+        let p_adv = vec![0.5f32; n_rows];
+        let p_ret = vec![0.25f32; n_rows];
+        let p_lp = vec![(0.5f32).ln(); n_rows];
+        for _ in 0..2 {
+            policy.update_fused(&cfg, &perm, &p_obs, &p_act, &p_adv, &p_ret, &p_lp).unwrap();
+        }
+        let n = counted(|| {
+            for _ in 0..3 {
+                policy.update_fused(&cfg, &perm, &p_obs, &p_act, &p_adv, &p_ret, &p_lp).unwrap();
+            }
+        });
+        assert_eq!(n, 0, "[{label}] fused PPO update allocated {n} times in 3 phases");
+
+        // FNN BCE training step.
+        let mut fnn_store = rt.load_store("aip_traffic").unwrap();
+        let lr = [1e-3f32];
+        let f_d = vec![0.5f32; 64 * 40];
+        let f_y = vec![1.0f32; 64 * 4];
+        let mut loss = [0.0f32; 1];
+        for _ in 0..2 {
+            rt.call_into(
+                "aip_traffic_update",
+                &mut fnn_store,
+                &[DataArg::F32(&lr), DataArg::F32(&f_d), DataArg::F32(&f_y)],
+                &mut [loss.as_mut_slice()],
+            )
+            .unwrap();
+        }
+        let n = counted(|| {
+            for _ in 0..5 {
+                rt.call_into(
+                    "aip_traffic_update",
+                    &mut fnn_store,
+                    &[DataArg::F32(&lr), DataArg::F32(&f_d), DataArg::F32(&f_y)],
+                    &mut [loss.as_mut_slice()],
+                )
+                .unwrap();
+            }
+        });
+        assert_eq!(n, 0, "[{label}] FNN BCE update allocated {n} times in 5 steps");
+
+        // GRU BPTT training step.
+        let mut gru_store = rt.load_store("aip_warehouse").unwrap();
+        let g_seqs = vec![0.5f32; 8 * 8 * 24];
+        let g_y = vec![0.0f32; 8 * 8 * 12];
+        for _ in 0..2 {
+            rt.call_into(
+                "aip_warehouse_update",
+                &mut gru_store,
+                &[DataArg::F32(&lr), DataArg::F32(&g_seqs), DataArg::F32(&g_y)],
+                &mut [loss.as_mut_slice()],
+            )
+            .unwrap();
+        }
+        let n = counted(|| {
+            for _ in 0..5 {
+                rt.call_into(
+                    "aip_warehouse_update",
+                    &mut gru_store,
+                    &[DataArg::F32(&lr), DataArg::F32(&g_seqs), DataArg::F32(&g_y)],
+                    &mut [loss.as_mut_slice()],
+                )
+                .unwrap();
+            }
+        });
+        assert_eq!(n, 0, "[{label}] GRU BPTT update allocated {n} times in 5 steps");
+        assert!(loss[0].is_finite());
+    }
 }

@@ -1,0 +1,218 @@
+//! Bitwise determinism of the data-parallel native NN engine: at a fixed
+//! seed, `[runtime] nn_workers ∈ {2, 3, 4}` must produce **bitwise
+//! identical** trained parameters, logits and episode metrics to
+//! `nn_workers = 1`, for both domains — including worker counts that do
+//! not divide the batch / minibatch. This is the NN-half counterpart of
+//! `integration_parallel.rs` (which pins the sim half): batch rows
+//! partition over a fixed slice grid and per-slice gradient partials
+//! reduce in fixed slice order, so the worker count can only change
+//! wall-clock, never bits.
+
+use ials::collect::{collect_dataset_sharded, FeatureKind};
+use ials::config::{PpoConfig, TrafficConfig, WarehouseConfig};
+use ials::core::VecEnv;
+use ials::ials::IalsVecEnv;
+use ials::influence::{train_fnn, train_gru, InfluencePredictor, NeuralAip};
+use ials::nn::ParamStore;
+use ials::rl::{Policy, PpoTrainer};
+use ials::runtime::{Runtime, SynthGeometry};
+use ials::sim::traffic::{TrafficGlobalEnv, TrafficLocalEnv};
+use ials::sim::warehouse::{WarehouseGlobalEnv, WarehouseLocalEnv};
+use ials::util::Pcg32;
+use std::rc::Rc;
+
+/// Everything a short training run produces that could possibly diverge.
+struct RunOut {
+    policy_params: Vec<Vec<f32>>,
+    aip_params: Vec<Vec<f32>>,
+    aip_losses: Vec<f32>,
+    logits: Vec<f32>,
+    values: Vec<f32>,
+    /// `[total_loss, approx_kl, rollout_reward]` per PPO iteration.
+    metrics: Vec<[f32; 3]>,
+}
+
+fn snapshot(store: &ParamStore) -> Vec<Vec<f32>> {
+    store.names().iter().map(|n| store.get(n).unwrap().to_vec()).collect()
+}
+
+fn assert_bitwise_eq(a: &RunOut, b: &RunOut, what: &str) {
+    assert_eq!(a.aip_losses, b.aip_losses, "{what}: AIP training losses diverged");
+    assert_eq!(a.aip_params, b.aip_params, "{what}: trained AIP parameters diverged");
+    assert_eq!(a.metrics, b.metrics, "{what}: PPO episode metrics diverged");
+    assert_eq!(a.policy_params, b.policy_params, "{what}: trained policy parameters diverged");
+    assert_eq!(a.logits, b.logits, "{what}: post-training logits diverged");
+    assert_eq!(a.values, b.values, "{what}: post-training values diverged");
+}
+
+/// Short fig3-style traffic IALS training: Algorithm-1 collect → FNN AIP
+/// training → 2 PPO iterations on the IALS (fused whole-phase updates).
+/// The sim half stays serial so only the NN worker count varies.
+fn run_traffic(nn_workers: usize) -> RunOut {
+    let geom = SynthGeometry {
+        rollout_b: 8,
+        rollout_t: 16,
+        ppo_epochs: 2,
+        ppo_minibatch: 32,
+        aip_batch: 64,
+        ..SynthGeometry::default()
+    };
+    let rt = Rc::new(Runtime::native_parallel(&geom, nn_workers));
+    let seed = 7u64;
+    let tcfg = TrafficConfig::default();
+
+    let data = collect_dataset_sharded(
+        || TrafficGlobalEnv::new(&tcfg),
+        1500,
+        seed,
+        FeatureKind::Dset,
+        1,
+    );
+    let mut aip = NeuralAip::new(rt.clone(), "aip_traffic", 8).unwrap();
+    let spec = rt.manifest.model("aip_traffic").unwrap().clone();
+    aip.store.reinit(&spec, seed ^ 0xA1B2);
+    let aip_losses =
+        train_fnn(&rt, &mut aip.store, "aip_traffic_update", &data, 1, 64, 1e-3, seed).unwrap();
+    let aip_params = snapshot(&aip.store);
+
+    let envs: Vec<TrafficLocalEnv> = (0..8).map(|_| TrafficLocalEnv::new(&tcfg)).collect();
+    let mut env = IalsVecEnv::new(envs, Box::new(aip));
+    let cfg = PpoConfig {
+        num_envs: 8,
+        rollout_len: 16,
+        epochs: 2,
+        minibatch: 32,
+        lr: 1e-3,
+        ..PpoConfig::default()
+    };
+    let mut policy = Policy::new(rt.clone(), "policy_traffic", 8).unwrap();
+    policy.reinit(seed).unwrap();
+    let mut trainer = PpoTrainer::new(&cfg, env.obs_dim(), seed);
+    env.reset_all(seed);
+    let mut metrics = Vec::new();
+    for _ in 0..2 {
+        let s = trainer.train_iteration(&mut env, &mut policy).unwrap();
+        metrics.push([s.total_loss, s.approx_kl, s.rollout_reward]);
+    }
+
+    let mut rng = Pcg32::seeded(99);
+    let obs: Vec<f32> = (0..8 * policy.obs_dim).map(|_| rng.f32() - 0.5).collect();
+    let mut logits = vec![0.0f32; 8 * policy.act_dim];
+    let mut values = vec![0.0f32; 8];
+    policy.forward_into(&obs, &mut logits, &mut values).unwrap();
+    RunOut { policy_params: snapshot(&policy.store), aip_params, aip_losses, logits, values, metrics }
+}
+
+/// Short fig5-style warehouse GRU-IALS training: collect → GRU BPTT AIP
+/// training → 2 PPO iterations on the IALS with the recurrent predictor.
+fn run_warehouse(nn_workers: usize) -> RunOut {
+    let geom = SynthGeometry {
+        rollout_b: 8,
+        rollout_t: 16,
+        ppo_epochs: 2,
+        ppo_minibatch: 32,
+        gru_seq_b: 8,
+        gru_seq_t: 8,
+        ..SynthGeometry::default()
+    };
+    let rt = Rc::new(Runtime::native_parallel(&geom, nn_workers));
+    let seed = 11u64;
+    let wcfg = WarehouseConfig::default();
+
+    let data = collect_dataset_sharded(
+        || WarehouseGlobalEnv::new(&wcfg),
+        1200,
+        seed,
+        FeatureKind::Dset,
+        1,
+    );
+    let mut aip = NeuralAip::new(rt.clone(), "aip_warehouse", 8).unwrap();
+    let spec = rt.manifest.model("aip_warehouse").unwrap().clone();
+    aip.store.reinit(&spec, seed ^ 0xA1B2);
+    let aip_losses =
+        train_gru(&rt, &mut aip.store, "aip_warehouse_update", &data, 1, 8, 8, 1e-3, seed)
+            .unwrap();
+    let aip_params = snapshot(&aip.store);
+
+    let envs: Vec<WarehouseLocalEnv> = (0..8).map(|_| WarehouseLocalEnv::new(&wcfg)).collect();
+    let mut env = IalsVecEnv::new(envs, Box::new(aip));
+    let cfg = PpoConfig {
+        num_envs: 8,
+        rollout_len: 16,
+        epochs: 2,
+        minibatch: 32,
+        lr: 1e-3,
+        ..PpoConfig::default()
+    };
+    let mut policy = Policy::new(rt.clone(), "policy_warehouse_nm", 8).unwrap();
+    policy.reinit(seed).unwrap();
+    let mut trainer = PpoTrainer::new(&cfg, env.obs_dim(), seed);
+    env.reset_all(seed);
+    let mut metrics = Vec::new();
+    for _ in 0..2 {
+        let s = trainer.train_iteration(&mut env, &mut policy).unwrap();
+        metrics.push([s.total_loss, s.approx_kl, s.rollout_reward]);
+    }
+
+    let mut rng = Pcg32::seeded(101);
+    let obs: Vec<f32> = (0..8 * policy.obs_dim).map(|_| rng.f32() - 0.5).collect();
+    let mut logits = vec![0.0f32; 8 * policy.act_dim];
+    let mut values = vec![0.0f32; 8];
+    policy.forward_into(&obs, &mut logits, &mut values).unwrap();
+    RunOut { policy_params: snapshot(&policy.store), aip_params, aip_losses, logits, values, metrics }
+}
+
+#[test]
+fn traffic_fig3_training_is_nn_worker_count_invariant() {
+    let reference = run_traffic(1);
+    assert!(
+        reference.metrics.iter().all(|m| m.iter().all(|x| x.is_finite())),
+        "reference metrics must be finite"
+    );
+    // 3 does not divide the minibatch (32), the rollout (128) or the slice
+    // grid — the fixed-grid + ordered-reduction scheme must not care.
+    for k in [2usize, 3, 4] {
+        let other = run_traffic(k);
+        assert_bitwise_eq(&reference, &other, &format!("traffic nn_workers={k}"));
+    }
+}
+
+#[test]
+fn warehouse_fig5_gru_training_is_nn_worker_count_invariant() {
+    let reference = run_warehouse(1);
+    for k in [2usize, 3, 4] {
+        let other = run_warehouse(k);
+        assert_bitwise_eq(&reference, &other, &format!("warehouse nn_workers={k}"));
+    }
+}
+
+#[test]
+fn parallel_forwards_match_serial_bitwise_above_threshold() {
+    // Batch 256 is far above the parallel-engagement threshold, so the
+    // pooled runtime actually fans out — and must still be bitwise equal.
+    let geom = SynthGeometry { rollout_b: 256, ..SynthGeometry::default() };
+    let serial = Rc::new(Runtime::native(&geom));
+    let parallel = Rc::new(Runtime::native_parallel(&geom, 4));
+
+    let mut rng = Pcg32::seeded(5);
+    let obs: Vec<f32> = (0..256 * 42).map(|_| rng.f32() - 0.5).collect();
+    let mut policy_s = Policy::new(serial.clone(), "policy_traffic", 256).unwrap();
+    let mut policy_p = Policy::new(parallel.clone(), "policy_traffic", 256).unwrap();
+    let (mut la, mut lb) = (vec![0.0f32; 256 * 2], vec![0.0f32; 256 * 2]);
+    let (mut va, mut vb) = (vec![0.0f32; 256], vec![0.0f32; 256]);
+    policy_s.forward_into(&obs, &mut la, &mut va).unwrap();
+    policy_p.forward_into(&obs, &mut lb, &mut vb).unwrap();
+    assert_eq!(la, lb, "policy logits diverged");
+    assert_eq!(va, vb, "policy values diverged");
+
+    // Recurrent AIP step (GRU cell + head) over a few steps of state.
+    let mut gru_s = NeuralAip::new(serial, "aip_warehouse", 256).unwrap();
+    let mut gru_p = NeuralAip::new(parallel, "aip_warehouse", 256).unwrap();
+    let dsets: Vec<f32> = (0..256 * 24).map(|_| rng.f32()).collect();
+    let (mut pa, mut pb) = (vec![0.0f32; 256 * 12], vec![0.0f32; 256 * 12]);
+    for _ in 0..3 {
+        gru_s.predict(&dsets, &mut pa).unwrap();
+        gru_p.predict(&dsets, &mut pb).unwrap();
+        assert_eq!(pa, pb, "GRU AIP probs diverged");
+    }
+}

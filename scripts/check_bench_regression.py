@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""CI bench-regression guard.
+
+Compares freshly produced bench JSONs (rust/results/*.json) against the
+committed baselines (results/*.json at the repo root) and fails the job
+when any cell's throughput regresses by more than the threshold.
+
+Matching: cells are keyed by every non-metric field (op, model, domain,
+batch, minibatch, num_workers, nn_workers, backend, ...); the throughput
+metric is whichever of `rows_per_sec` / `steps_per_sec` the cell carries.
+Cells present only in the fresh run (new benches, new sweep points) or
+only in the baseline (retired cells) are skipped — the guard never blocks
+adding coverage, only losing speed.
+
+Usage:
+  python3 scripts/check_bench_regression.py \
+      --baseline results --fresh rust/results [--max-regression 0.25]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+THROUGHPUT_KEYS = ("rows_per_sec", "steps_per_sec")
+
+
+def cell_key(cell):
+    return tuple(
+        sorted(
+            (k, v)
+            for k, v in cell.items()
+            if not isinstance(v, float) or k in ("batch", "minibatch", "num_workers", "nn_workers")
+        )
+    )
+
+
+def throughput(cell):
+    for k in THROUGHPUT_KEYS:
+        if k in cell:
+            return float(cell[k])
+    return None
+
+
+def load_cells(path):
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: expected a JSON array of cells")
+    return {cell_key(c): c for c in data if isinstance(c, dict)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True, help="directory of committed baseline JSONs")
+    ap.add_argument("--fresh", required=True, help="directory of freshly produced JSONs")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.25,
+        help="fail when fresh < baseline * (1 - this) in any matched cell",
+    )
+    args = ap.parse_args()
+
+    if not os.path.isdir(args.baseline):
+        print(f"no baseline directory {args.baseline}; nothing to guard")
+        return 0
+
+    regressions = []
+    compared = skipped = 0
+    for name in sorted(os.listdir(args.baseline)):
+        if not name.endswith(".json"):
+            continue
+        fresh_path = os.path.join(args.fresh, name)
+        if not os.path.exists(fresh_path):
+            print(f"[skip] {name}: no fresh run")
+            continue
+        base = load_cells(os.path.join(args.baseline, name))
+        fresh = load_cells(fresh_path)
+        for key, bcell in base.items():
+            b = throughput(bcell)
+            fcell = fresh.get(key)
+            f = throughput(fcell) if fcell else None
+            if b is None or f is None or b <= 0:
+                skipped += 1
+                continue
+            compared += 1
+            floor = b * (1.0 - args.max_regression)
+            ident = {k: v for k, v in bcell.items() if throughput({k: v}) is None}
+            if f < floor:
+                regressions.append((name, ident, b, f))
+                print(f"[FAIL] {name} {ident}: {f:.1f} < {floor:.1f} (baseline {b:.1f})")
+            else:
+                print(f"[ok]   {name} {ident}: {f:.1f} vs baseline {b:.1f}")
+        for key in fresh.keys() - base.keys():
+            skipped += 1
+
+    print(f"\ncompared {compared} cells, skipped {skipped} (no baseline / no metric)")
+    if regressions:
+        print(f"{len(regressions)} cell(s) regressed more than "
+              f"{args.max_regression:.0%} vs committed baselines")
+        return 1
+    print("no throughput regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
