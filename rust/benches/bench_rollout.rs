@@ -1,0 +1,179 @@
+//! End-to-end IALS rollout throughput with the **real native NN in the
+//! loop** — observe → batched policy forward → action sampling → env step,
+//! i.e. the PPO collection hot loop (`bench_parallel_scaling` only
+//! measures fixed-marginal-AIP sim throughput). Sweeps `num_workers × B`
+//! for the fig3 traffic IALS (FNN AIP) and the fig5 warehouse GRU-IALS
+//! (frame-stacked, recurrent AIP), comparing the **fused** single-dispatch
+//! step pipeline against the PR 3 **sandwich** (parallel gather →
+//! coordinator-batched AIP call → parallel step). Both pipelines are
+//! bitwise identical at the same seed; only wall-clock may differ.
+//!
+//! Run: `cargo bench --bench bench_rollout`
+//! Emits a table to stdout and a JSON record (one object per cell) to
+//! `results/bench_rollout.json` for the bench trajectory / CI regression
+//! guard.
+
+use ials::bench_harness::{Bench, Table};
+use ials::config::{TrafficConfig, WarehouseConfig};
+use ials::core::{FrameStackVec, VecEnv};
+use ials::ials::IalsVecEnv;
+use ials::influence::NeuralAip;
+use ials::rl::Policy;
+use ials::runtime::{Runtime, SynthGeometry};
+use ials::sim::traffic::TrafficLocalEnv;
+use ials::sim::warehouse::WarehouseLocalEnv;
+use ials::util::Pcg32;
+use std::io::Write;
+use std::rc::Rc;
+
+const WORKER_SWEEP: [usize; 3] = [1, 2, 4];
+const BATCH_SWEEP: [usize; 2] = [256, 1024];
+const WH_STACK: usize = 8;
+
+struct Cell {
+    domain: &'static str,
+    batch: usize,
+    workers: usize,
+    pipeline: &'static str,
+    steps_per_sec: f64,
+    speedup_vs_sandwich: f64,
+}
+
+/// One rollout-style measurement: the PPO collection loop minus the buffer
+/// writes (observe, batched forward, sample, step), all scratch reused.
+fn measure(env: &mut dyn VecEnv, policy: &mut Policy, vec_steps: usize, label: &str) -> f64 {
+    let b = env.num_envs();
+    assert_eq!(env.obs_dim(), policy.obs_dim);
+    let mut rng = Pcg32::seeded(1);
+    let mut obs = vec![0.0f32; b * policy.obs_dim];
+    let mut logits = vec![0.0f32; b * policy.act_dim];
+    let mut values = vec![0.0f32; b];
+    let mut log_probs = vec![0.0f32; b];
+    let mut actions = vec![0usize; b];
+    let mut rewards = vec![0.0f32; b];
+    let mut dones = vec![false; b];
+    env.reset_all(7);
+    let r = Bench::new(label).warmup(1).reps(3).run((vec_steps * b) as f64, || {
+        for _ in 0..vec_steps {
+            env.observe_all(&mut obs);
+            policy.forward_into(&obs, &mut logits, &mut values).expect("policy forward");
+            policy.sample_actions(&logits, &mut rng, &mut actions, &mut log_probs);
+            env.step_all(&actions, &mut rewards, &mut dones);
+        }
+    });
+    r.throughput()
+}
+
+/// Fig3 traffic IALS: FNN AIP + policy_traffic, `w` sim workers sharing
+/// the pool with `w` NN workers (the sandwich's batched calls get the
+/// same parallelism the fused pipeline folds into its dispatch).
+fn traffic_rate(b: usize, w: usize, fused: bool, vec_steps: usize, label: &str) -> f64 {
+    let geom = SynthGeometry { rollout_b: b, ..SynthGeometry::default() };
+    let rt = Rc::new(Runtime::native_parallel(&geom, w));
+    let cfg = TrafficConfig::default();
+    let envs: Vec<TrafficLocalEnv> = (0..b).map(|_| TrafficLocalEnv::new(&cfg)).collect();
+    let aip = NeuralAip::new(rt.clone(), "aip_traffic", b).expect("FNN AIP");
+    let mut env = IalsVecEnv::with_workers(envs, Box::new(aip), w);
+    env.set_fused(fused);
+    let mut policy = Policy::new(rt, "policy_traffic", b).expect("policy");
+    measure(&mut env, &mut policy, vec_steps, label)
+}
+
+/// Fig5 warehouse GRU-IALS: recurrent AIP + 8-frame stacking +
+/// policy_warehouse, same worker layout as traffic.
+fn warehouse_rate(b: usize, w: usize, fused: bool, vec_steps: usize, label: &str) -> f64 {
+    let geom = SynthGeometry { rollout_b: b, ..SynthGeometry::default() };
+    let rt = Rc::new(Runtime::native_parallel(&geom, w));
+    let cfg = WarehouseConfig::default();
+    let envs: Vec<WarehouseLocalEnv> = (0..b).map(|_| WarehouseLocalEnv::new(&cfg)).collect();
+    let aip = NeuralAip::new(rt.clone(), "aip_warehouse", b).expect("GRU AIP");
+    let mut inner = IalsVecEnv::with_workers(envs, Box::new(aip), w);
+    inner.set_fused(fused);
+    let mut env = FrameStackVec::new(inner, WH_STACK);
+    let mut policy = Policy::new(rt, "policy_warehouse", b).expect("policy");
+    measure(&mut env, &mut policy, vec_steps, label)
+}
+
+fn sweep(domain: &'static str, cells: &mut Vec<Cell>) {
+    for &b in &BATCH_SWEEP {
+        // Keep total work roughly constant across batch sizes.
+        let vec_steps = (8192 / b).max(8);
+        for &w in &WORKER_SWEEP {
+            let mut rates = [0.0f64; 2];
+            for (k, pipeline) in ["sandwich", "fused"].into_iter().enumerate() {
+                let label = format!("{domain}/B{b}/w{w}/{pipeline}");
+                let fused = pipeline == "fused";
+                rates[k] = match domain {
+                    "traffic" => traffic_rate(b, w, fused, vec_steps, &label),
+                    _ => warehouse_rate(b, w, fused, vec_steps, &label),
+                };
+                cells.push(Cell {
+                    domain,
+                    batch: b,
+                    workers: w,
+                    pipeline,
+                    steps_per_sec: rates[k],
+                    speedup_vs_sandwich: rates[k] / rates[0].max(1e-12),
+                });
+            }
+        }
+    }
+}
+
+fn main() {
+    let mut cells: Vec<Cell> = Vec::new();
+    sweep("traffic", &mut cells);
+    sweep("warehouse", &mut cells);
+
+    let mut table = Table::new(
+        "end-to-end IALS rollout (steps/sec; real native NN in the loop)",
+        &["domain", "B", "workers", "pipeline", "steps/s", "vs sandwich"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.domain.into(),
+            c.batch.to_string(),
+            c.workers.to_string(),
+            c.pipeline.into(),
+            format!("{:.0}", c.steps_per_sec),
+            format!("{:.2}x", c.speedup_vs_sandwich),
+        ]);
+    }
+    table.print();
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"domain\": \"{}\", \"batch\": {}, \"num_workers\": {}, \
+             \"pipeline\": \"{}\", \"steps_per_sec\": {:.1}, \
+             \"speedup_vs_sandwich\": {:.3}}}{}\n",
+            c.domain,
+            c.batch,
+            c.workers,
+            c.pipeline,
+            c.steps_per_sec,
+            c.speedup_vs_sandwich,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("]\n");
+    println!("{json}");
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::File::create("results/bench_rollout.json"))
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        eprintln!("could not write results/bench_rollout.json: {e}");
+    }
+
+    // Headline for the acceptance criterion: traffic, B=1024, 4 workers,
+    // fused vs sandwich.
+    if let Some(c) = cells.iter().find(|c| {
+        c.domain == "traffic" && c.batch == 1024 && c.workers == 4 && c.pipeline == "fused"
+    }) {
+        println!(
+            "headline: traffic B=1024 workers=4 fused -> {:.2}x vs sandwich ({:.0} steps/s)",
+            c.speedup_vs_sandwich, c.steps_per_sec
+        );
+    }
+}

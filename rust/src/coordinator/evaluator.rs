@@ -57,6 +57,9 @@ pub fn evaluate(
 
 #[cfg(test)]
 mod tests {
-    // evaluate() is exercised end-to-end in rust/tests/integration_training.rs
-    // (it needs compiled artifacts).
+    // evaluate() is exercised end-to-end in rust/tests/integration_training.rs.
+    // rust/tests/eval_parity.rs pins that this batch-1 serial path (env
+    // stream and forward1 logits) is bitwise identical to env 0 of the
+    // fused training pipeline at the same seed, so eval metrics can never
+    // drift from what training actually optimizes.
 }

@@ -204,9 +204,11 @@ fn make_gs_env<E: Environment + Send + 'static>(
 }
 
 /// Build the training simulator (the paper's GS vs IALS conditions),
-/// sharded over `cfg.ppo.num_workers` persistent worker threads (the NN
-/// side — policy and AIP forwards — stays one batched call per step on the
-/// coordinator; see `core::shard`).
+/// sharded over `cfg.ppo.num_workers` persistent worker threads. On the
+/// native backend an IALS env steps through the **fused pipeline** (d-set
+/// gather, AIP forward, influence sampling and LS stepping in one pool
+/// dispatch — `ials::IalsVecEnv`); the policy forward stays one batched
+/// pooled call per step on the coordinator (see `core::shard`).
 pub fn make_train_env(
     cfg: &ExperimentConfig,
     predictor: Option<Box<dyn InfluencePredictor>>,
@@ -341,6 +343,11 @@ pub fn item_lifetime_histogram(
         (0..b).map(|_| WarehouseLocalEnv::new(&cfg.warehouse)).collect(),
         predictor,
     );
+    // Age recording is off by default (training would grow the diagnostic
+    // buffer without bound); this harness is its one consumer.
+    for e in env.envs_mut() {
+        e.record_removed_ages(true);
+    }
     env.reset_all(seed);
     let mut rng = Pcg32::new(seed, 31337);
     let mut rewards = vec![0.0f32; b];

@@ -7,14 +7,20 @@
 //! environments and batched NN calls (policy/AIP forwards, PPO/AIP
 //! training). Both halves scale with cores while preserving two invariants:
 //!
-//! 1. **One batched NN call per step.** NN work is dispatched by the
-//!    coordinator thread — `Runtime` is `Rc`/`RefCell`-based and its *ops*
-//!    fan row-slices out over the pool, but the call structure (one batched
-//!    call per step / update) is unchanged.
+//! 1. **Minimal dispatches per step.** Training-phase NN work (which
+//!    mutates parameters) is dispatched by the coordinator thread —
+//!    `Runtime` is `Rc`/`RefCell`-based and its *ops* fan row-slices out
+//!    over the pool. Forward-path NN work is `Sync` (`runtime::native`'s
+//!    views), so the fused IALS step runs gather → AIP forward →
+//!    influence sampling → LS step in **one** dispatch per step
+//!    (`ials::IalsVecEnv`); the policy forward stays one batched pooled
+//!    call per step (action sampling consumes a single RNG stream on the
+//!    coordinator).
 //! 2. **Bitwise determinism.** Each shard owns a contiguous range of env
-//!    indices (seeded from *global* indices), and NN work partitions over a
-//!    grid that is independent of the worker count, so any
-//!    `num_workers` / `nn_workers` produces outputs identical to serial.
+//!    indices (seeded from *global* indices), and NN work partitions over
+//!    row bands whose per-row arithmetic is independent, so any
+//!    `num_workers` / `nn_workers` / pipeline (fused or sandwich)
+//!    produces outputs identical to serial.
 //!
 //! Building blocks:
 //!

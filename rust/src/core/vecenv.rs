@@ -1,7 +1,9 @@
 //! Vectorized environments: the PPO trainer steps `B` environments in
-//! lockstep so that policy forwards (and, for the IALS, AIP forwards) are
-//! one batched PJRT call per step instead of `B` calls — the single most
-//! important L3 performance lever (DESIGN.md §7).
+//! lockstep so that policy forwards are one batched backend call per step
+//! instead of `B` calls — the single most important L3 performance lever
+//! (DESIGN.md §7). The IALS goes one step further on the native backend
+//! and runs its AIP forward *inside* the sharded step dispatch itself
+//! (`ials::IalsVecEnv`, the fused pipeline).
 
 use super::{Environment, Step};
 

@@ -4,30 +4,46 @@
 //!
 //! Per step and per environment (Algorithm 2, lines 5–11):
 //! 1. read the current d-set `d_t` from the LS,
-//! 2. query the AIP for `P(u_t | d_t, history)` — **one batched PJRT call
-//!    for all B environments** (the L3 perf lever, DESIGN.md §7),
+//! 2. query the AIP for `P(u_t | d_t, history)`,
 //! 3. sample the binary realization `u_t`,
 //! 4. step the LS with `(a_t, u_t)`.
 //!
-//! ## Parallel execution
+//! ## The fused step pipeline
 //!
-//! The step splits into a parallel/serial sandwich (see `core::shard`):
-//! d-set gathering (1) and LS stepping (3+4) are pure Rust and run on the
-//! shard workers, each writing its contiguous slice of the shared env-major
-//! buffers; the AIP forward (2) stays a single batched call on the
-//! coordinator thread (the `Runtime` is `Rc`/`RefCell`-based and must not
-//! cross threads). Every environment owns its RNG stream and is seeded from
+//! When the predictor supports shard execution (the native engine's
+//! `Sync` forward views — see `runtime::native`), all four phases run in
+//! **one pool dispatch**: each [`IalsShard`] gathers its own d-set band,
+//! runs the AIP forward over its own rows with its own
+//! [`EngineScratch`], samples `u_t`, and steps its local simulators —
+//! no barrier between the phases and no coordinator round-trip per step.
+//! Because every forward kernel computes rows independently, banding the
+//! AIP forward by shard is bitwise identical to the coordinator-batched
+//! call, so the fused pipeline produces exactly the bits of the sandwich
+//! below (`rust/tests/integration_parallel.rs` locks this in).
+//!
+//! ## The sandwich fallback
+//!
+//! Predictors that cannot cross threads (the PJRT backend's runtime is
+//! `Rc`/`RefCell`-based) keep the historical parallel/serial sandwich:
+//! parallel d-set gather → one coordinator-issued batched AIP call →
+//! parallel influence sampling + LS stepping. [`IalsVecEnv::set_fused`]
+//! can force this path for A/B benchmarking (`bench_rollout`) and parity
+//! tests.
+//!
+//! Either way, every environment owns its RNG stream and is seeded from
 //! its **global** index, so results are bitwise identical to serial
 //! execution at the same seed, for any worker count.
 
 use crate::core::shard::{SendSliceMut, SendSliceRef, ShardExec};
 use crate::core::{shard_ranges, LocalEnv, VecEnv};
-use crate::influence::InfluencePredictor;
+use crate::influence::{InfluencePredictor, ShardPredict};
+use crate::runtime::native::{EngineScratch, FnnView, GruView};
 use crate::util::Pcg32;
 
 /// One shard of local simulators covering the global env indices
 /// `[start, start + envs.len())`, with per-env influence-sampling RNG
-/// streams and episode counters.
+/// streams, episode counters and its own NN forward scratch (the fused
+/// step path runs the AIP on this shard's rows, on this shard's worker).
 pub struct IalsShard<L: LocalEnv> {
     envs: Vec<L>,
     rngs: Vec<Pcg32>,
@@ -36,10 +52,17 @@ pub struct IalsShard<L: LocalEnv> {
     base_seed: u64,
     /// Per-step scratch for one env's sampled influence realization.
     u_bools: Vec<bool>,
+    /// Per-shard forward scratch for the fused AIP band (empty when the
+    /// predictor needs none).
+    scratch: EngineScratch,
+    /// `reset_all` must run before the first step — the placeholder RNG
+    /// streams would otherwise give every env an identical influence
+    /// stream (see `step_with_probs`).
+    is_reset: bool,
 }
 
 impl<L: LocalEnv> IalsShard<L> {
-    fn new(envs: Vec<L>, start: usize, num_sources: usize) -> IalsShard<L> {
+    fn new(envs: Vec<L>, start: usize, num_sources: usize, scratch: EngineScratch) -> IalsShard<L> {
         let n = envs.len();
         IalsShard {
             envs,
@@ -48,6 +71,8 @@ impl<L: LocalEnv> IalsShard<L> {
             start,
             base_seed: 0,
             u_bools: vec![false; num_sources],
+            scratch,
+            is_reset: false,
         }
     }
 
@@ -62,6 +87,7 @@ impl<L: LocalEnv> IalsShard<L> {
 
     fn reset_all(&mut self, seed: u64) {
         self.base_seed = seed;
+        self.is_reset = true;
         for i in 0..self.envs.len() {
             self.episode_counter[i] = 0;
             let s = self.seed_for(i);
@@ -88,7 +114,8 @@ impl<L: LocalEnv> IalsShard<L> {
 
     /// Sample `u_t` per env from the batched probabilities and step the LS
     /// (Algorithm 2 lines 8–11), auto-resetting finished episodes. The
-    /// coordinator later resets predictor state for envs flagged in `dones`.
+    /// caller resets predictor state for envs flagged in `dones` (the
+    /// fused dispatch does it in-band, the sandwich on the coordinator).
     fn step_with_probs(
         &mut self,
         actions: &[usize],
@@ -97,6 +124,14 @@ impl<L: LocalEnv> IalsShard<L> {
         rewards: &mut [f32],
         dones: &mut [bool],
     ) {
+        // Stepping before `reset_all` would sample every env from the same
+        // placeholder `Pcg32::seeded(0)` stream — identical influence
+        // realizations across the whole batch, silently. Hard error in
+        // every build (one bool compare per shard per step).
+        assert!(
+            self.is_reset,
+            "IalsVecEnv stepped before reset_all: per-env influence streams are unseeded"
+        );
         let n = self.envs.len();
         debug_assert_eq!(actions.len(), n);
         debug_assert_eq!(probs.len(), n * ud);
@@ -116,6 +151,75 @@ impl<L: LocalEnv> IalsShard<L> {
     }
 }
 
+/// `Sync` form of [`ShardPredict`] for the fused dispatch: the GRU state
+/// double-buffer crosses threads as raw handles whose disjoint per-shard
+/// bands make the aliasing sound (same contract as the env-major buffers).
+enum FusedPlan<'p> {
+    Marginals(&'p [f32]),
+    Fnn(FnnView<'p>),
+    Gru { view: GruView<'p>, h: SendSliceRef<f32>, h_next: SendSliceMut<f32> },
+}
+
+impl<'p> FusedPlan<'p> {
+    fn new(plan: ShardPredict<'p>) -> FusedPlan<'p> {
+        match plan {
+            ShardPredict::Marginals(m) => FusedPlan::Marginals(m),
+            ShardPredict::Fnn(v) => FusedPlan::Fnn(v),
+            ShardPredict::Gru { view, h, h_next } => FusedPlan::Gru {
+                view,
+                h: SendSliceRef::new(h),
+                h_next: SendSliceMut::new(h_next),
+            },
+        }
+    }
+
+    /// AIP forward for the band covering global env rows `[s, s + n)`.
+    fn predict_band(
+        &self,
+        s: usize,
+        n: usize,
+        d: &[f32],
+        probs: &mut [f32],
+        scratch: &mut EngineScratch,
+    ) {
+        match self {
+            FusedPlan::Marginals(m) => {
+                if !m.is_empty() {
+                    for row in probs.chunks_exact_mut(m.len()) {
+                        row.copy_from_slice(m);
+                    }
+                }
+            }
+            FusedPlan::Fnn(view) => view.forward_rows(n, d, probs, scratch),
+            FusedPlan::Gru { view, h, h_next } => {
+                let hid = view.hid;
+                // SAFETY: this shard's disjoint state band; the dispatch
+                // blocks until every band is done, and the double-buffer
+                // swap (`end_step`) happens only afterwards.
+                let (hb, hnb) =
+                    unsafe { (h.range(s * hid, n * hid), h_next.range(s * hid, n * hid)) };
+                view.step_rows(n, hb, d, probs, hnb, scratch);
+            }
+        }
+    }
+
+    /// Clear recurrent state for finished episodes. The rows written this
+    /// step become the live state after `end_step`'s swap, so zeroing them
+    /// here is exactly the sandwich's post-step `reset_state(i)`.
+    fn reset_done_rows(&self, s: usize, n: usize, dones: &[bool]) {
+        if let FusedPlan::Gru { view, h_next, .. } = self {
+            let hid = view.hid;
+            // SAFETY: same disjoint band as `predict_band` above.
+            let hnb = unsafe { h_next.range(s * hid, n * hid) };
+            for (i, &done) in dones.iter().enumerate().take(n) {
+                if done {
+                    hnb[i * hid..(i + 1) * hid].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
 pub struct IalsVecEnv<L: LocalEnv + Send + 'static> {
     exec: ShardExec<IalsShard<L>>,
     predictor: Box<dyn InfluencePredictor>,
@@ -124,6 +228,9 @@ pub struct IalsVecEnv<L: LocalEnv + Send + 'static> {
     num_actions: usize,
     dset_dim: usize,
     num_sources: usize,
+    /// Fused single-dispatch stepping (on by default when the predictor
+    /// supports shard execution; see module docs).
+    fused: bool,
     // coordinator scratch (no allocation on the step path)
     dsets: Vec<f32>,
     probs: Vec<f32>,
@@ -159,13 +266,19 @@ impl<L: LocalEnv + Send + 'static> IalsVecEnv<L> {
         let ud = envs[0].num_influence_sources();
 
         let w = num_workers.max(1).min(b);
+        // Per-row forward scratch the fused path needs on each shard
+        // (allocated once here — the step path stays allocation-free).
+        // Predictors that can never shard-execute (PJRT) get none.
+        let fused = predictor.supports_shard_exec();
+        let (sr_a, sr_b) = if fused { predictor.shard_scratch_rows() } else { (0, 0) };
         let mut envs = envs;
         let mut shards = Vec::with_capacity(w);
         // Split off shards back-to-front so each keeps its contiguous range.
         for &(s, e) in shard_ranges(b, w).iter().rev() {
             let tail = envs.split_off(s);
             debug_assert_eq!(tail.len(), e - s);
-            shards.push(IalsShard::new(tail, s, ud));
+            let n = e - s;
+            shards.push(IalsShard::new(tail, s, ud, EngineScratch::new(n * sr_a, n * sr_b)));
         }
         shards.reverse();
 
@@ -177,6 +290,7 @@ impl<L: LocalEnv + Send + 'static> IalsVecEnv<L> {
             num_actions,
             dset_dim: dd,
             num_sources: ud,
+            fused,
             dsets: vec![0.0; b * dd],
             probs: vec![0.0; b * ud],
         }
@@ -188,6 +302,21 @@ impl<L: LocalEnv + Send + 'static> IalsVecEnv<L> {
 
     pub fn num_shards(&self) -> usize {
         self.exec.num_shards()
+    }
+
+    /// Toggle the fused single-dispatch step. It is on by default whenever
+    /// the predictor supports shard execution; turning it off forces the
+    /// gather → batched-predict → step sandwich (for A/B benchmarking and
+    /// the fused-vs-sandwich parity tests — both pipelines are bitwise
+    /// identical at the same seed). Requesting `true` on a predictor that
+    /// cannot shard-execute is a no-op.
+    pub fn set_fused(&mut self, fused: bool) {
+        self.fused = fused && self.predictor.supports_shard_exec();
+    }
+
+    /// Whether `step_all` runs the fused single-dispatch pipeline.
+    pub fn is_fused(&self) -> bool {
+        self.fused
     }
 
     /// Direct access to the wrapped local simulators (diagnostics, e.g.
@@ -238,6 +367,43 @@ impl<L: LocalEnv + Send + 'static> VecEnv for IalsVecEnv<L> {
         let ud = self.num_sources;
         debug_assert_eq!(actions.len(), b);
 
+        if self.fused {
+            // Fused pipeline: gather → AIP forward on own rows → influence
+            // sampling → LS step, all inside ONE dispatch. Bitwise
+            // identical to the sandwich below — forward kernels compute
+            // rows independently, so banding by shard instead of by NN
+            // slice cannot change any bit.
+            let IalsVecEnv { exec, predictor, dsets, probs, .. } = self;
+            if let Some(plan) = predictor.begin_step() {
+                let plan = FusedPlan::new(plan);
+                let dsets = SendSliceMut::new(dsets);
+                let probs = SendSliceMut::new(probs);
+                let actions = SendSliceRef::new(actions);
+                let rewards = SendSliceMut::new(rewards);
+                let dones = SendSliceMut::new(dones);
+                exec.run_mut(move |_, shard| {
+                    let (s, n) = (shard.start, shard.envs.len());
+                    // SAFETY: every range below is this shard's disjoint
+                    // band of the shared env-major buffers (d-set rows,
+                    // prob rows, actions/rewards/dones, GRU state rows);
+                    // run_mut blocks until every shard has completed.
+                    let (db, pb) =
+                        unsafe { (dsets.range(s * dd, n * dd), probs.range(s * ud, n * ud)) };
+                    shard.dset_into(dd, db);
+                    plan.predict_band(s, n, db, pb, &mut shard.scratch);
+                    let (a, r, dn) = unsafe {
+                        (actions.range(s, n), rewards.range(s, n), dones.range(s, n))
+                    };
+                    shard.step_with_probs(a, pb, ud, r, dn);
+                    plan.reset_done_rows(s, n, dn);
+                });
+                predictor.end_step();
+                return;
+            }
+        }
+
+        // Sandwich fallback: parallel gather → one batched AIP call on the
+        // coordinator → parallel sampling + stepping.
         // 1. d_t for every env (parallel, direct into the shared buffer).
         {
             let dsets = SendSliceMut::new(&mut self.dsets);
@@ -378,6 +544,31 @@ mod tests {
             sharded.observe_all(&mut obs_b);
             assert_eq!(obs_a, obs_b, "observations diverged at step {t}");
         }
+    }
+
+    #[test]
+    fn pipeline_toggle_is_honored() {
+        // Fused-vs-sandwich bitwise parity itself is pinned (with sweeps
+        // and neural AIPs) in tests/integration_parallel.rs; here just the
+        // toggle semantics.
+        let mut v = make_workers(4, 0.3, 2);
+        assert!(v.is_fused(), "fixed-marginal AIP defaults to fused");
+        v.set_fused(false);
+        assert!(!v.is_fused());
+        v.set_fused(true);
+        assert!(v.is_fused());
+    }
+
+    #[test]
+    #[should_panic(expected = "before reset_all")]
+    fn stepping_before_reset_is_a_hard_error() {
+        // Un-reset shards hold placeholder RNGs — every env would sample
+        // the identical influence stream. Serial env so the panic surfaces
+        // directly instead of through the pool's worker-panicked wrapper.
+        let mut v = make(2, 0.1);
+        let mut rewards = [0.0f32; 2];
+        let mut dones = [false; 2];
+        v.step_all(&[0, 0], &mut rewards, &mut dones);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! (traffic: 0.1 / 0.5) or a marginal estimated from GS samples
 //! (warehouse).
 
-use super::{InfluencePredictor, InfluenceDataset};
+use super::{InfluenceDataset, InfluencePredictor, ShardPredict};
 use crate::Result;
 
 pub struct FixedMarginalAip {
@@ -65,6 +65,16 @@ impl InfluencePredictor for FixedMarginalAip {
             probs[b * u..(b + 1) * u].copy_from_slice(&self.p);
         }
         Ok(())
+    }
+
+    // The marginals are d-set-independent, so any shard can broadcast them
+    // to its own prob rows inside a fused step dispatch.
+    fn supports_shard_exec(&self) -> bool {
+        true
+    }
+
+    fn begin_step(&mut self) -> Option<ShardPredict<'_>> {
+        Some(ShardPredict::Marginals(&self.p))
     }
 }
 

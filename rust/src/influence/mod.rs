@@ -22,7 +22,30 @@ pub use fixed::FixedMarginalAip;
 pub use predictor::{AipArch, NeuralAip};
 pub use train::{evaluate_ce, train_fnn, train_gru};
 
+use crate::runtime::native::{FnnView, GruView};
 use crate::Result;
+
+/// Thread-shareable execution plan for one **fused** IALS step: everything
+/// a shard worker needs to run the predictor over its own contiguous row
+/// band, inside the same pool dispatch that gathers d-sets and steps the
+/// local simulators (`ials::IalsVecEnv`). Borrowed from the predictor
+/// between [`InfluencePredictor::begin_step`] and
+/// [`InfluencePredictor::end_step`].
+pub enum ShardPredict<'a> {
+    /// d-set-independent per-source marginals, broadcast to every env row
+    /// (the F-IALS predictor).
+    Marginals(&'a [f32]),
+    /// One FNN forward over the band's d-set rows.
+    Fnn(FnnView<'a>),
+    /// One GRU step over the band's rows: reads the `h` band, writes the
+    /// disjoint `h_next` band; the caller's [`InfluencePredictor::end_step`]
+    /// swaps the double-buffer after the dispatch completes.
+    Gru {
+        view: GruView<'a>,
+        h: &'a [f32],
+        h_next: &'a mut [f32],
+    },
+}
 
 /// A batched influence predictor. `batch` is fixed at construction (it must
 /// match the AOT-compiled artifact's leading dimension).
@@ -39,8 +62,37 @@ pub trait InfluencePredictor {
     fn reset_all(&mut self);
     /// Predict `P(u_t = 1)` for all envs: `dsets` is `[batch * dset_dim]`
     /// env-major, `probs` is `[batch * num_sources]` env-major. Stateful
-    /// implementations advance their recurrent state.
+    /// implementations advance their recurrent state. This is the batched
+    /// (coordinator-issued) path; the fused step path uses
+    /// [`InfluencePredictor::begin_step`] instead.
     fn predict(&mut self, dsets: &[f32], probs: &mut [f32]) -> Result<()>;
+
+    /// Whether this predictor can execute shard-locally inside a fused
+    /// step dispatch (`false` keeps the coordinator-batched sandwich —
+    /// e.g. PJRT-backed predictors, whose runtime cannot cross threads).
+    fn supports_shard_exec(&self) -> bool {
+        false
+    }
+
+    /// Begin one fused step: a `Sync` execution plan shard workers run on
+    /// their own row bands. Callers must invoke
+    /// [`InfluencePredictor::end_step`] exactly once after the dispatch
+    /// completes. `None` (the default) means "use [`predict`] instead".
+    ///
+    /// [`predict`]: InfluencePredictor::predict
+    fn begin_step(&mut self) -> Option<ShardPredict<'_>> {
+        None
+    }
+
+    /// Commit a fused step started with [`InfluencePredictor::begin_step`]
+    /// (e.g. swap the recurrent-state double buffer).
+    fn end_step(&mut self) {}
+
+    /// Per-row f32 scratch sizes `(a, b)` a shard needs to execute this
+    /// predictor's [`ShardPredict`] plan (`(0, 0)` when none is needed).
+    fn shard_scratch_rows(&self) -> (usize, usize) {
+        (0, 0)
+    }
 }
 
 /// Test/diagnostic predictor that replays a fixed probability table row by

@@ -4,8 +4,9 @@
 //! the Pallas fused-GRU kernel runs inside the compiled artifact; on the
 //! native backend `nn::kernels::gru_cell_into` plays the same role.
 
-use super::InfluencePredictor;
+use super::{InfluencePredictor, ShardPredict};
 use crate::nn::ParamStore;
+use crate::runtime::native::{FnnView, GruView};
 use crate::runtime::{DataArg, Runtime};
 use crate::Result;
 use anyhow::Context;
@@ -27,6 +28,9 @@ pub struct NeuralAip {
     batch: usize,
     dset_dim: usize,
     u_dim: usize,
+    /// Hidden width (FNN `b1` / GRU gate block) — sizes the per-shard
+    /// scratch of the fused step path.
+    hidden: usize,
     /// Recurrent state `[batch * hidden]` (GRU only).
     h: Vec<f32>,
     /// Scratch for the updated recurrent state — the step artifact writes
@@ -84,6 +88,10 @@ impl NeuralAip {
             .find(|t| t.name == "probs")
             .context("artifact missing probs output")?;
         let u_dim = *probs.shape.last().unwrap();
+        let hidden = match arch {
+            AipArch::Gru { hidden } => hidden,
+            AipArch::Fnn => spec.param("b1")?.shape[0],
+        };
         let h = match arch {
             AipArch::Gru { hidden } => vec![0.0; batch * hidden],
             AipArch::Fnn => Vec::new(),
@@ -98,6 +106,7 @@ impl NeuralAip {
             batch,
             dset_dim,
             u_dim,
+            hidden,
             h,
             h_next,
         })
@@ -156,5 +165,50 @@ impl InfluencePredictor for NeuralAip {
             }
         }
         Ok(())
+    }
+
+    // ---- Fused step path (native backend only) ----------------------------
+    //
+    // The forward math is row-independent, so each sim shard can run its
+    // own band through a `Sync` view of this predictor's parameters —
+    // bitwise identical to the batched `predict` above. The PJRT backend
+    // owns thread-bound state and falls back to the sandwich.
+
+    fn supports_shard_exec(&self) -> bool {
+        self.rt.backend_kind() == "native"
+    }
+
+    fn begin_step(&mut self) -> Option<ShardPredict<'_>> {
+        if self.rt.backend_kind() != "native" {
+            return None;
+        }
+        let NeuralAip { store, h, h_next, arch, .. } = self;
+        match arch {
+            AipArch::Fnn => match FnnView::resolve(store) {
+                Ok(view) => Some(ShardPredict::Fnn(view)),
+                Err(_) => None,
+            },
+            AipArch::Gru { .. } => match GruView::resolve(store) {
+                Ok(view) => Some(ShardPredict::Gru {
+                    view,
+                    h: h.as_slice(),
+                    h_next: h_next.as_mut_slice(),
+                }),
+                Err(_) => None,
+            },
+        }
+    }
+
+    fn end_step(&mut self) {
+        if let AipArch::Gru { .. } = self.arch {
+            std::mem::swap(&mut self.h, &mut self.h_next);
+        }
+    }
+
+    fn shard_scratch_rows(&self) -> (usize, usize) {
+        match self.arch {
+            AipArch::Fnn => (self.hidden, 0),
+            AipArch::Gru { .. } => (3 * self.hidden, 3 * self.hidden),
+        }
     }
 }

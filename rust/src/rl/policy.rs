@@ -100,7 +100,11 @@ impl Policy {
     /// `[batch * act_dim]`, `values` is `[batch]`. One call per step; on
     /// the native backend with `[runtime] nn_workers > 1` the rows of this
     /// call partition over the shared compute pool (each worker writes its
-    /// disjoint output band, so results are bitwise identical to serial).
+    /// disjoint output band, so results are bitwise identical to serial —
+    /// the same row-independence that lets the fused IALS step run the
+    /// *AIP* forward inside the sim shards' dispatch; the policy forward
+    /// stays coordinator-batched because action sampling consumes one RNG
+    /// stream in env order).
     pub fn forward_into(
         &mut self,
         obs: &[f32],
@@ -117,7 +121,11 @@ impl Policy {
 
     /// Single-observation forward (GS evaluation path). Returns the logits
     /// as a borrow of the reusable eval scratch plus the value estimate —
-    /// like the batched path, no allocation per call.
+    /// like the batched path, no allocation per call. Bitwise identical to
+    /// row `i` of [`Policy::forward_into`] on the same observation (rows
+    /// are independent in the native forward kernels), so eval metrics can
+    /// never drift from the training pipeline — pinned by
+    /// `rust/tests/eval_parity.rs`.
     pub fn forward1(&mut self, obs: &[f32]) -> Result<(&[f32], f32)> {
         let Policy { rt, store, fwd_1, eval_logits, eval_value, .. } = self;
         rt.call_into(

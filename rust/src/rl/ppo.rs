@@ -67,13 +67,17 @@ impl PpoTrainer {
     }
 
     /// Collect one rollout (T steps of B envs) into the buffer. For a
-    /// sharded env (`core::shard`), env stepping and observation fan out
-    /// over the worker pool while each policy forward stays one batched
-    /// call issued from this thread — the parallel-sim / batched-NN split
-    /// (with `[runtime] nn_workers > 1` the native engine partitions that
-    /// batched call's rows over the same pool; the call structure is
-    /// unchanged). All buffers (rollout storage and forward scratch) are
-    /// reused across steps and iterations: no allocation on this path.
+    /// sharded env (`core::shard`), observation and env stepping fan out
+    /// over the worker pool — a fused IALS additionally runs its AIP
+    /// forward inside the step dispatch itself (`ials::IalsVecEnv`). The
+    /// policy forward stays one batched call issued from this thread
+    /// (its rows fan out over the same pool with `[runtime] nn_workers >
+    /// 1`): `sample_actions` consumes a single RNG stream in env order,
+    /// so splitting the forward across shards would change the action
+    /// stream — the one part of the step that is serial by semantics, not
+    /// by engine limitation. All buffers (rollout storage and forward
+    /// scratch) are reused across steps and iterations: no allocation on
+    /// this path.
     pub fn collect(&mut self, env: &mut dyn VecEnv, policy: &mut Policy) -> Result<()> {
         let b = self.cfg.num_envs;
         debug_assert_eq!(env.num_envs(), b);

@@ -11,7 +11,10 @@
 //!   set directly on [`ParamStore`] slices (`nn/kernels.rs`), against a
 //!   [`Manifest`] synthesized in memory from config geometry. No artifacts
 //!   directory, no Python, no copies: the whole training loop runs on any
-//!   CPU.
+//!   CPU. Its forward path is additionally exposed as `Sync` views
+//!   (`native::PolicyView` / `FnnView` / `GruView` + per-worker
+//!   `native::EngineScratch`), which is what lets the IALS fuse the AIP
+//!   forward into the sim shards' own dispatch (`ials::IalsVecEnv`).
 //!
 //! Selection is per config: `[runtime] backend = "auto" | "native" |
 //! "pjrt"`, where `auto` (the default) uses PJRT when the artifacts

@@ -24,6 +24,21 @@
 //! k` is bitwise identical to `nn_workers = 1` for every `k`
 //! (`rust/tests/native_parallel.rs` locks this in end to end).
 //!
+//! ## Sync forward views (the fused step path)
+//!
+//! The forward ops are split into **shared immutable execution state** —
+//! [`PolicyView`] / [`FnnView`] / [`GruView`], `Copy + Sync` bundles of
+//! dimensions plus read-only parameter slices — and per-worker
+//! [`EngineScratch`]. A forward is then a `&view + &mut scratch` call that
+//! *any* pool worker can run over its own contiguous row band: the batched
+//! ops above execute their slice grid through the same views, and the
+//! fused IALS step (`ials::IalsVecEnv`) hands each sim shard a view so the
+//! AIP forward happens inside the shard's own dispatch — no coordinator
+//! round-trip. Rows are arithmetically independent in every forward
+//! kernel, so any banding produces bitwise-identical outputs
+//! (`rust/tests/integration_parallel.rs` pins fused == sandwich end to
+//! end). Training ops mutate parameters and stay coordinator-driven.
+//!
 //! The math mirrors `python/compile/model.py` exactly (same losses, same
 //! clipping, same Adam) so learning-dynamics tests hold on either backend.
 
@@ -100,6 +115,225 @@ impl Par {
                 }
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sync forward views + per-worker scratch (the fused step path)
+// ---------------------------------------------------------------------------
+
+/// Per-worker forward scratch: two reusable buffers, sized once for the
+/// largest row band their owner can be handed (e.g. one IALS shard's env
+/// count). The `&view + &mut EngineScratch` calling convention is what
+/// makes the forward path executable from any pool worker with zero
+/// steady-state heap allocations.
+pub struct EngineScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl EngineScratch {
+    /// Preallocate `a_len + b_len` f32 of scratch (per-row sizes come from
+    /// the predictor/view that will run on it).
+    pub fn new(a_len: usize, b_len: usize) -> EngineScratch {
+        EngineScratch { a: vec![0.0; a_len], b: vec![0.0; b_len] }
+    }
+
+    /// Mutable prefixes of both buffers, growing them first if a larger
+    /// band than planned arrives (never on the steady-state path — owners
+    /// preallocate for their maximum band at construction).
+    fn bands(&mut self, a_len: usize, b_len: usize) -> (&mut [f32], &mut [f32]) {
+        if self.a.len() < a_len {
+            self.a.resize(a_len, 0.0);
+        }
+        if self.b.len() < b_len {
+            self.b.resize(b_len, 0.0);
+        }
+        (&mut self.a[..a_len], &mut self.b[..b_len])
+    }
+}
+
+/// Shared immutable execution state of the policy-MLP forward: dimensions
+/// plus parameter slices borrowed read-only from the store. The view is
+/// `Copy + Sync`, so any pool worker can run it over its own contiguous
+/// row band with per-worker scratch. Every forward kernel computes rows
+/// independently ([`kernels::linear_into`] is i-k-j per output row), so
+/// banding rows by shard instead of by NN slice is bitwise identical to
+/// the batched op — the fused-pipeline determinism guarantee.
+#[derive(Clone, Copy)]
+pub struct PolicyView<'a> {
+    pub obs_dim: usize,
+    pub hid: usize,
+    pub act_dim: usize,
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+    w_pi: &'a [f32],
+    b_pi: &'a [f32],
+    w_v: &'a [f32],
+    b_v: &'a [f32],
+}
+
+impl<'a> PolicyView<'a> {
+    /// Resolve the view from a store (dimension-checked; no allocation).
+    pub fn resolve(store: &'a ParamStore) -> Result<PolicyView<'a>> {
+        let w1 = store.get("w1")?;
+        let b1 = store.get("b1")?;
+        let w2 = store.get("w2")?;
+        let b2 = store.get("b2")?;
+        let w_pi = store.get("w_pi")?;
+        let b_pi = store.get("b_pi")?;
+        let w_v = store.get("w_v")?;
+        let b_v = store.get("b_v")?;
+        let hid = b1.len();
+        let act_dim = b_pi.len();
+        anyhow::ensure!(hid > 0 && act_dim > 0, "empty policy dims");
+        let obs_dim = w1.len() / hid;
+        anyhow::ensure!(
+            w1.len() == obs_dim * hid
+                && b2.len() == hid
+                && w2.len() == hid * hid
+                && w_pi.len() == hid * act_dim
+                && w_v.len() == hid
+                && b_v.len() == 1,
+            "policy parameter shapes inconsistent"
+        );
+        Ok(PolicyView { obs_dim, hid, act_dim, w1, b1, w2, b2, w_pi, b_pi, w_v, b_v })
+    }
+
+    /// Row-band forward with explicit scratch slices (`h1`/`h2` hold
+    /// `m * hid` each).
+    fn forward_band(
+        &self,
+        m: usize,
+        obs: &[f32],
+        h1: &mut [f32],
+        h2: &mut [f32],
+        logits: &mut [f32],
+        values: &mut [f32],
+    ) {
+        kernels::linear_into(obs, self.w1, Some(self.b1), h1, m, self.obs_dim, self.hid, Act::Tanh);
+        kernels::linear_into(h1, self.w2, Some(self.b2), h2, m, self.hid, self.hid, Act::Tanh);
+        kernels::linear_into(h2, self.w_pi, Some(self.b_pi), logits, m, self.hid, self.act_dim, Act::None);
+        kernels::linear_into(h2, self.w_v, Some(self.b_v), values, m, self.hid, 1, Act::None);
+    }
+    // No `&self + &mut scratch` row variant on purpose: the policy forward
+    // stays coordinator-batched (action sampling consumes one RNG stream
+    // in env order), so shard-side callers exist only for the AIP views.
+}
+
+/// Shared immutable execution state of the FNN-AIP forward (tanh hidden,
+/// sigmoid head). `Copy + Sync`; see [`PolicyView`] for the row-banding
+/// determinism argument.
+#[derive(Clone, Copy)]
+pub struct FnnView<'a> {
+    pub d_dim: usize,
+    pub hid: usize,
+    pub u_dim: usize,
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+}
+
+impl<'a> FnnView<'a> {
+    /// Resolve the view from a store (dimension-checked; no allocation).
+    pub fn resolve(store: &'a ParamStore) -> Result<FnnView<'a>> {
+        let w1 = store.get("w1")?;
+        let b1 = store.get("b1")?;
+        let w2 = store.get("w2")?;
+        let b2 = store.get("b2")?;
+        let hid = b1.len();
+        let u_dim = b2.len();
+        anyhow::ensure!(hid > 0 && u_dim > 0, "empty FNN dims");
+        let d_dim = w1.len() / hid;
+        anyhow::ensure!(
+            w1.len() == d_dim * hid && w2.len() == hid * u_dim,
+            "FNN parameter shapes inconsistent"
+        );
+        Ok(FnnView { d_dim, hid, u_dim, w1, b1, w2, b2 })
+    }
+
+    /// Row-band forward with explicit scratch (`h1` holds `m * hid`).
+    fn forward_band(&self, m: usize, d: &[f32], h1: &mut [f32], probs: &mut [f32]) {
+        kernels::linear_into(d, self.w1, Some(self.b1), h1, m, self.d_dim, self.hid, Act::Tanh);
+        kernels::linear_into(h1, self.w2, Some(self.b2), probs, m, self.hid, self.u_dim, Act::Sigmoid);
+    }
+
+    /// `&self + &mut scratch` forward over `m` rows.
+    pub fn forward_rows(&self, m: usize, d: &[f32], probs: &mut [f32], scratch: &mut EngineScratch) {
+        let (h1, _) = scratch.bands(m * self.hid, 0);
+        self.forward_band(m, d, h1, probs);
+    }
+}
+
+/// Shared immutable execution state of one GRU-AIP step (fused z|r|n
+/// gates, sigmoid head). `Copy + Sync`; rows are independent through the
+/// cell, so shard workers can advance their own disjoint bands of the
+/// recurrent state.
+#[derive(Clone, Copy)]
+pub struct GruView<'a> {
+    pub d_dim: usize,
+    pub hid: usize,
+    pub u_dim: usize,
+    w_x: &'a [f32],
+    w_h: &'a [f32],
+    b_g: &'a [f32],
+    w_o: &'a [f32],
+    b_o: &'a [f32],
+}
+
+impl<'a> GruView<'a> {
+    /// Resolve the view from a store (dimension-checked; no allocation).
+    pub fn resolve(store: &'a ParamStore) -> Result<GruView<'a>> {
+        let w_x = store.get("w_x")?;
+        let w_h = store.get("w_h")?;
+        let b_g = store.get("b_g")?;
+        let w_o = store.get("w_o")?;
+        let b_o = store.get("b_o")?;
+        anyhow::ensure!(b_g.len() % 3 == 0 && !b_g.is_empty(), "bad GRU gate dims");
+        let hid = b_g.len() / 3;
+        let u_dim = b_o.len();
+        anyhow::ensure!(u_dim > 0, "empty GRU head");
+        let d_dim = w_x.len() / (3 * hid);
+        anyhow::ensure!(
+            w_x.len() == d_dim * 3 * hid
+                && w_h.len() == hid * 3 * hid
+                && w_o.len() == hid * u_dim,
+            "GRU parameter shapes inconsistent"
+        );
+        Ok(GruView { d_dim, hid, u_dim, w_x, w_h, b_g, w_o, b_o })
+    }
+
+    /// Row-band step with explicit scratch (`gx`/`gh` hold `m * 3 * hid`
+    /// each). `h_new` must not alias `h`.
+    fn step_band(
+        &self,
+        m: usize,
+        h: &[f32],
+        d: &[f32],
+        probs: &mut [f32],
+        h_new: &mut [f32],
+        gx: &mut [f32],
+        gh: &mut [f32],
+    ) {
+        kernels::gru_cell_into(d, h, self.w_x, self.w_h, self.b_g, h_new, gx, gh, m, self.d_dim, self.hid);
+        kernels::linear_into(h_new, self.w_o, Some(self.b_o), probs, m, self.hid, self.u_dim, Act::Sigmoid);
+    }
+
+    /// `&self + &mut scratch` step over `m` rows.
+    pub fn step_rows(
+        &self,
+        m: usize,
+        h: &[f32],
+        d: &[f32],
+        probs: &mut [f32],
+        h_new: &mut [f32],
+        scratch: &mut EngineScratch,
+    ) {
+        let (gx, gh) = scratch.bands(m * 3 * self.hid, m * 3 * self.hid);
+        self.step_band(m, h, d, probs, h_new, gx, gh);
     }
 }
 
@@ -407,14 +641,10 @@ impl PolicyFwd {
         value: &mut [f32],
     ) -> Result<()> {
         let (od, h, a) = (self.obs_dim, self.hid, self.act_dim);
-        let w1 = store.get("w1")?;
-        let b1 = store.get("b1")?;
-        let w2 = store.get("w2")?;
-        let b2 = store.get("b2")?;
-        let w_pi = store.get("w_pi")?;
-        let b_pi = store.get("b_pi")?;
-        let w_v = store.get("w_v")?;
-        let b_v = store.get("b_v")?;
+        // Same shared-state/scratch split as the fused step path: the view
+        // carries the immutable execution state, the op only owns scratch.
+        let view = PolicyView::resolve(store)?;
+        debug_assert_eq!((view.obs_dim, view.hid, view.act_dim), (od, h, a));
         let slices = &self.slices;
         let h1 = SendSliceMut::new(&mut self.h1);
         let h2 = SendSliceMut::new(&mut self.h2);
@@ -428,11 +658,7 @@ impl PolicyFwd {
             let (h1s, h2s, ls, vs) = unsafe {
                 (h1.range(r0 * h, m * h), h2.range(r0 * h, m * h), lg.range(r0 * a, m * a), vl.range(r0, m))
             };
-            let xb = &obs[r0 * od..r1 * od];
-            kernels::linear_into(xb, w1, Some(b1), h1s, m, od, h, Act::Tanh);
-            kernels::linear_into(h1s, w2, Some(b2), h2s, m, h, h, Act::Tanh);
-            kernels::linear_into(h2s, w_pi, Some(b_pi), ls, m, h, a, Act::None);
-            kernels::linear_into(h2s, w_v, Some(b_v), vs, m, h, 1, Act::None);
+            view.forward_band(m, &obs[r0 * od..r1 * od], h1s, h2s, ls, vs);
         };
         self.par.run(slices.len(), self.b >= PAR_MIN_FWD_ROWS, &task);
         Ok(())
@@ -913,10 +1139,8 @@ impl FnnFwd {
 
     fn run(&mut self, store: &ParamStore, d: &[f32], probs: &mut [f32]) -> Result<()> {
         let (dd, h, u) = (self.d_dim, self.hid, self.u_dim);
-        let w1 = store.get("w1")?;
-        let b1 = store.get("b1")?;
-        let w2 = store.get("w2")?;
-        let b2 = store.get("b2")?;
+        let view = FnnView::resolve(store)?;
+        debug_assert_eq!((view.d_dim, view.hid, view.u_dim), (dd, h, u));
         let slices = &self.slices;
         let h1 = SendSliceMut::new(&mut self.h1);
         let pr = SendSliceMut::new(probs);
@@ -925,8 +1149,7 @@ impl FnnFwd {
             let m = r1 - r0;
             // SAFETY: disjoint row bands; Par::run blocks until done.
             let (h1s, ps) = unsafe { (h1.range(r0 * h, m * h), pr.range(r0 * u, m * u)) };
-            kernels::linear_into(&d[r0 * dd..r1 * dd], w1, Some(b1), h1s, m, dd, h, Act::Tanh);
-            kernels::linear_into(h1s, w2, Some(b2), ps, m, h, u, Act::Sigmoid);
+            view.forward_band(m, &d[r0 * dd..r1 * dd], h1s, ps);
         };
         self.par.run(slices.len(), self.b >= PAR_MIN_FWD_ROWS, &task);
         Ok(())
@@ -1137,11 +1360,8 @@ impl GruStep {
         h_new: &mut [f32],
     ) -> Result<()> {
         let (dd, hid, u) = (self.d_dim, self.hid, self.u_dim);
-        let w_x = store.get("w_x")?;
-        let w_h = store.get("w_h")?;
-        let b_g = store.get("b_g")?;
-        let w_o = store.get("w_o")?;
-        let b_o = store.get("b_o")?;
+        let view = GruView::resolve(store)?;
+        debug_assert_eq!((view.d_dim, view.hid, view.u_dim), (dd, hid, u));
         let slices = &self.slices;
         let gx = SendSliceMut::new(&mut self.gx);
         let gh = SendSliceMut::new(&mut self.gh);
@@ -1159,10 +1379,7 @@ impl GruStep {
                     pr.range(r0 * u, m * u),
                 )
             };
-            let hb = &h[r0 * hid..r1 * hid];
-            let db = &d[r0 * dd..r1 * dd];
-            kernels::gru_cell_into(db, hb, w_x, w_h, b_g, hns, gxs, ghs, m, dd, hid);
-            kernels::linear_into(hns, w_o, Some(b_o), ps, m, hid, u, Act::Sigmoid);
+            view.step_band(m, &h[r0 * hid..r1 * hid], &d[r0 * dd..r1 * dd], ps, hns, gxs, ghs);
         };
         self.par.run(slices.len(), self.b >= PAR_MIN_FWD_ROWS, &task);
         Ok(())

@@ -22,8 +22,13 @@ pub struct WarehouseLocalEnv {
     rng: Pcg32,
     t: usize,
     /// Ages of items removed by influence samples (external disappearance)
-    /// — drives the Fig 6 item-lifetime histogram.
+    /// — drives the Fig 6 item-lifetime histogram. Only filled when
+    /// recording is enabled ([`WarehouseLocalEnv::record_removed_ages`]):
+    /// training steps would otherwise grow this diagnostic buffer without
+    /// bound and allocate on the fused-step hot path
+    /// (`rust/tests/native_alloc.rs` pins the step at zero allocations).
     pub removed_ages: Vec<u32>,
+    record_ages: bool,
 }
 
 impl WarehouseLocalEnv {
@@ -48,11 +53,19 @@ impl WarehouseLocalEnv {
             rng: Pcg32::seeded(0),
             t: 0,
             removed_ages: Vec::new(),
+            record_ages: false,
         }
     }
 
     pub fn memory_mode(&self) -> bool {
         self.memory_mode
+    }
+
+    /// Enable (or disable) recording of externally-removed item ages into
+    /// [`WarehouseLocalEnv::removed_ages`]. Off by default — see the field
+    /// docs; the Fig 6 histogram harness switches it on explicitly.
+    pub fn record_removed_ages(&mut self, on: bool) {
+        self.record_ages = on;
     }
 
     /// Ages of the 12 local items (diagnostics: Fig 6 bottom histogram).
@@ -136,7 +149,7 @@ impl LocalEnv for WarehouseLocalEnv {
             for (k, &gone) in influence.iter().enumerate() {
                 if gone {
                     let age = self.items.slots[k].age;
-                    if self.items.collect(k) {
+                    if self.items.collect(k) && self.record_ages {
                         self.removed_ages.push(age);
                     }
                 }
@@ -148,7 +161,7 @@ impl LocalEnv for WarehouseLocalEnv {
             for (k, &present) in influence.iter().enumerate() {
                 if present {
                     let age = self.items.slots[k].age;
-                    if self.items.collect(k) {
+                    if self.items.collect(k) && self.record_ages {
                         self.removed_ages.push(age);
                     }
                 }

@@ -1,0 +1,126 @@
+//! Eval-vs-training parity: `coordinator/evaluator.rs` drives a **batch-1
+//! serial** environment with `Policy::forward1`, while training runs the
+//! **fused** multi-env pipeline with batched forwards. Both must be the
+//! same computation bit for bit — otherwise eval metrics could drift from
+//! what training actually optimizes. Two facts make parity hold, and this
+//! file pins both at once by lockstepping env 0 of a fused training env
+//! against a batch-1 sandwich env at the same seed:
+//!
+//! * every env is seeded from its **global** index, so env 0 of a B-env
+//!   batch and the single env of a batch-1 env live identical lives, and
+//! * the native forward kernels compute rows independently, so `forward1`
+//!   equals row 0 of the batched `forward_into` (and the batch-1 AIP call
+//!   equals row 0 of the fused shard-local AIP forward).
+
+use ials::config::{TrafficConfig, WarehouseConfig};
+use ials::core::VecEnv;
+use ials::ials::IalsVecEnv;
+use ials::influence::NeuralAip;
+use ials::rl::Policy;
+use ials::runtime::{Runtime, SynthGeometry};
+use ials::sim::traffic::TrafficLocalEnv;
+use ials::sim::warehouse::WarehouseLocalEnv;
+use std::rc::Rc;
+
+const STEPS: usize = 210; // crosses the 200-step episode boundary
+
+/// Lockstep a fused B-env training IALS against a batch-1 sandwich IALS
+/// (the evaluator-style path) and a batched-vs-batch-1 policy forward.
+fn assert_eval_parity(
+    big: &mut dyn VecEnv,
+    small: &mut dyn VecEnv,
+    policy: &mut Policy,
+    seed: u64,
+    label: &str,
+) {
+    let b = big.num_envs();
+    let d = big.obs_dim();
+    let na = big.num_actions();
+    assert_eq!(small.num_envs(), 1, "{label}: small side must be batch-1");
+    assert_eq!(small.obs_dim(), d);
+    big.reset_all(seed);
+    small.reset_all(seed);
+    let mut obs_big = vec![0.0f32; b * d];
+    let mut obs_small = vec![0.0f32; d];
+    let mut logits = vec![0.0f32; b * policy.act_dim];
+    let mut values = vec![0.0f32; b];
+    let mut row0 = vec![0.0f32; policy.act_dim];
+    let (mut rb, mut rs) = (vec![0.0f32; b], [0.0f32; 1]);
+    let (mut db, mut ds) = (vec![false; b], [false; 1]);
+    let mut actions = vec![0usize; b];
+    for t in 0..STEPS {
+        big.observe_all(&mut obs_big);
+        small.observe_all(&mut obs_small);
+        assert_eq!(&obs_big[..d], &obs_small[..], "{label}: env-0 obs diverged at step {t}");
+
+        // Batched training forward vs the batch-1 eval forward: row 0 must
+        // be bitwise identical (the evaluator samples from these logits).
+        policy.forward_into(&obs_big, &mut logits, &mut values).unwrap();
+        row0.copy_from_slice(&logits[..policy.act_dim]);
+        let v0 = values[0];
+        let (l1, v1) = policy.forward1(&obs_small).unwrap();
+        assert_eq!(l1, row0.as_slice(), "{label}: forward1 logits != batched row 0 at step {t}");
+        assert_eq!(v1, v0, "{label}: forward1 value != batched row 0 at step {t}");
+
+        for (i, a) in actions.iter_mut().enumerate() {
+            *a = (t + i) % na;
+        }
+        big.step_all(&actions, &mut rb, &mut db);
+        small.step_all(&actions[..1], &mut rs, &mut ds);
+        assert_eq!(rb[0], rs[0], "{label}: env-0 reward diverged at step {t}");
+        assert_eq!(db[0], ds[0], "{label}: env-0 done diverged at step {t}");
+    }
+}
+
+#[test]
+fn batch1_eval_path_matches_fused_training_env_traffic() {
+    let b = 6;
+    let geom = SynthGeometry { rollout_b: b, ..SynthGeometry::default() };
+    let rt = Rc::new(Runtime::native(&geom));
+    let cfg = TrafficConfig::default();
+
+    let big_aip = NeuralAip::new(rt.clone(), "aip_traffic", b).unwrap();
+    let mut big = IalsVecEnv::with_workers(
+        (0..b).map(|_| TrafficLocalEnv::new(&cfg)).collect(),
+        Box::new(big_aip),
+        3,
+    );
+    assert!(big.is_fused(), "training env must run the fused pipeline");
+
+    let small_aip = NeuralAip::new(rt.clone(), "aip_traffic", 1).unwrap();
+    let mut small =
+        IalsVecEnv::new(vec![TrafficLocalEnv::new(&cfg)], Box::new(small_aip));
+    small.set_fused(false); // the serial coordinator-batched eval-style path
+
+    let mut policy = Policy::new(rt, "policy_traffic", b).unwrap();
+    policy.reinit(33).unwrap();
+    assert_eval_parity(&mut big, &mut small, &mut policy, 5, "traffic");
+}
+
+#[test]
+fn batch1_eval_path_matches_fused_training_env_warehouse_gru() {
+    // The stateful case: row 0 of the fused env's GRU h band must evolve
+    // exactly like the batch-1 predictor's whole state, across episode
+    // resets.
+    let b = 5;
+    let geom = SynthGeometry { rollout_b: b, ..SynthGeometry::default() };
+    let rt = Rc::new(Runtime::native(&geom));
+    let cfg = WarehouseConfig::default();
+
+    let big_aip = NeuralAip::new(rt.clone(), "aip_warehouse", b).unwrap();
+    let mut big = IalsVecEnv::with_workers(
+        (0..b).map(|_| WarehouseLocalEnv::new(&cfg)).collect(),
+        Box::new(big_aip),
+        2,
+    );
+    assert!(big.is_fused(), "training env must run the fused pipeline");
+
+    let small_aip = NeuralAip::new(rt.clone(), "aip_warehouse", 1).unwrap();
+    let mut small =
+        IalsVecEnv::new(vec![WarehouseLocalEnv::new(&cfg)], Box::new(small_aip));
+    small.set_fused(false);
+
+    let mut policy = Policy::new(rt, "policy_warehouse_nm", b).unwrap();
+    policy.reinit(34).unwrap();
+    assert_eval_parity(&mut big, &mut small, &mut policy, 6, "warehouse");
+}

@@ -1,16 +1,22 @@
 //! Sharded-execution determinism: the parallel executor must be a pure
 //! performance optimization — `num_workers = 4` produces bitwise-identical
 //! observations/rewards/dones to the serial `VecEnv` at the same seed, for
-//! both domains' local sims (IALS) and for the sharded GS. No artifacts
-//! needed: the AIP is a fixed-marginal predictor.
+//! both domains' local sims (IALS) and for the sharded GS. The second half
+//! pins the **fused step pipeline** (gather → shard-local AIP forward →
+//! sampling → LS step in one dispatch) against the PR 3 sandwich
+//! (gather → coordinator-batched AIP call → step) with real neural AIPs on
+//! the native engine — fused must equal sandwich bitwise for every
+//! `num_workers`, including counts that do not divide the batch.
 
 use ials::config::{TrafficConfig, WarehouseConfig};
 use ials::core::{shard_ranges, FrameStackVec, GsVecEnv, ShardedVecEnv, VecEnv};
 use ials::ials::IalsVecEnv;
-use ials::influence::FixedMarginalAip;
+use ials::influence::{FixedMarginalAip, NeuralAip};
+use ials::runtime::{Runtime, SynthGeometry};
 use ials::sim::traffic::{TrafficGlobalEnv, TrafficLocalEnv};
 use ials::sim::warehouse::WarehouseLocalEnv;
 use ials::util::Pcg32;
+use std::rc::Rc;
 
 const STEPS: usize = 200;
 
@@ -115,4 +121,97 @@ fn frame_stack_over_sharded_equals_serial() {
     let mut serial = FrameStackVec::new(warehouse_ials(8, 1), 4);
     let mut sharded = FrameStackVec::new(warehouse_ials(8, 3), 4);
     assert_lockstep(&mut serial, &mut sharded, 24, "framestack ials w=3");
+}
+
+// ---------------------------------------------------------------------------
+// Fused pipeline vs the PR 3 sandwich, real neural AIPs
+// ---------------------------------------------------------------------------
+
+/// Traffic IALS with a real FNN AIP on the native engine, pipeline and
+/// worker count selectable. The runtime is per-env so nothing is shared
+/// between the two sides of a comparison.
+fn traffic_neural_ials(b: usize, workers: usize, fused: bool) -> IalsVecEnv<TrafficLocalEnv> {
+    let geom = SynthGeometry { rollout_b: b, ..SynthGeometry::default() };
+    let rt = Rc::new(Runtime::native(&geom));
+    let cfg = TrafficConfig::default();
+    let envs: Vec<TrafficLocalEnv> = (0..b).map(|_| TrafficLocalEnv::new(&cfg)).collect();
+    let aip = NeuralAip::new(rt, "aip_traffic", b).expect("FNN AIP");
+    let mut env = IalsVecEnv::with_workers(envs, Box::new(aip), workers);
+    env.set_fused(fused);
+    assert_eq!(env.is_fused(), fused, "native FNN AIP must support both pipelines");
+    env
+}
+
+/// Warehouse IALS with the recurrent GRU AIP (per-env hidden state — the
+/// stateful case: the fused dispatch advances and episode-resets each
+/// shard's own band of the h double-buffer).
+fn warehouse_neural_ials(b: usize, workers: usize, fused: bool) -> IalsVecEnv<WarehouseLocalEnv> {
+    let geom = SynthGeometry { rollout_b: b, ..SynthGeometry::default() };
+    let rt = Rc::new(Runtime::native(&geom));
+    let cfg = WarehouseConfig::default();
+    let envs: Vec<WarehouseLocalEnv> = (0..b).map(|_| WarehouseLocalEnv::new(&cfg)).collect();
+    let aip = NeuralAip::new(rt, "aip_warehouse", b).expect("GRU AIP");
+    let mut env = IalsVecEnv::with_workers(envs, Box::new(aip), workers);
+    env.set_fused(fused);
+    assert_eq!(env.is_fused(), fused, "native GRU AIP must support both pipelines");
+    env
+}
+
+#[test]
+fn fused_fnn_ials_equals_sandwich_for_any_worker_count() {
+    // Reference: the PR 3 sandwich, serial. The fused pipeline must match
+    // it bitwise for every worker count — 4 divides the batch of 16, 3 and
+    // 5 do not, 1 is the fused-but-inline case.
+    let mut sandwich = traffic_neural_ials(16, 1, false);
+    for w in [1usize, 3, 4, 5] {
+        let mut fused = traffic_neural_ials(16, w, true);
+        assert_lockstep(&mut sandwich, &mut fused, 41, &format!("fused fnn ials w={w}"));
+    }
+}
+
+#[test]
+fn fused_gru_ials_equals_sandwich_across_episode_boundaries() {
+    // 210 > episode_len = 200, so the comparison crosses an auto-reset:
+    // the fused path's in-dispatch h-row clearing must line up with the
+    // sandwich's coordinator-side reset_state.
+    let steps = 210;
+    let b = 8;
+    let mut sandwich = warehouse_neural_ials(b, 1, false);
+    for w in [3usize, 4] {
+        let mut fused = warehouse_neural_ials(b, w, true);
+        sandwich.reset_all(42);
+        fused.reset_all(42);
+        let mut rng = Pcg32::new(42, 777);
+        let na = sandwich.num_actions();
+        let d = sandwich.obs_dim();
+        let mut actions = vec![0usize; b];
+        let (mut ra, mut rb) = (vec![0.0f32; b], vec![0.0f32; b]);
+        let (mut da, mut db) = (vec![false; b], vec![false; b]);
+        let (mut oa, mut ob) = (vec![0.0f32; b * d], vec![0.0f32; b * d]);
+        for t in 0..steps {
+            for a in actions.iter_mut() {
+                *a = rng.below(na);
+            }
+            sandwich.step_all(&actions, &mut ra, &mut da);
+            fused.step_all(&actions, &mut rb, &mut db);
+            assert_eq!(ra, rb, "w={w}: rewards diverged at step {t}");
+            assert_eq!(da, db, "w={w}: dones diverged at step {t}");
+            sandwich.observe_all(&mut oa);
+            fused.observe_all(&mut ob);
+            assert_eq!(oa, ob, "w={w}: observations diverged at step {t}");
+        }
+    }
+}
+
+#[test]
+fn fused_fixed_marginal_ials_sweep_is_pipeline_and_worker_invariant() {
+    // The fixed-marginal predictor also shard-executes; sweep worker
+    // counts (incl. non-dividing) against the serial sandwich.
+    let mut reference = traffic_ials(6, 1);
+    reference.set_fused(false);
+    for w in [1usize, 2, 3, 4, 6, 8] {
+        let mut fused = traffic_ials(6, w);
+        assert!(fused.is_fused());
+        assert_lockstep(&mut reference, &mut fused, 43, &format!("fused f-ials w={w}"));
+    }
 }

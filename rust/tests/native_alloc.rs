@@ -1,17 +1,23 @@
 //! Allocation audit of the native hot paths: after a warmup call (which
 //! builds the per-artifact scratch — including per-slice gradient scratch
 //! and the cached Adam slot indices — once), policy `forward_into` / AIP
-//! `predict` **and the whole training path** (fused whole-phase PPO
-//! update, FNN BCE step, GRU BPTT step) must perform **zero steady-state
-//! heap allocations**, on both the serial and the data-parallel engine
-//! (pool dispatch broadcasts a borrowed pointer — no boxed jobs). Pinned
-//! with a counting global allocator; everything lives in one `#[test]` so
-//! no parallel test can pollute the counter.
+//! `predict`, the **fused IALS step** (one-dispatch gather → shard-local
+//! AIP forward → influence sampling → LS step; per-shard `EngineScratch`
+//! is allocated at env construction) **and the whole training path**
+//! (fused whole-phase PPO update, FNN BCE step, GRU BPTT step) must
+//! perform **zero steady-state heap allocations**, on both the serial and
+//! the data-parallel engine (pool dispatch broadcasts a borrowed pointer —
+//! no boxed jobs). Pinned with a counting global allocator; everything
+//! lives in one `#[test]` so no parallel test can pollute the counter.
 
-use ials::config::PpoConfig;
+use ials::config::{PpoConfig, TrafficConfig, WarehouseConfig};
+use ials::core::VecEnv;
+use ials::ials::IalsVecEnv;
 use ials::influence::{InfluencePredictor, NeuralAip};
 use ials::rl::Policy;
 use ials::runtime::{DataArg, Runtime, SynthGeometry};
+use ials::sim::traffic::TrafficLocalEnv;
+use ials::sim::warehouse::WarehouseLocalEnv;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -112,6 +118,55 @@ fn native_forward_hot_path_allocates_nothing() {
     });
     assert_eq!(n, 0, "GRU AIP predict allocated {n} times in 100 steps");
     assert!(wprobs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+
+    // ---- Fused IALS step: gather → shard-local AIP forward → influence
+    // sampling → LS step, one pool dispatch per step. EngineScratch lives
+    // on each shard from construction, so the steady state allocates
+    // nothing — serial executor and pooled shards alike. (60 steps stay
+    // inside the 200-step episodes: auto-reset is not under audit here.)
+    for workers in [1usize, 2] {
+        let rt = Rc::new(Runtime::native_default());
+        let label = format!("fused ials num_workers={workers}");
+        let tcfg = TrafficConfig::default();
+        let envs: Vec<TrafficLocalEnv> =
+            (0..16).map(|_| TrafficLocalEnv::new(&tcfg)).collect();
+        let aip = NeuralAip::new(rt.clone(), "aip_traffic", 16).unwrap();
+        let mut ials = IalsVecEnv::with_workers(envs, Box::new(aip), workers);
+        assert!(ials.is_fused(), "[{label}] native FNN AIP must fuse");
+        ials.reset_all(9);
+        let actions = vec![0usize; 16];
+        let mut rewards = vec![0.0f32; 16];
+        let mut dones = vec![false; 16];
+        for _ in 0..3 {
+            ials.step_all(&actions, &mut rewards, &mut dones);
+        }
+        let n = counted(|| {
+            for _ in 0..60 {
+                ials.step_all(&actions, &mut rewards, &mut dones);
+            }
+        });
+        assert_eq!(n, 0, "[{label}] fused FNN IALS step allocated {n} times in 60 steps");
+
+        // Recurrent variant: the fused dispatch advances each shard's own
+        // band of the GRU h double-buffer (swap on the coordinator).
+        let wcfg = WarehouseConfig::default();
+        let wenvs: Vec<WarehouseLocalEnv> =
+            (0..16).map(|_| WarehouseLocalEnv::new(&wcfg)).collect();
+        let gaip = NeuralAip::new(rt, "aip_warehouse", 16).unwrap();
+        let mut wials = IalsVecEnv::with_workers(wenvs, Box::new(gaip), workers);
+        assert!(wials.is_fused(), "[{label}] native GRU AIP must fuse");
+        wials.reset_all(10);
+        let wactions = vec![1usize; 16];
+        for _ in 0..3 {
+            wials.step_all(&wactions, &mut rewards, &mut dones);
+        }
+        let n = counted(|| {
+            for _ in 0..60 {
+                wials.step_all(&wactions, &mut rewards, &mut dones);
+            }
+        });
+        assert_eq!(n, 0, "[{label}] fused GRU IALS step allocated {n} times in 60 steps");
+    }
 
     // ---- Training path: fused PPO + FNN BCE + GRU BPTT, serial and
     // data-parallel (per-worker gradient scratch is preallocated at op

@@ -7,6 +7,11 @@
 //! partition over a fixed slice grid and per-slice gradient partials
 //! reduce in fixed slice order, so the worker count can only change
 //! wall-clock, never bits.
+//!
+//! The same harness also pins the **fused step pipeline** end to end:
+//! whole training runs (collect → AIP training → PPO on the IALS) with
+//! the fused single-dispatch step must be bitwise identical to the PR 3
+//! sandwich for any `num_workers` × `nn_workers` combination.
 
 use ials::collect::{collect_dataset_sharded, FeatureKind};
 use ials::config::{PpoConfig, TrafficConfig, WarehouseConfig};
@@ -47,8 +52,9 @@ fn assert_bitwise_eq(a: &RunOut, b: &RunOut, what: &str) {
 
 /// Short fig3-style traffic IALS training: Algorithm-1 collect → FNN AIP
 /// training → 2 PPO iterations on the IALS (fused whole-phase updates).
-/// The sim half stays serial so only the NN worker count varies.
-fn run_traffic(nn_workers: usize) -> RunOut {
+/// `sim_workers` shards the env, `nn_workers` fans NN rows out, `fused`
+/// selects the single-dispatch step pipeline vs the PR 3 sandwich.
+fn run_traffic(nn_workers: usize, sim_workers: usize, fused: bool) -> RunOut {
     let geom = SynthGeometry {
         rollout_b: 8,
         rollout_t: 16,
@@ -76,7 +82,8 @@ fn run_traffic(nn_workers: usize) -> RunOut {
     let aip_params = snapshot(&aip.store);
 
     let envs: Vec<TrafficLocalEnv> = (0..8).map(|_| TrafficLocalEnv::new(&tcfg)).collect();
-    let mut env = IalsVecEnv::new(envs, Box::new(aip));
+    let mut env = IalsVecEnv::with_workers(envs, Box::new(aip), sim_workers);
+    env.set_fused(fused);
     let cfg = PpoConfig {
         num_envs: 8,
         rollout_len: 16,
@@ -105,7 +112,7 @@ fn run_traffic(nn_workers: usize) -> RunOut {
 
 /// Short fig5-style warehouse GRU-IALS training: collect → GRU BPTT AIP
 /// training → 2 PPO iterations on the IALS with the recurrent predictor.
-fn run_warehouse(nn_workers: usize) -> RunOut {
+fn run_warehouse(nn_workers: usize, sim_workers: usize, fused: bool) -> RunOut {
     let geom = SynthGeometry {
         rollout_b: 8,
         rollout_t: 16,
@@ -135,7 +142,8 @@ fn run_warehouse(nn_workers: usize) -> RunOut {
     let aip_params = snapshot(&aip.store);
 
     let envs: Vec<WarehouseLocalEnv> = (0..8).map(|_| WarehouseLocalEnv::new(&wcfg)).collect();
-    let mut env = IalsVecEnv::new(envs, Box::new(aip));
+    let mut env = IalsVecEnv::with_workers(envs, Box::new(aip), sim_workers);
+    env.set_fused(fused);
     let cfg = PpoConfig {
         num_envs: 8,
         rollout_len: 16,
@@ -164,7 +172,7 @@ fn run_warehouse(nn_workers: usize) -> RunOut {
 
 #[test]
 fn traffic_fig3_training_is_nn_worker_count_invariant() {
-    let reference = run_traffic(1);
+    let reference = run_traffic(1, 1, true);
     assert!(
         reference.metrics.iter().all(|m| m.iter().all(|x| x.is_finite())),
         "reference metrics must be finite"
@@ -172,17 +180,55 @@ fn traffic_fig3_training_is_nn_worker_count_invariant() {
     // 3 does not divide the minibatch (32), the rollout (128) or the slice
     // grid — the fixed-grid + ordered-reduction scheme must not care.
     for k in [2usize, 3, 4] {
-        let other = run_traffic(k);
+        let other = run_traffic(k, 1, true);
         assert_bitwise_eq(&reference, &other, &format!("traffic nn_workers={k}"));
     }
 }
 
 #[test]
 fn warehouse_fig5_gru_training_is_nn_worker_count_invariant() {
-    let reference = run_warehouse(1);
+    let reference = run_warehouse(1, 1, true);
     for k in [2usize, 3, 4] {
-        let other = run_warehouse(k);
+        let other = run_warehouse(k, 1, true);
         assert_bitwise_eq(&reference, &other, &format!("warehouse nn_workers={k}"));
+    }
+}
+
+#[test]
+fn traffic_fig3_fused_training_equals_pr3_sandwich() {
+    // The acceptance bar of the fused-pipeline PR: whole training runs
+    // through the fused single-dispatch step must be bitwise identical to
+    // the PR 3 sandwich for any num_workers × nn_workers — including
+    // worker counts (3, 5) that do not divide the batch of 8.
+    let sandwich = run_traffic(1, 1, false);
+    // The sandwich itself must also stay worker-invariant — it remains the
+    // shipping path for PJRT-backed predictors (coordinator-batched AIP
+    // call whose rows fan out over nn_workers).
+    let sandwich_par = run_traffic(3, 2, false);
+    assert_bitwise_eq(&sandwich, &sandwich_par, "traffic sandwich nn_workers=3 num_workers=2");
+    for (nn, sim) in [(1usize, 1usize), (2, 3), (3, 4), (4, 2), (2, 5)] {
+        let fused = run_traffic(nn, sim, true);
+        assert_bitwise_eq(
+            &sandwich,
+            &fused,
+            &format!("traffic fused nn_workers={nn} num_workers={sim}"),
+        );
+    }
+}
+
+#[test]
+fn warehouse_fig5_fused_gru_training_equals_pr3_sandwich() {
+    // Same bar for the recurrent predictor: the fused dispatch advances
+    // (and episode-resets) each shard's band of the GRU state, which must
+    // reproduce the sandwich's coordinator-side h handling exactly.
+    let sandwich = run_warehouse(1, 1, false);
+    for (nn, sim) in [(2usize, 3usize), (3, 2), (4, 4)] {
+        let fused = run_warehouse(nn, sim, true);
+        assert_bitwise_eq(
+            &sandwich,
+            &fused,
+            &format!("warehouse fused nn_workers={nn} num_workers={sim}"),
+        );
     }
 }
 

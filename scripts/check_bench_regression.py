@@ -6,11 +6,13 @@ committed baselines (results/*.json at the repo root) and fails the job
 when any cell's throughput regresses by more than the threshold.
 
 Matching: cells are keyed by every non-metric field (op, model, domain,
-batch, minibatch, num_workers, nn_workers, backend, ...); the throughput
-metric is whichever of `rows_per_sec` / `steps_per_sec` the cell carries.
-Cells present only in the fresh run (new benches, new sweep points) or
-only in the baseline (retired cells) are skipped — the guard never blocks
-adding coverage, only losing speed.
+batch, minibatch, num_workers, nn_workers, pipeline, backend, ...); the
+throughput metric is whichever of `rows_per_sec` / `steps_per_sec` the
+cell carries. Cells present only in the fresh run (new benches, new sweep
+points) or only in the baseline (retired cells) are skipped — the guard
+never blocks adding coverage, only losing speed. Every skipped cell is
+printed, so brand-new sweep points are visible in the CI log (and can be
+promoted to committed baselines from the bench-results artifact).
 
 Usage:
   python3 scripts/check_bench_regression.py \
@@ -25,14 +27,19 @@ import sys
 THROUGHPUT_KEYS = ("rows_per_sec", "steps_per_sec")
 
 
+def ident(cell):
+    """The cell's identity fields (metrics, including derived floats like
+    speedup ratios, excluded) — the single source of truth for matching
+    (`cell_key`) and for log lines."""
+    return {
+        k: v
+        for k, v in cell.items()
+        if not isinstance(v, float) or k in ("batch", "minibatch", "num_workers", "nn_workers")
+    }
+
+
 def cell_key(cell):
-    return tuple(
-        sorted(
-            (k, v)
-            for k, v in cell.items()
-            if not isinstance(v, float) or k in ("batch", "minibatch", "num_workers", "nn_workers")
-        )
-    )
+    return tuple(sorted(ident(cell).items()))
 
 
 def throughput(cell):
@@ -68,9 +75,8 @@ def main():
 
     regressions = []
     compared = skipped = 0
-    for name in sorted(os.listdir(args.baseline)):
-        if not name.endswith(".json"):
-            continue
+    baseline_files = [n for n in sorted(os.listdir(args.baseline)) if n.endswith(".json")]
+    for name in baseline_files:
         fresh_path = os.path.join(args.fresh, name)
         if not os.path.exists(fresh_path):
             print(f"[skip] {name}: no fresh run")
@@ -83,17 +89,31 @@ def main():
             f = throughput(fcell) if fcell else None
             if b is None or f is None or b <= 0:
                 skipped += 1
+                print(f"[skip] {name} {ident(bcell)}: baseline cell not matched/metric-less")
                 continue
             compared += 1
             floor = b * (1.0 - args.max_regression)
-            ident = {k: v for k, v in bcell.items() if throughput({k: v}) is None}
             if f < floor:
-                regressions.append((name, ident, b, f))
-                print(f"[FAIL] {name} {ident}: {f:.1f} < {floor:.1f} (baseline {b:.1f})")
+                regressions.append((name, ident(bcell), b, f))
+                print(f"[FAIL] {name} {ident(bcell)}: {f:.1f} < {floor:.1f} (baseline {b:.1f})")
             else:
-                print(f"[ok]   {name} {ident}: {f:.1f} vs baseline {b:.1f}")
-        for key in fresh.keys() - base.keys():
+                print(f"[ok]   {name} {ident(bcell)}: {f:.1f} vs baseline {b:.1f}")
+        for key in sorted(fresh.keys() - base.keys()):
             skipped += 1
+            print(f"[new]  {name} {ident(fresh[key])}: no baseline (skipped)")
+
+    # Fresh result files with no committed baseline at all (new benches):
+    # list every cell so the sweep is visible in the CI log and can be
+    # promoted to a baseline from the bench-results artifact.
+    if os.path.isdir(args.fresh):
+        for name in sorted(os.listdir(args.fresh)):
+            if not name.endswith(".json") or name in baseline_files:
+                continue
+            fresh = load_cells(os.path.join(args.fresh, name))
+            print(f"[new]  {name}: no committed baseline — {len(fresh)} cell(s) skipped")
+            for key in sorted(fresh.keys()):
+                skipped += 1
+                print(f"[new]  {name} {ident(fresh[key])}: no baseline (skipped)")
 
     print(f"\ncompared {compared} cells, skipped {skipped} (no baseline / no metric)")
     if regressions:
