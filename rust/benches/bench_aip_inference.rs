@@ -33,10 +33,7 @@ fn main() {
 
     let h16 = vec![0.0f32; 16 * 64];
     let wd16 = vec![0.5f32; 16 * 24];
-    add(
-        "aip_warehouse_step_b16",
-        &[DataArg::F32(&h16), DataArg::F32(&wd16)],
-    );
+    add("aip_warehouse_step_b16", &[DataArg::F32(&h16), DataArg::F32(&wd16)]);
 
     let wobs16 = vec![0.1f32; 16 * 296];
     add("policy_warehouse_fwd_b16", &[DataArg::F32(&wobs16)]);
@@ -45,16 +42,10 @@ fn main() {
     let lr = [1e-3f32];
     let ad = vec![0.5f32; 256 * 40];
     let ay = vec![0.0f32; 256 * 4];
-    add(
-        "aip_traffic_update",
-        &[DataArg::F32(&lr), DataArg::F32(&ad), DataArg::F32(&ay)],
-    );
+    add("aip_traffic_update", &[DataArg::F32(&lr), DataArg::F32(&ad), DataArg::F32(&ay)]);
     let seqs = vec![0.5f32; 16 * 32 * 24];
     let tgts = vec![0.0f32; 16 * 32 * 12];
-    add(
-        "aip_warehouse_update",
-        &[DataArg::F32(&lr), DataArg::F32(&seqs), DataArg::F32(&tgts)],
-    );
+    add("aip_warehouse_update", &[DataArg::F32(&lr), DataArg::F32(&seqs), DataArg::F32(&tgts)]);
     let pobs = vec![0.1f32; 256 * 42];
     let pact = vec![0i32; 256];
     let padv = vec![0.1f32; 256];

@@ -1,0 +1,143 @@
+//! Multi-learner round-robin throughput: K IALS learners (fig3 traffic
+//! geometry, real native NN in the loop) interleaved over the one
+//! process-shared compute pool, sweeping `learners × workers` (the sim
+//! and NN halves share the worker count, as the fig3 config does). The
+//! interesting ratio is aggregate env-steps/sec vs the single-learner
+//! run at the same worker count: K policies per wall-clock run, ideally
+//! at K× the single-learner cost or better (shared pool, shared engine,
+//! shared AIP dataset — only the parameters are per learner).
+//!
+//! Run: `cargo bench --bench bench_multi_learner`
+//! Emits a table to stdout and a JSON record per cell to
+//! `results/bench_multi_learner.json` for the CI regression guard.
+
+use ials::bench_harness::{Bench, Table};
+use ials::config::{BackendKind, DomainKind, ExperimentConfig, SimulatorKind};
+use ials::coordinator::MultiLearnerRun;
+use ials::runtime::Runtime;
+use std::io::Write;
+use std::rc::Rc;
+
+const LEARNER_SWEEP: [usize; 3] = [1, 2, 4];
+const WORKER_SWEEP: [usize; 3] = [1, 2, 4];
+
+struct Cell {
+    learners: usize,
+    workers: usize,
+    steps_per_sec: f64,
+    per_learner_steps_per_sec: f64,
+    throughput_vs_one_learner: f64,
+}
+
+/// Fig3 traffic IALS geometry, scaled for a bench: full rollout shape,
+/// small shared dataset, evaluations pushed out of the timed rounds.
+fn bench_cfg(learners: usize, workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "bench-multi".into();
+    cfg.domain = DomainKind::Traffic;
+    cfg.simulator = SimulatorKind::Ials;
+    cfg.num_learners = learners;
+    cfg.eval_every = usize::MAX / 2;
+    cfg.eval_episodes = 1;
+    cfg.ppo.num_envs = 16;
+    cfg.ppo.rollout_len = 128;
+    cfg.ppo.minibatch = 256;
+    cfg.ppo.total_steps = usize::MAX / 2;
+    cfg.ppo.num_workers = workers;
+    cfg.aip.dataset_size = 4000;
+    cfg.aip.eval_size = 1000;
+    cfg.aip.train_epochs = 1;
+    cfg.runtime.backend = BackendKind::Native;
+    cfg.runtime.nn_workers = workers;
+    cfg.validate().expect("bench config");
+    cfg
+}
+
+/// Aggregate env-steps/sec of the round-robin loop (collection + PPO
+/// update for every learner, one full round per rep).
+fn measure(learners: usize, workers: usize) -> f64 {
+    let cfg = bench_cfg(learners, workers);
+    let rt = Rc::new(Runtime::from_config(&cfg).expect("runtime"));
+    let mut run = MultiLearnerRun::build(&rt, &cfg, 7).expect("multi-learner build");
+    run.start().expect("start");
+    let steps_per_round = run.steps_per_round();
+    let label = format!("traffic/L{learners}/w{workers}");
+    let r = Bench::new(&label).warmup(1).reps(2).run(steps_per_round as f64, || {
+        run.advance_round().expect("advance_round");
+    });
+    r.throughput()
+}
+
+fn main() {
+    let mut cells: Vec<Cell> = Vec::new();
+    for &w in &WORKER_SWEEP {
+        let mut base = 0.0f64;
+        for &l in &LEARNER_SWEEP {
+            let agg = measure(l, w);
+            if l == 1 {
+                base = agg;
+            }
+            cells.push(Cell {
+                learners: l,
+                workers: w,
+                steps_per_sec: agg,
+                per_learner_steps_per_sec: agg / l as f64,
+                throughput_vs_one_learner: agg / base.max(1e-12),
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        "multi-learner round-robin (aggregate env steps/sec; fig3 traffic IALS)",
+        &["learners", "workers", "steps/s", "per-learner", "vs 1 learner"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.learners.to_string(),
+            c.workers.to_string(),
+            format!("{:.0}", c.steps_per_sec),
+            format!("{:.0}", c.per_learner_steps_per_sec),
+            format!("{:.2}x", c.throughput_vs_one_learner),
+        ]);
+    }
+    table.print();
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"domain\": \"traffic\", \"learners\": {}, \"num_workers\": {}, \
+             \"nn_workers\": {}, \"steps_per_sec\": {:.1}, \
+             \"per_learner_steps_per_sec\": {:.1}, \"throughput_vs_one_learner\": {:.3}, \
+             \"backend\": \"native\"}}{}\n",
+            c.learners,
+            c.workers,
+            c.workers,
+            c.steps_per_sec,
+            c.per_learner_steps_per_sec,
+            c.throughput_vs_one_learner,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("]\n");
+    println!("{json}");
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::File::create("results/bench_multi_learner.json"))
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        eprintln!("could not write results/bench_multi_learner.json: {e}");
+    }
+
+    // Headline: 4 learners on 4 workers vs 1 learner on 4 workers.
+    let base = cells.iter().find(|c| c.learners == 1 && c.workers == 4);
+    let four = cells.iter().find(|c| c.learners == 4 && c.workers == 4);
+    if let (Some(b), Some(f)) = (base, four) {
+        println!(
+            "headline: 4 learners w=4 -> {:.2}x aggregate throughput vs 1 learner \
+             ({:.0} vs {:.0} steps/s)",
+            f.steps_per_sec / b.steps_per_sec.max(1e-12),
+            f.steps_per_sec,
+            b.steps_per_sec
+        );
+    }
+}

@@ -51,7 +51,13 @@ fn bench_policy(batch: usize, cells: &mut Vec<Cell>) {
     });
 }
 
-fn bench_aip(model: &'static str, dset_dim: usize, u_dim: usize, batch: usize, cells: &mut Vec<Cell>) {
+fn bench_aip(
+    model: &'static str,
+    dset_dim: usize,
+    u_dim: usize,
+    batch: usize,
+    cells: &mut Vec<Cell>,
+) {
     let rt = native_runtime(batch);
     let mut aip = NeuralAip::new(rt, model, batch).expect("aip");
     let dsets = vec![0.5f32; batch * dset_dim];

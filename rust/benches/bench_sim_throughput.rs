@@ -90,8 +90,7 @@ fn main() {
         cfg.simulator = SimulatorKind::Ials;
         let prep = prepare_predictor(&rt, &cfg, 1, cfg.ppo.num_envs).unwrap();
         let mut ials_env = make_train_env(&cfg, prep.predictor);
-        let ials_rate =
-            steps_per_sec(ials_env.as_mut(), 150, &format!("traffic/ials/grid{grid}"));
+        let ials_rate = steps_per_sec(ials_env.as_mut(), 150, &format!("traffic/ials/grid{grid}"));
         scale.row(&[
             format!("{grid}x{grid} ({})", grid * grid),
             format!("{gs_rate:.0}"),

@@ -26,7 +26,11 @@ fn main() -> ials::Result<()> {
     // --- Algorithm 1: dataset from the global simulator -----------------
     let mut gs = TrafficGlobalEnv::new(&cfg.traffic);
     let data = collect_dataset(&mut gs, 20_000, 1, FeatureKind::Dset);
-    println!("collected {} (d_t, u_t) pairs; marginals {:?}", data.total_steps(), data.u_marginals());
+    println!(
+        "collected {} (d_t, u_t) pairs; marginals {:?}",
+        data.total_steps(),
+        data.u_marginals()
+    );
 
     // --- Train the influence predictor (Eq. 3) --------------------------
     let mut aip = NeuralAip::new(rt.clone(), "aip_traffic", 16)?;

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! repro figure --name fig3 [--config configs/base.toml]
-//! repro train  --config configs/fig3_ials.toml [--seed 1]
+//! repro train  --config configs/fig3_ials.toml [--seed 1] [--learners 4]
 //! repro collect --domain traffic --steps 50000 --out results/data.csv
 //! repro list
 //! ```
@@ -29,10 +29,7 @@ impl Args {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got '{a}'\n{}", USAGE))?;
-            let value = it
-                .next()
-                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?
-                .clone();
+            let value = it.next().ok_or_else(|| anyhow!("flag --{key} needs a value"))?.clone();
             if args.flags.insert(key.to_string(), value).is_some() {
                 bail!("duplicate flag --{key}");
             }
@@ -68,7 +65,7 @@ repro — Influence-Augmented Local Simulators (ICML 2022) reproduction
 
 USAGE:
   repro figure --name <fig3|fig5|fig6|fig8|fig10|fig11|fig12> [--config <toml>]
-  repro train  --config <toml> [--seed <n>]
+  repro train  --config <toml> [--seed <n>] [--learners <k>]
   repro collect --domain <traffic|warehouse> [--steps <n>] [--seed <n>]
   repro bench-throughput            # GS vs LS vs IALS steps/sec table
   repro list                        # list figures and artifacts
@@ -76,7 +73,10 @@ USAGE:
 Flags default from the config file; configs/ has one per figure.
 Backend: [runtime] backend = auto|native|pjrt — `auto` (default) runs the
 native CPU engine when artifacts/ is absent, so no `make artifacts` step
-is needed to train end-to-end.";
+is needed to train end-to-end.
+Multi-learner: [experiment] num_learners = K (or train --learners K) runs
+K independent learners round-robin over one shared AIP dataset and one
+compute pool — one curve CSV per learner.";
 
 #[cfg(test)]
 mod tests {

@@ -258,6 +258,9 @@ pub struct AipConfig {
     pub kind: AipKind,
     /// Number of (d-set, u) samples collected from the GS.
     pub dataset_size: usize,
+    /// Held-out GS samples for the reported AIP cross-entropy (never on
+    /// the training clock; 4000 reproduces the paper harness).
+    pub eval_size: usize,
     /// Offline training epochs over the dataset.
     pub train_epochs: usize,
     pub batch: usize,
@@ -278,6 +281,7 @@ impl Default for AipConfig {
         AipConfig {
             kind: AipKind::Neural,
             dataset_size: 50_000,
+            eval_size: 4000,
             train_epochs: 4,
             batch: 256,
             lr: 1e-3,
@@ -294,6 +298,14 @@ pub struct ExperimentConfig {
     pub name: String,
     pub domain: DomainKind,
     pub simulator: SimulatorKind,
+    /// Concurrent learners per run (`coordinator::multi`): `1` (the
+    /// default) is the historical single-learner experiment, bit for bit;
+    /// `K > 1` trains K independent policies round-robin over the one
+    /// shared compute pool, against one shared AIP dataset — learner `j`
+    /// is seeded by `runtime::learner_seed(seed, j)`, so results are
+    /// bitwise reproducible for any `num_learners × num_workers ×
+    /// nn_workers`.
+    pub num_learners: usize,
     /// Seeds to run (results are averaged; paper uses 5).
     pub seeds: Vec<u64>,
     /// Evaluate on the GS every this many training steps (paper §5.1:
@@ -315,6 +327,7 @@ impl Default for ExperimentConfig {
             name: "default".into(),
             domain: DomainKind::Traffic,
             simulator: SimulatorKind::Ials,
+            num_learners: 1,
             seeds: vec![1],
             eval_every: 4096,
             eval_episodes: 4,
@@ -349,6 +362,8 @@ impl ExperimentConfig {
         cfg.name = doc.str_or("experiment", "name", &cfg.name)?;
         cfg.domain = DomainKind::parse(&doc.str_or("experiment", "domain", "traffic")?)?;
         cfg.simulator = SimulatorKind::parse(&doc.str_or("experiment", "simulator", "ials")?)?;
+        cfg.num_learners =
+            doc.int_or("experiment", "num_learners", cfg.num_learners as i64)? as usize;
         if let Some(v) = doc.get("experiment", "seeds") {
             cfg.seeds = v
                 .as_array()?
@@ -408,6 +423,7 @@ impl ExperimentConfig {
             other => bail!("unknown aip kind '{other}'"),
         };
         a.dataset_size = doc.int_or("aip", "dataset_size", a.dataset_size as i64)? as usize;
+        a.eval_size = doc.int_or("aip", "eval_size", a.eval_size as i64)? as usize;
         a.train_epochs = doc.int_or("aip", "train_epochs", a.train_epochs as i64)? as usize;
         a.batch = doc.int_or("aip", "batch", a.batch as i64)? as usize;
         a.lr = doc.float_or("aip", "lr", a.lr as f64)? as f32;
@@ -465,7 +481,16 @@ impl ExperimentConfig {
         anyhow::ensure!((0.0..=1.0).contains(&w.item_prob), "item_prob out of range");
         anyhow::ensure!(w.frame_stack >= 1, "frame_stack must be >= 1");
         anyhow::ensure!(self.aip.seq_len >= 1, "aip seq_len must be >= 1");
+        anyhow::ensure!(self.aip.eval_size >= 1, "aip eval_size must be >= 1");
         anyhow::ensure!(!self.seeds.is_empty(), "need at least one seed");
+        // Like the worker knobs, a negative value wraps through `as usize`
+        // — bound it so a typo fails here, not while allocating K runs'
+        // worth of envs and stores.
+        anyhow::ensure!(
+            (1..=64).contains(&self.num_learners),
+            "num_learners must be in 1..=64 (got {})",
+            self.num_learners
+        );
         Ok(())
     }
 }
@@ -477,6 +502,7 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("experiment", "name"),
     ("experiment", "domain"),
     ("experiment", "simulator"),
+    ("experiment", "num_learners"),
     ("experiment", "seeds"),
     ("experiment", "eval_every"),
     ("experiment", "eval_episodes"),
@@ -512,6 +538,7 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("ppo", "num_workers"),
     ("aip", "kind"),
     ("aip", "dataset_size"),
+    ("aip", "eval_size"),
     ("aip", "train_epochs"),
     ("aip", "batch"),
     ("aip", "lr"),
@@ -581,6 +608,17 @@ mod tests {
         assert_eq!(cfg.ppo.total_steps, 100_000);
         assert_eq!(cfg.aip.kind, AipKind::Fixed);
         assert!(cfg.aip.fixed_p < 0.0);
+    }
+
+    #[test]
+    fn num_learners_knob_parses_defaults_and_bounds() {
+        assert_eq!(ExperimentConfig::default().num_learners, 1, "single learner by default");
+        let cfg = ExperimentConfig::from_toml("[experiment]\nnum_learners = 4").unwrap();
+        assert_eq!(cfg.num_learners, 4);
+        // 0 learners is meaningless; negative wraps through `as usize`.
+        assert!(ExperimentConfig::from_toml("[experiment]\nnum_learners = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nnum_learners = -1").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nnum_learners = 65").is_err());
     }
 
     #[test]

@@ -16,16 +16,17 @@ use crate::core::{
 use crate::ials::IalsVecEnv;
 use crate::influence::{
     evaluate_ce, train_fnn, train_gru, FixedMarginalAip, InfluenceDataset, InfluencePredictor,
-    NeuralAip,
+    NeuralAip, UNTRAINED_INIT_MIX,
 };
 use crate::log_info;
 use crate::metrics::{write_curve, ConditionResult, SummaryWriter};
 use crate::rl::Policy;
-use crate::runtime::Runtime;
+use crate::runtime::{learner_seed, MultiStore, Runtime};
 use crate::sim::traffic::{TrafficGlobalEnv, TrafficLocalEnv};
 use crate::sim::warehouse::{WarehouseGlobalEnv, WarehouseLocalEnv};
 use crate::util::Pcg32;
 use crate::Result;
+use anyhow::Context;
 use std::path::Path;
 use std::rc::Rc;
 
@@ -86,76 +87,154 @@ pub struct Prep {
     pub aip_ce: f64,
 }
 
+/// Algorithm-1 GS data shared by every learner of a run: collected
+/// **once**, consumed by each learner's own predictor build — the
+/// distributed-IALS layout (K AIPs trained on one dataset).
+pub struct SharedAipData {
+    /// Held-out evaluation data (never timed — reporting only).
+    pub eval_data: InfluenceDataset,
+    /// Training data for simulator kinds that learn from GS samples
+    /// (IALS: `aip.dataset_size` steps; data-estimated F-IALS: 10K steps;
+    /// `None` otherwise).
+    pub train_data: Option<InfluenceDataset>,
+    /// Seconds spent collecting `train_data` (on the training clock).
+    pub collect_secs: f64,
+}
+
+/// Run the shared Algorithm-1 collection phase for `cfg.simulator`
+/// (`None` for the GS condition, which needs no influence data). Seeds
+/// are the run's base seed, so a `num_learners = 1` run collects exactly
+/// the bits the single-learner path always has.
+pub fn collect_shared_aip_data(cfg: &ExperimentConfig, seed: u64) -> Option<SharedAipData> {
+    if cfg.simulator == SimulatorKind::Gs {
+        return None;
+    }
+    let (_, _, feature) = aip_model_name(cfg);
+    let eval_data = collect_from_gs(cfg, cfg.aip.eval_size, seed ^ 0xE7A1, feature);
+    let (train_data, collect_secs) = match cfg.simulator {
+        SimulatorKind::Ials => {
+            let t0 = std::time::Instant::now();
+            let data = collect_from_gs(cfg, cfg.aip.dataset_size, seed, feature);
+            (Some(data), t0.elapsed().as_secs_f64())
+        }
+        // Estimate the marginal from 10K GS samples (App E).
+        SimulatorKind::FixedIals if cfg.aip.fixed_p < 0.0 => {
+            let t0 = std::time::Instant::now();
+            let data = collect_from_gs(cfg, 10_000, seed, feature);
+            (Some(data), t0.elapsed().as_secs_f64())
+        }
+        _ => (None, 0.0),
+    };
+    Some(SharedAipData { eval_data, train_data, collect_secs })
+}
+
+/// Build learner `learner`'s influence predictor over the shared dataset:
+/// a per-learner parameter store seeded from [`learner_seed`] (hosted in
+/// `stores`, then owned by the predictor), trained on `shared.train_data`
+/// where the condition demands it. Learner 0 at the base seed reproduces
+/// the single-learner preparation bit for bit.
+pub fn build_learner_predictor(
+    rt: &Rc<Runtime>,
+    cfg: &ExperimentConfig,
+    shared: &SharedAipData,
+    stores: &mut MultiStore,
+    learner: usize,
+    seed: u64,
+    batch: usize,
+) -> Result<Prep> {
+    let (model, is_gru, _) = aip_model_name(cfg);
+    let lseed = learner_seed(seed, learner);
+    let (mut predictor, prep_secs): (Box<dyn InfluencePredictor>, f64) = match cfg.simulator {
+        SimulatorKind::Gs => unreachable!("GS condition has no influence predictor"),
+        SimulatorKind::UntrainedIals => {
+            // Random-initialized network; no data, no training time (same
+            // seed mix as `NeuralAip::untrained`, by shared constant).
+            stores.init_model(rt, learner, model, lseed ^ UNTRAINED_INIT_MIX)?;
+            let aip = NeuralAip::from_multi_store(rt.clone(), stores, learner, model, batch)?;
+            (Box::new(aip), 0.0)
+        }
+        SimulatorKind::Ials => {
+            let data = shared
+                .train_data
+                .as_ref()
+                .context("IALS condition needs a shared training dataset")?;
+            let t0 = std::time::Instant::now();
+            // Fresh per-(seed, learner) init so learners (and seeds) are
+            // independent repetitions.
+            stores.init_model(rt, learner, model, lseed ^ 0xA1B2)?;
+            let mut aip = NeuralAip::from_multi_store(rt.clone(), stores, learner, model, batch)?;
+            let update = format!("{model}_update");
+            let losses = if is_gru {
+                let b = rt.geom("gru_seq_b")?;
+                let t = rt.geom("gru_seq_t")?;
+                train_gru(
+                    rt,
+                    &mut aip.store,
+                    &update,
+                    data,
+                    cfg.aip.train_epochs,
+                    b,
+                    t,
+                    cfg.aip.lr,
+                    lseed,
+                )?
+            } else {
+                train_fnn(
+                    rt,
+                    &mut aip.store,
+                    &update,
+                    data,
+                    cfg.aip.train_epochs,
+                    rt.geom("aip_batch")?,
+                    cfg.aip.lr,
+                    lseed,
+                )?
+            };
+            log_info!(
+                "[{}] learner {learner} AIP {model} trained: loss {:.4} -> {:.4}",
+                cfg.name,
+                losses.first().copied().unwrap_or(f32::NAN),
+                losses.last().copied().unwrap_or(f32::NAN)
+            );
+            (Box::new(aip), shared.collect_secs + t0.elapsed().as_secs_f64())
+        }
+        SimulatorKind::FixedIals => {
+            if cfg.aip.fixed_p >= 0.0 {
+                let u = shared.eval_data.u_dim;
+                let d = shared.eval_data.dset_dim;
+                let aip = FixedMarginalAip::constant(batch, d, u, cfg.aip.fixed_p);
+                (Box::new(aip), 0.0)
+            } else {
+                let data = shared
+                    .train_data
+                    .as_ref()
+                    .context("data-estimated F-IALS needs the shared 10K dataset")?;
+                let aip = FixedMarginalAip::from_data(batch, data);
+                (Box::new(aip), shared.collect_secs)
+            }
+        }
+    };
+
+    let aip_ce = evaluate_ce(predictor.as_mut(), &shared.eval_data)? as f64;
+    Ok(Prep { predictor: Some(predictor), prep_secs, aip_ce })
+}
+
 /// Build (and train, for the IALS condition) the influence predictor
-/// demanded by `cfg.simulator`, timing the parts the paper counts.
+/// demanded by `cfg.simulator`, timing the parts the paper counts — the
+/// single-learner path: one shared collection feeding one learner.
 pub fn prepare_predictor(
     rt: &Rc<Runtime>,
     cfg: &ExperimentConfig,
     seed: u64,
     batch: usize,
 ) -> Result<Prep> {
-    if cfg.simulator == SimulatorKind::Gs {
-        return Ok(Prep { predictor: None, prep_secs: 0.0, aip_ce: f64::NAN });
+    match collect_shared_aip_data(cfg, seed) {
+        None => Ok(Prep { predictor: None, prep_secs: 0.0, aip_ce: f64::NAN }),
+        Some(shared) => {
+            let mut stores = MultiStore::new(1);
+            build_learner_predictor(rt, cfg, &shared, &mut stores, 0, seed, batch)
+        }
     }
-    let (model, is_gru, feature) = aip_model_name(cfg);
-
-    // Held-out evaluation data (never timed — it's for reporting only).
-    let eval_data = collect_from_gs(cfg, 4000, seed ^ 0xE7A1, feature);
-
-    let (mut predictor, prep_secs): (Box<dyn InfluencePredictor>, f64) = match cfg.simulator {
-        SimulatorKind::Gs => unreachable!(),
-        SimulatorKind::UntrainedIals => {
-            // Random-initialized network; no data, no training time.
-            let aip = NeuralAip::untrained(rt.clone(), model, batch, seed)?;
-            (Box::new(aip), 0.0)
-        }
-        SimulatorKind::Ials => {
-            let t0 = std::time::Instant::now();
-            let data = collect_from_gs(cfg, cfg.aip.dataset_size, seed, feature);
-            let mut aip = NeuralAip::new(rt.clone(), model, batch)?;
-            // Fresh per-seed init so seeds are independent repetitions.
-            let spec = rt.manifest.model(model)?.clone();
-            aip.store.reinit(&spec, seed ^ 0xA1B2);
-            let update = format!("{model}_update");
-            let losses = if is_gru {
-                let b = rt.geom("gru_seq_b")?;
-                let t = rt.geom("gru_seq_t")?;
-                train_gru(
-                    rt, &mut aip.store, &update, &data, cfg.aip.train_epochs, b, t,
-                    cfg.aip.lr, seed,
-                )?
-            } else {
-                train_fnn(
-                    rt, &mut aip.store, &update, &data, cfg.aip.train_epochs,
-                    rt.geom("aip_batch")?, cfg.aip.lr, seed,
-                )?
-            };
-            log_info!(
-                "[{}] AIP {model} trained: loss {:.4} -> {:.4}",
-                cfg.name,
-                losses.first().copied().unwrap_or(f32::NAN),
-                losses.last().copied().unwrap_or(f32::NAN)
-            );
-            (Box::new(aip), t0.elapsed().as_secs_f64())
-        }
-        SimulatorKind::FixedIals => {
-            if cfg.aip.fixed_p >= 0.0 {
-                let u = eval_data.u_dim;
-                let d = eval_data.dset_dim;
-                let aip = FixedMarginalAip::constant(batch, d, u, cfg.aip.fixed_p);
-                (Box::new(aip), 0.0)
-            } else {
-                // Estimate the marginal from 10K GS samples (App E).
-                let t0 = std::time::Instant::now();
-                let data = collect_from_gs(cfg, 10_000, seed, feature);
-                let aip = FixedMarginalAip::from_data(batch, &data);
-                (Box::new(aip), t0.elapsed().as_secs_f64())
-            }
-        }
-    };
-
-    let aip_ce = evaluate_ce(predictor.as_mut(), &eval_data)? as f64;
-    Ok(Prep { predictor: Some(predictor), prep_secs, aip_ce })
 }
 
 fn collect_from_gs(
@@ -600,12 +679,7 @@ fn run_fig8(rt: &Rc<Runtime>, base: &ExperimentConfig, dir: &Path) -> Result<()>
             format!("{ce_off:.4}"),
             format!("{:+.4}", ce_off - ce_on),
         ]);
-        rows_csv.row(&[
-            if use_alsh { 1.0 } else { 0.0 },
-            ce_on,
-            ce_off,
-            ce_off - ce_on,
-        ])?;
+        rows_csv.row(&[if use_alsh { 1.0 } else { 0.0 }, ce_on, ce_off, ce_off - ce_on])?;
     }
     rows_csv.flush()?;
     table.print();

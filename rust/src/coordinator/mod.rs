@@ -1,10 +1,13 @@
 //! The coordinator: evaluation on the GS, the wall-clock-aware training
-//! loop, and the per-figure experiment harnesses.
+//! loop, the per-figure experiment harnesses, and the multi-learner
+//! (distributed-IALS) round-robin driver.
 
 pub mod evaluator;
 pub mod experiment;
+pub mod multi;
 pub mod trainer;
 
 pub use evaluator::{evaluate, EvalResult};
 pub use experiment::{run_condition, run_figure, FIGURES};
-pub use trainer::train_with_eval;
+pub use multi::{run_multi_condition, MultiLearnerOutcome, MultiLearnerRun};
+pub use trainer::{train_with_eval, LearnerLoop};

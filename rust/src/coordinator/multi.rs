@@ -1,0 +1,230 @@
+//! The multi-learner IALS runtime ("Distributed IALS", Suau et al.,
+//! arXiv:2207.00288): K independent learners trained concurrently in one
+//! process, against **shared** influence data, over the **one**
+//! process-shared compute pool.
+//!
+//! ## Layout
+//!
+//! * One Algorithm-1 GS collection phase feeds one AIP dataset
+//!   ([`collect_shared_aip_data`]); every learner trains its own
+//!   predictor on it ([`build_learner_predictor`]).
+//! * Parameters live in a [`MultiStore`]: per-learner AIP stores are
+//!   taken out into per-learner predictors (their recurrent state is
+//!   per-learner anyway); per-learner **policy** stores stay hosted, and
+//!   one engine-side [`Policy`] (one scratch set, one op cache) has the
+//!   active learner's parameters swapped in for its turn and swapped
+//!   back out afterwards.
+//! * Each learner owns its fused [`IalsVecEnv`]-based training env, its
+//!   GS eval env and its [`LearnerLoop`]; rollouts and PPO updates are
+//!   scheduled **round-robin in fixed learner order** (learner 0 first,
+//!   every round), all over the same shared pool — K learners never
+//!   oversubscribe cores, they interleave.
+//!
+//! ## Determinism
+//!
+//! Learner `j` is seeded by [`learner_seed`]`(seed, j)` everywhere (init,
+//! PPO RNG, env streams, evaluation), learner 0 by the base seed itself.
+//! Round-robin order is fixed and learners share no mutable state except
+//! the pool (whose scheduling never affects bits), so:
+//!
+//! * `num_learners = 1` is **bitwise identical** to the single-learner
+//!   experiment ([`super::run_condition`]) at the same seed, and
+//! * any `num_learners × num_workers × nn_workers` run is bitwise
+//!   reproducible across worker counts.
+//!
+//! Both are locked in by `rust/tests/multi_learner.rs`.
+//!
+//! [`IalsVecEnv`]: crate::ials::IalsVecEnv
+
+use super::experiment::{
+    build_learner_predictor, collect_shared_aip_data, make_eval_env, make_train_env,
+    policy_model_name, Prep,
+};
+use super::trainer::LearnerLoop;
+use crate::config::ExperimentConfig;
+use crate::core::VecEnv;
+use crate::log_info;
+use crate::metrics::ConditionResult;
+use crate::nn::ParamStore;
+use crate::rl::Policy;
+use crate::runtime::{learner_seed, MultiStore, Runtime};
+use crate::Result;
+use std::rc::Rc;
+
+/// One learner's run-long state: its envs, its stepwise training loop and
+/// its reporting numbers. The policy parameters live in the shared
+/// [`MultiStore`], not here.
+struct Learner {
+    train_env: Box<dyn VecEnv>,
+    eval_env: Box<dyn VecEnv>,
+    lp: LearnerLoop,
+    seed: u64,
+    prep_secs: f64,
+    aip_ce: f64,
+}
+
+/// Everything one learner produces, in the single-learner result shape
+/// (curves are directly comparable with [`super::run_condition`] output).
+pub struct MultiLearnerOutcome {
+    /// Per-learner condition results, in learner order.
+    pub results: Vec<ConditionResult>,
+    /// Final per-learner policy parameter stores, in learner order
+    /// (bitwise comparisons, checkpointing).
+    pub policy_stores: Vec<ParamStore>,
+}
+
+/// K learners interleaved round-robin over one pool: build with
+/// [`MultiLearnerRun::build`], then `start`, `advance_round` for
+/// [`MultiLearnerRun::iterations`] rounds, and `finish`. The driver for
+/// both [`run_multi_condition`] and `bench_multi_learner`.
+pub struct MultiLearnerRun {
+    cfg: ExperimentConfig,
+    policy: Policy,
+    policy_model: &'static str,
+    stores: MultiStore,
+    learners: Vec<Learner>,
+}
+
+impl MultiLearnerRun {
+    /// Shared collection + per-learner preparation: one Algorithm-1 phase,
+    /// then per learner an AIP (trained on the shared dataset), a fused
+    /// IALS training env, a GS eval env and a seeded policy store.
+    pub fn build(rt: &Rc<Runtime>, cfg: &ExperimentConfig, seed: u64) -> Result<MultiLearnerRun> {
+        let k = cfg.num_learners;
+        anyhow::ensure!(k >= 1, "num_learners must be >= 1");
+        log_info!(
+            "=== multi-learner {} / {} / seed {seed}: {k} learner(s) (backend: {}) ===",
+            cfg.name,
+            cfg.simulator.name(),
+            rt.backend_kind()
+        );
+        let shared = collect_shared_aip_data(cfg, seed);
+        let policy_model = policy_model_name(cfg);
+        let mut stores = MultiStore::new(k);
+        let mut learners = Vec::with_capacity(k);
+        for l in 0..k {
+            let lseed = learner_seed(seed, l);
+            let prep = match &shared {
+                None => Prep { predictor: None, prep_secs: 0.0, aip_ce: f64::NAN },
+                Some(sh) => {
+                    build_learner_predictor(rt, cfg, sh, &mut stores, l, seed, cfg.ppo.num_envs)?
+                }
+            };
+            let prep_secs = prep.prep_secs;
+            let aip_ce = prep.aip_ce;
+            let train_env = make_train_env(cfg, prep.predictor);
+            let eval_env = make_eval_env(cfg);
+            stores.init_model(rt, l, policy_model, lseed)?;
+            let lp = LearnerLoop::new(cfg, train_env.obs_dim(), lseed, prep_secs);
+            learners.push(Learner { train_env, eval_env, lp, seed: lseed, prep_secs, aip_ce });
+        }
+        // One engine-side policy (scratch + artifacts shared across
+        // learners); its initially-loaded store is a placeholder that the
+        // per-turn swap parks in the MultiStore slot.
+        let policy = Policy::new(rt.clone(), policy_model, cfg.ppo.num_envs)?;
+        Ok(MultiLearnerRun { cfg: cfg.clone(), policy, policy_model, stores, learners })
+    }
+
+    pub fn num_learners(&self) -> usize {
+        self.learners.len()
+    }
+
+    /// PPO iterations per learner (identical for all — one config).
+    pub fn iterations(&self) -> usize {
+        self.learners[0].lp.iterations()
+    }
+
+    /// Env steps one round consumes across all learners.
+    pub fn steps_per_round(&self) -> usize {
+        self.learners.len() * self.cfg.ppo.num_envs * self.cfg.ppo.rollout_len
+    }
+
+    /// Swap learner `l`'s parameters into the shared engine-side policy,
+    /// run `f`, and swap them back out — also when `f` errors. The one
+    /// place the checkout invariant lives.
+    fn with_learner(
+        &mut self,
+        l: usize,
+        f: impl FnOnce(&ExperimentConfig, &mut Learner, &mut Policy) -> Result<()>,
+    ) -> Result<()> {
+        let MultiLearnerRun { cfg, policy, policy_model, stores, learners } = self;
+        let learner = &mut learners[l];
+        stores.swap(l, policy_model, &mut policy.store)?;
+        let r = f(cfg, learner, policy);
+        stores.swap(l, policy_model, &mut policy.store)?;
+        r
+    }
+
+    /// Reset every learner's env and record its t=0 curve point, in fixed
+    /// learner order.
+    pub fn start(&mut self) -> Result<()> {
+        for l in 0..self.learners.len() {
+            self.with_learner(l, |cfg, ln, policy| {
+                ln.lp.start(cfg, ln.train_env.as_mut(), ln.eval_env.as_mut(), policy)
+            })?;
+        }
+        Ok(())
+    }
+
+    /// One round-robin pass: the next PPO iteration for every learner, in
+    /// fixed learner order, each with its own parameters swapped into the
+    /// shared engine-side policy for the duration of its turn.
+    pub fn advance_round(&mut self) -> Result<()> {
+        for l in 0..self.learners.len() {
+            self.with_learner(l, |cfg, ln, policy| {
+                ln.lp.advance(cfg, ln.train_env.as_mut(), ln.eval_env.as_mut(), policy)
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Per-learner results + final policy stores, in learner order.
+    pub fn finish(self) -> Result<MultiLearnerOutcome> {
+        let MultiLearnerRun { cfg, policy_model, mut stores, learners, .. } = self;
+        let mut results = Vec::with_capacity(learners.len());
+        let mut policy_stores = Vec::with_capacity(learners.len());
+        for (l, learner) in learners.into_iter().enumerate() {
+            let out = learner.lp.finish();
+            let final_eval = out.curve.last().map(|p| p.eval_mean).unwrap_or(f64::NAN);
+            results.push(ConditionResult {
+                condition: format!("{}-{}", cfg.simulator.name(), cfg.name),
+                seed: learner.seed,
+                curve: out.curve,
+                prep_secs: learner.prep_secs,
+                train_secs: out.train_secs,
+                aip_ce: learner.aip_ce,
+                final_eval,
+            });
+            policy_stores.push(stores.take(l, policy_model)?);
+        }
+        Ok(MultiLearnerOutcome { results, policy_stores })
+    }
+}
+
+/// Train `cfg.num_learners` learners end to end (the multi-learner
+/// counterpart of [`super::run_condition`]): shared collection,
+/// per-learner AIP training, then round-robin PPO with interleaved GS
+/// evaluations.
+pub fn run_multi_condition(
+    rt: &Rc<Runtime>,
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> Result<MultiLearnerOutcome> {
+    let mut run = MultiLearnerRun::build(rt, cfg, seed)?;
+    run.start()?;
+    for _ in 0..run.iterations() {
+        run.advance_round()?;
+    }
+    let out = run.finish()?;
+    for (l, r) in out.results.iter().enumerate() {
+        log_info!(
+            "[{}] learner {l} (seed {seed}): prep {:.2}s train {:.2}s aip_ce {:.4} final {:.4}",
+            cfg.name,
+            r.prep_secs,
+            r.train_secs,
+            r.aip_ce,
+            r.final_eval
+        );
+    }
+    Ok(out)
+}

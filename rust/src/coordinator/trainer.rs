@@ -1,6 +1,15 @@
 //! The wall-clock-aware training loop: PPO iterations on the training
 //! simulator, periodically paused for GS evaluations (eval time excluded
 //! from the training clock, exactly as the paper's x-axes are drawn).
+//!
+//! The loop body lives in [`LearnerLoop`], a step-wise driver holding one
+//! learner's training state (PPO trainer, curve, clock, eval schedule).
+//! [`train_with_eval`] runs one learner start-to-finish — the historical
+//! single-learner API — while `coordinator::multi` interleaves K
+//! [`LearnerLoop`]s round-robin over one compute pool. Both paths execute
+//! the exact same per-iteration code, which is what makes a
+//! `num_learners = 1` multi-learner run bitwise identical to this one
+//! (`rust/tests/multi_learner.rs`).
 
 use super::evaluator::evaluate;
 use crate::config::ExperimentConfig;
@@ -17,11 +26,133 @@ pub struct TrainOutcome {
     pub train_secs: f64,
 }
 
+/// One learner's stepwise training loop: owns the PPO trainer, the
+/// learning curve, the training stopwatch and the evaluation schedule.
+/// Call [`LearnerLoop::start`] once, then [`LearnerLoop::advance`] for
+/// `iterations()` iterations, then [`LearnerLoop::finish`]. The
+/// environments and the policy are passed per call so a multi-learner
+/// driver can hand the same engine-side `Policy` (with swapped-in
+/// per-learner parameters) to several loops.
+pub struct LearnerLoop {
+    trainer: PpoTrainer,
+    curve: Vec<CurvePoint>,
+    sw: Stopwatch,
+    per_iter: usize,
+    iterations: usize,
+    /// Iterations completed so far — owned here so drivers cannot desync
+    /// the final-evaluation trigger with an external counter.
+    iter: usize,
+    next_eval: usize,
+    steps_done: usize,
+    seed: u64,
+    clock_offset: f64,
+}
+
+impl LearnerLoop {
+    /// Build the loop for one learner. `clock_offset` shifts the curve
+    /// right by the AIP preparation time (the short horizontal segment at
+    /// the start of the paper's IALS curves).
+    pub fn new(
+        cfg: &ExperimentConfig,
+        obs_dim: usize,
+        seed: u64,
+        clock_offset: f64,
+    ) -> LearnerLoop {
+        let trainer = PpoTrainer::new(&cfg.ppo, obs_dim, seed);
+        let per_iter = trainer.steps_per_iteration();
+        let iterations = cfg.ppo.total_steps.div_ceil(per_iter);
+        LearnerLoop {
+            trainer,
+            curve: Vec::new(),
+            sw: Stopwatch::new(),
+            per_iter,
+            iterations,
+            iter: 0,
+            next_eval: cfg.eval_every,
+            steps_done: 0,
+            seed,
+            clock_offset,
+        }
+    }
+
+    /// PPO iterations this loop will run.
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// Reset the training env and record the t=0 curve point.
+    pub fn start(
+        &mut self,
+        cfg: &ExperimentConfig,
+        train_env: &mut dyn VecEnv,
+        eval_env: &mut dyn VecEnv,
+        policy: &mut Policy,
+    ) -> Result<()> {
+        train_env.reset_all(self.seed);
+        let ev = evaluate(eval_env, policy, cfg.eval_episodes, self.seed ^ 0x5EED)?;
+        self.curve.push(CurvePoint {
+            wall_clock_s: self.clock_offset,
+            env_steps: 0,
+            eval_mean: ev.mean,
+            eval_std: ev.std,
+            stats: PpoStats::default(),
+        });
+        Ok(())
+    }
+
+    /// One PPO iteration (training-clocked), plus a GS evaluation when the
+    /// schedule (or the final iteration) demands one.
+    pub fn advance(
+        &mut self,
+        cfg: &ExperimentConfig,
+        train_env: &mut dyn VecEnv,
+        eval_env: &mut dyn VecEnv,
+        policy: &mut Policy,
+    ) -> Result<()> {
+        let iter = self.iter;
+        self.iter += 1;
+        self.sw.resume();
+        let last_stats = self.trainer.train_iteration(train_env, policy)?;
+        self.sw.pause();
+        self.steps_done += self.per_iter;
+
+        if self.steps_done >= self.next_eval || iter + 1 == self.iterations {
+            let ev = evaluate(eval_env, policy, cfg.eval_episodes, self.seed ^ (iter as u64 + 1))?;
+            self.curve.push(CurvePoint {
+                wall_clock_s: self.clock_offset + self.sw.elapsed_secs(),
+                env_steps: self.steps_done,
+                eval_mean: ev.mean,
+                eval_std: ev.std,
+                stats: last_stats,
+            });
+            log_info!(
+                "[{}] seed {} steps {}/{} clock {:.1}s eval {:.4} (ent {:.3}, kl {:.4})",
+                cfg.name,
+                self.seed,
+                self.steps_done,
+                cfg.ppo.total_steps,
+                self.clock_offset + self.sw.elapsed_secs(),
+                ev.mean,
+                last_stats.entropy,
+                last_stats.approx_kl
+            );
+            while self.next_eval <= self.steps_done {
+                self.next_eval += cfg.eval_every;
+            }
+        }
+        Ok(())
+    }
+
+    /// The finished curve + training clock.
+    pub fn finish(self) -> TrainOutcome {
+        TrainOutcome { curve: self.curve, train_secs: self.sw.elapsed_secs() }
+    }
+}
+
 /// Train `policy` on `train_env` for `cfg.ppo.total_steps` env steps,
 /// evaluating on `eval_env` (batch-1, always the GS) every
 /// `cfg.eval_every` steps. `clock_offset` shifts the curve right by the
-/// AIP preparation time (the short horizontal segment at the start of the
-/// paper's IALS curves).
+/// AIP preparation time.
 pub fn train_with_eval(
     cfg: &ExperimentConfig,
     train_env: &mut dyn VecEnv,
@@ -30,7 +161,7 @@ pub fn train_with_eval(
     seed: u64,
     clock_offset: f64,
 ) -> Result<TrainOutcome> {
-    let mut trainer = PpoTrainer::new(&cfg.ppo, train_env.obs_dim(), seed);
+    let mut learner = LearnerLoop::new(cfg, train_env.obs_dim(), seed, clock_offset);
     let plan = super::experiment::worker_plan(cfg);
     let workers = plan.sim.min(cfg.ppo.num_envs);
     if workers > 1 || plan.nn > 1 {
@@ -42,55 +173,9 @@ pub fn train_with_eval(
             plan.nn
         );
     }
-    let per_iter = trainer.steps_per_iteration();
-    let iterations = cfg.ppo.total_steps.div_ceil(per_iter);
-    let mut curve = Vec::new();
-    let mut sw = Stopwatch::new();
-
-    train_env.reset_all(seed);
-
-    // Initial evaluation (t=0 point of the curve).
-    let ev = evaluate(eval_env, policy, cfg.eval_episodes, seed ^ 0x5EED)?;
-    curve.push(CurvePoint {
-        wall_clock_s: clock_offset,
-        env_steps: 0,
-        eval_mean: ev.mean,
-        eval_std: ev.std,
-        stats: PpoStats::default(),
-    });
-
-    let mut next_eval = cfg.eval_every;
-    let mut steps_done = 0usize;
-    let mut last_stats = PpoStats::default();
-    for iter in 0..iterations {
-        sw.resume();
-        last_stats = trainer.train_iteration(train_env, policy)?;
-        sw.pause();
-        steps_done += per_iter;
-
-        if steps_done >= next_eval || iter + 1 == iterations {
-            let ev = evaluate(eval_env, policy, cfg.eval_episodes, seed ^ (iter as u64 + 1))?;
-            curve.push(CurvePoint {
-                wall_clock_s: clock_offset + sw.elapsed_secs(),
-                env_steps: steps_done,
-                eval_mean: ev.mean,
-                eval_std: ev.std,
-                stats: last_stats,
-            });
-            log_info!(
-                "[{}] seed {seed} steps {steps_done}/{} clock {:.1}s eval {:.4} (ent {:.3}, kl {:.4})",
-                cfg.name,
-                cfg.ppo.total_steps,
-                clock_offset + sw.elapsed_secs(),
-                ev.mean,
-                last_stats.entropy,
-                last_stats.approx_kl
-            );
-            while next_eval <= steps_done {
-                next_eval += cfg.eval_every;
-            }
-        }
+    learner.start(cfg, train_env, eval_env, policy)?;
+    for _ in 0..learner.iterations() {
+        learner.advance(cfg, train_env, eval_env, policy)?;
     }
-    let _ = last_stats;
-    Ok(TrainOutcome { curve, train_secs: sw.elapsed_secs() })
+    Ok(learner.finish())
 }

@@ -440,7 +440,10 @@ impl<S: Send + 'static> ShardPool<S> {
     /// count; tasks round-robin).
     pub fn with_pool(states: Vec<S>, pool: Arc<ComputePool>) -> ShardPool<S> {
         assert!(!states.is_empty(), "shard pool needs at least one shard");
-        ShardPool { states: states.into_iter().map(|s| ShardCell(UnsafeCell::new(s))).collect(), pool }
+        ShardPool {
+            states: states.into_iter().map(|s| ShardCell(UnsafeCell::new(s))).collect(),
+            pool,
+        }
     }
 
     pub fn num_shards(&self) -> usize {
@@ -629,7 +632,8 @@ impl<V: VecEnv + Send + 'static> VecEnv for ShardedVecEnv<V> {
         self.exec.run_mut(move |_, shard| {
             let (s, n) = (shard.start, shard.env.num_envs());
             // SAFETY: disjoint per-shard ranges; run_mut blocks until done.
-            let (a, r, dn) = unsafe { (actions.range(s, n), rewards.range(s, n), dones.range(s, n)) };
+            let (a, r, dn) =
+                unsafe { (actions.range(s, n), rewards.range(s, n), dones.range(s, n)) };
             shard.env.step_all(a, r, dn);
         });
     }

@@ -79,8 +79,7 @@ impl Dag {
     /// Check acyclicity (Kahn's algorithm).
     pub fn is_acyclic(&self) -> bool {
         let mut indeg: Vec<usize> = self.parents.iter().map(|p| p.len()).collect();
-        let mut queue: VecDeque<usize> =
-            (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut queue: VecDeque<usize> = (0..self.len()).filter(|&i| indeg[i] == 0).collect();
         let mut seen = 0;
         while let Some(n) = queue.pop_front() {
             seen += 1;
@@ -316,9 +315,7 @@ mod tests {
             )
             .unwrap());
         // Dropping u_1 opens the chain y_0 -> u_1 -> x1_2.
-        assert!(!g
-            .d_separated_names(&["x1_2"], &["y_0"], &["x1_1", "x2_1", "a_1"])
-            .unwrap());
+        assert!(!g.d_separated_names(&["x1_2"], &["y_0"], &["x1_1", "x2_1", "a_1"]).unwrap());
     }
 
     #[test]

@@ -414,9 +414,7 @@ impl<L: LocalEnv + Send + 'static> VecEnv for IalsVecEnv<L> {
             });
         }
         // 2. One batched AIP call on the coordinator thread.
-        self.predictor
-            .predict(&self.dsets, &mut self.probs)
-            .expect("influence predictor failed");
+        self.predictor.predict(&self.dsets, &mut self.probs).expect("influence predictor failed");
         // 3+4. Sample u_t and step each LS (parallel).
         {
             let actions = SendSliceRef::new(actions);
@@ -500,10 +498,7 @@ mod tests {
         };
         let low = density(0.05);
         let high = density(0.5);
-        assert!(
-            high > low * 1.5,
-            "higher influence rate must mean more cars: {low} vs {high}"
-        );
+        assert!(high > low * 1.5, "higher influence rate must mean more cars: {low} vs {high}");
     }
 
     #[test]

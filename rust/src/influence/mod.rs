@@ -19,7 +19,7 @@ pub mod train;
 
 pub use dataset::InfluenceDataset;
 pub use fixed::FixedMarginalAip;
-pub use predictor::{AipArch, NeuralAip};
+pub use predictor::{AipArch, NeuralAip, UNTRAINED_INIT_MIX};
 pub use train::{evaluate_ce, train_fnn, train_gru};
 
 use crate::runtime::native::{FnnView, GruView};

@@ -7,7 +7,7 @@
 use super::{InfluencePredictor, ShardPredict};
 use crate::nn::ParamStore;
 use crate::runtime::native::{FnnView, GruView};
-use crate::runtime::{DataArg, Runtime};
+use crate::runtime::{DataArg, MultiStore, Runtime};
 use crate::Result;
 use anyhow::Context;
 use std::rc::Rc;
@@ -18,6 +18,12 @@ pub enum AipArch {
     Fnn,
     Gru { hidden: usize },
 }
+
+/// Seed mix for the untrained-IALS fresh init — shared by
+/// [`NeuralAip::untrained`] and the multi-learner preparation path
+/// (`coordinator::experiment::build_learner_predictor`), so the two can
+/// never drift apart and break the condition's reproducibility.
+pub const UNTRAINED_INIT_MIX: u64 = 0xBADC0FFEE;
 
 pub struct NeuralAip {
     rt: Rc<Runtime>,
@@ -52,8 +58,25 @@ impl NeuralAip {
     pub fn untrained(rt: Rc<Runtime>, model: &str, batch: usize, seed: u64) -> Result<NeuralAip> {
         let mut aip = Self::new(rt.clone(), model, batch)?;
         let spec = rt.manifest.model(model)?.clone();
-        aip.store.reinit(&spec, seed ^ 0xBADC0FFEE);
+        aip.store.reinit(&spec, seed ^ UNTRAINED_INIT_MIX);
         Ok(aip)
+    }
+
+    /// Learner-indexed predictor for multi-learner runs: takes learner
+    /// `learner`'s (already seeded) store for `model` out of a
+    /// [`MultiStore`] — the predictor owns it from here on, because its
+    /// recurrent state (`h`/`h_next` for GRU architectures) is as
+    /// per-learner as the parameters. K predictors built this way share
+    /// the engine (one op cache, one pool) but nothing learner-specific.
+    pub fn from_multi_store(
+        rt: Rc<Runtime>,
+        stores: &mut MultiStore,
+        learner: usize,
+        model: &str,
+        batch: usize,
+    ) -> Result<NeuralAip> {
+        let store = stores.take(learner, model)?;
+        Self::with_store(rt, model, batch, store)
     }
 
     pub fn with_store(

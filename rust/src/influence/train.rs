@@ -200,9 +200,6 @@ mod tests {
         let mut wrong = FixedMarginalAip::constant(4, 2, 1, 0.5);
         let ce_r = evaluate_ce(&mut right, &data).unwrap();
         let ce_w = evaluate_ce(&mut wrong, &data).unwrap();
-        assert!(
-            ce_w > ce_r + 0.2,
-            "mis-specified marginal must score worse: {ce_r} vs {ce_w}"
-        );
+        assert!(ce_w > ce_r + 0.2, "mis-specified marginal must score worse: {ce_r} vs {ce_w}");
     }
 }

@@ -5,7 +5,7 @@ use anyhow::Result;
 use ials::cli::{Args, USAGE};
 use ials::collect::{collect_dataset, FeatureKind};
 use ials::config::{DomainKind, ExperimentConfig};
-use ials::coordinator::{run_condition, run_figure, FIGURES};
+use ials::coordinator::{run_condition, run_figure, run_multi_condition, FIGURES};
 use ials::metrics::write_curve;
 use ials::runtime::Runtime;
 use ials::sim::traffic::TrafficGlobalEnv;
@@ -38,6 +38,15 @@ fn run(argv: &[String]) -> Result<()> {
         "figure" => {
             let name = args.require("name")?.to_string();
             let cfg = load_config(&args)?;
+            // Figures are the paper's single-learner reproductions; fail
+            // loudly rather than silently ignoring a multi-learner config.
+            anyhow::ensure!(
+                cfg.num_learners == 1,
+                "figure runs are single-learner (num_learners = {}); use `repro train \
+                 --learners {}` for a multi-learner run",
+                cfg.num_learners,
+                cfg.num_learners
+            );
             let rt = Rc::new(Runtime::from_config(&cfg)?);
             run_figure(&rt, &name, &cfg)?;
         }
@@ -50,14 +59,35 @@ fn run(argv: &[String]) -> Result<()> {
             if let Some(steps) = args.get("steps") {
                 cfg.ppo.total_steps = steps.parse()?;
             }
+            if let Some(learners) = args.get("learners") {
+                cfg.num_learners = learners.parse()?;
+                cfg.validate()?;
+            }
             let rt = Rc::new(Runtime::from_config(&cfg)?);
-            let r = run_condition(&rt, &cfg, seed)?;
-            let out = format!("{}/{}_seed{}.csv", cfg.results_dir, r.condition, seed);
-            write_curve(&out, &r.curve)?;
-            println!(
-                "condition {} seed {}: prep {:.2}s train {:.2}s aip_ce {:.4} final {:.4} -> {}",
-                r.condition, seed, r.prep_secs, r.train_secs, r.aip_ce, r.final_eval, out
-            );
+            if cfg.num_learners > 1 {
+                // Multi-learner run: K curves, one per learner.
+                let out = run_multi_condition(&rt, &cfg, seed)?;
+                for (l, r) in out.results.iter().enumerate() {
+                    let path = format!(
+                        "{}/{}_seed{}_learner{}.csv",
+                        cfg.results_dir, r.condition, seed, l
+                    );
+                    write_curve(&path, &r.curve)?;
+                    println!(
+                        "learner {l} (seed {seed}): prep {:.2}s train {:.2}s aip_ce {:.4} \
+                         final {:.4} -> {}",
+                        r.prep_secs, r.train_secs, r.aip_ce, r.final_eval, path
+                    );
+                }
+            } else {
+                let r = run_condition(&rt, &cfg, seed)?;
+                let out = format!("{}/{}_seed{}.csv", cfg.results_dir, r.condition, seed);
+                write_curve(&out, &r.curve)?;
+                println!(
+                    "condition {} seed {}: prep {:.2}s train {:.2}s aip_ce {:.4} final {:.4} -> {}",
+                    r.condition, seed, r.prep_secs, r.train_secs, r.aip_ce, r.final_eval, out
+                );
+            }
         }
         "collect" => {
             let domain = DomainKind::parse(args.require("domain")?)?;

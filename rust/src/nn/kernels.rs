@@ -260,7 +260,15 @@ pub fn global_norm(grads: &[&[f32]]) -> f32 {
 
 /// One Adam step for a single tensor. `bc1`/`bc2` are the bias corrections
 /// `1 - beta^t` for the *incremented* step counter.
-pub fn adam_tensor(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, bc1: f32, bc2: f32) {
+pub fn adam_tensor(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+) {
     debug_assert_eq!(p.len(), g.len());
     debug_assert_eq!(m.len(), g.len());
     debug_assert_eq!(v.len(), g.len());

@@ -195,8 +195,7 @@ impl Manifest {
                     m.models.insert(name.to_string(), spec);
                 }
                 "artifact" => {
-                    let name =
-                        parts.next().ok_or_else(|| anyhow!("line {ln}: artifact name"))?;
+                    let name = parts.next().ok_or_else(|| anyhow!("line {ln}: artifact name"))?;
                     let mut art = ArtifactSpec {
                         name: name.to_string(),
                         model: String::new(),
@@ -372,8 +371,7 @@ fn synth_artifact(
 ) -> ArtifactSpec {
     let base_n = (model.params.len() - 1) / 3;
     let bound: &[TensorSpec] = if train { &model.params } else { &model.params[..base_n] };
-    let mut inputs: Vec<Binding> =
-        bound.iter().map(|p| Binding::Param(p.name.clone())).collect();
+    let mut inputs: Vec<Binding> = bound.iter().map(|p| Binding::Param(p.name.clone())).collect();
     inputs.extend(data_in.into_iter().map(Binding::Data));
     let mut outputs: Vec<Binding> = if train {
         model.params.iter().map(|p| Binding::Param(p.name.clone())).collect()

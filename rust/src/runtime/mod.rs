@@ -20,14 +20,20 @@
 //! "pjrt"`, where `auto` (the default) uses PJRT when the artifacts
 //! directory exists and the native engine otherwise. Everything above this
 //! module works with plain `&[f32]` slices and is backend-agnostic.
+//!
+//! For multi-learner runs, [`multistore`] hosts K independent per-learner
+//! [`ParamStore`]s behind the same `Backend` API — one engine, K parameter
+//! sets (the distributed-IALS runtime; see `coordinator::multi`).
 
 pub mod manifest;
+pub mod multistore;
 pub mod native;
 mod pjrt;
 
 pub use manifest::{
     ArtifactSpec, Binding, DType, Manifest, ModelSpec, SynthGeometry, TensorSpec,
 };
+pub use multistore::{learner_seed, MultiStore};
 
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::core::shard::{effective_workers, ComputePool, WorkerPlan};
@@ -233,11 +239,9 @@ impl Runtime {
         data: &[DataArg<'_>],
     ) -> Result<Vec<Vec<f32>>> {
         let art = self.manifest.artifact(name)?;
-        let mut outs: Vec<Vec<f32>> =
-            art.data_outputs().map(|t| vec![0.0; t.numel()]).collect();
+        let mut outs: Vec<Vec<f32>> = art.data_outputs().map(|t| vec![0.0; t.numel()]).collect();
         {
-            let mut refs: Vec<&mut [f32]> =
-                outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let mut refs: Vec<&mut [f32]> = outs.iter_mut().map(|v| v.as_mut_slice()).collect();
             self.call_into(name, store, data, &mut refs)?;
         }
         Ok(outs)

@@ -1,0 +1,256 @@
+//! Multi-learner parameter hosting: K independent [`ParamStore`]s per
+//! model (one per learner, each with its own Adam slots and its own
+//! seeded init), executed through the **existing** [`Backend`] API — the
+//! backend never learns about learners, it just receives a different
+//! `&mut ParamStore` per call.
+//!
+//! This is the store half of the distributed-IALS runtime (Suau et al.,
+//! arXiv:2207.00288): several learners train concurrently against shared
+//! influence data, so the run needs K parameter sets but only **one**
+//! engine (one op cache, one scratch set, one process-shared compute
+//! pool). The [`MultiStore`] hosts the parameter sets; the engine-side
+//! objects (`rl::Policy`, `influence::NeuralAip`) either check a store
+//! out permanently ([`MultiStore::take`] — predictors own per-learner
+//! recurrent state anyway) or swap it in for one round-robin turn
+//! ([`MultiStore::swap`] — the policy path: one `Policy`, K hosted
+//! stores).
+//!
+//! ## Determinism
+//!
+//! Store creation is a pure function of `(model, learner seed)`:
+//! [`MultiStore::init_model`] runs the backend's load path
+//! ([`Runtime::load_store`]) followed by the same seeded
+//! [`ParamStore::reinit`] the single-learner experiment performs, so
+//! learner 0 at the base seed is **bitwise identical** to today's
+//! single-learner init, and [`learner_seed`] gives every other learner
+//! its own deterministic stream. Nothing here depends on worker counts —
+//! `rust/tests/multi_learner.rs` locks the end-to-end guarantee in.
+//!
+//! [`Backend`]: super::Backend
+
+use super::{DataArg, Runtime};
+use crate::nn::ParamStore;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use std::collections::BTreeMap;
+
+/// Deterministic per-learner seed stream. Learner 0 is the base seed
+/// itself — the single-learner path must stay bitwise reproducible — and
+/// higher indices mix the learner index in with a golden-ratio multiply
+/// (distinct per index, independent of every other seed derivation in
+/// the repo).
+pub fn learner_seed(base: u64, learner: usize) -> u64 {
+    if learner == 0 {
+        base
+    } else {
+        base ^ (learner as u64).wrapping_mul(0x9E3779B97F4A7C15)
+    }
+}
+
+/// K independent per-learner [`ParamStore`] sets, keyed by model name.
+pub struct MultiStore {
+    slots: Vec<BTreeMap<String, ParamStore>>,
+}
+
+impl MultiStore {
+    /// An empty store host for `num_learners` learners.
+    pub fn new(num_learners: usize) -> MultiStore {
+        assert!(num_learners >= 1, "need at least one learner");
+        MultiStore { slots: (0..num_learners).map(|_| BTreeMap::new()).collect() }
+    }
+
+    pub fn num_learners(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn slot(&self, learner: usize) -> Result<&BTreeMap<String, ParamStore>> {
+        let n = self.slots.len();
+        self.slots
+            .get(learner)
+            .ok_or_else(|| anyhow!("learner {learner} out of range ({n} learners)"))
+    }
+
+    fn slot_mut(&mut self, learner: usize) -> Result<&mut BTreeMap<String, ParamStore>> {
+        let n = self.slots.len();
+        self.slots
+            .get_mut(learner)
+            .ok_or_else(|| anyhow!("learner {learner} out of range ({n} learners)"))
+    }
+
+    /// Create (or replace) learner `learner`'s store for `model`: the
+    /// backend's load path plus the per-learner seeded reinit — exactly
+    /// the `load_store` + `reinit` sequence of the single-learner
+    /// experiment, so `init_model(rt, 0, model, seed)` is bitwise
+    /// identical to today's per-seed init at `seed`.
+    pub fn init_model(
+        &mut self,
+        rt: &Runtime,
+        learner: usize,
+        model: &str,
+        reinit_seed: u64,
+    ) -> Result<()> {
+        let mut store = rt.load_store(model)?;
+        let spec = rt.manifest.model(model)?.clone();
+        store.reinit(&spec, reinit_seed);
+        self.slot_mut(learner)?.insert(model.to_string(), store);
+        Ok(())
+    }
+
+    pub fn store(&self, learner: usize, model: &str) -> Result<&ParamStore> {
+        self.slot(learner)?
+            .get(model)
+            .ok_or_else(|| anyhow!("learner {learner} has no store for model {model}"))
+    }
+
+    pub fn store_mut(&mut self, learner: usize, model: &str) -> Result<&mut ParamStore> {
+        self.slot_mut(learner)?
+            .get_mut(model)
+            .ok_or_else(|| anyhow!("learner {learner} has no store for model {model}"))
+    }
+
+    /// Move learner `learner`'s store for `model` out of the host — for
+    /// engine-side owners that keep per-learner state of their own (e.g.
+    /// a recurrent influence predictor, whose hidden state is as
+    /// per-learner as its parameters). Pairs with [`MultiStore::insert`].
+    pub fn take(&mut self, learner: usize, model: &str) -> Result<ParamStore> {
+        self.slot_mut(learner)?
+            .remove(model)
+            .ok_or_else(|| anyhow!("learner {learner} has no store for model {model}"))
+    }
+
+    /// Hand a store (back) to learner `learner` under its model name.
+    pub fn insert(&mut self, learner: usize, store: ParamStore) -> Result<()> {
+        let key = store.model.clone();
+        self.slot_mut(learner)?.insert(key, store);
+        Ok(())
+    }
+
+    /// Swap the hosted store with `active` — the round-robin checkout:
+    /// swap learner `k`'s parameters into the (single) engine-side owner
+    /// before its turn, swap them back out afterwards. Rejects a
+    /// cross-model swap, which would silently train the wrong learner.
+    pub fn swap(&mut self, learner: usize, model: &str, active: &mut ParamStore) -> Result<()> {
+        let hosted = self.store_mut(learner, model)?;
+        ensure!(
+            hosted.model == active.model,
+            "store swap model mismatch: hosted {} vs active {}",
+            hosted.model,
+            active.model
+        );
+        std::mem::swap(hosted, active);
+        Ok(())
+    }
+
+    /// Execute an artifact against learner `learner`'s hosted store —
+    /// the existing backend API ([`Runtime::call_into`] → `Backend`),
+    /// just routed at a per-learner parameter set. Shapes and dtypes are
+    /// validated by the runtime as usual.
+    pub fn call_into(
+        &mut self,
+        rt: &Runtime,
+        learner: usize,
+        artifact: &str,
+        data: &[DataArg<'_>],
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        let model = rt.manifest.artifact(artifact)?.model.clone();
+        let store = self.store_mut(learner, &model)?;
+        rt.call_into(artifact, store, data, outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SynthGeometry;
+
+    fn rt() -> Runtime {
+        Runtime::native(&SynthGeometry { rollout_b: 4, ..SynthGeometry::default() })
+    }
+
+    #[test]
+    fn learner_seed_is_identity_for_learner_zero() {
+        assert_eq!(learner_seed(7, 0), 7);
+        assert_ne!(learner_seed(7, 1), 7);
+        assert_ne!(learner_seed(7, 1), learner_seed(7, 2));
+        assert_ne!(learner_seed(7, 1), learner_seed(8, 1));
+    }
+
+    #[test]
+    fn init_is_per_learner_seeded_and_matches_single_store_path() {
+        let rt = rt();
+        let mut multi = MultiStore::new(3);
+        for l in 0..3 {
+            multi.init_model(&rt, l, "aip_traffic", learner_seed(9, l) ^ 0xA1B2).unwrap();
+        }
+        // Learner 0 is exactly the single-learner init sequence.
+        let mut single = rt.load_store("aip_traffic").unwrap();
+        let spec = rt.manifest.model("aip_traffic").unwrap().clone();
+        single.reinit(&spec, 9 ^ 0xA1B2);
+        let w0 = multi.store(0, "aip_traffic").unwrap().get("w1").unwrap();
+        assert_eq!(w0, single.get("w1").unwrap());
+        // Higher learners re-roll deterministically and differently.
+        let w1 = multi.store(1, "aip_traffic").unwrap().get("w1").unwrap();
+        let w2 = multi.store(2, "aip_traffic").unwrap().get("w1").unwrap();
+        assert_ne!(w0, w1);
+        assert_ne!(w1, w2);
+    }
+
+    #[test]
+    fn swap_checks_model_and_roundtrips() {
+        let rt = rt();
+        let mut multi = MultiStore::new(2);
+        multi.init_model(&rt, 0, "policy_traffic", 1).unwrap();
+        multi.init_model(&rt, 1, "policy_traffic", 2).unwrap();
+        let hosted0 = multi.store(0, "policy_traffic").unwrap().get("w1").unwrap().to_vec();
+        let mut active = rt.load_store("policy_traffic").unwrap();
+        let placeholder = active.get("w1").unwrap().to_vec();
+        multi.swap(0, "policy_traffic", &mut active).unwrap();
+        assert_eq!(active.get("w1").unwrap(), hosted0.as_slice());
+        multi.swap(0, "policy_traffic", &mut active).unwrap();
+        assert_eq!(active.get("w1").unwrap(), placeholder.as_slice());
+        assert_eq!(multi.store(0, "policy_traffic").unwrap().get("w1").unwrap(), hosted0);
+        // A store for a different model cannot be swapped in.
+        let mut wrong = rt.load_store("aip_traffic").unwrap();
+        assert!(multi.swap(0, "policy_traffic", &mut wrong).is_err());
+        assert!(multi.swap(5, "policy_traffic", &mut active).is_err());
+    }
+
+    #[test]
+    fn take_and_insert_move_ownership() {
+        let rt = rt();
+        let mut multi = MultiStore::new(1);
+        multi.init_model(&rt, 0, "aip_traffic", 3).unwrap();
+        let store = multi.take(0, "aip_traffic").unwrap();
+        assert!(multi.store(0, "aip_traffic").is_err());
+        assert!(multi.take(0, "aip_traffic").is_err());
+        multi.insert(0, store).unwrap();
+        assert!(multi.store(0, "aip_traffic").is_ok());
+    }
+
+    #[test]
+    fn call_into_routes_to_the_learner_store() {
+        let rt = rt();
+        let mut multi = MultiStore::new(2);
+        multi.init_model(&rt, 0, "aip_traffic", 10).unwrap();
+        multi.init_model(&rt, 1, "aip_traffic", 11).unwrap();
+        let d = vec![0.25f32; 4 * 40];
+        let mut p0 = vec![0.0f32; 4 * 4];
+        let mut p1 = vec![0.0f32; 4 * 4];
+        multi
+            .call_into(&rt, 0, "aip_traffic_fwd_b4", &[DataArg::F32(&d)], &mut [p0.as_mut_slice()])
+            .unwrap();
+        multi
+            .call_into(&rt, 1, "aip_traffic_fwd_b4", &[DataArg::F32(&d)], &mut [p1.as_mut_slice()])
+            .unwrap();
+        // Different learner params, same input: different predictions.
+        assert_ne!(p0, p1, "independent learner stores must differ");
+        // Re-running learner 0 reproduces its bits exactly.
+        let mut p0b = vec![0.0f32; 4 * 4];
+        multi
+            .call_into(&rt, 0, "aip_traffic_fwd_b4", &[DataArg::F32(&d)], &mut [p0b.as_mut_slice()])
+            .unwrap();
+        assert_eq!(p0, p0b);
+        assert!(multi.call_into(&rt, 0, "nope", &[], &mut []).is_err());
+    }
+}

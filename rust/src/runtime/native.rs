@@ -215,7 +215,16 @@ impl<'a> PolicyView<'a> {
     ) {
         kernels::linear_into(obs, self.w1, Some(self.b1), h1, m, self.obs_dim, self.hid, Act::Tanh);
         kernels::linear_into(h1, self.w2, Some(self.b2), h2, m, self.hid, self.hid, Act::Tanh);
-        kernels::linear_into(h2, self.w_pi, Some(self.b_pi), logits, m, self.hid, self.act_dim, Act::None);
+        kernels::linear_into(
+            h2,
+            self.w_pi,
+            Some(self.b_pi),
+            logits,
+            m,
+            self.hid,
+            self.act_dim,
+            Act::None,
+        );
         kernels::linear_into(h2, self.w_v, Some(self.b_v), values, m, self.hid, 1, Act::None);
     }
     // No `&self + &mut scratch` row variant on purpose: the policy forward
@@ -258,11 +267,26 @@ impl<'a> FnnView<'a> {
     /// Row-band forward with explicit scratch (`h1` holds `m * hid`).
     fn forward_band(&self, m: usize, d: &[f32], h1: &mut [f32], probs: &mut [f32]) {
         kernels::linear_into(d, self.w1, Some(self.b1), h1, m, self.d_dim, self.hid, Act::Tanh);
-        kernels::linear_into(h1, self.w2, Some(self.b2), probs, m, self.hid, self.u_dim, Act::Sigmoid);
+        kernels::linear_into(
+            h1,
+            self.w2,
+            Some(self.b2),
+            probs,
+            m,
+            self.hid,
+            self.u_dim,
+            Act::Sigmoid,
+        );
     }
 
     /// `&self + &mut scratch` forward over `m` rows.
-    pub fn forward_rows(&self, m: usize, d: &[f32], probs: &mut [f32], scratch: &mut EngineScratch) {
+    pub fn forward_rows(
+        &self,
+        m: usize,
+        d: &[f32],
+        probs: &mut [f32],
+        scratch: &mut EngineScratch,
+    ) {
         let (h1, _) = scratch.bands(m * self.hid, 0);
         self.forward_band(m, d, h1, probs);
     }
@@ -318,8 +342,29 @@ impl<'a> GruView<'a> {
         gx: &mut [f32],
         gh: &mut [f32],
     ) {
-        kernels::gru_cell_into(d, h, self.w_x, self.w_h, self.b_g, h_new, gx, gh, m, self.d_dim, self.hid);
-        kernels::linear_into(h_new, self.w_o, Some(self.b_o), probs, m, self.hid, self.u_dim, Act::Sigmoid);
+        kernels::gru_cell_into(
+            d,
+            h,
+            self.w_x,
+            self.w_h,
+            self.b_g,
+            h_new,
+            gx,
+            gh,
+            m,
+            self.d_dim,
+            self.hid,
+        );
+        kernels::linear_into(
+            h_new,
+            self.w_o,
+            Some(self.b_o),
+            probs,
+            m,
+            self.hid,
+            self.u_dim,
+            Act::Sigmoid,
+        );
     }
 
     /// `&self + &mut scratch` step over `m` rows.
@@ -656,7 +701,12 @@ impl PolicyFwd {
             // SAFETY: slices are disjoint row bands tiling [0, b); Par::run
             // blocks until every slice has completed.
             let (h1s, h2s, ls, vs) = unsafe {
-                (h1.range(r0 * h, m * h), h2.range(r0 * h, m * h), lg.range(r0 * a, m * a), vl.range(r0, m))
+                (
+                    h1.range(r0 * h, m * h),
+                    h2.range(r0 * h, m * h),
+                    lg.range(r0 * a, m * a),
+                    vl.range(r0, m),
+                )
             };
             view.forward_band(m, &obs[r0 * od..r1 * od], h1s, h2s, ls, vs);
         };
@@ -1573,8 +1623,7 @@ impl GruUpdate {
                         for j in 0..hid {
                             let g3 = li * 3 * hid;
                             let zv = kernels::sigmoid(gxs[g3 + j] + ghs[g3 + j]);
-                            let rv =
-                                kernels::sigmoid(gxs[g3 + hid + j] + ghs[g3 + hid + j]);
+                            let rv = kernels::sigmoid(gxs[g3 + hid + j] + ghs[g3 + hid + j]);
                             let ghn_v = ghs[g3 + 2 * hid + j];
                             let nv = (gxs[g3 + 2 * hid + j] + rv * ghn_v).tanh();
                             let idx = li * hid + j;

@@ -175,9 +175,7 @@ impl Backend for PjrtBackend {
             .next()
             .and_then(|row| row.into_iter().next())
             .with_context(|| format!("{name}: empty execution result"))?;
-        let tuple = buf
-            .into_literal()
-            .with_context(|| format!("fetching result of {name}"))?;
+        let tuple = buf.into_literal().with_context(|| format!("fetching result of {name}"))?;
         let parts = tuple.to_tuple().with_context(|| format!("untupling result of {name}"))?;
         anyhow::ensure!(
             parts.len() == art.outputs.len(),

@@ -200,7 +200,12 @@ mod tests {
         let mut rng = crate::util::Pcg32::seeded(17);
         let mut total = 0.0;
         for t in 0..200 {
-            let u = [rng.bernoulli(0.3), rng.bernoulli(0.3), rng.bernoulli(0.3), rng.bernoulli(0.3)];
+            let u = [
+                rng.bernoulli(0.3),
+                rng.bernoulli(0.3),
+                rng.bernoulli(0.3),
+                rng.bernoulli(0.3),
+            ];
             let s = ls.step_with_influence((t / 8) % 2, &u);
             assert!((0.0..=1.0).contains(&s.reward));
             total += s.reward;

@@ -366,7 +366,12 @@ pub fn grid_network(grid: usize, lane_len: usize, p_straight: f32) -> Network {
                 match from_rc {
                     Some((fr, fc)) => {
                         let from = node_id(fr, fc);
-                        links.push(Link::new(lane_len, Endpoint::Node(from), Endpoint::Node(to), d));
+                        links.push(Link::new(
+                            lane_len,
+                            Endpoint::Node(from),
+                            Endpoint::Node(to),
+                            d,
+                        ));
                         nodes[to].incoming[d.index()] = Some(id);
                         // This link departs `from` through the side facing
                         // `to`, which is the opposite of the approach side.

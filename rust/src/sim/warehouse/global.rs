@@ -277,8 +277,7 @@ impl Environment for WarehouseGlobalEnv {
         } else {
             // Neighbor-robot presence at the agent's item cells.
             for (k, &cell) in self.agent_item_cells.iter().enumerate() {
-                self.last_u[k] =
-                    self.neighbor_robots.iter().any(|&i| self.robots[i].pos == cell);
+                self.last_u[k] = self.neighbor_robots.iter().any(|&i| self.robots[i].pos == cell);
             }
         }
 

@@ -72,9 +72,7 @@ mod tests {
     fn item_and_atcell_history_is_a_dset() {
         let g = warehouse_dbn(3);
         let dset = ["item_0", "atcell_0", "item_1", "atcell_1"];
-        let sep = g
-            .d_separated_names(&["u_2"], &["pos_0", "a_0"], &dset)
-            .unwrap();
+        let sep = g.d_separated_names(&["u_2"], &["pos_0", "a_0"], &dset).unwrap();
         assert!(sep, "d-set must screen off the agent's location history");
     }
 
@@ -83,9 +81,7 @@ mod tests {
     #[test]
     fn atcell_alone_is_not_a_dset() {
         let g = warehouse_dbn(3);
-        let sep = g
-            .d_separated_names(&["u_2"], &["item_0"], &["atcell_1"])
-            .unwrap();
+        let sep = g.d_separated_names(&["u_2"], &["item_0"], &["atcell_1"]).unwrap();
         assert!(!sep);
     }
 }

@@ -197,9 +197,7 @@ mod tests {
     fn categorical_prefers_high_logit() {
         let mut rng = Pcg32::seeded(5);
         let logits = [0.0f32, 3.0, 0.0];
-        let hits = (0..2000)
-            .filter(|_| rng.categorical_from_logits(&logits) == 1)
-            .count();
+        let hits = (0..2000).filter(|_| rng.categorical_from_logits(&logits) == 1).count();
         // softmax([0,3,0])[1] ~ 0.9
         assert!(hits > 1600, "hits={hits}");
     }

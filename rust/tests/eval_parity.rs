@@ -88,8 +88,7 @@ fn batch1_eval_path_matches_fused_training_env_traffic() {
     assert!(big.is_fused(), "training env must run the fused pipeline");
 
     let small_aip = NeuralAip::new(rt.clone(), "aip_traffic", 1).unwrap();
-    let mut small =
-        IalsVecEnv::new(vec![TrafficLocalEnv::new(&cfg)], Box::new(small_aip));
+    let mut small = IalsVecEnv::new(vec![TrafficLocalEnv::new(&cfg)], Box::new(small_aip));
     small.set_fused(false); // the serial coordinator-batched eval-style path
 
     let mut policy = Policy::new(rt, "policy_traffic", b).unwrap();
@@ -116,8 +115,7 @@ fn batch1_eval_path_matches_fused_training_env_warehouse_gru() {
     assert!(big.is_fused(), "training env must run the fused pipeline");
 
     let small_aip = NeuralAip::new(rt.clone(), "aip_warehouse", 1).unwrap();
-    let mut small =
-        IalsVecEnv::new(vec![WarehouseLocalEnv::new(&cfg)], Box::new(small_aip));
+    let mut small = IalsVecEnv::new(vec![WarehouseLocalEnv::new(&cfg)], Box::new(small_aip));
     small.set_fused(false);
 
     let mut policy = Policy::new(rt, "policy_warehouse_nm", b).unwrap();

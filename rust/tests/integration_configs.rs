@@ -38,7 +38,10 @@ fn corrupted_manifest_is_rejected_cleanly() {
     let dir = std::env::temp_dir().join("ials_corrupt_manifest");
     std::fs::create_dir_all(&dir).unwrap();
     std::fs::write(dir.join("manifest.txt"), "version 1\nartifact broken\n").unwrap();
-    let err = match ials::runtime::Runtime::load(&dir) { Err(e) => e, Ok(_) => panic!("should fail") };
+    let err = match ials::runtime::Runtime::load(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("should fail"),
+    };
     let msg = format!("{err:#}");
     assert!(msg.contains("missing model") || msg.contains("artifact"), "{msg}");
     std::fs::remove_dir_all(dir).ok();
@@ -46,7 +49,10 @@ fn corrupted_manifest_is_rejected_cleanly() {
 
 #[test]
 fn missing_artifacts_dir_mentions_make_artifacts() {
-    let err = match ials::runtime::Runtime::load("/nonexistent/path") { Err(e) => e, Ok(_) => panic!("should fail") };
+    let err = match ials::runtime::Runtime::load("/nonexistent/path") {
+        Err(e) => e,
+        Ok(_) => panic!("should fail"),
+    };
     assert!(format!("{err:#}").contains("make artifacts"));
 }
 

@@ -99,8 +99,7 @@ fn worker_count_is_output_invariant() {
 fn traffic_gs_sharded_equals_serial() {
     let cfg = TrafficConfig::default();
     let b = 8;
-    let mut serial =
-        GsVecEnv::new((0..b).map(|_| TrafficGlobalEnv::new(&cfg)).collect::<Vec<_>>());
+    let mut serial = GsVecEnv::new((0..b).map(|_| TrafficGlobalEnv::new(&cfg)).collect::<Vec<_>>());
     let shards: Vec<GsVecEnv<TrafficGlobalEnv>> = shard_ranges(b, 4)
         .into_iter()
         .map(|(s, e)| {

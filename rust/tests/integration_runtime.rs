@@ -16,9 +16,7 @@ fn policy_forward_shapes_and_finiteness() {
     let Some(rt) = runtime() else { return };
     let mut store = rt.load_store("policy_traffic").unwrap();
     let obs = vec![0.5f32; 16 * 42];
-    let outs = rt
-        .call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)])
-        .unwrap();
+    let outs = rt.call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)]).unwrap();
     assert_eq!(outs.len(), 2);
     assert_eq!(outs[0].len(), 16 * 2); // logits
     assert_eq!(outs[1].len(), 16); // values
@@ -33,13 +31,9 @@ fn b1_and_b16_agree_rowwise() {
     for (i, x) in obs.iter_mut().enumerate() {
         *x = ((i % 7) as f32) * 0.1 - 0.3;
     }
-    let big = rt
-        .call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)])
-        .unwrap();
+    let big = rt.call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)]).unwrap();
     let row0 = &obs[..42];
-    let small = rt
-        .call("policy_traffic_fwd_b1", &mut store, &[DataArg::F32(row0)])
-        .unwrap();
+    let small = rt.call("policy_traffic_fwd_b1", &mut store, &[DataArg::F32(row0)]).unwrap();
     for k in 0..2 {
         assert!(
             (big[0][k] - small[0][k]).abs() < 1e-5,
@@ -56,9 +50,7 @@ fn aip_forward_probabilities() {
     let Some(rt) = runtime() else { return };
     let mut store = rt.load_store("aip_traffic").unwrap();
     let d = vec![1.0f32; 16 * 40];
-    let outs = rt
-        .call("aip_traffic_fwd_b16", &mut store, &[DataArg::F32(&d)])
-        .unwrap();
+    let outs = rt.call("aip_traffic_fwd_b16", &mut store, &[DataArg::F32(&d)]).unwrap();
     assert_eq!(outs[0].len(), 16 * 4);
     assert!(outs[0].iter().all(|&p| (0.0..=1.0).contains(&p)));
 }
@@ -126,22 +118,12 @@ fn aip_training_reduces_loss_and_writes_back() {
         last = loss;
     }
     assert!(store.get("adam_t").unwrap()[0] == 30.0, "adam step counter written back");
-    assert!(
-        last < first.unwrap() * 0.7,
-        "loss should drop: {} -> {}",
-        first.unwrap(),
-        last
-    );
+    assert!(last < first.unwrap() * 0.7, "loss should drop: {} -> {}", first.unwrap(), last);
     // The trained store must now predict the rule.
     let mut d = vec![0.0f32; 16 * 40];
     d[0] = 1.0; // row 0, bit 0 set
-    let probs = rt
-        .call("aip_traffic_fwd_b16", &mut store, &[DataArg::F32(&d)])
-        .unwrap();
-    assert!(
-        probs[0][0] > probs[0][4 * 15],
-        "p(u0 | bit set) should exceed an unset row"
-    );
+    let probs = rt.call("aip_traffic_fwd_b16", &mut store, &[DataArg::F32(&d)]).unwrap();
+    assert!(probs[0][0] > probs[0][4 * 15], "p(u0 | bit set) should exceed an unset row");
 }
 
 #[test]
@@ -190,15 +172,11 @@ fn wrong_arity_and_shapes_rejected() {
     assert!(rt.call("policy_traffic_fwd_b16", &mut store, &[]).is_err());
     // wrong size
     let obs = vec![0.0f32; 3];
-    assert!(rt
-        .call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)])
-        .is_err());
+    assert!(rt.call("policy_traffic_fwd_b16", &mut store, &[DataArg::F32(&obs)]).is_err());
     // wrong model store
     let mut wrong = rt.load_store("aip_traffic").unwrap();
     let obs = vec![0.0f32; 16 * 42];
-    assert!(rt
-        .call("policy_traffic_fwd_b16", &mut wrong, &[DataArg::F32(&obs)])
-        .is_err());
+    assert!(rt.call("policy_traffic_fwd_b16", &mut wrong, &[DataArg::F32(&obs)]).is_err());
     // unknown artifact
     assert!(rt.call("nope", &mut store, &[]).is_err());
 }

@@ -6,7 +6,11 @@ use ials::core::{Environment, GlobalEnv};
 use ials::sim::traffic::TrafficGlobalEnv;
 use ials::util::Pcg32;
 
-fn mean_reward(env: &mut TrafficGlobalEnv, episodes: usize, mut policy: impl FnMut(&TrafficGlobalEnv, &mut Pcg32) -> usize) -> f64 {
+fn mean_reward(
+    env: &mut TrafficGlobalEnv,
+    episodes: usize,
+    mut policy: impl FnMut(&TrafficGlobalEnv, &mut Pcg32) -> usize,
+) -> f64 {
     let mut rng = Pcg32::seeded(4242);
     let mut total = 0.0f64;
     let mut steps = 0usize;
@@ -34,14 +38,8 @@ fn actuated_controller_beats_naive_policies() {
     let actuated = mean_reward(&mut env, 3, |e, _| e.actuated_action());
     let random = mean_reward(&mut env, 3, |_, rng| rng.below(2));
     let never = mean_reward(&mut env, 3, |_, _| 0);
-    assert!(
-        actuated > random + 0.01,
-        "actuated {actuated:.4} must beat random {random:.4}"
-    );
-    assert!(
-        actuated > never + 0.01,
-        "actuated {actuated:.4} must beat never-switch {never:.4}"
-    );
+    assert!(actuated > random + 0.01, "actuated {actuated:.4} must beat random {random:.4}");
+    assert!(actuated > never + 0.01, "actuated {actuated:.4} must beat never-switch {never:.4}");
 }
 
 /// Congestion responds to inflow: heavier boundary inflow lowers average

@@ -60,10 +60,7 @@ fn greedy_agent_outperforms_idle() {
     };
     let greedy = run(true);
     let idle = run(false);
-    assert!(
-        greedy > idle,
-        "moving toward items ({greedy}) must beat idling ({idle})"
-    );
+    assert!(greedy > idle, "moving toward items ({greedy}) must beat idling ({idle})");
 }
 
 /// Cheap hand policy: move toward the first active item's cell.

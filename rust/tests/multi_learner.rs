@@ -1,0 +1,184 @@
+//! Bitwise guarantees of the multi-learner runtime (`coordinator::multi`):
+//!
+//! 1. A `num_learners = 1` run is **bitwise identical** to the existing
+//!    single-learner experiment path (shared collection + `Policy` +
+//!    `train_with_eval`) at the same seed — the multi driver is a strict
+//!    generalization, not a fork.
+//! 2. A `num_learners = 3` run is **bitwise reproducible** across the
+//!    full `num_workers × nn_workers ∈ {1, 2, 4} × {1, 4}` grid: learner
+//!    seeding, round-robin order and the shared-pool scheduling can only
+//!    change wall-clock, never bits.
+//! 3. Learners are genuinely independent: learner 0 of a K = 3 run
+//!    matches the K = 1 run exactly, while learners 1 and 2 train
+//!    different policies from their own seed streams.
+//!
+//! Wall-clock fields (`wall_clock_s`, `prep_secs`, `train_secs`) are the
+//! one exception — they measure real time and are excluded from the
+//! comparisons, as in every other determinism test of the repo.
+
+use ials::config::{BackendKind, DomainKind, ExperimentConfig, SimulatorKind};
+use ials::coordinator::experiment::{
+    make_eval_env, make_train_env, policy_model_name, prepare_predictor,
+};
+use ials::coordinator::{run_multi_condition, train_with_eval};
+use ials::metrics::CurvePoint;
+use ials::nn::ParamStore;
+use ials::rl::Policy;
+use ials::runtime::Runtime;
+use std::rc::Rc;
+
+/// Small fig3-style traffic IALS config: 2 PPO iterations over 8 envs,
+/// one shared AIP dataset, native backend.
+fn test_cfg(num_workers: usize, nn_workers: usize, num_learners: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "multi".into();
+    cfg.domain = DomainKind::Traffic;
+    cfg.simulator = SimulatorKind::Ials;
+    cfg.num_learners = num_learners;
+    cfg.seeds = vec![7];
+    cfg.eval_every = 4096;
+    cfg.eval_episodes = 1;
+    cfg.ppo.num_envs = 8;
+    cfg.ppo.rollout_len = 16;
+    cfg.ppo.epochs = 2;
+    cfg.ppo.minibatch = 32;
+    cfg.ppo.total_steps = 256;
+    cfg.ppo.num_workers = num_workers;
+    cfg.aip.dataset_size = 1200;
+    cfg.aip.eval_size = 800;
+    cfg.aip.train_epochs = 1;
+    cfg.aip.batch = 64;
+    cfg.runtime.backend = BackendKind::Native;
+    cfg.runtime.nn_workers = nn_workers;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn snapshot(store: &ParamStore) -> Vec<Vec<f32>> {
+    store.names().iter().map(|n| store.get(n).unwrap().to_vec()).collect()
+}
+
+/// The bit-comparable content of a learning curve (wall-clock excluded).
+#[allow(clippy::type_complexity)]
+fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
+    curve
+        .iter()
+        .map(|p| {
+            (
+                p.env_steps,
+                p.eval_mean.to_bits(),
+                p.eval_std.to_bits(),
+                [
+                    p.stats.total_loss.to_bits(),
+                    p.stats.pg_loss.to_bits(),
+                    p.stats.v_loss.to_bits(),
+                    p.stats.entropy.to_bits(),
+                    p.stats.approx_kl.to_bits(),
+                    p.stats.rollout_reward.to_bits(),
+                ],
+                p.stats.episodes,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn one_learner_run_is_bitwise_identical_to_single_learner_path() {
+    let seed = 7u64;
+    let cfg = test_cfg(1, 1, 1);
+    let rt = Rc::new(Runtime::from_config(&cfg).unwrap());
+
+    // The existing single-learner experiment (run_condition's exact body,
+    // with the policy kept alive for a final parameter snapshot).
+    let prep = prepare_predictor(&rt, &cfg, seed, cfg.ppo.num_envs).unwrap();
+    let single_ce = prep.aip_ce;
+    let mut train_env = make_train_env(&cfg, prep.predictor);
+    let mut eval_env = make_eval_env(&cfg);
+    let mut policy = Policy::new(rt.clone(), policy_model_name(&cfg), cfg.ppo.num_envs).unwrap();
+    policy.reinit(seed).unwrap();
+    let single = train_with_eval(
+        &cfg,
+        train_env.as_mut(),
+        eval_env.as_mut(),
+        &mut policy,
+        seed,
+        prep.prep_secs,
+    )
+    .unwrap();
+
+    let multi = run_multi_condition(&rt, &cfg, seed).unwrap();
+    assert_eq!(multi.results.len(), 1);
+    assert_eq!(multi.policy_stores.len(), 1);
+    assert_eq!(
+        curve_bits(&multi.results[0].curve),
+        curve_bits(&single.curve),
+        "k=1 multi-learner curve diverged from the single-learner path"
+    );
+    assert_eq!(
+        multi.results[0].aip_ce.to_bits(),
+        single_ce.to_bits(),
+        "k=1 AIP cross-entropy diverged"
+    );
+    assert_eq!(
+        snapshot(&multi.policy_stores[0]),
+        snapshot(&policy.store),
+        "k=1 trained policy parameters diverged"
+    );
+}
+
+/// One K = 3 run at a worker grid point: per-learner curve bits + final
+/// per-learner policy parameters.
+#[allow(clippy::type_complexity)]
+fn run_k3(
+    num_workers: usize,
+    nn_workers: usize,
+) -> (Vec<Vec<(usize, u64, u64, [u32; 6], usize)>>, Vec<Vec<Vec<f32>>>) {
+    let cfg = test_cfg(num_workers, nn_workers, 3);
+    let rt = Rc::new(Runtime::from_config(&cfg).unwrap());
+    let out = run_multi_condition(&rt, &cfg, 21).unwrap();
+    assert_eq!(out.results.len(), 3);
+    let curves = out.results.iter().map(|r| curve_bits(&r.curve)).collect();
+    let params = out.policy_stores.iter().map(snapshot).collect();
+    (curves, params)
+}
+
+#[test]
+fn three_learner_run_is_bitwise_reproducible_across_worker_grids() {
+    let (ref_curves, ref_params) = run_k3(1, 1);
+    // The learners really are three different policies (seed streams and
+    // inits are per learner) trained to three different parameter sets.
+    assert_ne!(ref_params[0], ref_params[1], "learners 0/1 trained identical policies");
+    assert_ne!(ref_params[1], ref_params[2], "learners 1/2 trained identical policies");
+    assert_ne!(ref_curves[0], ref_curves[1], "learners 0/1 produced identical curves");
+    for (w, nn) in [(2usize, 1usize), (4, 1), (1, 4), (2, 4), (4, 4)] {
+        let (curves, params) = run_k3(w, nn);
+        assert_eq!(curves, ref_curves, "k=3 curves diverged at num_workers={w} nn_workers={nn}");
+        assert_eq!(
+            params, ref_params,
+            "k=3 trained policies diverged at num_workers={w} nn_workers={nn}"
+        );
+    }
+}
+
+#[test]
+fn learner_zero_of_a_multi_run_matches_the_single_learner_run() {
+    let seed = 13u64;
+    let cfg1 = test_cfg(1, 1, 1);
+    let cfg3 = test_cfg(1, 1, 3);
+    let rt = Rc::new(Runtime::from_config(&cfg3).unwrap());
+    let one = run_multi_condition(&rt, &cfg1, seed).unwrap();
+    let three = run_multi_condition(&rt, &cfg3, seed).unwrap();
+    // Learner 0 is seeded by the base seed itself and consumes the same
+    // shared dataset bits, so adding learners never perturbs it.
+    assert_eq!(
+        curve_bits(&three.results[0].curve),
+        curve_bits(&one.results[0].curve),
+        "learner 0 diverged when learners 1..3 joined the run"
+    );
+    assert_eq!(
+        snapshot(&three.policy_stores[0]),
+        snapshot(&one.policy_stores[0]),
+        "learner 0 parameters diverged when learners 1..3 joined the run"
+    );
+    assert_ne!(three.results[0].seed, three.results[1].seed, "learner seeds must differ");
+}

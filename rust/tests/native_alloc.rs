@@ -128,8 +128,7 @@ fn native_forward_hot_path_allocates_nothing() {
         let rt = Rc::new(Runtime::native_default());
         let label = format!("fused ials num_workers={workers}");
         let tcfg = TrafficConfig::default();
-        let envs: Vec<TrafficLocalEnv> =
-            (0..16).map(|_| TrafficLocalEnv::new(&tcfg)).collect();
+        let envs: Vec<TrafficLocalEnv> = (0..16).map(|_| TrafficLocalEnv::new(&tcfg)).collect();
         let aip = NeuralAip::new(rt.clone(), "aip_traffic", 16).unwrap();
         let mut ials = IalsVecEnv::with_workers(envs, Box::new(aip), workers);
         assert!(ials.is_fused(), "[{label}] native FNN AIP must fuse");
@@ -192,7 +191,13 @@ fn native_forward_hot_path_allocates_nothing() {
 
         // Fused whole-phase PPO update (all epochs × minibatches, one call).
         let n_rows = 4 * 32;
-        let cfg = PpoConfig { num_envs: 4, rollout_len: 32, epochs: 2, minibatch: 32, ..PpoConfig::default() };
+        let cfg = PpoConfig {
+            num_envs: 4,
+            rollout_len: 32,
+            epochs: 2,
+            minibatch: 32,
+            ..PpoConfig::default()
+        };
         let mut policy = Policy::new(rt.clone(), "policy_traffic", 4).unwrap();
         let mut perm: Vec<i32> = Vec::with_capacity(2 * n_rows);
         for _ in 0..2 {

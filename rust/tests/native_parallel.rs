@@ -107,7 +107,14 @@ fn run_traffic(nn_workers: usize, sim_workers: usize, fused: bool) -> RunOut {
     let mut logits = vec![0.0f32; 8 * policy.act_dim];
     let mut values = vec![0.0f32; 8];
     policy.forward_into(&obs, &mut logits, &mut values).unwrap();
-    RunOut { policy_params: snapshot(&policy.store), aip_params, aip_losses, logits, values, metrics }
+    RunOut {
+        policy_params: snapshot(&policy.store),
+        aip_params,
+        aip_losses,
+        logits,
+        values,
+        metrics,
+    }
 }
 
 /// Short fig5-style warehouse GRU-IALS training: collect → GRU BPTT AIP
@@ -167,7 +174,14 @@ fn run_warehouse(nn_workers: usize, sim_workers: usize, fused: bool) -> RunOut {
     let mut logits = vec![0.0f32; 8 * policy.act_dim];
     let mut values = vec![0.0f32; 8];
     policy.forward_into(&obs, &mut logits, &mut values).unwrap();
-    RunOut { policy_params: snapshot(&policy.store), aip_params, aip_losses, logits, values, metrics }
+    RunOut {
+        policy_params: snapshot(&policy.store),
+        aip_params,
+        aip_losses,
+        logits,
+        values,
+        metrics,
+    }
 }
 
 #[test]

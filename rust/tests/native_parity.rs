@@ -157,9 +157,7 @@ fn native_fused_update_equals_minibatch_loop() {
     looped.reinit(5).unwrap();
     assert_eq!(fused.store.get("w1").unwrap(), looped.store.get("w1").unwrap());
 
-    fused
-        .update_fused(&cfg, &perm, &obs, &actions, &adv, &ret, &logp)
-        .unwrap();
+    fused.update_fused(&cfg, &perm, &obs, &actions, &adv, &ret, &logp).unwrap();
 
     let mb = cfg.minibatch;
     let mut mb_obs = vec![0.0f32; mb * 42];
@@ -176,9 +174,7 @@ fn native_fused_update_equals_minibatch_loop() {
             mb_ret[row] = ret[s];
             mb_lp[row] = logp[s];
         }
-        looped
-            .update_minibatch(&cfg, &mb_obs, &mb_act, &mb_adv, &mb_ret, &mb_lp)
-            .unwrap();
+        looped.update_minibatch(&cfg, &mb_obs, &mb_act, &mb_adv, &mb_ret, &mb_lp).unwrap();
     }
 
     for name in ["w1", "b1", "w2", "b2", "w_pi", "b_pi", "w_v", "b_v", "adam_t"] {

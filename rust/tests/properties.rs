@@ -23,8 +23,7 @@ fn prop_traffic_network_conserves_cars() {
         let mut exited = 0usize;
         let steps = g.usize_in(50, 200);
         for t in 0..steps {
-            let phases: Vec<bool> =
-                (0..net.nodes.len()).map(|n| (t + n) % 6 < 3).collect();
+            let phases: Vec<bool> = (0..net.nodes.len()).map(|n| (t + n) % 6 < 3).collect();
             exited += net.tick(&phases, &mut rng);
             for &s in &sources {
                 if rng.bernoulli(0.2) && net.spawn(s, &mut rng) {

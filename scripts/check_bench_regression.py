@@ -57,6 +57,18 @@ def load_cells(path):
     return {cell_key(c): c for c in data if isinstance(c, dict)}
 
 
+def try_load_cells(path, errors):
+    """Load a cell file, recording (instead of raising) malformed input —
+    a truncated or hand-mangled JSON must fail the guard with a readable
+    message, not a traceback."""
+    try:
+        return load_cells(path)
+    except (OSError, ValueError) as e:
+        print(f"[error] {path}: {e}")
+        errors.append(path)
+        return None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True, help="directory of committed baseline JSONs")
@@ -74,6 +86,7 @@ def main():
         return 0
 
     regressions = []
+    errors = []
     compared = skipped = 0
     baseline_files = [n for n in sorted(os.listdir(args.baseline)) if n.endswith(".json")]
     for name in baseline_files:
@@ -81,8 +94,10 @@ def main():
         if not os.path.exists(fresh_path):
             print(f"[skip] {name}: no fresh run")
             continue
-        base = load_cells(os.path.join(args.baseline, name))
-        fresh = load_cells(fresh_path)
+        base = try_load_cells(os.path.join(args.baseline, name), errors)
+        fresh = try_load_cells(fresh_path, errors)
+        if base is None or fresh is None:
+            continue
         for key, bcell in base.items():
             b = throughput(bcell)
             fcell = fresh.get(key)
@@ -109,13 +124,18 @@ def main():
         for name in sorted(os.listdir(args.fresh)):
             if not name.endswith(".json") or name in baseline_files:
                 continue
-            fresh = load_cells(os.path.join(args.fresh, name))
+            fresh = try_load_cells(os.path.join(args.fresh, name), errors)
+            if fresh is None:
+                continue
             print(f"[new]  {name}: no committed baseline — {len(fresh)} cell(s) skipped")
             for key in sorted(fresh.keys()):
                 skipped += 1
                 print(f"[new]  {name} {ident(fresh[key])}: no baseline (skipped)")
 
     print(f"\ncompared {compared} cells, skipped {skipped} (no baseline / no metric)")
+    if errors:
+        print(f"{len(errors)} malformed result file(s); refusing to certify this run")
+        return 2
     if regressions:
         print(f"{len(regressions)} cell(s) regressed more than "
               f"{args.max_regression:.0%} vs committed baselines")

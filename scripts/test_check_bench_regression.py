@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Self-test for the CI bench-regression guard (check_bench_regression.py).
+
+The guard gates merges, so its own behavior is pinned here: a real
+regression fails the run, baseline-less cells are skipped *and listed*,
+malformed JSON is rejected with a readable error, and within-threshold
+noise passes. Run directly (`python3 scripts/test_check_bench_regression.py`)
+or via unittest discovery; CI runs it as a cheap step before the guard.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "check_bench_regression.py")
+
+
+def cell(op, workers, rate):
+    return {"op": op, "num_workers": workers, "rows_per_sec": rate, "backend": "native"}
+
+
+class GuardHarness(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.baseline = os.path.join(self.tmp.name, "baseline")
+        self.fresh = os.path.join(self.tmp.name, "fresh")
+        os.makedirs(self.baseline)
+        os.makedirs(self.fresh)
+
+    def tearDown(self):
+        self.tmp.cleanup()
+
+    def write(self, dirname, name, payload):
+        path = os.path.join(dirname, name)
+        with open(path, "w") as f:
+            if isinstance(payload, str):
+                f.write(payload)
+            else:
+                json.dump(payload, f)
+        return path
+
+    def run_guard(self, max_regression=0.25):
+        proc = subprocess.run(
+            [
+                sys.executable,
+                SCRIPT,
+                "--baseline",
+                self.baseline,
+                "--fresh",
+                self.fresh,
+                "--max-regression",
+                str(max_regression),
+            ],
+            capture_output=True,
+            text=True,
+        )
+        return proc.returncode, proc.stdout + proc.stderr
+
+
+class TestRegressionDetection(GuardHarness):
+    def test_regression_beyond_threshold_fails(self):
+        self.write(self.baseline, "b.json", [cell("ppo", 4, 100.0)])
+        self.write(self.fresh, "b.json", [cell("ppo", 4, 70.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 1, out)
+        self.assertIn("[FAIL]", out)
+        self.assertIn("regressed", out)
+
+    def test_within_threshold_passes(self):
+        self.write(self.baseline, "b.json", [cell("ppo", 4, 100.0)])
+        self.write(self.fresh, "b.json", [cell("ppo", 4, 80.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+        self.assertIn("[ok]", out)
+        self.assertIn("no throughput regressions", out)
+
+    def test_improvement_passes(self):
+        self.write(self.baseline, "b.json", [cell("ppo", 4, 100.0)])
+        self.write(self.fresh, "b.json", [cell("ppo", 4, 250.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+
+
+class TestBaselineLessCells(GuardHarness):
+    def test_new_cell_in_known_file_is_skipped_and_listed(self):
+        self.write(self.baseline, "b.json", [cell("ppo", 4, 100.0)])
+        self.write(self.fresh, "b.json", [cell("ppo", 4, 100.0), cell("ppo", 8, 50.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+        self.assertIn("[new]", out)
+        self.assertIn("no baseline (skipped)", out)
+
+    def test_whole_fresh_file_without_baseline_is_listed(self):
+        self.write(self.fresh, "brand_new.json", [cell("rollout", 2, 10.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+        self.assertIn("brand_new.json: no committed baseline", out)
+        self.assertIn("no baseline (skipped)", out)
+
+    def test_baseline_cell_missing_from_fresh_is_skipped(self):
+        self.write(self.baseline, "b.json", [cell("ppo", 4, 100.0), cell("ppo", 8, 90.0)])
+        self.write(self.fresh, "b.json", [cell("ppo", 4, 100.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+        self.assertIn("[skip]", out)
+
+    def test_missing_baseline_dir_guards_nothing(self):
+        self.write(self.fresh, "b.json", [cell("ppo", 4, 100.0)])
+        os.rmdir(self.baseline)
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+        self.assertIn("nothing to guard", out)
+
+
+class TestMalformedInput(GuardHarness):
+    def test_truncated_json_is_rejected_with_error(self):
+        self.write(self.baseline, "b.json", [cell("ppo", 4, 100.0)])
+        self.write(self.fresh, "b.json", '[{"op": "ppo", "rows_per_sec": ')
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 2, out)
+        self.assertIn("[error]", out)
+        self.assertNotIn("Traceback", out)
+
+    def test_non_array_payload_is_rejected(self):
+        self.write(self.baseline, "b.json", [cell("ppo", 4, 100.0)])
+        self.write(self.fresh, "b.json", {"op": "ppo"})
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 2, out)
+        self.assertIn("expected a JSON array", out)
+
+    def test_malformed_fresh_only_file_is_rejected(self):
+        self.write(self.fresh, "extra.json", "not json at all")
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 2, out)
+        self.assertIn("[error]", out)
+
+    def test_regression_still_reported_alongside_malformed_file(self):
+        self.write(self.baseline, "a.json", [cell("ppo", 4, 100.0)])
+        self.write(self.fresh, "a.json", [cell("ppo", 4, 10.0)])
+        self.write(self.fresh, "broken.json", "{")
+        rc, out = self.run_guard()
+        # Malformed input takes precedence (rc 2) but the regression is
+        # still visible in the log.
+        self.assertEqual(rc, 2, out)
+        self.assertIn("[FAIL]", out)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
