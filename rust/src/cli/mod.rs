@@ -7,8 +7,13 @@
 //! repro list
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
+
+/// Flags that take no value (`--resume` alone means `resume = true`).
+/// Everything else must be followed by a value; unknown bare flags still
+/// error out, so typos never parse as booleans.
+const BOOL_FLAGS: &[&str] = &["resume"];
 
 /// Parsed command line: a subcommand plus `--key value` flags.
 #[derive(Debug, Clone, Default)]
@@ -29,7 +34,11 @@ impl Args {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got '{a}'\n{}", USAGE))?;
-            let value = it.next().ok_or_else(|| anyhow!("flag --{key} needs a value"))?.clone();
+            let value = if BOOL_FLAGS.contains(&key) {
+                "true".to_string()
+            } else {
+                it.next().ok_or_else(|| anyhow!("flag --{key} needs a value"))?.clone()
+            };
             if args.flags.insert(key.to_string(), value).is_some() {
                 bail!("duplicate flag --{key}");
             }
@@ -45,16 +54,21 @@ impl Args {
         self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
     }
 
+    /// Whether a boolean flag (see [`BOOL_FLAGS`]) was passed.
+    pub fn get_bool(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v.parse().with_context(|| format!("invalid value '{v}' for --{key}")),
             None => Ok(default),
         }
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v.parse().with_context(|| format!("invalid value '{v}' for --{key}")),
             None => Ok(default),
         }
     }
@@ -66,6 +80,7 @@ repro — Influence-Augmented Local Simulators (ICML 2022) reproduction
 USAGE:
   repro figure --name <fig3|fig5|fig6|fig8|fig10|fig11|fig12> [--config <toml>]
   repro train  --config <toml> [--seed <n>] [--learners <k>]
+               [--checkpoint-every <steps>] [--checkpoint-dir <dir>] [--resume]
   repro collect --domain <traffic|warehouse> [--steps <n>] [--seed <n>]
   repro bench-throughput            # GS vs LS vs IALS steps/sec table
   repro list                        # list figures and artifacts
@@ -76,7 +91,12 @@ native CPU engine when artifacts/ is absent, so no `make artifacts` step
 is needed to train end-to-end.
 Multi-learner: [experiment] num_learners = K (or train --learners K) runs
 K independent learners round-robin over one shared AIP dataset and one
-compute pool — one curve CSV per learner.";
+compute pool — one curve CSV per learner.
+Checkpointing: --checkpoint-every N (or [experiment] checkpoint_every)
+writes a crash-safe checkpoint every N env steps per learner into
+<checkpoint-dir>/<condition>_seed<seed>/; `train --resume` restarts a
+killed run from the newest valid checkpoint and reproduces the
+uninterrupted run bit for bit (wall-clock columns excepted).";
 
 #[cfg(test)]
 mod tests {
@@ -107,5 +127,26 @@ mod tests {
     fn require_reports_missing() {
         let a = Args::parse(&v(&["train"])).unwrap();
         assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn bool_flag_takes_no_value() {
+        let a = Args::parse(&v(&["train", "--resume", "--seed", "3"])).unwrap();
+        assert!(a.get_bool("resume"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 3);
+        let b = Args::parse(&v(&["train", "--seed", "3"])).unwrap();
+        assert!(!b.get_bool("resume"));
+        // Trailing bool flag parses too (nothing left to consume).
+        assert!(Args::parse(&v(&["train", "--resume"])).unwrap().get_bool("resume"));
+    }
+
+    #[test]
+    fn parse_errors_name_the_flag() {
+        let a = Args::parse(&v(&["train", "--seed", "x", "--steps", "1e4"])).unwrap();
+        let err = format!("{:#}", a.get_u64("seed", 0).unwrap_err());
+        assert!(err.contains("--seed"), "error must name the flag: {err}");
+        assert!(err.contains("'x'"), "error must quote the value: {err}");
+        let err = format!("{:#}", a.get_usize("steps", 0).unwrap_err());
+        assert!(err.contains("--steps"), "error must name the flag: {err}");
     }
 }

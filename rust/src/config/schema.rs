@@ -314,6 +314,14 @@ pub struct ExperimentConfig {
     pub eval_episodes: usize,
     pub results_dir: String,
     pub artifacts_dir: String,
+    /// Write a crash-safe training checkpoint every this many per-learner
+    /// env steps (`runtime::checkpoint`); `0` (the default) disables
+    /// checkpointing. Saves land on iteration boundaries, so the effective
+    /// cadence is rounded up to `num_envs * rollout_len`.
+    pub checkpoint_every: usize,
+    /// Directory for checkpoint files; each (condition, seed) run uses its
+    /// own subdirectory so concurrent runs never collide.
+    pub checkpoint_dir: String,
     pub traffic: TrafficConfig,
     pub warehouse: WarehouseConfig,
     pub ppo: PpoConfig,
@@ -333,6 +341,8 @@ impl Default for ExperimentConfig {
             eval_episodes: 4,
             results_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
             traffic: TrafficConfig::default(),
             warehouse: WarehouseConfig::default(),
             ppo: PpoConfig::default(),
@@ -376,6 +386,9 @@ impl ExperimentConfig {
             doc.int_or("experiment", "eval_episodes", cfg.eval_episodes as i64)? as usize;
         cfg.results_dir = doc.str_or("experiment", "results_dir", &cfg.results_dir)?;
         cfg.artifacts_dir = doc.str_or("experiment", "artifacts_dir", &cfg.artifacts_dir)?;
+        cfg.checkpoint_every =
+            doc.int_or("experiment", "checkpoint_every", cfg.checkpoint_every as i64)? as usize;
+        cfg.checkpoint_dir = doc.str_or("experiment", "checkpoint_dir", &cfg.checkpoint_dir)?;
 
         let t = &mut cfg.traffic;
         t.grid = doc.int_or("traffic", "grid", t.grid as i64)? as usize;
@@ -508,6 +521,8 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("experiment", "eval_episodes"),
     ("experiment", "results_dir"),
     ("experiment", "artifacts_dir"),
+    ("experiment", "checkpoint_every"),
+    ("experiment", "checkpoint_dir"),
     ("traffic", "grid"),
     ("traffic", "lane_len"),
     ("traffic", "inflow_prob"),
@@ -654,6 +669,19 @@ mod tests {
         assert_eq!(cfg.runtime.backend, BackendKind::Pjrt);
         assert!(ExperimentConfig::from_toml("[runtime]\nbackend = \"tpu\"").is_err());
         assert!(ExperimentConfig::from_toml("[runtime]\nengine = \"native\"").is_err());
+    }
+
+    #[test]
+    fn checkpoint_knobs_parse_and_default_off() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.checkpoint_every, 0, "checkpointing off by default");
+        assert_eq!(d.checkpoint_dir, "checkpoints");
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\ncheckpoint_every = 8192\ncheckpoint_dir = \"/tmp/ck\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 8192);
+        assert_eq!(cfg.checkpoint_dir, "/tmp/ck");
     }
 
     #[test]

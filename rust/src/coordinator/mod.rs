@@ -9,5 +9,8 @@ pub mod trainer;
 
 pub use evaluator::{evaluate, EvalResult};
 pub use experiment::{run_condition, run_figure, FIGURES};
-pub use multi::{run_multi_condition, MultiLearnerOutcome, MultiLearnerRun};
+pub use multi::{
+    checkpoint_run_dir, run_multi_condition, run_multi_condition_resumable, MultiLearnerOutcome,
+    MultiLearnerRun,
+};
 pub use trainer::{train_with_eval, LearnerLoop};

@@ -47,9 +47,16 @@ use crate::log_info;
 use crate::metrics::ConditionResult;
 use crate::nn::ParamStore;
 use crate::rl::Policy;
+use crate::runtime::checkpoint::CheckpointManager;
 use crate::runtime::{learner_seed, MultiStore, Runtime};
+use crate::util::{StateReader, StateWriter};
 use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
+
+/// Checkpoint files kept per run directory (newest-first fallback window).
+pub const CHECKPOINT_RETAIN: usize = 3;
 
 /// One learner's run-long state: its envs, its stepwise training loop and
 /// its reporting numbers. The policy parameters live in the shared
@@ -178,6 +185,147 @@ impl MultiLearnerRun {
         Ok(())
     }
 
+    /// Serialize the run's full mutable training state after `rounds_done`
+    /// completed rounds: the config geometry (validated on restore), then
+    /// per learner its hosted policy store (base params *and* Adam `m.*` /
+    /// `v.*` / `adam_t` slots — ordinary store tensors), its
+    /// [`LearnerLoop`] state (trainer RNG + shuffle permutation, curve,
+    /// schedule, training clock) and its training-env snapshot (sim state,
+    /// per-env RNG streams, AIP recurrent state). AIP *parameters* are
+    /// deliberately absent: preparation is a deterministic function of
+    /// (config, seed) and is replayed bit-for-bit by
+    /// [`MultiLearnerRun::build`] on resume. Eval envs are fully re-seeded
+    /// per evaluation and carry no cross-eval state.
+    pub fn write_checkpoint(&self, rounds_done: usize) -> Result<Vec<u8>> {
+        let cfg = &self.cfg;
+        let mut w = StateWriter::new();
+        w.str(cfg.domain.name());
+        w.str(cfg.simulator.name());
+        w.str(self.policy_model);
+        w.usize(self.learners.len());
+        w.usize(cfg.ppo.num_envs);
+        w.usize(cfg.ppo.rollout_len);
+        w.usize(cfg.ppo.total_steps);
+        w.usize(cfg.eval_every);
+        w.usize(rounds_done);
+        for (l, ln) in self.learners.iter().enumerate() {
+            w.u64(ln.seed);
+            let store = self.stores.store(l, self.policy_model)?;
+            w.usize(store.names().len());
+            for name in store.names() {
+                w.str(name);
+                w.f32s(store.get(name)?);
+            }
+            let mut lw = StateWriter::new();
+            ln.lp.write_state(&mut lw);
+            w.bytes(&lw.into_bytes());
+            let mut ew = StateWriter::new();
+            ln.train_env.save_state(&mut ew)?;
+            w.bytes(&ew.into_bytes());
+        }
+        Ok(w.into_bytes())
+    }
+
+    /// Restore state written by [`MultiLearnerRun::write_checkpoint`] into
+    /// a run freshly built with the same config and seed; returns the
+    /// number of completed rounds. Do **not** call
+    /// [`MultiLearnerRun::start`] afterwards — the restored curves already
+    /// hold their t=0 points. Every geometry mismatch (different learner
+    /// count, batch shape, worker-dependent env sharding, seeds) surfaces
+    /// as a structured error, never a silently-diverging run.
+    pub fn restore(&mut self, rt: &Runtime, payload: &[u8]) -> Result<usize> {
+        let mut r = StateReader::new(payload);
+        let domain = r.str()?;
+        anyhow::ensure!(
+            domain == self.cfg.domain.name(),
+            "checkpoint domain '{domain}', run is configured for '{}'",
+            self.cfg.domain.name()
+        );
+        let simulator = r.str()?;
+        anyhow::ensure!(
+            simulator == self.cfg.simulator.name(),
+            "checkpoint simulator '{simulator}', run is configured for '{}'",
+            self.cfg.simulator.name()
+        );
+        let model = r.str()?;
+        anyhow::ensure!(
+            model == self.policy_model,
+            "checkpoint policy model '{model}', run uses '{}'",
+            self.policy_model
+        );
+        let k = r.usize()?;
+        anyhow::ensure!(
+            k == self.learners.len(),
+            "checkpoint has {k} learner(s), run is configured for {}",
+            self.learners.len()
+        );
+        for (what, want) in [
+            ("num_envs", self.cfg.ppo.num_envs),
+            ("rollout_len", self.cfg.ppo.rollout_len),
+            ("total_steps", self.cfg.ppo.total_steps),
+            ("eval_every", self.cfg.eval_every),
+        ] {
+            let got = r.usize()?;
+            anyhow::ensure!(
+                got == want,
+                "checkpoint {what} is {got}, run is configured for {want}"
+            );
+        }
+        let rounds_done = r.usize()?;
+        anyhow::ensure!(
+            rounds_done <= self.iterations(),
+            "checkpoint is at iteration {rounds_done}, run only has {}",
+            self.iterations()
+        );
+        let spec = rt.manifest.model(self.policy_model)?.clone();
+        for l in 0..k {
+            let lseed = r.u64()?;
+            anyhow::ensure!(
+                lseed == self.learners[l].seed,
+                "checkpoint learner {l} has seed {lseed}, run derives {}",
+                self.learners[l].seed
+            );
+            let nt = r.usize()?;
+            anyhow::ensure!(
+                nt == spec.params.len(),
+                "checkpoint learner {l} store has {nt} tensors, model {} has {}",
+                self.policy_model,
+                spec.params.len()
+            );
+            // A fresh store gets a fresh (id, version) cache key, so no
+            // backend-side device copy of the pre-restore parameters can
+            // survive the resume.
+            let mut store = ParamStore::zeros(&spec);
+            for _ in 0..nt {
+                let name = r.str()?.to_string();
+                let vals = r.f32s()?;
+                store.set(&name, &vals).with_context(|| format!("learner {l} store"))?;
+            }
+            self.stores.insert(l, store)?;
+            let blob = r.bytes()?;
+            let mut lr = StateReader::new(blob);
+            self.learners[l]
+                .lp
+                .read_state(&mut lr)
+                .and_then(|()| lr.expect_end())
+                .with_context(|| format!("learner {l} loop state"))?;
+            anyhow::ensure!(
+                self.learners[l].lp.iter() == rounds_done,
+                "learner {l} loop is at iteration {}, checkpoint header says {rounds_done}",
+                self.learners[l].lp.iter()
+            );
+            let blob = r.bytes()?;
+            let mut er = StateReader::new(blob);
+            self.learners[l]
+                .train_env
+                .load_state(&mut er)
+                .and_then(|()| er.expect_end())
+                .with_context(|| format!("learner {l} training-env state"))?;
+        }
+        r.expect_end()?;
+        Ok(rounds_done)
+    }
+
     /// Per-learner results + final policy stores, in learner order.
     pub fn finish(self) -> Result<MultiLearnerOutcome> {
         let MultiLearnerRun { cfg, policy_model, mut stores, learners, .. } = self;
@@ -204,16 +352,96 @@ impl MultiLearnerRun {
 /// Train `cfg.num_learners` learners end to end (the multi-learner
 /// counterpart of [`super::run_condition`]): shared collection,
 /// per-learner AIP training, then round-robin PPO with interleaved GS
-/// evaluations.
+/// evaluations. Writes checkpoints when `[experiment] checkpoint_every >
+/// 0`; see [`run_multi_condition_resumable`] for resuming one.
 pub fn run_multi_condition(
     rt: &Rc<Runtime>,
     cfg: &ExperimentConfig,
     seed: u64,
 ) -> Result<MultiLearnerOutcome> {
+    run_multi_condition_resumable(rt, cfg, seed, false, None)
+}
+
+/// Per-run checkpoint directory: one subdirectory per (condition, seed),
+/// so concurrent conditions and seeds never share checkpoint files.
+pub fn checkpoint_run_dir(cfg: &ExperimentConfig, seed: u64) -> PathBuf {
+    Path::new(&cfg.checkpoint_dir)
+        .join(format!("{}-{}_seed{}", cfg.simulator.name(), cfg.name, seed))
+}
+
+/// The crash-safe training driver. With `resume = false` this is
+/// [`run_multi_condition`] plus periodic checkpoint saves every
+/// `cfg.checkpoint_every` per-learner env steps (rounded up to iteration
+/// boundaries; `0` disables saves). With `resume = true` the run is
+/// rebuilt from `(cfg, seed)` — replaying the deterministic AIP
+/// preparation bit for bit — then fast-forwarded from the newest *valid*
+/// checkpoint in [`checkpoint_run_dir`] and trained to completion; the
+/// result is bitwise identical (modulo wall-clock columns) to the
+/// uninterrupted run at the same seed, for any `num_learners ×
+/// num_workers × nn_workers` (`rust/tests/checkpoint_resume.rs`).
+///
+/// `abort_after` is the fault-injection hook: `Some(m)` kills the run
+/// with an error right after iteration `m` completes (and after any
+/// checkpoint save scheduled for it), emulating a mid-training crash.
+pub fn run_multi_condition_resumable(
+    rt: &Rc<Runtime>,
+    cfg: &ExperimentConfig,
+    seed: u64,
+    resume: bool,
+    abort_after: Option<usize>,
+) -> Result<MultiLearnerOutcome> {
     let mut run = MultiLearnerRun::build(rt, cfg, seed)?;
-    run.start()?;
-    for _ in 0..run.iterations() {
+    let mgr = (cfg.checkpoint_every > 0 || resume)
+        .then(|| CheckpointManager::new(checkpoint_run_dir(cfg, seed), CHECKPOINT_RETAIN));
+    let start_round = if resume {
+        let mgr = mgr.as_ref().expect("resume implies a checkpoint manager");
+        let (iter, payload) = mgr.load_latest().with_context(|| {
+            format!(
+                "--resume: no valid checkpoint in {} (start without --resume, with \
+                 checkpoint_every > 0, to write checkpoints first)",
+                mgr.dir().display()
+            )
+        })?;
+        let rounds = run
+            .restore(rt, &payload)
+            .with_context(|| format!("restoring checkpoint at iteration {iter}"))?;
+        log_info!(
+            "[{}] seed {seed}: resumed at iteration {rounds}/{}",
+            cfg.name,
+            run.iterations()
+        );
+        rounds
+    } else {
+        run.start()?;
+        0
+    };
+    let per_iter = cfg.ppo.num_envs * cfg.ppo.rollout_len;
+    let every = cfg.checkpoint_every;
+    // Next per-learner env-step count that triggers a save — aligned to
+    // absolute step boundaries so a resumed run saves at the same
+    // iterations the uninterrupted run would.
+    let mut next_ckpt = if every > 0 {
+        let mut n = every;
+        while n <= start_round * per_iter {
+            n += every;
+        }
+        n
+    } else {
+        usize::MAX
+    };
+    for round in start_round..run.iterations() {
         run.advance_round()?;
+        let steps = (round + 1) * per_iter;
+        if steps >= next_ckpt {
+            while next_ckpt <= steps {
+                next_ckpt += every;
+            }
+            let payload = run.write_checkpoint(round + 1)?;
+            mgr.as_ref().expect("save cadence implies a manager").save(round + 1, &payload)?;
+        }
+        if abort_after == Some(round + 1) {
+            bail!("injected abort after iteration {} (fault-injection hook)", round + 1);
+        }
     }
     let out = run.finish()?;
     for (l, r) in out.results.iter().enumerate() {

@@ -17,7 +17,7 @@ use crate::core::VecEnv;
 use crate::log_info;
 use crate::metrics::CurvePoint;
 use crate::rl::{Policy, PpoStats, PpoTrainer};
-use crate::util::Stopwatch;
+use crate::util::{StateReader, StateWriter, Stopwatch};
 use crate::Result;
 
 pub struct TrainOutcome {
@@ -140,6 +140,85 @@ impl LearnerLoop {
                 self.next_eval += cfg.eval_every;
             }
         }
+        Ok(())
+    }
+
+    /// Iterations completed so far.
+    pub fn iter(&self) -> usize {
+        self.iter
+    }
+
+    /// Serialize the loop's full mutable state for checkpointing: trainer
+    /// RNG/permutation, the learning curve so far, the iteration/eval
+    /// schedule and the training clock. `per_iter`/`iterations` are
+    /// derived from config and validated on restore via the seed.
+    pub fn write_state(&self, out: &mut StateWriter) {
+        self.trainer.save_state(out);
+        out.usize(self.curve.len());
+        for p in &self.curve {
+            out.f64(p.wall_clock_s);
+            out.usize(p.env_steps);
+            out.f64(p.eval_mean);
+            out.f64(p.eval_std);
+            out.f32(p.stats.total_loss);
+            out.f32(p.stats.pg_loss);
+            out.f32(p.stats.v_loss);
+            out.f32(p.stats.entropy);
+            out.f32(p.stats.approx_kl);
+            out.f32(p.stats.rollout_reward);
+            out.usize(p.stats.episodes);
+        }
+        out.usize(self.iter);
+        out.usize(self.next_eval);
+        out.usize(self.steps_done);
+        out.u64(self.seed);
+        out.f64(self.clock_offset);
+        out.f64(self.sw.elapsed_secs());
+    }
+
+    /// Restore state written by [`LearnerLoop::write_state`] into a loop
+    /// freshly built with the same config and seed. Do **not** call
+    /// [`LearnerLoop::start`] afterwards — the restored curve already
+    /// holds the t=0 point and the envs are restored separately.
+    pub fn read_state(&mut self, r: &mut StateReader) -> Result<()> {
+        self.trainer.load_state(r)?;
+        let n = r.usize()?;
+        let mut curve = Vec::with_capacity(n);
+        for _ in 0..n {
+            curve.push(CurvePoint {
+                wall_clock_s: r.f64()?,
+                env_steps: r.usize()?,
+                eval_mean: r.f64()?,
+                eval_std: r.f64()?,
+                stats: PpoStats {
+                    total_loss: r.f32()?,
+                    pg_loss: r.f32()?,
+                    v_loss: r.f32()?,
+                    entropy: r.f32()?,
+                    approx_kl: r.f32()?,
+                    rollout_reward: r.f32()?,
+                    episodes: r.usize()?,
+                },
+            });
+        }
+        self.curve = curve;
+        self.iter = r.usize()?;
+        anyhow::ensure!(
+            self.iter <= self.iterations,
+            "checkpoint iteration {} exceeds the configured {} iterations",
+            self.iter,
+            self.iterations
+        );
+        self.next_eval = r.usize()?;
+        self.steps_done = r.usize()?;
+        let seed = r.u64()?;
+        anyhow::ensure!(
+            seed == self.seed,
+            "checkpoint was written with seed {seed}, loop is seeded {}",
+            self.seed
+        );
+        self.clock_offset = r.f64()?;
+        self.sw.set_elapsed(r.f64()?);
         Ok(())
     }
 

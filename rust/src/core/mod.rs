@@ -20,6 +20,8 @@ pub use shard::{
 };
 pub use vecenv::{FrameStackVec, GsVecEnv, VecEnv};
 
+use crate::util::{StateReader, StateWriter};
+
 /// Result of one environment step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Step {
@@ -49,6 +51,20 @@ pub trait Environment {
         let mut v = vec![0.0; self.obs_dim()];
         self.observe(&mut v);
         v
+    }
+
+    /// Serialize the env's full mutable state (RNG streams included) for
+    /// checkpointing. Implemented by every environment that appears in a
+    /// checkpointed training loop; the default refuses, so resume support
+    /// is an explicit per-env contract, never a silent partial snapshot.
+    fn save_state(&self, _out: &mut StateWriter) -> crate::Result<()> {
+        anyhow::bail!("environment does not support state snapshots")
+    }
+
+    /// Restore state written by [`Environment::save_state`]; the restored
+    /// env continues bit for bit where the saved one stopped.
+    fn load_state(&mut self, _r: &mut StateReader) -> crate::Result<()> {
+        anyhow::bail!("environment does not support state snapshots")
     }
 }
 
@@ -88,6 +104,17 @@ pub trait LocalEnv {
     /// Step under `(a_t, u_t)`: `influence[i]` is the sampled binary
     /// realization of influence source `i`.
     fn step_with_influence(&mut self, action: usize, influence: &[bool]) -> Step;
+
+    /// Serialize the env's full mutable state for checkpointing (same
+    /// contract as [`Environment::save_state`]).
+    fn save_state(&self, _out: &mut StateWriter) -> crate::Result<()> {
+        anyhow::bail!("local environment does not support state snapshots")
+    }
+
+    /// Restore state written by [`LocalEnv::save_state`].
+    fn load_state(&mut self, _r: &mut StateReader) -> crate::Result<()> {
+        anyhow::bail!("local environment does not support state snapshots")
+    }
 }
 
 #[cfg(test)]

@@ -44,6 +44,7 @@
 //!   the core count and the shared pool size.
 
 use super::VecEnv;
+use crate::util::{StateReader, StateWriter};
 use std::cell::UnsafeCell;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -636,6 +637,47 @@ impl<V: VecEnv + Send + 'static> VecEnv for ShardedVecEnv<V> {
                 unsafe { (actions.range(s, n), rewards.range(s, n), dones.range(s, n)) };
             shard.env.step_all(a, r, dn);
         });
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        // Each shard serializes into its own byte slot (in parallel when
+        // pooled), then the slots are concatenated length-prefixed in shard
+        // order — so the on-disk layout is independent of the worker count.
+        let mut slots: Vec<crate::Result<Vec<u8>>> =
+            (0..self.exec.num_shards()).map(|_| Ok(Vec::new())).collect();
+        let slots_ptr = SendSliceMut::new(&mut slots);
+        self.exec.run_ref(move |i, shard| {
+            // SAFETY: slot i is written only by task i; run_ref barriers.
+            let slot = unsafe { slots_ptr.range(i, 1) };
+            let mut w = StateWriter::new();
+            slot[0] = shard.env.save_state(&mut w).map(|()| w.into_bytes());
+        });
+        out.usize(slots.len());
+        for slot in slots {
+            out.bytes(&slot?);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.exec.num_shards(),
+            "sharded-env snapshot has {n} shards, executor has {}",
+            self.exec.num_shards()
+        );
+        let blobs: Vec<&[u8]> =
+            (0..n).map(|_| r.bytes()).collect::<crate::Result<Vec<_>>>()?;
+        let mut results: Vec<crate::Result<()>> = (0..n).map(|_| Ok(())).collect();
+        let blobs_ptr = SendSliceRef::new(&blobs);
+        let results_ptr = SendSliceMut::new(&mut results);
+        self.exec.run_mut(move |i, shard| {
+            // SAFETY: disjoint per-task slots; run_mut barriers.
+            let (blob, slot) = unsafe { (&blobs_ptr.range(i, 1)[0], results_ptr.range(i, 1)) };
+            let mut sr = StateReader::new(blob);
+            slot[0] = shard.env.load_state(&mut sr).and_then(|()| sr.expect_end());
+        });
+        results.into_iter().collect()
     }
 }
 

@@ -6,6 +6,7 @@
 //! (`ials::IalsVecEnv`, the fused pipeline).
 
 use super::{Environment, Step};
+use crate::util::{StateReader, StateWriter};
 
 /// A batch of `B` synchronized environments with auto-reset: when an env
 /// reports `done`, it is reset immediately and the *initial* observation of
@@ -22,6 +23,19 @@ pub trait VecEnv {
     /// Step every env. `rewards[i]`/`dones[i]` describe env `i`'s transition;
     /// auto-reset happens after recording `done`.
     fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]);
+
+    /// Serialize the full batch state (per-env state, RNG streams, episode
+    /// counters, any wrapper history) for checkpointing. The default
+    /// refuses — resume support is an explicit per-impl contract.
+    fn save_state(&self, _out: &mut StateWriter) -> crate::Result<()> {
+        anyhow::bail!("vec env does not support state snapshots")
+    }
+
+    /// Restore state written by [`VecEnv::save_state`]; the restored batch
+    /// continues bit for bit where the saved one stopped (no `reset_all`).
+    fn load_state(&mut self, _r: &mut StateReader) -> crate::Result<()> {
+        anyhow::bail!("vec env does not support state snapshots")
+    }
 }
 
 impl<V: VecEnv + ?Sized> VecEnv for Box<V> {
@@ -42,6 +56,12 @@ impl<V: VecEnv + ?Sized> VecEnv for Box<V> {
     }
     fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
         (**self).step_all(actions, rewards, dones)
+    }
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        (**self).save_state(out)
+    }
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        (**self).load_state(r)
     }
 }
 
@@ -129,6 +149,31 @@ impl<E: Environment> VecEnv for GsVecEnv<E> {
                 self.envs[i].reset(s);
             }
         }
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        out.u64(self.base_seed);
+        out.u64s(&self.episode_counter);
+        for env in &self.envs {
+            env.save_state(out)?;
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.base_seed = r.u64()?;
+        let counters = r.u64s()?;
+        anyhow::ensure!(
+            counters.len() == self.envs.len(),
+            "vec-env snapshot has {} episode counters, batch has {} envs",
+            counters.len(),
+            self.envs.len()
+        );
+        self.episode_counter = counters;
+        for env in &mut self.envs {
+            env.load_state(r)?;
+        }
+        Ok(())
     }
 }
 
@@ -233,6 +278,22 @@ impl<V: VecEnv> VecEnv for FrameStackVec<V> {
     fn step_all(&mut self, actions: &[usize], rewards: &mut [f32], dones: &mut [bool]) {
         self.inner.step_all(actions, rewards, dones);
         self.push_frames(Some(dones));
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        self.inner.save_state(out)?;
+        out.f32s(&self.ring);
+        out.usize(self.next);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.inner.load_state(r)?;
+        r.f32s_into(&mut self.ring)?;
+        let next = r.usize()?;
+        anyhow::ensure!(next < self.k, "frame-stack snapshot cursor {next} out of range");
+        self.next = next;
+        Ok(())
     }
 }
 

@@ -38,7 +38,7 @@ use crate::core::shard::{SendSliceMut, SendSliceRef, ShardExec};
 use crate::core::{shard_ranges, LocalEnv, VecEnv};
 use crate::influence::{InfluencePredictor, ShardPredict};
 use crate::runtime::native::{EngineScratch, FnnView, GruView};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 
 /// One shard of local simulators covering the global env indices
 /// `[start, start + envs.len())`, with per-env influence-sampling RNG
@@ -148,6 +148,48 @@ impl<L: LocalEnv> IalsShard<L> {
                 self.envs[i].reset(s);
             }
         }
+    }
+}
+
+impl<L: LocalEnv> IalsShard<L> {
+    /// Serialize this shard's mutable state: seeding bookkeeping, per-env
+    /// influence streams and the wrapped local simulators. `u_bools` and
+    /// the forward scratch are per-step scratch and excluded.
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        out.u64(self.base_seed);
+        out.bool(self.is_reset);
+        out.u64s(&self.episode_counter);
+        for rng in &self.rngs {
+            let (s, inc) = rng.state();
+            out.u64(s);
+            out.u64(inc);
+        }
+        for env in &self.envs {
+            env.save_state(out)?;
+        }
+        Ok(())
+    }
+
+    /// Restore state written by [`IalsShard::save_state`].
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.base_seed = r.u64()?;
+        self.is_reset = r.bool()?;
+        let counters = r.u64s()?;
+        anyhow::ensure!(
+            counters.len() == self.envs.len(),
+            "shard snapshot has {} episode counters, shard has {} envs",
+            counters.len(),
+            self.envs.len()
+        );
+        self.episode_counter = counters;
+        for rng in &mut self.rngs {
+            let (s, inc) = (r.u64()?, r.u64()?);
+            *rng = Pcg32::from_state(s, inc);
+        }
+        for env in &mut self.envs {
+            env.load_state(r)?;
+        }
+        Ok(())
     }
 }
 
@@ -443,6 +485,52 @@ impl<L: LocalEnv + Send + 'static> VecEnv for IalsVecEnv<L> {
                 self.predictor.reset_state(i);
             }
         }
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        // Predictor step state (recurrent hidden rows / replay cursor)
+        // first, then each shard's blob length-prefixed in shard order —
+        // independent of the worker count, like everything else here.
+        let mut pred = Vec::new();
+        self.predictor.save_state(&mut pred);
+        out.bytes(&pred);
+        let mut slots: Vec<crate::Result<Vec<u8>>> =
+            (0..self.exec.num_shards()).map(|_| Ok(Vec::new())).collect();
+        let slots_ptr = SendSliceMut::new(&mut slots);
+        self.exec.run_ref(move |i, shard| {
+            // SAFETY: slot i is written only by task i; run_ref barriers.
+            let slot = unsafe { slots_ptr.range(i, 1) };
+            let mut w = StateWriter::new();
+            slot[0] = shard.save_state(&mut w).map(|()| w.into_bytes());
+        });
+        out.usize(slots.len());
+        for slot in slots {
+            out.bytes(&slot?);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        let pred = r.bytes()?;
+        self.predictor.load_state(pred)?;
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.exec.num_shards(),
+            "IALS snapshot has {n} shards, executor has {}",
+            self.exec.num_shards()
+        );
+        let blobs: Vec<&[u8]> =
+            (0..n).map(|_| r.bytes()).collect::<crate::Result<Vec<_>>>()?;
+        let mut results: Vec<crate::Result<()>> = (0..n).map(|_| Ok(())).collect();
+        let blobs_ptr = SendSliceRef::new(&blobs);
+        let results_ptr = SendSliceMut::new(&mut results);
+        self.exec.run_mut(move |i, shard| {
+            // SAFETY: disjoint per-task slots; run_mut barriers.
+            let (blob, slot) = unsafe { (&blobs_ptr.range(i, 1)[0], results_ptr.range(i, 1)) };
+            let mut sr = StateReader::new(blob);
+            slot[0] = shard.load_state(&mut sr).and_then(|()| sr.expect_end());
+        });
+        results.into_iter().collect()
     }
 }
 

@@ -93,6 +93,23 @@ pub trait InfluencePredictor {
     fn shard_scratch_rows(&self) -> (usize, usize) {
         (0, 0)
     }
+
+    /// Serialize the predictor's *mutable* step state (recurrent hidden
+    /// state, replay cursors — not weights, which the checkpoint layer
+    /// rebuilds deterministically from config + seed). Stateless
+    /// predictors write nothing.
+    fn save_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore state written by [`InfluencePredictor::save_state`]. The
+    /// default (for stateless predictors) accepts only an empty blob.
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "stateless predictor given {} bytes of snapshot state",
+            bytes.len()
+        );
+        Ok(())
+    }
 }
 
 /// Test/diagnostic predictor that replays a fixed probability table row by
@@ -126,6 +143,18 @@ impl InfluencePredictor for ReplayPredictor {
             probs[b * u..(b + 1) * u].copy_from_slice(row);
         }
         self.cursor += 1;
+        Ok(())
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.cursor as u64).to_le_bytes());
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let arr: [u8; 8] = bytes.try_into().map_err(|_| {
+            anyhow::anyhow!("replay predictor snapshot must be 8 bytes, got {}", bytes.len())
+        })?;
+        self.cursor = u64::from_le_bytes(arr) as usize;
         Ok(())
     }
 }

@@ -234,4 +234,27 @@ impl InfluencePredictor for NeuralAip {
             AipArch::Gru { .. } => (3 * self.hidden, 3 * self.hidden),
         }
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) {
+        // Only the recurrent hidden state is step-mutable; weights are
+        // rebuilt by the deterministic prep replay on resume. FNN
+        // predictors are stateless and write nothing.
+        for &x in &self.h {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            bytes.len() == self.h.len() * 4,
+            "predictor snapshot has {} bytes, expected {} ({} hidden f32s)",
+            bytes.len(),
+            self.h.len() * 4,
+            self.h.len()
+        );
+        for (x, chunk) in self.h.iter_mut().zip(bytes.chunks_exact(4)) {
+            *x = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(())
+    }
 }

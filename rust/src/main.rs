@@ -5,7 +5,10 @@ use anyhow::Result;
 use ials::cli::{Args, USAGE};
 use ials::collect::{collect_dataset, FeatureKind};
 use ials::config::{DomainKind, ExperimentConfig};
-use ials::coordinator::{run_condition, run_figure, run_multi_condition, FIGURES};
+use ials::coordinator::{
+    run_condition, run_figure, run_multi_condition_resumable, FIGURES,
+};
+use ials::testkit::fault::abort_after_from_env;
 use ials::metrics::write_curve;
 use ials::runtime::Runtime;
 use ials::sim::traffic::TrafficGlobalEnv;
@@ -56,22 +59,36 @@ fn run(argv: &[String]) -> Result<()> {
                 anyhow::bail!("train requires --config");
             }
             let seed = args.get_u64("seed", cfg.seeds[0])?;
-            if let Some(steps) = args.get("steps") {
-                cfg.ppo.total_steps = steps.parse()?;
+            if args.get("steps").is_some() {
+                cfg.ppo.total_steps = args.get_usize("steps", 0)?;
             }
-            if let Some(learners) = args.get("learners") {
-                cfg.num_learners = learners.parse()?;
+            if args.get("learners").is_some() {
+                cfg.num_learners = args.get_usize("learners", 1)?;
                 cfg.validate()?;
             }
+            if args.get("checkpoint-every").is_some() {
+                cfg.checkpoint_every = args.get_usize("checkpoint-every", 0)?;
+            }
+            if let Some(dir) = args.get("checkpoint-dir") {
+                cfg.checkpoint_dir = dir.to_string();
+            }
+            let resume = args.get_bool("resume");
             let rt = Rc::new(Runtime::from_config(&cfg)?);
-            if cfg.num_learners > 1 {
-                // Multi-learner run: K curves, one per learner.
-                let out = run_multi_condition(&rt, &cfg, seed)?;
+            if cfg.num_learners > 1 || resume || cfg.checkpoint_every > 0 {
+                // Resumable driver: K curves (one per learner), periodic
+                // crash-safe checkpoints, optional injected abort (CI's
+                // kill-and-resume smoke). A num_learners = 1 run through
+                // this path is bitwise identical to `run_condition` and
+                // keeps the single-learner CSV name.
+                let abort_after = abort_after_from_env()?;
+                let out = run_multi_condition_resumable(&rt, &cfg, seed, resume, abort_after)?;
+                let single = out.results.len() == 1;
                 for (l, r) in out.results.iter().enumerate() {
-                    let path = format!(
-                        "{}/{}_seed{}_learner{}.csv",
-                        cfg.results_dir, r.condition, seed, l
-                    );
+                    let path = if single {
+                        format!("{}/{}_seed{}.csv", cfg.results_dir, r.condition, seed)
+                    } else {
+                        format!("{}/{}_seed{}_learner{}.csv", cfg.results_dir, r.condition, seed, l)
+                    };
                     write_curve(&path, &r.curve)?;
                     println!(
                         "learner {l} (seed {seed}): prep {:.2}s train {:.2}s aip_ce {:.4} \

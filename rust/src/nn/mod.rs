@@ -9,10 +9,20 @@
 pub mod kernels;
 
 use crate::runtime::manifest::ModelSpec;
+use crate::util::state::{atomic_write, crc32};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
+
+/// Magic + format version of the headered `save_bin` layout. The legacy
+/// layout (the AOT emitter's raw little-endian f32 blob) has no header and
+/// is still accepted by [`ParamStore::load_bin`] when the file length
+/// matches the spec exactly.
+const PARAMS_MAGIC: &[u8; 8] = b"IALSPRMS";
+const PARAMS_VERSION: u32 = 1;
+/// magic + version + payload_len + crc32.
+const PARAMS_HEADER_LEN: usize = 8 + 4 + 8 + 4;
 
 /// Unique id per store instance (keys the runtime's device-buffer cache).
 static STORE_IDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
@@ -116,27 +126,76 @@ impl ParamStore {
         Ok(&mut self.tensors[i])
     }
 
-    /// Load from a raw little-endian f32 blob (`<model>.params.bin`).
+    /// Load `<model>.params.bin`. Two accepted layouts:
+    ///
+    /// * **Headered** (written by [`ParamStore::save_bin`]): magic +
+    ///   version + payload length + CRC-32, then the spec-ordered raw
+    ///   little-endian f32 payload. Zero-length, truncated and bit-flipped
+    ///   files all surface as structured errors, never a panic.
+    /// * **Legacy** (the AOT emitter's headerless raw blob): accepted only
+    ///   when the file length equals the spec's total byte size exactly —
+    ///   the pre-existing artifact flow keeps working unchanged.
     pub fn load_bin(spec: &ModelSpec, path: impl AsRef<Path>) -> Result<ParamStore> {
-        let mut store = Self::zeros(spec);
-        let mut file = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let path = path.as_ref();
+        let mut file =
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
         let mut bytes = Vec::new();
         file.read_to_end(&mut bytes)?;
         let expected = spec.total_numel() * 4;
+        anyhow::ensure!(!bytes.is_empty(), "param blob {}: empty file", path.display());
+        let payload: &[u8] = if bytes.len() == expected {
+            // Legacy raw blob: the length is the only (exact) check it has.
+            &bytes
+        } else {
+            anyhow::ensure!(
+                bytes.len() >= PARAMS_HEADER_LEN,
+                "param blob {}: {} bytes — too short for a header and not a \
+                 legacy raw blob of {expected} bytes (truncated?)",
+                path.display(),
+                bytes.len()
+            );
+            anyhow::ensure!(
+                &bytes[..8] == PARAMS_MAGIC,
+                "param blob {}: bad magic (not a param store file, or a \
+                 corrupt/truncated legacy blob of the wrong size)",
+                path.display()
+            );
+            let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+            anyhow::ensure!(
+                version == PARAMS_VERSION,
+                "param blob {}: format version {version}, this build reads {PARAMS_VERSION}",
+                path.display()
+            );
+            let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+            let stored_crc = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
+            let payload = &bytes[PARAMS_HEADER_LEN..];
+            anyhow::ensure!(
+                payload.len() == payload_len,
+                "param blob {}: header says {payload_len} payload bytes, file has {} (truncated?)",
+                path.display(),
+                payload.len()
+            );
+            anyhow::ensure!(
+                crc32(payload) == stored_crc,
+                "param blob {}: CRC mismatch — file is corrupt (bit flip or torn write)",
+                path.display()
+            );
+            payload
+        };
         anyhow::ensure!(
-            bytes.len() == expected,
-            "param blob {}: {} bytes, expected {}",
-            path.as_ref().display(),
-            bytes.len(),
-            expected
+            payload.len() == expected,
+            "param blob {}: {} payload bytes, spec {} expects {expected}",
+            path.display(),
+            payload.len(),
+            spec.name
         );
+        let mut store = Self::zeros(spec);
         // Bulk chunked conversion: one pass of 4-byte chunks per tensor
         // (auto-vectorizes) instead of a per-element indexed byte loop.
         let mut off = 0usize;
         for t in &mut store.tensors {
             let n_bytes = t.len() * 4;
-            let src = &bytes[off..off + n_bytes];
+            let src = &payload[off..off + n_bytes];
             for (x, chunk) in t.iter_mut().zip(src.chunks_exact(4)) {
                 *x = f32::from_le_bytes(chunk.try_into().unwrap());
             }
@@ -145,25 +204,25 @@ impl ParamStore {
         Ok(store)
     }
 
-    /// Save the current state as the same blob format (checkpointing).
-    /// Serializes each tensor into one contiguous byte buffer and issues a
-    /// single buffered write — not one `write_all` per f32.
+    /// Save the current state in the headered layout (see
+    /// [`ParamStore::load_bin`]), written crash-safely: temp file → fsync →
+    /// atomic rename, so a kill mid-save leaves the previous file intact.
     pub fn save_bin(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(dir) = path.as_ref().parent() {
-            std::fs::create_dir_all(dir)?;
-        }
         let total_bytes: usize = self.tensors.iter().map(|t| t.len() * 4).sum();
-        let mut buf: Vec<u8> = Vec::with_capacity(total_bytes);
+        let mut buf: Vec<u8> = Vec::with_capacity(PARAMS_HEADER_LEN + total_bytes);
+        buf.extend_from_slice(PARAMS_MAGIC);
+        buf.extend_from_slice(&PARAMS_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(total_bytes as u64).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 4]); // CRC placeholder
         for t in &self.tensors {
             for x in t {
                 buf.extend_from_slice(&x.to_le_bytes());
             }
         }
-        debug_assert_eq!(buf.len(), total_bytes);
-        let mut out = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
-        out.write_all(&buf)?;
-        out.flush()?;
-        Ok(())
+        debug_assert_eq!(buf.len(), PARAMS_HEADER_LEN + total_bytes);
+        let crc = crc32(&buf[PARAMS_HEADER_LEN..]);
+        buf[20..24].copy_from_slice(&crc.to_le_bytes());
+        atomic_write(path, &buf)
     }
 
     pub fn names(&self) -> &[String] {
@@ -315,6 +374,86 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, [0u8; 12]).unwrap();
         assert!(ParamStore::load_bin(&spec(), &path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn legacy_raw_blob_still_loads() {
+        // The AOT emitter writes headerless spec-ordered f32s; a file of
+        // exactly the spec's byte size must keep loading.
+        let dir = std::env::temp_dir().join("ials_nn_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.bin");
+        let total = spec().total_numel();
+        let mut raw = Vec::with_capacity(total * 4);
+        for i in 0..total {
+            raw.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        std::fs::write(&path, &raw).unwrap();
+        let st = ParamStore::load_bin(&spec(), &path).unwrap();
+        assert_eq!(st.get("w").unwrap(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(st.get("adam_t").unwrap(), &[15.0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn zero_length_blob_rejected_with_context() {
+        let dir = std::env::temp_dir().join("ials_nn_zero");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, []).unwrap();
+        let err = ParamStore::load_bin(&spec(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("empty file"), "got: {err:#}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_blob_rejected_with_context() {
+        let dir = std::env::temp_dir().join("ials_nn_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.params.bin");
+        let st = ParamStore::zeros(&spec());
+        st.save_bin(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Cut mid-payload: header intact, payload short.
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = ParamStore::load_bin(&spec(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "got: {err:#}");
+        // Cut mid-header.
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        let err = ParamStore::load_bin(&spec(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "got: {err:#}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bit_flipped_blob_rejected_with_context() {
+        let dir = std::env::temp_dir().join("ials_nn_flip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.params.bin");
+        let mut st = ParamStore::zeros(&spec());
+        st.set("w", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        st.save_bin(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let flip_at = PARAMS_HEADER_LEN + 3;
+        bytes[flip_at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ParamStore::load_bin(&spec(), &path).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC mismatch"), "got: {err:#}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn save_bin_leaves_no_temp_file() {
+        let dir = std::env::temp_dir().join("ials_nn_atomic");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("deep").join("t.params.bin");
+        ParamStore::zeros(&spec()).save_bin(&path).unwrap();
+        let entries: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(entries, vec!["t.params.bin".to_string()]);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -7,7 +7,7 @@ use super::policy::Policy;
 use super::rollout::RolloutBuffer;
 use crate::config::PpoConfig;
 use crate::core::VecEnv;
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 use crate::Result;
 
 /// Aggregated statistics of one `train_iteration`.
@@ -218,5 +218,40 @@ impl PpoTrainer {
     /// Environment steps consumed per iteration.
     pub fn steps_per_iteration(&self) -> usize {
         self.cfg.num_envs * self.cfg.rollout_len
+    }
+
+    /// Serialize the trainer's mutable cross-iteration state for
+    /// checkpointing: the action/shuffle RNG and the persistent `order`
+    /// permutation (shuffled in place each epoch, so its current
+    /// arrangement feeds the next iteration's shuffles). Rollout and
+    /// minibatch buffers are refilled from scratch every iteration.
+    pub fn save_state(&self, out: &mut StateWriter) {
+        let (s, inc) = self.rng.state();
+        out.u64(s);
+        out.u64(inc);
+        out.u64s(&self.order.iter().map(|&k| k as u64).collect::<Vec<u64>>());
+    }
+
+    /// Restore state written by [`PpoTrainer::save_state`].
+    pub fn load_state(&mut self, r: &mut StateReader) -> Result<()> {
+        let (s, inc) = (r.u64()?, r.u64()?);
+        let order = r.u64s()?;
+        anyhow::ensure!(
+            order.len() == self.order.len(),
+            "trainer snapshot has {} order entries, expected {}",
+            order.len(),
+            self.order.len()
+        );
+        let n = self.order.len();
+        let mut seen = vec![false; n];
+        for (dst, &k) in self.order.iter_mut().zip(&order) {
+            let k = usize::try_from(k).ok().filter(|&k| k < n);
+            let k = k.ok_or_else(|| anyhow::anyhow!("corrupt state: order entry out of range"))?;
+            anyhow::ensure!(!seen[k], "corrupt state: order is not a permutation");
+            seen[k] = true;
+            *dst = k;
+        }
+        self.rng = Pcg32::from_state(s, inc);
+        Ok(())
     }
 }

@@ -1,0 +1,255 @@
+//! Crash-safe checkpoint files for resumable training runs.
+//!
+//! A checkpoint is one file per saved iteration, `ckpt_{iter:08}.bin`,
+//! holding an opaque payload (assembled by `coordinator::multi`) behind a
+//! small self-validating header:
+//!
+//! | offset | bytes | field                          |
+//! |--------|-------|--------------------------------|
+//! | 0      | 8     | magic `IALSCKPT`               |
+//! | 8      | 4     | format version (LE u32)        |
+//! | 12     | 8     | payload length (LE u64)        |
+//! | 20     | 4     | CRC-32 of the payload (LE u32) |
+//! | 24     | …     | payload                        |
+//!
+//! Writes are crash-safe: the bytes go to a temp file in the same
+//! directory, are fsynced, and are atomically renamed into place
+//! ([`crate::util::state::atomic_write`]) — a kill at any instant leaves
+//! either the previous file set or the new one, never a half-written
+//! visible checkpoint. Reads are defensive: [`CheckpointManager::load_latest`]
+//! walks the directory newest-first and returns the first checkpoint whose
+//! header and CRC validate, logging a warning for each invalid file it
+//! skips — so a torn or bit-flipped newest checkpoint falls back to the
+//! previous good one instead of aborting the resume.
+
+use crate::util::state::{atomic_write, crc32};
+use crate::{log_info, log_warn};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+const CKPT_MAGIC: &[u8; 8] = b"IALSCKPT";
+const CKPT_VERSION: u32 = 1;
+/// magic + version + payload_len + crc32.
+const CKPT_HEADER_LEN: usize = 8 + 4 + 8 + 4;
+
+/// Manages the checkpoint files of one run directory: atomic saves, a
+/// bounded retention window, and validated newest-first loads.
+pub struct CheckpointManager {
+    dir: PathBuf,
+    /// How many checkpoint files to keep (older ones are pruned after a
+    /// successful save). At least 1.
+    retain: usize,
+}
+
+impl CheckpointManager {
+    pub fn new(dir: impl Into<PathBuf>, retain: usize) -> CheckpointManager {
+        CheckpointManager { dir: dir.into(), retain: retain.max(1) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_name(iter: usize) -> String {
+        format!("ckpt_{iter:08}.bin")
+    }
+
+    /// Parse `ckpt_{iter:08}.bin` back to its iteration number.
+    fn parse_iter(name: &str) -> Option<usize> {
+        let digits = name.strip_prefix("ckpt_")?.strip_suffix(".bin")?;
+        if digits.len() != 8 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        digits.parse().ok()
+    }
+
+    /// Checkpoint files present in the directory, sorted by iteration
+    /// ascending. Foreign files are ignored.
+    fn list(&self) -> Vec<(usize, PathBuf)> {
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in entries.flatten() {
+            if let Some(name) = entry.file_name().to_str() {
+                if let Some(iter) = Self::parse_iter(name) {
+                    out.push((iter, entry.path()));
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Write `payload` as the checkpoint for `iter` (temp file + fsync +
+    /// atomic rename), then prune files beyond the retention window.
+    pub fn save(&self, iter: usize, payload: &[u8]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(CKPT_HEADER_LEN + payload.len());
+        bytes.extend_from_slice(CKPT_MAGIC);
+        bytes.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&crc32(payload).to_le_bytes());
+        bytes.extend_from_slice(payload);
+        let path = self.dir.join(Self::file_name(iter));
+        atomic_write(&path, &bytes)
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        let files = self.list();
+        if files.len() > self.retain {
+            for (_, old) in &files[..files.len() - self.retain] {
+                // Pruning is best-effort: a stale file never corrupts a
+                // resume, it only wastes disk.
+                std::fs::remove_file(old).ok();
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate one checkpoint file and return its payload.
+    fn read_validated(path: &Path) -> Result<Vec<u8>> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(!bytes.is_empty(), "empty file");
+        anyhow::ensure!(
+            bytes.len() >= CKPT_HEADER_LEN,
+            "{} bytes — shorter than the {CKPT_HEADER_LEN}-byte header (truncated)",
+            bytes.len()
+        );
+        anyhow::ensure!(&bytes[..8] == CKPT_MAGIC, "bad magic (not a checkpoint file)");
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        anyhow::ensure!(
+            version == CKPT_VERSION,
+            "format version {version}, this build reads {CKPT_VERSION}"
+        );
+        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
+        let payload = &bytes[CKPT_HEADER_LEN..];
+        anyhow::ensure!(
+            payload.len() == payload_len,
+            "header says {payload_len} payload bytes, file has {} (truncated)",
+            payload.len()
+        );
+        anyhow::ensure!(
+            crc32(payload) == stored_crc,
+            "CRC mismatch — corrupt (bit flip or torn write)"
+        );
+        Ok(payload.to_vec())
+    }
+
+    /// The newest *valid* checkpoint, as `(iter, payload)`. Invalid files
+    /// (truncated, bit-flipped, foreign format) are skipped with a warning
+    /// and the scan falls back to the next-newest; `None` when no valid
+    /// checkpoint exists.
+    pub fn load_latest(&self) -> Option<(usize, Vec<u8>)> {
+        for (iter, path) in self.list().into_iter().rev() {
+            match Self::read_validated(&path) {
+                Ok(payload) => {
+                    log_info!("resuming from checkpoint {}", path.display());
+                    return Some((iter, payload));
+                }
+                Err(e) => {
+                    log_warn!(
+                        "skipping invalid checkpoint {}: {e:#} — falling back to an older one",
+                        path.display()
+                    );
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ials_ckpt_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let mgr = CheckpointManager::new(&dir, 3);
+        assert!(mgr.load_latest().is_none(), "empty dir has no checkpoint");
+        mgr.save(5, b"hello").unwrap();
+        mgr.save(10, b"world").unwrap();
+        let (iter, payload) = mgr.load_latest().unwrap();
+        assert_eq!(iter, 10);
+        assert_eq!(payload, b"world");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn retention_prunes_oldest() {
+        let dir = tmp_dir("retain");
+        let mgr = CheckpointManager::new(&dir, 2);
+        for iter in [1, 2, 3, 4] {
+            mgr.save(iter, &[iter as u8]).unwrap();
+        }
+        let names: Vec<usize> = mgr.list().into_iter().map(|(i, _)| i).collect();
+        assert_eq!(names, vec![3, 4]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let dir = tmp_dir("corrupt");
+        let mgr = CheckpointManager::new(&dir, 3);
+        mgr.save(1, b"good").unwrap();
+        mgr.save(2, b"newest").unwrap();
+        // Flip a payload bit in the newest file.
+        let newest = dir.join(CheckpointManager::file_name(2));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (iter, payload) = mgr.load_latest().unwrap();
+        assert_eq!(iter, 1);
+        assert_eq!(payload, b"good");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_newest_falls_back_to_previous() {
+        let dir = tmp_dir("trunc");
+        let mgr = CheckpointManager::new(&dir, 3);
+        mgr.save(1, b"good").unwrap();
+        mgr.save(2, b"newest-but-torn").unwrap();
+        let newest = dir.join(CheckpointManager::file_name(2));
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() - 3]).unwrap();
+        let (iter, payload) = mgr.load_latest().unwrap();
+        assert_eq!(iter, 1);
+        assert_eq!(payload, b"good");
+        // Zero-length newest too.
+        std::fs::write(&newest, []).unwrap();
+        assert_eq!(mgr.load_latest().unwrap().0, 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn all_invalid_yields_none() {
+        let dir = tmp_dir("allbad");
+        let mgr = CheckpointManager::new(&dir, 3);
+        mgr.save(1, b"x").unwrap();
+        let path = dir.join(CheckpointManager::file_name(1));
+        std::fs::write(&path, b"garbage").unwrap();
+        assert!(mgr.load_latest().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn foreign_files_ignored() {
+        let dir = tmp_dir("foreign");
+        let mgr = CheckpointManager::new(&dir, 3);
+        mgr.save(7, b"real").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"not a checkpoint").unwrap();
+        std::fs::write(dir.join("ckpt_junk.bin"), b"nope").unwrap();
+        let (iter, payload) = mgr.load_latest().unwrap();
+        assert_eq!(iter, 7);
+        assert_eq!(payload, b"real");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

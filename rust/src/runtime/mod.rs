@@ -25,6 +25,7 @@
 //! [`ParamStore`]s behind the same `Backend` API — one engine, K parameter
 //! sets (the distributed-IALS runtime; see `coordinator::multi`).
 
+pub mod checkpoint;
 pub mod manifest;
 pub mod multistore;
 pub mod native;

@@ -6,7 +6,7 @@ use super::network::{grid_network, source_links, Network, DIRS};
 use super::NUM_INFLUENCE;
 use crate::config::TrafficConfig;
 use crate::core::{Environment, GlobalEnv, Step};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 
 /// Grid coordinates of the agent's intersection for the paper's two
 /// highlighted intersections (Fig 2): 1 = the central intersection,
@@ -150,6 +150,40 @@ impl Environment for TrafficGlobalEnv {
         self.t += 1;
         let reward = if total == 0 { 1.0 } else { moved as f32 / total as f32 };
         Step { reward, done: self.t >= self.cfg.episode_len }
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        self.net.save_state(out);
+        out.usize(self.lights.len());
+        for light in &self.lights {
+            light.save_state(out);
+        }
+        let (s, inc) = self.rng.state();
+        out.u64(s);
+        out.u64(inc);
+        out.usize(self.t);
+        out.bools(&self.last_u);
+        out.usize(self.last_action);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.net.load_state(r)?;
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.lights.len(),
+            "snapshot has {n} lights, env has {}",
+            self.lights.len()
+        );
+        for light in &mut self.lights {
+            light.load_state(r)?;
+        }
+        let (s, inc) = (r.u64()?, r.u64()?);
+        self.rng = Pcg32::from_state(s, inc);
+        self.t = r.usize()?;
+        r.bools_into(&mut self.last_u)?;
+        self.last_action = r.usize()?;
+        Ok(())
     }
 }
 

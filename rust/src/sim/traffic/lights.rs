@@ -8,6 +8,7 @@
 //! the cross street has demand.
 
 use super::network::{Network, DIRS};
+use crate::util::{StateReader, StateWriter};
 
 /// Two-phase light: which axis currently has green.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +43,26 @@ pub struct LightState {
 impl LightState {
     pub fn new(phase: LightPhase) -> LightState {
         LightState { phase, elapsed: 0 }
+    }
+
+    /// Serialize the light for checkpointing.
+    pub fn save_state(&self, out: &mut StateWriter) {
+        out.u8(match self.phase {
+            LightPhase::Vertical => 0,
+            LightPhase::Horizontal => 1,
+        });
+        out.usize(self.elapsed);
+    }
+
+    /// Restore state written by [`LightState::save_state`].
+    pub fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.phase = match r.u8()? {
+            0 => LightPhase::Vertical,
+            1 => LightPhase::Horizontal,
+            other => anyhow::bail!("corrupt state: light phase byte {other}"),
+        };
+        self.elapsed = r.usize()?;
+        Ok(())
     }
 
     /// Apply a keep(0)/switch(1) action, honoring the minimum green time.

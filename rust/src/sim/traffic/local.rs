@@ -8,7 +8,7 @@ use super::network::{single_intersection, Network, DIRS};
 use super::NUM_INFLUENCE;
 use crate::config::TrafficConfig;
 use crate::core::{LocalEnv, Step};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 
 pub struct TrafficLocalEnv {
     cfg: TrafficConfig,
@@ -95,6 +95,25 @@ impl LocalEnv for TrafficLocalEnv {
         self.t += 1;
         let reward = if total == 0 { 1.0 } else { moved as f32 / total as f32 };
         Step { reward, done: self.t >= self.cfg.episode_len }
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        self.net.save_state(out);
+        self.light.save_state(out);
+        let (s, inc) = self.rng.state();
+        out.u64(s);
+        out.u64(inc);
+        out.usize(self.t);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.net.load_state(r)?;
+        self.light.load_state(r)?;
+        let (s, inc) = (r.u64()?, r.u64()?);
+        self.rng = Pcg32::from_state(s, inc);
+        self.t = r.usize()?;
+        Ok(())
     }
 }
 

@@ -11,7 +11,7 @@
 //!    configured probability (GS boundary) or per the supplied influence
 //!    realization (LS).
 
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 
 /// Compass direction. For an incoming link this is the **approach side**:
 /// the side of the intersection the link arrives at (a link whose cars
@@ -297,6 +297,68 @@ impl Network {
             }
         }
         s
+    }
+
+    /// Serialize the dynamic state (cell occupancy + `entered` flags) for
+    /// checkpointing. Topology and parameters are rebuilt from config, and
+    /// `claims` is per-tick scratch cleared at the top of [`Network::tick`],
+    /// so neither is stored. Each cell packs into one byte: 0 = empty, else
+    /// bit 0 set, bits 1–2 = turn, bit 3 = moved.
+    pub fn save_state(&self, out: &mut StateWriter) {
+        out.usize(self.links.len());
+        for link in &self.links {
+            out.usize(link.cells.len());
+            for cell in &link.cells {
+                out.u8(match cell {
+                    None => 0,
+                    Some(car) => {
+                        let turn = match car.turn {
+                            Turn::Straight => 0u8,
+                            Turn::Left => 1,
+                            Turn::Right => 2,
+                        };
+                        1 | (turn << 1) | ((car.moved as u8) << 3)
+                    }
+                });
+            }
+        }
+        out.bools(&self.entered);
+    }
+
+    /// Restore state written by [`Network::save_state`] into a network with
+    /// identical topology.
+    pub fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.links.len(),
+            "snapshot has {n} links, network has {}",
+            self.links.len()
+        );
+        for link in &mut self.links {
+            let len = r.usize()?;
+            anyhow::ensure!(
+                len == link.len(),
+                "snapshot link len {len}, network link len {}",
+                link.len()
+            );
+            for cell in &mut link.cells {
+                let b = r.u8()?;
+                *cell = if b == 0 {
+                    None
+                } else {
+                    anyhow::ensure!(b & 1 == 1 && b < 16, "corrupt state: car byte {b}");
+                    let turn = match (b >> 1) & 3 {
+                        0 => Turn::Straight,
+                        1 => Turn::Left,
+                        2 => Turn::Right,
+                        _ => anyhow::bail!("corrupt state: turn bits in car byte {b}"),
+                    };
+                    Some(Car { turn, moved: (b >> 3) & 1 == 1 })
+                };
+            }
+        }
+        r.bools_into(&mut self.entered)?;
+        Ok(())
     }
 
     /// Write binary occupancy of `link_ids` (concatenated, entry→stopline)

@@ -15,7 +15,7 @@ use super::geometry::{plan_step_bfs, Action, Cell, Floor, ITEMS_PER_REGION, NUM_
 use super::items::ItemSet;
 use crate::config::WarehouseConfig;
 use crate::core::{Environment, GlobalEnv, Step};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 
 /// Observation layout: 25-cell position bitmap + 12 item bits.
 pub const OBS_DIM: usize = REGION * REGION + ITEMS_PER_REGION;
@@ -283,6 +283,42 @@ impl Environment for WarehouseGlobalEnv {
 
         self.t += 1;
         Step { reward, done: self.t >= self.cfg.episode_len }
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        self.items.save_state(out);
+        out.usize(self.robots.len());
+        for robot in &self.robots {
+            out.usize(robot.pos.0);
+            out.usize(robot.pos.1);
+        }
+        out.usize(self.agent_pos.0);
+        out.usize(self.agent_pos.1);
+        let (s, inc) = self.rng.state();
+        out.u64(s);
+        out.u64(inc);
+        out.usize(self.t);
+        out.bools(&self.last_u);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.items.load_state(r)?;
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.robots.len(),
+            "snapshot has {n} robots, env has {}",
+            self.robots.len()
+        );
+        for robot in &mut self.robots {
+            robot.pos = (r.usize()?, r.usize()?);
+        }
+        self.agent_pos = (r.usize()?, r.usize()?);
+        let (s, inc) = (r.u64()?, r.u64()?);
+        self.rng = Pcg32::from_state(s, inc);
+        self.t = r.usize()?;
+        r.bools_into(&mut self.last_u)?;
+        Ok(())
     }
 }
 

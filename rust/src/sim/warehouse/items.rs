@@ -2,7 +2,7 @@
 //! on shelf cells, aging, optional fixed-lifetime expiry (§5.4 variant),
 //! and collection.
 
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 
 /// State of one shelf cell.
 #[derive(Debug, Clone, Copy, Default)]
@@ -90,6 +90,33 @@ impl ItemSet {
             }
         }
         expired
+    }
+
+    /// Serialize the dynamic state (slot activity/ages + expiry flags) for
+    /// checkpointing; `spawn_prob` / `fixed_lifetime` come from config.
+    pub fn save_state(&self, out: &mut StateWriter) {
+        out.usize(self.slots.len());
+        for slot in &self.slots {
+            out.bool(slot.active);
+            out.u32(slot.age);
+        }
+        out.bools(&self.last_expired);
+    }
+
+    /// Restore state written by [`ItemSet::save_state`].
+    pub fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        let n = r.usize()?;
+        anyhow::ensure!(
+            n == self.slots.len(),
+            "snapshot has {n} item slots, set has {}",
+            self.slots.len()
+        );
+        for slot in &mut self.slots {
+            slot.active = r.bool()?;
+            slot.age = r.u32()?;
+        }
+        r.bools_into(&mut self.last_expired)?;
+        Ok(())
     }
 
     /// Index of the oldest active slot (ties by lowest index), if any.

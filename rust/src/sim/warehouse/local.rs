@@ -7,7 +7,7 @@ use super::global::{ALSH_DIM, DSET_DIM, OBS_DIM};
 use super::items::ItemSet;
 use crate::config::WarehouseConfig;
 use crate::core::{LocalEnv, Step};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
 
 pub struct WarehouseLocalEnv {
     cfg: WarehouseConfig,
@@ -178,6 +178,28 @@ impl LocalEnv for WarehouseLocalEnv {
 
         self.t += 1;
         Step { reward, done: self.t >= self.cfg.episode_len }
+    }
+
+    fn save_state(&self, out: &mut StateWriter) -> crate::Result<()> {
+        // `removed_ages` / `record_ages` are diagnostics (Fig 6 harness
+        // only) and never enabled inside checkpointed training — excluded.
+        self.items.save_state(out);
+        out.usize(self.pos.0);
+        out.usize(self.pos.1);
+        let (s, inc) = self.rng.state();
+        out.u64(s);
+        out.u64(inc);
+        out.usize(self.t);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut StateReader) -> crate::Result<()> {
+        self.items.load_state(r)?;
+        self.pos = (r.usize()?, r.usize()?);
+        let (s, inc) = (r.u64()?, r.u64()?);
+        self.rng = Pcg32::from_state(s, inc);
+        self.t = r.usize()?;
+        Ok(())
     }
 }
 

@@ -1,0 +1,88 @@
+//! Fault-injection helpers for crash-safety testing: a process-level
+//! abort hook (kill training after iteration M, driven by an environment
+//! variable so CI can inject it into the real binary) and on-disk
+//! corruption injectors (truncate / bit-flip / zero a file) used by the
+//! checkpoint and param-store robustness tests.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Environment variable the abort hook reads: `IALS_ABORT_AT_ITER=M`
+/// makes a resumable training run fail right after iteration `M` (and
+/// after any checkpoint save scheduled for it), emulating a mid-run
+/// crash without needing process signals in CI shells.
+pub const ABORT_ENV: &str = "IALS_ABORT_AT_ITER";
+
+/// The `abort_after` argument for
+/// `coordinator::run_multi_condition_resumable`, from [`ABORT_ENV`].
+/// Unset or empty means no injected fault; a malformed value errors
+/// rather than silently training to completion.
+pub fn abort_after_from_env() -> Result<Option<usize>> {
+    match std::env::var(ABORT_ENV) {
+        Err(_) => Ok(None),
+        Ok(v) if v.is_empty() => Ok(None),
+        Ok(v) => {
+            let m: usize = v
+                .parse()
+                .with_context(|| format!("invalid {ABORT_ENV}='{v}': want an iteration number"))?;
+            Ok(Some(m))
+        }
+    }
+}
+
+/// Truncate `path` to `len` bytes (a torn write / partial copy).
+pub fn truncate_file(path: impl AsRef<Path>, len: usize) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let keep = len.min(bytes.len());
+    std::fs::write(path, &bytes[..keep]).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// XOR one bit of `path` at byte `offset` (silent media corruption).
+/// Offsets past the end wrap, so callers can corrupt "somewhere in the
+/// payload" without knowing the exact file size.
+pub fn flip_bit(path: impl AsRef<Path>, offset: usize, bit: u8) -> Result<()> {
+    let path = path.as_ref();
+    let mut bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(!bytes.is_empty(), "cannot flip a bit of empty {}", path.display());
+    let i = offset % bytes.len();
+    bytes[i] ^= 1u8 << (bit % 8);
+    std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Replace `path` with a zero-length file (a crash between `creat` and
+/// the first write of a non-atomic writer).
+pub fn zero_file(path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    std::fs::write(path, []).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ials_fault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(tag)
+    }
+
+    #[test]
+    fn injectors_corrupt_as_described() {
+        let p = tmp("blob.bin");
+        std::fs::write(&p, [1u8, 2, 3, 4, 5]).unwrap();
+        truncate_file(&p, 2).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), vec![1, 2]);
+        flip_bit(&p, 1, 0).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), vec![1, 3]);
+        // Offset wraps instead of erroring.
+        flip_bit(&p, 3, 0).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), vec![1, 2]);
+        zero_file(&p).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap().len(), 0);
+        assert!(flip_bit(&p, 0, 0).is_err(), "no bits to flip in an empty file");
+    }
+}

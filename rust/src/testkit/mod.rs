@@ -16,6 +16,8 @@
 //! });
 //! ```
 
+pub mod fault;
+
 use crate::util::Pcg32;
 
 /// Per-case generator handed to property bodies.

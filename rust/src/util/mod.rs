@@ -4,9 +4,11 @@
 pub mod csv;
 pub mod logger;
 pub mod rng;
+pub mod state;
 pub mod stats;
 pub mod timer;
 
 pub use rng::Pcg32;
+pub use state::{StateReader, StateWriter};
 pub use stats::{OnlineStats, Summary};
 pub use timer::Stopwatch;

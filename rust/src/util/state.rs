@@ -1,0 +1,364 @@
+//! Binary state (de)serialization for checkpoints: a little-endian,
+//! length-checked writer/reader pair, an IEEE CRC-32, and the crash-safe
+//! atomic file writer every durable artifact of the crate routes through
+//! (temp file in the target directory → fsync → atomic rename → best-effort
+//! directory fsync).
+
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Append-only little-endian byte buffer for snapshot payloads.
+#[derive(Debug, Default)]
+pub struct StateWriter {
+    buf: Vec<u8>,
+}
+
+impl StateWriter {
+    pub fn new() -> StateWriter {
+        StateWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    pub fn f32(&mut self, x: f32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn bool(&mut self, x: bool) {
+        self.u8(x as u8);
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, xs: &[u8]) {
+        self.usize(xs.len());
+        self.buf.extend_from_slice(xs);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice.
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed bool slice (one byte per flag).
+    pub fn bools(&mut self, xs: &[bool]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.push(x as u8);
+        }
+    }
+
+    /// Length-prefixed u64 slice.
+    pub fn u64s(&mut self, xs: &[u64]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Cursor over a snapshot payload; every read is bounds-checked so a
+/// truncated or corrupt blob surfaces as a structured error, never a panic.
+#[derive(Debug)]
+pub struct StateReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> StateReader<'a> {
+    pub fn new(buf: &'a [u8]) -> StateReader<'a> {
+        StateReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated state: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let x = self.u64()?;
+        usize::try_from(x).map_err(|_| anyhow::anyhow!("state value {x} overflows usize"))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("corrupt state: bool byte {other}"),
+        }
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<&'a str> {
+        std::str::from_utf8(self.bytes()?).context("corrupt state: non-UTF-8 string")
+    }
+
+    /// Read a length-prefixed f32 slice into `out` (must match the stored
+    /// length — snapshot geometry is fixed by construction).
+    pub fn f32s_into(&mut self, out: &mut [f32]) -> Result<()> {
+        let n = self.usize()?;
+        anyhow::ensure!(n == out.len(), "state f32 slice len {n}, expected {}", out.len());
+        let src = self.take(n * 4)?;
+        for (x, chunk) in out.iter_mut().zip(src.chunks_exact(4)) {
+            *x = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        let src = self.take(n * 4)?;
+        Ok(src.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn bools_into(&mut self, out: &mut [bool]) -> Result<()> {
+        let n = self.usize()?;
+        anyhow::ensure!(n == out.len(), "state bool slice len {n}, expected {}", out.len());
+        let src = self.take(n)?;
+        for (x, &b) in out.iter_mut().zip(src) {
+            *x = match b {
+                0 => false,
+                1 => true,
+                other => bail!("corrupt state: bool byte {other}"),
+            };
+        }
+        Ok(())
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.usize()?;
+        let src = self.take(n * 8)?;
+        Ok(src.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Assert the payload is fully consumed (catches writer/reader skew).
+    pub fn expect_end(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.remaining() == 0,
+            "state has {} trailing bytes (format skew?)",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+/// IEEE CRC-32 (the zlib polynomial), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Crash-safe file write: the bytes land in a temp file in the target
+/// directory, are fsynced, then atomically renamed over `path` — a crash
+/// at any point leaves either the old file or the new one, never a torn
+/// mix. The directory fsync after the rename is best-effort (not every
+/// filesystem supports it) and only affects when the rename becomes
+/// durable, not its atomicity.
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => {
+            std::fs::create_dir_all(d)
+                .with_context(|| format!("creating directory {}", d.display()))?;
+            Some(d)
+        }
+        _ => None,
+    };
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("atomic_write: bad path {}", path.display()))?;
+    let tmp = path.with_file_name(format!(".{file_name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    if let Some(d) = dir {
+        if let Ok(df) = std::fs::File::open(d) {
+            let _ = df.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = StateWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.usize(42);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.bool(true);
+        w.bytes(b"abc");
+        w.str("hello");
+        w.f32s(&[1.0, 2.0, 3.0]);
+        w.bools(&[true, false, true]);
+        w.u64s(&[9, 8]);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.usize().unwrap(), 42);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.bytes().unwrap(), b"abc");
+        assert_eq!(r.str().unwrap(), "hello");
+        let mut xs = [0.0f32; 3];
+        r.f32s_into(&mut xs).unwrap();
+        assert_eq!(xs, [1.0, 2.0, 3.0]);
+        let mut bs = [false; 3];
+        r.bools_into(&mut bs).unwrap();
+        assert_eq!(bs, [true, false, true]);
+        assert_eq!(r.u64s().unwrap(), vec![9, 8]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_not_panic() {
+        let mut w = StateWriter::new();
+        w.u64(1);
+        let mut bytes = w.into_bytes();
+        bytes.truncate(5);
+        let mut r = StateReader::new(&bytes);
+        let err = r.u64().unwrap_err().to_string();
+        assert!(err.contains("truncated state"), "{err}");
+        // A length prefix pointing past the end is also caught.
+        let mut w = StateWriter::new();
+        w.usize(1_000_000);
+        let bytes = w.into_bytes();
+        assert!(StateReader::new(&bytes).bytes().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = StateWriter::new();
+        w.u32(1);
+        w.u32(2);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        r.u32().unwrap();
+        assert!(r.expect_end().is_err());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic check value for the IEEE polynomial.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_tmp() {
+        let dir = std::env::temp_dir().join("ials_state_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!dir.join(".blob.bin.tmp").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -60,6 +60,14 @@ impl Stopwatch {
         self.accumulated = Duration::ZERO;
         self.started = None;
     }
+
+    /// Restore a paused stopwatch to a previously observed elapsed time
+    /// (checkpoint resume: the training clock continues from the saved
+    /// wall-clock total instead of restarting at zero).
+    pub fn set_elapsed(&mut self, secs: f64) {
+        self.accumulated = Duration::from_secs_f64(secs.max(0.0));
+        self.started = None;
+    }
 }
 
 /// Time a closure, returning (result, seconds).

@@ -1,0 +1,277 @@
+//! Crash-safety acceptance tests for the checkpoint/resume runtime
+//! (`runtime::checkpoint` + `coordinator::run_multi_condition_resumable`):
+//!
+//! 1. A run killed after iteration M (via the fault-injection hook) and
+//!    resumed from its newest checkpoint is **bitwise identical** to the
+//!    uninterrupted run — curves, AIP cross-entropy and final policy
+//!    parameters — for K ∈ {1, 3} learners across the full
+//!    `num_workers × nn_workers ∈ {1, 2, 4} × {1, 4}` grid.
+//! 2. When the newest checkpoint on disk is corrupted (bit flip) or torn
+//!    (truncation), resume falls back to the previous *valid* one and
+//!    still reproduces the uninterrupted run bit for bit.
+//! 3. `--resume` with no valid checkpoint is a clean, actionable error;
+//!    resuming under a different run geometry is a structured mismatch
+//!    error, never a silently-diverging run.
+//!
+//! Wall-clock fields (`wall_clock_s`, `prep_secs`, `train_secs`) measure
+//! real time and are excluded, as in every determinism test of the repo.
+
+use ials::config::{BackendKind, DomainKind, ExperimentConfig, SimulatorKind};
+use ials::coordinator::{checkpoint_run_dir, run_multi_condition_resumable, MultiLearnerOutcome};
+use ials::metrics::CurvePoint;
+use ials::nn::ParamStore;
+use ials::runtime::Runtime;
+use ials::testkit::fault::{flip_bit, truncate_file};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Per-learner env steps in one PPO iteration of [`test_cfg`] runs.
+const PER_ITER: usize = 8 * 16;
+
+/// Small fig3-style traffic IALS config — the `multi_learner.rs` shape
+/// (8 envs × 16 rollout, native backend) at 3 PPO iterations, saving a
+/// checkpoint every iteration into `ckpt_dir`.
+fn test_cfg(
+    num_workers: usize,
+    nn_workers: usize,
+    num_learners: usize,
+    ckpt_dir: &std::path::Path,
+    checkpoint_every: usize,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "ckptres".into();
+    cfg.domain = DomainKind::Traffic;
+    cfg.simulator = SimulatorKind::Ials;
+    cfg.num_learners = num_learners;
+    cfg.seeds = vec![7];
+    cfg.eval_every = 4096;
+    cfg.eval_episodes = 1;
+    cfg.ppo.num_envs = 8;
+    cfg.ppo.rollout_len = 16;
+    cfg.ppo.epochs = 2;
+    cfg.ppo.minibatch = 32;
+    cfg.ppo.total_steps = 3 * PER_ITER;
+    cfg.ppo.num_workers = num_workers;
+    cfg.aip.dataset_size = 1200;
+    cfg.aip.eval_size = 800;
+    cfg.aip.train_epochs = 1;
+    cfg.aip.batch = 64;
+    cfg.runtime.backend = BackendKind::Native;
+    cfg.runtime.nn_workers = nn_workers;
+    cfg.checkpoint_every = checkpoint_every;
+    cfg.checkpoint_dir = ckpt_dir.to_str().unwrap().to_string();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Fresh per-test checkpoint root under the system temp dir.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ials_ckpt_resume_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn snapshot(store: &ParamStore) -> Vec<Vec<f32>> {
+    store.names().iter().map(|n| store.get(n).unwrap().to_vec()).collect()
+}
+
+/// The bit-comparable content of a learning curve (wall-clock excluded).
+#[allow(clippy::type_complexity)]
+fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
+    curve
+        .iter()
+        .map(|p| {
+            (
+                p.env_steps,
+                p.eval_mean.to_bits(),
+                p.eval_std.to_bits(),
+                [
+                    p.stats.total_loss.to_bits(),
+                    p.stats.pg_loss.to_bits(),
+                    p.stats.v_loss.to_bits(),
+                    p.stats.entropy.to_bits(),
+                    p.stats.approx_kl.to_bits(),
+                    p.stats.rollout_reward.to_bits(),
+                ],
+                p.stats.episodes,
+            )
+        })
+        .collect()
+}
+
+/// Everything bit-comparable about an outcome: per-learner curve bits,
+/// AIP cross-entropy bits and final policy parameters, in learner order.
+#[allow(clippy::type_complexity)]
+fn outcome_bits(
+    out: &MultiLearnerOutcome,
+) -> (Vec<Vec<(usize, u64, u64, [u32; 6], usize)>>, Vec<u64>, Vec<Vec<Vec<f32>>>) {
+    (
+        out.results.iter().map(|r| curve_bits(&r.curve)).collect(),
+        out.results.iter().map(|r| r.aip_ce.to_bits()).collect(),
+        out.policy_stores.iter().map(snapshot).collect(),
+    )
+}
+
+/// Train `cfg` to completion with an injected crash after iteration
+/// `abort_at`, then resume from disk; returns the resumed outcome.
+fn crash_and_resume(cfg: &ExperimentConfig, seed: u64, abort_at: usize) -> MultiLearnerOutcome {
+    let rt = Rc::new(Runtime::from_config(cfg).unwrap());
+    let err = run_multi_condition_resumable(&rt, cfg, seed, false, Some(abort_at))
+        .err()
+        .expect("injected abort must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected abort"), "unexpected failure mode: {msg}");
+    let run_dir = checkpoint_run_dir(cfg, seed);
+    assert!(
+        std::fs::read_dir(&run_dir).map(|d| d.count() > 0).unwrap_or(false),
+        "aborted run left no checkpoint in {}",
+        run_dir.display()
+    );
+    run_multi_condition_resumable(&rt, cfg, seed, true, None).unwrap()
+}
+
+/// Newest `ckpt_*.bin` in the run directory of `(cfg, seed)`.
+fn newest_checkpoint(cfg: &ExperimentConfig, seed: u64) -> PathBuf {
+    let run_dir = checkpoint_run_dir(cfg, seed);
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&run_dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("ckpt_") && n.ends_with(".bin"))
+        })
+        .collect();
+    files.sort();
+    files.pop().unwrap_or_else(|| panic!("no checkpoint files in {}", run_dir.display()))
+}
+
+/// The acceptance grid: kill-at-iteration-M + resume is bitwise identical
+/// to the uninterrupted run for K ∈ {1, 3} across `num_workers ×
+/// nn_workers ∈ {1, 2, 4} × {1, 4}`. The kill point alternates between
+/// iteration 1 and 2 (of 3) across the grid so both resume depths are
+/// covered.
+#[test]
+fn kill_and_resume_is_bitwise_identical_across_learners_and_workers() {
+    let seed = 7u64;
+    for k in [1usize, 3] {
+        // Uninterrupted reference (no checkpointing): worker counts never
+        // change bits, so one reference serves the whole grid.
+        let ref_dir = tmp_dir(&format!("ref_k{k}"));
+        let ref_cfg = test_cfg(1, 1, k, &ref_dir, 0);
+        let rt = Rc::new(Runtime::from_config(&ref_cfg).unwrap());
+        let reference =
+            outcome_bits(&run_multi_condition_resumable(&rt, &ref_cfg, seed, false, None).unwrap());
+        for (i, (w, nn)) in
+            [(1usize, 1usize), (2, 1), (4, 1), (1, 4), (2, 4), (4, 4)].iter().enumerate()
+        {
+            let abort_at = 1 + (i % 2);
+            let dir = tmp_dir(&format!("grid_k{k}_w{w}_nn{nn}"));
+            let cfg = test_cfg(*w, *nn, k, &dir, PER_ITER);
+            let resumed = outcome_bits(&crash_and_resume(&cfg, seed, abort_at));
+            assert_eq!(
+                resumed, reference,
+                "resumed run diverged from uninterrupted at k={k} num_workers={w} \
+                 nn_workers={nn} abort_at={abort_at}"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        std::fs::remove_dir_all(&ref_dir).ok();
+    }
+}
+
+/// A bit-flipped newest checkpoint is skipped: resume falls back to the
+/// previous valid file and still reproduces the uninterrupted run.
+#[test]
+fn corrupt_newest_checkpoint_falls_back_and_still_matches() {
+    let seed = 7u64;
+    let ref_dir = tmp_dir("flip_ref");
+    let ref_cfg = test_cfg(1, 1, 1, &ref_dir, 0);
+    let rt = Rc::new(Runtime::from_config(&ref_cfg).unwrap());
+    let reference =
+        outcome_bits(&run_multi_condition_resumable(&rt, &ref_cfg, seed, false, None).unwrap());
+
+    let dir = tmp_dir("flip");
+    let cfg = test_cfg(1, 1, 1, &dir, PER_ITER);
+    let err = run_multi_condition_resumable(&rt, &cfg, seed, false, Some(2))
+        .err()
+        .expect("run must fail");
+    assert!(format!("{err:#}").contains("injected abort"));
+    // Checkpoints exist for iterations 1 and 2; silently corrupt a payload
+    // bit of the newest (iteration 2) file.
+    flip_bit(newest_checkpoint(&cfg, seed), 40, 3).unwrap();
+    let resumed =
+        outcome_bits(&run_multi_condition_resumable(&rt, &cfg, seed, true, None).unwrap());
+    assert_eq!(resumed, reference, "fallback resume after a bit flip diverged");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+/// A torn (truncated) newest checkpoint is skipped the same way.
+#[test]
+fn truncated_newest_checkpoint_falls_back_and_still_matches() {
+    let seed = 7u64;
+    let ref_dir = tmp_dir("trunc_ref");
+    let ref_cfg = test_cfg(1, 1, 1, &ref_dir, 0);
+    let rt = Rc::new(Runtime::from_config(&ref_cfg).unwrap());
+    let reference =
+        outcome_bits(&run_multi_condition_resumable(&rt, &ref_cfg, seed, false, None).unwrap());
+
+    let dir = tmp_dir("trunc");
+    let cfg = test_cfg(1, 1, 1, &dir, PER_ITER);
+    let err = run_multi_condition_resumable(&rt, &cfg, seed, false, Some(2))
+        .err()
+        .expect("run must fail");
+    assert!(format!("{err:#}").contains("injected abort"));
+    // Tear the newest file mid-header: shorter than the 24-byte header.
+    truncate_file(newest_checkpoint(&cfg, seed), 16).unwrap();
+    let resumed =
+        outcome_bits(&run_multi_condition_resumable(&rt, &cfg, seed, true, None).unwrap());
+    assert_eq!(resumed, reference, "fallback resume after truncation diverged");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+/// `--resume` with no checkpoint on disk is a clean, actionable error.
+#[test]
+fn resume_without_checkpoints_is_a_clean_error() {
+    let seed = 7u64;
+    let dir = tmp_dir("nockpt");
+    let cfg = test_cfg(1, 1, 1, &dir, PER_ITER);
+    let rt = Rc::new(Runtime::from_config(&cfg).unwrap());
+    let err = run_multi_condition_resumable(&rt, &cfg, seed, true, None)
+        .err()
+        .expect("run must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no valid checkpoint"), "unhelpful resume error: {msg}");
+    assert!(msg.contains("checkpoint_every"), "error should say how to fix it: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resuming under a different run geometry (here: a different learner
+/// count) is a structured mismatch error, not a diverging run.
+#[test]
+fn resume_with_mismatched_geometry_is_a_structured_error() {
+    let seed = 7u64;
+    let dir = tmp_dir("mismatch");
+    let cfg = test_cfg(1, 1, 1, &dir, PER_ITER);
+    let rt = Rc::new(Runtime::from_config(&cfg).unwrap());
+    let err = run_multi_condition_resumable(&rt, &cfg, seed, false, Some(1))
+        .err()
+        .expect("run must fail");
+    assert!(format!("{err:#}").contains("injected abort"));
+    // Same condition name + seed (thus the same run directory), but a
+    // 3-learner geometry.
+    let cfg3 = test_cfg(1, 1, 3, &dir, PER_ITER);
+    let rt3 = Rc::new(Runtime::from_config(&cfg3).unwrap());
+    let err = run_multi_condition_resumable(&rt3, &cfg3, seed, true, None)
+        .err()
+        .expect("run must fail");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("1 learner(s)") && msg.contains("3"),
+        "geometry mismatch must be a structured error: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
