@@ -72,6 +72,18 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    /// [`Args::require`] + parse, for flags with no sensible default.
+    pub fn require_usize(&self, key: &str) -> Result<usize> {
+        let v = self.require(key)?;
+        v.parse().with_context(|| format!("invalid value '{v}' for --{key}"))
+    }
+
+    /// [`Args::require`] + parse, for flags with no sensible default.
+    pub fn require_u64(&self, key: &str) -> Result<u64> {
+        let v = self.require(key)?;
+        v.parse().with_context(|| format!("invalid value '{v}' for --{key}"))
+    }
 }
 
 pub const USAGE: &str = "\
@@ -81,6 +93,7 @@ USAGE:
   repro figure --name <fig3|fig5|fig6|fig8|fig10|fig11|fig12> [--config <toml>]
   repro train  --config <toml> [--seed <n>] [--learners <k>]
                [--checkpoint-every <steps>] [--checkpoint-dir <dir>] [--resume]
+               [--distributed <n>]
   repro collect --domain <traffic|warehouse> [--steps <n>] [--seed <n>]
   repro bench-throughput            # GS vs LS vs IALS steps/sec table
   repro list                        # list figures and artifacts
@@ -96,7 +109,14 @@ Checkpointing: --checkpoint-every N (or [experiment] checkpoint_every)
 writes a crash-safe checkpoint every N env steps per learner into
 <checkpoint-dir>/<condition>_seed<seed>/; `train --resume` restarts a
 killed run from the newest valid checkpoint and reproduces the
-uninterrupted run bit for bit (wall-clock columns excepted).";
+uninterrupted run bit for bit (wall-clock columns excepted).
+Distributed: `train --distributed N` (or [distributed] workers) splits the
+K learners across N supervised `repro worker` processes — heartbeats,
+crashed/hung workers restarted from their newest checkpoint with bounded
+backoff ([distributed] heartbeat_timeout_secs / max_restarts / backoff_ms),
+failed shards reported per shard with a nonzero exit. Curves and final
+params are bitwise identical to the in-process run at the same seed.
+(`repro worker` is internal — the coordinator spawns it.)";
 
 #[cfg(test)]
 mod tests {
@@ -138,6 +158,16 @@ mod tests {
         assert!(!b.get_bool("resume"));
         // Trailing bool flag parses too (nothing left to consume).
         assert!(Args::parse(&v(&["train", "--resume"])).unwrap().get_bool("resume"));
+    }
+
+    #[test]
+    fn require_parse_helpers() {
+        let a = Args::parse(&v(&["worker", "--index", "2", "--seed", "z"])).unwrap();
+        assert_eq!(a.require_usize("index").unwrap(), 2);
+        assert_eq!(a.require_u64("index").unwrap(), 2);
+        assert!(a.require_usize("count").is_err(), "missing flag must error");
+        let err = format!("{:#}", a.require_u64("seed").unwrap_err());
+        assert!(err.contains("--seed") && err.contains("'z'"), "{err}");
     }
 
     #[test]

@@ -76,6 +76,16 @@ pub enum AipKind {
     Fixed,
 }
 
+impl AipKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AipKind::Neural => "neural",
+            AipKind::Untrained => "untrained",
+            AipKind::Fixed => "fixed",
+        }
+    }
+}
+
 /// Which execution engine runs the NN artifacts (`runtime::Backend`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
@@ -127,6 +137,39 @@ pub struct RuntimeConfig {
 impl Default for RuntimeConfig {
     fn default() -> Self {
         RuntimeConfig { backend: BackendKind::Auto, nn_workers: 1 }
+    }
+}
+
+/// Cross-process distributed-training settings (`coordinator::distributed`):
+/// how many worker processes `repro train --distributed` supervises and how
+/// the supervisor reacts to crashed or hung workers.
+#[derive(Debug, Clone)]
+pub struct DistributedConfig {
+    /// Worker processes the K learners are partitioned across (contiguous
+    /// shards; clamped to K when larger). `repro train --distributed N`
+    /// overrides this.
+    pub workers: usize,
+    /// A worker whose heartbeat file shows no progress for this many
+    /// seconds is declared hung, killed and restarted. Must exceed the
+    /// slowest single phase of a worker (AIP preparation or one PPO
+    /// iteration) — heartbeats are progress reports, not a timer thread.
+    pub heartbeat_timeout_secs: f64,
+    /// Restarts the supervisor grants each worker before marking its
+    /// learner shard failed and finishing without it.
+    pub max_restarts: usize,
+    /// Base delay before a restart; doubles per consecutive restart of the
+    /// same worker (bounded exponential backoff).
+    pub backoff_ms: u64,
+}
+
+impl Default for DistributedConfig {
+    fn default() -> Self {
+        DistributedConfig {
+            workers: 2,
+            heartbeat_timeout_secs: 120.0,
+            max_restarts: 2,
+            backoff_ms: 500,
+        }
     }
 }
 
@@ -322,11 +365,16 @@ pub struct ExperimentConfig {
     /// Directory for checkpoint files; each (condition, seed) run uses its
     /// own subdirectory so concurrent runs never collide.
     pub checkpoint_dir: String,
+    /// How many checkpoint files to keep per run directory (older ones are
+    /// pruned after each successful save). The retention window is also the
+    /// corruption-fallback depth of `load_latest`; must be >= 1.
+    pub checkpoint_retain: usize,
     pub traffic: TrafficConfig,
     pub warehouse: WarehouseConfig,
     pub ppo: PpoConfig,
     pub aip: AipConfig,
     pub runtime: RuntimeConfig,
+    pub distributed: DistributedConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -343,11 +391,13 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             checkpoint_every: 0,
             checkpoint_dir: "checkpoints".into(),
+            checkpoint_retain: 3,
             traffic: TrafficConfig::default(),
             warehouse: WarehouseConfig::default(),
             ppo: PpoConfig::default(),
             aip: AipConfig::default(),
             runtime: RuntimeConfig::default(),
+            distributed: DistributedConfig::default(),
         }
     }
 }
@@ -389,6 +439,8 @@ impl ExperimentConfig {
         cfg.checkpoint_every =
             doc.int_or("experiment", "checkpoint_every", cfg.checkpoint_every as i64)? as usize;
         cfg.checkpoint_dir = doc.str_or("experiment", "checkpoint_dir", &cfg.checkpoint_dir)?;
+        cfg.checkpoint_retain =
+            doc.int_or("experiment", "checkpoint_retain", cfg.checkpoint_retain as i64)? as usize;
 
         let t = &mut cfg.traffic;
         t.grid = doc.int_or("traffic", "grid", t.grid as i64)? as usize;
@@ -448,6 +500,13 @@ impl ExperimentConfig {
         cfg.runtime.nn_workers =
             doc.int_or("runtime", "nn_workers", cfg.runtime.nn_workers as i64)? as usize;
 
+        let d = &mut cfg.distributed;
+        d.workers = doc.int_or("distributed", "workers", d.workers as i64)? as usize;
+        d.heartbeat_timeout_secs =
+            doc.float_or("distributed", "heartbeat_timeout_secs", d.heartbeat_timeout_secs)?;
+        d.max_restarts = doc.int_or("distributed", "max_restarts", d.max_restarts as i64)? as usize;
+        d.backoff_ms = doc.int_or("distributed", "backoff_ms", d.backoff_ms as i64)? as u64;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -504,12 +563,134 @@ impl ExperimentConfig {
             "num_learners must be in 1..=64 (got {})",
             self.num_learners
         );
+        // retain = 0 would delete the checkpoint that was just written.
+        anyhow::ensure!(
+            self.checkpoint_retain >= 1,
+            "checkpoint_retain must be >= 1 (got {})",
+            self.checkpoint_retain
+        );
+        let d = &self.distributed;
+        anyhow::ensure!(
+            (1..=64).contains(&d.workers),
+            "distributed workers must be in 1..=64 (got {})",
+            d.workers
+        );
+        anyhow::ensure!(
+            d.heartbeat_timeout_secs.is_finite() && d.heartbeat_timeout_secs > 0.0,
+            "heartbeat_timeout_secs must be a positive finite number (got {})",
+            d.heartbeat_timeout_secs
+        );
+        anyhow::ensure!(
+            d.max_restarts <= 100,
+            "max_restarts must be in 0..=100 (got {})",
+            d.max_restarts
+        );
+        anyhow::ensure!(
+            d.backoff_ms <= 600_000,
+            "backoff_ms must be in 0..=600000 (got {})",
+            d.backoff_ms
+        );
         Ok(())
+    }
+
+    /// Render the *effective* config back to TOML, every known key spelled
+    /// out. `from_toml(cfg.to_toml_string())` reconstructs `cfg` exactly:
+    /// floats print via Rust's shortest-roundtrip `Display` (whole values
+    /// print as integers, which `float_or` coerces back), so the f32 knobs
+    /// survive the f64 parse bit for bit. The distributed coordinator ships
+    /// the coordinator's config to workers through this.
+    pub fn to_toml_string(&self) -> String {
+        fn s(v: &str) -> String {
+            // Our minimal TOML parser rejects embedded quotes; catch them at
+            // write time so a bad value fails in the coordinator, not when a
+            // worker re-parses the shipped file.
+            assert!(
+                !v.contains('"') && !v.contains('\n'),
+                "config string {v:?} cannot be serialized"
+            );
+            format!("\"{v}\"")
+        }
+        let mut o = String::new();
+        let e = |o: &mut String, k: &str, v: String| {
+            o.push_str(k);
+            o.push_str(" = ");
+            o.push_str(&v);
+            o.push('\n');
+        };
+        o.push_str("[experiment]\n");
+        e(&mut o, "name", s(&self.name));
+        e(&mut o, "domain", s(self.domain.name()));
+        e(&mut o, "simulator", s(self.simulator.name()));
+        e(&mut o, "num_learners", self.num_learners.to_string());
+        let seeds: Vec<String> = self.seeds.iter().map(|x| x.to_string()).collect();
+        e(&mut o, "seeds", format!("[{}]", seeds.join(", ")));
+        e(&mut o, "eval_every", self.eval_every.to_string());
+        e(&mut o, "eval_episodes", self.eval_episodes.to_string());
+        e(&mut o, "results_dir", s(&self.results_dir));
+        e(&mut o, "artifacts_dir", s(&self.artifacts_dir));
+        e(&mut o, "checkpoint_every", self.checkpoint_every.to_string());
+        e(&mut o, "checkpoint_dir", s(&self.checkpoint_dir));
+        e(&mut o, "checkpoint_retain", self.checkpoint_retain.to_string());
+        let t = &self.traffic;
+        o.push_str("\n[traffic]\n");
+        e(&mut o, "grid", t.grid.to_string());
+        e(&mut o, "lane_len", t.lane_len.to_string());
+        e(&mut o, "inflow_prob", t.inflow_prob.to_string());
+        e(&mut o, "agent_intersection", t.agent_intersection.to_string());
+        e(&mut o, "min_green", t.min_green.to_string());
+        e(&mut o, "actuated_max_green", t.actuated_max_green.to_string());
+        e(&mut o, "episode_len", t.episode_len.to_string());
+        e(&mut o, "p_straight", t.p_straight.to_string());
+        e(&mut o, "substeps", t.substeps.to_string());
+        let w = &self.warehouse;
+        o.push_str("\n[warehouse]\n");
+        e(&mut o, "robots_per_side", w.robots_per_side.to_string());
+        e(&mut o, "region", w.region.to_string());
+        e(&mut o, "item_prob", w.item_prob.to_string());
+        e(&mut o, "episode_len", w.episode_len.to_string());
+        e(&mut o, "fixed_item_lifetime", w.fixed_item_lifetime.to_string());
+        e(&mut o, "frame_stack", w.frame_stack.to_string());
+        let p = &self.ppo;
+        o.push_str("\n[ppo]\n");
+        e(&mut o, "num_envs", p.num_envs.to_string());
+        e(&mut o, "rollout_len", p.rollout_len.to_string());
+        e(&mut o, "epochs", p.epochs.to_string());
+        e(&mut o, "minibatch", p.minibatch.to_string());
+        e(&mut o, "gamma", p.gamma.to_string());
+        e(&mut o, "lam", p.lam.to_string());
+        e(&mut o, "clip", p.clip.to_string());
+        e(&mut o, "lr", p.lr.to_string());
+        e(&mut o, "vf_coef", p.vf_coef.to_string());
+        e(&mut o, "ent_coef", p.ent_coef.to_string());
+        e(&mut o, "max_grad_norm", p.max_grad_norm.to_string());
+        e(&mut o, "total_steps", p.total_steps.to_string());
+        e(&mut o, "num_workers", p.num_workers.to_string());
+        let a = &self.aip;
+        o.push_str("\n[aip]\n");
+        e(&mut o, "kind", s(a.kind.name()));
+        e(&mut o, "dataset_size", a.dataset_size.to_string());
+        e(&mut o, "eval_size", a.eval_size.to_string());
+        e(&mut o, "train_epochs", a.train_epochs.to_string());
+        e(&mut o, "batch", a.batch.to_string());
+        e(&mut o, "lr", a.lr.to_string());
+        e(&mut o, "seq_len", a.seq_len.to_string());
+        e(&mut o, "fixed_p", a.fixed_p.to_string());
+        e(&mut o, "use_full_alsh", a.use_full_alsh.to_string());
+        o.push_str("\n[runtime]\n");
+        e(&mut o, "backend", s(self.runtime.backend.name()));
+        e(&mut o, "nn_workers", self.runtime.nn_workers.to_string());
+        let d = &self.distributed;
+        o.push_str("\n[distributed]\n");
+        e(&mut o, "workers", d.workers.to_string());
+        e(&mut o, "heartbeat_timeout_secs", d.heartbeat_timeout_secs.to_string());
+        e(&mut o, "max_restarts", d.max_restarts.to_string());
+        e(&mut o, "backoff_ms", d.backoff_ms.to_string());
+        o
     }
 }
 
 const KNOWN_TABLES: &[&str] =
-    &["", "experiment", "traffic", "warehouse", "ppo", "aip", "runtime"];
+    &["", "experiment", "traffic", "warehouse", "ppo", "aip", "runtime", "distributed"];
 
 const KNOWN_KEYS: &[(&str, &str)] = &[
     ("experiment", "name"),
@@ -523,6 +704,7 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("experiment", "artifacts_dir"),
     ("experiment", "checkpoint_every"),
     ("experiment", "checkpoint_dir"),
+    ("experiment", "checkpoint_retain"),
     ("traffic", "grid"),
     ("traffic", "lane_len"),
     ("traffic", "inflow_prob"),
@@ -562,6 +744,10 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("aip", "use_full_alsh"),
     ("runtime", "backend"),
     ("runtime", "nn_workers"),
+    ("distributed", "workers"),
+    ("distributed", "heartbeat_timeout_secs"),
+    ("distributed", "max_restarts"),
+    ("distributed", "backoff_ms"),
 ];
 
 fn check_known_keys(doc: &Document) -> Result<()> {
@@ -682,6 +868,87 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.checkpoint_every, 8192);
         assert_eq!(cfg.checkpoint_dir, "/tmp/ck");
+    }
+
+    #[test]
+    fn checkpoint_retain_parses_and_rejects_zero() {
+        assert_eq!(ExperimentConfig::default().checkpoint_retain, 3, "historical default");
+        let cfg = ExperimentConfig::from_toml("[experiment]\ncheckpoint_retain = 5").unwrap();
+        assert_eq!(cfg.checkpoint_retain, 5);
+        // retain = 0 would delete every checkpoint right after writing it;
+        // negative wraps through `as usize`.
+        assert!(ExperimentConfig::from_toml("[experiment]\ncheckpoint_retain = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\ncheckpoint_retain = -1").is_err());
+    }
+
+    #[test]
+    fn distributed_knobs_parse_and_bound() {
+        let d = ExperimentConfig::default().distributed;
+        assert_eq!(d.workers, 2);
+        assert_eq!(d.max_restarts, 2);
+        let cfg = ExperimentConfig::from_toml(
+            "[distributed]\nworkers = 4\nheartbeat_timeout_secs = 30.5\nmax_restarts = 0\n\
+             backoff_ms = 100",
+        )
+        .unwrap();
+        assert_eq!(cfg.distributed.workers, 4);
+        assert_eq!(cfg.distributed.heartbeat_timeout_secs, 30.5);
+        assert_eq!(cfg.distributed.max_restarts, 0, "0 = never restart, fail the shard");
+        assert_eq!(cfg.distributed.backoff_ms, 100);
+        // Whole-number timeouts are the common spelling.
+        let cfg =
+            ExperimentConfig::from_toml("[distributed]\nheartbeat_timeout_secs = 60").unwrap();
+        assert_eq!(cfg.distributed.heartbeat_timeout_secs, 60.0);
+        assert!(ExperimentConfig::from_toml("[distributed]\nworkers = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[distributed]\nworkers = 65").is_err());
+        assert!(ExperimentConfig::from_toml("[distributed]\nheartbeat_timeout_secs = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[distributed]\nmax_restarts = -1").is_err());
+        assert!(ExperimentConfig::from_toml("[distributed]\nbackoff_ms = 600001").is_err());
+    }
+
+    #[test]
+    fn toml_round_trip_is_exact() {
+        // The distributed coordinator ships its effective config to workers
+        // via to_toml_string; every field must survive the round trip so
+        // coordinator and worker build bitwise-identical runs. Use awkward
+        // values: non-representable decimals, scientific-notation floats,
+        // whole floats (printed as ints), multiple seeds.
+        let mut cfg = ExperimentConfig::from_toml(
+            r#"
+            [experiment]
+            name = "fig5"
+            domain = "warehouse"
+            simulator = "f-ials"
+            num_learners = 3
+            seeds = [7, 11]
+            checkpoint_every = 4096
+            checkpoint_retain = 5
+
+            [warehouse]
+            item_prob = 0.02
+
+            [ppo]
+            lr = 2.5e-4
+            gamma = 1.0
+
+            [aip]
+            kind = "fixed"
+            fixed_p = 0.1
+
+            [distributed]
+            workers = 3
+            heartbeat_timeout_secs = 45.25
+            "#,
+        )
+        .unwrap();
+        cfg.runtime.backend = BackendKind::Native;
+        let text = cfg.to_toml_string();
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"), "round trip drifted:\n{text}");
+        // And the defaults round-trip too.
+        let d = ExperimentConfig::default();
+        let back = ExperimentConfig::from_toml(&d.to_toml_string()).unwrap();
+        assert_eq!(format!("{d:?}"), format!("{back:?}"));
     }
 
     #[test]

@@ -1,0 +1,708 @@
+//! Fault-tolerant cross-process distributed training: `repro train
+//! --distributed N` splits the K learners of a run across N supervised
+//! `repro worker` OS processes.
+//!
+//! ## Topology
+//!
+//! The **coordinator** (this module, in the `repro train` process) runs the
+//! shared Algorithm-1 collection phase once and serializes it for the
+//! workers, then supervises; the **workers** (`repro worker`, spawned by
+//! the coordinator) each build and train one contiguous learner shard via
+//! the in-process machinery ([`MultiLearnerRun::build_shard`]). Everything
+//! crosses the process boundary through files in one run directory
+//! ([`distributed_run_dir`]), every durable one framed by
+//! `util::state::write_headered` (magic + version + length + CRC-32,
+//! written via `atomic_write`):
+//!
+//! ```text
+//! <checkpoint_dir>/<condition>_seed<S>_dist/
+//!   config.toml        effective config (coordinator → workers, exact
+//!                      TOML round trip: ExperimentConfig::to_toml_string)
+//!   aip_data.bin       shared AIP dataset, f32s byte for byte (IALSAIPD)
+//!   worker_<i>/
+//!     heartbeat        progress note, atomically rewritten per phase/round
+//!     ckpt/            the shard's own CheckpointManager directory
+//!     result.bin       shard results + final policy params (IALSDRES)
+//! ```
+//!
+//! ## Supervision
+//!
+//! Liveness is **progress-based**: a worker rewrites its heartbeat file at
+//! every phase boundary and every training round, and the coordinator
+//! tracks *content changes* — a worker whose heartbeat content has not
+//! changed for `[distributed] heartbeat_timeout_secs` is declared hung and
+//! killed. Crashed (nonzero/signalled exit) and hung workers are restarted
+//! with bounded exponential backoff (`backoff_ms * 2^restarts`, capped by
+//! `max_restarts`); a restarted worker auto-resumes from its shard's
+//! newest valid checkpoint and replays to completion. When a worker
+//! exhausts its restart budget the shard is marked failed, the remaining
+//! shards still finish, and [`run_distributed`] returns a structured
+//! per-shard report ([`ShardReport`]) — graceful degradation, never a hang
+//! and never lost completed shards.
+//!
+//! ## Bitwise identity
+//!
+//! The N-process run reproduces the in-process `num_learners = K` run bit
+//! for bit (curves, AIP CE, final params) because no bit-affecting state
+//! crosses shards: learner `j` is seeded by `learner_seed(seed, j)` from
+//! its **global** index wherever it runs, learners share no mutable state,
+//! and the one shared input — the AIP dataset — ships as exact f32 bytes.
+//! Worker crashes don't perturb bits either: resume replays from a
+//! checkpoint through the same deterministic path the crash interrupted
+//! (`rust/tests/checkpoint_resume.rs`), so a kill-and-restart run equals
+//! the clean run. Locked in by `rust/tests/distributed.rs`.
+
+use super::experiment::{collect_shared_aip_data, SharedAipData};
+use super::multi::{MultiLearnerOutcome, MultiLearnerRun};
+use crate::config::ExperimentConfig;
+use crate::core::shard_ranges;
+use crate::metrics::{read_curve_state, write_curve_state, ConditionResult};
+use crate::runtime::checkpoint::CheckpointManager;
+use crate::runtime::Runtime;
+use crate::testkit::fault::{fire_once, worker_fault_from_env, WorkerFaultKind};
+use crate::util::state::{atomic_write, read_headered, write_headered};
+use crate::util::{StateReader, StateWriter};
+use crate::{log_info, log_warn, Result};
+use anyhow::Context;
+use std::path::{Path, PathBuf};
+use std::process::{Child, ExitStatus};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+const AIP_DATA_MAGIC: &[u8; 8] = b"IALSAIPD";
+const AIP_DATA_VERSION: u32 = 1;
+const RESULT_MAGIC: &[u8; 8] = b"IALSDRES";
+const RESULT_VERSION: u32 = 1;
+
+/// Supervisor poll cadence. Only affects detection latency, never bits.
+const POLL: Duration = Duration::from_millis(25);
+
+/// The distributed run directory for one (condition, seed): sibling of the
+/// in-process [`super::checkpoint_run_dir`], suffixed so the two runtimes
+/// never share files.
+pub fn distributed_run_dir(cfg: &ExperimentConfig, seed: u64) -> PathBuf {
+    Path::new(&cfg.checkpoint_dir)
+        .join(format!("{}-{}_seed{}_dist", cfg.simulator.name(), cfg.name, seed))
+}
+
+/// Worker `index`'s private subdirectory (heartbeat, checkpoints, result).
+pub fn worker_dir(dist_dir: &Path, index: usize) -> PathBuf {
+    dist_dir.join(format!("worker_{index}"))
+}
+
+/// Coordinator-side knobs that are not experiment config: where the worker
+/// binary lives and what extra environment the workers get. Tests use
+/// `worker_env` to scope fault-injection variables to spawned children
+/// only, and `worker_exe` because the test binary is not `repro`.
+#[derive(Debug, Clone, Default)]
+pub struct DistributedOptions {
+    /// Worker executable; `None` = this process's own binary.
+    pub worker_exe: Option<PathBuf>,
+    /// Extra `(key, value)` environment entries for every spawned worker.
+    pub worker_env: Vec<(String, String)>,
+}
+
+/// What happened to one worker's learner shard.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub worker: usize,
+    /// Global index of the shard's first learner.
+    pub first_learner: usize,
+    /// Learners in the shard.
+    pub count: usize,
+    /// Restarts the supervisor granted this worker.
+    pub restarts: usize,
+    pub ok: bool,
+    /// Terminal failure reason (`ok = false` only).
+    pub error: Option<String>,
+}
+
+/// One learner's shipped-back result: the usual per-learner numbers plus
+/// the final policy parameters as raw named tensors (the coordinator keeps
+/// no engine runtime, so no `ParamStore` is materialized here).
+#[derive(Debug, Clone)]
+pub struct LearnerResult {
+    pub result: ConditionResult,
+    pub policy_params: Vec<(String, Vec<f32>)>,
+}
+
+/// Outcome of a distributed run: per-learner results in global learner
+/// order (`None` where the owning shard failed) plus the per-shard report.
+#[derive(Debug, Clone)]
+pub struct DistributedOutcome {
+    pub learners: Vec<Option<LearnerResult>>,
+    pub shards: Vec<ShardReport>,
+}
+
+impl DistributedOutcome {
+    pub fn all_ok(&self) -> bool {
+        self.shards.iter().all(|s| s.ok)
+    }
+
+    /// Human-readable per-shard report (printed on degraded exits).
+    pub fn report(&self) -> String {
+        let mut out = String::from("shard report:\n");
+        for s in &self.shards {
+            let state = if s.ok {
+                "ok".to_string()
+            } else {
+                format!("FAILED: {}", s.error.as_deref().unwrap_or("?"))
+            };
+            out.push_str(&format!(
+                "  worker {} (learners {}..{}, {} restart(s)): {state}\n",
+                s.worker,
+                s.first_learner,
+                s.first_learner + s.count,
+                s.restarts
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+enum SlotState {
+    Running(Child),
+    Backoff(Instant),
+    Done(Vec<LearnerResult>),
+    Failed(String),
+}
+
+struct Slot {
+    worker: usize,
+    first: usize,
+    count: usize,
+    state: SlotState,
+    restarts: usize,
+    /// Last observed heartbeat content + when it last *changed*.
+    hb: Vec<u8>,
+    hb_at: Instant,
+}
+
+/// Train `cfg.num_learners` learners across `workers` supervised worker
+/// processes (clamped to the learner count; see the module docs for the
+/// protocol). Returns `Ok` with a per-shard report even when shards fail —
+/// callers decide the exit code from [`DistributedOutcome::all_ok`]. `Err`
+/// is reserved for coordinator-level failures (cannot write the run
+/// directory, cannot spawn the worker binary at all).
+pub fn run_distributed(
+    cfg: &ExperimentConfig,
+    seed: u64,
+    workers: usize,
+    opts: &DistributedOptions,
+) -> Result<DistributedOutcome> {
+    cfg.validate()?;
+    let k = cfg.num_learners;
+    let ranges = shard_ranges(k, workers);
+    let dist_dir = distributed_run_dir(cfg, seed);
+    std::fs::create_dir_all(&dist_dir)
+        .with_context(|| format!("creating {}", dist_dir.display()))?;
+    log_info!(
+        "=== distributed {} / {} / seed {seed}: {k} learner(s) over {} worker(s) in {} ===",
+        cfg.name,
+        cfg.simulator.name(),
+        ranges.len(),
+        dist_dir.display()
+    );
+
+    // Ship the effective config — the worker re-parses exactly this, so
+    // coordinator and workers agree on every knob bit for bit.
+    let config_path = dist_dir.join("config.toml");
+    atomic_write(&config_path, cfg.to_toml_string().as_bytes())?;
+
+    // One shared Algorithm-1 collection phase, serialized exactly.
+    let shared = collect_shared_aip_data(cfg, seed);
+    let mut w = StateWriter::new();
+    w.bool(shared.is_some());
+    if let Some(sh) = &shared {
+        sh.write_state(&mut w);
+    }
+    let aip_path = dist_dir.join("aip_data.bin");
+    write_headered(&aip_path, AIP_DATA_MAGIC, AIP_DATA_VERSION, &w.into_bytes())?;
+    drop(shared);
+
+    let exe = match &opts.worker_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("resolving the worker executable")?,
+    };
+
+    // Slots start in `Backoff(now)` so the supervisor performs the first
+    // spawn too: a spawn failure then takes the one cleanup path that
+    // kills whatever was already started, instead of orphaning it.
+    let mut slots = Vec::with_capacity(ranges.len());
+    for (i, (s, e)) in ranges.iter().enumerate() {
+        // A stale result from an earlier session must not masquerade as
+        // this run's; checkpoints stay (they are the resume payload).
+        std::fs::remove_file(worker_dir(&dist_dir, i).join("result.bin")).ok();
+        slots.push(Slot {
+            worker: i,
+            first: *s,
+            count: e - s,
+            state: SlotState::Backoff(Instant::now()),
+            restarts: 0,
+            hb: Vec::new(),
+            hb_at: Instant::now(),
+        });
+    }
+
+    let r = supervise(&mut slots, cfg, &exe, &config_path, &dist_dir, seed, opts);
+    if r.is_err() {
+        // Coordinator-level failure: never leave orphan workers behind.
+        for slot in &mut slots {
+            if let SlotState::Running(child) = &mut slot.state {
+                child.kill().ok();
+                child.wait().ok();
+            }
+        }
+    }
+    r?;
+
+    let mut learners: Vec<Option<LearnerResult>> = vec![None; k];
+    let mut shards = Vec::with_capacity(slots.len());
+    for slot in slots {
+        let (ok, error, results) = match slot.state {
+            SlotState::Done(rs) => (true, None, Some(rs)),
+            SlotState::Failed(e) => (false, Some(e), None),
+            _ => unreachable!("supervise returns only terminal slots"),
+        };
+        if let Some(rs) = results {
+            for (off, lr) in rs.into_iter().enumerate() {
+                learners[slot.first + off] = Some(lr);
+            }
+        }
+        shards.push(ShardReport {
+            worker: slot.worker,
+            first_learner: slot.first,
+            count: slot.count,
+            restarts: slot.restarts,
+            ok,
+            error,
+        });
+    }
+    Ok(DistributedOutcome { learners, shards })
+}
+
+fn spawn_worker(
+    slot: &mut Slot,
+    exe: &Path,
+    config_path: &Path,
+    dist_dir: &Path,
+    seed: u64,
+    opts: &DistributedOptions,
+) -> Result<()> {
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("worker")
+        .arg("--config")
+        .arg(config_path)
+        .arg("--dist-dir")
+        .arg(dist_dir)
+        .arg("--index")
+        .arg(slot.worker.to_string())
+        .arg("--first-learner")
+        .arg(slot.first.to_string())
+        .arg("--count")
+        .arg(slot.count.to_string())
+        .arg("--seed")
+        .arg(seed.to_string());
+    for (key, val) in &opts.worker_env {
+        cmd.env(key, val);
+    }
+    let child = cmd
+        .spawn()
+        .with_context(|| format!("spawning worker {} ({})", slot.worker, exe.display()))?;
+    // A fresh incarnation gets a fresh liveness window.
+    slot.hb_at = Instant::now();
+    slot.state = SlotState::Running(child);
+    Ok(())
+}
+
+/// Crash/hang handling policy: grant a backoff-delayed restart while the
+/// budget lasts, mark the shard failed once it is spent.
+fn fail_or_restart(slot: &mut Slot, cfg: &ExperimentConfig, reason: String) {
+    let d = &cfg.distributed;
+    if slot.restarts >= d.max_restarts {
+        log_warn!(
+            "worker {} (learners {}..{}): {reason}; max_restarts = {} exhausted — shard failed",
+            slot.worker,
+            slot.first,
+            slot.first + slot.count,
+            d.max_restarts
+        );
+        slot.state = SlotState::Failed(reason);
+        return;
+    }
+    slot.restarts += 1;
+    // Bounded exponential backoff; the shift is clamped so a huge
+    // max_restarts cannot overflow the multiplier.
+    let delay = d.backoff_ms.saturating_mul(1u64 << (slot.restarts - 1).min(20));
+    log_warn!(
+        "worker {} (learners {}..{}): {reason}; restart {}/{} in {delay} ms",
+        slot.worker,
+        slot.first,
+        slot.first + slot.count,
+        slot.restarts,
+        d.max_restarts
+    );
+    slot.state = SlotState::Backoff(Instant::now() + Duration::from_millis(delay));
+}
+
+fn supervise(
+    slots: &mut [Slot],
+    cfg: &ExperimentConfig,
+    exe: &Path,
+    config_path: &Path,
+    dist_dir: &Path,
+    seed: u64,
+    opts: &DistributedOptions,
+) -> Result<()> {
+    let timeout = Duration::from_secs_f64(cfg.distributed.heartbeat_timeout_secs);
+    loop {
+        let mut pending = false;
+        for slot in slots.iter_mut() {
+            match &mut slot.state {
+                SlotState::Done(_) | SlotState::Failed(_) => {}
+                SlotState::Backoff(due) => {
+                    pending = true;
+                    if Instant::now() >= *due {
+                        spawn_worker(slot, exe, config_path, dist_dir, seed, opts)?;
+                    }
+                }
+                SlotState::Running(child) => {
+                    pending = true;
+                    if let Some(status) = child.try_wait().context("polling a worker")? {
+                        on_exit(slot, cfg, dist_dir, status);
+                        continue;
+                    }
+                    // Liveness: has the heartbeat content changed?
+                    let hb = std::fs::read(worker_dir(dist_dir, slot.worker).join("heartbeat"))
+                        .unwrap_or_default();
+                    if hb != slot.hb {
+                        slot.hb = hb;
+                        slot.hb_at = Instant::now();
+                    } else if slot.hb_at.elapsed() > timeout {
+                        child.kill().ok();
+                        child.wait().ok();
+                        let reason = format!(
+                            "no heartbeat progress for {:.1}s (heartbeat_timeout_secs = {}) — \
+                             killed as hung",
+                            slot.hb_at.elapsed().as_secs_f64(),
+                            cfg.distributed.heartbeat_timeout_secs
+                        );
+                        fail_or_restart(slot, cfg, reason);
+                    }
+                }
+            }
+        }
+        if !pending {
+            return Ok(());
+        }
+        std::thread::sleep(POLL);
+    }
+}
+
+/// A worker exited: a zero status with a valid result file completes the
+/// shard; anything else is a crash (which includes "exited 0 but the
+/// result is missing or corrupt" — the restarted worker resumes from its
+/// checkpoint and rewrites it).
+fn on_exit(slot: &mut Slot, cfg: &ExperimentConfig, dist_dir: &Path, status: ExitStatus) {
+    if status.success() {
+        let path = worker_dir(dist_dir, slot.worker).join("result.bin");
+        match read_result(&path, slot.first, slot.count) {
+            Ok(results) => {
+                log_info!(
+                    "worker {} done: learners {}..{} ({} restart(s))",
+                    slot.worker,
+                    slot.first,
+                    slot.first + slot.count,
+                    slot.restarts
+                );
+                slot.state = SlotState::Done(results);
+            }
+            Err(e) => {
+                fail_or_restart(slot, cfg, format!("exited 0 but shard result is unusable: {e:#}"))
+            }
+        }
+    } else {
+        fail_or_restart(slot, cfg, format!("worker exited abnormally ({status})"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+/// `repro worker` flags (all coordinator-supplied — this subcommand is not
+/// meant to be invoked by hand).
+#[derive(Debug, Clone)]
+pub struct WorkerArgs {
+    pub dist_dir: PathBuf,
+    pub index: usize,
+    pub first_learner: usize,
+    pub count: usize,
+    pub seed: u64,
+}
+
+/// The worker process body: deserialize the shared AIP data, build the
+/// learner shard (global seeds, shard-local slots), auto-resume from the
+/// shard's newest valid checkpoint if one exists, train to completion with
+/// per-round heartbeats and checkpoints, and ship the results back via
+/// `result.bin`. Exit code is the `Result`: `Ok` ⇒ 0.
+pub fn run_worker(cfg: &ExperimentConfig, wa: &WorkerArgs) -> Result<()> {
+    let wdir = worker_dir(&wa.dist_dir, wa.index);
+    std::fs::create_dir_all(&wdir).with_context(|| format!("creating {}", wdir.display()))?;
+    let hb_path = wdir.join("heartbeat");
+    let heartbeat = |msg: &str| {
+        // Heartbeats are liveness, not state: a failed write must not kill
+        // the worker (the supervisor would then also see no progress and
+        // restart it, which is the right outcome anyway).
+        atomic_write(&hb_path, msg.as_bytes()).ok();
+    };
+    heartbeat("phase:load-aip-data");
+    let bytes = read_headered(wa.dist_dir.join("aip_data.bin"), AIP_DATA_MAGIC, AIP_DATA_VERSION)?;
+    let mut r = StateReader::new(&bytes);
+    let shared = if r.bool()? { Some(SharedAipData::read_state(&mut r)?) } else { None };
+    r.expect_end()?;
+
+    heartbeat("phase:build");
+    let rt = Rc::new(Runtime::from_config(cfg)?);
+    let fault = worker_fault_from_env(wa.index)?;
+    let mut run = MultiLearnerRun::build_shard(
+        &rt,
+        cfg,
+        wa.seed,
+        wa.first_learner,
+        wa.count,
+        shared.as_ref(),
+    )?;
+
+    // The shard's own checkpoint stream. Workers always checkpoint — the
+    // restart protocol depends on it — so an unset [experiment]
+    // checkpoint_every falls back to once per iteration.
+    let per_iter = cfg.ppo.num_envs * cfg.ppo.rollout_len;
+    let every = if cfg.checkpoint_every > 0 { cfg.checkpoint_every } else { per_iter };
+    let mgr = CheckpointManager::new(wdir.join("ckpt"), cfg.checkpoint_retain);
+    let start_round = match mgr.load_latest() {
+        Some((iter, payload)) => {
+            let rounds = run
+                .restore(&rt, &payload)
+                .with_context(|| format!("restoring shard checkpoint at iteration {iter}"))?;
+            log_info!(
+                "worker {}: resumed learners {}..{} at iteration {rounds}/{}",
+                wa.index,
+                wa.first_learner,
+                wa.first_learner + wa.count,
+                run.iterations()
+            );
+            rounds
+        }
+        None => {
+            run.start()?;
+            0
+        }
+    };
+    heartbeat(&format!("round:{start_round}"));
+
+    // Absolute-boundary save cadence (same alignment as the in-process
+    // resumable driver, so restarted and clean workers save at the same
+    // iterations).
+    let mut next_ckpt = {
+        let mut n = every;
+        while n <= start_round * per_iter {
+            n += every;
+        }
+        n
+    };
+    for round in start_round..run.iterations() {
+        run.advance_round()?;
+        let steps = (round + 1) * per_iter;
+        if steps >= next_ckpt {
+            while next_ckpt <= steps {
+                next_ckpt += every;
+            }
+            let payload = run.write_checkpoint(round + 1)?;
+            mgr.save(round + 1, &payload)?;
+        }
+        heartbeat(&format!("round:{}", round + 1));
+        if let Some(f) = fault {
+            if f.iter == round + 1 && (f.every_restart || fire_once(wdir.join("fault_fired"))) {
+                match f.kind {
+                    WorkerFaultKind::Kill => {
+                        log_warn!("worker {}: injected kill after iteration {}", wa.index, f.iter);
+                        std::process::abort();
+                    }
+                    WorkerFaultKind::Hang => {
+                        log_warn!("worker {}: injected hang after iteration {}", wa.index, f.iter);
+                        loop {
+                            std::thread::sleep(Duration::from_millis(250));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    heartbeat("phase:finish");
+    let outcome = run.finish()?;
+    write_result(&wdir.join("result.bin"), wa.first_learner, &outcome)?;
+    heartbeat("phase:done");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Shard result file (IALSDRES)
+// ---------------------------------------------------------------------------
+
+fn write_result(path: &Path, first_learner: usize, outcome: &MultiLearnerOutcome) -> Result<()> {
+    let mut w = StateWriter::new();
+    w.usize(first_learner);
+    w.usize(outcome.results.len());
+    for (res, store) in outcome.results.iter().zip(&outcome.policy_stores) {
+        w.str(&res.condition);
+        w.u64(res.seed);
+        write_curve_state(&res.curve, &mut w);
+        w.f64(res.prep_secs);
+        w.f64(res.train_secs);
+        w.f64(res.aip_ce);
+        w.f64(res.final_eval);
+        w.usize(store.names().len());
+        for name in store.names() {
+            w.str(name);
+            w.f32s(store.get(name)?);
+        }
+    }
+    write_headered(path, RESULT_MAGIC, RESULT_VERSION, &w.into_bytes())
+}
+
+fn read_result(path: &Path, first_learner: usize, count: usize) -> Result<Vec<LearnerResult>> {
+    let bytes = read_headered(path, RESULT_MAGIC, RESULT_VERSION)?;
+    let mut r = StateReader::new(&bytes);
+    let stored_first = r.usize()?;
+    let stored_count = r.usize()?;
+    anyhow::ensure!(
+        (stored_first, stored_count) == (first_learner, count),
+        "shard result covers learners {stored_first}..{} but the shard is {first_learner}..{}",
+        stored_first + stored_count,
+        first_learner + count
+    );
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let condition = r.str()?.to_string();
+        let seed = r.u64()?;
+        let curve = read_curve_state(&mut r)?;
+        let prep_secs = r.f64()?;
+        let train_secs = r.f64()?;
+        let aip_ce = r.f64()?;
+        let final_eval = r.f64()?;
+        let nt = r.usize()?;
+        let mut policy_params = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let name = r.str()?.to_string();
+            policy_params.push((name, r.f32s()?));
+        }
+        out.push(LearnerResult {
+            result: ConditionResult {
+                condition,
+                seed,
+                curve,
+                prep_secs,
+                train_secs,
+                aip_ce,
+                final_eval,
+            },
+            policy_params,
+        });
+    }
+    r.expect_end()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_dir_is_disjoint_from_in_process() {
+        let cfg = ExperimentConfig::default();
+        let dist = distributed_run_dir(&cfg, 7);
+        let local = super::super::checkpoint_run_dir(&cfg, 7);
+        assert_ne!(dist, local);
+        assert!(dist.to_string_lossy().ends_with("_dist"));
+        assert_eq!(worker_dir(&dist, 3), dist.join("worker_3"));
+    }
+
+    #[test]
+    fn result_file_roundtrip_and_shard_mismatch() {
+        use crate::metrics::CurvePoint;
+        use crate::rl::PpoStats;
+        let dir = std::env::temp_dir().join("ials_dres_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("result.bin");
+        // Hand-build a 1-learner outcome-shaped payload via the writer's
+        // own building blocks (a real MultiLearnerOutcome needs an engine).
+        let mut w = StateWriter::new();
+        w.usize(2); // first_learner
+        w.usize(1); // count
+        w.str("ials-t");
+        w.u64(99);
+        let curve = vec![CurvePoint {
+            wall_clock_s: 0.5,
+            env_steps: 128,
+            eval_mean: 1.25,
+            eval_std: 0.25,
+            stats: PpoStats::default(),
+        }];
+        write_curve_state(&curve, &mut w);
+        w.f64(1.0);
+        w.f64(2.0);
+        w.f64(0.5);
+        w.f64(1.25);
+        w.usize(1);
+        w.str("dense.w");
+        w.f32s(&[1.0, -2.0]);
+        write_headered(&path, RESULT_MAGIC, RESULT_VERSION, &w.into_bytes()).unwrap();
+        let rs = read_result(&path, 2, 1).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].result.condition, "ials-t");
+        assert_eq!(rs[0].result.seed, 99);
+        assert_eq!(rs[0].result.curve.len(), 1);
+        assert_eq!(rs[0].result.curve[0].env_steps, 128);
+        assert_eq!(rs[0].policy_params, vec![("dense.w".to_string(), vec![1.0, -2.0])]);
+        // A result for the wrong shard is rejected, not silently placed.
+        let err = read_result(&path, 0, 1).unwrap_err().to_string();
+        assert!(err.contains("covers learners 2..3"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn report_names_failed_shards() {
+        let out = DistributedOutcome {
+            learners: vec![None, None],
+            shards: vec![
+                ShardReport {
+                    worker: 0,
+                    first_learner: 0,
+                    count: 1,
+                    restarts: 1,
+                    ok: true,
+                    error: None,
+                },
+                ShardReport {
+                    worker: 1,
+                    first_learner: 1,
+                    count: 1,
+                    restarts: 2,
+                    ok: false,
+                    error: Some("worker exited abnormally (signal: 6)".into()),
+                },
+            ],
+        };
+        assert!(!out.all_ok());
+        let rep = out.report();
+        assert!(rep.contains("worker 0 (learners 0..1, 1 restart(s)): ok"), "{rep}");
+        assert!(rep.contains("worker 1 (learners 1..2, 2 restart(s)): FAILED"), "{rep}");
+        assert!(rep.contains("signal: 6"), "{rep}");
+    }
+}

@@ -101,6 +101,29 @@ pub struct SharedAipData {
     pub collect_secs: f64,
 }
 
+impl SharedAipData {
+    /// Serialize for shipping to distributed worker processes. Exact: the
+    /// f32 payloads go byte for byte, so a worker's AIP training consumes
+    /// the same bits the in-process run would. `collect_secs` rides along
+    /// so workers report the same prep-time accounting.
+    pub fn write_state(&self, w: &mut crate::util::StateWriter) {
+        self.eval_data.write_state(w);
+        w.bool(self.train_data.is_some());
+        if let Some(td) = &self.train_data {
+            td.write_state(w);
+        }
+        w.f64(self.collect_secs);
+    }
+
+    /// Inverse of [`SharedAipData::write_state`].
+    pub fn read_state(r: &mut crate::util::StateReader<'_>) -> Result<SharedAipData> {
+        let eval_data = InfluenceDataset::read_state(r)?;
+        let train_data = if r.bool()? { Some(InfluenceDataset::read_state(r)?) } else { None };
+        let collect_secs = r.f64()?;
+        Ok(SharedAipData { eval_data, train_data, collect_secs })
+    }
+}
+
 /// Run the shared Algorithm-1 collection phase for `cfg.simulator`
 /// (`None` for the GS condition, which needs no influence data). Seeds
 /// are the run's base seed, so a `num_learners = 1` run collects exactly
@@ -130,14 +153,20 @@ pub fn collect_shared_aip_data(cfg: &ExperimentConfig, seed: u64) -> Option<Shar
 
 /// Build learner `learner`'s influence predictor over the shared dataset:
 /// a per-learner parameter store seeded from [`learner_seed`] (hosted in
-/// `stores`, then owned by the predictor), trained on `shared.train_data`
-/// where the condition demands it. Learner 0 at the base seed reproduces
-/// the single-learner preparation bit for bit.
+/// slot `slot` of `stores`, then owned by the predictor), trained on
+/// `shared.train_data` where the condition demands it. Learner 0 at the
+/// base seed reproduces the single-learner preparation bit for bit.
+///
+/// `slot` and `learner` split on purpose: a distributed worker hosts a
+/// *shard* of the learners, so its store slots are shard-local while every
+/// bit-affecting seed still derives from the global learner index.
+#[allow(clippy::too_many_arguments)]
 pub fn build_learner_predictor(
     rt: &Rc<Runtime>,
     cfg: &ExperimentConfig,
     shared: &SharedAipData,
     stores: &mut MultiStore,
+    slot: usize,
     learner: usize,
     seed: u64,
     batch: usize,
@@ -149,8 +178,8 @@ pub fn build_learner_predictor(
         SimulatorKind::UntrainedIals => {
             // Random-initialized network; no data, no training time (same
             // seed mix as `NeuralAip::untrained`, by shared constant).
-            stores.init_model(rt, learner, model, lseed ^ UNTRAINED_INIT_MIX)?;
-            let aip = NeuralAip::from_multi_store(rt.clone(), stores, learner, model, batch)?;
+            stores.init_model(rt, slot, model, lseed ^ UNTRAINED_INIT_MIX)?;
+            let aip = NeuralAip::from_multi_store(rt.clone(), stores, slot, model, batch)?;
             (Box::new(aip), 0.0)
         }
         SimulatorKind::Ials => {
@@ -161,8 +190,8 @@ pub fn build_learner_predictor(
             let t0 = std::time::Instant::now();
             // Fresh per-(seed, learner) init so learners (and seeds) are
             // independent repetitions.
-            stores.init_model(rt, learner, model, lseed ^ 0xA1B2)?;
-            let mut aip = NeuralAip::from_multi_store(rt.clone(), stores, learner, model, batch)?;
+            stores.init_model(rt, slot, model, lseed ^ 0xA1B2)?;
+            let mut aip = NeuralAip::from_multi_store(rt.clone(), stores, slot, model, batch)?;
             let update = format!("{model}_update");
             let losses = if is_gru {
                 let b = rt.geom("gru_seq_b")?;
@@ -232,7 +261,7 @@ pub fn prepare_predictor(
         None => Ok(Prep { predictor: None, prep_secs: 0.0, aip_ce: f64::NAN }),
         Some(shared) => {
             let mut stores = MultiStore::new(1);
-            build_learner_predictor(rt, cfg, &shared, &mut stores, 0, seed, batch)
+            build_learner_predictor(rt, cfg, &shared, &mut stores, 0, 0, seed, batch)
         }
     }
 }

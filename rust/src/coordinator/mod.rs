@@ -1,12 +1,18 @@
 //! The coordinator: evaluation on the GS, the wall-clock-aware training
-//! loop, the per-figure experiment harnesses, and the multi-learner
-//! (distributed-IALS) round-robin driver.
+//! loop, the per-figure experiment harnesses, the multi-learner
+//! (distributed-IALS) round-robin driver, and the fault-tolerant
+//! cross-process runtime that supervises it over N worker processes.
 
+pub mod distributed;
 pub mod evaluator;
 pub mod experiment;
 pub mod multi;
 pub mod trainer;
 
+pub use distributed::{
+    distributed_run_dir, run_distributed, run_worker, DistributedOptions, DistributedOutcome,
+    ShardReport, WorkerArgs,
+};
 pub use evaluator::{evaluate, EvalResult};
 pub use experiment::{run_condition, run_figure, FIGURES};
 pub use multi::{

@@ -38,7 +38,7 @@
 
 use super::experiment::{
     build_learner_predictor, collect_shared_aip_data, make_eval_env, make_train_env,
-    policy_model_name, Prep,
+    policy_model_name, Prep, SharedAipData,
 };
 use super::trainer::LearnerLoop;
 use crate::config::ExperimentConfig;
@@ -54,9 +54,6 @@ use crate::Result;
 use anyhow::{bail, Context};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
-
-/// Checkpoint files kept per run directory (newest-first fallback window).
-pub const CHECKPOINT_RETAIN: usize = 3;
 
 /// One learner's run-long state: its envs, its stepwise training loop and
 /// its reporting numbers. The policy parameters live in the shared
@@ -106,22 +103,55 @@ impl MultiLearnerRun {
             rt.backend_kind()
         );
         let shared = collect_shared_aip_data(cfg, seed);
+        Self::build_shard(rt, cfg, seed, 0, k, shared.as_ref())
+    }
+
+    /// Build the shard of learners `[first_learner, first_learner + count)`
+    /// against already-collected shared AIP data (`None` for the GS
+    /// condition). Store slots are shard-local (`0..count`) but every
+    /// bit-affecting seed derives from the **global** learner index, so a
+    /// learner's bits are identical whether it runs in the full in-process
+    /// run or in some worker process's shard — the distributed runtime's
+    /// bitwise-identity foundation ([`super::distributed`]).
+    pub fn build_shard(
+        rt: &Rc<Runtime>,
+        cfg: &ExperimentConfig,
+        seed: u64,
+        first_learner: usize,
+        count: usize,
+        shared: Option<&SharedAipData>,
+    ) -> Result<MultiLearnerRun> {
+        anyhow::ensure!(count >= 1, "a learner shard cannot be empty");
+        anyhow::ensure!(
+            first_learner + count <= cfg.num_learners,
+            "shard [{first_learner}, {}) out of range for num_learners = {}",
+            first_learner + count,
+            cfg.num_learners
+        );
         let policy_model = policy_model_name(cfg);
-        let mut stores = MultiStore::new(k);
-        let mut learners = Vec::with_capacity(k);
-        for l in 0..k {
+        let mut stores = MultiStore::new(count);
+        let mut learners = Vec::with_capacity(count);
+        for slot in 0..count {
+            let l = first_learner + slot;
             let lseed = learner_seed(seed, l);
-            let prep = match &shared {
+            let prep = match shared {
                 None => Prep { predictor: None, prep_secs: 0.0, aip_ce: f64::NAN },
-                Some(sh) => {
-                    build_learner_predictor(rt, cfg, sh, &mut stores, l, seed, cfg.ppo.num_envs)?
-                }
+                Some(sh) => build_learner_predictor(
+                    rt,
+                    cfg,
+                    sh,
+                    &mut stores,
+                    slot,
+                    l,
+                    seed,
+                    cfg.ppo.num_envs,
+                )?,
             };
             let prep_secs = prep.prep_secs;
             let aip_ce = prep.aip_ce;
             let train_env = make_train_env(cfg, prep.predictor);
             let eval_env = make_eval_env(cfg);
-            stores.init_model(rt, l, policy_model, lseed)?;
+            stores.init_model(rt, slot, policy_model, lseed)?;
             let lp = LearnerLoop::new(cfg, train_env.obs_dim(), lseed, prep_secs);
             learners.push(Learner { train_env, eval_env, lp, seed: lseed, prep_secs, aip_ce });
         }
@@ -392,7 +422,7 @@ pub fn run_multi_condition_resumable(
 ) -> Result<MultiLearnerOutcome> {
     let mut run = MultiLearnerRun::build(rt, cfg, seed)?;
     let mgr = (cfg.checkpoint_every > 0 || resume)
-        .then(|| CheckpointManager::new(checkpoint_run_dir(cfg, seed), CHECKPOINT_RETAIN));
+        .then(|| CheckpointManager::new(checkpoint_run_dir(cfg, seed), cfg.checkpoint_retain));
     let start_round = if resume {
         let mgr = mgr.as_ref().expect("resume implies a checkpoint manager");
         let (iter, payload) = mgr.load_latest().with_context(|| {

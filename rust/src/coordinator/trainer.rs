@@ -15,7 +15,7 @@ use super::evaluator::evaluate;
 use crate::config::ExperimentConfig;
 use crate::core::VecEnv;
 use crate::log_info;
-use crate::metrics::CurvePoint;
+use crate::metrics::{read_curve_state, write_curve_state, CurvePoint};
 use crate::rl::{Policy, PpoStats, PpoTrainer};
 use crate::util::{StateReader, StateWriter, Stopwatch};
 use crate::Result;
@@ -154,20 +154,7 @@ impl LearnerLoop {
     /// derived from config and validated on restore via the seed.
     pub fn write_state(&self, out: &mut StateWriter) {
         self.trainer.save_state(out);
-        out.usize(self.curve.len());
-        for p in &self.curve {
-            out.f64(p.wall_clock_s);
-            out.usize(p.env_steps);
-            out.f64(p.eval_mean);
-            out.f64(p.eval_std);
-            out.f32(p.stats.total_loss);
-            out.f32(p.stats.pg_loss);
-            out.f32(p.stats.v_loss);
-            out.f32(p.stats.entropy);
-            out.f32(p.stats.approx_kl);
-            out.f32(p.stats.rollout_reward);
-            out.usize(p.stats.episodes);
-        }
+        write_curve_state(&self.curve, out);
         out.usize(self.iter);
         out.usize(self.next_eval);
         out.usize(self.steps_done);
@@ -182,26 +169,7 @@ impl LearnerLoop {
     /// holds the t=0 point and the envs are restored separately.
     pub fn read_state(&mut self, r: &mut StateReader) -> Result<()> {
         self.trainer.load_state(r)?;
-        let n = r.usize()?;
-        let mut curve = Vec::with_capacity(n);
-        for _ in 0..n {
-            curve.push(CurvePoint {
-                wall_clock_s: r.f64()?,
-                env_steps: r.usize()?,
-                eval_mean: r.f64()?,
-                eval_std: r.f64()?,
-                stats: PpoStats {
-                    total_loss: r.f32()?,
-                    pg_loss: r.f32()?,
-                    v_loss: r.f32()?,
-                    entropy: r.f32()?,
-                    approx_kl: r.f32()?,
-                    rollout_reward: r.f32()?,
-                    episodes: r.usize()?,
-                },
-            });
-        }
-        self.curve = curve;
+        self.curve = read_curve_state(r)?;
         self.iter = r.usize()?;
         anyhow::ensure!(
             self.iter <= self.iterations,

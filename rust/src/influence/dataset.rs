@@ -2,7 +2,8 @@
 //! recurrent AIPs can be trained on contiguous windows (BPTT) and
 //! evaluated on whole trajectories.
 
-use crate::util::Pcg32;
+use crate::util::{Pcg32, StateReader, StateWriter};
+use anyhow::Result;
 
 /// Index range of one episode within the flat step storage.
 #[derive(Debug, Clone, Copy)]
@@ -111,6 +112,56 @@ impl InfluenceDataset {
         self.open = false;
     }
 
+    /// Serialize the dataset exactly (f32 values byte for byte, episode
+    /// structure included) — the distributed runtime ships the shared
+    /// Algorithm-1 dataset to worker processes through this.
+    pub fn write_state(&self, w: &mut StateWriter) {
+        w.usize(self.dset_dim);
+        w.usize(self.u_dim);
+        w.f32s(&self.dsets);
+        w.f32s(&self.us);
+        w.usize(self.episodes.len());
+        for ep in &self.episodes {
+            w.usize(ep.start);
+            w.usize(ep.steps);
+        }
+    }
+
+    /// Inverse of [`InfluenceDataset::write_state`]. The episode index is
+    /// re-validated against the step storage, so a corrupted-but-CRC-valid
+    /// payload still cannot produce out-of-bounds row reads.
+    pub fn read_state(r: &mut StateReader<'_>) -> Result<InfluenceDataset> {
+        let dset_dim = r.usize()?;
+        let u_dim = r.usize()?;
+        let dsets = r.f32s()?;
+        let us = r.f32s()?;
+        let n_eps = r.usize()?;
+        let steps = if dset_dim > 0 { dsets.len() / dset_dim } else { 0 };
+        anyhow::ensure!(
+            dsets.len() == steps * dset_dim && us.len() == steps * u_dim,
+            "dataset storage is ragged: {} d-floats / {} u-floats for dims {dset_dim}/{u_dim}",
+            dsets.len(),
+            us.len()
+        );
+        let mut episodes = Vec::with_capacity(n_eps.min(steps + 1));
+        let mut expect_start = 0usize;
+        for i in 0..n_eps {
+            let start = r.usize()?;
+            let ep_steps = r.usize()?;
+            anyhow::ensure!(
+                start == expect_start && start + ep_steps <= steps,
+                "episode {i} spans [{start}, {start}+{ep_steps}) of {steps} steps"
+            );
+            expect_start = start + ep_steps;
+            episodes.push(Episode { start, steps: ep_steps });
+        }
+        anyhow::ensure!(
+            expect_start == steps,
+            "episodes cover {expect_start} of {steps} stored steps"
+        );
+        Ok(InfluenceDataset { dset_dim, u_dim, dsets, us, episodes, open: false })
+    }
+
     /// Split episodes into (train, heldout) with the given train fraction.
     pub fn split(&self, train_frac: f64, rng: &mut Pcg32) -> (InfluenceDataset, InfluenceDataset) {
         let mut idx: Vec<usize> = (0..self.episodes.len()).collect();
@@ -169,6 +220,37 @@ mod tests {
         assert_eq!(tr.episodes.len(), 3);
         assert_eq!(he.episodes.len(), 1);
         assert_eq!(tr.total_steps() + he.total_steps(), 40);
+    }
+
+    #[test]
+    fn state_roundtrip_is_exact() {
+        let d = sample();
+        let mut w = StateWriter::new();
+        d.write_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        let back = InfluenceDataset::read_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(back.dset_dim, d.dset_dim);
+        assert_eq!(back.u_dim, d.u_dim);
+        assert_eq!(back.dsets, d.dsets);
+        assert_eq!(back.us, d.us);
+        assert_eq!(back.episodes.len(), d.episodes.len());
+        for (a, b) in back.episodes.iter().zip(&d.episodes) {
+            assert_eq!((a.start, a.steps), (b.start, b.steps));
+        }
+        // A payload whose episode index lies about the storage is rejected
+        // even though it deserializes cleanly.
+        let mut w = StateWriter::new();
+        w.usize(2);
+        w.usize(1);
+        w.f32s(&[0.0; 4]); // 2 steps of d
+        w.f32s(&[0.0; 2]); // 2 steps of u
+        w.usize(1);
+        w.usize(0);
+        w.usize(5); // episode claims 5 steps, storage has 2
+        let bytes = w.into_bytes();
+        assert!(InfluenceDataset::read_state(&mut StateReader::new(&bytes)).is_err());
     }
 
     #[test]

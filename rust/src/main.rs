@@ -6,7 +6,8 @@ use ials::cli::{Args, USAGE};
 use ials::collect::{collect_dataset, FeatureKind};
 use ials::config::{DomainKind, ExperimentConfig};
 use ials::coordinator::{
-    run_condition, run_figure, run_multi_condition_resumable, FIGURES,
+    run_condition, run_distributed, run_figure, run_multi_condition_resumable, run_worker,
+    DistributedOptions, FIGURES, WorkerArgs,
 };
 use ials::testkit::fault::abort_after_from_env;
 use ials::metrics::write_curve;
@@ -73,6 +74,44 @@ fn run(argv: &[String]) -> Result<()> {
                 cfg.checkpoint_dir = dir.to_string();
             }
             let resume = args.get_bool("resume");
+            if args.get("distributed").is_some() {
+                // Cross-process runtime: the coordinator never builds an
+                // engine runtime itself — workers do — so this path stays
+                // before the Runtime construction below.
+                anyhow::ensure!(
+                    !resume,
+                    "--resume is meaningless with --distributed: workers always auto-resume \
+                     from their shard's newest valid checkpoint"
+                );
+                cfg.distributed.workers = args.get_usize("distributed", cfg.distributed.workers)?;
+                cfg.validate()?;
+                let workers = cfg.distributed.workers;
+                let out = run_distributed(&cfg, seed, workers, &DistributedOptions::default())?;
+                let single = out.learners.len() == 1;
+                for (l, lr) in out.learners.iter().enumerate() {
+                    let Some(lr) = lr else { continue };
+                    let r = &lr.result;
+                    let path = if single {
+                        format!("{}/{}_seed{}.csv", cfg.results_dir, r.condition, seed)
+                    } else {
+                        format!("{}/{}_seed{}_learner{}.csv", cfg.results_dir, r.condition, seed, l)
+                    };
+                    write_curve(&path, &r.curve)?;
+                    println!(
+                        "learner {l} (seed {seed}): prep {:.2}s train {:.2}s aip_ce {:.4} \
+                         final {:.4} -> {}",
+                        r.prep_secs, r.train_secs, r.aip_ce, r.final_eval, path
+                    );
+                }
+                print!("{}", out.report());
+                anyhow::ensure!(
+                    out.all_ok(),
+                    "distributed run degraded: {} of {} shard(s) failed",
+                    out.shards.iter().filter(|s| !s.ok).count(),
+                    out.shards.len()
+                );
+                return Ok(());
+            }
             let rt = Rc::new(Runtime::from_config(&cfg)?);
             if cfg.num_learners > 1 || resume || cfg.checkpoint_every > 0 {
                 // Resumable driver: K curves (one per learner), periodic
@@ -105,6 +144,23 @@ fn run(argv: &[String]) -> Result<()> {
                     r.condition, seed, r.prep_secs, r.train_secs, r.aip_ce, r.final_eval, out
                 );
             }
+        }
+        "worker" => {
+            // Internal: one learner shard of a `train --distributed` run.
+            // Spawned (and restarted) by the coordinator; not meant to be
+            // invoked by hand.
+            let cfg = load_config(&args)?;
+            if args.get("config").is_none() {
+                anyhow::bail!("worker requires --config");
+            }
+            let wa = WorkerArgs {
+                dist_dir: args.require("dist-dir")?.into(),
+                index: args.require_usize("index")?,
+                first_learner: args.require_usize("first-learner")?,
+                count: args.require_usize("count")?,
+                seed: args.require_u64("seed")?,
+            };
+            run_worker(&cfg, &wa)?;
         }
         "collect" => {
             let domain = DomainKind::parse(args.require("domain")?)?;

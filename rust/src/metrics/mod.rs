@@ -3,6 +3,7 @@
 
 use crate::rl::PpoStats;
 use crate::util::csv::CsvWriter;
+use crate::util::{StateReader, StateWriter};
 use crate::Result;
 use std::path::Path;
 
@@ -38,6 +39,51 @@ impl ConditionResult {
     pub fn total_secs(&self) -> f64 {
         self.prep_secs + self.train_secs
     }
+}
+
+/// Serialize a learning curve exactly (every float byte for byte) — the
+/// one binary curve format, shared by training checkpoints
+/// (`coordinator::trainer`) and distributed shard results
+/// (`coordinator::distributed`).
+pub fn write_curve_state(curve: &[CurvePoint], w: &mut StateWriter) {
+    w.usize(curve.len());
+    for p in curve {
+        w.f64(p.wall_clock_s);
+        w.usize(p.env_steps);
+        w.f64(p.eval_mean);
+        w.f64(p.eval_std);
+        w.f32(p.stats.total_loss);
+        w.f32(p.stats.pg_loss);
+        w.f32(p.stats.v_loss);
+        w.f32(p.stats.entropy);
+        w.f32(p.stats.approx_kl);
+        w.f32(p.stats.rollout_reward);
+        w.usize(p.stats.episodes);
+    }
+}
+
+/// Inverse of [`write_curve_state`].
+pub fn read_curve_state(r: &mut StateReader<'_>) -> Result<Vec<CurvePoint>> {
+    let n = r.usize()?;
+    let mut curve = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        curve.push(CurvePoint {
+            wall_clock_s: r.f64()?,
+            env_steps: r.usize()?,
+            eval_mean: r.f64()?,
+            eval_std: r.f64()?,
+            stats: PpoStats {
+                total_loss: r.f32()?,
+                pg_loss: r.f32()?,
+                v_loss: r.f32()?,
+                entropy: r.f32()?,
+                approx_kl: r.f32()?,
+                rollout_reward: r.f32()?,
+                episodes: r.usize()?,
+            },
+        });
+    }
+    Ok(curve)
 }
 
 /// Write a curve CSV: one row per evaluation point.

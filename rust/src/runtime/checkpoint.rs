@@ -22,15 +22,13 @@
 //! skips — so a torn or bit-flipped newest checkpoint falls back to the
 //! previous good one instead of aborting the resume.
 
-use crate::util::state::{atomic_write, crc32};
+use crate::util::state::{read_headered, write_headered};
 use crate::{log_info, log_warn};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 const CKPT_MAGIC: &[u8; 8] = b"IALSCKPT";
 const CKPT_VERSION: u32 = 1;
-/// magic + version + payload_len + crc32.
-const CKPT_HEADER_LEN: usize = 8 + 4 + 8 + 4;
 
 /// Manages the checkpoint files of one run directory: atomic saves, a
 /// bounded retention window, and validated newest-first loads.
@@ -84,14 +82,8 @@ impl CheckpointManager {
     /// Write `payload` as the checkpoint for `iter` (temp file + fsync +
     /// atomic rename), then prune files beyond the retention window.
     pub fn save(&self, iter: usize, payload: &[u8]) -> Result<()> {
-        let mut bytes = Vec::with_capacity(CKPT_HEADER_LEN + payload.len());
-        bytes.extend_from_slice(CKPT_MAGIC);
-        bytes.extend_from_slice(&CKPT_VERSION.to_le_bytes());
-        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        bytes.extend_from_slice(&crc32(payload).to_le_bytes());
-        bytes.extend_from_slice(payload);
         let path = self.dir.join(Self::file_name(iter));
-        atomic_write(&path, &bytes)
+        write_headered(&path, CKPT_MAGIC, CKPT_VERSION, payload)
             .with_context(|| format!("writing checkpoint {}", path.display()))?;
         let files = self.list();
         if files.len() > self.retain {
@@ -104,35 +96,10 @@ impl CheckpointManager {
         Ok(())
     }
 
-    /// Validate one checkpoint file and return its payload.
+    /// Validate one checkpoint file and return its payload
+    /// (`util::state::read_headered` with the checkpoint magic).
     fn read_validated(path: &Path) -> Result<Vec<u8>> {
-        let bytes =
-            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-        anyhow::ensure!(!bytes.is_empty(), "empty file");
-        anyhow::ensure!(
-            bytes.len() >= CKPT_HEADER_LEN,
-            "{} bytes — shorter than the {CKPT_HEADER_LEN}-byte header (truncated)",
-            bytes.len()
-        );
-        anyhow::ensure!(&bytes[..8] == CKPT_MAGIC, "bad magic (not a checkpoint file)");
-        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        anyhow::ensure!(
-            version == CKPT_VERSION,
-            "format version {version}, this build reads {CKPT_VERSION}"
-        );
-        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
-        let stored_crc = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
-        let payload = &bytes[CKPT_HEADER_LEN..];
-        anyhow::ensure!(
-            payload.len() == payload_len,
-            "header says {payload_len} payload bytes, file has {} (truncated)",
-            payload.len()
-        );
-        anyhow::ensure!(
-            crc32(payload) == stored_crc,
-            "CRC mismatch — corrupt (bit flip or torn write)"
-        );
-        Ok(payload.to_vec())
+        read_headered(path, CKPT_MAGIC, CKPT_VERSION)
     }
 
     /// The newest *valid* checkpoint, as `(iter, payload)`. Invalid files
@@ -190,6 +157,62 @@ mod tests {
         }
         let names: Vec<usize> = mgr.list().into_iter().map(|(i, _)| i).collect();
         assert_eq!(names, vec![3, 4]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn retention_window_is_configurable() {
+        // retain = 1: only the newest file survives each save.
+        let dir = tmp_dir("retain1");
+        let mgr = CheckpointManager::new(&dir, 1);
+        for iter in [1, 2, 3] {
+            mgr.save(iter, &[iter as u8]).unwrap();
+            let names: Vec<usize> = mgr.list().into_iter().map(|(i, _)| i).collect();
+            assert_eq!(names, vec![iter]);
+        }
+        std::fs::remove_dir_all(dir).ok();
+        // retain = 5: nothing is pruned until the sixth save.
+        let dir = tmp_dir("retain5");
+        let mgr = CheckpointManager::new(&dir, 5);
+        for iter in 1..=7 {
+            mgr.save(iter, &[iter as u8]).unwrap();
+        }
+        let names: Vec<usize> = mgr.list().into_iter().map(|(i, _)| i).collect();
+        assert_eq!(names, vec![3, 4, 5, 6, 7]);
+        // retain = 0 would delete the file just written; clamped to 1.
+        let dir0 = tmp_dir("retain0");
+        let mgr = CheckpointManager::new(&dir0, 0);
+        mgr.save(1, b"x").unwrap();
+        assert_eq!(mgr.load_latest().unwrap().0, 1);
+        std::fs::remove_dir_all(dir).ok();
+        std::fs::remove_dir_all(dir0).ok();
+    }
+
+    #[test]
+    fn skipped_file_warns_exactly_once() {
+        use crate::util::logger;
+        let dir = tmp_dir("warn_once");
+        let mgr = CheckpointManager::new(&dir, 3);
+        mgr.save(1, b"good").unwrap();
+        mgr.save(2, b"bad-to-be").unwrap();
+        mgr.save(3, b"also-bad").unwrap();
+        let n = |i| dir.join(CheckpointManager::file_name(i));
+        crate::testkit::fault::flip_bit(n(2), 30, 0).unwrap();
+        crate::testkit::fault::truncate_file(n(3), 10).unwrap();
+        let _guard = logger::capture_test_guard();
+        logger::capture_for_test();
+        let (iter, payload) = mgr.load_latest().unwrap();
+        let captured = logger::drain_captured();
+        assert_eq!((iter, payload.as_slice()), (1, b"good".as_slice()));
+        // One warning per skipped file — not zero (silent fallback), not
+        // repeated. Filter by this test's own paths: the sink is global and
+        // other tests may log concurrently.
+        for i in [2usize, 3] {
+            let name = CheckpointManager::file_name(i);
+            let mine: Vec<&String> = captured.iter().filter(|l| l.contains(&name)).collect();
+            assert_eq!(mine.len(), 1, "want exactly one warning for {name}: {captured:?}");
+            assert!(mine[0].starts_with("[WARN ]"), "{}", mine[0]);
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -5,7 +5,7 @@
 //! checkpoint and param-store robustness tests.
 
 use anyhow::{Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// Environment variable the abort hook reads: `IALS_ABORT_AT_ITER=M`
 /// makes a resumable training run fail right after iteration `M` (and
@@ -28,6 +28,105 @@ pub fn abort_after_from_env() -> Result<Option<usize>> {
             Ok(Some(m))
         }
     }
+}
+
+/// Environment variable the distributed worker's kill hook reads:
+/// `IALS_WORKER_KILL=<worker>:<iter>[:every]` makes worker `<worker>` abort
+/// the process (no cleanup, no result file) right after training iteration
+/// `<iter>`. Without `:every` the fault fires once per worker directory
+/// ([`fire_once`]), so the supervisor's restarted incarnation survives; with
+/// `:every` each incarnation dies again — the way CI and `tests/distributed`
+/// exhaust `max_restarts`.
+pub const KILL_ENV: &str = "IALS_WORKER_KILL";
+
+/// Like [`KILL_ENV`] but the worker hangs (sleeps forever, heartbeat
+/// frozen) instead of dying — exercises the supervisor's hung-worker
+/// detection path, which only a stalled-but-alive process can.
+pub const HANG_ENV: &str = "IALS_WORKER_HANG";
+
+/// What a matched [`KILL_ENV`] / [`HANG_ENV`] spec tells a worker to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerFaultKind {
+    /// `std::process::abort()` — simulates a crash (OOM-kill, segfault).
+    Kill,
+    /// Sleep forever — simulates a livelock or stuck I/O.
+    Hang,
+}
+
+/// A parsed worker fault: fire `kind` right after iteration `iter`, either
+/// once per worker directory or on every incarnation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerFault {
+    pub kind: WorkerFaultKind,
+    pub iter: usize,
+    pub every_restart: bool,
+}
+
+fn parse_worker_fault(env: &str, spec: &str, worker: usize) -> Result<Option<(usize, bool)>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let (w, i, every) = match parts.as_slice() {
+        [w, i] => (w, i, false),
+        [w, i, "every"] => (w, i, true),
+        _ => anyhow::bail!("invalid {env}='{spec}': want <worker>:<iter>[:every]"),
+    };
+    let w: usize = w.parse().with_context(|| format!("invalid {env}='{spec}': bad worker"))?;
+    let i: usize = i.parse().with_context(|| format!("invalid {env}='{spec}': bad iteration"))?;
+    Ok(if w == worker { Some((i, every)) } else { None })
+}
+
+/// The injected fault for distributed worker `worker`, from [`KILL_ENV`] /
+/// [`HANG_ENV`] (kill wins when both name the same worker). Unset or empty
+/// means no fault; a malformed spec errors rather than silently running
+/// clean.
+pub fn worker_fault_from_env(worker: usize) -> Result<Option<WorkerFault>> {
+    for (env, kind) in [(KILL_ENV, WorkerFaultKind::Kill), (HANG_ENV, WorkerFaultKind::Hang)] {
+        match std::env::var(env) {
+            Err(_) => {}
+            Ok(v) if v.is_empty() => {}
+            Ok(v) => {
+                if let Some((iter, every_restart)) = parse_worker_fault(env, &v, worker)? {
+                    return Ok(Some(WorkerFault { kind, iter, every_restart }));
+                }
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// First-incarnation latch for injected faults: returns `true` exactly once
+/// per `marker` path (the create beats any later attempt), so a restarted
+/// worker reruns the same code without re-dying. The marker lives in the
+/// worker's directory, which survives the restart.
+pub fn fire_once(marker: impl AsRef<Path>) -> bool {
+    std::fs::OpenOptions::new().write(true).create_new(true).open(marker.as_ref()).is_ok()
+}
+
+/// A crash in the middle of `util::state::atomic_write`: performs the same
+/// steps up to the crash point — temp file `.{name}.tmp` in the target
+/// directory, only the first `written` bytes of `bytes` flushed — and then
+/// "dies" before the atomic rename. The destination at `path` is never
+/// touched. Returns the temp path so tests can assert on (and clean up) the
+/// debris a real crash would leave.
+pub fn partial_atomic_write(
+    path: impl AsRef<Path>,
+    bytes: &[u8],
+    written: usize,
+) -> Result<PathBuf> {
+    let path = path.as_ref();
+    if let Some(d) = path.parent() {
+        if !d.as_os_str().is_empty() {
+            std::fs::create_dir_all(d)
+                .with_context(|| format!("creating directory {}", d.display()))?;
+        }
+    }
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("partial_atomic_write: bad path {}", path.display()))?;
+    let tmp = path.with_file_name(format!(".{file_name}.tmp"));
+    let keep = written.min(bytes.len());
+    std::fs::write(&tmp, &bytes[..keep]).with_context(|| format!("writing {}", tmp.display()))?;
+    Ok(tmp)
 }
 
 /// Truncate `path` to `len` bytes (a torn write / partial copy).
@@ -68,6 +167,37 @@ mod tests {
         let dir = std::env::temp_dir().join("ials_fault_test");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(tag)
+    }
+
+    #[test]
+    fn worker_fault_spec_parses_and_filters_by_worker() {
+        assert_eq!(parse_worker_fault("E", "1:2", 1).unwrap(), Some((2, false)));
+        assert_eq!(parse_worker_fault("E", "1:2", 0).unwrap(), None, "other worker untouched");
+        assert_eq!(parse_worker_fault("E", "0:3:every", 0).unwrap(), Some((3, true)));
+        assert!(parse_worker_fault("E", "1", 1).is_err());
+        assert!(parse_worker_fault("E", "1:2:always", 1).is_err());
+        assert!(parse_worker_fault("E", "one:2", 1).is_err());
+        assert!(parse_worker_fault("E", "1:2:every:x", 1).is_err());
+    }
+
+    #[test]
+    fn fire_once_latches_on_first_call() {
+        let marker = tmp("fire_once.marker");
+        std::fs::remove_file(&marker).ok();
+        assert!(fire_once(&marker), "first call wins");
+        assert!(!fire_once(&marker), "second call sees the latch");
+        assert!(!fire_once(&marker));
+        std::fs::remove_file(&marker).ok();
+    }
+
+    #[test]
+    fn partial_write_leaves_destination_untouched() {
+        let dest = tmp("partial_dest.bin");
+        std::fs::remove_file(&dest).ok();
+        let tmp_path = partial_atomic_write(&dest, b"abcdef", 3).unwrap();
+        assert!(!dest.exists(), "crash before rename must not create the destination");
+        assert_eq!(std::fs::read(&tmp_path).unwrap(), b"abc", "temp holds the torn prefix");
+        std::fs::remove_file(tmp_path).ok();
     }
 
     #[test]

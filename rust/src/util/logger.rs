@@ -4,6 +4,7 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -40,6 +41,39 @@ pub fn enabled(lvl: Level) -> bool {
     lvl as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
+/// Test-only capture sink: while some test holds it open, every emitted
+/// line is *also* appended here (emission to stderr is unchanged). Global
+/// rather than thread-local because the code under test may log from pool
+/// threads; tests filter captured lines by their own paths/tags, so
+/// concurrent tests don't confuse each other.
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+/// Serializes tests that use the capture sink — it is process-global, so
+/// two tests capturing at once would drain each other's lines. Lock via
+/// [`capture_test_guard`] for the whole capture..drain span.
+static CAPTURE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the capture-sink test lock (poison-tolerant: a previous test's
+/// panic must not cascade).
+pub fn capture_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    CAPTURE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Start capturing log lines (see [`drain_captured`]). Idempotent: a second
+/// call while a capture is active keeps the already-captured lines.
+pub fn capture_for_test() {
+    let mut sink = CAPTURE.lock().unwrap();
+    if sink.is_none() {
+        *sink = Some(Vec::new());
+    }
+}
+
+/// Stop capturing and return every line logged since [`capture_for_test`],
+/// formatted as `[TAG ] message`.
+pub fn drain_captured() -> Vec<String> {
+    CAPTURE.lock().unwrap().take().unwrap_or_default()
+}
+
 pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(lvl) {
         return;
@@ -51,9 +85,13 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
         Level::Debug => "DEBUG",
         Level::Trace => "TRACE",
     };
+    let line = format!("[{tag}] {args}");
+    if let Some(sink) = CAPTURE.lock().unwrap().as_mut() {
+        sink.push(line.clone());
+    }
     let stderr = std::io::stderr();
     let mut h = stderr.lock();
-    let _ = writeln!(h, "[{tag}] {args}");
+    let _ = writeln!(h, "{line}");
 }
 
 #[macro_export]
@@ -97,5 +135,20 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn capture_sees_emitted_lines() {
+        let _guard = capture_test_guard();
+        capture_for_test();
+        crate::log_warn!("capture-test sentinel {}", 42);
+        let mine: Vec<String> = drain_captured()
+            .into_iter()
+            .filter(|l| l.contains("capture-test sentinel"))
+            .collect();
+        assert_eq!(mine, vec!["[WARN ] capture-test sentinel 42"]);
+        // Draining closes the sink; later lines are not captured.
+        crate::log_warn!("capture-test sentinel after drain");
+        assert!(drain_captured().is_empty());
     }
 }

@@ -274,6 +274,73 @@ pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Size of the self-validating blob header written by [`headered_bytes`]:
+/// magic (8) + format version (LE u32) + payload length (LE u64) + payload
+/// CRC-32 (LE u32). Shared by every durable artifact of the crate
+/// (checkpoints, the distributed runtime's AIP dataset and shard results).
+pub const HEADER_LEN: usize = 8 + 4 + 8 + 4;
+
+/// Frame `payload` behind the standard self-validating header.
+pub fn headered_bytes(magic: &[u8; 8], version: u32, payload: &[u8]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(HEADER_LEN + payload.len());
+    bytes.extend_from_slice(magic);
+    bytes.extend_from_slice(&version.to_le_bytes());
+    bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(&crc32(payload).to_le_bytes());
+    bytes.extend_from_slice(payload);
+    bytes
+}
+
+/// Validate a [`headered_bytes`] frame and return its payload slice. Errors
+/// name the failure (truncation, foreign magic, version skew, CRC mismatch)
+/// so callers can log *why* a file was rejected before falling back.
+pub fn parse_headered<'a>(magic: &[u8; 8], version: u32, bytes: &'a [u8]) -> Result<&'a [u8]> {
+    anyhow::ensure!(!bytes.is_empty(), "empty file");
+    anyhow::ensure!(
+        bytes.len() >= HEADER_LEN,
+        "{} bytes — shorter than the {HEADER_LEN}-byte header (truncated)",
+        bytes.len()
+    );
+    anyhow::ensure!(&bytes[..8] == magic, "bad magic (not a {} file)", magic.escape_ascii());
+    let stored_version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    anyhow::ensure!(
+        stored_version == version,
+        "format version {stored_version}, this build reads {version}"
+    );
+    let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+    let stored_crc = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    anyhow::ensure!(
+        payload.len() == payload_len,
+        "header says {payload_len} payload bytes, file has {} (truncated)",
+        payload.len()
+    );
+    anyhow::ensure!(
+        crc32(payload) == stored_crc,
+        "CRC mismatch — corrupt (bit flip or torn write)"
+    );
+    Ok(payload)
+}
+
+/// [`atomic_write`] of a [`headered_bytes`] frame.
+pub fn write_headered(
+    path: impl AsRef<Path>,
+    magic: &[u8; 8],
+    version: u32,
+    payload: &[u8],
+) -> Result<()> {
+    atomic_write(path, &headered_bytes(magic, version, payload))
+}
+
+/// Read and validate a [`write_headered`] file, returning its payload.
+pub fn read_headered(path: impl AsRef<Path>, magic: &[u8; 8], version: u32) -> Result<Vec<u8>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let payload = parse_headered(magic, version, &bytes)
+        .with_context(|| format!("validating {}", path.display()))?;
+    Ok(payload.to_vec())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +426,66 @@ mod tests {
         atomic_write(&path, b"second").unwrap();
         assert_eq!(std::fs::read(&path).unwrap(), b"second");
         assert!(!dir.join(".blob.bin.tmp").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn crash_mid_write_never_tears_the_destination() {
+        use crate::testkit::fault::partial_atomic_write;
+        let dir = std::env::temp_dir().join("ials_state_torn_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("blob.bin");
+        atomic_write(&path, b"committed").unwrap();
+        // Die partway through writing a replacement: the temp file holds a
+        // truncated prefix and the rename never happens — the committed
+        // contents must be byte-for-byte intact, not torn.
+        let tmp = partial_atomic_write(&path, b"replacement-that-died", 7).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"committed");
+        // Recovery after the "crash": the next full atomic_write reclaims
+        // the stale temp name and lands atomically.
+        atomic_write(&path, b"recovered").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"recovered");
+        assert!(!tmp.exists(), "recovery consumed the stale temp file");
+        // Same holds when the destination never existed: a torn first write
+        // leaves no destination at all (absent, not half-written).
+        let fresh = dir.join("fresh.bin");
+        partial_atomic_write(&fresh, b"never-landed", 4).unwrap();
+        assert!(!fresh.exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn headered_blob_roundtrip_and_rejection() {
+        const MAGIC: &[u8; 8] = b"IALSTEST";
+        let framed = headered_bytes(MAGIC, 3, b"payload");
+        assert_eq!(framed.len(), HEADER_LEN + 7);
+        assert_eq!(parse_headered(MAGIC, 3, &framed).unwrap(), b"payload");
+        let msg = |r: Result<&[u8]>| r.unwrap_err().to_string();
+        assert!(msg(parse_headered(b"IALSELSE", 3, &framed)).contains("magic"));
+        assert!(msg(parse_headered(MAGIC, 4, &framed)).contains("version"));
+        let mut flipped = framed.clone();
+        let n = flipped.len();
+        flipped[n - 1] ^= 1;
+        assert!(msg(parse_headered(MAGIC, 3, &flipped)).contains("CRC"));
+        assert!(msg(parse_headered(MAGIC, 3, &framed[..n - 2])).contains("truncated"));
+        assert!(msg(parse_headered(MAGIC, 3, &framed[..10])).contains("truncated"));
+        assert!(parse_headered(MAGIC, 3, &[]).is_err());
+        // The empty payload is legal (all validation is in the header).
+        let empty = headered_bytes(MAGIC, 3, &[]);
+        assert_eq!(parse_headered(MAGIC, 3, &empty).unwrap(), b"");
+    }
+
+    #[test]
+    fn write_read_headered_roundtrip() {
+        const MAGIC: &[u8; 8] = b"IALSTEST";
+        let dir = std::env::temp_dir().join("ials_state_headered_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("blob.bin");
+        write_headered(&path, MAGIC, 1, b"data").unwrap();
+        assert_eq!(read_headered(&path, MAGIC, 1).unwrap(), b"data");
+        // The error context names the offending file.
+        let err = read_headered(&path, MAGIC, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("blob.bin"), "{err:#}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -1,0 +1,291 @@
+//! Acceptance tests for the fault-tolerant cross-process runtime
+//! (`coordinator::distributed`):
+//!
+//! 1. A clean `--distributed N` run reproduces the in-process
+//!    `num_learners = K` run **bitwise** — curves, AIP cross-entropy and
+//!    final policy parameters — at the same seed.
+//! 2. So does a run whose worker is killed mid-training (fault-injection
+//!    hook): the supervisor restarts it, the worker resumes from its
+//!    newest checkpoint, and no bit changes.
+//! 3. A hung worker (alive, heartbeat frozen) is detected via the
+//!    progress-based heartbeat timeout, killed and restarted — same
+//!    bitwise outcome.
+//! 4. A worker that crashes on every incarnation exhausts `max_restarts`:
+//!    its shard is reported failed, the *other* shards still finish (and
+//!    still match the reference bitwise), and the binary exits nonzero
+//!    with the per-shard report.
+//!
+//! Wall-clock fields (`wall_clock_s`, `prep_secs`, `train_secs`) measure
+//! real time and are excluded, as in every determinism test of the repo.
+
+use ials::config::{BackendKind, DomainKind, ExperimentConfig, SimulatorKind};
+use ials::coordinator::{
+    run_distributed, run_multi_condition_resumable, DistributedOptions, MultiLearnerOutcome,
+};
+use ials::metrics::CurvePoint;
+use ials::nn::ParamStore;
+use ials::runtime::Runtime;
+use ials::testkit::fault::{HANG_ENV, KILL_ENV};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Per-learner env steps in one PPO iteration of [`test_cfg`] runs.
+const PER_ITER: usize = 8 * 16;
+
+/// Small fig3-style traffic IALS config (the `checkpoint_resume.rs`
+/// shape): 8 envs × 16 rollout, 3 PPO iterations, native backend, fast
+/// restart backoff.
+fn test_cfg(num_learners: usize, ckpt_dir: &Path) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "dist".into();
+    cfg.domain = DomainKind::Traffic;
+    cfg.simulator = SimulatorKind::Ials;
+    cfg.num_learners = num_learners;
+    cfg.seeds = vec![7];
+    cfg.eval_every = 4096;
+    cfg.eval_episodes = 1;
+    cfg.ppo.num_envs = 8;
+    cfg.ppo.rollout_len = 16;
+    cfg.ppo.epochs = 2;
+    cfg.ppo.minibatch = 32;
+    cfg.ppo.total_steps = 3 * PER_ITER;
+    cfg.aip.dataset_size = 1200;
+    cfg.aip.eval_size = 800;
+    cfg.aip.train_epochs = 1;
+    cfg.aip.batch = 64;
+    cfg.runtime.backend = BackendKind::Native;
+    cfg.checkpoint_every = PER_ITER;
+    cfg.checkpoint_dir = ckpt_dir.to_str().unwrap().to_string();
+    cfg.distributed.backoff_ms = 50;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Fresh per-test root under the system temp dir.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ials_distributed_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Coordinator options pointing at the real `repro` binary, with fault
+/// env vars scoped to the spawned workers only (never this test process).
+fn opts(env: &[(&str, &str)]) -> DistributedOptions {
+    DistributedOptions {
+        worker_exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        worker_env: env.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+    }
+}
+
+/// The bit-comparable content of a learning curve (wall-clock excluded).
+#[allow(clippy::type_complexity)]
+fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
+    curve
+        .iter()
+        .map(|p| {
+            (
+                p.env_steps,
+                p.eval_mean.to_bits(),
+                p.eval_std.to_bits(),
+                [
+                    p.stats.total_loss.to_bits(),
+                    p.stats.pg_loss.to_bits(),
+                    p.stats.v_loss.to_bits(),
+                    p.stats.entropy.to_bits(),
+                    p.stats.approx_kl.to_bits(),
+                    p.stats.rollout_reward.to_bits(),
+                ],
+                p.stats.episodes,
+            )
+        })
+        .collect()
+}
+
+/// Named parameter tensors as bits, for exact comparison.
+fn param_bits(pairs: &[(String, Vec<f32>)]) -> Vec<(String, Vec<u32>)> {
+    pairs
+        .iter()
+        .map(|(n, v)| (n.clone(), v.iter().map(|x| x.to_bits()).collect()))
+        .collect()
+}
+
+fn store_pairs(store: &ParamStore) -> Vec<(String, Vec<f32>)> {
+    store.names().iter().map(|n| (n.clone(), store.get(n).unwrap().to_vec())).collect()
+}
+
+/// The uninterrupted in-process reference run for `k` learners.
+fn reference(k: usize, tag: &str, seed: u64) -> MultiLearnerOutcome {
+    let dir = tmp_dir(tag);
+    let cfg = test_cfg(k, &dir);
+    let rt = Rc::new(Runtime::from_config(&cfg).unwrap());
+    let out = run_multi_condition_resumable(&rt, &cfg, seed, false, None).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    out
+}
+
+/// Assert learner `l` of the distributed outcome matches the reference
+/// learner bitwise (curve, AIP cross-entropy, final policy parameters).
+fn assert_learner_matches(
+    out: &ials::coordinator::DistributedOutcome,
+    reference: &MultiLearnerOutcome,
+    l: usize,
+    what: &str,
+) {
+    let lr = out.learners[l].as_ref().unwrap_or_else(|| panic!("{what}: learner {l} missing"));
+    assert_eq!(
+        curve_bits(&lr.result.curve),
+        curve_bits(&reference.results[l].curve),
+        "{what}: learner {l} curve diverged"
+    );
+    assert_eq!(
+        lr.result.aip_ce.to_bits(),
+        reference.results[l].aip_ce.to_bits(),
+        "{what}: learner {l} AIP cross-entropy diverged"
+    );
+    assert_eq!(
+        param_bits(&lr.policy_params),
+        param_bits(&store_pairs(&reference.policy_stores[l])),
+        "{what}: learner {l} final policy parameters diverged"
+    );
+}
+
+/// Clean 2-process run over 3 learners == in-process run, bit for bit.
+#[test]
+fn clean_distributed_run_matches_in_process_bitwise() {
+    let seed = 7u64;
+    let reference = reference(3, "clean_ref", seed);
+    let dir = tmp_dir("clean");
+    let cfg = test_cfg(3, &dir);
+    let out = run_distributed(&cfg, seed, 2, &opts(&[])).unwrap();
+    assert!(out.all_ok(), "clean run must not degrade:\n{}", out.report());
+    assert_eq!(out.shards.len(), 2);
+    assert!(out.shards.iter().all(|s| s.restarts == 0), "clean run must not restart");
+    for l in 0..3 {
+        assert_learner_matches(&out, &reference, l, "clean");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Worker 0 is killed (process abort) right after iteration 2 of 3; the
+/// supervisor restarts it, it resumes from its newest checkpoint, and the
+/// final bits still match the in-process run.
+#[test]
+fn killed_worker_restarts_from_checkpoint_and_matches_bitwise() {
+    let seed = 7u64;
+    let reference = reference(3, "kill_ref", seed);
+    let dir = tmp_dir("kill");
+    let cfg = test_cfg(3, &dir);
+    let out = run_distributed(&cfg, seed, 2, &opts(&[(KILL_ENV, "0:2")])).unwrap();
+    assert!(out.all_ok(), "restarted run must finish:\n{}", out.report());
+    assert_eq!(out.shards[0].restarts, 1, "worker 0 must have been restarted exactly once");
+    assert_eq!(out.shards[1].restarts, 0);
+    for l in 0..3 {
+        assert_learner_matches(&out, &reference, l, "kill+restart");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A hung worker (alive but frozen after iteration 1) trips the
+/// progress-based heartbeat timeout, is killed and restarted, and the run
+/// still matches the reference bitwise.
+#[test]
+fn hung_worker_is_detected_killed_and_restarted() {
+    let seed = 7u64;
+    let reference = reference(2, "hang_ref", seed);
+    let dir = tmp_dir("hang");
+    let mut cfg = test_cfg(2, &dir);
+    cfg.distributed.heartbeat_timeout_secs = 6.0;
+    let out = run_distributed(&cfg, seed, 2, &opts(&[(HANG_ENV, "1:1")])).unwrap();
+    assert!(out.all_ok(), "restarted run must finish:\n{}", out.report());
+    assert_eq!(out.shards[1].restarts, 1, "worker 1 must have been killed as hung and restarted");
+    for l in 0..2 {
+        assert_learner_matches(&out, &reference, l, "hang+restart");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Worker 0 crashes on *every* incarnation: after `max_restarts` the
+/// shard is marked failed, but worker 1's shard finishes, still matches
+/// the reference bitwise, and the report names the failure.
+#[test]
+fn exhausted_restarts_fail_the_shard_but_others_finish() {
+    let seed = 7u64;
+    let reference = reference(3, "exhaust_ref", seed);
+    let dir = tmp_dir("exhaust");
+    let mut cfg = test_cfg(3, &dir);
+    cfg.distributed.max_restarts = 1;
+    let out = run_distributed(&cfg, seed, 2, &opts(&[(KILL_ENV, "0:1:every")])).unwrap();
+    assert!(!out.all_ok(), "shard 0 must be reported failed:\n{}", out.report());
+    assert!(!out.shards[0].ok);
+    assert_eq!(out.shards[0].restarts, 1, "the restart budget must be spent before failing");
+    assert!(
+        out.shards[0].error.as_deref().unwrap_or("").contains("exited abnormally"),
+        "failure reason must name the crash: {:?}",
+        out.shards[0].error
+    );
+    // shard_ranges(3, 2) = [(0, 2), (2, 3)]: learners 0 and 1 are lost,
+    // learner 2 (worker 1) finishes and matches.
+    assert!(out.learners[0].is_none() && out.learners[1].is_none());
+    assert!(out.shards[1].ok);
+    assert_learner_matches(&out, &reference, 2, "degraded");
+    let report = out.report();
+    assert!(report.contains("worker 0 (learners 0..2, 1 restart(s)): FAILED"), "{report}");
+    assert!(report.contains("worker 1 (learners 2..3, 0 restart(s)): ok"), "{report}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--resume` makes no sense with `--distributed` (workers always
+/// auto-resume); the binary rejects the combination up front.
+#[test]
+fn binary_rejects_resume_with_distributed() {
+    let dir = tmp_dir("cli_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = test_cfg(2, &dir);
+    let cfg_path = dir.join("cfg.toml");
+    std::fs::write(&cfg_path, cfg.to_toml_string()).unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["train", "--config", cfg_path.to_str().unwrap(), "--distributed", "2", "--resume"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--distributed --resume must be rejected");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--resume is meaningless with --distributed"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end degraded run through the binary: a crash-looping worker
+/// with a zero restart budget fails its shard, the surviving learner's
+/// curve CSV is still written, the per-shard report is printed, and the
+/// exit code is nonzero.
+#[test]
+fn binary_degraded_run_exits_nonzero_with_report() {
+    let seed = 7u64;
+    let dir = tmp_dir("cli_degraded");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = test_cfg(2, &dir);
+    cfg.distributed.max_restarts = 0;
+    cfg.results_dir = dir.join("results").to_str().unwrap().to_string();
+    cfg.validate().unwrap();
+    std::fs::create_dir_all(&cfg.results_dir).unwrap();
+    let cfg_path = dir.join("cfg.toml");
+    std::fs::write(&cfg_path, cfg.to_toml_string()).unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["train", "--config", cfg_path.to_str().unwrap(), "--distributed", "2"])
+        .arg("--seed")
+        .arg(seed.to_string())
+        // The coordinator's environment is inherited by its workers.
+        .env(KILL_ENV, "0:1:every")
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "degraded run must exit nonzero");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("shard report:"), "{stdout}");
+    assert!(stdout.contains("FAILED"), "{stdout}");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("distributed run degraded"), "{err}");
+    let csv = Path::new(&cfg.results_dir).join(format!("ials-dist_seed{seed}_learner1.csv"));
+    assert!(csv.is_file(), "surviving learner's curve CSV missing: {}", csv.display());
+    let csv0 = Path::new(&cfg.results_dir).join(format!("ials-dist_seed{seed}_learner0.csv"));
+    assert!(!csv0.exists(), "failed learner must not leave a curve CSV");
+    std::fs::remove_dir_all(&dir).ok();
+}
