@@ -142,7 +142,7 @@ def policy_update_artifact(model, mb):
         ("returns", "f32", (mb,)),
         ("old_logp", "f32", (mb,)),
     ]
-    outs = [("stats", "f32", (5,))]
+    outs = [("stats", "f32", (6,))]
     return fn, data_in, outs
 
 
@@ -177,7 +177,7 @@ def policy_update_fused_artifact(model, n, epochs, mb):
         ("returns", "f32", (n,)),
         ("old_logp", "f32", (n,)),
     ]
-    outs = [("stats", "f32", (5,))]
+    outs = [("stats", "f32", (6,))]
     return fn, data_in, outs
 
 

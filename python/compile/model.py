@@ -220,8 +220,9 @@ def ppo_update(params, m, v, t, lr, clip, vf_coef, ent_coef, max_gn,
     """Clipped-surrogate PPO minibatch update (Schulman et al. 2017).
 
     All of ``params/m/v`` are lists; scalars are shape-(1,); ``actions`` is
-    int32 [M]. Returns (new_params, new_m, new_v, new_t, stats[5]) where
-    stats = [total_loss, pg_loss, v_loss, entropy, approx_kl].
+    int32 [M]. Returns (new_params, new_m, new_v, new_t, stats[6]) where
+    stats = [total_loss, pg_loss, v_loss, entropy, approx_kl, grad_norm]
+    (grad_norm is the pre-clip global gradient norm).
     """
 
     def loss_fn(ps):
@@ -242,9 +243,12 @@ def ppo_update(params, m, v, t, lr, clip, vf_coef, ent_coef, max_gn,
     (total, (pg, vl, ent, kl)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
         list(params)
     )
-    grads, _gn = clip_global_norm(grads, max_gn[0])
+    grads, gn = clip_global_norm(grads, max_gn[0])
     new_params, new_m, new_v, new_t = adam_step(list(params), grads, list(m), list(v), t, lr)
-    stats = jnp.stack([total, pg, vl, ent, kl])
+    # Pre-clip global grad norm rides along as stats[5]: the Rust health
+    # guard's spike detector reads it (runtime/guard.rs), and both
+    # backends must agree on the stats ABI.
+    stats = jnp.stack([total, pg, vl, ent, kl, gn])
     return new_params, new_m, new_v, new_t, stats
 
 
@@ -259,7 +263,7 @@ def ppo_update_fused(params, m, v, t, lr, clip, vf_coef, ent_coef, max_gn,
     ``perm``: int32 [E, N] — per-epoch shuffled indices supplied by the
     Rust trainer (keeping all RNG on the Rust side). ``obs`` etc. are the
     full rollout batch [N, ...]. Scans over epochs and minibatch chunks.
-    Returns (new_params, new_m, new_v, new_t, stats[5]) with stats averaged
+    Returns (new_params, new_m, new_v, new_t, stats[6]) with stats averaged
     over all minibatch updates.
     """
     mb = minibatch or PPO_MINIBATCH
@@ -287,7 +291,7 @@ def ppo_update_fused(params, m, v, t, lr, clip, vf_coef, ent_coef, max_gn,
     carry = (tuple(params), tuple(m), tuple(v), t)
     carry, stats = jax.lax.scan(epoch_body, carry, perm)
     ps, ms, vs, ts = carry
-    mean_stats = jnp.mean(stats.reshape(-1, 5), axis=0)
+    mean_stats = jnp.mean(stats.reshape(-1, 6), axis=0)
     assert len(ps) == p_len
     return list(ps), list(ms), list(vs), ts, mean_stats
 

@@ -67,7 +67,10 @@ class TestPpoUpdate:
         params, m, v, t, hyp, data = self._setup()
         np_, nm, nv, nt, stats = M.ppo_update(params, m, v, t, *hyp, *data)
         assert nt[0] == 1.0
-        assert stats.shape == (5,)
+        assert stats.shape == (6,)
+        # stats[5] is the pre-clip global grad norm — finite and positive
+        # on a real update (the Rust health guard's spike-detector input).
+        assert float(stats[5]) > 0.0
         changed = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in zip(np_, params))
         assert changed > 0.0
         # Entropy of a near-uniform 3-way policy ~ ln 3.

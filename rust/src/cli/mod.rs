@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 /// Flags that take no value (`--resume` alone means `resume = true`).
 /// Everything else must be followed by a value; unknown bare flags still
 /// error out, so typos never parse as booleans.
-const BOOL_FLAGS: &[&str] = &["resume"];
+const BOOL_FLAGS: &[&str] = &["resume", "no-health"];
 
 /// Parsed command line: a subcommand plus `--key value` flags.
 #[derive(Debug, Clone, Default)]
@@ -93,7 +93,7 @@ USAGE:
   repro figure --name <fig3|fig5|fig6|fig8|fig10|fig11|fig12> [--config <toml>]
   repro train  --config <toml> [--seed <n>] [--learners <k>]
                [--checkpoint-every <steps>] [--checkpoint-dir <dir>] [--resume]
-               [--distributed <n>]
+               [--distributed <n>] [--no-health]
   repro collect --domain <traffic|warehouse> [--steps <n>] [--seed <n>]
   repro bench-throughput            # GS vs LS vs IALS steps/sec table
   repro list                        # list figures and artifacts
@@ -115,8 +115,17 @@ K learners across N supervised `repro worker` processes — heartbeats,
 crashed/hung workers restarted from their newest checkpoint with bounded
 backoff ([distributed] heartbeat_timeout_secs / max_restarts / backoff_ms),
 failed shards reported per shard with a nonzero exit. Curves and final
-params are bitwise identical to the in-process run at the same seed.
-(`repro worker` is internal — the coordinator spawns it.)";
+params are bitwise identical to the in-process run at the same seed, and
+the per-shard health/failure report is also written as machine-readable
+<results_dir>/<condition>_seed<seed>_report.json next to the curve CSVs.
+(`repro worker` is internal — the coordinator spawns it.)
+Health guard: after every PPO update each learner's loss, grad norm and
+param norm are checked ([health] enabled/window/spike_factor/
+max_anomalies/max_rollbacks; see PERF.md). A diverged learner rolls back
+to its newest valid checkpoint; after max_rollbacks it is quarantined —
+the run finishes the healthy learners and exits nonzero. Checks are
+read-only: a guard-on clean run is bitwise identical to --no-health
+(which disables the guard, like [health] enabled = false).";
 
 #[cfg(test)]
 mod tests {

@@ -10,7 +10,7 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    AipKind, BackendKind, DomainKind, ExperimentConfig, PpoConfig, RuntimeConfig,
+    AipKind, BackendKind, DomainKind, ExperimentConfig, HealthConfig, PpoConfig, RuntimeConfig,
     SimulatorKind, TrafficConfig, WarehouseConfig,
 };
 pub use toml::{parse as parse_toml, Document, Value};

@@ -173,6 +173,43 @@ impl Default for DistributedConfig {
     }
 }
 
+/// Training health-guard settings (`runtime::guard`): cheap read-only
+/// invariant checks after every PPO update classify each learner as
+/// healthy, anomalous or diverged; a diverged learner is rolled back to
+/// its newest valid checkpoint, and quarantined once the rollback budget
+/// is spent. Checks never touch RNG streams or training floats, so a
+/// guard-on clean run is bitwise identical to a guard-off one.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Master switch for the per-iteration checks (AIP preparation is
+    /// always checked: a non-finite offline loss dooms the run regardless).
+    pub enabled: bool,
+    /// Rolling window of recent grad norms the spike detector compares
+    /// against (per learner, reset on rollback).
+    pub window: usize,
+    /// A finite grad norm above `spike_factor x` the rolling-window mean
+    /// is an anomaly (the window must be full first).
+    pub spike_factor: f64,
+    /// Consecutive anomalous iterations before a learner counts as
+    /// diverged (non-finite values diverge immediately).
+    pub max_anomalies: usize,
+    /// Rollbacks granted per learner before it is quarantined; must be
+    /// >= 1 (use `enabled = false` to turn the guard off instead).
+    pub max_rollbacks: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            enabled: true,
+            window: 8,
+            spike_factor: 10.0,
+            max_anomalies: 3,
+            max_rollbacks: 2,
+        }
+    }
+}
+
 /// Traffic domain parameters (§5.2). The GS is a `grid x grid` network of
 /// signalized intersections; the LS is the single agent intersection.
 #[derive(Debug, Clone)]
@@ -375,6 +412,7 @@ pub struct ExperimentConfig {
     pub aip: AipConfig,
     pub runtime: RuntimeConfig,
     pub distributed: DistributedConfig,
+    pub health: HealthConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -398,6 +436,7 @@ impl Default for ExperimentConfig {
             aip: AipConfig::default(),
             runtime: RuntimeConfig::default(),
             distributed: DistributedConfig::default(),
+            health: HealthConfig::default(),
         }
     }
 }
@@ -507,6 +546,13 @@ impl ExperimentConfig {
         d.max_restarts = doc.int_or("distributed", "max_restarts", d.max_restarts as i64)? as usize;
         d.backoff_ms = doc.int_or("distributed", "backoff_ms", d.backoff_ms as i64)? as u64;
 
+        let h = &mut cfg.health;
+        h.enabled = doc.bool_or("health", "enabled", h.enabled)?;
+        h.window = doc.int_or("health", "window", h.window as i64)? as usize;
+        h.spike_factor = doc.float_or("health", "spike_factor", h.spike_factor)?;
+        h.max_anomalies = doc.int_or("health", "max_anomalies", h.max_anomalies as i64)? as usize;
+        h.max_rollbacks = doc.int_or("health", "max_rollbacks", h.max_rollbacks as i64)? as usize;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -589,6 +635,52 @@ impl ExperimentConfig {
             d.backoff_ms <= 600_000,
             "backoff_ms must be in 0..=600000 (got {})",
             d.backoff_ms
+        );
+        let h = &self.health;
+        anyhow::ensure!(
+            (1..=1024).contains(&h.window),
+            "[health] window must be in 1..=1024 (got {})",
+            h.window
+        );
+        anyhow::ensure!(
+            h.spike_factor.is_finite() && h.spike_factor > 1.0,
+            "[health] spike_factor must be a finite number > 1 (got {})",
+            h.spike_factor
+        );
+        anyhow::ensure!(
+            (1..=1024).contains(&h.max_anomalies),
+            "[health] max_anomalies must be in 1..=1024 (got {})",
+            h.max_anomalies
+        );
+        // max_rollbacks = 0 would quarantine a learner on its first
+        // divergence without ever attempting the recovery the guard exists
+        // for — almost certainly a misconfiguration, so it is rejected in
+        // favor of the explicit off switch.
+        anyhow::ensure!(
+            (1..=100).contains(&h.max_rollbacks),
+            "[health] max_rollbacks must be in 1..=100 (got {}); to disable the guard set \
+             [health] enabled = false instead",
+            h.max_rollbacks
+        );
+        Ok(())
+    }
+
+    /// Cross-field checks for a distributed (`--distributed`) run, beyond
+    /// [`ExperimentConfig::validate`]: the worker restart protocol resumes
+    /// from checkpoints, and shards cannot be empty. Errors name both
+    /// offending keys so the fix is obvious from the message alone.
+    pub fn validate_distributed(&self, workers: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.checkpoint_every > 0,
+            "--distributed requires checkpointing: [experiment] checkpoint_every = 0 while \
+             [distributed] workers = {workers}; workers restart from their shard's newest \
+             checkpoint, so set [experiment] checkpoint_every > 0 (or pass --checkpoint-every)"
+        );
+        anyhow::ensure!(
+            workers <= self.num_learners,
+            "[distributed] workers = {workers} exceeds [experiment] num_learners = {}; every \
+             worker needs at least one learner — lower workers or raise num_learners",
+            self.num_learners
         );
         Ok(())
     }
@@ -685,12 +777,19 @@ impl ExperimentConfig {
         e(&mut o, "heartbeat_timeout_secs", d.heartbeat_timeout_secs.to_string());
         e(&mut o, "max_restarts", d.max_restarts.to_string());
         e(&mut o, "backoff_ms", d.backoff_ms.to_string());
+        let h = &self.health;
+        o.push_str("\n[health]\n");
+        e(&mut o, "enabled", h.enabled.to_string());
+        e(&mut o, "window", h.window.to_string());
+        e(&mut o, "spike_factor", h.spike_factor.to_string());
+        e(&mut o, "max_anomalies", h.max_anomalies.to_string());
+        e(&mut o, "max_rollbacks", h.max_rollbacks.to_string());
         o
     }
 }
 
 const KNOWN_TABLES: &[&str] =
-    &["", "experiment", "traffic", "warehouse", "ppo", "aip", "runtime", "distributed"];
+    &["", "experiment", "traffic", "warehouse", "ppo", "aip", "runtime", "distributed", "health"];
 
 const KNOWN_KEYS: &[(&str, &str)] = &[
     ("experiment", "name"),
@@ -748,6 +847,11 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("distributed", "heartbeat_timeout_secs"),
     ("distributed", "max_restarts"),
     ("distributed", "backoff_ms"),
+    ("health", "enabled"),
+    ("health", "window"),
+    ("health", "spike_factor"),
+    ("health", "max_anomalies"),
+    ("health", "max_rollbacks"),
 ];
 
 fn check_known_keys(doc: &Document) -> Result<()> {
@@ -907,6 +1011,58 @@ mod tests {
     }
 
     #[test]
+    fn health_knobs_parse_and_bound() {
+        let h = ExperimentConfig::default().health;
+        assert!(h.enabled, "guard on by default (checks are read-only)");
+        assert_eq!(h.window, 8);
+        assert_eq!(h.max_rollbacks, 2);
+        let cfg = ExperimentConfig::from_toml(
+            "[health]\nenabled = false\nwindow = 4\nspike_factor = 25.5\nmax_anomalies = 1\n\
+             max_rollbacks = 7",
+        )
+        .unwrap();
+        assert!(!cfg.health.enabled);
+        assert_eq!(cfg.health.window, 4);
+        assert_eq!(cfg.health.spike_factor, 25.5);
+        assert_eq!(cfg.health.max_anomalies, 1);
+        assert_eq!(cfg.health.max_rollbacks, 7);
+        assert!(ExperimentConfig::from_toml("[health]\nwindow = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[health]\nspike_factor = 1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[health]\nmax_anomalies = 0").is_err());
+    }
+
+    #[test]
+    fn health_max_rollbacks_zero_rejected_naming_the_off_switch() {
+        let err =
+            ExperimentConfig::from_toml("[health]\nmax_rollbacks = 0").unwrap_err().to_string();
+        assert!(err.contains("[health] max_rollbacks"), "{err}");
+        assert!(err.contains("enabled = false"), "error must point at the off switch: {err}");
+        assert!(ExperimentConfig::from_toml("[health]\nmax_rollbacks = -1").is_err());
+    }
+
+    #[test]
+    fn distributed_cross_field_validation_names_both_keys() {
+        // Distributed without checkpointing: the restart protocol has
+        // nothing to resume from.
+        let cfg = ExperimentConfig::from_toml("[experiment]\nnum_learners = 4").unwrap();
+        assert_eq!(cfg.checkpoint_every, 0);
+        let err = cfg.validate_distributed(2).unwrap_err().to_string();
+        assert!(err.contains("checkpoint_every"), "{err}");
+        assert!(err.contains("[distributed] workers"), "{err}");
+        // More workers than learners: some shard would be empty.
+        let cfg = ExperimentConfig::from_toml(
+            "[experiment]\nnum_learners = 2\ncheckpoint_every = 2048",
+        )
+        .unwrap();
+        let err = cfg.validate_distributed(3).unwrap_err().to_string();
+        assert!(err.contains("[distributed] workers = 3"), "{err}");
+        assert!(err.contains("num_learners = 2"), "{err}");
+        // The valid shape passes.
+        cfg.validate_distributed(2).unwrap();
+        cfg.validate_distributed(1).unwrap();
+    }
+
+    #[test]
     fn toml_round_trip_is_exact() {
         // The distributed coordinator ships its effective config to workers
         // via to_toml_string; every field must survive the round trip so
@@ -938,6 +1094,11 @@ mod tests {
             [distributed]
             workers = 3
             heartbeat_timeout_secs = 45.25
+
+            [health]
+            enabled = false
+            spike_factor = 12.5
+            max_rollbacks = 4
             "#,
         )
         .unwrap();

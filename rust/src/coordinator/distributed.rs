@@ -55,6 +55,7 @@
 use super::experiment::{collect_shared_aip_data, SharedAipData};
 use super::multi::{MultiLearnerOutcome, MultiLearnerRun};
 use crate::config::ExperimentConfig;
+use crate::runtime::guard::LearnerHealth;
 use crate::core::shard_ranges;
 use crate::metrics::{read_curve_state, write_curve_state, ConditionResult};
 use crate::runtime::checkpoint::CheckpointManager;
@@ -72,7 +73,10 @@ use std::time::{Duration, Instant};
 const AIP_DATA_MAGIC: &[u8; 8] = b"IALSAIPD";
 const AIP_DATA_VERSION: u32 = 1;
 const RESULT_MAGIC: &[u8; 8] = b"IALSDRES";
-const RESULT_VERSION: u32 = 1;
+// v2: per-learner health record (quarantined flag + rollback count)
+// appended to each learner section — the channel that carries the health
+// guard's verdicts from workers to the coordinator.
+const RESULT_VERSION: u32 = 2;
 
 /// Supervisor poll cadence. Only affects detection latency, never bits.
 const POLL: Duration = Duration::from_millis(25);
@@ -115,6 +119,12 @@ pub struct ShardReport {
     pub ok: bool,
     /// Terminal failure reason (`ok = false` only).
     pub error: Option<String>,
+    /// Per-learner health records in shard-local order (empty for failed
+    /// shards — a shard that never finished ships no result file). A
+    /// quarantined learner does **not** make the shard `ok = false`: the
+    /// worker completed its healthy learners and exited cleanly; callers
+    /// degrade the process exit code from these records instead.
+    pub health: Vec<LearnerHealth>,
 }
 
 /// One learner's shipped-back result: the usual per-learner numbers plus
@@ -124,6 +134,8 @@ pub struct ShardReport {
 pub struct LearnerResult {
     pub result: ConditionResult,
     pub policy_params: Vec<(String, Vec<f32>)>,
+    /// The health guard's final record for this learner (v2 result files).
+    pub health: LearnerHealth,
 }
 
 /// Outcome of a distributed run: per-learner results in global learner
@@ -137,6 +149,17 @@ pub struct DistributedOutcome {
 impl DistributedOutcome {
     pub fn all_ok(&self) -> bool {
         self.shards.iter().all(|s| s.ok)
+    }
+
+    /// Whether any completed shard reported a quarantined learner.
+    pub fn any_quarantined(&self) -> bool {
+        self.shards.iter().any(|s| s.health.iter().any(|h| h.quarantined))
+    }
+
+    /// Fully healthy: every shard finished and no learner was quarantined.
+    /// The condition for a zero exit code.
+    pub fn healthy(&self) -> bool {
+        self.all_ok() && !self.any_quarantined()
     }
 
     /// Human-readable per-shard report (printed on degraded exits).
@@ -155,9 +178,79 @@ impl DistributedOutcome {
                 s.first_learner + s.count,
                 s.restarts
             ));
+            for (off, h) in s.health.iter().enumerate() {
+                if h.quarantined || h.rollbacks > 0 {
+                    out.push_str(&format!(
+                        "    learner {}: {} ({} rollback(s))\n",
+                        s.first_learner + off,
+                        if h.quarantined { "QUARANTINED" } else { "recovered" },
+                        h.rollbacks
+                    ));
+                }
+            }
         }
         out
     }
+
+    /// The same report as machine-readable JSON (for `report.json` next
+    /// to the curve CSVs — CI and sweeps assert on outcomes without
+    /// scraping logs). Hand-rolled: the offline crate set has no serde.
+    pub fn report_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"ok\": {},\n", self.all_ok()));
+        out.push_str(&format!("  \"quarantined\": {},\n", self.any_quarantined()));
+        out.push_str("  \"shards\": [\n");
+        for (i, s) in self.shards.iter().enumerate() {
+            let error = match &s.error {
+                None => "null".to_string(),
+                Some(e) => format!("\"{}\"", json_escape(e)),
+            };
+            let learners: Vec<String> = s
+                .health
+                .iter()
+                .enumerate()
+                .map(|(off, h)| {
+                    format!(
+                        "{{\"learner\": {}, \"quarantined\": {}, \"rollbacks\": {}}}",
+                        s.first_learner + off,
+                        h.quarantined,
+                        h.rollbacks
+                    )
+                })
+                .collect();
+            out.push_str(&format!(
+                "    {{\"worker\": {}, \"first_learner\": {}, \"count\": {}, \"restarts\": {}, \
+                 \"ok\": {}, \"error\": {error}, \"learners\": [{}]}}{}\n",
+                s.worker,
+                s.first_learner,
+                s.count,
+                s.restarts,
+                s.ok,
+                learners.join(", "),
+                if i + 1 < self.shards.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// error strings routinely quote paths and status text.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -195,6 +288,7 @@ pub fn run_distributed(
     opts: &DistributedOptions,
 ) -> Result<DistributedOutcome> {
     cfg.validate()?;
+    cfg.validate_distributed(workers)?;
     let k = cfg.num_learners;
     let ranges = shard_ranges(k, workers);
     let dist_dir = distributed_run_dir(cfg, seed);
@@ -268,8 +362,10 @@ pub fn run_distributed(
             SlotState::Failed(e) => (false, Some(e), None),
             _ => unreachable!("supervise returns only terminal slots"),
         };
+        let mut health = Vec::new();
         if let Some(rs) = results {
             for (off, lr) in rs.into_iter().enumerate() {
+                health.push(lr.health);
                 learners[slot.first + off] = Some(lr);
             }
         }
@@ -280,6 +376,7 @@ pub fn run_distributed(
             restarts: slot.restarts,
             ok,
             error,
+            health,
         });
     }
     Ok(DistributedOutcome { learners, shards })
@@ -487,7 +584,7 @@ pub fn run_worker(cfg: &ExperimentConfig, wa: &WorkerArgs) -> Result<()> {
     let start_round = match mgr.load_latest() {
         Some((iter, payload)) => {
             let rounds = run
-                .restore(&rt, &payload)
+                .restore(&payload)
                 .with_context(|| format!("restoring shard checkpoint at iteration {iter}"))?;
             log_info!(
                 "worker {}: resumed learners {}..{} at iteration {rounds}/{}",
@@ -516,7 +613,7 @@ pub fn run_worker(cfg: &ExperimentConfig, wa: &WorkerArgs) -> Result<()> {
         n
     };
     for round in start_round..run.iterations() {
-        run.advance_round()?;
+        run.advance_round_guarded(round + 1, Some(&mgr))?;
         let steps = (round + 1) * per_iter;
         if steps >= next_ckpt {
             while next_ckpt <= steps {
@@ -559,7 +656,9 @@ fn write_result(path: &Path, first_learner: usize, outcome: &MultiLearnerOutcome
     let mut w = StateWriter::new();
     w.usize(first_learner);
     w.usize(outcome.results.len());
-    for (res, store) in outcome.results.iter().zip(&outcome.policy_stores) {
+    for ((res, store), health) in
+        outcome.results.iter().zip(&outcome.policy_stores).zip(&outcome.health)
+    {
         w.str(&res.condition);
         w.u64(res.seed);
         write_curve_state(&res.curve, &mut w);
@@ -567,6 +666,9 @@ fn write_result(path: &Path, first_learner: usize, outcome: &MultiLearnerOutcome
         w.f64(res.train_secs);
         w.f64(res.aip_ce);
         w.f64(res.final_eval);
+        // v2: the health guard's record for this learner.
+        w.bool(health.quarantined);
+        w.usize(health.rollbacks);
         w.usize(store.names().len());
         for name in store.names() {
             w.str(name);
@@ -596,6 +698,7 @@ fn read_result(path: &Path, first_learner: usize, count: usize) -> Result<Vec<Le
         let train_secs = r.f64()?;
         let aip_ce = r.f64()?;
         let final_eval = r.f64()?;
+        let health = LearnerHealth { quarantined: r.bool()?, rollbacks: r.usize()? };
         let nt = r.usize()?;
         let mut policy_params = Vec::with_capacity(nt);
         for _ in 0..nt {
@@ -613,6 +716,7 @@ fn read_result(path: &Path, first_learner: usize, count: usize) -> Result<Vec<Le
                 final_eval,
             },
             policy_params,
+            health,
         });
     }
     r.expect_end()?;
@@ -659,6 +763,8 @@ mod tests {
         w.f64(2.0);
         w.f64(0.5);
         w.f64(1.25);
+        w.bool(true); // v2 health: quarantined
+        w.usize(2); // v2 health: rollbacks
         w.usize(1);
         w.str("dense.w");
         w.f32s(&[1.0, -2.0]);
@@ -670,15 +776,15 @@ mod tests {
         assert_eq!(rs[0].result.curve.len(), 1);
         assert_eq!(rs[0].result.curve[0].env_steps, 128);
         assert_eq!(rs[0].policy_params, vec![("dense.w".to_string(), vec![1.0, -2.0])]);
+        assert_eq!(rs[0].health, LearnerHealth { quarantined: true, rollbacks: 2 });
         // A result for the wrong shard is rejected, not silently placed.
         let err = read_result(&path, 0, 1).unwrap_err().to_string();
         assert!(err.contains("covers learners 2..3"), "{err}");
         std::fs::remove_dir_all(dir).ok();
     }
 
-    #[test]
-    fn report_names_failed_shards() {
-        let out = DistributedOutcome {
+    fn degraded_outcome() -> DistributedOutcome {
+        DistributedOutcome {
             learners: vec![None, None],
             shards: vec![
                 ShardReport {
@@ -688,6 +794,7 @@ mod tests {
                     restarts: 1,
                     ok: true,
                     error: None,
+                    health: vec![LearnerHealth { quarantined: true, rollbacks: 2 }],
                 },
                 ShardReport {
                     worker: 1,
@@ -696,13 +803,61 @@ mod tests {
                     restarts: 2,
                     ok: false,
                     error: Some("worker exited abnormally (signal: 6)".into()),
+                    health: vec![],
                 },
             ],
-        };
+        }
+    }
+
+    #[test]
+    fn report_names_failed_shards_and_quarantines() {
+        let out = degraded_outcome();
         assert!(!out.all_ok());
+        assert!(out.any_quarantined());
+        assert!(!out.healthy());
         let rep = out.report();
         assert!(rep.contains("worker 0 (learners 0..1, 1 restart(s)): ok"), "{rep}");
         assert!(rep.contains("worker 1 (learners 1..2, 2 restart(s)): FAILED"), "{rep}");
         assert!(rep.contains("signal: 6"), "{rep}");
+        assert!(rep.contains("learner 0: QUARANTINED (2 rollback(s))"), "{rep}");
+    }
+
+    #[test]
+    fn report_json_is_machine_readable_and_escaped() {
+        let mut out = degraded_outcome();
+        out.shards[1].error = Some("bad \"path\"\\tmp\nline".into());
+        let json = out.report_json();
+        assert!(json.contains("\"ok\": false"), "{json}");
+        assert!(json.contains("\"quarantined\": true"), "{json}");
+        assert!(
+            json.contains("{\"learner\": 0, \"quarantined\": true, \"rollbacks\": 2}"),
+            "{json}"
+        );
+        assert!(json.contains(r#""error": "bad \"path\"\\tmp\nline""#), "{json}");
+        // No raw control characters survive escaping.
+        assert!(json.chars().all(|c| c == '\n' || (c as u32) >= 0x20), "{json}");
+        // Balanced braces/brackets — cheap structural sanity without a
+        // JSON parser in the offline crate set.
+        let opens = json.matches('{').count() + json.matches('[').count();
+        let closes = json.matches('}').count() + json.matches(']').count();
+        assert_eq!(opens, closes, "{json}");
+    }
+
+    #[test]
+    fn healthy_outcome_is_healthy() {
+        let out = DistributedOutcome {
+            learners: vec![],
+            shards: vec![ShardReport {
+                worker: 0,
+                first_learner: 0,
+                count: 1,
+                restarts: 0,
+                ok: true,
+                error: None,
+                health: vec![LearnerHealth::default()],
+            }],
+        };
+        assert!(out.healthy());
+        assert!(out.report_json().contains("\"quarantined\": false"));
     }
 }

@@ -43,21 +43,26 @@ use super::experiment::{
 use super::trainer::LearnerLoop;
 use crate::config::ExperimentConfig;
 use crate::core::VecEnv;
-use crate::log_info;
 use crate::metrics::ConditionResult;
 use crate::nn::ParamStore;
-use crate::rl::Policy;
+use crate::rl::{Policy, PpoStats};
 use crate::runtime::checkpoint::CheckpointManager;
+use crate::runtime::guard::{self, HealthGuard, HealthStatus, LearnerHealth, UpdateMetrics};
 use crate::runtime::{learner_seed, MultiStore, Runtime};
+use crate::testkit::fault::{learner_fault_from_env, LearnerFault, LearnerFaultKind};
 use crate::util::{StateReader, StateWriter};
 use crate::Result;
+use crate::{log_info, log_warn};
 use anyhow::{bail, Context};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-/// One learner's run-long state: its envs, its stepwise training loop and
-/// its reporting numbers. The policy parameters live in the shared
-/// [`MultiStore`], not here.
+/// One learner's run-long state: its envs, its stepwise training loop,
+/// its health bookkeeping and its reporting numbers. The policy
+/// parameters live in the shared [`MultiStore`], not here. The guard and
+/// any injected fault are per process incarnation by design — rollback
+/// must never restore the rollback budget it just spent, so neither is
+/// part of [`MultiLearnerRun::write_checkpoint`].
 struct Learner {
     train_env: Box<dyn VecEnv>,
     eval_env: Box<dyn VecEnv>,
@@ -65,6 +70,8 @@ struct Learner {
     seed: u64,
     prep_secs: f64,
     aip_ce: f64,
+    guard: HealthGuard,
+    fault: Option<LearnerFault>,
 }
 
 /// Everything one learner produces, in the single-learner result shape
@@ -75,6 +82,17 @@ pub struct MultiLearnerOutcome {
     /// Final per-learner policy parameter stores, in learner order
     /// (bitwise comparisons, checkpointing).
     pub policy_stores: Vec<ParamStore>,
+    /// Per-learner health records, in learner order. A quarantined entry
+    /// means the learner's curve stops at its last rollback point and the
+    /// caller must report the run degraded (nonzero exit).
+    pub health: Vec<LearnerHealth>,
+}
+
+impl MultiLearnerOutcome {
+    /// Whether any learner ended the run quarantined.
+    pub fn any_quarantined(&self) -> bool {
+        self.health.iter().any(|h| h.quarantined)
+    }
 }
 
 /// K learners interleaved round-robin over one pool: build with
@@ -82,11 +100,16 @@ pub struct MultiLearnerOutcome {
 /// [`MultiLearnerRun::iterations`] rounds, and `finish`. The driver for
 /// both [`run_multi_condition`] and `bench_multi_learner`.
 pub struct MultiLearnerRun {
+    rt: Rc<Runtime>,
     cfg: ExperimentConfig,
     policy: Policy,
     policy_model: &'static str,
     stores: MultiStore,
     learners: Vec<Learner>,
+    /// Global index of slot 0 (0 for in-process runs; the shard base for
+    /// distributed workers) — fault specs and health logs use global
+    /// learner indices.
+    first_learner: usize,
 }
 
 impl MultiLearnerRun {
@@ -153,13 +176,32 @@ impl MultiLearnerRun {
             let eval_env = make_eval_env(cfg);
             stores.init_model(rt, slot, policy_model, lseed)?;
             let lp = LearnerLoop::new(cfg, train_env.obs_dim(), lseed, prep_secs);
-            learners.push(Learner { train_env, eval_env, lp, seed: lseed, prep_secs, aip_ce });
+            learners.push(Learner {
+                train_env,
+                eval_env,
+                lp,
+                seed: lseed,
+                prep_secs,
+                aip_ce,
+                guard: HealthGuard::new(cfg.health.clone()),
+                // Injected test fault, keyed by *global* learner index
+                // (unset env means None — the production path).
+                fault: learner_fault_from_env(l)?,
+            });
         }
         // One engine-side policy (scratch + artifacts shared across
         // learners); its initially-loaded store is a placeholder that the
         // per-turn swap parks in the MultiStore slot.
         let policy = Policy::new(rt.clone(), policy_model, cfg.ppo.num_envs)?;
-        Ok(MultiLearnerRun { cfg: cfg.clone(), policy, policy_model, stores, learners })
+        Ok(MultiLearnerRun {
+            rt: rt.clone(),
+            cfg: cfg.clone(),
+            policy,
+            policy_model,
+            stores,
+            learners,
+            first_learner,
+        })
     }
 
     pub fn num_learners(&self) -> usize {
@@ -179,12 +221,12 @@ impl MultiLearnerRun {
     /// Swap learner `l`'s parameters into the shared engine-side policy,
     /// run `f`, and swap them back out — also when `f` errors. The one
     /// place the checkout invariant lives.
-    fn with_learner(
+    fn with_learner<T>(
         &mut self,
         l: usize,
-        f: impl FnOnce(&ExperimentConfig, &mut Learner, &mut Policy) -> Result<()>,
-    ) -> Result<()> {
-        let MultiLearnerRun { cfg, policy, policy_model, stores, learners } = self;
+        f: impl FnOnce(&ExperimentConfig, &mut Learner, &mut Policy) -> Result<T>,
+    ) -> Result<T> {
+        let MultiLearnerRun { cfg, policy, policy_model, stores, learners, .. } = self;
         let learner = &mut learners[l];
         stores.swap(l, policy_model, &mut policy.store)?;
         let r = f(cfg, learner, policy);
@@ -212,6 +254,123 @@ impl MultiLearnerRun {
                 ln.lp.advance(cfg, ln.train_env.as_mut(), ln.eval_env.as_mut(), policy)
             })?;
         }
+        Ok(())
+    }
+
+    /// One *guarded* round-robin pass: like [`MultiLearnerRun::advance_round`]
+    /// but each learner's update is followed by the health checks of
+    /// `runtime/guard.rs`, with automatic rollback to the newest valid
+    /// checkpoint on divergence and quarantine once `[health]
+    /// max_rollbacks` is exhausted (or no valid checkpoint exists).
+    ///
+    /// `target` is the iteration count every non-quarantined learner must
+    /// reach by the end of the pass (the driver's `round + 1`): a learner
+    /// that just rolled back — or resumed behind the round, e.g. it was
+    /// quarantined in a previous incarnation — replays forward to it
+    /// *within its own turn*, so the fixed round-robin order (and with it
+    /// every other learner's bit stream) is untouched.
+    pub fn advance_round_guarded(
+        &mut self,
+        target: usize,
+        mgr: Option<&CheckpointManager>,
+    ) -> Result<()> {
+        for l in 0..self.learners.len() {
+            while !self.learners[l].guard.quarantined() && self.learners[l].lp.iter() < target {
+                let stats = self.with_learner(l, |cfg, ln, policy| {
+                    ln.lp.advance(cfg, ln.train_env.as_mut(), ln.eval_env.as_mut(), policy)
+                })?;
+                self.check_learner(l, stats, mgr)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Post-update health pass for learner `l`: apply any injected test
+    /// fault, feed the observed metrics to the guard, and on divergence
+    /// roll back or quarantine. Read-only on the training state unless a
+    /// fault is injected or a rollback fires.
+    fn check_learner(
+        &mut self,
+        l: usize,
+        stats: PpoStats,
+        mgr: Option<&CheckpointManager>,
+    ) -> Result<()> {
+        let gl = self.first_learner + l;
+        let completed = self.learners[l].lp.iter();
+        let mut grad_norm = stats.grad_norm as f64;
+        if let Some(f) = self.learners[l].fault.as_mut() {
+            if f.should_fire(completed) {
+                match f.kind {
+                    LearnerFaultKind::NanParams => {
+                        poison_store(self.stores.store_mut(l, self.policy_model)?)?;
+                        log_warn!(
+                            "[fault] learner {gl}: policy params poisoned with NaN after \
+                             iteration {completed} ({})",
+                            crate::testkit::fault::NAN_ENV
+                        );
+                    }
+                    LearnerFaultKind::GradSpike => {
+                        grad_norm *= 1000.0;
+                        log_warn!(
+                            "[fault] learner {gl}: grad-norm metric spiked x1000 after \
+                             iteration {completed} ({})",
+                            crate::testkit::fault::SPIKE_ENV
+                        );
+                    }
+                }
+            }
+        }
+        if !self.learners[l].guard.enabled() {
+            return Ok(());
+        }
+        let metrics = UpdateMetrics {
+            total_loss: stats.total_loss as f64,
+            grad_norm,
+            param_norm: guard::param_norm(self.stores.store(l, self.policy_model)?)?,
+        };
+        let (status, verdict) = self.learners[l].guard.observe(&metrics);
+        match status {
+            HealthStatus::Healthy => {}
+            HealthStatus::Anomalous => log_warn!(
+                "[health] learner {gl}: anomalous update at iteration {completed}: {verdict:?}"
+            ),
+            HealthStatus::Diverged => {
+                log_warn!(
+                    "[health] learner {gl}: diverged at iteration {completed}: {verdict:?}"
+                );
+                self.rollback_or_quarantine(l, mgr)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Recovery for a diverged learner: roll back to the newest valid
+    /// checkpoint while the `[health] max_rollbacks` budget lasts and a
+    /// valid checkpoint exists; quarantine otherwise. Only learner `l`'s
+    /// state is touched either way.
+    fn rollback_or_quarantine(&mut self, l: usize, mgr: Option<&CheckpointManager>) -> Result<()> {
+        let gl = self.first_learner + l;
+        let Some((iter, payload)) = mgr.and_then(|m| m.load_latest()) else {
+            log_warn!("[health] learner {gl}: no valid checkpoint to roll back to — quarantined");
+            self.learners[l].guard.quarantine();
+            return Ok(());
+        };
+        if !self.learners[l].guard.try_rollback() {
+            log_warn!(
+                "[health] learner {gl}: rollback budget exhausted ({} used) — quarantined",
+                self.learners[l].guard.rollbacks_used()
+            );
+            self.learners[l].guard.quarantine();
+            return Ok(());
+        }
+        self.restore_inner(&payload, Some(l))
+            .with_context(|| format!("rolling learner {gl} back to iteration {iter}"))?;
+        log_warn!(
+            "[health] learner {gl}: rolled back to checkpoint at iteration {iter} ({}/{} \
+             rollbacks used)",
+            self.learners[l].guard.rollbacks_used(),
+            self.learners[l].guard.max_rollbacks()
+        );
         Ok(())
     }
 
@@ -263,7 +422,20 @@ impl MultiLearnerRun {
     /// hold their t=0 points. Every geometry mismatch (different learner
     /// count, batch shape, worker-dependent env sharding, seeds) surfaces
     /// as a structured error, never a silently-diverging run.
-    pub fn restore(&mut self, rt: &Runtime, payload: &[u8]) -> Result<usize> {
+    pub fn restore(&mut self, payload: &[u8]) -> Result<usize> {
+        self.restore_inner(payload, None)
+    }
+
+    /// Shared body of [`MultiLearnerRun::restore`] (apply every learner)
+    /// and the health guard's rollback (`only = Some(l)`: parse the whole
+    /// sequential payload, validate every header and seed, but apply only
+    /// learner `l`'s store / loop / env sections). A learner may land
+    /// *behind* the checkpoint's round count (it was quarantined, or is
+    /// the one being rolled back while the others run ahead) — the
+    /// guarded driver replays it forward — but never ahead of it.
+    fn restore_inner(&mut self, payload: &[u8], only: Option<usize>) -> Result<usize> {
+        let rt = self.rt.clone();
+        let rt: &Runtime = &rt;
         let mut r = StateReader::new(payload);
         let domain = r.str()?;
         anyhow::ensure!(
@@ -322,6 +494,7 @@ impl MultiLearnerRun {
                 self.policy_model,
                 spec.params.len()
             );
+            let apply = only.is_none_or(|o| o == l);
             // A fresh store gets a fresh (id, version) cache key, so no
             // backend-side device copy of the pre-restore parameters can
             // survive the resume.
@@ -329,39 +502,50 @@ impl MultiLearnerRun {
             for _ in 0..nt {
                 let name = r.str()?.to_string();
                 let vals = r.f32s()?;
-                store.set(&name, &vals).with_context(|| format!("learner {l} store"))?;
+                if apply {
+                    store.set(&name, &vals).with_context(|| format!("learner {l} store"))?;
+                }
             }
-            self.stores.insert(l, store)?;
             let blob = r.bytes()?;
-            let mut lr = StateReader::new(blob);
-            self.learners[l]
-                .lp
-                .read_state(&mut lr)
-                .and_then(|()| lr.expect_end())
-                .with_context(|| format!("learner {l} loop state"))?;
-            anyhow::ensure!(
-                self.learners[l].lp.iter() == rounds_done,
-                "learner {l} loop is at iteration {}, checkpoint header says {rounds_done}",
-                self.learners[l].lp.iter()
-            );
+            if apply {
+                self.stores.insert(l, store)?;
+                let mut lr = StateReader::new(blob);
+                self.learners[l]
+                    .lp
+                    .read_state(&mut lr)
+                    .and_then(|()| lr.expect_end())
+                    .with_context(|| format!("learner {l} loop state"))?;
+                // `<=`, not `==`: a checkpoint written after a quarantine
+                // legitimately holds that learner behind the round count.
+                anyhow::ensure!(
+                    self.learners[l].lp.iter() <= rounds_done,
+                    "learner {l} loop is at iteration {}, checkpoint header says {rounds_done}",
+                    self.learners[l].lp.iter()
+                );
+            }
             let blob = r.bytes()?;
-            let mut er = StateReader::new(blob);
-            self.learners[l]
-                .train_env
-                .load_state(&mut er)
-                .and_then(|()| er.expect_end())
-                .with_context(|| format!("learner {l} training-env state"))?;
+            if apply {
+                let mut er = StateReader::new(blob);
+                self.learners[l]
+                    .train_env
+                    .load_state(&mut er)
+                    .and_then(|()| er.expect_end())
+                    .with_context(|| format!("learner {l} training-env state"))?;
+            }
         }
         r.expect_end()?;
         Ok(rounds_done)
     }
 
-    /// Per-learner results + final policy stores, in learner order.
+    /// Per-learner results + final policy stores + health records, in
+    /// learner order.
     pub fn finish(self) -> Result<MultiLearnerOutcome> {
         let MultiLearnerRun { cfg, policy_model, mut stores, learners, .. } = self;
         let mut results = Vec::with_capacity(learners.len());
         let mut policy_stores = Vec::with_capacity(learners.len());
+        let mut health = Vec::with_capacity(learners.len());
         for (l, learner) in learners.into_iter().enumerate() {
+            health.push(learner.guard.health());
             let out = learner.lp.finish();
             let final_eval = out.curve.last().map(|p| p.eval_mean).unwrap_or(f64::NAN);
             results.push(ConditionResult {
@@ -375,8 +559,21 @@ impl MultiLearnerRun {
             });
             policy_stores.push(stores.take(l, policy_model)?);
         }
-        Ok(MultiLearnerOutcome { results, policy_stores })
+        Ok(MultiLearnerOutcome { results, policy_stores, health })
     }
+}
+
+/// Overwrite every tensor of a policy store with NaN — the
+/// [`LearnerFaultKind::NanParams`] injector. Test-only in spirit, but it
+/// lives here (not behind `cfg(test)`) so the release binary that CI's
+/// NaN-recovery smoke drives can fire it via the env hook, exactly like
+/// `IALS_ABORT_AT_ITER`.
+fn poison_store(store: &mut ParamStore) -> Result<()> {
+    for name in store.names().to_vec() {
+        let n = store.get(&name)?.len();
+        store.set(&name, &vec![f32::NAN; n])?;
+    }
+    Ok(())
 }
 
 /// Train `cfg.num_learners` learners end to end (the multi-learner
@@ -433,7 +630,7 @@ pub fn run_multi_condition_resumable(
             )
         })?;
         let rounds = run
-            .restore(rt, &payload)
+            .restore(&payload)
             .with_context(|| format!("restoring checkpoint at iteration {iter}"))?;
         log_info!(
             "[{}] seed {seed}: resumed at iteration {rounds}/{}",
@@ -460,7 +657,7 @@ pub fn run_multi_condition_resumable(
         usize::MAX
     };
     for round in start_round..run.iterations() {
-        run.advance_round()?;
+        run.advance_round_guarded(round + 1, mgr.as_ref())?;
         let steps = (round + 1) * per_iter;
         if steps >= next_ckpt {
             while next_ckpt <= steps {
@@ -483,6 +680,16 @@ pub fn run_multi_condition_resumable(
             r.aip_ce,
             r.final_eval
         );
+    }
+    for (l, h) in out.health.iter().enumerate() {
+        if h.quarantined || h.rollbacks > 0 {
+            log_warn!(
+                "[{}] learner {l} (seed {seed}): health {} ({} rollback(s))",
+                cfg.name,
+                if h.quarantined { "QUARANTINED" } else { "recovered" },
+                h.rollbacks
+            );
+        }
     }
     Ok(out)
 }

@@ -101,14 +101,16 @@ impl LearnerLoop {
     }
 
     /// One PPO iteration (training-clocked), plus a GS evaluation when the
-    /// schedule (or the final iteration) demands one.
+    /// schedule (or the final iteration) demands one. Returns the
+    /// iteration's training stats so the driver's health guard can
+    /// inspect them (`runtime/guard.rs`) — the loop itself never judges.
     pub fn advance(
         &mut self,
         cfg: &ExperimentConfig,
         train_env: &mut dyn VecEnv,
         eval_env: &mut dyn VecEnv,
         policy: &mut Policy,
-    ) -> Result<()> {
+    ) -> Result<PpoStats> {
         let iter = self.iter;
         self.iter += 1;
         self.sw.resume();
@@ -140,7 +142,7 @@ impl LearnerLoop {
                 self.next_eval += cfg.eval_every;
             }
         }
-        Ok(())
+        Ok(last_stats)
     }
 
     /// Iterations completed so far.

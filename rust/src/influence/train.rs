@@ -58,6 +58,9 @@ pub fn train_fnn(
         }
         epoch_losses.push((total / batches.max(1) as f64) as f32);
     }
+    // A non-finite AIP loss poisons everything downstream (the IALS
+    // trusts this predictor); fail fast with a structured error.
+    crate::runtime::guard::check_losses_finite("fnn AIP training", &epoch_losses)?;
     Ok(epoch_losses)
 }
 
@@ -110,6 +113,7 @@ pub fn train_gru(
         }
         epoch_losses.push((total / iters_per_epoch as f64) as f32);
     }
+    crate::runtime::guard::check_losses_finite("gru AIP training", &epoch_losses)?;
     Ok(epoch_losses)
 }
 

@@ -74,6 +74,9 @@ fn run(argv: &[String]) -> Result<()> {
                 cfg.checkpoint_dir = dir.to_string();
             }
             let resume = args.get_bool("resume");
+            if args.get_bool("no-health") {
+                cfg.health.enabled = false;
+            }
             if args.get("distributed").is_some() {
                 // Cross-process runtime: the coordinator never builds an
                 // engine runtime itself — workers do — so this path stays
@@ -104,11 +107,28 @@ fn run(argv: &[String]) -> Result<()> {
                     );
                 }
                 print!("{}", out.report());
+                // Machine-readable mirror of the report, next to the CSVs.
+                let report_path = format!(
+                    "{}/{}-{}_seed{}_report.json",
+                    cfg.results_dir,
+                    cfg.simulator.name(),
+                    cfg.name,
+                    seed
+                );
+                ials::util::state::atomic_write(&report_path, out.report_json().as_bytes())?;
+                println!("health report -> {report_path}");
                 anyhow::ensure!(
-                    out.all_ok(),
-                    "distributed run degraded: {} of {} shard(s) failed",
+                    out.healthy(),
+                    "distributed run degraded: {} of {} shard(s) failed, {} learner(s) \
+                     quarantined after exhausting [health] max_rollbacks (see {})",
                     out.shards.iter().filter(|s| !s.ok).count(),
-                    out.shards.len()
+                    out.shards.len(),
+                    out.shards
+                        .iter()
+                        .flat_map(|s| &s.health)
+                        .filter(|h| h.quarantined)
+                        .count(),
+                    report_path
                 );
                 return Ok(());
             }
@@ -135,6 +155,22 @@ fn run(argv: &[String]) -> Result<()> {
                         r.prep_secs, r.train_secs, r.aip_ce, r.final_eval, path
                     );
                 }
+                for (l, h) in out.health.iter().enumerate() {
+                    if h.quarantined || h.rollbacks > 0 {
+                        println!(
+                            "learner {l} (seed {seed}): health {} ({} rollback(s))",
+                            if h.quarantined { "QUARANTINED" } else { "recovered" },
+                            h.rollbacks
+                        );
+                    }
+                }
+                anyhow::ensure!(
+                    !out.any_quarantined(),
+                    "training degraded: {} learner(s) quarantined after exhausting [health] \
+                     max_rollbacks = {}; healthy learners finished and their curves were written",
+                    out.health.iter().filter(|h| h.quarantined).count(),
+                    cfg.health.max_rollbacks
+                );
             } else {
                 let r = run_condition(&rt, &cfg, seed)?;
                 let out = format!("{}/{}_seed{}.csv", cfg.results_dir, r.condition, seed);

@@ -57,6 +57,7 @@ pub fn write_curve_state(curve: &[CurvePoint], w: &mut StateWriter) {
         w.f32(p.stats.v_loss);
         w.f32(p.stats.entropy);
         w.f32(p.stats.approx_kl);
+        w.f32(p.stats.grad_norm);
         w.f32(p.stats.rollout_reward);
         w.usize(p.stats.episodes);
     }
@@ -78,6 +79,7 @@ pub fn read_curve_state(r: &mut StateReader<'_>) -> Result<Vec<CurvePoint>> {
                 v_loss: r.f32()?,
                 entropy: r.f32()?,
                 approx_kl: r.f32()?,
+                grad_norm: r.f32()?,
                 rollout_reward: r.f32()?,
                 episodes: r.usize()?,
             },
@@ -99,6 +101,7 @@ pub fn write_curve(path: impl AsRef<Path>, curve: &[CurvePoint]) -> Result<()> {
             "entropy",
             "approx_kl",
             "v_loss",
+            "grad_norm",
         ],
     )?;
     for p in curve {
@@ -111,6 +114,7 @@ pub fn write_curve(path: impl AsRef<Path>, curve: &[CurvePoint]) -> Result<()> {
             p.stats.entropy as f64,
             p.stats.approx_kl as f64,
             p.stats.v_loss as f64,
+            p.stats.grad_norm as f64,
         ])?;
     }
     w.flush()?;

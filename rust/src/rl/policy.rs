@@ -155,7 +155,8 @@ impl Policy {
     }
 
     /// One PPO minibatch update; returns stats
-    /// `[total, pg_loss, v_loss, entropy, approx_kl]`.
+    /// `[total, pg_loss, v_loss, entropy, approx_kl, grad_norm]` (the
+    /// last is the pre-clip global gradient norm).
     #[allow(clippy::too_many_arguments)]
     pub fn update_minibatch(
         &mut self,
@@ -165,13 +166,13 @@ impl Policy {
         advantages: &[f32],
         returns_: &[f32],
         old_logp: &[f32],
-    ) -> Result<[f32; 5]> {
+    ) -> Result<[f32; 6]> {
         let lr = [cfg.lr];
         let clip = [cfg.clip];
         let vf = [cfg.vf_coef];
         let ent = [cfg.ent_coef];
         let mgn = [cfg.max_grad_norm];
-        let mut stats = [0.0f32; 5];
+        let mut stats = [0.0f32; 6];
         self.rt.call_into(
             &self.update,
             &mut self.store,
@@ -205,7 +206,7 @@ impl Policy {
         advantages: &[f32],
         returns_: &[f32],
         old_logp: &[f32],
-    ) -> Result<[f32; 5]> {
+    ) -> Result<[f32; 6]> {
         // Borrow (don't clone) the artifact name: this is the steady-state
         // training path and must stay allocation-free.
         let Policy { rt, store, update_fused, model, .. } = self;
@@ -217,7 +218,7 @@ impl Policy {
         let vf = [cfg.vf_coef];
         let ent = [cfg.ent_coef];
         let mgn = [cfg.max_grad_norm];
-        let mut stats = [0.0f32; 5];
+        let mut stats = [0.0f32; 6];
         rt.call_into(
             name,
             store,

@@ -18,6 +18,9 @@ pub struct PpoStats {
     pub v_loss: f32,
     pub entropy: f32,
     pub approx_kl: f32,
+    /// Mean pre-clip global gradient norm across the iteration's
+    /// minibatch updates — the health guard's spike-detector input.
+    pub grad_norm: f32,
     /// Mean per-step environment reward in the collected rollout.
     pub rollout_reward: f32,
     pub episodes: usize,
@@ -160,12 +163,13 @@ impl PpoTrainer {
                 v_loss: stats[2],
                 entropy: stats[3],
                 approx_kl: stats[4],
+                grad_norm: stats[5],
                 rollout_reward,
                 episodes,
             });
         }
 
-        let mut agg = [0.0f64; 5];
+        let mut agg = [0.0f64; 6];
         let mut updates = 0usize;
         for _ in 0..cfg.epochs {
             self.rng.shuffle(&mut self.order);
@@ -200,6 +204,7 @@ impl PpoTrainer {
             v_loss: (agg[2] / n) as f32,
             entropy: (agg[3] / n) as f32,
             approx_kl: (agg[4] / n) as f32,
+            grad_norm: (agg[5] / n) as f32,
             rollout_reward,
             episodes,
         })

@@ -1,0 +1,322 @@
+//! Training health guard: cheap, read-only invariant checks over the
+//! per-update metrics every learner already produces, classifying each
+//! update as healthy, anomalous, or diverged (`[health]` in the config).
+//!
+//! The guard *observes*; it never mutates training state. Non-finite
+//! loss / gradient norm / parameter norm is an immediate divergence. A
+//! finite gradient norm that spikes past `spike_factor` times the rolling
+//! window mean is an anomaly; `max_anomalies` *consecutive* anomalies
+//! escalate to divergence. Recovery (rollback to the newest valid
+//! checkpoint, then quarantine once `max_rollbacks` is exhausted) is
+//! driven by the coordinator (`coordinator/multi.rs`) — the guard only
+//! keeps the books: the rolling window, the anomaly streak, and the
+//! rollback budget.
+//!
+//! Determinism contract: because every check is a pure read of metrics
+//! the trainer computes anyway (no RNG draw, no float mutated), a
+//! guard-on clean run is bitwise identical to a guard-off run. The
+//! rollback budget is deliberately *not* part of any serialized state:
+//! restoring a checkpoint must not also restore the budget the rollback
+//! just spent, so guard state lives per process incarnation only.
+
+use crate::config::HealthConfig;
+use crate::nn::ParamStore;
+use anyhow::Result;
+
+/// Classification of one training update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthStatus {
+    /// All invariants hold.
+    Healthy,
+    /// Finite but suspicious (grad-norm spike vs the rolling window).
+    Anomalous,
+    /// Non-finite metric, or too many consecutive anomalies: the learner
+    /// state can no longer be trusted and must be rolled back.
+    Diverged,
+}
+
+/// Why an update was flagged — carried into logs and the health report.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HealthVerdict {
+    Ok,
+    /// `(metric name, value)` — e.g. `("total_loss", NaN)`.
+    NonFinite(&'static str, f64),
+    /// `(observed grad norm, rolling-window mean)`.
+    GradSpike(f64, f64),
+    /// Anomaly streak hit `max_anomalies`.
+    AnomalyStreak(usize),
+}
+
+/// Metrics observed after one PPO update, fed to [`HealthGuard::observe`].
+/// All values are reads of numbers the trainer already computed.
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateMetrics {
+    pub total_loss: f64,
+    /// Pre-clip global gradient norm (mean over minibatches).
+    pub grad_norm: f64,
+    /// Global parameter norm after the update.
+    pub param_norm: f64,
+}
+
+/// Final health record for one learner, reported per run (and per shard
+/// through the distributed result files).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LearnerHealth {
+    pub quarantined: bool,
+    /// Rollbacks performed this process incarnation.
+    pub rollbacks: usize,
+}
+
+/// Per-learner health bookkeeping for one process incarnation.
+#[derive(Debug, Clone)]
+pub struct HealthGuard {
+    cfg: HealthConfig,
+    /// Rolling window of recent healthy grad norms (cleared on rollback —
+    /// post-restore dynamics must not be judged against pre-fault ones).
+    window: Vec<f64>,
+    /// Consecutive anomalous updates.
+    anomaly_streak: usize,
+    rollbacks_used: usize,
+    quarantined: bool,
+}
+
+impl HealthGuard {
+    pub fn new(cfg: HealthConfig) -> Self {
+        HealthGuard {
+            cfg,
+            window: Vec::new(),
+            anomaly_streak: 0,
+            rollbacks_used: 0,
+            quarantined: false,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn quarantined(&self) -> bool {
+        self.quarantined
+    }
+
+    pub fn rollbacks_used(&self) -> usize {
+        self.rollbacks_used
+    }
+
+    pub fn max_rollbacks(&self) -> usize {
+        self.cfg.max_rollbacks
+    }
+
+    /// The guard's final record for reports.
+    pub fn health(&self) -> LearnerHealth {
+        LearnerHealth { quarantined: self.quarantined, rollbacks: self.rollbacks_used }
+    }
+
+    /// Classify one update. Pure bookkeeping — never touches training
+    /// state. Returns `(status, verdict)`; the verdict names the failed
+    /// invariant for logs/reports.
+    pub fn observe(&mut self, m: &UpdateMetrics) -> (HealthStatus, HealthVerdict) {
+        if !self.cfg.enabled || self.quarantined {
+            return (HealthStatus::Healthy, HealthVerdict::Ok);
+        }
+        for (name, v) in [
+            ("total_loss", m.total_loss),
+            ("grad_norm", m.grad_norm),
+            ("param_norm", m.param_norm),
+        ] {
+            if !v.is_finite() {
+                self.anomaly_streak = 0;
+                return (HealthStatus::Diverged, HealthVerdict::NonFinite(name, v));
+            }
+        }
+        // Spike detection only once the window is full: early training
+        // legitimately has wild grad-norm swings, and a part-full window
+        // would make the check depend on where the run (re)started.
+        if self.window.len() >= self.cfg.window {
+            let mean = self.window.iter().sum::<f64>() / self.window.len() as f64;
+            if mean > 0.0 && m.grad_norm > self.cfg.spike_factor * mean {
+                self.anomaly_streak += 1;
+                if self.anomaly_streak >= self.cfg.max_anomalies {
+                    let streak = self.anomaly_streak;
+                    self.anomaly_streak = 0;
+                    return (HealthStatus::Diverged, HealthVerdict::AnomalyStreak(streak));
+                }
+                return (
+                    HealthStatus::Anomalous,
+                    HealthVerdict::GradSpike(m.grad_norm, mean),
+                );
+            }
+        }
+        self.anomaly_streak = 0;
+        self.window.push(m.grad_norm);
+        if self.window.len() > self.cfg.window {
+            self.window.remove(0);
+        }
+        (HealthStatus::Healthy, HealthVerdict::Ok)
+    }
+
+    /// Account for one rollback. Returns `false` when the budget is
+    /// exhausted — the caller must quarantine the learner instead.
+    pub fn try_rollback(&mut self) -> bool {
+        if self.rollbacks_used >= self.cfg.max_rollbacks {
+            return false;
+        }
+        self.rollbacks_used += 1;
+        self.window.clear();
+        self.anomaly_streak = 0;
+        true
+    }
+
+    /// Mark the learner quarantined: all further observations pass
+    /// through unchecked and the scheduler skips it.
+    pub fn quarantine(&mut self) {
+        self.quarantined = true;
+    }
+}
+
+/// Global parameter norm over every tensor in the store: read-only,
+/// f64 accumulation so the result is independent of tensor iteration
+/// granularity.
+pub fn param_norm(store: &ParamStore) -> Result<f64> {
+    let mut acc = 0.0f64;
+    for name in store.names().to_vec() {
+        for &v in store.get(&name)? {
+            acc += v as f64 * v as f64;
+        }
+    }
+    Ok(acc.sqrt())
+}
+
+/// Finite-loss check for AIP (supervised) training: a non-finite epoch
+/// loss means the predictor the IALS is about to trust is garbage, so
+/// this fails fast with a structured error regardless of `[health]
+/// enabled` (there is no rollback path for AIP pretraining — it is cheap
+/// to rerun and deterministic, so failing the run is the right answer).
+pub fn check_losses_finite(what: &str, losses: &[f32]) -> Result<()> {
+    for (epoch, &l) in losses.iter().enumerate() {
+        anyhow::ensure!(
+            l.is_finite(),
+            "{what}: non-finite training loss {l} at epoch {epoch} — the predictor diverged; \
+             lower [influence] lr or raise batch size"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            enabled: true,
+            window: 4,
+            spike_factor: 10.0,
+            max_anomalies: 2,
+            max_rollbacks: 2,
+        }
+    }
+
+    fn m(loss: f64, gn: f64) -> UpdateMetrics {
+        UpdateMetrics {
+            total_loss: loss,
+            grad_norm: gn,
+            param_norm: 1.0,
+        }
+    }
+
+    #[test]
+    fn healthy_stream_stays_healthy() {
+        let mut g = HealthGuard::new(cfg());
+        for i in 0..32 {
+            let (s, v) = g.observe(&m(0.5, 1.0 + (i % 3) as f64 * 0.1));
+            assert_eq!(s, HealthStatus::Healthy);
+            assert_eq!(v, HealthVerdict::Ok);
+        }
+    }
+
+    #[test]
+    fn non_finite_is_immediate_divergence() {
+        let mut g = HealthGuard::new(cfg());
+        let (s, v) = g.observe(&m(f64::NAN, 1.0));
+        assert_eq!(s, HealthStatus::Diverged);
+        assert!(matches!(v, HealthVerdict::NonFinite("total_loss", _)));
+        let (s, _) = g.observe(&m(0.5, f64::INFINITY));
+        assert_eq!(s, HealthStatus::Diverged);
+        let (s, v) = g.observe(&UpdateMetrics {
+            total_loss: 0.5,
+            grad_norm: 1.0,
+            param_norm: f64::NAN,
+        });
+        assert_eq!(s, HealthStatus::Diverged);
+        assert!(matches!(v, HealthVerdict::NonFinite("param_norm", _)));
+    }
+
+    #[test]
+    fn spike_needs_full_window_then_escalates_on_streak() {
+        let mut g = HealthGuard::new(cfg());
+        // Window not yet full: a huge value is tolerated (warm-up).
+        let (s, _) = g.observe(&m(0.5, 1000.0));
+        assert_eq!(s, HealthStatus::Healthy);
+        let mut g = HealthGuard::new(cfg());
+        for _ in 0..4 {
+            assert_eq!(g.observe(&m(0.5, 1.0)).0, HealthStatus::Healthy);
+        }
+        // First spike: anomalous, not diverged.
+        let (s, v) = g.observe(&m(0.5, 100.0));
+        assert_eq!(s, HealthStatus::Anomalous);
+        assert!(matches!(v, HealthVerdict::GradSpike(gn, mean) if gn == 100.0 && mean == 1.0));
+        // Second consecutive spike hits max_anomalies = 2: diverged.
+        let (s, v) = g.observe(&m(0.5, 100.0));
+        assert_eq!(s, HealthStatus::Diverged);
+        assert_eq!(v, HealthVerdict::AnomalyStreak(2));
+    }
+
+    #[test]
+    fn healthy_update_resets_anomaly_streak() {
+        let mut g = HealthGuard::new(cfg());
+        for _ in 0..4 {
+            g.observe(&m(0.5, 1.0));
+        }
+        assert_eq!(g.observe(&m(0.5, 100.0)).0, HealthStatus::Anomalous);
+        assert_eq!(g.observe(&m(0.5, 1.0)).0, HealthStatus::Healthy);
+        // Streak was reset: a new spike is anomalous again, not diverged.
+        assert_eq!(g.observe(&m(0.5, 100.0)).0, HealthStatus::Anomalous);
+    }
+
+    #[test]
+    fn rollback_budget_and_quarantine() {
+        let mut g = HealthGuard::new(cfg());
+        for _ in 0..4 {
+            g.observe(&m(0.5, 1.0));
+        }
+        assert!(g.try_rollback());
+        // Rollback cleared the window: spikes are tolerated again until
+        // the window refills.
+        assert_eq!(g.observe(&m(0.5, 1000.0)).0, HealthStatus::Healthy);
+        assert!(g.try_rollback());
+        assert!(!g.try_rollback(), "budget of 2 must be exhausted");
+        assert_eq!(g.rollbacks_used(), 2);
+        g.quarantine();
+        assert!(g.quarantined());
+        // Quarantined learners are no longer judged.
+        assert_eq!(g.observe(&m(f64::NAN, 1.0)).0, HealthStatus::Healthy);
+    }
+
+    #[test]
+    fn disabled_guard_observes_nothing() {
+        let mut g = HealthGuard::new(HealthConfig {
+            enabled: false,
+            ..cfg()
+        });
+        assert_eq!(g.observe(&m(f64::NAN, f64::NAN)).0, HealthStatus::Healthy);
+    }
+
+    #[test]
+    fn aip_finite_check() {
+        assert!(check_losses_finite("fnn", &[0.3, 0.2, 0.1]).is_ok());
+        let err = check_losses_finite("gru", &[0.3, f32::NAN]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("gru") && msg.contains("epoch 1"), "{msg}");
+    }
+}

@@ -463,7 +463,7 @@ impl Manifest {
                 &spec,
                 true,
                 data_in,
-                vec![f32t("stats", &[5])],
+                vec![f32t("stats", &[6])],
             );
             m.artifacts.insert(art.name.clone(), art);
             let mut data_in = scalars();
@@ -480,7 +480,7 @@ impl Manifest {
                 &spec,
                 true,
                 data_in,
-                vec![f32t("stats", &[5])],
+                vec![f32t("stats", &[6])],
             );
             m.artifacts.insert(art.name.clone(), art);
             m.models.insert(name.to_string(), spec);

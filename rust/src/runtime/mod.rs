@@ -26,6 +26,7 @@
 //! sets (the distributed-IALS runtime; see `coordinator::multi`).
 
 pub mod checkpoint;
+pub mod guard;
 pub mod manifest;
 pub mod multistore;
 pub mod native;

@@ -871,7 +871,9 @@ impl PolicyUpdate {
 
     /// One clipped-surrogate PPO minibatch step — forward, loss, backward,
     /// grad-norm clip, Adam (`ppo_update` in `model.py`). Returns
-    /// `[total, pg_loss, v_loss, entropy, approx_kl]`.
+    /// `[total, pg_loss, v_loss, entropy, approx_kl, grad_norm]`, where
+    /// `grad_norm` is the pre-clip global gradient norm (the health
+    /// guard's spike-detector input).
     ///
     /// Data-parallel over the fixed row-slice grid: each slice runs its own
     /// forward + loss + backward into per-slice gradient scratch; slice
@@ -888,7 +890,7 @@ impl PolicyUpdate {
         adv: &[f32],
         ret: &[f32],
         old_logp: &[f32],
-    ) -> Result<[f32; 5]> {
+    ) -> Result<[f32; 6]> {
         let (mb, od, h, a) = (self.mb, self.obs_dim, self.hid, self.act_dim);
         let inv_mb = 1.0 / mb as f32;
         // Slice tasks cannot surface errors — validate inputs up front.
@@ -1029,7 +1031,6 @@ impl PolicyUpdate {
         let entropy = (agg[2] as f32) * inv_mb;
         let approx_kl = (agg[3] as f32) * inv_mb;
         let total = pg_loss + hp.vf * v_loss - hp.ent * entropy;
-        let stats = [total, pg_loss, v_loss, entropy, approx_kl];
 
         let PolicyUpdate { grads, part_grads, adam_idx, .. } = self;
         grads.zero();
@@ -1039,6 +1040,7 @@ impl PolicyUpdate {
 
         // Global grad-norm clip, then Adam (clip_global_norm + adam_step).
         let gn = grads.norm();
+        let stats = [total, pg_loss, v_loss, entropy, approx_kl, gn];
         grads.scale((hp.mgn / (gn + 1e-8)).min(1.0));
         adam_apply(
             store,
@@ -1102,7 +1104,7 @@ impl PolicyUpdateFused {
         })
     }
 
-    fn run(&mut self, store: &mut ParamStore, data: &[DataArg<'_>]) -> Result<[f32; 5]> {
+    fn run(&mut self, store: &mut ParamStore, data: &[DataArg<'_>]) -> Result<[f32; 6]> {
         let hp = Hyper::parse(data)?;
         let perm = i32_arg(data, 5, "perm")?;
         let obs = f32_arg(data, 6, "obs")?;
@@ -1111,7 +1113,7 @@ impl PolicyUpdateFused {
         let ret = f32_arg(data, 9, "returns")?;
         let old_logp = f32_arg(data, 10, "old_logp")?;
         let (n, mb, od) = (self.n, self.core.mb, self.core.obs_dim);
-        let mut agg = [0.0f64; 5];
+        let mut agg = [0.0f64; 6];
         let mut updates = 0usize;
         for e in 0..self.epochs {
             let perm_e = &perm[e * n..(e + 1) * n];
@@ -1148,6 +1150,7 @@ impl PolicyUpdateFused {
             (agg[2] / d) as f32,
             (agg[3] / d) as f32,
             (agg[4] / d) as f32,
+            (agg[5] / d) as f32,
         ])
     }
 }

@@ -93,6 +93,79 @@ pub fn worker_fault_from_env(worker: usize) -> Result<Option<WorkerFault>> {
     Ok(None)
 }
 
+/// Environment variable the health guard's NaN-injection hook reads:
+/// `IALS_NAN_AT=<learner>:<iter>[:every]` poisons learner `<learner>`'s
+/// policy parameters with NaN right after training iteration `<iter>`,
+/// emulating a numerically diverged update. The guard detects it via the
+/// parameter-norm check and rolls the learner back, so (unlike
+/// [`KILL_ENV`]) the faulted run is expected to *succeed* — recovered
+/// bitwise onto the clean trajectory. Without `:every` the fault fires
+/// once per process (in-memory latch — the post-rollback replay must run
+/// clean); with `:every` each replay re-diverges, exhausting
+/// `[health] max_rollbacks` and driving the quarantine path.
+pub const NAN_ENV: &str = "IALS_NAN_AT";
+
+/// Like [`NAN_ENV`] but perturbs only the *observed* gradient-norm metric
+/// (multiplies it by 1000; parameters untouched), exercising the guard's
+/// rolling-window spike detector instead of the non-finite check.
+pub const SPIKE_ENV: &str = "IALS_GRAD_SPIKE_AT";
+
+/// What a matched [`NAN_ENV`] / [`SPIKE_ENV`] spec does to a learner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnerFaultKind {
+    /// Overwrite the learner's policy parameters with NaN.
+    NanParams,
+    /// Scale the reported grad norm by 1000 (metrics only).
+    GradSpike,
+}
+
+/// A parsed per-learner fault: fire `kind` right after the learner
+/// completes iteration `iter`. The latch is in-memory (not a file like
+/// [`fire_once`]) because the replay that must survive happens in the
+/// *same* process, right after the rollback.
+#[derive(Debug, Clone)]
+pub struct LearnerFault {
+    pub kind: LearnerFaultKind,
+    pub iter: usize,
+    pub every: bool,
+    fired: bool,
+}
+
+impl LearnerFault {
+    /// Whether the fault fires for a just-completed iteration `iter`
+    /// (0-based, the learner's own counter). Latches after the first hit
+    /// unless the spec said `:every`.
+    pub fn should_fire(&mut self, iter: usize) -> bool {
+        if iter != self.iter || (self.fired && !self.every) {
+            return false;
+        }
+        self.fired = true;
+        true
+    }
+}
+
+/// The injected fault for (global) learner `learner`, from [`NAN_ENV`] /
+/// [`SPIKE_ENV`] (NaN wins when both name the same learner). Unset or
+/// empty means no fault; a malformed spec errors rather than silently
+/// running clean.
+pub fn learner_fault_from_env(learner: usize) -> Result<Option<LearnerFault>> {
+    for (env, kind) in [
+        (NAN_ENV, LearnerFaultKind::NanParams),
+        (SPIKE_ENV, LearnerFaultKind::GradSpike),
+    ] {
+        match std::env::var(env) {
+            Err(_) => {}
+            Ok(v) if v.is_empty() => {}
+            Ok(v) => {
+                if let Some((iter, every)) = parse_worker_fault(env, &v, learner)? {
+                    return Ok(Some(LearnerFault { kind, iter, every, fired: false }));
+                }
+            }
+        }
+    }
+    Ok(None)
+}
+
 /// First-incarnation latch for injected faults: returns `true` exactly once
 /// per `marker` path (the create beats any later attempt), so a restarted
 /// worker reruns the same code without re-dying. The marker lives in the
@@ -178,6 +251,17 @@ mod tests {
         assert!(parse_worker_fault("E", "1:2:always", 1).is_err());
         assert!(parse_worker_fault("E", "one:2", 1).is_err());
         assert!(parse_worker_fault("E", "1:2:every:x", 1).is_err());
+    }
+
+    #[test]
+    fn learner_fault_latch_and_every() {
+        let mut f = LearnerFault { kind: LearnerFaultKind::NanParams, iter: 2, every: false, fired: false };
+        assert!(!f.should_fire(1));
+        assert!(f.should_fire(2), "first pass over iter 2 fires");
+        assert!(!f.should_fire(2), "post-rollback replay runs clean");
+        let mut f = LearnerFault { kind: LearnerFaultKind::GradSpike, iter: 2, every: true, fired: false };
+        assert!(f.should_fire(2));
+        assert!(f.should_fire(2), ":every re-fires on replay");
     }
 
     #[test]

@@ -77,7 +77,7 @@ fn snapshot(store: &ParamStore) -> Vec<Vec<f32>> {
 
 /// The bit-comparable content of a learning curve (wall-clock excluded).
 #[allow(clippy::type_complexity)]
-fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
+fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 7], usize)> {
     curve
         .iter()
         .map(|p| {
@@ -91,6 +91,7 @@ fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
                     p.stats.v_loss.to_bits(),
                     p.stats.entropy.to_bits(),
                     p.stats.approx_kl.to_bits(),
+                    p.stats.grad_norm.to_bits(),
                     p.stats.rollout_reward.to_bits(),
                 ],
                 p.stats.episodes,
@@ -104,7 +105,7 @@ fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
 #[allow(clippy::type_complexity)]
 fn outcome_bits(
     out: &MultiLearnerOutcome,
-) -> (Vec<Vec<(usize, u64, u64, [u32; 6], usize)>>, Vec<u64>, Vec<Vec<Vec<f32>>>) {
+) -> (Vec<Vec<(usize, u64, u64, [u32; 7], usize)>>, Vec<u64>, Vec<Vec<Vec<f32>>>) {
     (
         out.results.iter().map(|r| curve_bits(&r.curve)).collect(),
         out.results.iter().map(|r| r.aip_ce.to_bits()).collect(),

@@ -79,7 +79,7 @@ fn opts(env: &[(&str, &str)]) -> DistributedOptions {
 
 /// The bit-comparable content of a learning curve (wall-clock excluded).
 #[allow(clippy::type_complexity)]
-fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
+fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 7], usize)> {
     curve
         .iter()
         .map(|p| {
@@ -93,6 +93,7 @@ fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
                     p.stats.v_loss.to_bits(),
                     p.stats.entropy.to_bits(),
                     p.stats.approx_kl.to_bits(),
+                    p.stats.grad_norm.to_bits(),
                     p.stats.rollout_reward.to_bits(),
                 ],
                 p.stats.episodes,

@@ -1,0 +1,351 @@
+//! Acceptance tests for the self-healing training runtime
+//! (`runtime::guard` + the guarded driver in `coordinator::multi`):
+//!
+//! 1. **Determinism contract**: a guard-on clean run is bitwise identical
+//!    to a guard-off run — curves, AIP cross-entropy and final policy
+//!    parameters — because every health check is a pure read of metrics
+//!    the trainer computes anyway.
+//! 2. An injected numerical fault (NaN-poisoned parameters via
+//!    `IALS_NAN_AT`, or a grad-norm spike via `IALS_GRAD_SPIKE_AT`)
+//!    triggers an automatic rollback to the newest valid checkpoint, and
+//!    the recovered run lands bitwise on the clean trajectory — and is
+//!    reproducible run to run.
+//! 3. A fault that re-fires on every replay (`:every`) exhausts
+//!    `[health] max_rollbacks` and quarantines **only** the faulty
+//!    learner: the other learners' curves and parameters are bitwise
+//!    unchanged, and the binary exits nonzero with the health summary.
+//!
+//! Fault specs are read from process-global environment variables at
+//! build time, so every in-process run here is serialized behind one
+//! lock and scrubs both variables before setting its own.
+//!
+//! Wall-clock fields (`wall_clock_s`, `prep_secs`, `train_secs`) measure
+//! real time and are excluded, as in every determinism test of the repo.
+
+use ials::config::{BackendKind, DomainKind, ExperimentConfig, SimulatorKind};
+use ials::coordinator::{run_multi_condition, run_multi_condition_resumable, MultiLearnerOutcome};
+use ials::metrics::CurvePoint;
+use ials::nn::ParamStore;
+use ials::runtime::guard::LearnerHealth;
+use ials::runtime::Runtime;
+use ials::testkit::fault::{NAN_ENV, SPIKE_ENV};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Mutex;
+
+/// Per-learner env steps in one PPO iteration of [`test_cfg`] runs.
+const PER_ITER: usize = 8 * 16;
+
+/// Serializes every in-process run: fault specs live in process-global
+/// env vars, and Rust tests share one process.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with exactly `vars` set (both fault variables scrubbed first),
+/// holding the env lock for the duration.
+fn with_fault_env<T>(vars: &[(&str, &str)], f: impl FnOnce() -> T) -> T {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    std::env::remove_var(NAN_ENV);
+    std::env::remove_var(SPIKE_ENV);
+    for (k, v) in vars {
+        std::env::set_var(k, v);
+    }
+    let r = f();
+    for (k, _) in vars {
+        std::env::remove_var(k);
+    }
+    r
+}
+
+/// Small fig3-style traffic IALS config (the `checkpoint_resume.rs`
+/// shape): 8 envs × 16 rollout, 4 PPO iterations, a curve point every
+/// iteration, native backend, one rollback in the budget.
+fn test_cfg(num_learners: usize, ckpt_dir: &Path, checkpoint_every: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "health".into();
+    cfg.domain = DomainKind::Traffic;
+    cfg.simulator = SimulatorKind::Ials;
+    cfg.num_learners = num_learners;
+    cfg.seeds = vec![7];
+    cfg.eval_every = PER_ITER;
+    cfg.eval_episodes = 1;
+    cfg.ppo.num_envs = 8;
+    cfg.ppo.rollout_len = 16;
+    cfg.ppo.epochs = 2;
+    cfg.ppo.minibatch = 32;
+    cfg.ppo.total_steps = 4 * PER_ITER;
+    cfg.aip.dataset_size = 1200;
+    cfg.aip.eval_size = 800;
+    cfg.aip.train_epochs = 1;
+    cfg.aip.batch = 64;
+    cfg.runtime.backend = BackendKind::Native;
+    cfg.checkpoint_every = checkpoint_every;
+    cfg.checkpoint_dir = ckpt_dir.to_str().unwrap().to_string();
+    cfg.health.max_rollbacks = 1;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Fresh per-test root under the system temp dir.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ials_health_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn snapshot(store: &ParamStore) -> Vec<Vec<f32>> {
+    store.names().iter().map(|n| store.get(n).unwrap().to_vec()).collect()
+}
+
+/// The bit-comparable content of a learning curve (wall-clock excluded).
+#[allow(clippy::type_complexity)]
+fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 7], usize)> {
+    curve
+        .iter()
+        .map(|p| {
+            (
+                p.env_steps,
+                p.eval_mean.to_bits(),
+                p.eval_std.to_bits(),
+                [
+                    p.stats.total_loss.to_bits(),
+                    p.stats.pg_loss.to_bits(),
+                    p.stats.v_loss.to_bits(),
+                    p.stats.entropy.to_bits(),
+                    p.stats.approx_kl.to_bits(),
+                    p.stats.grad_norm.to_bits(),
+                    p.stats.rollout_reward.to_bits(),
+                ],
+                p.stats.episodes,
+            )
+        })
+        .collect()
+}
+
+/// Everything bit-comparable about an outcome: per-learner curve bits,
+/// AIP cross-entropy bits and final policy parameters, in learner order.
+#[allow(clippy::type_complexity)]
+fn outcome_bits(
+    out: &MultiLearnerOutcome,
+) -> (Vec<Vec<(usize, u64, u64, [u32; 7], usize)>>, Vec<u64>, Vec<Vec<Vec<f32>>>) {
+    (
+        out.results.iter().map(|r| curve_bits(&r.curve)).collect(),
+        out.results.iter().map(|r| r.aip_ce.to_bits()).collect(),
+        out.policy_stores.iter().map(snapshot).collect(),
+    )
+}
+
+/// (1) The determinism contract: enabling the guard on a clean run
+/// changes nothing — not one bit of any curve, cross-entropy or final
+/// parameter — because the checks only read metrics the trainer already
+/// computes.
+#[test]
+fn guard_on_clean_run_is_bitwise_identical_to_guard_off() {
+    let seed = 7u64;
+    let dir = tmp_dir("clean");
+    let cfg_on = test_cfg(2, &dir, 0);
+    assert!(cfg_on.health.enabled, "the guard must default to on");
+    let mut cfg_off = cfg_on.clone();
+    cfg_off.health.enabled = false;
+    let rt = Rc::new(Runtime::from_config(&cfg_on).unwrap());
+    let on = with_fault_env(&[], || run_multi_condition(&rt, &cfg_on, seed).unwrap());
+    let off = with_fault_env(&[], || run_multi_condition(&rt, &cfg_off, seed).unwrap());
+    assert_eq!(
+        outcome_bits(&on),
+        outcome_bits(&off),
+        "a guard-on clean run diverged from guard-off"
+    );
+    assert!(
+        on.health.iter().all(|h| *h == LearnerHealth::default()),
+        "a clean run must report no rollbacks and no quarantine: {:?}",
+        on.health
+    );
+}
+
+/// (2a) NaN-poisoned parameters: the param-norm check catches the
+/// divergence, the learner rolls back to the newest checkpoint, replays
+/// clean, and the whole run lands bitwise on the clean trajectory —
+/// reproducibly, run to run.
+#[test]
+fn nan_fault_rolls_back_and_recovers_bitwise() {
+    let seed = 7u64;
+    let ref_dir = tmp_dir("nan_ref");
+    let ref_cfg = test_cfg(2, &ref_dir, PER_ITER);
+    let rt = Rc::new(Runtime::from_config(&ref_cfg).unwrap());
+    let clean = with_fault_env(&[], || {
+        outcome_bits(&run_multi_condition_resumable(&rt, &ref_cfg, seed, false, None).unwrap())
+    });
+
+    let mut recovered = Vec::new();
+    for round_trip in 0..2 {
+        let dir = tmp_dir(&format!("nan_{round_trip}"));
+        let cfg = test_cfg(2, &dir, PER_ITER);
+        let out = with_fault_env(&[(NAN_ENV, "0:2")], || {
+            run_multi_condition_resumable(&rt, &cfg, seed, false, None).unwrap()
+        });
+        assert_eq!(
+            out.health[0],
+            LearnerHealth { quarantined: false, rollbacks: 1 },
+            "learner 0 must recover via exactly one rollback"
+        );
+        assert_eq!(out.health[1], LearnerHealth::default(), "learner 1 was never faulted");
+        assert!(!out.any_quarantined());
+        recovered.push(outcome_bits(&out));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    assert_eq!(recovered[0], clean, "the recovered run diverged from the clean trajectory");
+    assert_eq!(recovered[0], recovered[1], "recovery is not reproducible run to run");
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+/// (2b) A gradient-norm spike (metrics only — parameters untouched)
+/// trips the rolling-window detector the same way and recovers bitwise.
+#[test]
+fn grad_spike_fault_rolls_back_and_recovers_bitwise() {
+    let seed = 7u64;
+    // A 1-deep window with a one-strike escalation makes the ×1000 spike
+    // diverge immediately; spike_factor 50 keeps natural iteration-over-
+    // iteration grad-norm swings far below the trigger.
+    let tighten = |cfg: &mut ExperimentConfig| {
+        cfg.health.window = 1;
+        cfg.health.spike_factor = 50.0;
+        cfg.health.max_anomalies = 1;
+        cfg.validate().unwrap();
+    };
+    let ref_dir = tmp_dir("spike_ref");
+    let mut ref_cfg = test_cfg(1, &ref_dir, PER_ITER);
+    tighten(&mut ref_cfg);
+    let rt = Rc::new(Runtime::from_config(&ref_cfg).unwrap());
+    let clean_out = with_fault_env(&[], || {
+        run_multi_condition_resumable(&rt, &ref_cfg, seed, false, None).unwrap()
+    });
+    assert_eq!(
+        clean_out.health[0],
+        LearnerHealth::default(),
+        "the tightened detector must not fire on a clean run"
+    );
+    let clean = outcome_bits(&clean_out);
+
+    let dir = tmp_dir("spike");
+    let mut cfg = test_cfg(1, &dir, PER_ITER);
+    tighten(&mut cfg);
+    let out = with_fault_env(&[(SPIKE_ENV, "0:2")], || {
+        run_multi_condition_resumable(&rt, &cfg, seed, false, None).unwrap()
+    });
+    assert_eq!(
+        out.health[0],
+        LearnerHealth { quarantined: false, rollbacks: 1 },
+        "the spike must cost exactly one rollback"
+    );
+    assert_eq!(outcome_bits(&out), clean, "spike recovery diverged from the clean trajectory");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+/// (3) A fault that re-fires on every post-rollback replay exhausts the
+/// budget: only the faulty learner is quarantined, its curve is a clean
+/// prefix (it stops where the budget ran out), and every other learner
+/// is bitwise untouched.
+#[test]
+fn exhausted_rollbacks_quarantine_only_the_faulty_learner() {
+    let seed = 7u64;
+    let ref_dir = tmp_dir("quar_ref");
+    let ref_cfg = test_cfg(2, &ref_dir, PER_ITER);
+    let rt = Rc::new(Runtime::from_config(&ref_cfg).unwrap());
+    let clean = with_fault_env(&[], || {
+        outcome_bits(&run_multi_condition_resumable(&rt, &ref_cfg, seed, false, None).unwrap())
+    });
+
+    let dir = tmp_dir("quar");
+    let cfg = test_cfg(2, &dir, PER_ITER);
+    let out = with_fault_env(&[(NAN_ENV, "1:2:every")], || {
+        run_multi_condition_resumable(&rt, &cfg, seed, false, None).unwrap()
+    });
+    assert!(out.any_quarantined());
+    assert_eq!(
+        out.health[1],
+        LearnerHealth { quarantined: true, rollbacks: 1 },
+        "learner 1 must spend its whole budget, then be quarantined"
+    );
+    assert_eq!(out.health[0], LearnerHealth::default(), "learner 0 was never faulted");
+
+    let (curves, ces, params) = outcome_bits(&out);
+    let (clean_curves, clean_ces, clean_params) = clean;
+    assert_eq!(curves[0], clean_curves[0], "learner 0's curve must be bitwise unchanged");
+    assert_eq!(params[0], clean_params[0], "learner 0's parameters must be bitwise unchanged");
+    assert_eq!(ces, clean_ces, "AIP preparation happens before any fault");
+    // The quarantined learner trained through iteration 2 (t=0 plus two
+    // per-iteration points) and its replayed points are clean bits — the
+    // poison lands on the parameters *after* each point is recorded.
+    assert_eq!(curves[1].len(), 3, "learner 1 must stop at its quarantine point");
+    assert_eq!(
+        curves[1],
+        clean_curves[1][..3].to_vec(),
+        "learner 1's curve must be a clean prefix"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+/// Divergence with no valid checkpoint to roll back to (checkpointing
+/// disabled) quarantines immediately — without spending rollback budget.
+#[test]
+fn fault_without_checkpoint_quarantines_without_spending_budget() {
+    let seed = 7u64;
+    let dir = tmp_dir("nockpt");
+    let cfg = test_cfg(1, &dir, 0);
+    let rt = Rc::new(Runtime::from_config(&cfg).unwrap());
+    let out = with_fault_env(&[(NAN_ENV, "0:2")], || {
+        run_multi_condition(&rt, &cfg, seed).unwrap()
+    });
+    assert_eq!(
+        out.health[0],
+        LearnerHealth { quarantined: true, rollbacks: 0 },
+        "no checkpoint means immediate quarantine, budget untouched"
+    );
+}
+
+/// End to end through the real binary: a quarantined learner makes
+/// `repro train` print the per-learner health summary and exit nonzero,
+/// while the healthy learners' curves still land on disk.
+#[test]
+fn quarantine_drives_a_nonzero_exit_with_health_report() {
+    let seed = 7u64;
+    let dir = tmp_dir("exit");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cfg = test_cfg(2, &dir.join("ckpt"), PER_ITER);
+    cfg.results_dir = dir.join("results").to_str().unwrap().to_string();
+    let config_path = dir.join("health.toml");
+    std::fs::write(&config_path, cfg.to_toml_string()).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["train", "--config", config_path.to_str().unwrap(), "--seed", "7"])
+        .env(NAN_ENV, "1:2:every")
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        !out.status.success(),
+        "a quarantined learner must fail the run\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("QUARANTINED"),
+        "the health summary must name the quarantined learner\nstdout:\n{stdout}"
+    );
+    assert!(
+        stderr.contains("quarantined"),
+        "the exit error must explain the degradation\nstderr:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("rolled back to checkpoint"),
+        "the rollback attempt must be logged\nstderr:\n{stderr}"
+    );
+    // The healthy learner's curve still landed.
+    let healthy_curve =
+        format!("{}/ials-health_seed{seed}_learner0.csv", cfg.results_dir);
+    assert!(
+        std::path::Path::new(&healthy_curve).exists(),
+        "healthy learners must still produce curves: missing {healthy_curve}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -60,7 +60,7 @@ fn snapshot(store: &ParamStore) -> Vec<Vec<f32>> {
 
 /// The bit-comparable content of a learning curve (wall-clock excluded).
 #[allow(clippy::type_complexity)]
-fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
+fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 7], usize)> {
     curve
         .iter()
         .map(|p| {
@@ -74,6 +74,7 @@ fn curve_bits(curve: &[CurvePoint]) -> Vec<(usize, u64, u64, [u32; 6], usize)> {
                     p.stats.v_loss.to_bits(),
                     p.stats.entropy.to_bits(),
                     p.stats.approx_kl.to_bits(),
+                    p.stats.grad_norm.to_bits(),
                     p.stats.rollout_reward.to_bits(),
                 ],
                 p.stats.episodes,
@@ -132,7 +133,7 @@ fn one_learner_run_is_bitwise_identical_to_single_learner_path() {
 fn run_k3(
     num_workers: usize,
     nn_workers: usize,
-) -> (Vec<Vec<(usize, u64, u64, [u32; 6], usize)>>, Vec<Vec<Vec<f32>>>) {
+) -> (Vec<Vec<(usize, u64, u64, [u32; 7], usize)>>, Vec<Vec<Vec<f32>>>) {
     let cfg = test_cfg(num_workers, nn_workers, 3);
     let rt = Rc::new(Runtime::from_config(&cfg).unwrap());
     let out = run_multi_condition(&rt, &cfg, 21).unwrap();
