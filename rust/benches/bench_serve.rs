@@ -1,0 +1,248 @@
+//! Serving-runtime throughput: end-to-end `POST /v1/learners/<j>/act`
+//! requests/sec against a live in-process [`ials::serve::Server`] over
+//! real loopback TCP, sweeping `clients × batch_window_ms`. The
+//! interesting comparison is window 0 (every request is its own forward)
+//! vs a small coalescing window at high client counts — batching should
+//! buy aggregate throughput without hurting single-client latency much.
+//! Tail latency (p95/p99) is reported per cell because the batcher's
+//! deadline handling is exactly what the serving PR is about.
+//!
+//! Run: `cargo bench --bench bench_serve`
+//! Emits a table to stdout and a JSON record per cell to
+//! `results/bench_serve.json` for the CI regression guard.
+
+use ials::bench_harness::Table;
+use ials::runtime::checkpoint::CheckpointManager;
+use ials::serve::{json, Server, ServeOptions};
+use ials::util::state::StateWriter;
+use ials::util::Pcg32;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+const OBS: usize = 32;
+const HID: usize = 64;
+const ACT: usize = 8;
+const LEARNERS: usize = 2;
+
+const CLIENT_SWEEP: [usize; 3] = [1, 4, 16];
+const WINDOW_SWEEP_MS: [u64; 2] = [0, 2];
+const REQUESTS_PER_CLIENT: usize = 200;
+const WARMUP_PER_CLIENT: usize = 20;
+
+struct Cell {
+    clients: usize,
+    batch_window_ms: u64,
+    requests_per_sec: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint fabrication (the exact `write_checkpoint` payload layout)
+// ---------------------------------------------------------------------------
+
+fn policy_tensors(seed: u64) -> Vec<(String, Vec<f32>)> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensor = |name: &str, n: usize| {
+        let vals: Vec<f32> =
+            (0..n).map(|_| (rng.next_u32() as f32 / u32::MAX as f32) - 0.5).collect();
+        (name.to_string(), vals)
+    };
+    vec![
+        tensor("w1", OBS * HID),
+        tensor("b1", HID),
+        tensor("w2", HID * HID),
+        tensor("b2", HID),
+        tensor("w_pi", HID * ACT),
+        tensor("b_pi", ACT),
+        tensor("w_v", HID),
+        tensor("b_v", 1),
+    ]
+}
+
+fn checkpoint_payload() -> Vec<u8> {
+    let mut w = StateWriter::new();
+    w.str("ials"); // domain
+    w.str("ials"); // simulator
+    w.str("policy"); // policy model
+    w.usize(LEARNERS);
+    w.usize(8); // num_envs
+    w.usize(16); // rollout_len
+    w.usize(1024); // total_steps
+    w.usize(256); // eval_every
+    w.usize(3); // rounds_done
+    for l in 0..LEARNERS {
+        w.u64(100 + l as u64);
+        let tensors = policy_tensors(7000 + l as u64);
+        w.usize(tensors.len());
+        for (name, vals) in &tensors {
+            w.str(name);
+            w.f32s(vals);
+        }
+        w.bytes(&[1, 2, 3]); // opaque loop state (serving skips it)
+        w.bytes(&[4, 5]); // opaque env state (serving skips it)
+    }
+    w.into_bytes()
+}
+
+fn checkpoint_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ials_bench_serve_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    CheckpointManager::new(&dir, 4).save(1, &checkpoint_payload()).expect("save checkpoint");
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Client fan-out
+// ---------------------------------------------------------------------------
+
+/// One canonical act request per learner, prebuilt so client threads only
+/// write bytes and read the reply.
+fn request_bytes(learner: usize) -> Vec<u8> {
+    let obs: Vec<f32> = (0..OBS).map(|i| i as f32 * 0.01 - 0.15).collect();
+    let body = format!("{{\"obs\":{}}}", json::nums(&obs));
+    format!(
+        "POST /v1/learners/{learner}/act HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+fn exchange(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+    s.write_all(raw).unwrap();
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).to_string()
+}
+
+/// Drive `clients` threads × `reqs` fresh-connection requests each;
+/// returns every request's wall-clock latency in seconds.
+fn drive(addr: SocketAddr, clients: usize, reqs: usize) -> Vec<f64> {
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let raw = request_bytes(c % LEARNERS);
+                let mut lat = Vec::with_capacity(reqs);
+                for _ in 0..reqs {
+                    let t0 = Instant::now();
+                    let resp = exchange(addr, &raw);
+                    lat.push(t0.elapsed().as_secs_f64());
+                    assert!(
+                        resp.starts_with("HTTP/1.1 200"),
+                        "bench request failed: {}",
+                        &resp[..resp.len().min(120)]
+                    );
+                }
+                lat
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn measure(dir: &Path, clients: usize, batch_window_ms: u64) -> Cell {
+    let opts = ServeOptions {
+        port: 0,
+        batch_window: Duration::from_millis(batch_window_ms),
+        max_batch: 64,
+        queue_capacity: 1024,
+        workers: 8,
+        read_timeout: Duration::from_secs(5),
+        write_timeout: Duration::from_secs(5),
+        request_timeout: Duration::from_secs(10),
+        max_body_bytes: 1 << 20,
+        engine_stall: None,
+        inject_panic: false,
+    };
+    let server = Server::spawn(dir, opts).expect("spawn server");
+    let addr = server.addr();
+
+    drive(addr, clients, WARMUP_PER_CLIENT); // warmup
+    let t0 = Instant::now();
+    let mut lat = drive(addr, clients, REQUESTS_PER_CLIENT);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    server.begin_shutdown();
+    server.join().expect("server join");
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = (clients * REQUESTS_PER_CLIENT) as f64;
+    let rps = total / elapsed;
+    println!(
+        "bench serve/c{clients}/w{batch_window_ms}ms: {rps:.0} req/s  p50 {:.3} ms  p99 {:.3} ms",
+        percentile(&lat, 0.50) * 1e3,
+        percentile(&lat, 0.99) * 1e3,
+    );
+    Cell {
+        clients,
+        batch_window_ms,
+        requests_per_sec: rps,
+        p50_ms: percentile(&lat, 0.50) * 1e3,
+        p95_ms: percentile(&lat, 0.95) * 1e3,
+        p99_ms: percentile(&lat, 0.99) * 1e3,
+    }
+}
+
+fn main() {
+    let dir = checkpoint_dir();
+    let mut cells: Vec<Cell> = Vec::new();
+    for &w in &WINDOW_SWEEP_MS {
+        for &c in &CLIENT_SWEEP {
+            cells.push(measure(&dir, c, w));
+        }
+    }
+
+    let mut table = Table::new(
+        "policy-inference serving (end-to-end act requests/sec over loopback TCP)",
+        &["clients", "window ms", "req/s", "p50 ms", "p95 ms", "p99 ms"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.clients.to_string(),
+            c.batch_window_ms.to_string(),
+            format!("{:.0}", c.requests_per_sec),
+            format!("{:.3}", c.p50_ms),
+            format!("{:.3}", c.p95_ms),
+            format!("{:.3}", c.p99_ms),
+        ]);
+    }
+    table.print();
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"op\": \"serve_act\", \"clients\": {}, \"batch_window_ms\": {}, \
+             \"learners\": {}, \"requests_per_sec\": {:.1}, \"p50_ms\": {:.3}, \
+             \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"backend\": \"native\"}}{}\n",
+            c.clients,
+            c.batch_window_ms,
+            LEARNERS,
+            c.requests_per_sec,
+            c.p50_ms,
+            c.p95_ms,
+            c.p99_ms,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("]\n");
+    println!("{json}");
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::File::create("results/bench_serve.json"))
+        .and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        eprintln!("could not write results/bench_serve.json: {e}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

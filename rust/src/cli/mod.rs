@@ -95,6 +95,8 @@ USAGE:
                [--checkpoint-every <steps>] [--checkpoint-dir <dir>] [--resume]
                [--distributed <n>] [--no-health]
   repro collect --domain <traffic|warehouse> [--steps <n>] [--seed <n>]
+  repro serve  --checkpoint-dir <run-dir> [--config <toml>] [--port <p>]
+  repro inspect --checkpoint-dir <run-dir>
   repro bench-throughput            # GS vs LS vs IALS steps/sec table
   repro list                        # list figures and artifacts
 
@@ -125,7 +127,24 @@ max_anomalies/max_rollbacks; see PERF.md). A diverged learner rolls back
 to its newest valid checkpoint; after max_rollbacks it is quarantined —
 the run finishes the healthy learners and exits nonzero. Checks are
 read-only: a guard-on clean run is bitwise identical to --no-health
-(which disables the guard, like [health] enabled = false).";
+(which disables the guard, like [health] enabled = false).
+Serving: `repro serve --checkpoint-dir <run-dir>` loads the newest valid
+checkpoint of a training run (the <checkpoint-dir>/<condition>_seed<seed>/
+directory) and serves greedy policy inference over loopback HTTP:
+POST /v1/learners/<j>/act with {\"obs\": [...]} returns action, value and
+logits; GET /healthz, /readyz and /v1/meta report liveness, drain state
+and the serving geometry; POST /admin/reload atomically hot-swaps to the
+newest checkpoint after full off-to-the-side validation (a corrupt or
+geometry-changing candidate is a 409 and the old params keep serving).
+Concurrent requests are coalesced into one batched forward per learner
+([serve] batch_window_ms / max_batch — batching is bitwise-neutral);
+the bounded queue sheds overload with 503 + Retry-After ([serve]
+queue_capacity), slow clients time out ([serve] read/write_timeout_ms),
+per-request deadlines return 504 ([serve] request_timeout_ms), and
+SIGINT/SIGTERM drain in-flight requests before exiting 0.
+`repro inspect --checkpoint-dir <run-dir>` prints one line per checkpoint
+file: iteration, header version, learner count and geometry, and whether
+the file fully validates (CRC + payload parse) or is CORRUPT.";
 
 #[cfg(test)]
 mod tests {

@@ -11,6 +11,6 @@ pub mod toml;
 
 pub use schema::{
     AipKind, BackendKind, DomainKind, ExperimentConfig, HealthConfig, PpoConfig, RuntimeConfig,
-    SimulatorKind, TrafficConfig, WarehouseConfig,
+    ServeConfig, SimulatorKind, TrafficConfig, WarehouseConfig,
 };
 pub use toml::{parse as parse_toml, Document, Value};

@@ -210,6 +210,60 @@ impl Default for HealthConfig {
     }
 }
 
+/// Policy-inference server settings (`serve`): how `repro serve` batches,
+/// bounds and times out requests. All knobs are robustness levers — the
+/// server's correctness (batched forwards bitwise identical to serial
+/// ones, atomic hot-reload) does not depend on any of them.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP port to listen on (loopback). `repro serve --port P` overrides;
+    /// `0` binds an ephemeral port (printed at startup) for tests/CI.
+    pub port: usize,
+    /// How long the micro-batcher holds the first request of a batch while
+    /// coalescing concurrent ones into a single batched policy forward.
+    /// `0` disables coalescing (every request is a batch of one).
+    pub batch_window_ms: u64,
+    /// Largest batch one forward executes; a full batch dispatches
+    /// immediately, before the window elapses.
+    pub max_batch: usize,
+    /// Bound of the request queue between connection workers and the
+    /// engine thread. A full queue sheds new requests with
+    /// `503 + Retry-After` instead of letting latency grow without bound.
+    pub queue_capacity: usize,
+    /// Connection-handler threads (each parses HTTP, submits to the
+    /// engine, and writes the response for one connection at a time).
+    pub workers: usize,
+    /// Socket read timeout: a client that stalls mid-request (slow loris)
+    /// is answered `408` and disconnected after this long.
+    pub read_timeout_ms: u64,
+    /// Socket write timeout: a client that stops reading its response is
+    /// disconnected after this long.
+    pub write_timeout_ms: u64,
+    /// Per-request deadline, admission to response: requests that cannot
+    /// be served in time are answered `504` (and shed engine-side if the
+    /// deadline expires while queued).
+    pub request_timeout_ms: u64,
+    /// Largest request body accepted; larger ones are answered `413`
+    /// before any allocation of the claimed size.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 8080,
+            batch_window_ms: 2,
+            max_batch: 64,
+            queue_capacity: 256,
+            workers: 4,
+            read_timeout_ms: 5_000,
+            write_timeout_ms: 5_000,
+            request_timeout_ms: 10_000,
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
 /// Traffic domain parameters (§5.2). The GS is a `grid x grid` network of
 /// signalized intersections; the LS is the single agent intersection.
 #[derive(Debug, Clone)]
@@ -413,6 +467,7 @@ pub struct ExperimentConfig {
     pub runtime: RuntimeConfig,
     pub distributed: DistributedConfig,
     pub health: HealthConfig,
+    pub serve: ServeConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -437,6 +492,7 @@ impl Default for ExperimentConfig {
             runtime: RuntimeConfig::default(),
             distributed: DistributedConfig::default(),
             health: HealthConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -553,6 +609,21 @@ impl ExperimentConfig {
         h.max_anomalies = doc.int_or("health", "max_anomalies", h.max_anomalies as i64)? as usize;
         h.max_rollbacks = doc.int_or("health", "max_rollbacks", h.max_rollbacks as i64)? as usize;
 
+        let s = &mut cfg.serve;
+        s.port = doc.int_or("serve", "port", s.port as i64)? as usize;
+        s.batch_window_ms =
+            doc.int_or("serve", "batch_window_ms", s.batch_window_ms as i64)? as u64;
+        s.max_batch = doc.int_or("serve", "max_batch", s.max_batch as i64)? as usize;
+        s.queue_capacity = doc.int_or("serve", "queue_capacity", s.queue_capacity as i64)? as usize;
+        s.workers = doc.int_or("serve", "workers", s.workers as i64)? as usize;
+        s.read_timeout_ms =
+            doc.int_or("serve", "read_timeout_ms", s.read_timeout_ms as i64)? as u64;
+        s.write_timeout_ms =
+            doc.int_or("serve", "write_timeout_ms", s.write_timeout_ms as i64)? as u64;
+        s.request_timeout_ms =
+            doc.int_or("serve", "request_timeout_ms", s.request_timeout_ms as i64)? as u64;
+        s.max_body_bytes = doc.int_or("serve", "max_body_bytes", s.max_body_bytes as i64)? as usize;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -661,6 +732,43 @@ impl ExperimentConfig {
             "[health] max_rollbacks must be in 1..=100 (got {}); to disable the guard set \
              [health] enabled = false instead",
             h.max_rollbacks
+        );
+        let s = &self.serve;
+        anyhow::ensure!(s.port <= 65_535, "[serve] port must be in 0..=65535 (got {})", s.port);
+        anyhow::ensure!(
+            s.batch_window_ms <= 1_000,
+            "[serve] batch_window_ms must be in 0..=1000 (got {})",
+            s.batch_window_ms
+        );
+        anyhow::ensure!(
+            (1..=4096).contains(&s.max_batch),
+            "[serve] max_batch must be in 1..=4096 (got {})",
+            s.max_batch
+        );
+        anyhow::ensure!(
+            (1..=65_536).contains(&s.queue_capacity),
+            "[serve] queue_capacity must be in 1..=65536 (got {})",
+            s.queue_capacity
+        );
+        anyhow::ensure!(
+            (1..=256).contains(&s.workers),
+            "[serve] workers must be in 1..=256 (got {})",
+            s.workers
+        );
+        for (what, ms) in [
+            ("read_timeout_ms", s.read_timeout_ms),
+            ("write_timeout_ms", s.write_timeout_ms),
+            ("request_timeout_ms", s.request_timeout_ms),
+        ] {
+            anyhow::ensure!(
+                (1..=600_000).contains(&ms),
+                "[serve] {what} must be in 1..=600000 (got {ms})"
+            );
+        }
+        anyhow::ensure!(
+            (1..=(1 << 30)).contains(&s.max_body_bytes),
+            "[serve] max_body_bytes must be in 1..=2^30 (got {})",
+            s.max_body_bytes
         );
         Ok(())
     }
@@ -784,12 +892,33 @@ impl ExperimentConfig {
         e(&mut o, "spike_factor", h.spike_factor.to_string());
         e(&mut o, "max_anomalies", h.max_anomalies.to_string());
         e(&mut o, "max_rollbacks", h.max_rollbacks.to_string());
+        let v = &self.serve;
+        o.push_str("\n[serve]\n");
+        e(&mut o, "port", v.port.to_string());
+        e(&mut o, "batch_window_ms", v.batch_window_ms.to_string());
+        e(&mut o, "max_batch", v.max_batch.to_string());
+        e(&mut o, "queue_capacity", v.queue_capacity.to_string());
+        e(&mut o, "workers", v.workers.to_string());
+        e(&mut o, "read_timeout_ms", v.read_timeout_ms.to_string());
+        e(&mut o, "write_timeout_ms", v.write_timeout_ms.to_string());
+        e(&mut o, "request_timeout_ms", v.request_timeout_ms.to_string());
+        e(&mut o, "max_body_bytes", v.max_body_bytes.to_string());
         o
     }
 }
 
-const KNOWN_TABLES: &[&str] =
-    &["", "experiment", "traffic", "warehouse", "ppo", "aip", "runtime", "distributed", "health"];
+const KNOWN_TABLES: &[&str] = &[
+    "",
+    "experiment",
+    "traffic",
+    "warehouse",
+    "ppo",
+    "aip",
+    "runtime",
+    "distributed",
+    "health",
+    "serve",
+];
 
 const KNOWN_KEYS: &[(&str, &str)] = &[
     ("experiment", "name"),
@@ -852,6 +981,15 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("health", "spike_factor"),
     ("health", "max_anomalies"),
     ("health", "max_rollbacks"),
+    ("serve", "port"),
+    ("serve", "batch_window_ms"),
+    ("serve", "max_batch"),
+    ("serve", "queue_capacity"),
+    ("serve", "workers"),
+    ("serve", "read_timeout_ms"),
+    ("serve", "write_timeout_ms"),
+    ("serve", "request_timeout_ms"),
+    ("serve", "max_body_bytes"),
 ];
 
 fn check_known_keys(doc: &Document) -> Result<()> {

@@ -25,6 +25,7 @@
 //! | [`rl`] | GAE, rollout buffer, PPO driver |
 //! | [`coordinator`] | trainers, evaluators, experiment harnesses per figure |
 //! | [`dbn`] | dynamic-Bayesian-network d-separation / minimal d-set search |
+//! | [`serve`] | batched policy-inference server over trained checkpoints |
 //! | [`config`] | TOML-subset parser + typed experiment schema |
 //! | [`metrics`] | CSV learning curves, run summaries |
 //! | [`util`] | PRNG, stats, logging, timing |
@@ -44,6 +45,7 @@ pub mod metrics;
 pub mod nn;
 pub mod rl;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testkit;
 pub mod util;

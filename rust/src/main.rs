@@ -9,11 +9,12 @@ use ials::coordinator::{
     run_condition, run_distributed, run_figure, run_multi_condition_resumable, run_worker,
     DistributedOptions, FIGURES, WorkerArgs,
 };
-use ials::testkit::fault::abort_after_from_env;
 use ials::metrics::write_curve;
 use ials::runtime::Runtime;
+use ials::serve::ServeOptions;
 use ials::sim::traffic::TrafficGlobalEnv;
 use ials::sim::warehouse::WarehouseGlobalEnv;
+use ials::testkit::fault::abort_after_from_env;
 use std::rc::Rc;
 
 fn main() {
@@ -219,6 +220,28 @@ fn run(argv: &[String]) -> Result<()> {
                 data.episodes.len(),
                 data.u_marginals()
             );
+        }
+        "serve" => {
+            // Policy-inference server over a trained checkpoint run
+            // directory (the `<checkpoint_dir>/<sim>-<config>_seed<S>`
+            // path a `train --checkpoint-dir` run writes).
+            let cfg = load_config(&args)?;
+            let dir = std::path::PathBuf::from(args.require("checkpoint-dir")?);
+            let mut opts = ServeOptions::from_config(&cfg.serve)?;
+            if args.get("port").is_some() {
+                let port = args.get_usize("port", cfg.serve.port)?;
+                anyhow::ensure!(port <= u16::MAX as usize, "--port {port} is out of range");
+                opts.port = port as u16;
+            }
+            ials::serve::run(&dir, opts)?;
+        }
+        "inspect" => {
+            // Read-only checkpoint-directory report: one line per file
+            // with header metadata, geometry and CRC validity.
+            let dir = std::path::PathBuf::from(args.require("checkpoint-dir")?);
+            for line in ials::serve::snapshot::inspect_dir(&dir)? {
+                println!("{line}");
+            }
         }
         "list" => {
             println!("figures: {FIGURES:?}");

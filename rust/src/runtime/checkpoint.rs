@@ -27,8 +27,51 @@ use crate::{log_info, log_warn};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
-const CKPT_MAGIC: &[u8; 8] = b"IALSCKPT";
-const CKPT_VERSION: u32 = 1;
+/// Magic and format version of the checkpoint header — public so the
+/// read-only consumers (`repro inspect`, the serving runtime) can name
+/// them in operator-facing output.
+pub const CKPT_MAGIC: &[u8; 8] = b"IALSCKPT";
+pub const CKPT_VERSION: u32 = 1;
+
+/// File name of the checkpoint for iteration `iter` (`ckpt_{iter:08}.bin`).
+pub fn checkpoint_file_name(iter: usize) -> String {
+    format!("ckpt_{iter:08}.bin")
+}
+
+/// Checkpoint files present in `dir`, `(iteration, path)` sorted ascending.
+/// Foreign files are ignored; a missing or unreadable directory is simply
+/// empty. This is the directory view [`CheckpointManager`], `repro inspect`
+/// and the serving runtime's loader all share.
+pub fn list_checkpoints(dir: impl AsRef<Path>) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir.as_ref()) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        if let Some(name) = entry.file_name().to_str() {
+            if let Some(iter) = parse_checkpoint_iter(name) {
+                out.push((iter, entry.path()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Parse `ckpt_{iter:08}.bin` back to its iteration number.
+fn parse_checkpoint_iter(name: &str) -> Option<usize> {
+    let digits = name.strip_prefix("ckpt_")?.strip_suffix(".bin")?;
+    if digits.len() != 8 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Validate one checkpoint file (magic, version, length, CRC) and return
+/// its payload — `util::state::read_headered` with the checkpoint framing.
+pub fn read_checkpoint_file(path: impl AsRef<Path>) -> Result<Vec<u8>> {
+    read_headered(path, CKPT_MAGIC, CKPT_VERSION)
+}
 
 /// Manages the checkpoint files of one run directory: atomic saves, a
 /// bounded retention window, and validated newest-first loads.
@@ -49,34 +92,13 @@ impl CheckpointManager {
     }
 
     fn file_name(iter: usize) -> String {
-        format!("ckpt_{iter:08}.bin")
-    }
-
-    /// Parse `ckpt_{iter:08}.bin` back to its iteration number.
-    fn parse_iter(name: &str) -> Option<usize> {
-        let digits = name.strip_prefix("ckpt_")?.strip_suffix(".bin")?;
-        if digits.len() != 8 || !digits.bytes().all(|b| b.is_ascii_digit()) {
-            return None;
-        }
-        digits.parse().ok()
+        checkpoint_file_name(iter)
     }
 
     /// Checkpoint files present in the directory, sorted by iteration
     /// ascending. Foreign files are ignored.
     fn list(&self) -> Vec<(usize, PathBuf)> {
-        let mut out = Vec::new();
-        let Ok(entries) = std::fs::read_dir(&self.dir) else {
-            return out;
-        };
-        for entry in entries.flatten() {
-            if let Some(name) = entry.file_name().to_str() {
-                if let Some(iter) = Self::parse_iter(name) {
-                    out.push((iter, entry.path()));
-                }
-            }
-        }
-        out.sort();
-        out
+        list_checkpoints(&self.dir)
     }
 
     /// Write `payload` as the checkpoint for `iter` (temp file + fsync +
@@ -99,7 +121,7 @@ impl CheckpointManager {
     /// Validate one checkpoint file and return its payload
     /// (`util::state::read_headered` with the checkpoint magic).
     fn read_validated(path: &Path) -> Result<Vec<u8>> {
-        read_headered(path, CKPT_MAGIC, CKPT_VERSION)
+        read_checkpoint_file(path)
     }
 
     /// The newest *valid* checkpoint, as `(iter, payload)`. Invalid files

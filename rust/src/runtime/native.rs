@@ -227,9 +227,28 @@ impl<'a> PolicyView<'a> {
         );
         kernels::linear_into(h2, self.w_v, Some(self.b_v), values, m, self.hid, 1, Act::None);
     }
-    // No `&self + &mut scratch` row variant on purpose: the policy forward
-    // stays coordinator-batched (action sampling consumes one RNG stream
-    // in env order), so shard-side callers exist only for the AIP views.
+
+    /// `&self + &mut scratch` forward over `m` rows: `logits` holds
+    /// `m * act_dim`, `values` holds `m`. Rows are independent (every
+    /// kernel is i-k-j per output row), so a batch of `m` rows is bitwise
+    /// identical to `m` single-row forwards — the guarantee the serving
+    /// runtime's micro-batcher is built on. The *training* path stays
+    /// coordinator-batched on purpose (action sampling consumes one RNG
+    /// stream in env order) and never calls this.
+    pub fn forward_rows(
+        &self,
+        m: usize,
+        obs: &[f32],
+        logits: &mut [f32],
+        values: &mut [f32],
+        scratch: &mut EngineScratch,
+    ) {
+        debug_assert_eq!(obs.len(), m * self.obs_dim);
+        debug_assert_eq!(logits.len(), m * self.act_dim);
+        debug_assert_eq!(values.len(), m);
+        let (h1, h2) = scratch.bands(m * self.hid, m * self.hid);
+        self.forward_band(m, obs, h1, h2, logits, values);
+    }
 }
 
 /// Shared immutable execution state of the FNN-AIP forward (tanh hidden,

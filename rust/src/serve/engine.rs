@@ -1,0 +1,180 @@
+//! The single-threaded inference engine behind the server: a
+//! deadline-aware micro-batcher that coalesces concurrent act requests
+//! into one batched `PolicyFwd` per learner on the Sync native engine.
+//!
+//! Design:
+//! - one engine thread owns the only [`EngineScratch`]; worker threads
+//!   never touch kernels — they submit [`ActJob`]s over a *bounded*
+//!   `sync_channel` (the overload backpressure point: `try_send` failing
+//!   with `Full` is what the HTTP layer turns into a 503) and block on a
+//!   per-job reply channel;
+//! - the batcher waits up to `batch_window` after the first job arrives
+//!   (or until `max_batch` jobs are queued), then groups the batch by
+//!   learner and runs one [`PolicyView::forward_rows`] per group. Rows
+//!   are independent in every kernel, so a batched response is bitwise
+//!   identical to a serial one — `tests/serve.rs` asserts exactly that;
+//! - jobs whose deadline passed while queued are answered with a shed
+//!   reply instead of being computed — under overload the server does
+//!   less work, not more;
+//! - drain is free: when every submitter handle is dropped, `recv`
+//!   returns `Disconnected` *after* delivering all queued jobs, so the
+//!   engine finishes in-flight work and exits without a flush protocol.
+
+use crate::runtime::native::{EngineScratch, PolicyView};
+use crate::serve::snapshot::PolicySnapshot;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+/// One act request, routed to learner `learner`.
+pub struct ActJob {
+    pub learner: usize,
+    pub obs: Vec<f32>,
+    /// Absolute deadline; jobs still queued past it are shed, not run.
+    pub deadline: Instant,
+    /// Reply slot (capacity 1; the worker blocks on it with a timeout).
+    pub resp: SyncSender<EngineReply>,
+}
+
+/// What the engine sends back for one job.
+pub enum EngineReply {
+    /// Greedy action, value estimate and the full logit row.
+    Act { action: usize, value: f32, logits: Vec<f32> },
+    /// The job was not computed; `reason` is operator-facing.
+    Shed { reason: String },
+}
+
+/// Batching knobs (from `[serve]`), plus the test-only startup stall.
+pub struct EngineConfig {
+    pub batch_window: Duration,
+    pub max_batch: usize,
+    /// Fault injection: sleep this long before processing the first
+    /// batch. Lets the shed/drain tests fill the bounded queue
+    /// deterministically. `None` in production.
+    pub stall: Option<Duration>,
+}
+
+/// Engine thread main loop: collect → batch → reply, until every
+/// submitter handle is gone and the queue is drained.
+pub fn run_engine(rx: Receiver<ActJob>, snapshot: Arc<RwLock<PolicySnapshot>>, cfg: EngineConfig) {
+    if let Some(stall) = cfg.stall {
+        std::thread::sleep(stall);
+    }
+    // Preallocate for the largest band the batcher can form; hot-reload
+    // preserves geometry, so this never regrows on the steady-state path.
+    let hid = snapshot.read().unwrap_or_else(|e| e.into_inner()).hid;
+    let mut scratch = EngineScratch::new(cfg.max_batch * hid, cfg.max_batch * hid);
+    loop {
+        // Block (with a periodic wake so a dropped channel is noticed)
+        // for the first job of the next batch.
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(job) => job,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        let mut batch = vec![first];
+        let window_closes = Instant::now() + cfg.batch_window;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= window_closes {
+                break;
+            }
+            match rx.recv_timeout(window_closes - now) {
+                Ok(job) => batch.push(job),
+                Err(RecvTimeoutError::Timeout) => break,
+                // Keep the jobs we already pulled; they run below and
+                // then the outer loop observes the disconnect.
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let snap = snapshot.read().unwrap_or_else(|e| e.into_inner());
+        run_batch(batch, &snap, &mut scratch);
+    }
+}
+
+/// Run one collected batch: shed expired jobs, group the rest by learner,
+/// one row-band forward per group, reply per job. Reply sends ignore
+/// errors — a worker that timed out and went away already answered 504.
+fn run_batch(batch: Vec<ActJob>, snap: &PolicySnapshot, scratch: &mut EngineScratch) {
+    let now = Instant::now();
+    // Group job indices by learner, preserving arrival order within each
+    // group (grouping must not affect results — rows are independent).
+    let mut by_learner: std::collections::BTreeMap<usize, Vec<ActJob>> =
+        std::collections::BTreeMap::new();
+    for job in batch {
+        if now >= job.deadline {
+            let reply = EngineReply::Shed {
+                reason: "deadline exceeded while queued (server overloaded)".to_string(),
+            };
+            let _ = job.resp.try_send(reply);
+            continue;
+        }
+        // The HTTP layer validates learner index and obs length against
+        // the serving snapshot before submitting; re-check here so a bad
+        // job can only ever be shed, never panic the engine thread.
+        if job.learner >= snap.stores.len() || job.obs.len() != snap.obs_dim {
+            let reason = format!(
+                "stale job: learner {} obs_len {} vs snapshot ({} learner(s), obs_dim {})",
+                job.learner,
+                job.obs.len(),
+                snap.stores.len(),
+                snap.obs_dim
+            );
+            let _ = job.resp.try_send(EngineReply::Shed { reason });
+            continue;
+        }
+        by_learner.entry(job.learner).or_default().push(job);
+    }
+    for (learner, jobs) in by_learner {
+        let view = match PolicyView::resolve(&snap.stores[learner]) {
+            Ok(v) => v,
+            Err(e) => {
+                // Unreachable for a validated snapshot; answer rather
+                // than wedge the workers if it ever happens.
+                for job in jobs {
+                    let reason = format!("learner {learner}'s store failed to resolve: {e:#}");
+                    let _ = job.resp.try_send(EngineReply::Shed { reason });
+                }
+                continue;
+            }
+        };
+        let m = jobs.len();
+        let mut obs = Vec::with_capacity(m * view.obs_dim);
+        for job in &jobs {
+            obs.extend_from_slice(&job.obs);
+        }
+        let mut logits = vec![0.0f32; m * view.act_dim];
+        let mut values = vec![0.0f32; m];
+        view.forward_rows(m, &obs, &mut logits, &mut values, scratch);
+        for (i, job) in jobs.into_iter().enumerate() {
+            let row = logits[i * view.act_dim..(i + 1) * view.act_dim].to_vec();
+            let action = argmax(&row);
+            let reply = EngineReply::Act { action, value: values[i], logits: row };
+            let _ = job.resp.try_send(reply);
+        }
+    }
+}
+
+/// Greedy action: index of the largest logit, first on ties — the
+/// deterministic serving-side policy (no sampling temperature).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_is_first_on_ties() {
+        assert_eq!(argmax(&[0.0, 1.0, 1.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-1.0, -3.0]), 0);
+    }
+}

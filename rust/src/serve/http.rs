@@ -1,0 +1,347 @@
+//! A deliberately small HTTP/1.1 layer over blocking streams — just
+//! enough protocol for the serving runtime, parsed *strictly*. The server
+//! faces untrusted clients, so the contract here mirrors the durable-blob
+//! reader in `util::state`: every malformed input becomes a structured
+//! [`HttpError`] carrying a 4xx/5xx status and a reason naming what was
+//! wrong — never a panic, never an unbounded allocation.
+//!
+//! Scope decisions (all intentional):
+//! - one request per connection (`Connection: close` on every response) —
+//!   keep-alive bookkeeping buys nothing for a batch-inference endpoint
+//!   and complicates drain;
+//! - `Content-Length` bodies only; `Transfer-Encoding` is a clean 501;
+//! - the request head is capped at [`MAX_HEAD_BYTES`] (431) and the body
+//!   at the configured `max_body_bytes` (413), both *before* allocation.
+
+use std::io::{Read, Write};
+
+use crate::serve::json;
+
+/// Upper bound on the request line + headers. 8 KiB matches the common
+/// default of production HTTP servers and is far above anything the
+/// serving API needs.
+pub const MAX_HEAD_BYTES: usize = 8192;
+
+/// A parsed request. Header names are kept as received; lookup via
+/// [`Request::header`] is case-insensitive per RFC 9110.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup; first match wins.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k.eq_ignore_ascii_case(name)).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A structured protocol-level rejection: the status the client gets and
+/// the reason that goes into the JSON error body (and the server log).
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub reason: String,
+    /// Bytes the client is known to still be sending (a declared body the
+    /// server refused to read). The connection handler discards up to
+    /// this many bytes after responding, so closing the socket does not
+    /// RST the response away while the client is mid-upload.
+    pub drain: usize,
+}
+
+fn err(status: u16, reason: impl Into<String>) -> HttpError {
+    HttpError { status, reason: reason.into(), drain: 0 }
+}
+
+/// Read and parse one request from `stream`. The caller is expected to
+/// have set a read timeout on the underlying socket; a timeout surfaces
+/// as 408, a peer that hangs up mid-request as 400 ("truncated").
+pub fn read_request(stream: &mut impl Read, max_body_bytes: usize) -> Result<Request, HttpError> {
+    let head_bytes = read_head(stream)?;
+    let head =
+        std::str::from_utf8(&head_bytes).map_err(|_| err(400, "request head is not UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let (method, target, version) = parse_request_line(request_line)?;
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue; // the trailing blank line that ended the head
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(err(400, format!("malformed header line (no ':'): {:?}", clip(line))));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(err(400, format!("malformed header name: {:?}", clip(name))));
+        }
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+
+    let mut req = Request { method, target, version, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(err(501, "transfer-encoding is not supported; send a content-length body"));
+    }
+    let body_len = match req.header("content-length") {
+        None => 0,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                let reason = format!("content-length is not a non-negative integer: {:?}", clip(v));
+                return Err(err(400, reason));
+            }
+        },
+    };
+    if body_len > max_body_bytes {
+        // Reject on the declared size alone — the body is never read, let
+        // alone allocated (the handler discards up to `drain` of it after
+        // responding; past that cap an RST is the client's problem).
+        return Err(HttpError {
+            status: 413,
+            reason: format!(
+                "declared body of {body_len} bytes exceeds the {max_body_bytes}-byte limit"
+            ),
+            drain: body_len.min(4 << 20),
+        });
+    }
+    if body_len > 0 {
+        let mut body = vec![0u8; body_len];
+        stream.read_exact(&mut body).map_err(|e| match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                err(408, format!("timed out reading the {body_len}-byte body"))
+            }
+            _ => err(400, format!("body truncated: expected {body_len} bytes ({e})")),
+        })?;
+        req.body = body;
+    }
+    Ok(req)
+}
+
+/// Accumulate bytes until the `\r\n\r\n` head terminator, bounding the
+/// head size before any parsing.
+fn read_head(stream: &mut impl Read) -> Result<Vec<u8>, HttpError> {
+    let mut head = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    loop {
+        match stream.read(&mut byte) {
+            Ok(0) => {
+                return Err(if head.is_empty() {
+                    err(400, "connection closed before any request bytes")
+                } else {
+                    err(400, format!("truncated head: peer closed after {} byte(s)", head.len()))
+                });
+            }
+            Ok(_) => {
+                head.push(byte[0]);
+                if head.len() > MAX_HEAD_BYTES {
+                    return Err(err(431, format!("head exceeds the {MAX_HEAD_BYTES}-byte limit")));
+                }
+                if head.ends_with(b"\r\n\r\n") {
+                    return Ok(head);
+                }
+            }
+            Err(e) => {
+                return Err(match e.kind() {
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                        err(408, "timed out reading the request head")
+                    }
+                    std::io::ErrorKind::Interrupted => continue,
+                    _ => err(400, format!("error reading the request head: {e}")),
+                });
+            }
+        }
+    }
+}
+
+fn parse_request_line(line: &str) -> Result<(String, String, String), HttpError> {
+    let parts: Vec<&str> = line.split(' ').collect();
+    if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
+        return Err(err(
+            400,
+            format!("malformed request line (want 'METHOD /target HTTP/1.1'): {:?}", clip(line)),
+        ));
+    }
+    let (method, target, version) = (parts[0], parts[1], parts[2]);
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(err(400, format!("malformed method: {:?}", clip(method))));
+    }
+    if !target.starts_with('/') {
+        return Err(err(400, format!("request target must start with '/': {:?}", clip(target))));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(err(505, format!("unsupported HTTP version: {:?}", clip(version))));
+    }
+    Ok((method.to_string(), target.to_string(), version.to_string()))
+}
+
+/// Bound quoted client input in error messages — garbage requests can be
+/// kilobytes long.
+fn clip(s: &str) -> String {
+    const MAX: usize = 64;
+    if s.len() <= MAX {
+        s.to_string()
+    } else {
+        let cut = (0..=MAX).rev().find(|&i| s.is_char_boundary(i)).unwrap_or(0);
+        format!("{}…", &s[..cut])
+    }
+}
+
+/// Write one complete response and flush. Every response closes the
+/// connection (see module docs). `extra_headers` come before the body —
+/// the shed path uses this for `Retry-After`.
+pub fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!("HTTP/1.1 {status} {}\r\n", status_text(status));
+    head.push_str("content-type: application/json\r\n");
+    head.push_str(&format!("content-length: {}\r\n", body.len()));
+    head.push_str("connection: close\r\n");
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// The canonical JSON error body: `{"error":{"status":S,"reason":"..."}}`.
+pub fn error_body(status: u16, reason: &str) -> Vec<u8> {
+    format!("{{\"error\":{{\"status\":{status},\"reason\":\"{}\"}}}}", json::escape(reason))
+        .into_bytes()
+}
+
+/// Reason phrases for the statuses the server actually emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.to_vec()), 1 << 20)
+    }
+
+    #[test]
+    fn parses_a_canonical_post() {
+        let raw =
+            b"POST /v1/learners/0/act HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\n\r\n{\"obs\": [0]}";
+        let req = parse(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/learners/0/act");
+        assert_eq!(req.version, "HTTP/1.1");
+        assert_eq!(req.header("content-length"), Some("12"));
+        assert_eq!(req.body, b"{\"obs\": [0]}");
+    }
+
+    #[test]
+    fn get_without_body_parses() {
+        let req = parse(b"GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn declared_oversized_body_is_413_without_reading_it() {
+        // The declared length is absurd and the body bytes are absent; a
+        // reader that tried to allocate or read first would block or OOM.
+        let e = parse(b"POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 413);
+        assert!(e.reason.contains("99999999999"), "{}", e.reason);
+        assert_eq!(e.drain, 4 << 20, "the discard hint is capped, not the declared size");
+    }
+
+    #[test]
+    fn transfer_encoding_is_501() {
+        let e = parse(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 501);
+    }
+
+    #[test]
+    fn truncated_head_and_body_are_400() {
+        let e = parse(b"POST /x HTTP/1.1\r\nContent-Le").unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.reason.contains("truncated"), "{}", e.reason);
+        let e = parse(b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.reason.contains("truncated"), "{}", e.reason);
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut raw = b"GET /".to_vec();
+        raw.extend(vec![b'a'; MAX_HEAD_BYTES + 10]);
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn malformed_lines_are_structured_4xx() {
+        for (raw, status) in [
+            (&b"\r\n\r\n"[..], 400),                                  // empty request line
+            (b"GETPOST\r\n\r\n", 400),                                // one-part line
+            (b"get /x HTTP/1.1\r\n\r\n", 400),                        // lowercase method
+            (b"GET x HTTP/1.1\r\n\r\n", 400),                         // target missing '/'
+            (b"GET /x HTTP/2\r\n\r\n", 505),                          // wrong version
+            (b"GET /x HTTP/1.1\r\nnocolonhere\r\n\r\n", 400),         // header w/o ':'
+            (b"GET /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n", 400), // non-numeric length
+            (b"GET /x HTTP/1.1\r\nContent-Length: -1\r\n\r\n", 400),  // negative length
+        ] {
+            let e = parse(raw).expect_err("must be rejected");
+            assert_eq!(e.status, status, "{raw:?}: {}", e.reason);
+            assert!(!e.reason.is_empty());
+        }
+    }
+
+    #[test]
+    fn non_utf8_head_is_400() {
+        let e = parse(b"GET /\xff\xfe HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.reason.contains("UTF-8"), "{}", e.reason);
+    }
+
+    #[test]
+    fn response_writer_emits_complete_http() {
+        let mut out = Vec::new();
+        write_response(&mut out, 503, &[("retry-after", "1")], b"{}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("content-length: 2\r\n"), "{text}");
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+    }
+
+    #[test]
+    fn error_body_is_valid_json() {
+        let body = String::from_utf8(error_body(400, "bad \"quote\"")).unwrap();
+        assert_eq!(body, "{\"error\":{\"status\":400,\"reason\":\"bad \\\"quote\\\"\"}}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Hand-rolled JSON for the serving runtime (no new dependencies —
+//! consistent with the vendored-only policy; the encoding idiom matches
+//! the distributed coordinator's `report.json`). Two halves:
+//!
+//! - encoding: string escaping and f32 rendering via Rust's
+//!   shortest-roundtrip `Display`, so a value re-parsed as f32 is bitwise
+//!   the one that was serialized — the hot-reload tests compare response
+//!   bodies byte for byte;
+//! - decoding: a strict recursive-descent parser for the *one* request
+//!   shape the server accepts (`{"obs": [f32, ...]}`). Strictness is the
+//!   point — every malformed body is a structured message naming the
+//!   offset, which the HTTP layer turns into a 400, never a panic.
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// error strings routinely quote paths and client input.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One f32 as a JSON number: Rust's shortest-roundtrip `Display` for
+/// finite values, `null` for NaN/infinity (which JSON cannot carry — and
+/// which a healthy checkpoint never produces).
+pub fn num(x: f32) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// An f32 slice as a JSON array.
+pub fn nums(xs: &[f32]) -> String {
+    let mut out = String::with_capacity(2 + xs.len() * 8);
+    out.push('[');
+    for (i, &x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&num(x));
+    }
+    out.push(']');
+    out
+}
+
+/// Parse the act-request body `{"obs": [f32, ...]}` strictly: exactly one
+/// key, a flat numeric array, nothing trailing. Every rejection names the
+/// byte offset and what was expected there.
+pub fn parse_obs(body: &[u8]) -> Result<Vec<f32>, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let mut p = Cursor { text, pos: 0 };
+    p.skip_ws();
+    p.expect(b'{')?;
+    p.skip_ws();
+    let key = p.string()?;
+    if key != "obs" {
+        return Err(format!("unknown key \"{}\": the act body is {{\"obs\": [...]}}", escape(&key)));
+    }
+    p.skip_ws();
+    p.expect(b':')?;
+    p.skip_ws();
+    p.expect(b'[')?;
+    let mut obs = Vec::new();
+    p.skip_ws();
+    if !p.eat(b']') {
+        loop {
+            obs.push(p.number()?);
+            p.skip_ws();
+            if p.eat(b']') {
+                break;
+            }
+            p.expect(b',')?;
+            p.skip_ws();
+        }
+    }
+    p.skip_ws();
+    p.expect(b'}')?;
+    p.skip_ws();
+    if p.pos != p.text.len() {
+        return Err(format!("trailing bytes after the closing '}}' at offset {}", p.pos));
+    }
+    Ok(obs)
+}
+
+struct Cursor<'a> {
+    text: &'a str,
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn skip_ws(&mut self) {
+        let rest = &self.text.as_bytes()[self.pos..];
+        let n = rest.iter().take_while(|b| b" \t\r\n".contains(b)).count();
+        self.pos += n;
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.text.as_bytes().get(self.pos).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.eat(c) {
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at offset {} (body is {} byte(s))",
+                c as char,
+                self.pos,
+                self.text.len()
+            ))
+        }
+    }
+
+    /// A JSON string without escape sequences — the only strings the act
+    /// body carries are bare keys.
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        let rest = &self.text.as_bytes()[start..];
+        let len = rest
+            .iter()
+            .position(|&b| b == b'"')
+            .ok_or_else(|| format!("unterminated string starting at offset {start}"))?;
+        self.pos = start + len + 1;
+        Ok(self.text[start..start + len].to_string())
+    }
+
+    fn number(&mut self) -> Result<f32, String> {
+        let start = self.pos;
+        let rest = &self.text.as_bytes()[start..];
+        let len = rest
+            .iter()
+            .take_while(|b| b"+-.0123456789eE".contains(b))
+            .count();
+        if len == 0 {
+            return Err(format!("expected a number at offset {start}"));
+        }
+        let s = &self.text[start..start + len];
+        let x: f32 = s.parse().map_err(|_| format!("invalid number '{s}' at offset {start}"))?;
+        self.pos = start + len;
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_matches_json_rules() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn f32_rendering_roundtrips() {
+        for x in [0.0f32, -1.5, 3.141_592_7, 1e-8, -2.5e10] {
+            let back: f32 = num(x).parse().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} must round-trip bitwise");
+        }
+        assert_eq!(num(f32::NAN), "null");
+        assert_eq!(num(f32::INFINITY), "null");
+        assert_eq!(nums(&[1.0, -2.5]), "[1,-2.5]");
+        assert_eq!(nums(&[]), "[]");
+    }
+
+    #[test]
+    fn parse_obs_accepts_the_canonical_shape() {
+        assert_eq!(parse_obs(br#"{"obs": [1, 2.5, -3e2]}"#).unwrap(), vec![1.0, 2.5, -300.0]);
+        assert_eq!(parse_obs(b"{\"obs\":[]}").unwrap(), Vec::<f32>::new());
+        assert_eq!(parse_obs(b" { \"obs\" : [ 1 , 2 ] } ").unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn parse_obs_rejects_malformed_bodies_with_offsets() {
+        for (body, want) in [
+            (&b""[..], "expected '{'"),
+            (b"{", "expected '\"'"),
+            (b"{\"obs\"", "expected ':'"),
+            (b"{\"obs\": [1,]}", "expected a number"),
+            (b"{\"obs\": [1 2]}", "expected ','"),
+            (b"{\"obs\": [1]", "expected '}'"),
+            (b"{\"obs\": [1]} x", "trailing bytes"),
+            (b"{\"action\": [1]}", "unknown key"),
+            (b"{\"obs\": [1e]}", "invalid number"),
+            (b"{\"obs", "unterminated string"),
+            (b"\xff\xfe", "not UTF-8"),
+        ] {
+            let err = parse_obs(body).expect_err(&format!("{body:?} must be rejected"));
+            assert!(err.contains(want), "{body:?}: want '{want}' in '{err}'");
+        }
+    }
+}

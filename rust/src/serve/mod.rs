@@ -1,0 +1,555 @@
+//! `repro serve` — a fault-tolerant batched policy-inference server over
+//! a trained checkpoint directory.
+//!
+//! ```text
+//!              accept            bounded conn queue
+//!   clients ─▶ acceptor thread ─▶ worker pool (HTTP parse, validate)
+//!                                     │ bounded job queue (sync_channel)
+//!                                     ▼
+//!                               engine thread (deadline-aware
+//!                               micro-batcher → one batched PolicyFwd
+//!                               per learner per window)
+//! ```
+//!
+//! The robustness contract, end to end:
+//! - **overload**: both queues are bounded; a full job queue sheds the
+//!   request with `503 + Retry-After` *at admission* (the cheap end),
+//!   and jobs whose deadline passes while queued are shed engine-side —
+//!   under overload the server does strictly less work per request;
+//! - **hostile input**: the strict HTTP layer ([`http`]) and body parser
+//!   ([`json`]) turn every malformed byte stream into a structured 4xx;
+//!   a handler panic is confined to its connection
+//!   (`catch_unwind` → 500) and the server keeps serving;
+//! - **slow clients**: socket read/write timeouts (408 / disconnect)
+//!   bound what a slow-loris peer can hold;
+//! - **hot reload**: `POST /admin/reload` validates the newest
+//!   checkpoint *completely off to the side* ([`snapshot`]) and swaps it
+//!   in atomically under the snapshot lock; a corrupt candidate is a
+//!   structured 409 and the old parameters keep serving, bit-for-bit;
+//! - **drain**: SIGINT/SIGTERM stop the acceptor, let accepted
+//!   connections and queued jobs finish, then exit 0.
+//!
+//! Endpoints: `POST /v1/learners/<j>/act`, `GET /healthz`,
+//! `GET /readyz`, `GET /v1/meta`, `POST /admin/reload`.
+
+pub mod engine;
+pub mod http;
+pub mod json;
+pub mod snapshot;
+
+use crate::config::ServeConfig;
+use crate::serve::engine::{ActJob, EngineConfig, EngineReply};
+use crate::serve::snapshot::PolicySnapshot;
+use crate::testkit::fault::serve_stall_from_env;
+use crate::{log_info, log_warn};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Resolved serving options (config `[serve]` + CLI overrides + fault
+/// injection hooks).
+pub struct ServeOptions {
+    pub port: u16,
+    pub batch_window: Duration,
+    pub max_batch: usize,
+    pub queue_capacity: usize,
+    pub workers: usize,
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+    pub request_timeout: Duration,
+    pub max_body_bytes: usize,
+    /// Fault injection: stall the engine this long at startup so tests
+    /// can fill the bounded queues deterministically (env
+    /// `IALS_SERVE_STALL_MS`, or set directly for in-process tests).
+    pub engine_stall: Option<Duration>,
+    /// Fault injection: honor the `x-inject-panic` request header by
+    /// panicking in the handler (tests the per-connection isolation).
+    pub inject_panic: bool,
+}
+
+impl ServeOptions {
+    /// Resolve from the validated `[serve]` config table, applying the
+    /// env fault-injection hook.
+    pub fn from_config(cfg: &ServeConfig) -> Result<ServeOptions> {
+        Ok(ServeOptions {
+            port: cfg.port as u16,
+            batch_window: Duration::from_millis(cfg.batch_window_ms),
+            max_batch: cfg.max_batch,
+            queue_capacity: cfg.queue_capacity,
+            workers: cfg.workers,
+            read_timeout: Duration::from_millis(cfg.read_timeout_ms),
+            write_timeout: Duration::from_millis(cfg.write_timeout_ms),
+            request_timeout: Duration::from_millis(cfg.request_timeout_ms),
+            max_body_bytes: cfg.max_body_bytes,
+            engine_stall: serve_stall_from_env()?.map(Duration::from_millis),
+            inject_panic: false,
+        })
+    }
+}
+
+/// State shared by the acceptor, workers and admin handlers.
+struct Shared {
+    opts: ServeOptions,
+    checkpoint_dir: PathBuf,
+    snapshot: Arc<RwLock<PolicySnapshot>>,
+    jobs: SyncSender<ActJob>,
+    /// Accepted-but-unhandled connections, bounded at `queue_capacity`.
+    conns: Mutex<VecDeque<TcpStream>>,
+    conns_cv: Condvar,
+    draining: AtomicBool,
+    acceptor_done: AtomicBool,
+    /// Serializes hot-reloads (concurrent `POST /admin/reload`s).
+    reload_lock: Mutex<()>,
+}
+
+/// A running server: spawned threads plus the bound address. Tests drive
+/// it in-process; the CLI wraps it in [`run`].
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: std::thread::JoinHandle<()>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    engine: std::thread::JoinHandle<()>,
+}
+
+impl Server {
+    /// Load the newest valid checkpoint from `checkpoint_dir`, bind the
+    /// loopback port (0 = ephemeral) and start the acceptor, worker pool
+    /// and engine thread.
+    pub fn spawn(checkpoint_dir: &Path, opts: ServeOptions) -> Result<Server> {
+        let snap = snapshot::load_newest_valid(checkpoint_dir)?;
+        log_info!(
+            "[serve] loaded checkpoint iteration {} ({} learner(s), obs={}, hid={}, act={})",
+            snap.iteration,
+            snap.stores.len(),
+            snap.obs_dim,
+            snap.hid,
+            snap.act_dim
+        );
+        let listener = TcpListener::bind(("127.0.0.1", opts.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+        let snapshot = Arc::new(RwLock::new(snap));
+        let (jobs, jobs_rx) = std::sync::mpsc::sync_channel(opts.queue_capacity);
+        let engine_cfg = EngineConfig {
+            batch_window: opts.batch_window,
+            max_batch: opts.max_batch,
+            stall: opts.engine_stall,
+        };
+        let engine_snapshot = Arc::clone(&snapshot);
+        let engine = std::thread::Builder::new()
+            .name("serve-engine".to_string())
+            .spawn(move || engine::run_engine(jobs_rx, engine_snapshot, engine_cfg))
+            .context("spawning the engine thread")?;
+        let n_workers = opts.workers;
+        let shared = Arc::new(Shared {
+            opts,
+            checkpoint_dir: checkpoint_dir.to_path_buf(),
+            snapshot,
+            jobs,
+            conns: Mutex::new(VecDeque::new()),
+            conns_cv: Condvar::new(),
+            draining: AtomicBool::new(false),
+            acceptor_done: AtomicBool::new(false),
+            reload_lock: Mutex::new(()),
+        });
+        let acceptor_shared = Arc::clone(&shared);
+        let acceptor = std::thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || run_acceptor(listener, acceptor_shared))
+            .context("spawning the acceptor thread")?;
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let worker_shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || run_worker(worker_shared))
+                .with_context(|| format!("spawning worker {i}"))?;
+            workers.push(handle);
+        }
+        Ok(Server { addr, shared, acceptor, workers, engine })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Start draining: stop accepting, let in-flight work finish.
+    /// Idempotent; [`Server::join`] completes the drain.
+    pub fn begin_shutdown(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.conns_cv.notify_all();
+    }
+
+    /// Complete a graceful drain: join the acceptor, then the workers
+    /// (which first empty the accepted-connection queue), then drop the
+    /// job-queue handle so the engine finishes queued jobs and exits.
+    pub fn join(self) -> Result<()> {
+        let Server { shared, acceptor, workers, engine, .. } = self;
+        shared.draining.store(true, Ordering::SeqCst);
+        acceptor.join().map_err(|_| anyhow::anyhow!("the acceptor thread panicked"))?;
+        shared.conns_cv.notify_all();
+        for (i, w) in workers.into_iter().enumerate() {
+            w.join().map_err(|_| anyhow::anyhow!("worker {i} panicked"))?;
+        }
+        // Last submitter handle: dropping it disconnects the job queue
+        // *after* its queued jobs are delivered, draining the engine.
+        drop(shared);
+        engine.join().map_err(|_| anyhow::anyhow!("the engine thread panicked"))?;
+        Ok(())
+    }
+}
+
+/// Accept loop: hand connections to the worker pool; shed with a fast
+/// 503 when the connection queue itself is full; exit when draining.
+fn run_acceptor(listener: TcpListener, shared: Arc<Shared>) {
+    if let Err(e) = listener.set_nonblocking(true) {
+        log_warn!("[serve] cannot set the listener nonblocking ({e}); drain may lag");
+    }
+    loop {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let mut q = shared.conns.lock().unwrap_or_else(|e| e.into_inner());
+                if q.len() >= shared.opts.queue_capacity {
+                    drop(q);
+                    shed_connection(&shared, stream);
+                } else {
+                    q.push_back(stream);
+                    drop(q);
+                    shared.conns_cv.notify_one();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                log_warn!("[serve] accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+    shared.acceptor_done.store(true, Ordering::SeqCst);
+    shared.conns_cv.notify_all();
+}
+
+/// Connection-level load shedding: answer 503 without parsing anything.
+fn shed_connection(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(shared.opts.write_timeout));
+    let reason = format!(
+        "connection queue is full ({} pending) — shedding load",
+        shared.opts.queue_capacity
+    );
+    let body = http::error_body(503, &reason);
+    let mut s = &stream;
+    let _ = http::write_response(&mut s, 503, &[("retry-after", "1")], &body);
+}
+
+/// Worker loop: pop an accepted connection, handle exactly one request
+/// on it, repeat. Exits only when draining *and* the acceptor is done
+/// *and* the queue is empty — accepted connections always complete.
+fn run_worker(shared: Arc<Shared>) {
+    loop {
+        let stream = {
+            let mut q = shared.conns.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                let drained = shared.draining.load(Ordering::SeqCst)
+                    && shared.acceptor_done.load(Ordering::SeqCst);
+                if drained {
+                    break None;
+                }
+                let (guard, _timeout) = shared
+                    .conns_cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap_or_else(|e| e.into_inner());
+                q = guard;
+            }
+        };
+        match stream {
+            Some(s) => handle_connection(&shared, s),
+            None => return,
+        }
+    }
+}
+
+/// Handle one connection with panic isolation: a panic anywhere in
+/// parsing or routing is caught, answered with a 500, and confined to
+/// this connection — the server keeps serving.
+fn handle_connection(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.opts.write_timeout));
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        handle_one(shared, &stream);
+    }));
+    if outcome.is_err() {
+        log_warn!("[serve] a request handler panicked; the connection got a 500");
+        let body = http::error_body(500, "internal error: the request handler panicked");
+        let mut s = &stream;
+        let _ = http::write_response(&mut s, 500, &[], &body);
+    }
+}
+
+/// Read one request, route it, write one response.
+fn handle_one(shared: &Shared, mut stream: &TcpStream) {
+    let parsed = {
+        let mut reader = std::io::BufReader::new(stream);
+        http::read_request(&mut reader, shared.opts.max_body_bytes)
+    };
+    match parsed {
+        Err(e) => {
+            let body = http::error_body(e.status, &e.reason);
+            let _ = http::write_response(&mut stream, e.status, &[], &body);
+            if e.drain > 0 {
+                discard(stream, e.drain);
+            }
+        }
+        Ok(req) => {
+            let resp = route(shared, &req);
+            let retry: &[(&str, &str)] =
+                if resp.retry_after { &[("retry-after", "1")] } else { &[] };
+            let _ = http::write_response(&mut stream, resp.status, retry, &resp.body);
+        }
+    }
+}
+
+/// Read and throw away up to `limit` bytes the client is still sending
+/// (bounded by the socket read timeout per chunk), so closing the socket
+/// after a refusal does not RST the already-written response away.
+fn discard(mut stream: &TcpStream, limit: usize) {
+    use std::io::Read as _;
+    let mut sink = [0u8; 4096];
+    let mut taken = 0usize;
+    while taken < limit {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => taken += n,
+        }
+    }
+}
+
+struct Response {
+    status: u16,
+    retry_after: bool,
+    body: Vec<u8>,
+}
+
+fn ok_json(body: String) -> Response {
+    Response { status: 200, retry_after: false, body: body.into_bytes() }
+}
+
+fn reject(status: u16, reason: &str) -> Response {
+    Response { status, retry_after: false, body: http::error_body(status, reason) }
+}
+
+fn shed(reason: &str) -> Response {
+    Response { status: 503, retry_after: true, body: http::error_body(503, reason) }
+}
+
+/// Dispatch a parsed request to its handler.
+fn route(shared: &Shared, req: &http::Request) -> Response {
+    if shared.opts.inject_panic && req.header("x-inject-panic").is_some() {
+        panic!("injected panic (x-inject-panic)");
+    }
+    if let Some(rest) = req.target.strip_prefix("/v1/learners/") {
+        if let Some(idx) = rest.strip_suffix("/act") {
+            if req.method != "POST" {
+                return reject(405, &format!("{} {} — act is POST-only", req.method, req.target));
+            }
+            return handle_act(shared, idx, &req.body);
+        }
+    }
+    match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/healthz") => ok_json("{\"status\":\"ok\"}".to_string()),
+        ("GET", "/readyz") => {
+            if shared.draining.load(Ordering::SeqCst) {
+                reject(503, "draining")
+            } else {
+                let snap = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
+                ok_json(format!(
+                    "{{\"status\":\"ready\",\"checkpoint_iteration\":{}}}",
+                    snap.iteration
+                ))
+            }
+        }
+        ("GET", "/v1/meta") => {
+            let snap = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
+            ok_json(format!(
+                "{{\"checkpoint_iteration\":{},\"learners\":{},\"obs_dim\":{},\"act_dim\":{},\
+                 \"hidden\":{},\"policy_model\":\"{}\",\"domain\":\"{}\",\"simulator\":\"{}\"}}",
+                snap.iteration,
+                snap.stores.len(),
+                snap.obs_dim,
+                snap.act_dim,
+                snap.hid,
+                json::escape(&snap.meta.policy_model),
+                json::escape(&snap.meta.domain),
+                json::escape(&snap.meta.simulator)
+            ))
+        }
+        ("POST", "/admin/reload") => handle_reload(shared),
+        (method, target) => reject(404, &format!("no route for {method} {target}")),
+    }
+}
+
+/// `POST /v1/learners/<j>/act`: validate, submit to the engine with a
+/// deadline, block for the reply. Queue-full and expired-deadline paths
+/// are the 503 shed contract; an unresponsive engine is a 504.
+fn handle_act(shared: &Shared, idx: &str, body: &[u8]) -> Response {
+    let Ok(learner) = idx.parse::<usize>() else {
+        return reject(404, &format!("learner index {:?} is not an integer", idx));
+    };
+    let (learners, obs_dim) = {
+        let snap = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
+        (snap.stores.len(), snap.obs_dim)
+    };
+    if learner >= learners {
+        return reject(404, &format!("learner {learner} out of range ({learners} learner(s))"));
+    }
+    let obs = match json::parse_obs(body) {
+        Ok(obs) => obs,
+        Err(reason) => return reject(400, &reason),
+    };
+    if obs.len() != obs_dim {
+        let reason = format!("obs has {} element(s), the policy wants {obs_dim}", obs.len());
+        return reject(400, &reason);
+    }
+    let (resp_tx, resp_rx) = std::sync::mpsc::sync_channel::<EngineReply>(1);
+    let job = ActJob {
+        learner,
+        obs,
+        deadline: Instant::now() + shared.opts.request_timeout,
+        resp: resp_tx,
+    };
+    match shared.jobs.try_send(job) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            let reason = format!(
+                "request queue is full (capacity {}) — shedding load",
+                shared.opts.queue_capacity
+            );
+            return shed(&reason);
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            return shed("the inference engine is shutting down");
+        }
+    }
+    // Small grace past the deadline so the engine's own shed reply (a
+    // structured 503) wins over the blunt worker-side 504.
+    let wait = shared.opts.request_timeout + Duration::from_millis(250);
+    match resp_rx.recv_timeout(wait) {
+        Ok(EngineReply::Act { action, value, logits }) => ok_json(format!(
+            "{{\"learner\":{learner},\"action\":{action},\"value\":{},\"logits\":{}}}",
+            json::num(value),
+            json::nums(&logits)
+        )),
+        Ok(EngineReply::Shed { reason }) => shed(&reason),
+        Err(_) => reject(504, "timed out waiting for the inference engine"),
+    }
+}
+
+/// `POST /admin/reload`: atomic checkpoint hot-reload. The newest file
+/// is validated completely off to the side; only a fully valid,
+/// geometry-compatible snapshot is swapped in (under the write lock, so
+/// every act request sees either all-old or all-new parameters). Any
+/// rejection is a structured 409 and the old snapshot keeps serving.
+fn handle_reload(shared: &Shared) -> Response {
+    let _serialized = shared.reload_lock.lock().unwrap_or_else(|e| e.into_inner());
+    let candidate = match snapshot::load_newest_strict(&shared.checkpoint_dir) {
+        Ok(snap) => snap,
+        Err(e) => {
+            log_warn!("[serve] reload rejected: {e:#}");
+            return reject(409, &format!("reload rejected; still serving the old snapshot: {e:#}"));
+        }
+    };
+    {
+        let cur = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
+        let same_geometry = candidate.stores.len() == cur.stores.len()
+            && candidate.obs_dim == cur.obs_dim
+            && candidate.hid == cur.hid
+            && candidate.act_dim == cur.act_dim
+            && candidate.meta.policy_model == cur.meta.policy_model;
+        if !same_geometry {
+            let reason = format!(
+                "reload rejected; the candidate's geometry ({} learner(s), obs={}, hid={}, \
+                 act={}, model={}) does not match the serving snapshot ({} learner(s), obs={}, \
+                 hid={}, act={}, model={})",
+                candidate.stores.len(),
+                candidate.obs_dim,
+                candidate.hid,
+                candidate.act_dim,
+                candidate.meta.policy_model,
+                cur.stores.len(),
+                cur.obs_dim,
+                cur.hid,
+                cur.act_dim,
+                cur.meta.policy_model
+            );
+            log_warn!("[serve] {reason}");
+            return reject(409, &reason);
+        }
+    }
+    let mut cur = shared.snapshot.write().unwrap_or_else(|e| e.into_inner());
+    let from = cur.iteration;
+    let to = candidate.iteration;
+    *cur = candidate;
+    drop(cur);
+    log_info!("[serve] hot-reloaded checkpoint: iteration {from} -> {to}");
+    ok_json(format!("{{\"status\":\"reloaded\",\"from_iteration\":{from},\"to_iteration\":{to}}}"))
+}
+
+/// Signal-driven shutdown flag (SIGINT/SIGTERM → drain). A bare
+/// `AtomicBool` store is the whole handler — async-signal-safe.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_shutdown_signal);
+        signal(SIGTERM, on_shutdown_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// CLI entry (`repro serve`): spawn the server, print the bound address,
+/// serve until SIGINT/SIGTERM, then drain gracefully and return Ok — the
+/// process exits 0 on a clean drain.
+pub fn run(checkpoint_dir: &Path, opts: ServeOptions) -> Result<()> {
+    install_signal_handlers();
+    let server = Server::spawn(checkpoint_dir, opts)?;
+    // The line tests and scripts parse to find the (possibly ephemeral)
+    // port; stdout is flushed so `kill -INT` races nothing.
+    println!("serving on http://{}", server.addr());
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    while !SHUTDOWN.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    log_info!("[serve] shutdown signal received — draining");
+    server.begin_shutdown();
+    server.join()?;
+    log_info!("[serve] drained cleanly");
+    Ok(())
+}

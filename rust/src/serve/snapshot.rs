@@ -1,0 +1,263 @@
+//! Loading training checkpoints into servable policy snapshots, and the
+//! validation protocol behind atomic hot-reload.
+//!
+//! A [`PolicySnapshot`] is the *read-only* half of a training checkpoint:
+//! the per-learner policy parameter stores plus the geometry every act
+//! request needs (`obs_dim`, `hid`, `act_dim`). The loop/env state blobs
+//! that make checkpoints resumable are parsed past and dropped — serving
+//! never steps environments.
+//!
+//! Two loaders with deliberately different failure semantics:
+//! - [`load_newest_valid`] — startup: walk newest-first, skip invalid
+//!   files with a warning, serve the first one that fully validates
+//!   (mirrors `CheckpointManager::load_latest`). A torn newest checkpoint
+//!   must not keep the server down.
+//! - [`load_newest_strict`] — hot-reload: the newest file must validate
+//!   or the reload is *rejected*. An operator asking "pick up the new
+//!   checkpoint" must hear "that file is corrupt", not have the server
+//!   silently re-serve something older.
+//!
+//! Validation is always complete before anything is swapped in: header +
+//! CRC (`read_checkpoint_file`), full payload parse, store construction,
+//! and a [`PolicyView::resolve`] geometry check per learner.
+
+use crate::log_warn;
+use crate::nn::ParamStore;
+use crate::runtime::checkpoint::{list_checkpoints, read_checkpoint_file, CKPT_MAGIC, CKPT_VERSION};
+use crate::runtime::native::PolicyView;
+use crate::runtime::{DType, ModelSpec, TensorSpec};
+use crate::util::state::{parse_headered, StateReader};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Plausibility bound on counts read from a checkpoint payload before any
+/// proportional allocation — the serving-side analogue of the
+/// `read_headered` length bound. A corrupt count field fails here with
+/// both numbers named instead of attempting a huge allocation.
+const MAX_PLAUSIBLE: usize = 4096;
+
+/// The tensors of one learner's policy store, in checkpoint order.
+type LearnerTensors = Vec<(String, Vec<f32>)>;
+
+/// The config geometry section at the head of every checkpoint payload
+/// (written by `MultiLearnerRun::write_checkpoint`).
+#[derive(Debug, Clone)]
+pub struct CheckpointMeta {
+    pub domain: String,
+    pub simulator: String,
+    pub policy_model: String,
+    pub learners: usize,
+    pub num_envs: usize,
+    pub rollout_len: usize,
+    pub total_steps: usize,
+    pub eval_every: usize,
+    pub rounds_done: usize,
+}
+
+/// One learner's section of the payload: its seed and its policy tensors
+/// (base params and Adam slots — serving only resolves the base eight).
+pub struct LearnerSection {
+    pub seed: u64,
+    pub tensors: LearnerTensors,
+}
+
+/// A fully validated, servable view of one checkpoint: per-learner stores
+/// plus the (uniform) policy geometry.
+pub struct PolicySnapshot {
+    /// Training iteration the checkpoint file encodes (from its name).
+    pub iteration: usize,
+    pub meta: CheckpointMeta,
+    pub stores: Vec<ParamStore>,
+    pub seeds: Vec<u64>,
+    pub obs_dim: usize,
+    pub hid: usize,
+    pub act_dim: usize,
+}
+
+/// Parse the full checkpoint payload: meta, then every learner section
+/// (tensors kept, loop/env state blobs length-checked and dropped), then
+/// an exhaustion check — trailing bytes are corruption, not slack.
+pub fn parse_checkpoint_payload(payload: &[u8]) -> Result<(CheckpointMeta, Vec<LearnerSection>)> {
+    let mut r = StateReader::new(payload);
+    let meta = CheckpointMeta {
+        domain: r.str().context("reading domain")?.to_string(),
+        simulator: r.str().context("reading simulator")?.to_string(),
+        policy_model: r.str().context("reading policy model")?.to_string(),
+        learners: r.usize().context("reading learner count")?,
+        num_envs: r.usize().context("reading num_envs")?,
+        rollout_len: r.usize().context("reading rollout_len")?,
+        total_steps: r.usize().context("reading total_steps")?,
+        eval_every: r.usize().context("reading eval_every")?,
+        rounds_done: r.usize().context("reading rounds_done")?,
+    };
+    anyhow::ensure!(
+        meta.learners >= 1 && meta.learners <= MAX_PLAUSIBLE,
+        "implausible learner count {} (corrupt payload? bound is {MAX_PLAUSIBLE})",
+        meta.learners
+    );
+    let mut sections = Vec::with_capacity(meta.learners);
+    for l in 0..meta.learners {
+        let section = (|| -> Result<LearnerSection> {
+            let seed = r.u64()?;
+            let n_tensors = r.usize()?;
+            anyhow::ensure!(
+                n_tensors <= MAX_PLAUSIBLE,
+                "implausible tensor count {n_tensors} (corrupt payload? bound is {MAX_PLAUSIBLE})"
+            );
+            let mut tensors = Vec::with_capacity(n_tensors);
+            for _ in 0..n_tensors {
+                let name = r.str()?.to_string();
+                let values = r.f32s()?;
+                tensors.push((name, values));
+            }
+            r.bytes().context("reading the loop-state blob")?;
+            r.bytes().context("reading the env-state blob")?;
+            Ok(LearnerSection { seed, tensors })
+        })()
+        .with_context(|| format!("parsing learner {l}'s section"))?;
+        sections.push(section);
+    }
+    r.expect_end().context("checkpoint payload has trailing bytes")?;
+    Ok((meta, sections))
+}
+
+/// Build a servable snapshot from a validated checkpoint payload: one
+/// [`ParamStore`] per learner (synthetic flat-shape spec — serving needs
+/// names and lengths, not training shapes), each geometry-checked via
+/// [`PolicyView::resolve`], and all learners required to agree.
+pub fn snapshot_from_payload(iteration: usize, payload: &[u8]) -> Result<PolicySnapshot> {
+    let (meta, sections) = parse_checkpoint_payload(payload)?;
+    let mut stores = Vec::with_capacity(sections.len());
+    let mut seeds = Vec::with_capacity(sections.len());
+    for (l, section) in sections.iter().enumerate() {
+        let spec = ModelSpec {
+            name: meta.policy_model.clone(),
+            params: section
+                .tensors
+                .iter()
+                .map(|(name, values)| TensorSpec {
+                    name: name.clone(),
+                    dtype: DType::F32,
+                    shape: vec![values.len()],
+                })
+                .collect(),
+        };
+        let mut store = ParamStore::zeros(&spec);
+        for (name, values) in &section.tensors {
+            store.set(name, values).with_context(|| format!("loading learner {l}'s tensors"))?;
+        }
+        PolicyView::resolve(&store)
+            .with_context(|| format!("learner {l}'s policy geometry is invalid"))?;
+        stores.push(store);
+        seeds.push(section.seed);
+    }
+    let (obs_dim, hid, act_dim) = {
+        let v = PolicyView::resolve(&stores[0])?;
+        (v.obs_dim, v.hid, v.act_dim)
+    };
+    for (l, store) in stores.iter().enumerate().skip(1) {
+        let v = PolicyView::resolve(store)?;
+        anyhow::ensure!(
+            (v.obs_dim, v.hid, v.act_dim) == (obs_dim, hid, act_dim),
+            "learner {l}'s geometry (obs={}, hid={}, act={}) differs from learner 0's \
+             (obs={obs_dim}, hid={hid}, act={act_dim})",
+            v.obs_dim,
+            v.hid,
+            v.act_dim
+        );
+    }
+    Ok(PolicySnapshot { iteration, meta, stores, seeds, obs_dim, hid, act_dim })
+}
+
+/// Load and fully validate one checkpoint file into a snapshot.
+fn load_file(iter: usize, path: &Path) -> Result<PolicySnapshot> {
+    let payload = read_checkpoint_file(path)?;
+    snapshot_from_payload(iter, &payload)
+        .with_context(|| format!("validating {}", path.display()))
+}
+
+/// Startup loader: newest-first with skip-and-warn fallback (see module
+/// docs). Errors only when *no* checkpoint in `dir` validates.
+pub fn load_newest_valid(dir: &Path) -> Result<PolicySnapshot> {
+    let found = list_checkpoints(dir);
+    anyhow::ensure!(
+        !found.is_empty(),
+        "no checkpoint files (ckpt_*.bin) in {} — train first, or point --checkpoint-dir at a \
+         run directory",
+        dir.display()
+    );
+    let total = found.len();
+    for (iter, path) in found.into_iter().rev() {
+        match load_file(iter, &path) {
+            Ok(snap) => return Ok(snap),
+            Err(e) => log_warn!("[serve] skipping invalid checkpoint: {e:#}"),
+        }
+    }
+    anyhow::bail!("all {total} checkpoint file(s) in {} failed validation", dir.display())
+}
+
+/// Hot-reload loader: the newest checkpoint must validate, or the reload
+/// is rejected with the reason (see module docs — no silent fallback).
+pub fn load_newest_strict(dir: &Path) -> Result<PolicySnapshot> {
+    let found = list_checkpoints(dir);
+    anyhow::ensure!(!found.is_empty(), "no checkpoint files (ckpt_*.bin) in {}", dir.display());
+    let (iter, path) = found.into_iter().next_back().unwrap();
+    load_file(iter, &path)
+}
+
+/// `repro inspect`: one human-readable line per checkpoint file in `dir`
+/// (ascending iteration) — header metadata and geometry for valid files,
+/// `CORRUPT` plus the structured reason for invalid ones. Never errors on
+/// a bad *file*; only on an empty directory.
+pub fn inspect_dir(dir: &Path) -> Result<Vec<String>> {
+    let found = list_checkpoints(dir);
+    anyhow::ensure!(
+        !found.is_empty(),
+        "no checkpoint files (ckpt_*.bin) in {}",
+        dir.display()
+    );
+    let mut lines = Vec::with_capacity(found.len());
+    for (iter, path) in found {
+        lines.push(inspect_file(iter, &path));
+    }
+    Ok(lines)
+}
+
+/// One line of `inspect_dir` output (also exercised directly by tests).
+/// Runs the *full* serving validation (header, CRC, payload parse, store
+/// construction, geometry) so "OK" here means "this file would serve".
+pub fn inspect_file(iter: usize, path: &Path) -> String {
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("?").to_string();
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) => return format!("{name}  CORRUPT  unreadable: {e}"),
+    };
+    // Best-effort header peek for display even when validation fails —
+    // the operator wants to see what the file *claims* to be.
+    let claimed_version = if bytes.len() >= 12 {
+        u32::from_le_bytes(bytes[8..12].try_into().unwrap()).to_string()
+    } else {
+        "?".to_string()
+    };
+    let validated = parse_headered(CKPT_MAGIC, CKPT_VERSION, &bytes)
+        .and_then(|payload| snapshot_from_payload(iter, payload));
+    match validated {
+        Ok(snap) => format!(
+            "{name}  OK       iter={iter} v{claimed_version} learners={} model={} obs={} hid={} \
+             act={} rounds_done={} domain={} sim={} ({} bytes)",
+            snap.meta.learners,
+            snap.meta.policy_model,
+            snap.obs_dim,
+            snap.hid,
+            snap.act_dim,
+            snap.meta.rounds_done,
+            snap.meta.domain,
+            snap.meta.simulator,
+            bytes.len()
+        ),
+        Err(e) => {
+            let n = bytes.len();
+            format!("{name}  CORRUPT  iter={iter} v{claimed_version} ({n} bytes): {e:#}")
+        }
+    }
+}

@@ -202,6 +202,112 @@ pub fn partial_atomic_write(
     Ok(tmp)
 }
 
+/// Environment variable the serving engine's stall hook reads:
+/// `IALS_SERVE_STALL_MS=<ms>` makes the micro-batcher engine sleep once at
+/// startup, before consuming any request — a deterministic way to fill the
+/// bounded request queue (load-shedding tests) and to park a request
+/// in-flight across a SIGINT (drain tests) without racing the engine.
+pub const SERVE_STALL_ENV: &str = "IALS_SERVE_STALL_MS";
+
+/// The injected engine stall in milliseconds, from [`SERVE_STALL_ENV`].
+/// Unset or empty means no stall; a malformed value errors rather than
+/// silently serving at full speed.
+pub fn serve_stall_from_env() -> Result<Option<u64>> {
+    match std::env::var(SERVE_STALL_ENV) {
+        Err(_) => Ok(None),
+        Ok(v) if v.is_empty() => Ok(None),
+        Ok(v) => {
+            let ms: u64 = v
+                .parse()
+                .with_context(|| format!("invalid {SERVE_STALL_ENV}='{v}': want milliseconds"))?;
+            Ok(Some(ms))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client-side HTTP injectors (the serving runtime's corruption matrix)
+// ---------------------------------------------------------------------------
+
+/// Write `bytes` to `addr`, half-close the write side, and collect whatever
+/// the server answers (possibly nothing — a clean close is a valid defense).
+/// The read is bounded by `timeout` so a wedged server fails the test
+/// instead of hanging it.
+fn send_and_collect(
+    addr: std::net::SocketAddr,
+    bytes: &[u8],
+    timeout: std::time::Duration,
+) -> Result<Vec<u8>> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.write_all(bytes).ok(); // the server may close on us mid-write
+    stream.shutdown(std::net::Shutdown::Write).ok();
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out); // timeout/reset both mean "done"
+    Ok(out)
+}
+
+/// A client that dies mid-request: send only the first `keep` bytes of
+/// `request`, close, and return the server's response bytes (a structured
+/// 4xx, or empty if the server just closed — never a hang).
+pub fn send_truncated_request(
+    addr: std::net::SocketAddr,
+    request: &[u8],
+    keep: usize,
+) -> Result<Vec<u8>> {
+    send_and_collect(addr, &request[..keep.min(request.len())], REPLY_TIMEOUT)
+}
+
+/// A client that sends `len` bytes of seeded garbage (not HTTP at all) and
+/// returns whatever comes back.
+pub fn send_garbage(addr: std::net::SocketAddr, len: usize, seed: u64) -> Result<Vec<u8>> {
+    let mut rng = crate::util::Pcg32::seeded(seed);
+    let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+    send_and_collect(addr, &bytes, REPLY_TIMEOUT)
+}
+
+/// A client whose headers claim (and whose body delivers) `body_len` bytes
+/// to `path` — the oversized-body probe. Returns the response bytes; the
+/// server must answer from the Content-Length alone, before reading (or
+/// allocating for) the body.
+pub fn send_oversized_body(
+    addr: std::net::SocketAddr,
+    path: &str,
+    body_len: usize,
+) -> Result<Vec<u8>> {
+    let head = format!("POST {path} HTTP/1.1\r\nContent-Length: {body_len}\r\n\r\n");
+    let mut bytes = head.into_bytes();
+    bytes.resize(bytes.len() + body_len, b'x');
+    send_and_collect(addr, &bytes, REPLY_TIMEOUT)
+}
+
+/// A slow-loris client: send `prefix` (an incomplete request head), then
+/// stall for `hold` while keeping the connection open. Returns the server's
+/// response — a well-defended server answers `408` (read timeout) instead
+/// of letting the connection pin a worker forever.
+pub fn slow_loris_request(
+    addr: std::net::SocketAddr,
+    prefix: &[u8],
+    hold: std::time::Duration,
+) -> Result<Vec<u8>> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(hold + REPLY_TIMEOUT)).ok();
+    stream.write_all(prefix).ok();
+    // Keep the write side open — the whole point is an unfinished request.
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out);
+    Ok(out)
+}
+
+/// How long the injectors wait for a reply before declaring the exchange
+/// over. Generous against CI jitter, small enough that a matrix of probes
+/// stays fast.
+const REPLY_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
+
 /// Truncate `path` to `len` bytes (a torn write / partial copy).
 pub fn truncate_file(path: impl AsRef<Path>, len: usize) -> Result<()> {
     let path = path.as_ref();

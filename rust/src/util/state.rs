@@ -291,6 +291,22 @@ pub fn headered_bytes(magic: &[u8; 8], version: u32, payload: &[u8]) -> Vec<u8> 
     bytes
 }
 
+/// Validate the fixed-size header prefix (`bytes.len() == HEADER_LEN`) and
+/// return the payload length and CRC it declares. Shared by the in-memory
+/// [`parse_headered`] and the file-backed [`read_headered`], so both reject
+/// a corrupt header with the same structured errors.
+fn check_header(magic: &[u8; 8], version: u32, header: &[u8; HEADER_LEN]) -> Result<(u64, u32)> {
+    anyhow::ensure!(&header[..8] == magic, "bad magic (not a {} file)", magic.escape_ascii());
+    let stored_version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    anyhow::ensure!(
+        stored_version == version,
+        "format version {stored_version}, this build reads {version}"
+    );
+    let payload_len = u64::from_le_bytes(header[12..20].try_into().unwrap());
+    let stored_crc = u32::from_le_bytes(header[20..24].try_into().unwrap());
+    Ok((payload_len, stored_crc))
+}
+
 /// Validate a [`headered_bytes`] frame and return its payload slice. Errors
 /// name the failure (truncation, foreign magic, version skew, CRC mismatch)
 /// so callers can log *why* a file was rejected before falling back.
@@ -301,17 +317,11 @@ pub fn parse_headered<'a>(magic: &[u8; 8], version: u32, bytes: &'a [u8]) -> Res
         "{} bytes — shorter than the {HEADER_LEN}-byte header (truncated)",
         bytes.len()
     );
-    anyhow::ensure!(&bytes[..8] == magic, "bad magic (not a {} file)", magic.escape_ascii());
-    let stored_version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    anyhow::ensure!(
-        stored_version == version,
-        "format version {stored_version}, this build reads {version}"
-    );
-    let payload_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
-    let stored_crc = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
+    let header: &[u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+    let (payload_len, stored_crc) = check_header(magic, version, header)?;
     let payload = &bytes[HEADER_LEN..];
     anyhow::ensure!(
-        payload.len() == payload_len,
+        payload.len() as u64 == payload_len,
         "header says {payload_len} payload bytes, file has {} (truncated)",
         payload.len()
     );
@@ -333,12 +343,46 @@ pub fn write_headered(
 }
 
 /// Read and validate a [`write_headered`] file, returning its payload.
+///
+/// Defensive against a corrupt length field: the header's `payload_len` is
+/// bounded against the file's actual on-disk size *before* any
+/// payload-sized allocation, so a bit flip that turns the length into
+/// terabytes is a structured error naming both numbers — not an attempted
+/// huge allocation (`rust/tests/state_properties.rs`).
 pub fn read_headered(path: impl AsRef<Path>, magic: &[u8; 8], version: u32) -> Result<Vec<u8>> {
     let path = path.as_ref();
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    let payload = parse_headered(magic, version, &bytes)
-        .with_context(|| format!("validating {}", path.display()))?;
-    Ok(payload.to_vec())
+    let inner = || -> Result<Vec<u8>> {
+        let mut f =
+            std::fs::File::open(path).with_context(|| format!("reading {}", path.display()))?;
+        let file_len = f.metadata().with_context(|| format!("stat {}", path.display()))?.len();
+        anyhow::ensure!(file_len > 0, "empty file");
+        anyhow::ensure!(
+            file_len >= HEADER_LEN as u64,
+            "{file_len} bytes — shorter than the {HEADER_LEN}-byte header (truncated)"
+        );
+        let mut header = [0u8; HEADER_LEN];
+        std::io::Read::read_exact(&mut f, &mut header)?;
+        let (payload_len, stored_crc) = check_header(magic, version, &header)?;
+        let actual = file_len - HEADER_LEN as u64;
+        anyhow::ensure!(
+            payload_len == actual,
+            "header says {payload_len} payload bytes, file has {actual} ({})",
+            if payload_len > actual {
+                "truncated, or a corrupt length field — not allocating"
+            } else {
+                "trailing bytes — truncated header or foreign file"
+            }
+        );
+        let mut payload = vec![0u8; actual as usize];
+        std::io::Read::read_exact(&mut f, &mut payload)
+            .context("file shrank while reading the payload")?;
+        anyhow::ensure!(
+            crc32(&payload) == stored_crc,
+            "CRC mismatch — corrupt (bit flip or torn write)"
+        );
+        Ok(payload)
+    };
+    inner().with_context(|| format!("validating {}", path.display()))
 }
 
 #[cfg(test)]

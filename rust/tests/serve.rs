@@ -1,0 +1,539 @@
+//! End-to-end tests of the serving runtime (`ials::serve`) against real
+//! TCP connections — the acceptance criteria of the serving PR:
+//!
+//! 1. act responses are *bitwise* identical whether requests arrive
+//!    serially or are coalesced into one batched forward;
+//! 2. a full queue sheds with `503 + Retry-After` while every accepted
+//!    request still completes;
+//! 3. a corrupt hot-reload candidate is rejected with a structured 409
+//!    and subsequent responses are bitwise identical to the old params;
+//! 4. no malformed or hostile input panics or wedges the server;
+//! 5. SIGINT drains in-flight requests and exits 0 (subprocess test).
+//!
+//! Every test fabricates checkpoints directly through the public
+//! `CheckpointManager` — no training required.
+
+use ials::runtime::checkpoint::{checkpoint_file_name, CheckpointManager};
+use ials::runtime::native::{EngineScratch, PolicyView};
+use ials::serve::snapshot::{inspect_dir, snapshot_from_payload};
+use ials::serve::{json, Server, ServeOptions};
+use ials::testkit::fault::{
+    flip_bit, send_garbage, send_oversized_body, send_truncated_request, slow_loris_request,
+    SERVE_STALL_ENV,
+};
+use ials::util::state::StateWriter;
+use ials::util::Pcg32;
+use std::io::{BufRead, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Checkpoint fabrication (the exact `write_checkpoint` payload layout)
+// ---------------------------------------------------------------------------
+
+const OBS: usize = 6;
+const HID: usize = 8;
+const ACT: usize = 3;
+
+/// The eight policy tensors `PolicyView::resolve` needs, seeded.
+fn policy_tensors(obs: usize, hid: usize, act: usize, seed: u64) -> Vec<(String, Vec<f32>)> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensor = |name: &str, n: usize| {
+        let vals: Vec<f32> =
+            (0..n).map(|_| (rng.next_u32() as f32 / u32::MAX as f32) - 0.5).collect();
+        (name.to_string(), vals)
+    };
+    vec![
+        tensor("w1", obs * hid),
+        tensor("b1", hid),
+        tensor("w2", hid * hid),
+        tensor("b2", hid),
+        tensor("w_pi", hid * act),
+        tensor("b_pi", act),
+        tensor("w_v", hid),
+        tensor("b_v", 1),
+    ]
+}
+
+/// A checkpoint payload in the exact layout `MultiLearnerRun::write_checkpoint`
+/// produces: meta geometry, then per learner seed / tensors / opaque
+/// loop-state and env-state blobs.
+fn checkpoint_payload(k: usize, hid: usize, salt: u64) -> Vec<u8> {
+    let mut w = StateWriter::new();
+    w.str("ials"); // domain
+    w.str("ials"); // simulator
+    w.str("policy"); // policy model
+    w.usize(k);
+    w.usize(8); // num_envs
+    w.usize(16); // rollout_len
+    w.usize(1024); // total_steps
+    w.usize(256); // eval_every
+    w.usize(3); // rounds_done
+    for l in 0..k {
+        w.u64(100 + l as u64);
+        let tensors = policy_tensors(OBS, hid, ACT, salt * 1000 + l as u64);
+        w.usize(tensors.len());
+        for (name, vals) in &tensors {
+            w.str(name);
+            w.f32s(vals);
+        }
+        w.bytes(&[1, 2, 3]); // opaque loop state (serving skips it)
+        w.bytes(&[4, 5]); // opaque env state (serving skips it)
+    }
+    w.into_bytes()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ials_serve_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn save_checkpoint(dir: &Path, iter: usize, payload: &[u8]) {
+    CheckpointManager::new(dir, 16).save(iter, payload).unwrap();
+}
+
+fn test_opts() -> ServeOptions {
+    ServeOptions {
+        port: 0,
+        batch_window: Duration::from_millis(2),
+        max_batch: 64,
+        queue_capacity: 256,
+        workers: 4,
+        read_timeout: Duration::from_millis(2_000),
+        write_timeout: Duration::from_millis(2_000),
+        request_timeout: Duration::from_millis(5_000),
+        max_body_bytes: 1 << 20,
+        engine_stall: None,
+        inject_panic: false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A minimal blocking HTTP client
+// ---------------------------------------------------------------------------
+
+fn exchange(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+    s.write_all(raw).unwrap();
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).to_string()
+}
+
+fn get(addr: SocketAddr, path: &str) -> String {
+    exchange(addr, format!("GET {path} HTTP/1.1\r\n\r\n").as_bytes())
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+    let raw = format!("POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len());
+    exchange(addr, raw.as_bytes())
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split(' ').nth(1).and_then(|s| s.parse().ok()).unwrap_or_else(|| {
+        panic!("no status line in response: {resp:?}");
+    })
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("")
+}
+
+fn obs_body(obs: &[f32]) -> String {
+    format!("{{\"obs\": {}}}", json::nums(obs))
+}
+
+/// Distinct observation vectors per request index.
+fn obs_for(i: usize) -> Vec<f32> {
+    (0..OBS).map(|d| (i as f32 * 0.31 + d as f32 * 0.17) - 0.9).collect()
+}
+
+/// The exact response body the server must produce for (payload, learner,
+/// obs), computed independently through the same public kernels.
+fn expected_act_body(payload: &[u8], learner: usize, obs: &[f32]) -> String {
+    let snap = snapshot_from_payload(0, payload).unwrap();
+    let view = PolicyView::resolve(&snap.stores[learner]).unwrap();
+    let mut scratch = EngineScratch::new(view.hid, view.hid);
+    let mut logits = vec![0.0f32; view.act_dim];
+    let mut values = vec![0.0f32; 1];
+    view.forward_rows(1, obs, &mut logits, &mut values, &mut scratch);
+    let mut action = 0;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[action] {
+            action = i;
+        }
+    }
+    format!(
+        "{{\"learner\":{learner},\"action\":{action},\"value\":{},\"logits\":{}}}",
+        json::num(values[0]),
+        json::nums(&logits)
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn act_roundtrip_health_meta_and_request_validation() {
+    let dir = fresh_dir("roundtrip");
+    let payload = checkpoint_payload(2, HID, 7);
+    save_checkpoint(&dir, 10, &payload);
+    let server = Server::spawn(&dir, test_opts()).unwrap();
+    let addr = server.addr();
+
+    let health = get(addr, "/healthz");
+    assert_eq!(status_of(&health), 200, "{health}");
+    assert_eq!(body_of(&health), "{\"status\":\"ok\"}");
+
+    let ready = get(addr, "/readyz");
+    assert_eq!(status_of(&ready), 200, "{ready}");
+    assert!(body_of(&ready).contains("\"checkpoint_iteration\":10"), "{ready}");
+
+    let meta = get(addr, "/v1/meta");
+    assert_eq!(status_of(&meta), 200, "{meta}");
+    for want in [
+        "\"checkpoint_iteration\":10",
+        "\"learners\":2",
+        &format!("\"obs_dim\":{OBS}"),
+        &format!("\"act_dim\":{ACT}"),
+        &format!("\"hidden\":{HID}"),
+        "\"policy_model\":\"policy\"",
+    ] {
+        assert!(body_of(&meta).contains(want), "meta missing {want}: {meta}");
+    }
+
+    // The act response is exactly the independently computed forward.
+    for learner in [0usize, 1] {
+        let obs = obs_for(learner);
+        let resp = post(addr, &format!("/v1/learners/{learner}/act"), &obs_body(&obs));
+        assert_eq!(status_of(&resp), 200, "{resp}");
+        assert_eq!(body_of(&resp), expected_act_body(&payload, learner, &obs), "{resp}");
+    }
+
+    // Request validation: every rejection is structured, the server stays up.
+    let cases = [
+        ("GET", "/v1/learners/0/act", String::new(), 405),
+        ("POST", "/v1/learners/kittens/act", obs_body(&obs_for(0)), 404),
+        ("POST", "/v1/learners/9/act", obs_body(&obs_for(0)), 404),
+        ("POST", "/v1/learners/0/act", "{\"obs\": [1, 2]}".to_string(), 400),
+        ("POST", "/v1/learners/0/act", "{\"obs\": oops}".to_string(), 400),
+        ("POST", "/nope", String::new(), 404),
+    ];
+    for (method, path, body, want) in cases {
+        let raw =
+            format!("{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len());
+        let resp = exchange(addr, raw.as_bytes());
+        assert_eq!(status_of(&resp), want, "{method} {path}: {resp}");
+        assert!(body_of(&resp).contains("\"error\""), "{method} {path}: {resp}");
+    }
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batched_responses_are_bitwise_identical_to_serial() {
+    let dir = fresh_dir("batched");
+    let payload = checkpoint_payload(2, HID, 21);
+    save_checkpoint(&dir, 1, &payload);
+    let mut opts = test_opts();
+    opts.batch_window = Duration::from_millis(10);
+    opts.workers = 8;
+    let server = Server::spawn(&dir, opts).unwrap();
+    let addr = server.addr();
+
+    const N: usize = 8;
+    // Serial pass: one request at a time — every batch has one row.
+    let serial: Vec<String> = (0..N)
+        .map(|i| {
+            let resp = post(addr, &format!("/v1/learners/{}/act", i % 2), &obs_body(&obs_for(i)));
+            assert_eq!(status_of(&resp), 200, "{resp}");
+            body_of(&resp).to_string()
+        })
+        .collect();
+
+    // Concurrent pass: N threads release together so the 10 ms window
+    // coalesces them into multi-row batches (mixed across learners).
+    let barrier = Arc::new(Barrier::new(N));
+    let handles: Vec<_> = (0..N)
+        .map(|i| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let resp =
+                    post(addr, &format!("/v1/learners/{}/act", i % 2), &obs_body(&obs_for(i)));
+                assert_eq!(status_of(&resp), 200, "{resp}");
+                body_of(&resp).to_string()
+            })
+        })
+        .collect();
+    let batched: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for i in 0..N {
+        assert_eq!(
+            batched[i], serial[i],
+            "request {i}: batched response must be bitwise identical to serial"
+        );
+        assert_eq!(serial[i], expected_act_body(&payload, i % 2, &obs_for(i)));
+    }
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn full_queue_sheds_503_while_accepted_requests_complete() {
+    let dir = fresh_dir("shed");
+    save_checkpoint(&dir, 1, &checkpoint_payload(1, HID, 3));
+    let mut opts = test_opts();
+    opts.queue_capacity = 2;
+    opts.workers = 8;
+    // Stall the engine so the bounded job queue fills deterministically
+    // while the barrier-released clients all submit.
+    opts.engine_stall = Some(Duration::from_millis(1_000));
+    let server = Server::spawn(&dir, opts).unwrap();
+    let addr = server.addr();
+
+    const N: usize = 8;
+    let barrier = Arc::new(Barrier::new(N));
+    let handles: Vec<_> = (0..N)
+        .map(|_| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                post(addr, "/v1/learners/0/act", &obs_body(&obs_for(0)))
+            })
+        })
+        .collect();
+    let responses: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let ok = responses.iter().filter(|r| status_of(r) == 200).count();
+    let shed = responses.iter().filter(|r| status_of(r) == 503).count();
+    assert_eq!(ok + shed, N, "every response is a 200 or a shed 503: {responses:?}");
+    assert!(ok >= 1, "the accepted (queued) requests must complete: {responses:?}");
+    assert!(shed >= 1, "with capacity 2 and {N} concurrent requests some must shed");
+    for resp in responses.iter().filter(|r| status_of(r) == 503) {
+        assert!(resp.contains("retry-after: 1"), "a shed response carries Retry-After: {resp}");
+        assert!(resp.contains("queue is full"), "a shed response names the cause: {resp}");
+    }
+    for resp in responses.iter().filter(|r| status_of(r) == 200) {
+        assert!(body_of(resp).contains("\"action\""), "{resp}");
+    }
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hot_reload_swaps_atomically_and_rejects_corruption() {
+    let dir = fresh_dir("reload");
+    let payload_v1 = checkpoint_payload(1, HID, 5);
+    save_checkpoint(&dir, 1, &payload_v1);
+    let server = Server::spawn(&dir, test_opts()).unwrap();
+    let addr = server.addr();
+    let obs = obs_for(4);
+
+    let before = post(addr, "/v1/learners/0/act", &obs_body(&obs));
+    assert_eq!(status_of(&before), 200, "{before}");
+    assert_eq!(body_of(&before), expected_act_body(&payload_v1, 0, &obs));
+
+    // A newer, different checkpoint: reload swaps to it.
+    let payload_v2 = checkpoint_payload(1, HID, 6);
+    save_checkpoint(&dir, 2, &payload_v2);
+    let reload = post(addr, "/admin/reload", "");
+    assert_eq!(status_of(&reload), 200, "{reload}");
+    assert!(body_of(&reload).contains("\"from_iteration\":1"), "{reload}");
+    assert!(body_of(&reload).contains("\"to_iteration\":2"), "{reload}");
+    let after = post(addr, "/v1/learners/0/act", &obs_body(&obs));
+    assert_eq!(body_of(&after), expected_act_body(&payload_v2, 0, &obs));
+    assert_ne!(body_of(&after), body_of(&before), "new params must serve after reload");
+
+    // A corrupt newest checkpoint: reload is rejected with a structured
+    // 409 and the old snapshot keeps serving, bit for bit.
+    save_checkpoint(&dir, 3, &checkpoint_payload(1, HID, 9));
+    flip_bit(dir.join(checkpoint_file_name(3)), 120, 2).unwrap();
+    let rejected = post(addr, "/admin/reload", "");
+    assert_eq!(status_of(&rejected), 409, "{rejected}");
+    assert!(body_of(&rejected).contains("reload rejected"), "{rejected}");
+    let still = post(addr, "/v1/learners/0/act", &obs_body(&obs));
+    assert_eq!(
+        body_of(&still),
+        body_of(&after),
+        "after a rejected reload the old params must serve bitwise-identically"
+    );
+
+    // A geometry-changing checkpoint is also rejected.
+    save_checkpoint(&dir, 4, &checkpoint_payload(1, HID * 2, 11));
+    let mismatched = post(addr, "/admin/reload", "");
+    assert_eq!(status_of(&mismatched), 409, "{mismatched}");
+    assert!(body_of(&mismatched).contains("geometry"), "{mismatched}");
+    let still2 = post(addr, "/v1/learners/0/act", &obs_body(&obs));
+    assert_eq!(body_of(&still2), body_of(&after));
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hostile_inputs_never_panic_or_wedge_the_server() {
+    let dir = fresh_dir("hostile");
+    save_checkpoint(&dir, 1, &checkpoint_payload(1, HID, 13));
+    let mut opts = test_opts();
+    opts.read_timeout = Duration::from_millis(300);
+    opts.max_body_bytes = 4096;
+    let server = Server::spawn(&dir, opts).unwrap();
+    let addr = server.addr();
+
+    let body = obs_body(&obs_for(0));
+    let canonical = format!(
+        "POST /v1/learners/0/act HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes();
+
+    // Truncation at *every* byte boundary of a canonical request: the
+    // server must answer a structured 4xx/5xx or close cleanly — and
+    // must still be alive afterwards.
+    for cut in 0..canonical.len() {
+        let reply = send_truncated_request(addr, &canonical, cut).unwrap();
+        let text = String::from_utf8_lossy(&reply);
+        if !text.is_empty() {
+            let status = status_of(&text);
+            assert!(
+                (400..=599).contains(&status),
+                "truncation at {cut} must be a structured error, got: {text}"
+            );
+        }
+    }
+
+    // Seeded garbage (not HTTP at all), several lengths and seeds.
+    for (len, seed) in [(1usize, 1u64), (64, 2), (1024, 3)] {
+        let reply = send_garbage(addr, len, seed).unwrap();
+        let text = String::from_utf8_lossy(&reply);
+        if !text.is_empty() {
+            assert!((400..=599).contains(&status_of(&text)), "garbage ({len}, {seed}): {text}");
+        }
+    }
+
+    // Declared-oversized body: rejected from the header alone.
+    let reply = send_oversized_body(addr, "/v1/learners/0/act", 1 << 20).unwrap();
+    let text = String::from_utf8_lossy(&reply);
+    assert_eq!(status_of(&text), 413, "{text}");
+
+    // Slow loris: an unfinished head is answered 408 by the read timeout,
+    // not allowed to pin a worker forever.
+    let prefix = b"POST /v1/learners/0/act HTTP/1.1\r\nContent-";
+    let reply = slow_loris_request(addr, prefix, Duration::from_millis(900)).unwrap();
+    let text = String::from_utf8_lossy(&reply);
+    assert_eq!(status_of(&text), 408, "{text}");
+
+    // Zero-length body on act: structured 400 from the JSON parser.
+    let resp = post(addr, "/v1/learners/0/act", "");
+    assert_eq!(status_of(&resp), 400, "{resp}");
+
+    // After the whole matrix the server still serves correctly.
+    let resp = post(addr, "/v1/learners/0/act", &body);
+    assert_eq!(status_of(&resp), 200, "server must survive the matrix: {resp}");
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn handler_panic_is_isolated_to_its_connection() {
+    let dir = fresh_dir("panic");
+    save_checkpoint(&dir, 1, &checkpoint_payload(1, HID, 17));
+    let mut opts = test_opts();
+    opts.inject_panic = true;
+    let server = Server::spawn(&dir, opts).unwrap();
+    let addr = server.addr();
+
+    let raw = "POST /v1/learners/0/act HTTP/1.1\r\nx-inject-panic: 1\r\nContent-Length: 0\r\n\r\n";
+    let resp = exchange(addr, raw.as_bytes());
+    assert_eq!(status_of(&resp), 500, "{resp}");
+    assert!(body_of(&resp).contains("panicked"), "{resp}");
+
+    // The panic was confined to that connection.
+    let resp = post(addr, "/v1/learners/0/act", &obs_body(&obs_for(0)));
+    assert_eq!(status_of(&resp), 200, "the server must survive a handler panic: {resp}");
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn inspect_reports_metadata_and_corruption() {
+    let dir = fresh_dir("inspect");
+    save_checkpoint(&dir, 1, &checkpoint_payload(2, HID, 19));
+    save_checkpoint(&dir, 2, &checkpoint_payload(2, HID, 20));
+    flip_bit(dir.join(checkpoint_file_name(2)), 80, 5).unwrap();
+
+    let lines = inspect_dir(&dir).unwrap();
+    assert_eq!(lines.len(), 2, "{lines:?}");
+    assert!(lines[0].contains("OK"), "{}", lines[0]);
+    for want in ["iter=1", "v1", "learners=2", &format!("obs={OBS}"), &format!("hid={HID}")] {
+        assert!(lines[0].contains(want), "missing {want}: {}", lines[0]);
+    }
+    assert!(lines[1].contains("CORRUPT"), "{}", lines[1]);
+    assert!(lines[1].contains("iter=2"), "{}", lines[1]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// SIGINT drain, end to end against the real binary: an in-flight request
+/// (held by an injected engine stall) completes with a 200 while the
+/// process shuts down, and the exit status is 0.
+#[cfg(unix)]
+#[test]
+fn sigint_drains_in_flight_requests_and_exits_zero() {
+    let dir = fresh_dir("drain");
+    save_checkpoint(&dir, 1, &checkpoint_payload(1, HID, 23));
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["serve", "--checkpoint-dir", dir.to_str().unwrap(), "--port", "0"])
+        .env(SERVE_STALL_ENV, "800")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // The first stdout line names the bound (ephemeral) address.
+    let stdout = child.stdout.take().unwrap();
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let first = lines.next().expect("the server must print its address").unwrap();
+    let addr: SocketAddr = first
+        .strip_prefix("serving on http://")
+        .unwrap_or_else(|| panic!("unexpected startup line: {first}"))
+        .parse()
+        .unwrap();
+
+    // Fire a request that will be in flight (engine stalled 800 ms)...
+    let in_flight = obs_body(&obs_for(1));
+    let client = std::thread::spawn(move || post(addr, "/v1/learners/0/act", &in_flight));
+    std::thread::sleep(Duration::from_millis(250));
+
+    // ...then SIGINT the server while that request is still queued.
+    let kill = std::process::Command::new("kill")
+        .args(["-s", "INT", &child.id().to_string()])
+        .status()
+        .unwrap();
+    assert!(kill.success());
+
+    let resp = client.join().unwrap();
+    assert_eq!(status_of(&resp), 200, "the in-flight request must complete: {resp}");
+
+    let status = child.wait().unwrap();
+    assert!(status.success(), "a drained shutdown must exit 0, got {status:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -121,6 +121,35 @@ fn bit_flip_matrix_errors_never_panics() {
     }
 }
 
+/// A corrupt length field claiming a huge payload must be rejected by
+/// comparison against the file's actual size *before* any payload-sized
+/// allocation — a bit-flipped `payload_len` of terabytes is a structured
+/// error naming both numbers, never an attempted huge allocation (the
+/// `read_headered` defensive bound).
+#[test]
+fn corrupt_length_field_is_bounded_before_allocation() {
+    for &n in &[0usize, 7, 4096] {
+        let path = tmp(&format!("hugelen_{n}.bin"));
+        write_headered(&path, MAGIC, VERSION, &payload(n, 41)).unwrap();
+        // Overwrite the length field (bytes 12..20) with an absurd claim;
+        // magic, version and CRC stay intact so the length check itself
+        // must be the one that fires.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let huge: u64 = 1 << 45; // 32 TiB
+        bytes[12..20].copy_from_slice(&huge.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_headered(&path, MAGIC, VERSION)
+            .expect_err("a corrupt length field must be rejected");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&huge.to_string()) && msg.contains(&n.to_string()),
+            "the error must name the claimed and actual payload sizes: {msg}"
+        );
+        assert!(msg.contains("not allocating"), "the remedy must be named: {msg}");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
 #[test]
 fn zeroed_file_is_a_structured_error() {
     for &n in &[0usize, 4096] {

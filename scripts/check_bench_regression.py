@@ -24,7 +24,7 @@ import json
 import os
 import sys
 
-THROUGHPUT_KEYS = ("rows_per_sec", "steps_per_sec")
+THROUGHPUT_KEYS = ("rows_per_sec", "steps_per_sec", "requests_per_sec")
 
 
 def ident(cell):

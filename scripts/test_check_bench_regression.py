@@ -22,6 +22,20 @@ def cell(op, workers, rate):
     return {"op": op, "num_workers": workers, "rows_per_sec": rate, "backend": "native"}
 
 
+def serve_cell(clients, rate):
+    """A bench_serve.json cell: keyed by clients/window, metered by
+    requests_per_sec, with latency metrics the guard must ignore."""
+    return {
+        "op": "serve_act",
+        "clients": clients,
+        "batch_window_ms": 2,
+        "requests_per_sec": rate,
+        "p50_ms": 1.0,
+        "p99_ms": 5.0,
+        "backend": "native",
+    }
+
+
 class GuardHarness(unittest.TestCase):
     def setUp(self):
         self.tmp = tempfile.TemporaryDirectory()
@@ -82,6 +96,25 @@ class TestRegressionDetection(GuardHarness):
         self.write(self.fresh, "b.json", [cell("ppo", 4, 250.0)])
         rc, out = self.run_guard()
         self.assertEqual(rc, 0, out)
+
+    def test_requests_per_sec_regression_fails(self):
+        # The serving bench meters requests_per_sec; a drop beyond the
+        # threshold must fail even though the cells also carry latency
+        # floats (which are metrics, not identity, and must not unmatch
+        # the cells).
+        self.write(self.baseline, "serve.json", [serve_cell(4, 1000.0)])
+        self.write(self.fresh, "serve.json", [serve_cell(4, 600.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 1, out)
+        self.assertIn("[FAIL]", out)
+        self.assertIn("serve_act", out)
+
+    def test_requests_per_sec_within_threshold_passes(self):
+        self.write(self.baseline, "serve.json", [serve_cell(4, 1000.0)])
+        self.write(self.fresh, "serve.json", [serve_cell(4, 900.0)])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+        self.assertIn("[ok]", out)
 
 
 class TestBaselineLessCells(GuardHarness):
