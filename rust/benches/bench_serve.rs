@@ -1,11 +1,17 @@
-//! Serving-runtime throughput: end-to-end `POST /v1/learners/<j>/act`
-//! requests/sec against a live in-process [`ials::serve::Server`] over
-//! real loopback TCP, sweeping `clients × batch_window_ms`. The
-//! interesting comparison is window 0 (every request is its own forward)
-//! vs a small coalescing window at high client counts — batching should
-//! buy aggregate throughput without hurting single-client latency much.
-//! Tail latency (p95/p99) is reported per cell because the batcher's
-//! deadline handling is exactly what the serving PR is about.
+//! Serving-runtime throughput: end-to-end `POST .../act` requests/sec
+//! against a live in-process [`ials::serve::Server`] over real loopback
+//! TCP, sweeping `mode × clients × batch_window_ms`. Two comparisons
+//! matter:
+//!
+//! - **window 0 vs a small coalescing window** at high client counts —
+//!   adaptive batching should buy aggregate throughput without hurting
+//!   single-client latency (an empty queue dispatches immediately);
+//! - **keep-alive vs close** — reusing one connection per client drops
+//!   the per-request connect/teardown, so keep-alive req/s should be at
+//!   least close req/s everywhere, most visibly at 16 clients.
+//!
+//! Tail latency (p50/p95/p99) is reported per cell because the batcher's
+//! deadline handling is exactly what the serving runtime is about.
 //!
 //! Run: `cargo bench --bench bench_serve`
 //! Emits a table to stdout and a JSON record per cell to
@@ -14,6 +20,7 @@
 use ials::bench_harness::Table;
 use ials::runtime::checkpoint::CheckpointManager;
 use ials::serve::{json, Server, ServeOptions};
+use ials::testkit::fault::read_one_response;
 use ials::util::state::StateWriter;
 use ials::util::Pcg32;
 use std::io::{Read, Write};
@@ -26,12 +33,14 @@ const HID: usize = 64;
 const ACT: usize = 8;
 const LEARNERS: usize = 2;
 
+const MODE_SWEEP: [&str; 2] = ["close", "keepalive"];
 const CLIENT_SWEEP: [usize; 3] = [1, 4, 16];
 const WINDOW_SWEEP_MS: [u64; 2] = [0, 2];
 const REQUESTS_PER_CLIENT: usize = 200;
 const WARMUP_PER_CLIENT: usize = 20;
 
 struct Cell {
+    mode: &'static str,
     clients: usize,
     batch_window_ms: u64,
     requests_per_sec: f64,
@@ -101,12 +110,15 @@ fn checkpoint_dir() -> PathBuf {
 // ---------------------------------------------------------------------------
 
 /// One canonical act request per learner, prebuilt so client threads only
-/// write bytes and read the reply.
-fn request_bytes(learner: usize) -> Vec<u8> {
+/// write bytes and read the reply. `close` decides the connection mode:
+/// `Connection: close` (one connection per request) or the HTTP/1.1
+/// keep-alive default.
+fn request_bytes(learner: usize, close: bool) -> Vec<u8> {
     let obs: Vec<f32> = (0..OBS).map(|i| i as f32 * 0.01 - 0.15).collect();
     let body = format!("{{\"obs\":{}}}", json::nums(&obs));
+    let connection = if close { "connection: close\r\n" } else { "" };
     format!(
-        "POST /v1/learners/{learner}/act HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+        "POST /v1/runs/0/learners/{learner}/act HTTP/1.1\r\n{connection}content-length: {}\r\n\r\n{body}",
         body.len()
     )
     .into_bytes()
@@ -121,13 +133,13 @@ fn exchange(addr: SocketAddr, raw: &[u8]) -> String {
     String::from_utf8_lossy(&out).to_string()
 }
 
-/// Drive `clients` threads × `reqs` fresh-connection requests each;
+/// `clients` threads × `reqs` one-connection-per-request exchanges each;
 /// returns every request's wall-clock latency in seconds.
-fn drive(addr: SocketAddr, clients: usize, reqs: usize) -> Vec<f64> {
+fn drive_close(addr: SocketAddr, clients: usize, reqs: usize) -> Vec<f64> {
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             std::thread::spawn(move || {
-                let raw = request_bytes(c % LEARNERS);
+                let raw = request_bytes(c % LEARNERS, true);
                 let mut lat = Vec::with_capacity(reqs);
                 for _ in 0..reqs {
                     let t0 = Instant::now();
@@ -146,12 +158,46 @@ fn drive(addr: SocketAddr, clients: usize, reqs: usize) -> Vec<f64> {
     handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
 }
 
+/// `clients` threads, each holding ONE keep-alive connection for all its
+/// `reqs` requests (responses framed by content-length).
+fn drive_keepalive(addr: SocketAddr, clients: usize, reqs: usize) -> Vec<f64> {
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let raw = request_bytes(c % LEARNERS, false);
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+                let mut reader = std::io::BufReader::new(&stream);
+                let mut lat = Vec::with_capacity(reqs);
+                for _ in 0..reqs {
+                    let t0 = Instant::now();
+                    let mut w = &stream;
+                    w.write_all(&raw).expect("keep-alive write");
+                    let (head, _body) = read_one_response(&mut reader).expect("keep-alive read");
+                    lat.push(t0.elapsed().as_secs_f64());
+                    assert!(head.starts_with("HTTP/1.1 200"), "bench request failed: {head}");
+                }
+                lat
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+}
+
+fn drive(addr: SocketAddr, mode: &str, clients: usize, reqs: usize) -> Vec<f64> {
+    match mode {
+        "close" => drive_close(addr, clients, reqs),
+        "keepalive" => drive_keepalive(addr, clients, reqs),
+        other => unreachable!("unknown mode {other}"),
+    }
+}
+
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
     sorted[idx]
 }
 
-fn measure(dir: &Path, clients: usize, batch_window_ms: u64) -> Cell {
+fn measure(dir: &Path, mode: &'static str, clients: usize, batch_window_ms: u64) -> Cell {
     let opts = ServeOptions {
         port: 0,
         batch_window: Duration::from_millis(batch_window_ms),
@@ -162,15 +208,17 @@ fn measure(dir: &Path, clients: usize, batch_window_ms: u64) -> Cell {
         write_timeout: Duration::from_secs(5),
         request_timeout: Duration::from_secs(10),
         max_body_bytes: 1 << 20,
+        max_requests_per_conn: 100_000,
+        idle_timeout: Duration::from_secs(5),
         engine_stall: None,
         inject_panic: false,
     };
-    let server = Server::spawn(dir, opts).expect("spawn server");
+    let server = Server::spawn(&[dir.to_path_buf()], opts).expect("spawn server");
     let addr = server.addr();
 
-    drive(addr, clients, WARMUP_PER_CLIENT); // warmup
+    drive(addr, mode, clients, WARMUP_PER_CLIENT); // warmup
     let t0 = Instant::now();
-    let mut lat = drive(addr, clients, REQUESTS_PER_CLIENT);
+    let mut lat = drive(addr, mode, clients, REQUESTS_PER_CLIENT);
     let elapsed = t0.elapsed().as_secs_f64();
 
     server.begin_shutdown();
@@ -180,11 +228,13 @@ fn measure(dir: &Path, clients: usize, batch_window_ms: u64) -> Cell {
     let total = (clients * REQUESTS_PER_CLIENT) as f64;
     let rps = total / elapsed;
     println!(
-        "bench serve/c{clients}/w{batch_window_ms}ms: {rps:.0} req/s  p50 {:.3} ms  p99 {:.3} ms",
+        "bench serve/{mode}/c{clients}/w{batch_window_ms}ms: {rps:.0} req/s  p50 {:.3} ms  \
+         p99 {:.3} ms",
         percentile(&lat, 0.50) * 1e3,
         percentile(&lat, 0.99) * 1e3,
     );
     Cell {
+        mode,
         clients,
         batch_window_ms,
         requests_per_sec: rps,
@@ -197,18 +247,21 @@ fn measure(dir: &Path, clients: usize, batch_window_ms: u64) -> Cell {
 fn main() {
     let dir = checkpoint_dir();
     let mut cells: Vec<Cell> = Vec::new();
-    for &w in &WINDOW_SWEEP_MS {
-        for &c in &CLIENT_SWEEP {
-            cells.push(measure(&dir, c, w));
+    for &mode in &MODE_SWEEP {
+        for &w in &WINDOW_SWEEP_MS {
+            for &c in &CLIENT_SWEEP {
+                cells.push(measure(&dir, mode, c, w));
+            }
         }
     }
 
     let mut table = Table::new(
         "policy-inference serving (end-to-end act requests/sec over loopback TCP)",
-        &["clients", "window ms", "req/s", "p50 ms", "p95 ms", "p99 ms"],
+        &["mode", "clients", "window ms", "req/s", "p50 ms", "p95 ms", "p99 ms"],
     );
     for c in &cells {
         table.row(&[
+            c.mode.to_string(),
             c.clients.to_string(),
             c.batch_window_ms.to_string(),
             format!("{:.0}", c.requests_per_sec),
@@ -219,13 +272,33 @@ fn main() {
     }
     table.print();
 
+    // The headline comparison: keep-alive vs close at the top of the
+    // client sweep (connection reuse should never lose).
+    let top = *CLIENT_SWEEP.last().unwrap();
+    for &w in &WINDOW_SWEEP_MS {
+        let find = |m: &str| {
+            cells
+                .iter()
+                .find(|c| c.mode == m && c.clients == top && c.batch_window_ms == w)
+                .expect("swept cell")
+        };
+        let (close, ka) = (find("close"), find("keepalive"));
+        println!(
+            "keep-alive vs close at {top} clients, window {w} ms: {:.0} vs {:.0} req/s ({:.2}x)",
+            ka.requests_per_sec,
+            close.requests_per_sec,
+            ka.requests_per_sec / close.requests_per_sec
+        );
+    }
+
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("[\n");
     for (i, c) in cells.iter().enumerate() {
         json.push_str(&format!(
-            "  {{\"op\": \"serve_act\", \"clients\": {}, \"batch_window_ms\": {}, \
-             \"learners\": {}, \"requests_per_sec\": {:.1}, \"p50_ms\": {:.3}, \
-             \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"backend\": \"native\"}}{}\n",
+            "  {{\"op\": \"serve_act\", \"mode\": \"{}\", \"clients\": {}, \
+             \"batch_window_ms\": {}, \"learners\": {}, \"requests_per_sec\": {:.1}, \
+             \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"backend\": \"native\"}}{}\n",
+            c.mode,
             c.clients,
             c.batch_window_ms,
             LEARNERS,

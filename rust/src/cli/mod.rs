@@ -15,11 +15,18 @@ use std::collections::BTreeMap;
 /// error out, so typos never parse as booleans.
 const BOOL_FLAGS: &[&str] = &["resume", "no-health"];
 
-/// Parsed command line: a subcommand plus `--key value` flags.
+/// Flags that may be passed more than once (each occurrence appends a
+/// value — `serve --checkpoint-dir A --checkpoint-dir B` hosts two
+/// runs). Every other repeated flag is still a hard error: a silently
+/// last-wins duplicate is almost always a typo.
+const REPEATABLE_FLAGS: &[&str] = &["checkpoint-dir"];
+
+/// Parsed command line: a subcommand plus `--key value` flags (each key
+/// holding every value it was passed, in order).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub subcommand: String,
-    pub flags: BTreeMap<String, String>,
+    pub flags: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -39,15 +46,25 @@ impl Args {
             } else {
                 it.next().ok_or_else(|| anyhow!("flag --{key} needs a value"))?.clone()
             };
-            if args.flags.insert(key.to_string(), value).is_some() {
+            let values = args.flags.entry(key.to_string()).or_default();
+            if !values.is_empty() && !REPEATABLE_FLAGS.contains(&key) {
                 bail!("duplicate flag --{key}");
             }
+            values.push(value);
         }
         Ok(args)
     }
 
+    /// The flag's (first) value. For repeatable flags, [`Args::get_all`]
+    /// returns every occurrence.
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags.get(key).and_then(|vs| vs.first()).map(|s| s.as_str())
+    }
+
+    /// Every value a repeatable flag was passed, in command-line order
+    /// (empty if the flag is absent).
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|vs| vs.as_slice()).unwrap_or(&[])
     }
 
     pub fn require(&self, key: &str) -> Result<&str> {
@@ -95,8 +112,9 @@ USAGE:
                [--checkpoint-every <steps>] [--checkpoint-dir <dir>] [--resume]
                [--distributed <n>] [--no-health]
   repro collect --domain <traffic|warehouse> [--steps <n>] [--seed <n>]
-  repro serve  --checkpoint-dir <run-dir> [--config <toml>] [--port <p>]
-  repro inspect --checkpoint-dir <run-dir>
+  repro serve  --checkpoint-dir <run-dir> [--checkpoint-dir <run-dir> ...]
+               [--config <toml>] [--port <p>]
+  repro inspect --checkpoint-dir <run-dir> [--checkpoint-dir <run-dir> ...]
   repro bench-throughput            # GS vs LS vs IALS steps/sec table
   repro list                        # list figures and artifacts
 
@@ -128,23 +146,36 @@ to its newest valid checkpoint; after max_rollbacks it is quarantined —
 the run finishes the healthy learners and exits nonzero. Checks are
 read-only: a guard-on clean run is bitwise identical to --no-health
 (which disables the guard, like [health] enabled = false).
-Serving: `repro serve --checkpoint-dir <run-dir>` loads the newest valid
-checkpoint of a training run (the <checkpoint-dir>/<condition>_seed<seed>/
-directory) and serves greedy policy inference over loopback HTTP:
-POST /v1/learners/<j>/act with {\"obs\": [...]} returns action, value and
-logits; GET /healthz, /readyz and /v1/meta report liveness, drain state
-and the serving geometry; POST /admin/reload atomically hot-swaps to the
-newest checkpoint after full off-to-the-side validation (a corrupt or
-geometry-changing candidate is a 409 and the old params keep serving).
-Concurrent requests are coalesced into one batched forward per learner
-([serve] batch_window_ms / max_batch — batching is bitwise-neutral);
-the bounded queue sheds overload with 503 + Retry-After ([serve]
-queue_capacity), slow clients time out ([serve] read/write_timeout_ms),
-per-request deadlines return 504 ([serve] request_timeout_ms), and
-SIGINT/SIGTERM drain in-flight requests before exiting 0.
-`repro inspect --checkpoint-dir <run-dir>` prints one line per checkpoint
-file: iteration, header version, learner count and geometry, and whether
-the file fully validates (CRC + payload parse) or is CORRUPT.";
+Serving: `repro serve --checkpoint-dir A [--checkpoint-dir B ...]` (or
+[serve] runs = [\"A\", \"B\"]) hosts each training-run directory (the
+<checkpoint-dir>/<condition>_seed<seed>/ path) as a named run — the
+directory basename — behind one HTTP front tier on loopback:
+POST /v1/runs/<run>/learners/<j>/act with {\"obs\": [...]} returns
+action, value and logits; POST /v1/runs/<run>/admin/reload atomically
+hot-swaps that run (only that run) to its newest checkpoint after full
+off-to-the-side validation (a corrupt or geometry-changing candidate is
+a 409 and the old params keep serving); GET /healthz, /readyz and
+/v1/meta (api_version 2, one entry per hosted run) report liveness,
+drain state and the serving geometry. The PR-9 single-run routes
+POST /v1/learners/<j>/act and POST /admin/reload are DEPRECATED aliases
+onto run 0: they keep working, answered with a `Deprecation: true`
+header and a `Link: ...; rel=\"successor-version\"` pointer to the
+/v1/runs/ route. Connections are HTTP/1.1 keep-alive (per-connection
+request cap [serve] max_requests_per_conn, idle close after [serve]
+idle_timeout_ms; Connection: close is honored per request). Every
+4xx/5xx body is the envelope {\"error\": {\"code\", \"message\",
+\"retry_after_ms\"?}} with a stable machine-readable code. Concurrent
+requests are coalesced into one batched forward per learner per run
+([serve] batch_window_ms / max_batch — the window adapts to queue depth
+and batching is bitwise-neutral); each run's bounded queue sheds
+overload with 503 + Retry-After ([serve] queue_capacity), slow clients
+time out ([serve] read/write_timeout_ms), per-request deadlines return
+504 ([serve] request_timeout_ms), and SIGINT/SIGTERM drain in-flight
+requests before exiting 0.
+`repro inspect --checkpoint-dir <run-dir> [--checkpoint-dir ...]` prints
+one verdict block per run: one line per checkpoint file with iteration,
+header version, learner count and geometry, and whether the file fully
+validates (CRC + payload parse) or is CORRUPT.";
 
 #[cfg(test)]
 mod tests {
@@ -169,6 +200,18 @@ mod tests {
         assert!(Args::parse(&v(&["x", "notflag"])).is_err());
         assert!(Args::parse(&v(&["x", "--k"])).is_err());
         assert!(Args::parse(&v(&["x", "--k", "1", "--k", "2"])).is_err());
+    }
+
+    #[test]
+    fn repeatable_flags_accumulate_in_order() {
+        let a = Args::parse(&v(&["serve", "--checkpoint-dir", "a", "--checkpoint-dir", "b"]))
+            .unwrap();
+        assert_eq!(a.get_all("checkpoint-dir"), &["a".to_string(), "b".to_string()]);
+        // `get` still sees the first occurrence, and absent flags are empty.
+        assert_eq!(a.get("checkpoint-dir"), Some("a"));
+        assert!(a.get_all("port").is_empty());
+        // Non-repeatable flags still reject duplicates (see rejects_malformed).
+        assert!(Args::parse(&v(&["serve", "--port", "1", "--port", "2"])).is_err());
     }
 
     #[test]

@@ -246,6 +246,17 @@ pub struct ServeConfig {
     /// Largest request body accepted; larger ones are answered `413`
     /// before any allocation of the claimed size.
     pub max_body_bytes: usize,
+    /// Requests served on one keep-alive connection before the server
+    /// closes it (resource hygiene — no connection is immortal).
+    pub max_requests_per_conn: usize,
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the server closes it silently.
+    pub idle_timeout_ms: u64,
+    /// Checkpoint run directories to host (`repro serve` with no
+    /// `--checkpoint-dir` flags serves these; each becomes a
+    /// `/v1/runs/<basename>/…` namespace). Empty by default: the CLI
+    /// flag is the usual way in.
+    pub runs: Vec<String>,
 }
 
 impl Default for ServeConfig {
@@ -260,6 +271,9 @@ impl Default for ServeConfig {
             write_timeout_ms: 5_000,
             request_timeout_ms: 10_000,
             max_body_bytes: 1 << 20,
+            max_requests_per_conn: 1_000,
+            idle_timeout_ms: 5_000,
+            runs: Vec::new(),
         }
     }
 }
@@ -623,6 +637,17 @@ impl ExperimentConfig {
         s.request_timeout_ms =
             doc.int_or("serve", "request_timeout_ms", s.request_timeout_ms as i64)? as u64;
         s.max_body_bytes = doc.int_or("serve", "max_body_bytes", s.max_body_bytes as i64)? as usize;
+        s.max_requests_per_conn =
+            doc.int_or("serve", "max_requests_per_conn", s.max_requests_per_conn as i64)? as usize;
+        s.idle_timeout_ms =
+            doc.int_or("serve", "idle_timeout_ms", s.idle_timeout_ms as i64)? as u64;
+        if let Some(v) = doc.get("serve", "runs") {
+            s.runs = v
+                .as_array()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+        }
 
         cfg.validate()?;
         Ok(cfg)
@@ -770,6 +795,19 @@ impl ExperimentConfig {
             "[serve] max_body_bytes must be in 1..=2^30 (got {})",
             s.max_body_bytes
         );
+        anyhow::ensure!(
+            (1..=1_000_000).contains(&s.max_requests_per_conn),
+            "[serve] max_requests_per_conn must be in 1..=1000000 (got {})",
+            s.max_requests_per_conn
+        );
+        anyhow::ensure!(
+            (1..=600_000).contains(&s.idle_timeout_ms),
+            "[serve] idle_timeout_ms must be in 1..=600000 (got {})",
+            s.idle_timeout_ms
+        );
+        for dir in &s.runs {
+            anyhow::ensure!(!dir.is_empty(), "[serve] runs entries must be non-empty paths");
+        }
         Ok(())
     }
 
@@ -903,6 +941,10 @@ impl ExperimentConfig {
         e(&mut o, "write_timeout_ms", v.write_timeout_ms.to_string());
         e(&mut o, "request_timeout_ms", v.request_timeout_ms.to_string());
         e(&mut o, "max_body_bytes", v.max_body_bytes.to_string());
+        e(&mut o, "max_requests_per_conn", v.max_requests_per_conn.to_string());
+        e(&mut o, "idle_timeout_ms", v.idle_timeout_ms.to_string());
+        let runs: Vec<String> = v.runs.iter().map(|r| s(r)).collect();
+        e(&mut o, "runs", format!("[{}]", runs.join(", ")));
         o
     }
 }
@@ -990,6 +1032,9 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("serve", "write_timeout_ms"),
     ("serve", "request_timeout_ms"),
     ("serve", "max_body_bytes"),
+    ("serve", "max_requests_per_conn"),
+    ("serve", "idle_timeout_ms"),
+    ("serve", "runs"),
 ];
 
 fn check_known_keys(doc: &Document) -> Result<()> {

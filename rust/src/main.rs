@@ -222,25 +222,47 @@ fn run(argv: &[String]) -> Result<()> {
             );
         }
         "serve" => {
-            // Policy-inference server over a trained checkpoint run
-            // directory (the `<checkpoint_dir>/<sim>-<config>_seed<S>`
-            // path a `train --checkpoint-dir` run writes).
+            // Policy-inference front tier over trained checkpoint run
+            // directories (the `<checkpoint_dir>/<sim>-<config>_seed<S>`
+            // paths a `train --checkpoint-dir` run writes). Each
+            // --checkpoint-dir becomes one hosted run; with no flags the
+            // `[serve] runs` config list is used.
             let cfg = load_config(&args)?;
-            let dir = std::path::PathBuf::from(args.require("checkpoint-dir")?);
+            let mut dirs: Vec<std::path::PathBuf> =
+                args.get_all("checkpoint-dir").iter().map(std::path::PathBuf::from).collect();
+            if dirs.is_empty() {
+                dirs = cfg.serve.runs.iter().map(std::path::PathBuf::from).collect();
+            }
+            anyhow::ensure!(
+                !dirs.is_empty(),
+                "serve needs at least one run: pass --checkpoint-dir (repeatable) or set \
+                 [serve] runs in the config"
+            );
             let mut opts = ServeOptions::from_config(&cfg.serve)?;
             if args.get("port").is_some() {
                 let port = args.get_usize("port", cfg.serve.port)?;
                 anyhow::ensure!(port <= u16::MAX as usize, "--port {port} is out of range");
                 opts.port = port as u16;
             }
-            ials::serve::run(&dir, opts)?;
+            ials::serve::run(&dirs, opts)?;
         }
         "inspect" => {
             // Read-only checkpoint-directory report: one line per file
-            // with header metadata, geometry and CRC validity.
-            let dir = std::path::PathBuf::from(args.require("checkpoint-dir")?);
-            for line in ials::serve::snapshot::inspect_dir(&dir)? {
-                println!("{line}");
+            // with header metadata, geometry and CRC validity — one
+            // verdict block per directory when several are passed.
+            let dirs = args.get_all("checkpoint-dir");
+            anyhow::ensure!(!dirs.is_empty(), "missing required flag --checkpoint-dir");
+            let many = dirs.len() > 1;
+            for (i, dir) in dirs.iter().enumerate() {
+                if many {
+                    if i > 0 {
+                        println!();
+                    }
+                    println!("{dir}:");
+                }
+                for line in ials::serve::snapshot::inspect_dir(std::path::Path::new(dir))? {
+                    println!("{line}");
+                }
             }
         }
         "list" => {

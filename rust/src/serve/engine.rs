@@ -8,9 +8,12 @@
 //!   `sync_channel` (the overload backpressure point: `try_send` failing
 //!   with `Full` is what the HTTP layer turns into a 503) and block on a
 //!   per-job reply channel;
-//! - the batcher waits up to `batch_window` after the first job arrives
-//!   (or until `max_batch` jobs are queued), then groups the batch by
-//!   learner and runs one [`PolicyView::forward_rows`] per group. Rows
+//! - the batcher's coalescing window *adapts to queue depth*: an empty
+//!   queue dispatches immediately (a lone request never waits out a
+//!   timer), while observed backlog stretches the window toward the
+//!   `batch_window` maximum in proportion to how full the batch already
+//!   is (see [`adaptive_window`]). Either way the batch is grouped by
+//!   learner and run as one [`PolicyView::forward_rows`] per group. Rows
 //!   are independent in every kernel, so a batched response is bitwise
 //!   identical to a serial one — `tests/serve.rs` asserts exactly that;
 //! - jobs whose deadline passed while queued are answered with a shed
@@ -73,13 +76,27 @@ pub fn run_engine(rx: Receiver<ActJob>, snapshot: Arc<RwLock<PolicySnapshot>>, c
             Err(RecvTimeoutError::Disconnected) => return,
         };
         let mut batch = vec![first];
-        let window_closes = Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= window_closes {
+        let opened = Instant::now();
+        loop {
+            // Greedy drain: everything already queued joins the batch for
+            // free — no window is spent collecting work that has arrived.
+            while batch.len() < cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(job) => batch.push(job),
+                    Err(_) => break, // empty or disconnected; both end the drain
+                }
+            }
+            if batch.len() >= cfg.max_batch {
                 break;
             }
-            match rx.recv_timeout(window_closes - now) {
+            // The window only exists to *wait* for stragglers, and how
+            // long to wait scales with how much backlog was just seen.
+            let closes = opened + adaptive_window(batch.len(), cfg.max_batch, cfg.batch_window);
+            let now = Instant::now();
+            if now >= closes {
+                break;
+            }
+            match rx.recv_timeout(closes - now) {
                 Ok(job) => batch.push(job),
                 Err(RecvTimeoutError::Timeout) => break,
                 // Keep the jobs we already pulled; they run below and
@@ -90,6 +107,25 @@ pub fn run_engine(rx: Receiver<ActJob>, snapshot: Arc<RwLock<PolicySnapshot>>, c
         let snap = snapshot.read().unwrap_or_else(|e| e.into_inner());
         run_batch(batch, &snap, &mut scratch);
     }
+}
+
+/// The adaptive coalescing window: how long past the first job's arrival
+/// the batcher keeps waiting for more, given it already holds
+/// `batch_len` jobs out of `max_batch`.
+///
+/// - `batch_len == 1` (the queue was empty behind the first job) →
+///   **zero**: dispatch immediately, a lone request never pays the
+///   window as latency;
+/// - backlog → the window stretches linearly with batch fill toward the
+///   configured `max` (reached at a full batch, which dispatches anyway).
+///
+/// Batching stays a pure throughput knob: the window decides only *when*
+/// a batch closes, never how its rows are computed, so the
+/// bitwise-identical-to-serial guarantee is unaffected.
+pub fn adaptive_window(batch_len: usize, max_batch: usize, max: Duration) -> Duration {
+    let backlog = batch_len.saturating_sub(1);
+    let span = max_batch.saturating_sub(1).max(1);
+    max.mul_f64((backlog.min(span)) as f64 / span as f64)
 }
 
 /// Run one collected batch: shed expired jobs, group the rest by learner,
@@ -176,5 +212,38 @@ mod tests {
         assert_eq!(argmax(&[0.0, 1.0, 1.0, -2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
         assert_eq!(argmax(&[-1.0, -3.0]), 0);
+    }
+
+    #[test]
+    fn adaptive_window_is_zero_on_an_empty_queue() {
+        // One job, nothing behind it: dispatch immediately at any max.
+        let max = Duration::from_millis(2);
+        assert_eq!(adaptive_window(1, 64, max), Duration::ZERO);
+        assert_eq!(adaptive_window(1, 1, max), Duration::ZERO);
+    }
+
+    #[test]
+    fn adaptive_window_stretches_with_backlog_and_clamps_at_max() {
+        let max = Duration::from_millis(100);
+        // Linear in fill: half-full batch waits half the max window.
+        assert_eq!(adaptive_window(33, 65, max), Duration::from_millis(50));
+        // A full (or over-full) batch saturates at the configured max.
+        assert_eq!(adaptive_window(64, 64, max), max);
+        assert_eq!(adaptive_window(1000, 64, max), max);
+        // Monotone non-decreasing in batch depth.
+        let mut prev = Duration::ZERO;
+        for len in 1..=64 {
+            let w = adaptive_window(len, 64, max);
+            assert!(w >= prev, "window shrank at len={len}");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn adaptive_window_handles_degenerate_max_batch() {
+        // max_batch=1 never waits (the batch is already full at one job);
+        // the span guard keeps the division well-defined.
+        assert_eq!(adaptive_window(1, 1, Duration::from_millis(5)), Duration::ZERO);
+        assert_eq!(adaptive_window(2, 1, Duration::from_millis(5)), Duration::from_millis(5));
     }
 }

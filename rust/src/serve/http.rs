@@ -2,13 +2,18 @@
 //! enough protocol for the serving runtime, parsed *strictly*. The server
 //! faces untrusted clients, so the contract here mirrors the durable-blob
 //! reader in `util::state`: every malformed input becomes a structured
-//! [`HttpError`] carrying a 4xx/5xx status and a reason naming what was
-//! wrong — never a panic, never an unbounded allocation.
+//! [`HttpError`] carrying a 4xx/5xx status, a stable machine-readable
+//! `code`, and a reason naming what was wrong — never a panic, never an
+//! unbounded allocation.
 //!
 //! Scope decisions (all intentional):
-//! - one request per connection (`Connection: close` on every response) —
-//!   keep-alive bookkeeping buys nothing for a batch-inference endpoint
-//!   and complicates drain;
+//! - **keep-alive by default** (HTTP/1.1 semantics): the connection
+//!   handler serves a request *stream* per connection — `Connection:
+//!   close` (or HTTP/1.0 without `keep-alive`) closes after the response,
+//!   and the server closes unilaterally after a parse error (framing is
+//!   untrustworthy past one), at the per-connection request cap, and on
+//!   drain. [`Request::wants_close`] + the `close` flag of
+//!   [`write_response`] carry that negotiation;
 //! - `Content-Length` bodies only; `Transfer-Encoding` is a clean 501;
 //! - the request head is capped at [`MAX_HEAD_BYTES`] (431) and the body
 //!   at the configured `max_body_bytes` (413), both *before* allocation.
@@ -38,13 +43,27 @@ impl Request {
     pub fn header(&self, name: &str) -> Option<&str> {
         self.headers.iter().find(|(k, _)| k.eq_ignore_ascii_case(name)).map(|(_, v)| v.as_str())
     }
+
+    /// Whether the client asked for the connection to close after this
+    /// response: `Connection: close`, or HTTP/1.0 without an explicit
+    /// `Connection: keep-alive` (1.0 defaults to close, 1.1 to persist).
+    pub fn wants_close(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => true,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => false,
+            _ => self.version == "HTTP/1.0",
+        }
+    }
 }
 
-/// A structured protocol-level rejection: the status the client gets and
-/// the reason that goes into the JSON error body (and the server log).
+/// A structured protocol-level rejection: the status the client gets, the
+/// stable machine-readable code of the JSON error envelope, and the
+/// human-facing message (also the server log line).
 #[derive(Debug)]
 pub struct HttpError {
     pub status: u16,
+    /// Stable machine-readable error code (see [`error_body`]).
+    pub code: &'static str,
     pub reason: String,
     /// Bytes the client is known to still be sending (a declared body the
     /// server refused to read). The connection handler discards up to
@@ -53,17 +72,21 @@ pub struct HttpError {
     pub drain: usize,
 }
 
-fn err(status: u16, reason: impl Into<String>) -> HttpError {
-    HttpError { status, reason: reason.into(), drain: 0 }
+fn err(status: u16, code: &'static str, reason: impl Into<String>) -> HttpError {
+    HttpError { status, code, reason: reason.into(), drain: 0 }
 }
 
 /// Read and parse one request from `stream`. The caller is expected to
 /// have set a read timeout on the underlying socket; a timeout surfaces
-/// as 408, a peer that hangs up mid-request as 400 ("truncated").
+/// as 408, a peer that hangs up mid-request as 400 ("truncated"). A peer
+/// that closes (or stalls) before sending *any* byte is the keep-alive
+/// idle path — the connection loop detects that case by peeking before
+/// calling here, so both zero-byte outcomes below only fire for clients
+/// that opened a connection and never spoke.
 pub fn read_request(stream: &mut impl Read, max_body_bytes: usize) -> Result<Request, HttpError> {
     let head_bytes = read_head(stream)?;
-    let head =
-        std::str::from_utf8(&head_bytes).map_err(|_| err(400, "request head is not UTF-8"))?;
+    let head = std::str::from_utf8(&head_bytes)
+        .map_err(|_| err(400, "bad_request", "request head is not UTF-8"))?;
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or("");
     let (method, target, version) = parse_request_line(request_line)?;
@@ -74,17 +97,25 @@ pub fn read_request(stream: &mut impl Read, max_body_bytes: usize) -> Result<Req
             continue; // the trailing blank line that ended the head
         }
         let Some((name, value)) = line.split_once(':') else {
-            return Err(err(400, format!("malformed header line (no ':'): {:?}", clip(line))));
+            return Err(err(
+                400,
+                "bad_request",
+                format!("malformed header line (no ':'): {:?}", clip(line)),
+            ));
         };
         if name.is_empty() || name.contains(' ') {
-            return Err(err(400, format!("malformed header name: {:?}", clip(name))));
+            return Err(err(400, "bad_request", format!("malformed header name: {:?}", clip(name))));
         }
         headers.push((name.trim().to_string(), value.trim().to_string()));
     }
 
     let mut req = Request { method, target, version, headers, body: Vec::new() };
     if req.header("transfer-encoding").is_some() {
-        return Err(err(501, "transfer-encoding is not supported; send a content-length body"));
+        return Err(err(
+            501,
+            "not_implemented",
+            "transfer-encoding is not supported; send a content-length body",
+        ));
     }
     let body_len = match req.header("content-length") {
         None => 0,
@@ -92,7 +123,7 @@ pub fn read_request(stream: &mut impl Read, max_body_bytes: usize) -> Result<Req
             Ok(n) => n,
             Err(_) => {
                 let reason = format!("content-length is not a non-negative integer: {:?}", clip(v));
-                return Err(err(400, reason));
+                return Err(err(400, "bad_request", reason));
             }
         },
     };
@@ -102,6 +133,7 @@ pub fn read_request(stream: &mut impl Read, max_body_bytes: usize) -> Result<Req
         // responding; past that cap an RST is the client's problem).
         return Err(HttpError {
             status: 413,
+            code: "payload_too_large",
             reason: format!(
                 "declared body of {body_len} bytes exceeds the {max_body_bytes}-byte limit"
             ),
@@ -112,9 +144,9 @@ pub fn read_request(stream: &mut impl Read, max_body_bytes: usize) -> Result<Req
         let mut body = vec![0u8; body_len];
         stream.read_exact(&mut body).map_err(|e| match e.kind() {
             std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
-                err(408, format!("timed out reading the {body_len}-byte body"))
+                err(408, "request_timeout", format!("timed out reading the {body_len}-byte body"))
             }
-            _ => err(400, format!("body truncated: expected {body_len} bytes ({e})")),
+            _ => err(400, "bad_request", format!("body truncated: expected {body_len} bytes ({e})")),
         })?;
         req.body = body;
     }
@@ -130,15 +162,23 @@ fn read_head(stream: &mut impl Read) -> Result<Vec<u8>, HttpError> {
         match stream.read(&mut byte) {
             Ok(0) => {
                 return Err(if head.is_empty() {
-                    err(400, "connection closed before any request bytes")
+                    err(400, "bad_request", "connection closed before any request bytes")
                 } else {
-                    err(400, format!("truncated head: peer closed after {} byte(s)", head.len()))
+                    err(
+                        400,
+                        "bad_request",
+                        format!("truncated head: peer closed after {} byte(s)", head.len()),
+                    )
                 });
             }
             Ok(_) => {
                 head.push(byte[0]);
                 if head.len() > MAX_HEAD_BYTES {
-                    return Err(err(431, format!("head exceeds the {MAX_HEAD_BYTES}-byte limit")));
+                    return Err(err(
+                        431,
+                        "header_too_large",
+                        format!("head exceeds the {MAX_HEAD_BYTES}-byte limit"),
+                    ));
                 }
                 if head.ends_with(b"\r\n\r\n") {
                     return Ok(head);
@@ -147,10 +187,10 @@ fn read_head(stream: &mut impl Read) -> Result<Vec<u8>, HttpError> {
             Err(e) => {
                 return Err(match e.kind() {
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
-                        err(408, "timed out reading the request head")
+                        err(408, "request_timeout", "timed out reading the request head")
                     }
                     std::io::ErrorKind::Interrupted => continue,
-                    _ => err(400, format!("error reading the request head: {e}")),
+                    _ => err(400, "bad_request", format!("error reading the request head: {e}")),
                 });
             }
         }
@@ -162,18 +202,27 @@ fn parse_request_line(line: &str) -> Result<(String, String, String), HttpError>
     if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
         return Err(err(
             400,
+            "bad_request",
             format!("malformed request line (want 'METHOD /target HTTP/1.1'): {:?}", clip(line)),
         ));
     }
     let (method, target, version) = (parts[0], parts[1], parts[2]);
     if !method.bytes().all(|b| b.is_ascii_uppercase()) {
-        return Err(err(400, format!("malformed method: {:?}", clip(method))));
+        return Err(err(400, "bad_request", format!("malformed method: {:?}", clip(method))));
     }
     if !target.starts_with('/') {
-        return Err(err(400, format!("request target must start with '/': {:?}", clip(target))));
+        return Err(err(
+            400,
+            "bad_request",
+            format!("request target must start with '/': {:?}", clip(target)),
+        ));
     }
     if version != "HTTP/1.1" && version != "HTTP/1.0" {
-        return Err(err(505, format!("unsupported HTTP version: {:?}", clip(version))));
+        return Err(err(
+            505,
+            "http_version_unsupported",
+            format!("unsupported HTTP version: {:?}", clip(version)),
+        ));
     }
     Ok((method.to_string(), target.to_string(), version.to_string()))
 }
@@ -190,19 +239,22 @@ fn clip(s: &str) -> String {
     }
 }
 
-/// Write one complete response and flush. Every response closes the
-/// connection (see module docs). `extra_headers` come before the body —
-/// the shed path uses this for `Retry-After`.
+/// Write one complete response and flush. `close` decides the
+/// `connection:` header — the worker loop closes the socket after a
+/// `close` response and keeps serving the connection otherwise.
+/// `extra_headers` come before the body — the shed path uses this for
+/// `Retry-After`, the deprecated aliases for `Deprecation`/`Link`.
 pub fn write_response(
     stream: &mut impl Write,
     status: u16,
     extra_headers: &[(&str, &str)],
     body: &[u8],
+    close: bool,
 ) -> std::io::Result<()> {
     let mut head = format!("HTTP/1.1 {status} {}\r\n", status_text(status));
     head.push_str("content-type: application/json\r\n");
     head.push_str(&format!("content-length: {}\r\n", body.len()));
-    head.push_str("connection: close\r\n");
+    head.push_str(if close { "connection: close\r\n" } else { "connection: keep-alive\r\n" });
     for (k, v) in extra_headers {
         head.push_str(k);
         head.push_str(": ");
@@ -215,10 +267,27 @@ pub fn write_response(
     stream.flush()
 }
 
-/// The canonical JSON error body: `{"error":{"status":S,"reason":"..."}}`.
-pub fn error_body(status: u16, reason: &str) -> Vec<u8> {
-    format!("{{\"error\":{{\"status\":{status},\"reason\":\"{}\"}}}}", json::escape(reason))
-        .into_bytes()
+/// The canonical JSON error envelope, one shape for every 4xx/5xx the
+/// server emits:
+///
+/// ```json
+/// {"error":{"code":"queue_full","message":"...","retry_after_ms":1000}}
+/// ```
+///
+/// `code` is a stable machine-readable string (clients switch on it;
+/// `message` is for operators and may change wording), `retry_after_ms`
+/// appears only on shed responses that are worth retrying.
+pub fn error_body(code: &str, message: &str, retry_after_ms: Option<u64>) -> Vec<u8> {
+    let retry = match retry_after_ms {
+        Some(ms) => format!(",\"retry_after_ms\":{ms}"),
+        None => String::new(),
+    };
+    format!(
+        "{{\"error\":{{\"code\":\"{}\",\"message\":\"{}\"{retry}}}}}",
+        json::escape(code),
+        json::escape(message)
+    )
+    .into_bytes()
 }
 
 /// Reason phrases for the statuses the server actually emits.
@@ -260,6 +329,7 @@ mod tests {
         assert_eq!(req.version, "HTTP/1.1");
         assert_eq!(req.header("content-length"), Some("12"));
         assert_eq!(req.body, b"{\"obs\": [0]}");
+        assert!(!req.wants_close(), "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
@@ -270,11 +340,28 @@ mod tests {
     }
 
     #[test]
+    fn connection_negotiation_follows_http_semantics() {
+        // (raw request, wants_close)
+        for (raw, want) in [
+            (&b"GET / HTTP/1.1\r\n\r\n"[..], false),
+            (b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n", true),
+            (b"GET / HTTP/1.1\r\nConnection: Close\r\n\r\n", true),
+            (b"GET / HTTP/1.1\r\nConnection: keep-alive\r\n\r\n", false),
+            (b"GET / HTTP/1.0\r\n\r\n", true),
+            (b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", false),
+        ] {
+            let req = parse(raw).unwrap();
+            assert_eq!(req.wants_close(), want, "{raw:?}");
+        }
+    }
+
+    #[test]
     fn declared_oversized_body_is_413_without_reading_it() {
         // The declared length is absurd and the body bytes are absent; a
         // reader that tried to allocate or read first would block or OOM.
         let e = parse(b"POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n").unwrap_err();
         assert_eq!(e.status, 413);
+        assert_eq!(e.code, "payload_too_large");
         assert!(e.reason.contains("99999999999"), "{}", e.reason);
         assert_eq!(e.drain, 4 << 20, "the discard hint is capped, not the declared size");
     }
@@ -283,6 +370,7 @@ mod tests {
     fn transfer_encoding_is_501() {
         let e = parse(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
         assert_eq!(e.status, 501);
+        assert_eq!(e.code, "not_implemented");
     }
 
     #[test]
@@ -301,6 +389,7 @@ mod tests {
         raw.extend(vec![b'a'; MAX_HEAD_BYTES + 10]);
         let e = parse(&raw).unwrap_err();
         assert_eq!(e.status, 431);
+        assert_eq!(e.code, "header_too_large");
     }
 
     #[test]
@@ -318,6 +407,7 @@ mod tests {
             let e = parse(raw).expect_err("must be rejected");
             assert_eq!(e.status, status, "{raw:?}: {}", e.reason);
             assert!(!e.reason.is_empty());
+            assert!(!e.code.is_empty(), "every rejection carries a stable code");
         }
     }
 
@@ -331,17 +421,64 @@ mod tests {
     #[test]
     fn response_writer_emits_complete_http() {
         let mut out = Vec::new();
-        write_response(&mut out, 503, &[("retry-after", "1")], b"{}").unwrap();
+        write_response(&mut out, 503, &[("retry-after", "1")], b"{}", true).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
         assert!(text.contains("content-length: 2\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
         assert!(text.contains("retry-after: 1\r\n"), "{text}");
         assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &[], b"{}", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("connection: keep-alive\r\n"), "{text}");
+    }
+
+    /// The envelope shape the satellite pins: one structured JSON object
+    /// for every 4xx/5xx, `code` stable, `retry_after_ms` only when set.
+    #[test]
+    fn error_envelope_shape_per_status() {
+        // Every (status, code) pair the server emits somewhere.
+        let emitted: &[(u16, &str)] = &[
+            (400, "bad_request"),
+            (404, "not_found"),
+            (404, "unknown_run"),
+            (404, "unknown_learner"),
+            (405, "method_not_allowed"),
+            (408, "request_timeout"),
+            (409, "reload_conflict"),
+            (413, "payload_too_large"),
+            (431, "header_too_large"),
+            (500, "internal"),
+            (501, "not_implemented"),
+            (503, "queue_full"),
+            (503, "deadline_exceeded"),
+            (503, "draining"),
+            (504, "engine_timeout"),
+            (505, "http_version_unsupported"),
+        ];
+        for &(status, code) in emitted {
+            let body = String::from_utf8(error_body(code, "why it failed", None)).unwrap();
+            assert_eq!(
+                body,
+                format!("{{\"error\":{{\"code\":\"{code}\",\"message\":\"why it failed\"}}}}"),
+                "status {status}"
+            );
+            assert_ne!(status_text(status), "Error", "status {status} needs a reason phrase");
+        }
+        // Shed responses advertise the retry hint inside the envelope too
+        // (mirroring the Retry-After header, but machine-readable).
+        let body = String::from_utf8(error_body("queue_full", "full", Some(1000))).unwrap();
+        assert_eq!(
+            body,
+            "{\"error\":{\"code\":\"queue_full\",\"message\":\"full\",\"retry_after_ms\":1000}}"
+        );
     }
 
     #[test]
-    fn error_body_is_valid_json() {
-        let body = String::from_utf8(error_body(400, "bad \"quote\"")).unwrap();
-        assert_eq!(body, "{\"error\":{\"status\":400,\"reason\":\"bad \\\"quote\\\"\"}}");
+    fn error_body_escapes_json() {
+        let body = String::from_utf8(error_body("bad_request", "bad \"quote\"", None)).unwrap();
+        assert_eq!(body, "{\"error\":{\"code\":\"bad_request\",\"message\":\"bad \\\"quote\\\"\"}}");
     }
 }

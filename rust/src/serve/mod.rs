@@ -1,36 +1,53 @@
-//! `repro serve` — a fault-tolerant batched policy-inference server over
-//! a trained checkpoint directory.
+//! `repro serve` — a fault-tolerant batched policy-inference front tier
+//! over one or more trained checkpoint directories.
 //!
 //! ```text
 //!              accept            bounded conn queue
-//!   clients ─▶ acceptor thread ─▶ worker pool (HTTP parse, validate)
-//!                                     │ bounded job queue (sync_channel)
-//!                                     ▼
-//!                               engine thread (deadline-aware
-//!                               micro-batcher → one batched PolicyFwd
-//!                               per learner per window)
+//!   clients ─▶ acceptor thread ─▶ worker pool (keep-alive HTTP parse,
+//!                 │                validate, route by run)
+//!                 │                    │ bounded job queue per run
+//!                 │                    ▼
+//!                 │              engine thread per run (adaptive
+//!                 │              micro-batcher → one batched PolicyFwd
+//!                 │              per learner per batch)
 //! ```
 //!
+//! Every hosted checkpoint directory is a **run**: its own engine
+//! thread, its own atomically hot-reloadable snapshot, its own bounded
+//! job queue, all behind the `/v1/runs/<run>/…` namespace. Connections
+//! are **persistent** (HTTP/1.1 keep-alive): a worker serves a
+//! connection's whole request stream — pipelined requests are answered
+//! in order — and closes on client request (`Connection: close`), idle
+//! timeout, the per-connection request cap, any parse error (framing is
+//! untrustworthy past one), or drain.
+//!
 //! The robustness contract, end to end:
-//! - **overload**: both queues are bounded; a full job queue sheds the
+//! - **overload**: every queue is bounded; a full job queue sheds the
 //!   request with `503 + Retry-After` *at admission* (the cheap end),
 //!   and jobs whose deadline passes while queued are shed engine-side —
 //!   under overload the server does strictly less work per request;
 //! - **hostile input**: the strict HTTP layer ([`http`]) and body parser
-//!   ([`json`]) turn every malformed byte stream into a structured 4xx;
-//!   a handler panic is confined to its connection
-//!   (`catch_unwind` → 500) and the server keeps serving;
+//!   ([`json`]) turn every malformed byte stream into a structured 4xx
+//!   with a stable `code` in the JSON error envelope; a handler panic is
+//!   confined to its connection (`catch_unwind` → 500) and the server
+//!   keeps serving;
 //! - **slow clients**: socket read/write timeouts (408 / disconnect)
-//!   bound what a slow-loris peer can hold;
-//! - **hot reload**: `POST /admin/reload` validates the newest
-//!   checkpoint *completely off to the side* ([`snapshot`]) and swaps it
-//!   in atomically under the snapshot lock; a corrupt candidate is a
-//!   structured 409 and the old parameters keep serving, bit-for-bit;
+//!   bound what a slow-loris peer can hold, per request, keep-alive or
+//!   not; between requests the (shorter-spirited) idle timeout applies;
+//! - **hot reload**: `POST /v1/runs/<run>/admin/reload` validates the
+//!   newest checkpoint *completely off to the side* ([`snapshot`]) and
+//!   swaps it in atomically under that run's snapshot lock; a corrupt
+//!   candidate is a structured 409 and the old parameters keep serving,
+//!   bit-for-bit, with every other run untouched throughout;
 //! - **drain**: SIGINT/SIGTERM stop the acceptor, let accepted
 //!   connections and queued jobs finish, then exit 0.
 //!
-//! Endpoints: `POST /v1/learners/<j>/act`, `GET /healthz`,
-//! `GET /readyz`, `GET /v1/meta`, `POST /admin/reload`.
+//! Endpoints: `POST /v1/runs/<run>/learners/<j>/act`,
+//! `POST /v1/runs/<run>/admin/reload`, `GET /healthz`, `GET /readyz`,
+//! `GET /v1/meta` (api_version 2). The PR 9 single-run paths
+//! (`POST /v1/learners/<j>/act`, `POST /admin/reload`) remain as
+//! deprecated aliases onto run 0, answered with a `Deprecation` header
+//! and a `Link: …; rel="successor-version"` pointer.
 
 pub mod engine;
 pub mod http;
@@ -63,7 +80,13 @@ pub struct ServeOptions {
     pub write_timeout: Duration,
     pub request_timeout: Duration,
     pub max_body_bytes: usize,
-    /// Fault injection: stall the engine this long at startup so tests
+    /// Requests served on one connection before the server closes it
+    /// (resource hygiene: no connection is immortal).
+    pub max_requests_per_conn: usize,
+    /// How long a keep-alive connection may sit idle *between* requests
+    /// before the server closes it silently.
+    pub idle_timeout: Duration,
+    /// Fault injection: stall every engine this long at startup so tests
     /// can fill the bounded queues deterministically (env
     /// `IALS_SERVE_STALL_MS`, or set directly for in-process tests).
     pub engine_stall: Option<Duration>,
@@ -86,25 +109,38 @@ impl ServeOptions {
             write_timeout: Duration::from_millis(cfg.write_timeout_ms),
             request_timeout: Duration::from_millis(cfg.request_timeout_ms),
             max_body_bytes: cfg.max_body_bytes,
+            max_requests_per_conn: cfg.max_requests_per_conn,
+            idle_timeout: Duration::from_millis(cfg.idle_timeout_ms),
             engine_stall: serve_stall_from_env()?.map(Duration::from_millis),
             inject_panic: false,
         })
     }
 }
 
-/// State shared by the acceptor, workers and admin handlers.
-struct Shared {
-    opts: ServeOptions,
+/// One hosted run: a checkpoint directory with its own snapshot, engine
+/// job queue and reload serialization. Everything per-run lives here so
+/// runs cannot interfere (a reload or full queue on one run is invisible
+/// to the others).
+struct RunState {
+    /// Route segment (`/v1/runs/<name>/…`): the checkpoint directory's
+    /// final path component, sanitized (see [`run_name_from_dir`]).
+    name: String,
     checkpoint_dir: PathBuf,
     snapshot: Arc<RwLock<PolicySnapshot>>,
     jobs: SyncSender<ActJob>,
+    /// Serializes this run's hot-reloads (concurrent reload POSTs).
+    reload_lock: Mutex<()>,
+}
+
+/// State shared by the acceptor, workers and admin handlers.
+struct Shared {
+    opts: ServeOptions,
+    runs: Vec<RunState>,
     /// Accepted-but-unhandled connections, bounded at `queue_capacity`.
     conns: Mutex<VecDeque<TcpStream>>,
     conns_cv: Condvar,
     draining: AtomicBool,
     acceptor_done: AtomicBool,
-    /// Serializes hot-reloads (concurrent `POST /admin/reload`s).
-    reload_lock: Mutex<()>,
 }
 
 /// A running server: spawned threads plus the bound address. Tests drive
@@ -114,49 +150,87 @@ pub struct Server {
     shared: Arc<Shared>,
     acceptor: std::thread::JoinHandle<()>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    engine: std::thread::JoinHandle<()>,
+    engines: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Route segment for a checkpoint directory: its final path component
+/// with anything outside `[A-Za-z0-9._-]` replaced by `_` (run names
+/// live inside URL paths and log lines).
+fn run_name_from_dir(dir: &Path) -> String {
+    let base = dir.file_name().and_then(|n| n.to_str()).unwrap_or("run");
+    let name: String = base
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
+        .collect();
+    if name.is_empty() {
+        "run".to_string()
+    } else {
+        name
+    }
 }
 
 impl Server {
-    /// Load the newest valid checkpoint from `checkpoint_dir`, bind the
+    /// Load the newest valid checkpoint from every directory, bind the
     /// loopback port (0 = ephemeral) and start the acceptor, worker pool
-    /// and engine thread.
-    pub fn spawn(checkpoint_dir: &Path, opts: ServeOptions) -> Result<Server> {
-        let snap = snapshot::load_newest_valid(checkpoint_dir)?;
-        log_info!(
-            "[serve] loaded checkpoint iteration {} ({} learner(s), obs={}, hid={}, act={})",
-            snap.iteration,
-            snap.stores.len(),
-            snap.obs_dim,
-            snap.hid,
-            snap.act_dim
-        );
+    /// and one engine thread per run. Run 0 is the first directory — the
+    /// target of the deprecated single-run aliases.
+    pub fn spawn(checkpoint_dirs: &[PathBuf], opts: ServeOptions) -> Result<Server> {
+        anyhow::ensure!(!checkpoint_dirs.is_empty(), "serve needs at least one checkpoint dir");
         let listener = TcpListener::bind(("127.0.0.1", opts.port))
             .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
         let addr = listener.local_addr().context("reading the bound address")?;
-        let snapshot = Arc::new(RwLock::new(snap));
-        let (jobs, jobs_rx) = std::sync::mpsc::sync_channel(opts.queue_capacity);
-        let engine_cfg = EngineConfig {
-            batch_window: opts.batch_window,
-            max_batch: opts.max_batch,
-            stall: opts.engine_stall,
-        };
-        let engine_snapshot = Arc::clone(&snapshot);
-        let engine = std::thread::Builder::new()
-            .name("serve-engine".to_string())
-            .spawn(move || engine::run_engine(jobs_rx, engine_snapshot, engine_cfg))
-            .context("spawning the engine thread")?;
+        let mut runs = Vec::with_capacity(checkpoint_dirs.len());
+        let mut engines = Vec::with_capacity(checkpoint_dirs.len());
+        for (i, dir) in checkpoint_dirs.iter().enumerate() {
+            let name = run_name_from_dir(dir);
+            if let Some(prev) = runs.iter().position(|r: &RunState| r.name == name) {
+                anyhow::bail!(
+                    "run name {name:?} is ambiguous: both {} and {} resolve to it — point \
+                     --checkpoint-dir at directories with distinct basenames",
+                    checkpoint_dirs[prev].display(),
+                    dir.display()
+                );
+            }
+            let snap = snapshot::load_newest_valid(dir)
+                .with_context(|| format!("loading run {name:?} from {}", dir.display()))?;
+            log_info!(
+                "[serve] run {name:?}: loaded checkpoint iteration {} ({} learner(s), obs={}, \
+                 hid={}, act={})",
+                snap.iteration,
+                snap.stores.len(),
+                snap.obs_dim,
+                snap.hid,
+                snap.act_dim
+            );
+            let snapshot = Arc::new(RwLock::new(snap));
+            let (jobs, jobs_rx) = std::sync::mpsc::sync_channel(opts.queue_capacity);
+            let engine_cfg = EngineConfig {
+                batch_window: opts.batch_window,
+                max_batch: opts.max_batch,
+                stall: opts.engine_stall,
+            };
+            let engine_snapshot = Arc::clone(&snapshot);
+            let engine = std::thread::Builder::new()
+                .name(format!("serve-engine-{i}"))
+                .spawn(move || engine::run_engine(jobs_rx, engine_snapshot, engine_cfg))
+                .with_context(|| format!("spawning run {name:?}'s engine thread"))?;
+            engines.push(engine);
+            runs.push(RunState {
+                name,
+                checkpoint_dir: dir.clone(),
+                snapshot,
+                jobs,
+                reload_lock: Mutex::new(()),
+            });
+        }
         let n_workers = opts.workers;
         let shared = Arc::new(Shared {
             opts,
-            checkpoint_dir: checkpoint_dir.to_path_buf(),
-            snapshot,
-            jobs,
+            runs,
             conns: Mutex::new(VecDeque::new()),
             conns_cv: Condvar::new(),
             draining: AtomicBool::new(false),
             acceptor_done: AtomicBool::new(false),
-            reload_lock: Mutex::new(()),
         });
         let acceptor_shared = Arc::clone(&shared);
         let acceptor = std::thread::Builder::new()
@@ -172,12 +246,17 @@ impl Server {
                 .with_context(|| format!("spawning worker {i}"))?;
             workers.push(handle);
         }
-        Ok(Server { addr, shared, acceptor, workers, engine })
+        Ok(Server { addr, shared, acceptor, workers, engines })
     }
 
     /// The bound address (useful with port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The hosted run names, in route order (run 0 first).
+    pub fn run_names(&self) -> Vec<String> {
+        self.shared.runs.iter().map(|r| r.name.clone()).collect()
     }
 
     /// Start draining: stop accepting, let in-flight work finish.
@@ -189,19 +268,21 @@ impl Server {
 
     /// Complete a graceful drain: join the acceptor, then the workers
     /// (which first empty the accepted-connection queue), then drop the
-    /// job-queue handle so the engine finishes queued jobs and exits.
+    /// job-queue handles so every engine finishes queued jobs and exits.
     pub fn join(self) -> Result<()> {
-        let Server { shared, acceptor, workers, engine, .. } = self;
+        let Server { shared, acceptor, workers, engines, .. } = self;
         shared.draining.store(true, Ordering::SeqCst);
         acceptor.join().map_err(|_| anyhow::anyhow!("the acceptor thread panicked"))?;
         shared.conns_cv.notify_all();
         for (i, w) in workers.into_iter().enumerate() {
             w.join().map_err(|_| anyhow::anyhow!("worker {i} panicked"))?;
         }
-        // Last submitter handle: dropping it disconnects the job queue
-        // *after* its queued jobs are delivered, draining the engine.
+        // Last submitter handles: dropping them disconnects each job
+        // queue *after* its queued jobs are delivered, draining engines.
         drop(shared);
-        engine.join().map_err(|_| anyhow::anyhow!("the engine thread panicked"))?;
+        for (i, e) in engines.into_iter().enumerate() {
+            e.join().map_err(|_| anyhow::anyhow!("run {i}'s engine thread panicked"))?;
+        }
         Ok(())
     }
 }
@@ -245,17 +326,17 @@ fn run_acceptor(listener: TcpListener, shared: Arc<Shared>) {
 /// Connection-level load shedding: answer 503 without parsing anything.
 fn shed_connection(shared: &Shared, stream: TcpStream) {
     let _ = stream.set_write_timeout(Some(shared.opts.write_timeout));
-    let reason = format!(
+    let message = format!(
         "connection queue is full ({} pending) — shedding load",
         shared.opts.queue_capacity
     );
-    let body = http::error_body(503, &reason);
+    let body = http::error_body("queue_full", &message, Some(1000));
     let mut s = &stream;
-    let _ = http::write_response(&mut s, 503, &[("retry-after", "1")], &body);
+    let _ = http::write_response(&mut s, 503, &[("retry-after", "1")], &body, true);
 }
 
-/// Worker loop: pop an accepted connection, handle exactly one request
-/// on it, repeat. Exits only when draining *and* the acceptor is done
+/// Worker loop: pop an accepted connection, serve its whole request
+/// stream, repeat. Exits only when draining *and* the acceptor is done
 /// *and* the queue is empty — accepted connections always complete.
 fn run_worker(shared: Arc<Shared>) {
     loop {
@@ -285,41 +366,89 @@ fn run_worker(shared: Arc<Shared>) {
 }
 
 /// Handle one connection with panic isolation: a panic anywhere in
-/// parsing or routing is caught, answered with a 500, and confined to
-/// this connection — the server keeps serving.
+/// parsing or routing is caught, answered with a 500 (and a close), and
+/// confined to this connection — the server keeps serving.
 fn handle_connection(shared: &Shared, stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
     let _ = stream.set_write_timeout(Some(shared.opts.write_timeout));
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        handle_one(shared, &stream);
+        serve_connection(shared, &stream);
     }));
     if outcome.is_err() {
         log_warn!("[serve] a request handler panicked; the connection got a 500");
-        let body = http::error_body(500, "internal error: the request handler panicked");
+        let body =
+            http::error_body("internal", "internal error: the request handler panicked", None);
         let mut s = &stream;
-        let _ = http::write_response(&mut s, 500, &[], &body);
+        let _ = http::write_response(&mut s, 500, &[], &body, true);
     }
 }
 
-/// Read one request, route it, write one response.
-fn handle_one(shared: &Shared, mut stream: &TcpStream) {
-    let parsed = {
-        let mut reader = std::io::BufReader::new(stream);
-        http::read_request(&mut reader, shared.opts.max_body_bytes)
-    };
-    match parsed {
-        Err(e) => {
-            let body = http::error_body(e.status, &e.reason);
-            let _ = http::write_response(&mut stream, e.status, &[], &body);
-            if e.drain > 0 {
-                discard(stream, e.drain);
+/// Serve a connection's whole request stream (HTTP/1.1 keep-alive).
+///
+/// The `BufReader` persists across requests — pipelined bytes the client
+/// sent ahead sit in its buffer and each `read_request` consumes exactly
+/// one request, so pipelined responses come back in request order.
+///
+/// Close conditions, each applied per-request:
+/// - the client asked (`Connection: close` / HTTP/1.0 default);
+/// - the per-connection request cap is reached (the capped response
+///   says `connection: close`);
+/// - any parse error (respond, then close: framing is untrustworthy);
+/// - the server is draining;
+/// - idle timeout or clean EOF *between* requests (silent close — an
+///   idle keep-alive client is normal, not an error).
+fn serve_connection(shared: &Shared, stream: &TcpStream) {
+    use std::io::BufRead as _;
+    let mut reader = std::io::BufReader::new(stream);
+    let mut served = 0usize;
+    loop {
+        // Between requests: wait up to the idle timeout for the next
+        // request's first byte. EOF and timeout here are the normal ends
+        // of a keep-alive connection — close silently, answer nothing.
+        let _ = stream.set_read_timeout(Some(shared.opts.idle_timeout));
+        match reader.fill_buf() {
+            Ok([]) => return,  // clean EOF between requests
+            Ok(_) => {}        // first byte(s) of a request are waiting
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return; // idle timeout
             }
+            Err(_) => return,
         }
-        Ok(req) => {
-            let resp = route(shared, &req);
-            let retry: &[(&str, &str)] =
-                if resp.retry_after { &[("retry-after", "1")] } else { &[] };
-            let _ = http::write_response(&mut stream, resp.status, retry, &resp.body);
+        // A request is arriving: switch to the per-request read timeout
+        // (the slow-loris bound, same as one-request-per-connection).
+        let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
+        match http::read_request(&mut reader, shared.opts.max_body_bytes) {
+            Err(e) => {
+                let body = http::error_body(e.code, &e.reason, None);
+                let mut s = stream;
+                let _ = http::write_response(&mut s, e.status, &[], &body, true);
+                if e.drain > 0 {
+                    // Drain from the reader, not the raw stream: the
+                    // refused body may be partially buffered already.
+                    discard(&mut reader, e.drain);
+                }
+                return;
+            }
+            Ok(req) => {
+                served += 1;
+                let resp = route(shared, &req);
+                let close = req.wants_close()
+                    || served >= shared.opts.max_requests_per_conn
+                    || shared.draining.load(Ordering::SeqCst);
+                let headers: Vec<(&str, &str)> =
+                    resp.headers.iter().map(|(k, v)| (*k, v.as_str())).collect();
+                let mut s = stream;
+                if http::write_response(&mut s, resp.status, &headers, &resp.body, close).is_err() {
+                    return; // peer gone or write timeout; nothing to salvage
+                }
+                if close {
+                    return;
+                }
+            }
         }
     }
 }
@@ -327,34 +456,50 @@ fn handle_one(shared: &Shared, mut stream: &TcpStream) {
 /// Read and throw away up to `limit` bytes the client is still sending
 /// (bounded by the socket read timeout per chunk), so closing the socket
 /// after a refusal does not RST the already-written response away.
-fn discard(mut stream: &TcpStream, limit: usize) {
-    use std::io::Read as _;
+fn discard(reader: &mut impl std::io::Read, limit: usize) {
     let mut sink = [0u8; 4096];
     let mut taken = 0usize;
     while taken < limit {
-        match stream.read(&mut sink) {
+        match reader.read(&mut sink) {
             Ok(0) | Err(_) => break,
             Ok(n) => taken += n,
         }
     }
 }
 
+/// A routed response: status, extra headers (retry/deprecation hints)
+/// and the JSON body. The connection loop decides `connection:` itself.
 struct Response {
     status: u16,
-    retry_after: bool,
+    headers: Vec<(&'static str, String)>,
     body: Vec<u8>,
 }
 
 fn ok_json(body: String) -> Response {
-    Response { status: 200, retry_after: false, body: body.into_bytes() }
+    Response { status: 200, headers: Vec::new(), body: body.into_bytes() }
 }
 
-fn reject(status: u16, reason: &str) -> Response {
-    Response { status, retry_after: false, body: http::error_body(status, reason) }
+fn reject(status: u16, code: &'static str, message: &str) -> Response {
+    Response { status, headers: Vec::new(), body: http::error_body(code, message, None) }
 }
 
-fn shed(reason: &str) -> Response {
-    Response { status: 503, retry_after: true, body: http::error_body(503, reason) }
+/// A retryable 503: `Retry-After` header for generic clients plus the
+/// machine-readable `retry_after_ms` inside the envelope.
+fn shed(code: &'static str, message: &str) -> Response {
+    Response {
+        status: 503,
+        headers: vec![("retry-after", "1".to_string())],
+        body: http::error_body(code, message, Some(1000)),
+    }
+}
+
+/// Resolve a `/v1/runs/<run>/…` segment: by name first, then (so sharp
+/// tools keep working) by numeric route index.
+fn lookup_run<'a>(shared: &'a Shared, segment: &str) -> Option<&'a RunState> {
+    if let Some(run) = shared.runs.iter().find(|r| r.name == segment) {
+        return Some(run);
+    }
+    segment.parse::<usize>().ok().and_then(|i| shared.runs.get(i))
 }
 
 /// Dispatch a parsed request to its handler.
@@ -362,68 +507,158 @@ fn route(shared: &Shared, req: &http::Request) -> Response {
     if shared.opts.inject_panic && req.header("x-inject-panic").is_some() {
         panic!("injected panic (x-inject-panic)");
     }
+    // The resource-oriented namespace: /v1/runs/<run>/…
+    if let Some(rest) = req.target.strip_prefix("/v1/runs/") {
+        let Some((segment, tail)) = rest.split_once('/') else {
+            return reject(
+                404,
+                "not_found",
+                &format!("no route for {} {} (want /v1/runs/<run>/…)", req.method, req.target),
+            );
+        };
+        let Some(run) = lookup_run(shared, segment) else {
+            let hosted: Vec<&str> = shared.runs.iter().map(|r| r.name.as_str()).collect();
+            return reject(
+                404,
+                "unknown_run",
+                &format!("unknown run {segment:?}; hosted runs: {hosted:?}"),
+            );
+        };
+        return route_run(shared, run, tail, req);
+    }
+    // Deprecated PR 9 single-run aliases: served (not redirected) via
+    // run 0 so existing clients keep working, with a `Deprecation`
+    // header and a `Link` to the successor route.
     if let Some(rest) = req.target.strip_prefix("/v1/learners/") {
-        if let Some(idx) = rest.strip_suffix("/act") {
-            if req.method != "POST" {
-                return reject(405, &format!("{} {} — act is POST-only", req.method, req.target));
-            }
-            return handle_act(shared, idx, &req.body);
+        if rest.strip_suffix("/act").is_some() {
+            let run = &shared.runs[0];
+            let mut resp = route_run(shared, run, &format!("learners/{rest}"), req);
+            deprecate(&mut resp, format!("/v1/runs/{}/learners/{rest}", run.name));
+            return resp;
         }
+    }
+    if req.target == "/admin/reload" {
+        let run = &shared.runs[0];
+        let mut resp = route_run(shared, run, "admin/reload", req);
+        deprecate(&mut resp, format!("/v1/runs/{}/admin/reload", run.name));
+        return resp;
     }
     match (req.method.as_str(), req.target.as_str()) {
         ("GET", "/healthz") => ok_json("{\"status\":\"ok\"}".to_string()),
         ("GET", "/readyz") => {
             if shared.draining.load(Ordering::SeqCst) {
-                reject(503, "draining")
+                reject(503, "draining", "draining")
             } else {
-                let snap = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
+                let snap = shared.runs[0].snapshot.read().unwrap_or_else(|e| e.into_inner());
                 ok_json(format!(
-                    "{{\"status\":\"ready\",\"checkpoint_iteration\":{}}}",
-                    snap.iteration
+                    "{{\"status\":\"ready\",\"checkpoint_iteration\":{},\"runs\":{}}}",
+                    snap.iteration,
+                    shared.runs.len()
                 ))
             }
         }
-        ("GET", "/v1/meta") => {
-            let snap = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
-            ok_json(format!(
-                "{{\"checkpoint_iteration\":{},\"learners\":{},\"obs_dim\":{},\"act_dim\":{},\
-                 \"hidden\":{},\"policy_model\":\"{}\",\"domain\":\"{}\",\"simulator\":\"{}\"}}",
-                snap.iteration,
-                snap.stores.len(),
-                snap.obs_dim,
-                snap.act_dim,
-                snap.hid,
-                json::escape(&snap.meta.policy_model),
-                json::escape(&snap.meta.domain),
-                json::escape(&snap.meta.simulator)
-            ))
+        ("GET", "/v1/meta") => handle_meta(shared),
+        (method, target) => {
+            reject(404, "not_found", &format!("no route for {method} {target}"))
         }
-        ("POST", "/admin/reload") => handle_reload(shared),
-        (method, target) => reject(404, &format!("no route for {method} {target}")),
     }
 }
 
-/// `POST /v1/learners/<j>/act`: validate, submit to the engine with a
-/// deadline, block for the reply. Queue-full and expired-deadline paths
-/// are the 503 shed contract; an unresponsive engine is a 504.
-fn handle_act(shared: &Shared, idx: &str, body: &[u8]) -> Response {
+/// Mark a response as coming from a deprecated alias route.
+fn deprecate(resp: &mut Response, successor: String) {
+    resp.headers.push(("deprecation", "true".to_string()));
+    resp.headers.push(("link", format!("<{successor}>; rel=\"successor-version\"")));
+}
+
+/// Route within one run's namespace: `learners/<j>/act` and
+/// `admin/reload` (both POST-only).
+fn route_run(shared: &Shared, run: &RunState, tail: &str, req: &http::Request) -> Response {
+    if let Some(idx) = tail.strip_prefix("learners/").and_then(|r| r.strip_suffix("/act")) {
+        if req.method != "POST" {
+            let message = format!("{} {} — act is POST-only", req.method, req.target);
+            return reject(405, "method_not_allowed", &message);
+        }
+        return handle_act(shared, run, idx, &req.body);
+    }
+    if tail == "admin/reload" {
+        if req.method != "POST" {
+            let message = format!("{} {} — reload is POST-only", req.method, req.target);
+            return reject(405, "method_not_allowed", &message);
+        }
+        return handle_reload(run);
+    }
+    reject(404, "not_found", &format!("no route for {} {}", req.method, req.target))
+}
+
+/// `GET /v1/meta` (api_version 2): enumerate every hosted run with its
+/// serving geometry. The top level also mirrors run 0's fields in the
+/// v1 shape, matching the deprecated single-run routes' lifecycle.
+fn handle_meta(shared: &Shared) -> Response {
+    let mut runs_json = Vec::with_capacity(shared.runs.len());
+    for run in &shared.runs {
+        let snap = run.snapshot.read().unwrap_or_else(|e| e.into_inner());
+        runs_json.push(format!(
+            "{{\"name\":\"{}\",\"checkpoint_iteration\":{},\"learners\":{},\"obs_dim\":{},\
+             \"act_dim\":{},\"hidden\":{},\"policy_model\":\"{}\",\"domain\":\"{}\",\
+             \"simulator\":\"{}\"}}",
+            json::escape(&run.name),
+            snap.iteration,
+            snap.stores.len(),
+            snap.obs_dim,
+            snap.act_dim,
+            snap.hid,
+            json::escape(&snap.meta.policy_model),
+            json::escape(&snap.meta.domain),
+            json::escape(&snap.meta.simulator)
+        ));
+    }
+    let snap0 = shared.runs[0].snapshot.read().unwrap_or_else(|e| e.into_inner());
+    ok_json(format!(
+        "{{\"api_version\":2,\"runs\":[{}],\"checkpoint_iteration\":{},\"learners\":{},\
+         \"obs_dim\":{},\"act_dim\":{},\"hidden\":{},\"policy_model\":\"{}\",\"domain\":\"{}\",\
+         \"simulator\":\"{}\"}}",
+        runs_json.join(","),
+        snap0.iteration,
+        snap0.stores.len(),
+        snap0.obs_dim,
+        snap0.act_dim,
+        snap0.hid,
+        json::escape(&snap0.meta.policy_model),
+        json::escape(&snap0.meta.domain),
+        json::escape(&snap0.meta.simulator)
+    ))
+}
+
+/// `POST /v1/runs/<run>/learners/<j>/act`: validate, submit to the run's
+/// engine with a deadline, block for the reply. Queue-full and
+/// expired-deadline paths are the 503 shed contract; an unresponsive
+/// engine is a 504.
+fn handle_act(shared: &Shared, run: &RunState, idx: &str, body: &[u8]) -> Response {
     let Ok(learner) = idx.parse::<usize>() else {
-        return reject(404, &format!("learner index {:?} is not an integer", idx));
+        return reject(
+            404,
+            "unknown_learner",
+            &format!("learner index {:?} is not an integer", idx),
+        );
     };
     let (learners, obs_dim) = {
-        let snap = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
+        let snap = run.snapshot.read().unwrap_or_else(|e| e.into_inner());
         (snap.stores.len(), snap.obs_dim)
     };
     if learner >= learners {
-        return reject(404, &format!("learner {learner} out of range ({learners} learner(s))"));
+        let message = format!(
+            "learner {learner} out of range (run {:?} hosts {learners} learner(s))",
+            run.name
+        );
+        return reject(404, "unknown_learner", &message);
     }
     let obs = match json::parse_obs(body) {
         Ok(obs) => obs,
-        Err(reason) => return reject(400, &reason),
+        Err(reason) => return reject(400, "bad_request", &reason),
     };
     if obs.len() != obs_dim {
-        let reason = format!("obs has {} element(s), the policy wants {obs_dim}", obs.len());
-        return reject(400, &reason);
+        let message = format!("obs has {} element(s), the policy wants {obs_dim}", obs.len());
+        return reject(400, "bad_request", &message);
     }
     let (resp_tx, resp_rx) = std::sync::mpsc::sync_channel::<EngineReply>(1);
     let job = ActJob {
@@ -432,17 +667,17 @@ fn handle_act(shared: &Shared, idx: &str, body: &[u8]) -> Response {
         deadline: Instant::now() + shared.opts.request_timeout,
         resp: resp_tx,
     };
-    match shared.jobs.try_send(job) {
+    match run.jobs.try_send(job) {
         Ok(()) => {}
         Err(TrySendError::Full(_)) => {
-            let reason = format!(
-                "request queue is full (capacity {}) — shedding load",
-                shared.opts.queue_capacity
+            let message = format!(
+                "run {:?}'s request queue is full (capacity {}) — shedding load",
+                run.name, shared.opts.queue_capacity
             );
-            return shed(&reason);
+            return shed("queue_full", &message);
         }
         Err(TrySendError::Disconnected(_)) => {
-            return shed("the inference engine is shutting down");
+            return shed("draining", "the inference engine is shutting down");
         }
     }
     // Small grace past the deadline so the engine's own shed reply (a
@@ -454,34 +689,37 @@ fn handle_act(shared: &Shared, idx: &str, body: &[u8]) -> Response {
             json::num(value),
             json::nums(&logits)
         )),
-        Ok(EngineReply::Shed { reason }) => shed(&reason),
-        Err(_) => reject(504, "timed out waiting for the inference engine"),
+        Ok(EngineReply::Shed { reason }) => shed("deadline_exceeded", &reason),
+        Err(_) => reject(504, "engine_timeout", "timed out waiting for the inference engine"),
     }
 }
 
-/// `POST /admin/reload`: atomic checkpoint hot-reload. The newest file
-/// is validated completely off to the side; only a fully valid,
-/// geometry-compatible snapshot is swapped in (under the write lock, so
-/// every act request sees either all-old or all-new parameters). Any
-/// rejection is a structured 409 and the old snapshot keeps serving.
-fn handle_reload(shared: &Shared) -> Response {
-    let _serialized = shared.reload_lock.lock().unwrap_or_else(|e| e.into_inner());
-    let candidate = match snapshot::load_newest_strict(&shared.checkpoint_dir) {
+/// `POST /v1/runs/<run>/admin/reload`: atomic checkpoint hot-reload for
+/// one run. The newest file is validated completely off to the side;
+/// only a fully valid, geometry-compatible snapshot is swapped in (under
+/// the run's write lock, so every act request sees either all-old or
+/// all-new parameters). Any rejection is a structured 409 and the old
+/// snapshot keeps serving. Other runs are untouched either way.
+fn handle_reload(run: &RunState) -> Response {
+    let _serialized = run.reload_lock.lock().unwrap_or_else(|e| e.into_inner());
+    let candidate = match snapshot::load_newest_strict(&run.checkpoint_dir) {
         Ok(snap) => snap,
         Err(e) => {
-            log_warn!("[serve] reload rejected: {e:#}");
-            return reject(409, &format!("reload rejected; still serving the old snapshot: {e:#}"));
+            log_warn!("[serve] run {:?}: reload rejected: {e:#}", run.name);
+            let message =
+                format!("reload rejected; still serving the old snapshot: {e:#}");
+            return reject(409, "reload_conflict", &message);
         }
     };
     {
-        let cur = shared.snapshot.read().unwrap_or_else(|e| e.into_inner());
+        let cur = run.snapshot.read().unwrap_or_else(|e| e.into_inner());
         let same_geometry = candidate.stores.len() == cur.stores.len()
             && candidate.obs_dim == cur.obs_dim
             && candidate.hid == cur.hid
             && candidate.act_dim == cur.act_dim
             && candidate.meta.policy_model == cur.meta.policy_model;
         if !same_geometry {
-            let reason = format!(
+            let message = format!(
                 "reload rejected; the candidate's geometry ({} learner(s), obs={}, hid={}, \
                  act={}, model={}) does not match the serving snapshot ({} learner(s), obs={}, \
                  hid={}, act={}, model={})",
@@ -496,17 +734,21 @@ fn handle_reload(shared: &Shared) -> Response {
                 cur.act_dim,
                 cur.meta.policy_model
             );
-            log_warn!("[serve] {reason}");
-            return reject(409, &reason);
+            log_warn!("[serve] run {:?}: {message}", run.name);
+            return reject(409, "reload_conflict", &message);
         }
     }
-    let mut cur = shared.snapshot.write().unwrap_or_else(|e| e.into_inner());
+    let mut cur = run.snapshot.write().unwrap_or_else(|e| e.into_inner());
     let from = cur.iteration;
     let to = candidate.iteration;
     *cur = candidate;
     drop(cur);
-    log_info!("[serve] hot-reloaded checkpoint: iteration {from} -> {to}");
-    ok_json(format!("{{\"status\":\"reloaded\",\"from_iteration\":{from},\"to_iteration\":{to}}}"))
+    log_info!("[serve] run {:?}: hot-reloaded checkpoint: iteration {from} -> {to}", run.name);
+    ok_json(format!(
+        "{{\"status\":\"reloaded\",\"run\":\"{}\",\"from_iteration\":{from},\
+         \"to_iteration\":{to}}}",
+        json::escape(&run.name)
+    ))
 }
 
 /// Signal-driven shutdown flag (SIGINT/SIGTERM → drain). A bare
@@ -533,12 +775,14 @@ fn install_signal_handlers() {
 #[cfg(not(unix))]
 fn install_signal_handlers() {}
 
-/// CLI entry (`repro serve`): spawn the server, print the bound address,
-/// serve until SIGINT/SIGTERM, then drain gracefully and return Ok — the
-/// process exits 0 on a clean drain.
-pub fn run(checkpoint_dir: &Path, opts: ServeOptions) -> Result<()> {
+/// CLI entry (`repro serve`): spawn the server over every checkpoint
+/// directory, print the bound address, serve until SIGINT/SIGTERM, then
+/// drain gracefully and return Ok — the process exits 0 on a clean
+/// drain.
+pub fn run(checkpoint_dirs: &[PathBuf], opts: ServeOptions) -> Result<()> {
     install_signal_handlers();
-    let server = Server::spawn(checkpoint_dir, opts)?;
+    let server = Server::spawn(checkpoint_dirs, opts)?;
+    log_info!("[serve] hosting {} run(s): {:?}", checkpoint_dirs.len(), server.run_names());
     // The line tests and scripts parse to find the (possibly ephemeral)
     // port; stdout is flushed so `kill -INT` races nothing.
     println!("serving on http://{}", server.addr());
@@ -552,4 +796,17 @@ pub fn run(checkpoint_dir: &Path, opts: ServeOptions) -> Result<()> {
     server.join()?;
     log_info!("[serve] drained cleanly");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_names_are_sanitized_path_basenames() {
+        assert_eq!(run_name_from_dir(Path::new("/tmp/ckpt/ials-fig3_seed3")), "ials-fig3_seed3");
+        assert_eq!(run_name_from_dir(Path::new("rel/dir.v2")), "dir.v2");
+        assert_eq!(run_name_from_dir(Path::new("/x/has spaces+stuff")), "has_spaces_stuff");
+        assert_eq!(run_name_from_dir(Path::new("/")), "run");
+    }
 }

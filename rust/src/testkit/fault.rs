@@ -308,6 +308,42 @@ pub fn slow_loris_request(
 /// stays fast.
 const REPLY_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
 
+/// Read exactly one HTTP response off a keep-alive connection: the head
+/// (status line + headers, returned verbatim) and exactly
+/// `Content-Length` body bytes. Unlike `read_to_end`, this does not need
+/// the server to close the connection — it is how tests and the serve
+/// bench drive many requests down one socket. Fails loudly on a closed
+/// or truncated response rather than returning a partial one.
+pub fn read_one_response(reader: &mut impl std::io::BufRead) -> Result<(String, Vec<u8>)> {
+    use std::io::Read;
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("reading a response head line")?;
+        anyhow::ensure!(n > 0, "connection closed mid-response-head (head so far: {head:?})");
+        head.push_str(&line);
+        if line == "\r\n" {
+            break;
+        }
+    }
+    let mut content_length = None;
+    for line in head.lines() {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                let len: usize = v.trim().parse().with_context(|| {
+                    format!("bad content-length {:?} in response head", v.trim())
+                })?;
+                content_length = Some(len);
+            }
+        }
+    }
+    let len = content_length
+        .with_context(|| format!("response head has no content-length: {head:?}"))?;
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("reading the response body")?;
+    Ok((head, body))
+}
+
 /// Truncate `path` to `len` bytes (a torn write / partial copy).
 pub fn truncate_file(path: impl AsRef<Path>, len: usize) -> Result<()> {
     let path = path.as_ref();
@@ -388,6 +424,29 @@ mod tests {
         assert!(!dest.exists(), "crash before rename must not create the destination");
         assert_eq!(std::fs::read(&tmp_path).unwrap(), b"abc", "temp holds the torn prefix");
         std::fs::remove_file(tmp_path).ok();
+    }
+
+    #[test]
+    fn read_one_response_frames_by_content_length() {
+        // Two pipelined responses on one "connection": each read takes
+        // exactly one, leaving the next untouched.
+        let wire = b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\n\r\nok\
+                     HTTP/1.1 503 Service Unavailable\r\nContent-Length: 4\r\n\r\nbusy";
+        let mut reader = std::io::BufReader::new(&wire[..]);
+        let (head, body) = read_one_response(&mut reader).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200 OK\r\n"), "{head}");
+        assert_eq!(body, b"ok");
+        let (head, body) = read_one_response(&mut reader).unwrap();
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        assert_eq!(body, b"busy");
+        // A third read fails loudly: the stream is exhausted.
+        assert!(read_one_response(&mut reader).is_err());
+        // Truncated bodies fail instead of returning partial bytes.
+        let wire = b"HTTP/1.1 200 OK\r\ncontent-length: 10\r\n\r\nshort";
+        assert!(read_one_response(&mut std::io::BufReader::new(&wire[..])).is_err());
+        // A head with no content-length is unframeable — loud error.
+        let wire = b"HTTP/1.1 200 OK\r\n\r\n";
+        assert!(read_one_response(&mut std::io::BufReader::new(&wire[..])).is_err());
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! End-to-end tests of the serving runtime (`ials::serve`) against real
-//! TCP connections — the acceptance criteria of the serving PR:
+//! TCP connections — the acceptance criteria of the serving PRs:
 //!
 //! 1. act responses are *bitwise* identical whether requests arrive
-//!    serially or are coalesced into one batched forward;
+//!    serially, coalesced into one batched forward, pipelined down one
+//!    keep-alive connection, or routed through a multi-run server;
 //! 2. a full queue sheds with `503 + Retry-After` while every accepted
 //!    request still completes;
 //! 3. a corrupt hot-reload candidate is rejected with a structured 409
-//!    and subsequent responses are bitwise identical to the old params;
-//! 4. no malformed or hostile input panics or wedges the server;
+//!    and subsequent responses are bitwise identical to the old params —
+//!    per run, with sibling runs untouched;
+//! 4. no malformed or hostile input panics or wedges the server, on the
+//!    first request of a connection or any later one;
 //! 5. SIGINT drains in-flight requests and exits 0 (subprocess test).
 //!
 //! Every test fabricates checkpoints directly through the public
@@ -18,8 +21,8 @@ use ials::runtime::native::{EngineScratch, PolicyView};
 use ials::serve::snapshot::{inspect_dir, snapshot_from_payload};
 use ials::serve::{json, Server, ServeOptions};
 use ials::testkit::fault::{
-    flip_bit, send_garbage, send_oversized_body, send_truncated_request, slow_loris_request,
-    SERVE_STALL_ENV,
+    flip_bit, read_one_response, send_garbage, send_oversized_body, send_truncated_request,
+    slow_loris_request, SERVE_STALL_ENV,
 };
 use ials::util::state::StateWriter;
 use ials::util::Pcg32;
@@ -107,9 +110,16 @@ fn test_opts() -> ServeOptions {
         write_timeout: Duration::from_millis(2_000),
         request_timeout: Duration::from_millis(5_000),
         max_body_bytes: 1 << 20,
+        max_requests_per_conn: 1_000,
+        idle_timeout: Duration::from_millis(2_000),
         engine_stall: None,
         inject_panic: false,
     }
+}
+
+/// `Server::spawn` over a single run directory (most tests host one).
+fn spawn_one(dir: &Path, opts: ServeOptions) -> Server {
+    Server::spawn(&[dir.to_path_buf()], opts).unwrap()
 }
 
 // ---------------------------------------------------------------------------
@@ -125,13 +135,33 @@ fn exchange(addr: SocketAddr, raw: &[u8]) -> String {
     String::from_utf8_lossy(&out).to_string()
 }
 
+/// One-connection-per-request GET: sends `Connection: close` so
+/// `read_to_end` terminates against the keep-alive server.
 fn get(addr: SocketAddr, path: &str) -> String {
-    exchange(addr, format!("GET {path} HTTP/1.1\r\n\r\n").as_bytes())
+    exchange(addr, format!("GET {path} HTTP/1.1\r\nConnection: close\r\n\r\n").as_bytes())
 }
 
+/// One-connection-per-request POST (`Connection: close`, like [`get`]).
 fn post(addr: SocketAddr, path: &str, body: &str) -> String {
-    let raw = format!("POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len());
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
     exchange(addr, raw.as_bytes())
+}
+
+/// A raw keep-alive POST request (no `Connection` header — HTTP/1.1
+/// persists by default); pair with [`read_one_response`].
+fn keepalive_post(path: &str, body: &str) -> String {
+    format!("POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+}
+
+/// Connect with a bounded read timeout (keep-alive tests frame their own
+/// responses instead of reading to EOF).
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(15))).unwrap();
+    s
 }
 
 fn status_of(resp: &str) -> u16 {
@@ -184,7 +214,7 @@ fn act_roundtrip_health_meta_and_request_validation() {
     let dir = fresh_dir("roundtrip");
     let payload = checkpoint_payload(2, HID, 7);
     save_checkpoint(&dir, 10, &payload);
-    let server = Server::spawn(&dir, test_opts()).unwrap();
+    let server = spawn_one(&dir, test_opts());
     let addr = server.addr();
 
     let health = get(addr, "/healthz");
@@ -226,11 +256,14 @@ fn act_roundtrip_health_meta_and_request_validation() {
         ("POST", "/nope", String::new(), 404),
     ];
     for (method, path, body, want) in cases {
-        let raw =
-            format!("{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len());
+        let raw = format!(
+            "{method} {path} HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
         let resp = exchange(addr, raw.as_bytes());
         assert_eq!(status_of(&resp), want, "{method} {path}: {resp}");
         assert!(body_of(&resp).contains("\"error\""), "{method} {path}: {resp}");
+        assert!(body_of(&resp).contains("\"code\""), "{method} {path}: {resp}");
     }
 
     server.begin_shutdown();
@@ -246,7 +279,7 @@ fn batched_responses_are_bitwise_identical_to_serial() {
     let mut opts = test_opts();
     opts.batch_window = Duration::from_millis(10);
     opts.workers = 8;
-    let server = Server::spawn(&dir, opts).unwrap();
+    let server = spawn_one(&dir, opts);
     let addr = server.addr();
 
     const N: usize = 8;
@@ -299,7 +332,7 @@ fn full_queue_sheds_503_while_accepted_requests_complete() {
     // Stall the engine so the bounded job queue fills deterministically
     // while the barrier-released clients all submit.
     opts.engine_stall = Some(Duration::from_millis(1_000));
-    let server = Server::spawn(&dir, opts).unwrap();
+    let server = spawn_one(&dir, opts);
     let addr = server.addr();
 
     const N: usize = 8;
@@ -338,7 +371,7 @@ fn hot_reload_swaps_atomically_and_rejects_corruption() {
     let dir = fresh_dir("reload");
     let payload_v1 = checkpoint_payload(1, HID, 5);
     save_checkpoint(&dir, 1, &payload_v1);
-    let server = Server::spawn(&dir, test_opts()).unwrap();
+    let server = spawn_one(&dir, test_opts());
     let addr = server.addr();
     let obs = obs_for(4);
 
@@ -391,7 +424,7 @@ fn hostile_inputs_never_panic_or_wedge_the_server() {
     let mut opts = test_opts();
     opts.read_timeout = Duration::from_millis(300);
     opts.max_body_bytes = 4096;
-    let server = Server::spawn(&dir, opts).unwrap();
+    let server = spawn_one(&dir, opts);
     let addr = server.addr();
 
     let body = obs_body(&obs_for(0));
@@ -456,7 +489,7 @@ fn handler_panic_is_isolated_to_its_connection() {
     save_checkpoint(&dir, 1, &checkpoint_payload(1, HID, 17));
     let mut opts = test_opts();
     opts.inject_panic = true;
-    let server = Server::spawn(&dir, opts).unwrap();
+    let server = spawn_one(&dir, opts);
     let addr = server.addr();
 
     let raw = "POST /v1/learners/0/act HTTP/1.1\r\nx-inject-panic: 1\r\nContent-Length: 0\r\n\r\n";
@@ -489,6 +522,340 @@ fn inspect_reports_metadata_and_corruption() {
     assert!(lines[1].contains("CORRUPT"), "{}", lines[1]);
     assert!(lines[1].contains("iter=2"), "{}", lines[1]);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Keep-alive, pipelining and the multi-run router
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipelined_keepalive_responses_arrive_in_order_bitwise_identical() {
+    let dir = fresh_dir("pipeline");
+    let payload = checkpoint_payload(2, HID, 29);
+    save_checkpoint(&dir, 1, &payload);
+    let server = spawn_one(&dir, test_opts());
+    let addr = server.addr();
+
+    // Reference pass: one connection per request (Connection: close).
+    const N: usize = 6;
+    let reference: Vec<String> = (0..N)
+        .map(|i| {
+            let path = format!("/v1/runs/0/learners/{}/act", i % 2);
+            let resp = post(addr, &path, &obs_body(&obs_for(i)));
+            assert_eq!(status_of(&resp), 200, "{resp}");
+            body_of(&resp).to_string()
+        })
+        .collect();
+
+    // Pipelined pass: all N requests written back-to-back down ONE
+    // connection before anything is read; responses must come back in
+    // request order, byte-identical to the per-connection pass.
+    let stream = connect(addr);
+    let mut wire = String::new();
+    for i in 0..N {
+        let path = format!("/v1/runs/0/learners/{}/act", i % 2);
+        wire.push_str(&keepalive_post(&path, &obs_body(&obs_for(i))));
+    }
+    let mut w = &stream;
+    w.write_all(wire.as_bytes()).unwrap();
+    let mut reader = std::io::BufReader::new(&stream);
+    for (i, want) in reference.iter().enumerate() {
+        let (head, body) = read_one_response(&mut reader).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "request {i}: {head}");
+        assert!(head.contains("connection: keep-alive"), "request {i}: {head}");
+        let body = String::from_utf8(body).unwrap();
+        assert_eq!(&body, want, "request {i}: pipelined body must match close-per-request body");
+        assert_eq!(body, expected_act_body(&payload, i % 2, &obs_for(i)), "request {i}");
+    }
+    drop(reader);
+    drop(stream);
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The PR acceptance criterion: a two-run keep-alive server returns
+/// byte-identical `/act` bodies to the single-run close-per-request
+/// server for the same checkpoint and requests.
+#[test]
+fn two_run_keepalive_server_matches_single_run_close_server_bitwise() {
+    let dir_a = fresh_dir("runa");
+    let dir_b = fresh_dir("runb");
+    let payload_a = checkpoint_payload(2, HID, 31);
+    let payload_b = checkpoint_payload(1, HID, 37);
+    save_checkpoint(&dir_a, 5, &payload_a);
+    save_checkpoint(&dir_b, 9, &payload_b);
+
+    // The old shape: one run, driven one-connection-per-request.
+    let single = spawn_one(&dir_a, test_opts());
+    // The new shape: both runs behind one router, driven over keep-alive.
+    let multi = Server::spawn(&[dir_a.clone(), dir_b.clone()], test_opts()).unwrap();
+    let names = multi.run_names();
+    assert_eq!(names.len(), 2, "{names:?}");
+
+    let stream = connect(multi.addr());
+    let mut reader = std::io::BufReader::new(&stream);
+    for i in 0..4 {
+        let learner = i % 2;
+        let obs = obs_for(i);
+        let reference = post(single.addr(), &format!("/v1/learners/{learner}/act"), &obs_body(&obs));
+        assert_eq!(status_of(&reference), 200, "{reference}");
+        let path = format!("/v1/runs/{}/learners/{learner}/act", names[0]);
+        let mut w = &stream;
+        w.write_all(keepalive_post(&path, &obs_body(&obs)).as_bytes()).unwrap();
+        let (head, body) = read_one_response(&mut reader).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "request {i}: {head}");
+        assert_eq!(
+            String::from_utf8(body).unwrap(),
+            body_of(&reference),
+            "request {i}: multi-run keep-alive body must match single-run close body"
+        );
+    }
+    // The sibling run serves its own checkpoint on the same connection.
+    let obs = obs_for(9);
+    let path = format!("/v1/runs/{}/learners/0/act", names[1]);
+    let mut w = &stream;
+    w.write_all(keepalive_post(&path, &obs_body(&obs)).as_bytes()).unwrap();
+    let (head, body) = read_one_response(&mut reader).unwrap();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert_eq!(String::from_utf8(body).unwrap(), expected_act_body(&payload_b, 0, &obs));
+    drop(reader);
+    drop(stream);
+
+    single.begin_shutdown();
+    single.join().unwrap();
+    multi.begin_shutdown();
+    multi.join().unwrap();
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+#[test]
+fn meta_v2_enumerates_runs_and_aliases_carry_deprecation_headers() {
+    let dir_a = fresh_dir("metaa");
+    let dir_b = fresh_dir("metab");
+    let payload_a = checkpoint_payload(2, HID, 41);
+    save_checkpoint(&dir_a, 3, &payload_a);
+    save_checkpoint(&dir_b, 8, &checkpoint_payload(1, HID, 43));
+    let server = Server::spawn(&[dir_a.clone(), dir_b.clone()], test_opts()).unwrap();
+    let addr = server.addr();
+    let names = server.run_names();
+
+    let meta = get(addr, "/v1/meta");
+    assert_eq!(status_of(&meta), 200, "{meta}");
+    let body = body_of(&meta);
+    assert!(body.contains("\"api_version\":2"), "{body}");
+    assert!(body.contains("\"runs\":["), "{body}");
+    for name in &names {
+        assert!(body.contains(&format!("\"name\":\"{name}\"")), "missing run {name}: {body}");
+    }
+    assert!(body.contains("\"checkpoint_iteration\":3"), "run-0 mirror fields: {body}");
+    assert!(body.contains("\"checkpoint_iteration\":8"), "run 1 entry: {body}");
+    let ready = get(addr, "/readyz");
+    assert!(body_of(&ready).contains("\"runs\":2"), "{ready}");
+
+    // The deprecated single-run alias still answers — via run 0 — and is
+    // flagged with Deprecation + Link successor-version headers.
+    let obs = obs_for(2);
+    let alias = post(addr, "/v1/learners/0/act", &obs_body(&obs));
+    assert_eq!(status_of(&alias), 200, "{alias}");
+    let lower = alias.to_lowercase();
+    assert!(lower.contains("deprecation: true"), "{alias}");
+    let link = format!("link: </v1/runs/{}/learners/0/act>; rel=\"successor-version\"", names[0])
+        .to_lowercase();
+    assert!(lower.contains(&link), "missing {link:?}: {alias}");
+    assert_eq!(body_of(&alias), expected_act_body(&payload_a, 0, &obs), "alias serves run 0");
+
+    // The successor route answers the same bytes without the headers.
+    let new = post(addr, &format!("/v1/runs/{}/learners/0/act", names[0]), &obs_body(&obs));
+    assert_eq!(status_of(&new), 200, "{new}");
+    assert!(!new.to_lowercase().contains("deprecation:"), "{new}");
+    assert_eq!(body_of(&new), body_of(&alias));
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+#[test]
+fn router_unknown_run_learner_and_malformed_paths_are_structured_404s() {
+    let dir = fresh_dir("router404");
+    save_checkpoint(&dir, 1, &checkpoint_payload(1, HID, 47));
+    let server = spawn_one(&dir, test_opts());
+    let addr = server.addr();
+    let name = server.run_names()[0].clone();
+    let body = obs_body(&obs_for(0));
+
+    let cases: Vec<(String, u16, &str)> = vec![
+        ("/v1/runs/nosuchrun/learners/0/act".to_string(), 404, "unknown_run"),
+        (format!("/v1/runs/{name}/learners/7/act"), 404, "unknown_learner"),
+        (format!("/v1/runs/{name}/learners/zebra/act"), 404, "unknown_learner"),
+        (format!("/v1/runs/{name}"), 404, "not_found"),
+        (format!("/v1/runs/{name}/nothing"), 404, "not_found"),
+    ];
+    for (path, want_status, want_code) in cases {
+        let resp = post(addr, &path, &body);
+        assert_eq!(status_of(&resp), want_status, "{path}: {resp}");
+        assert!(
+            body_of(&resp).contains(&format!("\"code\":\"{want_code}\"")),
+            "{path}: want code {want_code}: {resp}"
+        );
+    }
+    let resp = get(addr, &format!("/v1/runs/{name}/learners/0/act"));
+    assert_eq!(status_of(&resp), 405, "{resp}");
+    assert!(body_of(&resp).contains("\"code\":\"method_not_allowed\""), "{resp}");
+    // An unknown-run error names the runs that ARE hosted.
+    let resp = post(addr, "/v1/runs/nosuchrun/learners/0/act", &body);
+    assert!(body_of(&resp).contains(&name), "unknown_run lists hosted runs: {resp}");
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn keepalive_hostile_matrix_never_wedges() {
+    let dir = fresh_dir("kahostile");
+    save_checkpoint(&dir, 1, &checkpoint_payload(1, HID, 53));
+    let mut opts = test_opts();
+    opts.read_timeout = Duration::from_millis(400);
+    opts.idle_timeout = Duration::from_millis(400);
+    let server = spawn_one(&dir, opts);
+    let addr = server.addr();
+    let good = keepalive_post("/v1/runs/0/learners/0/act", &obs_body(&obs_for(0)));
+
+    // (a) Truncation mid-second-request: the first request answers 200,
+    // then half a request plus close gets a structured error response.
+    {
+        let stream = connect(addr);
+        let mut w = &stream;
+        w.write_all(good.as_bytes()).unwrap();
+        let mut reader = std::io::BufReader::new(&stream);
+        let (head, _) = read_one_response(&mut reader).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let mut w = &stream;
+        w.write_all(&good.as_bytes()[..25]).unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut rest = Vec::new();
+        let _ = reader.read_to_end(&mut rest);
+        let text = String::from_utf8_lossy(&rest);
+        assert!(!text.is_empty(), "a truncated second request gets a structured error");
+        assert!((400..=599).contains(&status_of(&text)), "{text}");
+        assert!(text.contains("connection: close"), "a parse error closes: {text}");
+    }
+
+    // (b) Garbage after a valid request on the same connection.
+    {
+        let stream = connect(addr);
+        let mut w = &stream;
+        w.write_all(good.as_bytes()).unwrap();
+        let mut reader = std::io::BufReader::new(&stream);
+        let (head, _) = read_one_response(&mut reader).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let mut w = &stream;
+        w.write_all(b"\x00\xffgarbage not http\r\n\r\n").unwrap();
+        let mut rest = Vec::new();
+        let _ = reader.read_to_end(&mut rest);
+        let text = String::from_utf8_lossy(&rest);
+        assert!(!text.is_empty(), "garbage after a valid request gets a structured error");
+        assert!((400..=599).contains(&status_of(&text)), "{text}");
+    }
+
+    // (c) Idle timeout: a connection that goes quiet after a served
+    // request is closed silently (EOF, no response bytes).
+    {
+        let stream = connect(addr);
+        let mut w = &stream;
+        w.write_all(good.as_bytes()).unwrap();
+        let mut reader = std::io::BufReader::new(&stream);
+        let (head, _) = read_one_response(&mut reader).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        let mut rest = Vec::new();
+        let n = reader.read_to_end(&mut rest).unwrap_or(rest.len());
+        assert_eq!(n, 0, "idle close must be silent: {:?}", String::from_utf8_lossy(&rest));
+    }
+
+    // (d) Request cap: with max_requests_per_conn = 2 the second response
+    // announces `connection: close` and a third request goes unanswered.
+    {
+        let mut opts = test_opts();
+        opts.max_requests_per_conn = 2;
+        let capped = spawn_one(&dir, opts);
+        let stream = connect(capped.addr());
+        let mut w = &stream;
+        w.write_all(format!("{good}{good}").as_bytes()).unwrap();
+        let mut reader = std::io::BufReader::new(&stream);
+        let (h1, _) = read_one_response(&mut reader).unwrap();
+        assert!(h1.contains("connection: keep-alive"), "{h1}");
+        let (h2, _) = read_one_response(&mut reader).unwrap();
+        assert!(h2.contains("connection: close"), "the cap-hitting response closes: {h2}");
+        let mut w = &stream;
+        let _ = w.write_all(good.as_bytes());
+        let mut rest = Vec::new();
+        let _ = reader.read_to_end(&mut rest);
+        assert!(rest.is_empty(), "the capped connection must close after 2 responses");
+        capped.begin_shutdown();
+        capped.join().unwrap();
+    }
+
+    // After the whole matrix the server still serves correctly.
+    let resp = post(addr, "/v1/runs/0/learners/0/act", &obs_body(&obs_for(0)));
+    assert_eq!(status_of(&resp), 200, "server must survive the matrix: {resp}");
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn per_run_reload_is_isolated_to_its_run() {
+    let dir_a = fresh_dir("reloada");
+    let dir_b = fresh_dir("reloadb");
+    let payload_a1 = checkpoint_payload(1, HID, 61);
+    let payload_b = checkpoint_payload(1, HID, 67);
+    save_checkpoint(&dir_a, 1, &payload_a1);
+    save_checkpoint(&dir_b, 9, &payload_b);
+    let server = Server::spawn(&[dir_a.clone(), dir_b.clone()], test_opts()).unwrap();
+    let addr = server.addr();
+    let names = server.run_names();
+    let obs = obs_for(5);
+
+    let a_path = format!("/v1/runs/{}/learners/0/act", names[0]);
+    let b_path = format!("/v1/runs/{}/learners/0/act", names[1]);
+    let a_before = post(addr, &a_path, &obs_body(&obs));
+    let b_before = post(addr, &b_path, &obs_body(&obs));
+    assert_eq!(status_of(&a_before), 200, "{a_before}");
+    assert_eq!(status_of(&b_before), 200, "{b_before}");
+
+    // Reload run A to a newer checkpoint; run B must be untouched.
+    let payload_a2 = checkpoint_payload(1, HID, 62);
+    save_checkpoint(&dir_a, 2, &payload_a2);
+    let reload = post(addr, &format!("/v1/runs/{}/admin/reload", names[0]), "");
+    assert_eq!(status_of(&reload), 200, "{reload}");
+    assert!(body_of(&reload).contains(&format!("\"run\":\"{}\"", names[0])), "{reload}");
+    assert!(body_of(&reload).contains("\"to_iteration\":2"), "{reload}");
+
+    let a_after = post(addr, &a_path, &obs_body(&obs));
+    assert_eq!(body_of(&a_after), expected_act_body(&payload_a2, 0, &obs));
+    assert_ne!(body_of(&a_after), body_of(&a_before), "run A must serve the new params");
+    let b_after = post(addr, &b_path, &obs_body(&obs));
+    assert_eq!(
+        body_of(&b_after),
+        body_of(&b_before),
+        "a reload of run A must leave run B bitwise untouched"
+    );
+
+    // Meta reflects the per-run iterations.
+    let meta = get(addr, "/v1/meta");
+    assert!(body_of(&meta).contains("\"checkpoint_iteration\":2"), "{meta}");
+    assert!(body_of(&meta).contains("\"checkpoint_iteration\":9"), "{meta}");
+
+    server.begin_shutdown();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
 }
 
 /// SIGINT drain, end to end against the real binary: an in-flight request

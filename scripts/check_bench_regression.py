@@ -30,11 +30,15 @@ THROUGHPUT_KEYS = ("rows_per_sec", "steps_per_sec", "requests_per_sec")
 def ident(cell):
     """The cell's identity fields (metrics, including derived floats like
     speedup ratios, excluded) — the single source of truth for matching
-    (`cell_key`) and for log lines."""
+    (`cell_key`) and for log lines. Keys starting with `_` are human
+    annotations (e.g. the `_note` marking hand-set floor cells) and never
+    part of identity: an annotated baseline must still match the fresh
+    cell the bench emits without it."""
     return {
         k: v
         for k, v in cell.items()
-        if not isinstance(v, float) or k in ("batch", "minibatch", "num_workers", "nn_workers")
+        if not k.startswith("_")
+        and (not isinstance(v, float) or k in ("batch", "minibatch", "num_workers", "nn_workers"))
     }
 
 

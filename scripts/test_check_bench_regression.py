@@ -22,13 +22,14 @@ def cell(op, workers, rate):
     return {"op": op, "num_workers": workers, "rows_per_sec": rate, "backend": "native"}
 
 
-def serve_cell(clients, rate):
-    """A bench_serve.json cell: keyed by clients/window, metered by
+def serve_cell(clients, rate, mode="close"):
+    """A bench_serve.json cell: keyed by clients/window/mode, metered by
     requests_per_sec, with latency metrics the guard must ignore."""
     return {
         "op": "serve_act",
         "clients": clients,
         "batch_window_ms": 2,
+        "mode": mode,
         "requests_per_sec": rate,
         "p50_ms": 1.0,
         "p99_ms": 5.0,
@@ -115,6 +116,38 @@ class TestRegressionDetection(GuardHarness):
         rc, out = self.run_guard()
         self.assertEqual(rc, 0, out)
         self.assertIn("[ok]", out)
+
+    def test_keepalive_requests_per_sec_regression_fails(self):
+        # The keep-alive sweep cells are distinct identities from the
+        # close cells (the `mode` field), and their floor is enforced too.
+        self.write(
+            self.baseline,
+            "serve.json",
+            [serve_cell(16, 1000.0, mode="close"), serve_cell(16, 1500.0, mode="keepalive")],
+        )
+        self.write(
+            self.fresh,
+            "serve.json",
+            [serve_cell(16, 1000.0, mode="close"), serve_cell(16, 700.0, mode="keepalive")],
+        )
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 1, out)
+        self.assertIn("[FAIL]", out)
+        self.assertIn("keepalive", out)
+
+    def test_note_annotation_does_not_unmatch_cells(self):
+        # Hand-set floor cells carry a loud `_note`; the bench emits the
+        # same cell without it. Underscore keys are not identity, so the
+        # pair must still match (and the note must stay out of log lines).
+        base = serve_cell(16, 1000.0, mode="keepalive")
+        base["_note"] = "hand-set conservative floor, not a measurement"
+        self.write(self.baseline, "serve.json", [base])
+        self.write(self.fresh, "serve.json", [serve_cell(16, 1200.0, mode="keepalive")])
+        rc, out = self.run_guard()
+        self.assertEqual(rc, 0, out)
+        self.assertIn("[ok]", out)
+        self.assertNotIn("[new]", out)
+        self.assertNotIn("_note", out)
 
 
 class TestBaselineLessCells(GuardHarness):
